@@ -1,0 +1,61 @@
+//! Scaling study (interactive form of Figure 3): measured per-iteration
+//! time vs partition count, with the per-phase breakdown and the modeled
+//! all-reduce cost, on one dataset.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example scaling_study [dataset]
+//! ```
+
+use cofree_gnn::graph::datasets;
+use cofree_gnn::partition::{algorithm, PartitionMetrics, Reweighting, VertexCut};
+use cofree_gnn::simnet::{Cluster, LinkModel};
+use cofree_gnn::train::engine::{model_config, TrainConfig, TrainEngine};
+use cofree_gnn::util::rng::Rng;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let name = args.get(1).map(|s| s.as_str()).unwrap_or("yelp-sim");
+    let ds = datasets::build(name, 1.0, 42)?;
+    let model = model_config(&ds);
+    let grad_bytes = model.num_params() as f64 * 4.0;
+    println!(
+        "{}: n={} m={} | {} params -> {:.1} KB gradient all-reduce payload",
+        ds.name,
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        model.num_params(),
+        grad_bytes / 1024.0
+    );
+    let mut engine = TrainEngine::new(Path::new("artifacts"))?;
+    println!(
+        "\n{:>4} {:>8} {:>12} {:>12} {:>12} {:>10}",
+        "p", "RF", "max worker", "allreduce", "iter total", "speedup"
+    );
+    let mut base = None;
+    for p in [1usize, 2, 4, 8, 16, 32] {
+        let mut rng = Rng::new(42);
+        let vc = VertexCut::create(&ds.graph, p, algorithm("ne").unwrap().as_ref(), &mut rng);
+        let rf = PartitionMetrics::vertex_cut(&ds.graph, &vc).replication_factor;
+        let cluster = Cluster::single_server(p);
+        let allreduce = LinkModel::PCIE4.ring_allreduce(grad_bytes, p);
+        let mut run = engine.prepare_partitions(&ds, &vc, Reweighting::Dar, None, 0)?;
+        let cfg = TrainConfig {
+            epochs: 6,
+            eval_every: 0,
+            allreduce_seconds: allreduce,
+            ..Default::default()
+        };
+        let (hist, _, _) = engine.train(&mut run, None, &cfg)?;
+        let worker_ms: f64 = hist.epochs.iter().skip(2).map(|e| e.max_worker_time * 1e3).sum::<f64>() / 4.0;
+        let (iter_ms, _) = hist.iter_time_ms(2);
+        let speedup = *base.get_or_insert(iter_ms) / iter_ms;
+        let _ = cluster;
+        println!(
+            "{p:>4} {rf:>8.3} {worker_ms:>10.1}ms {:>10.3}ms {iter_ms:>10.1}ms {speedup:>9.2}x",
+            allreduce * 1e3
+        );
+    }
+    println!("\n(The parallel-machine iteration time is max-over-workers compute + modeled ring all-reduce; see DESIGN.md §2.)");
+    Ok(())
+}

@@ -1,0 +1,195 @@
+"""AOT lowering: JAX ``train_step``/``eval_step`` -> HLO text artifacts.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the Rust ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (normally driven by ``make artifacts``)::
+
+    cd python && python -m compile.aot --spec ../python/compile/buckets.spec \
+                                       --out ../artifacts
+
+The bucket spec is a line-based format (one bucket per line), produced by
+``cofree emit-bucket-spec`` or written by hand::
+
+    bucket name=products-sim-L3-h64-d64-c16-n4096-e65536-train kind=train \
+        layers=3 feat=64 hidden=64 classes=16 n_pad=4096 e_pad=65536
+
+Artifacts are content-addressed: a bucket is re-lowered only when its
+configuration line changes (hash recorded in the manifest), so repeated
+``make artifacts`` is a fast no-op.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def parse_kv_line(line):
+    """Parse ``key=value`` tokens; returns (head_token, dict)."""
+    toks = line.split()
+    head = toks[0]
+    kv = {}
+    for t in toks[1:]:
+        k, _, v = t.partition("=")
+        kv[k] = v
+    return head, kv
+
+
+class Bucket:
+    """One artifact to lower: a model config + padded shapes + kind."""
+
+    def __init__(self, kv):
+        self.name = kv["name"]
+        self.kind = kv["kind"]  # train | eval
+        self.layers = int(kv["layers"])
+        self.feat = int(kv["feat"])
+        self.hidden = int(kv["hidden"])
+        self.classes = int(kv["classes"])
+        self.n_pad = int(kv["n_pad"])
+        self.e_pad = int(kv["e_pad"])
+        assert self.kind in ("train", "eval"), self.kind
+
+    def config_line(self):
+        return (
+            f"name={self.name} kind={self.kind} layers={self.layers} feat={self.feat} "
+            f"hidden={self.hidden} classes={self.classes} n_pad={self.n_pad} e_pad={self.e_pad}"
+        )
+
+    def config_hash(self):
+        return hashlib.sha256(self.config_line().encode()).hexdigest()[:16]
+
+    def example_args(self):
+        """ShapeDtypeStructs for lowering (params first, then data)."""
+        f32, i32 = jnp.float32, jnp.int32
+        params = [
+            jax.ShapeDtypeStruct(s, f32)
+            for s in model.param_shapes(self.layers, self.feat, self.hidden, self.classes)
+        ]
+        n, e = self.n_pad, self.e_pad
+        feat = jax.ShapeDtypeStruct((n, self.feat), f32)
+        src = jax.ShapeDtypeStruct((e,), i32)
+        dst = jax.ShapeDtypeStruct((e,), i32)
+        emask = jax.ShapeDtypeStruct((e,), f32)
+        labels = jax.ShapeDtypeStruct((n,), i32)
+        if self.kind == "train":
+            dar = jax.ShapeDtypeStruct((n,), f32)
+            tmask = jax.ShapeDtypeStruct((n,), f32)
+            return params, (feat, src, dst, emask, dar, labels, tmask)
+        mask = jax.ShapeDtypeStruct((n,), f32)
+        return params, (feat, src, dst, emask, labels, mask)
+
+    def build_fn(self, use_pallas=True):
+        if self.kind == "train":
+            step = model.make_train_step(self.layers, use_pallas=use_pallas)
+        else:
+            step = model.make_eval_step(self.layers, use_pallas=use_pallas)
+
+        def fn(params, *data):
+            return step(params, *data)
+
+        return fn
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(bucket: Bucket, use_pallas=True) -> str:
+    params, data = bucket.example_args()
+    fn = bucket.build_fn(use_pallas=use_pallas)
+    lowered = jax.jit(fn).lower(params, *data)
+    return to_hlo_text(lowered)
+
+
+def read_spec(path):
+    buckets = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            head, kv = parse_kv_line(line)
+            if head == "bucket":
+                buckets.append(Bucket(kv))
+    # Dedup by name (grids can emit the same bucket repeatedly).
+    seen, out = set(), []
+    for b in buckets:
+        if b.name not in seen:
+            seen.add(b.name)
+            out.append(b)
+    return out
+
+
+def read_manifest(path):
+    """Existing manifest -> {name: (hash, file)}."""
+    entries = {}
+    if not os.path.exists(path):
+        return entries
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            head, kv = parse_kv_line(line)
+            if head == "artifact":
+                entries[kv["name"]] = kv
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spec", default="../python/compile/buckets.spec")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--no-pallas", action="store_true", help="lower the pure-jnp reference model")
+    ap.add_argument("--force", action="store_true", help="re-lower even if hashes match")
+    args = ap.parse_args()
+
+    buckets = read_spec(args.spec)
+    if not buckets:
+        print(f"no buckets found in {args.spec}", file=sys.stderr)
+        sys.exit(1)
+    os.makedirs(args.out, exist_ok=True)
+    manifest_path = os.path.join(args.out, "manifest.txt")
+    old = read_manifest(manifest_path)
+
+    lines = ["# CoFree-GNN artifact manifest (generated by compile.aot)"]
+    n_lowered, n_skipped = 0, 0
+    for b in buckets:
+        fname = f"{b.name}.hlo.txt"
+        fpath = os.path.join(args.out, fname)
+        h = b.config_hash()
+        prev = old.get(b.name)
+        if (
+            not args.force
+            and prev is not None
+            and prev.get("hash") == h
+            and os.path.exists(fpath)
+        ):
+            n_skipped += 1
+        else:
+            text = lower_bucket(b, use_pallas=not args.no_pallas)
+            with open(fpath, "w") as f:
+                f.write(text)
+            n_lowered += 1
+            print(f"lowered {b.name} ({len(text)} chars)")
+        lines.append(f"artifact {b.config_line()} file={fname} hash={h}")
+    with open(manifest_path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"aot: {n_lowered} lowered, {n_skipped} up-to-date -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

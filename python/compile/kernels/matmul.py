@@ -1,0 +1,191 @@
+"""Layer-1 Pallas kernels: the dense compute hot spot of GraphSAGE.
+
+After CoFree-GNN removes all embedding communication, a training iteration is
+dominated by the per-layer dense transforms ``relu(x @ W + b)`` (message
+transform) and ``concat(agg, h) @ U + c`` (update) — see DESIGN.md
+§Hardware-Adaptation.  These are implemented here as tiled Pallas matmul
+kernels with a classic TPU structure:
+
+* 3-D grid ``(M/bm, N/bn, K/bk)`` with the K dimension innermost and
+  sequential, accumulating into the output block — the MXU-feeding schedule
+  that Mosaic double-buffers on real hardware;
+* ``BlockSpec``s express the HBM->VMEM tiling: an ``(bm, bk)`` tile of ``x``
+  and a ``(bk, bn)`` tile of ``w`` are resident per step
+  (``bm*bk + bk*bn + bm*bn`` f32 words of VMEM);
+* ``preferred_element_type=jnp.float32`` keeps f32 accumulation (bf16 inputs
+  would hit the MXU natively on TPU).
+
+Autodiff: ``pallas_call`` has no automatic VJP, so the public entry points
+(:func:`matmul`, :func:`relu_linear`) carry ``jax.custom_vjp`` whose backward
+passes are themselves Pallas matmuls — the gradient hot path runs through the
+same kernel.
+
+Everything is lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls (see /opt/xla-example/README.md); on TPU the same code
+compiles to MXU kernels.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. On TPU, 128 matches both the MXU systolic dimension
+# and the lane width and would be the right default. Under interpret=True
+# (this build's only execution mode) every grid step pays interpreter
+# dispatch overhead, so the CPU-tuned defaults below use much larger tiles
+# to shrink the grid (see EXPERIMENTS.md §Perf for the sweep). Override with
+# COFREE_BLOCK_M/N/K; set 128/128/128 to inspect the TPU-shaped schedule.
+import os as _os
+
+def _env_int(name, default):
+    try:
+        return int(_os.environ.get(name, default))
+    except ValueError:
+        return default
+
+BLOCK_M = _env_int("COFREE_BLOCK_M", 16384)
+BLOCK_N = _env_int("COFREE_BLOCK_N", 4096)
+BLOCK_K = _env_int("COFREE_BLOCK_K", 16384)
+
+
+def _maybe_pad2(x, r, c):
+    """Pad a 2-D array only when needed (interpret mode: pads are copies)."""
+    if x.shape == (r, c):
+        return x
+    return jnp.pad(x, ((0, r - x.shape[0]), (0, c - x.shape[1])))
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output tile; K arrives in bk-sized steps (grid dim 2)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+def _pallas_mm(x, w, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """Raw tiled matmul: pads to tile multiples, runs the kernel, unpads."""
+    m, kdim = x.shape
+    kdim2, n = w.shape
+    assert kdim == kdim2, f"shape mismatch {x.shape} @ {w.shape}"
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(kdim, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(kdim, bk)
+    xp = _maybe_pad2(x, mp, kp)
+    wp = _maybe_pad2(w, kp, np_)
+    out = pl.pallas_call(
+        _mm_kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out if (mp, np_) == (m, n) else out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# matmul: plain x @ w with Pallas forward and backward.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """``x @ w`` computed by the tiled Pallas kernel (f32)."""
+    return _pallas_mm(x, w)
+
+
+def _matmul_fwd(x, w):
+    return _pallas_mm(x, w), (x, w)
+
+
+def _matmul_bwd(res, g):
+    x, w = res
+    # dx = g @ w^T ; dw = x^T @ g — both through the same Pallas kernel.
+    return _pallas_mm(g, w.T), _pallas_mm(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# relu_linear: fused relu(x @ w + b).
+# ---------------------------------------------------------------------------
+
+
+def _mm_bias_relu_kernel(x_ref, w_ref, b_ref, o_ref, *, nk):
+    """Fused epilogue: on the last K step apply bias + ReLU in-register."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        o_ref[...] = jnp.maximum(o_ref[...] + b_ref[...], 0.0)
+
+
+def _pallas_mm_bias_relu(x, w, b, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    m, kdim = x.shape
+    _, n = w.shape
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(kdim, 8))
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(kdim, bk)
+    xp = _maybe_pad2(x, mp, kp)
+    wp = _maybe_pad2(w, kp, np_)
+    bp = _maybe_pad2(b.reshape(1, -1), 1, np_)
+    out = pl.pallas_call(
+        partial(_mm_bias_relu_kernel, nk=kp // bk),
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp, bp)
+    return out if (mp, np_) == (m, n) else out[:m, :n]
+
+
+@jax.custom_vjp
+def relu_linear(x, w, b):
+    """Fused ``relu(x @ w + b)`` with Pallas forward and backward."""
+    return _pallas_mm_bias_relu(x, w, b)
+
+
+def _relu_linear_fwd(x, w, b):
+    y = _pallas_mm_bias_relu(x, w, b)
+    # Save the activation mask (y > 0) instead of the pre-activation: smaller
+    # residual and exactly what the backward needs.
+    return y, (x, w, y > 0.0)
+
+
+def _relu_linear_bwd(res, g):
+    x, w, mask = res
+    gm = jnp.where(mask, g, 0.0)
+    dx = _pallas_mm(gm, w.T)
+    dw = _pallas_mm(x.T, gm)
+    db = gm.sum(axis=0)
+    return dx, dw, db
+
+
+relu_linear.defvjp(_relu_linear_fwd, _relu_linear_bwd)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels and the model's graph ops.
+
+These are the CORE correctness baseline: every Pallas kernel and the whole
+GraphSAGE ``train_step`` must agree with these reference implementations
+(pytest + hypothesis in ``python/tests/``).  They are intentionally written
+in the most obvious way possible.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def relu_linear_ref(x, w, b):
+    """relu(x @ w + b)."""
+    return jnp.maximum(matmul_ref(x, w) + b, 0.0)
+
+
+def segment_mean_ref(values, seg_ids, weights, num_segments):
+    """Masked/weighted mean aggregation.
+
+    ``out[s] = sum_e 1[seg_ids[e] == s] * weights[e] * values[e]
+               / max(1e-9, sum_e 1[seg_ids[e] == s] * weights[e])``
+
+    This is the neighbor-mean of GraphSAGE expressed over a directed edge
+    list; ``weights`` carries both validity masking (padding edges have
+    weight 0) and DropEdge masks, and the denominator tracks the *kept*
+    edges, so DropEdge keeps the aggregator an unbiased mean.
+    """
+    weighted = values * weights[:, None]
+    sums = jax.ops.segment_sum(weighted, seg_ids, num_segments=num_segments)
+    counts = jax.ops.segment_sum(weights, seg_ids, num_segments=num_segments)
+    return sums / jnp.maximum(counts, 1e-9)[:, None]
+
+
+def sage_layer_ref(h, src, dst, emask, w, b, u, c, num_nodes):
+    """One GraphSAGE layer (paper §3):
+
+    ``h_v' = U · concat(mean({relu(W h_u + b) : u -> v}), h_v) + c``
+    """
+    msg = relu_linear_ref(h, w, b)
+    agg = segment_mean_ref(msg[src], dst, emask, num_nodes)
+    return matmul_ref(jnp.concatenate([agg, h], axis=1), u) + c

@@ -1,0 +1,124 @@
+"""Layer-2: the GraphSAGE model, DAR-weighted loss, and train/eval steps.
+
+This is the *compute graph* that every CoFree-GNN worker executes on its own
+vertex-cut partition.  It is written in JAX, calls the Layer-1 Pallas kernels
+(``kernels.matmul``) for the dense hot spots, and is lowered ONCE by
+``aot.py`` into HLO text that the Rust coordinator loads through PJRT.
+Python never runs during training.
+
+Tensor conventions (shared contract with ``rust/src/train/tensorize.rs``):
+
+* graphs arrive as *directed message edge lists*: ``src[e] -> dst[e]``; the
+  Rust side emits both directions of every undirected edge, pads to
+  ``e_pad`` with ``emask=0`` entries, and pads nodes to ``n_pad`` rows with
+  ``dar_w = train_mask = 0``;
+* ``dar_w`` carries the Degree-Aware Reweighting weight
+  ``D(v[i]) / D(v)`` of the paper's Eq. 3 (or 1 / 1/RF for the ablations);
+* the train step returns the *sum* (not mean) of weighted losses plus its
+  gradients, so the leader can sum partition gradients (DAR makes that sum
+  approximate the full-graph gradient, Thm 4.3) and normalize once by the
+  global number of training nodes.
+
+Parameter layout per layer ``l`` (order matters — Rust mirrors it):
+``W_l [in, H]``, ``b_l [H]``, ``U_l [H + in, out]``, ``c_l [out]`` with
+``in = feat_dim`` for ``l = 0`` else ``H``; ``out = classes`` for the last
+layer else ``H``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as pk
+from .kernels import ref
+
+
+def param_shapes(layers: int, feat_dim: int, hidden: int, classes: int):
+    """Shapes of the flat parameter list (mirrored by the Rust runtime)."""
+    shapes = []
+    for l in range(layers):
+        d_in = feat_dim if l == 0 else hidden
+        d_out = classes if l == layers - 1 else hidden
+        shapes.append((d_in, hidden))       # W_l
+        shapes.append((hidden,))            # b_l
+        shapes.append((hidden + d_in, d_out))  # U_l
+        shapes.append((d_out,))             # c_l
+    return shapes
+
+
+def init_params(seed: int, layers: int, feat_dim: int, hidden: int, classes: int):
+    """Glorot-uniform initialization, deterministic in ``seed``."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for shape in param_shapes(layers, feat_dim, hidden, classes):
+        if len(shape) == 1:
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            fan_in, fan_out = shape
+            lim = (6.0 / (fan_in + fan_out)) ** 0.5
+            params.append(jax.random.uniform(sub, shape, jnp.float32, -lim, lim))
+    return params
+
+
+def forward(params, feat, src, dst, emask, *, layers, use_pallas=True):
+    """GraphSAGE forward pass over one (padded) partition -> logits [N, C]."""
+    n = feat.shape[0]
+    mm = pk.matmul if use_pallas else ref.matmul_ref
+    rl = pk.relu_linear if use_pallas else ref.relu_linear_ref
+    h = feat
+    for l in range(layers):
+        w, b, u, c = params[4 * l : 4 * l + 4]
+        msg = rl(h, w, b)                       # [N, H]  message transform
+        agg = ref.segment_mean_ref(msg[src], dst, emask, n)  # neighbor mean
+        h = mm(jnp.concatenate([agg, h], axis=1), u) + c
+    return h
+
+
+def _weighted_ce(logits, labels, weights):
+    """Sum of ``weights[j] * CE(logits[j], labels[j])`` plus the weight sum."""
+    logz = jax.nn.logsumexp(logits, axis=1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=1)[:, 0]
+    ce = logz - picked
+    return jnp.sum(weights * ce), jnp.sum(weights)
+
+
+def make_train_step(layers: int, use_pallas: bool = True):
+    """Build ``train_step(params..., data...) -> (loss_sum, weight_sum,
+    correct, *grads)`` for a fixed layer count (static for lowering)."""
+
+    def loss_fn(params, feat, src, dst, emask, dar_w, labels, train_mask):
+        logits = forward(params, feat, src, dst, emask, layers=layers, use_pallas=use_pallas)
+        weights = dar_w * train_mask
+        loss_sum, weight_sum = _weighted_ce(logits, labels, weights)
+        correct = jnp.sum(train_mask * (jnp.argmax(logits, axis=1) == labels))
+        return loss_sum, (weight_sum, correct)
+
+    def train_step(params, feat, src, dst, emask, dar_w, labels, train_mask):
+        (loss_sum, (weight_sum, correct)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, feat, src, dst, emask, dar_w, labels, train_mask
+        )
+        return (
+            loss_sum.reshape(1),
+            weight_sum.reshape(1),
+            correct.reshape(1).astype(jnp.float32),
+            *grads,
+        )
+
+    return train_step
+
+
+def make_eval_step(layers: int, use_pallas: bool = True):
+    """Build ``eval_step(params..., data..., mask) -> (correct, count,
+    loss_sum)`` — run by the leader on the full graph for val/test metrics."""
+
+    def eval_step(params, feat, src, dst, emask, labels, mask):
+        logits = forward(params, feat, src, dst, emask, layers=layers, use_pallas=use_pallas)
+        correct = jnp.sum(mask * (jnp.argmax(logits, axis=1) == labels))
+        loss_sum, _ = _weighted_ce(logits, labels, mask)
+        return (
+            correct.reshape(1).astype(jnp.float32),
+            jnp.sum(mask).reshape(1),
+            loss_sum.reshape(1),
+        )
+
+    return eval_step

@@ -1,0 +1,80 @@
+"""AOT pipeline tests: spec parsing, lowering, manifest caching."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+TINY = "bucket name=tiny-train kind=train layers=2 feat=8 hidden=8 classes=3 n_pad=16 e_pad=32"
+TINY_EVAL = "bucket name=tiny-eval kind=eval layers=2 feat=8 hidden=8 classes=3 n_pad=16 e_pad=32"
+
+
+def test_spec_parsing(tmp_path):
+    spec = tmp_path / "buckets.spec"
+    spec.write_text(f"# comment\n\n{TINY}\n{TINY}\n{TINY_EVAL}\n")
+    buckets = aot.read_spec(str(spec))
+    assert [b.name for b in buckets] == ["tiny-train", "tiny-eval"]  # deduped
+    b = buckets[0]
+    assert (b.layers, b.feat, b.hidden, b.classes, b.n_pad, b.e_pad) == (2, 8, 8, 3, 16, 32)
+
+
+def entry_input_count(text):
+    import re
+
+    inputs = text.split("entry_computation_layout={(")[1].split(")->")[0]
+    return len(re.findall(r"\b[fsu]\d+\[", inputs))
+
+
+def test_lower_tiny_train_bucket_produces_hlo():
+    _, kv = aot.parse_kv_line(TINY)
+    text = aot.lower_bucket(aot.Bucket(kv))
+    assert "HloModule" in text
+    # All params + the 7 data tensors appear as entry parameters.
+    n_params = len(model.param_shapes(2, 8, 8, 3))
+    assert entry_input_count(text) == n_params + 7
+
+
+def test_lower_eval_bucket():
+    _, kv = aot.parse_kv_line(TINY_EVAL)
+    text = aot.lower_bucket(aot.Bucket(kv))
+    assert "HloModule" in text
+    n_params = len(model.param_shapes(2, 8, 8, 3))
+    assert entry_input_count(text) == n_params + 6
+
+
+def test_manifest_caching(tmp_path, monkeypatch, capsys):
+    spec = tmp_path / "buckets.spec"
+    out = tmp_path / "artifacts"
+    spec.write_text(TINY + "\n")
+    monkeypatch.setattr(
+        "sys.argv", ["aot", "--spec", str(spec), "--out", str(out)]
+    )
+    aot.main()
+    first = capsys.readouterr().out
+    assert "1 lowered" in first
+    assert os.path.exists(out / "tiny-train.hlo.txt")
+    assert os.path.exists(out / "manifest.txt")
+    # Second run: fully cached.
+    aot.main()
+    second = capsys.readouterr().out
+    assert "0 lowered, 1 up-to-date" in second
+    # Manifest round-trips.
+    entries = aot.read_manifest(str(out / "manifest.txt"))
+    assert "tiny-train" in entries
+    assert entries["tiny-train"]["file"] == "tiny-train.hlo.txt"
+
+
+def test_config_hash_changes_with_shape():
+    _, kv = aot.parse_kv_line(TINY)
+    b1 = aot.Bucket(kv)
+    kv2 = dict(kv, n_pad="32")
+    b2 = aot.Bucket(kv2)
+    assert b1.config_hash() != b2.config_hash()
+
+
+def test_bad_kind_rejected():
+    _, kv = aot.parse_kv_line(TINY)
+    kv["kind"] = "bogus"
+    with pytest.raises(AssertionError):
+        aot.Bucket(kv)

@@ -1,0 +1,106 @@
+"""Structural invariances of the L2 model — properties the distributed
+semantics rely on, beyond pointwise kernel correctness."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def make_problem(seed, n=10, e=30, d=6, h=6, c=3, layers=2):
+    rng = np.random.default_rng(seed)
+    params = model.init_params(seed, layers, d, h, c)
+    feat = jnp.asarray(rng.standard_normal((n, d), dtype=np.float32))
+    src = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    emask = jnp.asarray(rng.integers(0, 2, size=e), dtype=jnp.float32)
+    dar = jnp.asarray(rng.uniform(0.1, 1.0, size=n), dtype=jnp.float32)
+    labels = jnp.asarray(rng.integers(0, c, size=n), dtype=jnp.int32)
+    tmask = jnp.asarray(rng.integers(0, 2, size=n), dtype=jnp.float32)
+    return params, (feat, src, dst, emask, dar, labels, tmask), layers
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_edge_order_invariance(seed):
+    """The Rust tensorizer may emit directed edges in any order; the model
+    must be invariant to edge-list permutation."""
+    params, data, layers = make_problem(seed)
+    feat, src, dst, emask, dar, labels, tmask = data
+    step = model.make_train_step(layers, use_pallas=False)
+    base = step(params, feat, src, dst, emask, dar, labels, tmask)
+    perm = np.random.default_rng(seed + 1).permutation(len(src))
+    pert = step(params, feat, src[perm], dst[perm], emask[perm], dar, labels, tmask)
+    for a, b in zip(base, pert):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), extra=st.integers(1, 32))
+def test_edge_padding_extension_invariance(seed, extra):
+    """Appending masked padding edges (the bucket mechanism) never changes
+    the outputs."""
+    params, data, layers = make_problem(seed)
+    feat, src, dst, emask, dar, labels, tmask = data
+    step = model.make_train_step(layers, use_pallas=False)
+    base = step(params, feat, src, dst, emask, dar, labels, tmask)
+    src2 = jnp.concatenate([src, jnp.zeros(extra, jnp.int32)])
+    dst2 = jnp.concatenate([dst, jnp.zeros(extra, jnp.int32)])
+    emask2 = jnp.concatenate([emask, jnp.zeros(extra, jnp.float32)])
+    pert = step(params, feat, src2, dst2, emask2, dar, labels, tmask)
+    for a, b in zip(base, pert):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 500), extra=st.integers(1, 16))
+def test_node_padding_extension_invariance(seed, extra):
+    """Appending zero-weight padding nodes never changes loss or gradients
+    (gradients gain zero rows only)."""
+    params, data, layers = make_problem(seed)
+    feat, src, dst, emask, dar, labels, tmask = data
+    step = model.make_train_step(layers, use_pallas=False)
+    base = step(params, feat, src, dst, emask, dar, labels, tmask)
+    n, d = feat.shape
+    feat2 = jnp.concatenate([feat, jnp.zeros((extra, d), jnp.float32)])
+    dar2 = jnp.concatenate([dar, jnp.zeros(extra, jnp.float32)])
+    labels2 = jnp.concatenate([labels, jnp.zeros(extra, jnp.int32)])
+    tmask2 = jnp.concatenate([tmask, jnp.zeros(extra, jnp.float32)])
+    pert = step(params, feat2, src, dst, emask, dar2, labels2, tmask2)
+    for a, b in zip(base, pert):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 500))
+def test_gradient_linearity_across_partitions(seed):
+    """The leader SUMS partition gradients: grads(A ∪ B) must equal
+    grads(A) + grads(B) when A/B split the loss weights (same topology).
+    This is the exact algebraic identity the all-reduce relies on."""
+    params, data, layers = make_problem(seed, n=12, e=40)
+    feat, src, dst, emask, dar, labels, tmask = data
+    step = model.make_train_step(layers, use_pallas=False)
+    rng = np.random.default_rng(seed + 7)
+    split = jnp.asarray(rng.integers(0, 2, size=len(dar)), dtype=jnp.float32)
+    full = step(params, feat, src, dst, emask, dar, labels, tmask)
+    a = step(params, feat, src, dst, emask, dar * split, labels, tmask)
+    b = step(params, feat, src, dst, emask, dar * (1 - split), labels, tmask)
+    # loss and every gradient are additive in the node weights.
+    for fa, ga, gb in zip(full[:1] + full[3:], a[:1] + a[3:], b[:1] + b[3:]):
+        np.testing.assert_allclose(fa, np.asarray(ga) + np.asarray(gb), rtol=1e-3, atol=1e-4)
+
+
+def test_eval_step_mask_additivity():
+    """correct/count are additive over disjoint masks (val + test = both)."""
+    params, data, layers = make_problem(11)
+    feat, src, dst, emask, dar, labels, tmask = data
+    ev = model.make_eval_step(layers, use_pallas=False)
+    n = len(dar)
+    m1 = jnp.asarray(np.arange(n) % 2, dtype=jnp.float32)
+    m2 = 1.0 - m1
+    c1, n1, _ = ev(params, feat, src, dst, emask, labels, m1)
+    c2, n2, _ = ev(params, feat, src, dst, emask, labels, m2)
+    call, nall, _ = ev(params, feat, src, dst, emask, labels, m1 + m2)
+    np.testing.assert_allclose(c1 + c2, call)
+    np.testing.assert_allclose(n1 + n2, nall)

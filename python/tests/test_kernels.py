@@ -1,0 +1,135 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes; fixed-seed numpy data keeps runs deterministic.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as pk
+from compile.kernels import ref
+
+DIM = st.integers(min_value=1, max_value=50)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    got = pk.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIM, k=DIM, n=DIM, seed=st.integers(0, 2**31 - 1))
+def test_relu_linear_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = pk.relu_linear(x, w, b)
+    want = ref.relu_linear_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 24), k=st.integers(2, 24), n=st.integers(2, 24),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_gradients_match_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+
+    def f_pallas(x, w):
+        return (pk.matmul(x, w) ** 2).sum()
+
+    def f_ref(x, w):
+        return (ref.matmul_ref(x, w) ** 2).sum()
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(gw, rw, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 24), k=st.integers(2, 24), n=st.integers(2, 24),
+       seed=st.integers(0, 2**31 - 1))
+def test_relu_linear_gradients_match_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+
+    def f_pallas(x, w, b):
+        return (pk.relu_linear(x, w, b) * jnp.arange(n)).sum()
+
+    def f_ref(x, w, b):
+        return (ref.relu_linear_ref(x, w, b) * jnp.arange(n)).sum()
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(gp, gr):
+        np.testing.assert_allclose(a, b_, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,k,n", [(1, 1, 1), (128, 128, 128), (129, 257, 65), (7, 384, 3)])
+def test_matmul_block_boundaries(m, k, n):
+    """Shapes exactly at / around tile boundaries."""
+    rng = np.random.default_rng(0)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    np.testing.assert_allclose(pk.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_segment_mean_basic():
+    vals = jnp.array([[1.0], [2.0], [4.0], [8.0]])
+    seg = jnp.array([0, 0, 1, 3])
+    w = jnp.array([1.0, 1.0, 1.0, 0.0])  # last edge masked out
+    out = ref.segment_mean_ref(vals, seg, w, 4)
+    np.testing.assert_allclose(out[0], [1.5])
+    np.testing.assert_allclose(out[1], [4.0])
+    np.testing.assert_allclose(out[2], [0.0])  # empty segment
+    np.testing.assert_allclose(out[3], [0.0])  # fully masked segment
+
+
+@settings(max_examples=20, deadline=None)
+@given(n_nodes=st.integers(1, 40), n_edges=st.integers(0, 200), d=st.integers(1, 8),
+       seed=st.integers(0, 2**31 - 1))
+def test_segment_mean_properties(n_nodes, n_edges, d, seed):
+    rng = np.random.default_rng(seed)
+    vals = rand(rng, max(n_edges, 1), d)[:n_edges]
+    if n_edges == 0:
+        vals = jnp.zeros((0, d), jnp.float32)
+    seg = jnp.asarray(rng.integers(0, n_nodes, size=n_edges), dtype=jnp.int32)
+    w = jnp.asarray(rng.integers(0, 2, size=n_edges), dtype=jnp.float32)
+    out = ref.segment_mean_ref(vals, seg, w, n_nodes)
+    assert out.shape == (n_nodes, d)
+    # Mean of a 0/1-weighted set lies within the min/max of the kept values.
+    arr = np.asarray(out)
+    vals_np, seg_np, w_np = np.asarray(vals), np.asarray(seg), np.asarray(w)
+    for s in range(n_nodes):
+        kept = vals_np[(seg_np == s) & (w_np > 0)]
+        if len(kept) == 0:
+            np.testing.assert_allclose(arr[s], 0.0, atol=1e-6)
+        else:
+            assert (arr[s] >= kept.min(axis=0) - 1e-5).all()
+            assert (arr[s] <= kept.max(axis=0) + 1e-5).all()
+
+
+def test_weighted_segment_mean_equals_dropedge_renormalization():
+    """DropEdge semantics: masking edges renormalizes the mean over the
+    survivors (not over the original degree)."""
+    vals = jnp.array([[2.0], [4.0], [6.0]])
+    seg = jnp.array([0, 0, 0])
+    w_all = jnp.array([1.0, 1.0, 1.0])
+    w_drop = jnp.array([1.0, 0.0, 1.0])
+    np.testing.assert_allclose(ref.segment_mean_ref(vals, seg, w_all, 1)[0], [4.0])
+    np.testing.assert_allclose(ref.segment_mean_ref(vals, seg, w_drop, 1)[0], [4.0])
+    w_drop2 = jnp.array([0.0, 1.0, 0.0])
+    np.testing.assert_allclose(ref.segment_mean_ref(vals, seg, w_drop2, 1)[0], [4.0])
+    w_drop3 = jnp.array([1.0, 0.0, 0.0])
+    np.testing.assert_allclose(ref.segment_mean_ref(vals, seg, w_drop3, 1)[0], [2.0])

@@ -1,0 +1,189 @@
+"""Model-level tests: Pallas path == jnp path, gradients, DAR semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+
+def tiny_problem(seed=0, n=12, e=40, d=8, h=8, c=3, layers=2):
+    rng = np.random.default_rng(seed)
+    params = model.init_params(seed, layers, d, h, c)
+    feat = jnp.asarray(rng.standard_normal((n, d), dtype=np.float32))
+    src = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, size=e), dtype=jnp.int32)
+    emask = jnp.asarray(rng.integers(0, 2, size=e), dtype=jnp.float32)
+    dar = jnp.asarray(rng.uniform(0.1, 1.0, size=n), dtype=jnp.float32)
+    labels = jnp.asarray(rng.integers(0, c, size=n), dtype=jnp.int32)
+    tmask = jnp.asarray(rng.integers(0, 2, size=n), dtype=jnp.float32)
+    return params, (feat, src, dst, emask, dar, labels, tmask), layers
+
+
+def test_param_shapes_contract():
+    shapes = model.param_shapes(3, 64, 32, 10)
+    assert len(shapes) == 12
+    assert shapes[0] == (64, 32)       # W_0
+    assert shapes[1] == (32,)          # b_0
+    assert shapes[2] == (32 + 64, 32)  # U_0
+    assert shapes[-2] == (32 + 32, 10)  # U_last
+    assert shapes[-1] == (10,)         # c_last
+
+
+def test_init_deterministic():
+    a = model.init_params(7, 2, 8, 8, 3)
+    b = model.init_params(7, 2, 8, 8, 3)
+    c = model.init_params(8, 2, 8, 8, 3)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), layers=st.integers(1, 3))
+def test_pallas_forward_equals_jnp_forward(seed, layers):
+    params, data, _ = tiny_problem(seed=seed, layers=layers)
+    feat, src, dst, emask, *_ = data
+    out_p = model.forward(params, feat, src, dst, emask, layers=layers, use_pallas=True)
+    out_r = model.forward(params, feat, src, dst, emask, layers=layers, use_pallas=False)
+    np.testing.assert_allclose(out_p, out_r, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_pallas_train_step_equals_jnp_train_step(seed):
+    params, data, layers = tiny_problem(seed=seed)
+    sp = model.make_train_step(layers, use_pallas=True)(params, *data)
+    sr = model.make_train_step(layers, use_pallas=False)(params, *data)
+    assert len(sp) == len(sr) == 3 + len(params)
+    for a, b in zip(sp, sr):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_train_step_gradients_match_finite_differences():
+    params, data, layers = tiny_problem(seed=3, n=8, e=20)
+    step = model.make_train_step(layers, use_pallas=False)
+    out = step(params, *data)
+    loss0, grads = out[0][0], out[3:]
+    # Probe a few coordinates of W_0 with central differences.
+    eps = 1e-3
+    rng = np.random.default_rng(0)
+    w0 = np.asarray(params[0])
+    for _ in range(4):
+        i, j = rng.integers(0, w0.shape[0]), rng.integers(0, w0.shape[1])
+        pp = [p.copy() for p in params]
+        pm = [p.copy() for p in params]
+        pp[0] = pp[0].at[i, j].add(eps)
+        pm[0] = pm[0].at[i, j].add(-eps)
+        lp = step(pp, *data)[0][0]
+        lm = step(pm, *data)[0][0]
+        fd = (lp - lm) / (2 * eps)
+        np.testing.assert_allclose(grads[0][i, j], fd, rtol=5e-2, atol=5e-3)
+    assert np.isfinite(loss0)
+
+
+def test_zero_weight_nodes_contribute_nothing():
+    """Padding contract: nodes with dar*tmask == 0 must not affect loss or
+    gradients (this is what makes shape-bucket padding sound)."""
+    params, data, layers = tiny_problem(seed=4)
+    feat, src, dst, emask, dar, labels, tmask = data
+    step = model.make_train_step(layers, use_pallas=False)
+    base = step(params, feat, src, dst, emask, dar, labels, tmask)
+    # Flip the labels of masked-out nodes; nothing may change.
+    labels2 = jnp.where(tmask > 0, labels, (labels + 1) % 3)
+    pert = step(params, feat, src, dst, emask, dar, labels2, tmask)
+    for a, b in zip(base, pert):
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+
+
+def test_masked_edges_contribute_nothing():
+    """Padding contract for edges: emask == 0 edges must be invisible even if
+    their endpoints are garbage."""
+    params, data, layers = tiny_problem(seed=5)
+    feat, src, dst, emask, dar, labels, tmask = data
+    step = model.make_train_step(layers, use_pallas=False)
+    base = step(params, feat, src, dst, emask, dar, labels, tmask)
+    # Rewire all masked edges to node 0.
+    src2 = jnp.where(emask > 0, src, 0)
+    dst2 = jnp.where(emask > 0, dst, 0)
+    pert = step(params, feat, src2, dst2, emask, dar, labels, tmask)
+    for a, b in zip(base, pert):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_dar_weight_scaling_scales_loss_sum():
+    """loss_sum is linear in the DAR weights (it is a weighted *sum*; the
+    leader normalizes globally — Thm 4.3 needs sums, not means)."""
+    params, data, layers = tiny_problem(seed=6)
+    feat, src, dst, emask, dar, labels, tmask = data
+    step = model.make_train_step(layers, use_pallas=False)
+    l1 = step(params, feat, src, dst, emask, dar, labels, tmask)[0]
+    l2 = step(params, feat, src, dst, emask, 2.0 * dar, labels, tmask)[0]
+    np.testing.assert_allclose(2.0 * l1, l2, rtol=1e-5)
+
+
+def test_eval_step_counts():
+    params, data, layers = tiny_problem(seed=7)
+    feat, src, dst, emask, dar, labels, tmask = data
+    ev = model.make_eval_step(layers, use_pallas=False)
+    correct, count, loss = ev(params, feat, src, dst, emask, labels, tmask)
+    assert 0.0 <= float(correct[0]) <= float(count[0])
+    assert float(count[0]) == float(tmask.sum())
+    assert np.isfinite(float(loss[0]))
+
+
+def test_sum_of_partition_gradients_approximates_full_gradient():
+    """The DAR mechanism end-to-end on a toy graph: split edges in two
+    partitions, weight by D_local/D_global, sum gradients — compare against
+    the full-graph gradient. Homophily isn't exact here, so we check the
+    *directional* agreement is far better than the unweighted sum."""
+    rng = np.random.default_rng(11)
+    n, d, h, c, layers = 10, 6, 6, 2, 1
+    params = model.init_params(0, layers, d, h, c)
+    # Build a small undirected graph: ring + random chords.
+    und = [(i, (i + 1) % n) for i in range(n)] + [(0, 5), (2, 7), (3, 8), (1, 6)]
+    feat = jnp.asarray(rng.standard_normal((n, d), dtype=np.float32))
+    labels = jnp.asarray(rng.integers(0, c, size=n), dtype=jnp.int32)
+    tmask = jnp.ones((n,), jnp.float32)
+
+    def directed(edges):
+        src = jnp.asarray([u for u, v in edges] + [v for u, v in edges], dtype=jnp.int32)
+        dst = jnp.asarray([v for u, v in edges] + [u for u, v in edges], dtype=jnp.int32)
+        return src, dst, jnp.ones((len(edges) * 2,), jnp.float32)
+
+    step = model.make_train_step(layers, use_pallas=False)
+    # Full graph.
+    src, dst, em = directed(und)
+    full = step(params, feat, src, dst, em, jnp.ones((n,)), labels, tmask)
+    full_grads = np.concatenate([np.asarray(g).ravel() for g in full[3:]])
+
+    # Two partitions: split edge list in half (a vertex cut).
+    half = len(und) // 2
+    deg = np.zeros(n)
+    for u, v in und:
+        deg[u] += 1
+        deg[v] += 1
+
+    def part_step(edges, scheme):
+        src, dst, em = directed(edges)
+        dloc = np.zeros(n)
+        for u, v in edges:
+            dloc[u] += 1
+            dloc[v] += 1
+        if scheme == "dar":
+            w = jnp.asarray((dloc / np.maximum(deg, 1)).astype(np.float32))
+        else:
+            w = jnp.asarray((dloc > 0).astype(np.float32))
+        out = step(params, feat, src, dst, em, w, labels, tmask)
+        return np.concatenate([np.asarray(g).ravel() for g in out[3:]])
+
+    for scheme in ("dar", "none"):
+        g = part_step(und[:half], scheme) + part_step(und[half:], scheme)
+        err = np.linalg.norm(g - full_grads) / np.linalg.norm(full_grads)
+        if scheme == "dar":
+            dar_err = err
+        else:
+            none_err = err
+    assert dar_err < none_err, (dar_err, none_err)

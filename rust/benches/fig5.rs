@@ -1,0 +1,15 @@
+//! Bench harness: regenerates the paper's fig5 (see coordinator::experiments).
+//! Run: `cargo bench --bench fig5` (COFREE_QUICK=1 for a fast smoke pass).
+
+use cofree_gnn::coordinator::experiments::{run, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions::default();
+    match run("fig5", &opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("fig5 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

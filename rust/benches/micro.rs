@@ -1,0 +1,99 @@
+//! Micro-benchmarks of the L3 hot paths (criterion-style reporting without
+//! the criterion crate — the build is fully offline).
+//!
+//! Covers: graph generation, every partitioner, DAR weight computation,
+//! tensorize, DropEdge mask generation, gradient accumulation and the
+//! optimizer — the host-side components of a training iteration.
+//! Run: `cargo bench --bench micro`.
+
+use cofree_gnn::graph::datasets;
+use cofree_gnn::partition::{algorithm, dar_weights, LdgEdgeCut, Reweighting, VertexCut, ALGORITHMS};
+use cofree_gnn::runtime::TrainOut;
+use cofree_gnn::train::allreduce::GradAccumulator;
+use cofree_gnn::train::optimizer::{Adam, Optimizer};
+use cofree_gnn::train::{bucket_shapes, tensorize_partition, MaskBank};
+use cofree_gnn::util::mean_std;
+use cofree_gnn::util::rng::Rng;
+use cofree_gnn::util::timer::sample;
+
+fn report(name: &str, samples: &[f64], unit_per_iter: Option<(f64, &str)>) {
+    let (mean, std) = mean_std(samples);
+    let extra = match unit_per_iter {
+        Some((n, unit)) => format!("  ({:.1} M{unit}/s)", n / mean / 1e6),
+        None => String::new(),
+    };
+    println!("{name:<44} {:>10.3} ms ±{:>7.3}{extra}", mean * 1e3, std * 1e3);
+}
+
+fn main() {
+    println!("== micro benches (host-side hot paths) ==");
+    let ds = datasets::build("products-sim", 0.5, 42).unwrap();
+    let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
+    println!("graph: products-sim scale 0.5 (n={n}, m={m})\n");
+
+    // Dataset generation.
+    let s = sample(1, 3, || datasets::build("products-sim", 0.5, 42).unwrap());
+    report("dataset generation", &s, Some((m as f64, "edges")));
+
+    // Partitioners.
+    for name in ALGORITHMS {
+        let algo = algorithm(name).unwrap();
+        let mut rng = Rng::new(1);
+        let s = sample(1, 3, || algo.assign(&ds.graph, 8, &mut rng));
+        report(&format!("vertex cut: {name} (p=8)"), &s, Some((m as f64, "edges")));
+    }
+    {
+        let mut rng = Rng::new(2);
+        let s = sample(1, 3, || LdgEdgeCut::default().partition(&ds.graph, 8, &mut rng));
+        report("edge cut: metis-like LDG+FM (p=8)", &s, Some((m as f64, "edges")));
+    }
+
+    // Materialization + DAR + tensorize + dropedge.
+    let mut rng = Rng::new(3);
+    let vc = VertexCut::create(&ds.graph, 8, algorithm("ne").unwrap().as_ref(), &mut rng);
+    let s = sample(1, 3, || VertexCut::from_assignment(&ds.graph, 8, vc.assignment.clone()));
+    report("vertex cut materialization (p=8)", &s, Some((m as f64, "edges")));
+
+    let s = sample(1, 5, || dar_weights(&ds.graph, &vc, Reweighting::Dar));
+    report("DAR weight computation", &s, Some((n as f64, "nodes")));
+
+    let w = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let (n_pad, e_pad) = bucket_shapes(n, m, 8);
+    let s = sample(1, 5, || {
+        tensorize_partition(&vc.parts[0], &ds.data, &w[0], n_pad, e_pad).unwrap()
+    });
+    report("tensorize one partition", &s, Some((vc.parts[0].num_edges() as f64, "edges")));
+
+    let batch = tensorize_partition(&vc.parts[0], &ds.data, &w[0], n_pad, e_pad).unwrap();
+    let mut rng = Rng::new(4);
+    let s = sample(1, 5, || MaskBank::generate(&batch, 10, 0.5, &mut rng));
+    report("DropEdge-K mask bank (K=10)", &s, Some((batch.e_used as f64, "edges")));
+
+    // Gradient accumulation + Adam over a realistic parameter count.
+    let model = cofree_gnn::train::engine::model_config(&ds);
+    let shapes = model.param_shapes();
+    let grads: Vec<Vec<f32>> = shapes.iter().map(|s| vec![0.1; s.iter().product()]).collect();
+    let outs: Vec<TrainOut> = (0..8)
+        .map(|_| TrainOut { loss_sum: 1.0, weight_sum: 1.0, correct: 1.0, grads: grads.clone() })
+        .collect();
+    let nelem: usize = grads.iter().map(|g| g.len()).sum();
+    let mut acc = GradAccumulator::new();
+    let s = sample(2, 10, || {
+        acc.reset();
+        for o in &outs {
+            acc.add(o);
+        }
+    });
+    report(
+        &format!("gradient all-reduce (8 parts x {nelem} params)"),
+        &s,
+        Some((8.0 * nelem as f64, "elems")),
+    );
+
+    let mut params: Vec<Vec<f32>> = shapes.iter().map(|s| vec![0.0; s.iter().product()]).collect();
+    let mut adam = Adam::new(0.01);
+    let s = sample(2, 10, || adam.step(&mut params, &grads, 1.0));
+    report(&format!("Adam step ({nelem} params)"), &s, Some((nelem as f64, "elems")));
+
+    println!("\n(PJRT execute-path timing lives in the table1/fig3 benches.)");
+}

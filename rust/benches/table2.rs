@@ -1,0 +1,15 @@
+//! Bench harness: regenerates the paper's table2 (see coordinator::experiments).
+//! Run: `cargo bench --bench table2` (COFREE_QUICK=1 for a fast smoke pass).
+
+use cofree_gnn::coordinator::experiments::{run, ExpOptions};
+
+fn main() {
+    let opts = ExpOptions::default();
+    match run("table2", &opts) {
+        Ok(report) => println!("{report}"),
+        Err(e) => {
+            eprintln!("table2 failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,339 @@
+//! Command-line interface (hand-rolled — the offline build has no clap).
+//!
+//! ```text
+//! cofree gen              --dataset products-sim --scale 1.0 --out g.bin
+//! cofree inspect          --dataset products-sim [--partitions 8]
+//! cofree partition        --dataset products-sim --algo ne --partitions 8
+//! cofree emit-bucket-spec [--out python/compile/buckets.spec]
+//! cofree train            --dataset products-sim --partitions 4 [--algo ne]
+//!                         [--reweight dar|inv|none] [--epochs N] [--lr F]
+//!                         [--dropedge-k K --dropedge-ratio R] [--config F]
+//! cofree bench            table1|table2|table3|table4|fig2|fig3|fig4|fig5|all
+//! ```
+
+use super::config::Config;
+use super::experiments::{self, ExpOptions};
+use crate::graph::{datasets, io, stats};
+use crate::partition::{algorithm, LdgEdgeCut, PartitionMetrics, Reweighting, VertexCut};
+use crate::train::engine::{TrainConfig, TrainEngine};
+use crate::util::rng::Rng;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Parsed flags: `--key value` pairs plus positional args.
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+cofree — CoFree-GNN: communication-free distributed GNN training (reproduction)
+
+USAGE:
+  cofree gen --dataset NAME [--scale F] [--seed N] --out FILE
+  cofree inspect --dataset NAME [--scale F] [--partitions P]
+  cofree partition --dataset NAME --algo ALGO --partitions P [--scale F]
+  cofree emit-bucket-spec [--out FILE]
+  cofree train --dataset NAME --partitions P [--algo ne] [--reweight dar]
+               [--epochs N] [--lr F] [--dropedge-k K --dropedge-ratio R]
+               [--scale F] [--artifacts DIR] [--out-csv FILE] [--config FILE]
+  cofree bench NAME            (table1|table2|table3|table4|fig2|fig3|fig4|fig5|all)
+
+DATASETS: reddit-sim, products-sim, yelp-sim, papers-sim
+ALGOS:    random, ne, dbh, hep, greedy (vertex cut); metis (edge cut)
+";
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn main(argv: Vec<String>) -> Result<i32> {
+    crate::util::logging::init();
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(2);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "gen" => cmd_gen(&args),
+        "inspect" => cmd_inspect(&args),
+        "partition" => cmd_partition(&args),
+        "emit-bucket-spec" => cmd_emit_bucket_spec(&args),
+        "train" => cmd_train(&args),
+        "bench" => cmd_bench(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(0)
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn build_dataset(args: &Args) -> Result<crate::graph::Dataset> {
+    let name = args.get("dataset").context("--dataset required")?;
+    let scale = args.parse_or("scale", 1.0)?;
+    let seed = args.parse_or("seed", super::grid::BENCH_SEED)?;
+    datasets::build(name, scale, seed)
+}
+
+fn cmd_gen(args: &Args) -> Result<i32> {
+    let ds = build_dataset(args)?;
+    let out = PathBuf::from(args.get("out").context("--out required")?);
+    io::write_snapshot(&ds.graph, Some(&ds.data), &out)?;
+    println!(
+        "wrote {} (n={}, m={}, d={}, C={}) to {}",
+        ds.name,
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        ds.data.dim,
+        ds.data.num_classes,
+        out.display()
+    );
+    Ok(0)
+}
+
+fn cmd_inspect(args: &Args) -> Result<i32> {
+    let ds = build_dataset(args)?;
+    let s = stats::stats(&ds.graph);
+    println!("dataset {}: {s:#?}", ds.name);
+    println!(
+        "splits: train={} val={} test={}",
+        ds.data.split_count(0),
+        ds.data.split_count(1),
+        ds.data.split_count(2)
+    );
+    if let Some(p) = args.get("partitions") {
+        let p: usize = p.parse()?;
+        let scale = args.parse_or("scale", 1.0)?;
+        print!("{}", experiments::partition_report(&ds.name, scale, p)?);
+    }
+    Ok(0)
+}
+
+fn cmd_partition(args: &Args) -> Result<i32> {
+    let ds = build_dataset(args)?;
+    let p: usize = args.parse_or("partitions", 4)?;
+    let algo_name = args.get_or("algo", "ne");
+    let mut rng = Rng::new(args.parse_or("seed", super::grid::BENCH_SEED)?);
+    if algo_name == "metis" {
+        let ec = LdgEdgeCut::default().partition(&ds.graph, p, &mut rng);
+        println!("{}", PartitionMetrics::edge_cut(&ds.graph, &ec).row());
+    } else {
+        let algo = algorithm(algo_name).with_context(|| format!("unknown algo {algo_name}"))?;
+        let vc = VertexCut::create(&ds.graph, p, algo.as_ref(), &mut rng);
+        println!("{}", PartitionMetrics::vertex_cut(&ds.graph, &vc).row());
+    }
+    Ok(0)
+}
+
+fn cmd_emit_bucket_spec(args: &Args) -> Result<i32> {
+    let out = PathBuf::from(args.get_or("out", "python/compile/buckets.spec"));
+    let lines = super::grid::bucket_spec_lines()?;
+    let mut text = String::from("# AOT shape buckets — generated by `cofree emit-bucket-spec` from the experiment grid.\n");
+    for l in &lines {
+        text.push_str(l);
+        text.push('\n');
+    }
+    std::fs::write(&out, text)?;
+    println!("wrote {} buckets to {}", lines.len(), out.display());
+    Ok(0)
+}
+
+fn cmd_train(args: &Args) -> Result<i32> {
+    // Optional config file; CLI flags override.
+    let file_cfg = match args.get("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    let get = |key: &str, flag: &str, default: &str| -> String {
+        args.get(flag)
+            .or_else(|| file_cfg.get(key))
+            .unwrap_or(default)
+            .to_string()
+    };
+    let ds_name = get("dataset.name", "dataset", "products-sim");
+    let scale: f64 = get("dataset.scale", "scale", "1.0").parse()?;
+    let seed: u64 = get("dataset.seed", "seed", "42").parse()?;
+    let p: usize = get("train.partitions", "partitions", "4").parse()?;
+    let algo_name = get("train.algo", "algo", "ne");
+    let rw = Reweighting::parse(&get("train.reweight", "reweight", "dar"))
+        .context("--reweight must be dar|inv|none")?;
+    let epochs: usize = get("train.epochs", "epochs", "100").parse()?;
+    let lr: f32 = get("train.lr", "lr", "0.01").parse()?;
+    let k: usize = get("train.dropedge_k", "dropedge-k", "0").parse()?;
+    let ratio: f64 = get("train.dropedge_ratio", "dropedge-ratio", "0.5").parse()?;
+    let artifacts = PathBuf::from(get("run.artifacts", "artifacts", "artifacts"));
+    let dropedge = if k > 0 { Some((k, ratio)) } else { None };
+
+    let ds = datasets::build(&ds_name, scale, seed)?;
+    let mut engine = TrainEngine::new(&artifacts)?;
+    let mut rng = Rng::new(seed);
+    crate::log_info!(
+        "training {ds_name} (n={} m={}) p={p} algo={algo_name} reweight={} dropedge={dropedge:?}",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        rw.name()
+    );
+    let eval = engine.prepare_eval(&ds)?;
+    let cfg = TrainConfig {
+        epochs,
+        lr,
+        eval_every: 10,
+        dropedge,
+        seed,
+        use_adam: true,
+        allreduce_seconds: 0.0,
+        log_every: (epochs / 20).max(1),
+    };
+    let history = if p <= 1 {
+        let mut run = engine.prepare_full(&ds, dropedge, seed)?;
+        engine.train(&mut run, Some(&eval), &cfg)?.0
+    } else {
+        let algo = algorithm(&algo_name).with_context(|| format!("unknown algo {algo_name}"))?;
+        let vc = VertexCut::create(&ds.graph, p, algo.as_ref(), &mut rng);
+        let m = PartitionMetrics::vertex_cut(&ds.graph, &vc);
+        crate::log_info!("partitioned: {}", m.row());
+        let mut run = engine.prepare_partitions(&ds, &vc, rw, dropedge, seed)?;
+        engine.train(&mut run, Some(&eval), &cfg)?.0
+    };
+    let (best_val, test_at_best) = history.best();
+    let (iter_ms, iter_std) = history.iter_time_ms(2.min(epochs.saturating_sub(1)));
+    println!(
+        "done: best val acc {best_val:.4}, test @ best {test_at_best:.4}, iter {iter_ms:.1}±{iter_std:.1} ms"
+    );
+    if let Some(csv) = args.get("out-csv").or_else(|| file_cfg.get("run.out_csv")) {
+        history.write_csv(std::path::Path::new(csv))?;
+        println!("history -> {csv}");
+    }
+    Ok(0)
+}
+
+fn cmd_bench(args: &Args) -> Result<i32> {
+    let name = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .context("bench needs a name: table1|table2|table3|table4|fig2|fig3|fig4|fig5|all")?;
+    let mut opts = ExpOptions::default();
+    if let Some(dir) = args.get("artifacts") {
+        opts.artifacts = PathBuf::from(dir);
+    }
+    if let Some(dir) = args.get("results") {
+        opts.results = PathBuf::from(dir);
+    }
+    opts.trials = args.parse_or("trials", opts.trials)?;
+    opts.acc_epochs = args.parse_or("acc-epochs", opts.acc_epochs)?;
+    let names: Vec<&str> = if name == "all" {
+        vec!["table1", "table2", "table3", "table4", "fig2", "fig3", "fig4", "fig5"]
+    } else {
+        vec![name]
+    };
+    for n in names {
+        let t0 = std::time::Instant::now();
+        let report = experiments::run(n, &opts)?;
+        println!("{report}");
+        crate::log_info!("{n} done in {:.1}s", t0.elapsed().as_secs_f64());
+    }
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn flag_parsing() {
+        let a = Args::parse(&argv(&["--dataset", "x", "pos1", "--flag", "--num", "3"])).unwrap();
+        assert_eq!(a.get("dataset"), Some("x"));
+        assert_eq!(a.get("flag"), Some("true"));
+        assert_eq!(a.parse_or::<usize>("num", 0).unwrap(), 3);
+        assert_eq!(a.positional, vec!["pos1"]);
+        assert!(a.parse_or::<usize>("dataset", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert!(main(argv(&["bogus"])).is_err());
+    }
+
+    #[test]
+    fn help_prints() {
+        assert_eq!(main(argv(&["help"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn partition_command_runs() {
+        let code = main(argv(&[
+            "partition",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.05",
+            "--algo",
+            "dbh",
+            "--partitions",
+            "4",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn metis_partition_command_runs() {
+        let code = main(argv(&[
+            "partition",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.05",
+            "--algo",
+            "metis",
+            "--partitions",
+            "3",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Run configuration: a TOML-subset parser (sections, `key = value`,
+//! strings / numbers / booleans, `#` comments) so experiments can be driven
+//! by checked-in config files without external crates.
+//!
+//! ```toml
+//! [dataset]
+//! name = "products-sim"
+//! scale = 1.0
+//!
+//! [train]
+//! partitions = 4
+//! algo = "ne"
+//! epochs = 200
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config: `section.key -> raw string value`.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(inner) = line.strip_prefix('[') {
+                let name = inner
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            if values.insert(key.clone(), val).is_some() {
+                bail!("duplicate key {key}");
+            }
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Config> {
+        Self::parse(&std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("config key {key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_types_and_comments() {
+        let c = Config::parse(
+            r#"
+            top = 1
+            [dataset]
+            name = "products-sim"   # inline comment
+            scale = 0.5
+            [train]
+            partitions = 4
+            adam = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.get("top"), Some("1"));
+        assert_eq!(c.get("dataset.name"), Some("products-sim"));
+        assert_eq!(c.parse_or::<f64>("dataset.scale", 1.0).unwrap(), 0.5);
+        assert_eq!(c.parse_or::<usize>("train.partitions", 1).unwrap(), 4);
+        assert_eq!(c.parse_or::<bool>("train.adam", false).unwrap(), true);
+        assert_eq!(c.parse_or::<usize>("train.missing", 7).unwrap(), 7);
+        assert_eq!(c.get_or("train.algo", "ne"), "ne");
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("a = 1\na = 2").is_err());
+        assert!(Config::parse("x = y").unwrap().parse_or::<usize>("x", 0).is_err());
+    }
+}

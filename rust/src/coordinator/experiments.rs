@@ -1,0 +1,648 @@
+//! Experiment harnesses: one function per table/figure of the paper.
+//!
+//! Every harness prints the same rows/series the paper reports and appends
+//! a machine-readable CSV under `results/`. CoFree cells are *measured*
+//! (real PJRT execution of the partition workers); baseline timing cells
+//! are measured compute + the `simnet` communication model (DESIGN.md §2).
+//!
+//! Knobs (environment):
+//! * `COFREE_QUICK=1` — shrink trials/epochs ~4x for smoke runs.
+//! * `COFREE_TRIALS`, `COFREE_ACC_EPOCHS`, `COFREE_TIME_ITERS` — overrides.
+
+use crate::graph::{datasets, Dataset};
+use crate::partition::{
+    algorithm, LdgEdgeCut, PartitionMetrics, Reweighting, VertexCut,
+};
+use crate::runtime::ArtifactKind;
+use crate::simnet::{iteration_time, Cluster, Method, PartitionCommStats};
+use crate::train::engine::{model_config, RunMode, TrainConfig, TrainEngine};
+use crate::train::sampling::{build_pool, Sampler};
+use crate::train::tensorize::tensorize_subgraph;
+use crate::util::mean_std;
+use crate::util::rng::Rng;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::grid::{ACC_SCALE, BENCH_SCALE, BENCH_SEED};
+
+/// Harness options.
+#[derive(Clone, Debug)]
+pub struct ExpOptions {
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    /// Timing trials (paper: 10).
+    pub trials: usize,
+    /// Measured iterations per timing trial (after warmup).
+    pub time_iters: usize,
+    /// Epochs for accuracy runs (paper: hundreds-thousands; scaled here).
+    pub acc_epochs: usize,
+    pub quick: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        let quick = std::env::var("COFREE_QUICK").map(|v| v == "1").unwrap_or(false);
+        let env_usize = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        ExpOptions {
+            artifacts: PathBuf::from("artifacts"),
+            results: PathBuf::from("results"),
+            trials: env_usize("COFREE_TRIALS", if quick { 1 } else { 3 }),
+            time_iters: env_usize("COFREE_TIME_ITERS", if quick { 3 } else { 8 }),
+            acc_epochs: env_usize("COFREE_ACC_EPOCHS", if quick { 60 } else { 240 }),
+            quick,
+        }
+    }
+}
+
+fn write_csv(path: &Path, header: &str, rows: &[String]) -> Result<()> {
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    let mut text = String::from(header);
+    text.push('\n');
+    for r in rows {
+        text.push_str(r);
+        text.push('\n');
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+fn ds_build(name: &str, scale: f64) -> Result<Dataset> {
+    datasets::build(name, scale, BENCH_SEED)
+}
+
+/// CPU→GPU compute calibration for the simulated-cluster timing tables.
+///
+/// The paper's testbed computes on A100s; this box computes on one CPU
+/// core — roughly 2–3 effective GFLOP/s on this workload versus the
+/// ~0.5–1.5 effective TFLOP/s an A100 sustains on sparse GNN layers
+/// (300–1000x). Timing tables therefore report *simulated-cluster* numbers:
+/// every method's **measured** compute is divided by this factor while the
+/// (link-model) communication terms are left untouched — preserving the
+/// comm/compute balance of the paper's regime. Raw measured milliseconds
+/// are kept alongside in the CSVs. Override with `COFREE_GPU_SPEEDUP=1` to
+/// see raw-CPU-scale numbers.
+pub fn gpu_speedup() -> f64 {
+    std::env::var("COFREE_GPU_SPEEDUP").ok().and_then(|v| v.parse().ok()).unwrap_or(300.0)
+}
+
+/// Measure CoFree per-iteration *compute* (max over workers, seconds):
+/// returns (mean_s, std_s) over `trials × time_iters` iterations.
+fn measure_cofree_compute(
+    engine: &mut TrainEngine,
+    ds: &Dataset,
+    p: usize,
+    dropedge: Option<(usize, f64)>,
+    opts: &ExpOptions,
+) -> Result<(f64, f64)> {
+    let mut samples = Vec::new();
+    for trial in 0..opts.trials {
+        let mut rng = Rng::new(BENCH_SEED + trial as u64);
+        let vc = VertexCut::create(&ds.graph, p, algorithm("ne").unwrap().as_ref(), &mut rng);
+        let mut run = engine.prepare_partitions(ds, &vc, Reweighting::Dar, dropedge, trial as u64)?;
+        let cfg = TrainConfig {
+            epochs: 2 + opts.time_iters,
+            eval_every: 0,
+            seed: trial as u64,
+            ..Default::default()
+        };
+        let (hist, _, _) = engine.train(&mut run, None, &cfg)?;
+        samples.extend(hist.epochs.iter().skip(2).map(|e| e.max_worker_time));
+    }
+    Ok(mean_std(&samples))
+}
+
+/// CoFree simulated-cluster iteration time (ms): calibrated compute + the
+/// ring all-reduce of the gradients (its only communication).
+fn cofree_sim_ms(compute_s: f64, ds: &Dataset, p: usize, cluster: &Cluster) -> f64 {
+    let model = model_config(ds);
+    let grad_bytes = model.num_params() as f64 * 4.0;
+    let allreduce =
+        cluster.effective_p2p().ring_allreduce(grad_bytes, p.min(cluster.total_gpus().max(2)));
+    (compute_s / gpu_speedup() + allreduce) * 1e3
+}
+
+/// Measure a halo-based baseline's per-iteration compute by *executing* the
+/// actual halo compute graphs (owned ∪ halo nodes, intra + cut edges) of a
+/// real edge-cut partitioning. Returns `(max_worker_compute_s,
+/// straggler_comm_stats)`.
+fn measure_baseline_compute(
+    engine: &mut TrainEngine,
+    ds: &Dataset,
+    p: usize,
+    opts: &ExpOptions,
+) -> Result<(f64, PartitionCommStats)> {
+    let model = model_config(ds);
+    let mut rng = Rng::new(BENCH_SEED);
+    let ec = LdgEdgeCut::default().partition(&ds.graph, p, &mut rng);
+    let stats = PartitionCommStats::from_edge_cut(&ds.graph, &ec);
+    let straggler = stats
+        .iter()
+        .max_by_key(|s| s.halo_in + s.sent_copies)
+        .cloned()
+        .unwrap_or(PartitionCommStats { owned: 0, halo_in: 0, sent_copies: 0, intra_edges: 0 });
+    let mut batches = Vec::new();
+    for i in 0..p {
+        let (ids, local, owned) = ec.halo_subgraph(&ds.graph, i);
+        if ids.is_empty() {
+            continue;
+        }
+        let spec = engine
+            .registry
+            .find(&model, ArtifactKind::Train, ids.len(), 2 * local.num_edges().max(1))?
+            .clone();
+        // Halo replicas carry weight 0: only owned nodes train, exactly as
+        // in the halo-based systems.
+        let w: Vec<f32> = owned.iter().map(|&o| if o { 1.0 } else { 0.0 }).collect();
+        batches.push(tensorize_subgraph(&ids, &local, &ds.data, &w, spec.n_pad, spec.e_pad)?);
+    }
+    let mut run = engine.prepare_batches(&model, batches, RunMode::AllParts, 0)?;
+    let cfg = TrainConfig { epochs: 2 + opts.time_iters.min(4), eval_every: 0, ..Default::default() };
+    let (hist, _, _) = engine.train(&mut run, None, &cfg)?;
+    let samples: Vec<f64> = hist.epochs.iter().skip(2).map(|e| e.max_worker_time).collect();
+    Ok((mean_std(&samples).0, straggler))
+}
+
+/// A baseline's simulated-cluster iteration time (ms): measured halo-graph
+/// compute (calibrated) + the method's communication pattern.
+fn baseline_sim_ms(
+    method: Method,
+    compute_s: f64,
+    straggler: &PartitionCommStats,
+    ds: &Dataset,
+    cluster: &Cluster,
+) -> f64 {
+    let model = model_config(ds);
+    iteration_time(method, compute_s / gpu_speedup(), straggler, &model, cluster).total_s * 1e3
+}
+
+// ---------------------------------------------------------------------------
+// Table 1: per-iteration runtime.
+// ---------------------------------------------------------------------------
+
+pub fn table1(opts: &ExpOptions) -> Result<String> {
+    let cells: [(&str, [usize; 2]); 3] = [
+        ("reddit-sim", [2, 4]),
+        ("products-sim", [5, 10]),
+        ("yelp-sim", [3, 6]),
+    ];
+    let mut out = String::new();
+    let mut csv = Vec::new();
+    writeln!(
+        out,
+        "Table 1: per-iteration runtime (ms) on the simulated {}x-GPU cluster.\nCompute is MEASURED (PJRT execution of each method's real per-partition compute graph,\nincluding baselines' halo graphs), divided by the CPU->GPU calibration factor {};\ncommunication comes from the link model over the real partition boundary statistics.",
+        1,
+        gpu_speedup()
+    )?;
+    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    for (ds_name, ps) in cells {
+        let ds = ds_build(ds_name, BENCH_SCALE)?;
+        writeln!(out, "\n== {ds_name} (n={}, m={}) ==", ds.graph.num_nodes(), ds.graph.num_edges())?;
+        writeln!(out, "{:<24} {:>12} {:>12}", "method", format!("p={}", ps[0]), format!("p={}", ps[1]))?;
+        let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+        // Baselines: measured halo-graph compute + modeled comm.
+        let mut base_meas: Vec<(f64, PartitionCommStats)> = Vec::new();
+        for &p in &ps {
+            base_meas.push(measure_baseline_compute(&mut engine, &ds, p, opts)?);
+        }
+        for method in [Method::DistDgl, Method::PipeGcn, Method::BnsGcn { sigma: 0.1 }] {
+            let mut vals = Vec::new();
+            for (i, &p) in ps.iter().enumerate() {
+                let cluster = Cluster::single_server(p);
+                let (compute_s, ref straggler) = base_meas[i];
+                let ms = baseline_sim_ms(method, compute_s, straggler, &ds, &cluster);
+                csv.push(format!(
+                    "{ds_name},{},{p},{ms:.4},0,{:.4}",
+                    method.name(),
+                    compute_s * 1e3
+                ));
+                vals.push(ms);
+            }
+            rows.push((method.name().to_string(), vals));
+        }
+        for (label, dropedge) in [("CoFree-GNN", None), ("CoFree-GNN+DropEdge-K", Some((10usize, 0.5)))] {
+            let mut vals = Vec::new();
+            for &p in &ps {
+                let cluster = Cluster::single_server(p);
+                let (mean_s, std_s) = measure_cofree_compute(&mut engine, &ds, p, dropedge, opts)?;
+                let ms = cofree_sim_ms(mean_s, &ds, p, &cluster);
+                csv.push(format!(
+                    "{ds_name},{label},{p},{ms:.4},{:.4},{:.4}",
+                    std_s / gpu_speedup() * 1e3,
+                    mean_s * 1e3
+                ));
+                vals.push(ms);
+            }
+            rows.push((label.to_string(), vals));
+        }
+        for (name, vals) in &rows {
+            writeln!(out, "{:<24} {:>12.3} {:>12.3}", name, vals[0], vals[1])?;
+        }
+        // Time-reduced factor vs the CoFree row (as the paper computes it).
+        let cofree = &rows[3].1;
+        let (mut lo, mut hi) = (f64::INFINITY, 0.0f64);
+        for (name, vals) in &rows[..3] {
+            let _ = name;
+            for i in 0..2 {
+                let f = vals[i] / cofree[i];
+                lo = lo.min(f);
+                hi = hi.max(f);
+            }
+        }
+        writeln!(out, "{:<24} {:>12}", "Time Reduced Factor", format!("{lo:.1}~{hi:.1}x"))?;
+    }
+    write_csv(
+        &opts.results.join("table1.csv"),
+        "dataset,method,partitions,sim_ms,sim_std_ms,raw_compute_ms",
+        &csv,
+    )?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: test accuracy.
+// ---------------------------------------------------------------------------
+
+/// Train CoFree on a vertex cut and return (best-val, test-at-best).
+fn train_cofree_acc(
+    engine: &mut TrainEngine,
+    ds: &Dataset,
+    p: usize,
+    algo: &str,
+    rw: Reweighting,
+    dropedge: Option<(usize, f64)>,
+    epochs: usize,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let mut rng = Rng::new(BENCH_SEED ^ seed);
+    let vc = VertexCut::create(&ds.graph, p, algorithm(algo).unwrap().as_ref(), &mut rng);
+    let mut run = engine.prepare_partitions(ds, &vc, rw, dropedge, seed)?;
+    let eval = engine.prepare_eval(ds)?;
+    let cfg = TrainConfig { epochs, eval_every: 10, seed, ..Default::default() };
+    let (hist, _, _) = engine.train(&mut run, Some(&eval), &cfg)?;
+    Ok(hist.best())
+}
+
+fn train_full_acc(engine: &mut TrainEngine, ds: &Dataset, epochs: usize, seed: u64) -> Result<(f64, f64)> {
+    let mut run = engine.prepare_full(ds, None, seed)?;
+    let eval = engine.prepare_eval(ds)?;
+    let cfg = TrainConfig { epochs, eval_every: 10, seed, ..Default::default() };
+    let (hist, _, _) = engine.train(&mut run, Some(&eval), &cfg)?;
+    Ok(hist.best())
+}
+
+fn train_sampler_acc(
+    engine: &mut TrainEngine,
+    ds: &Dataset,
+    sampler: Sampler,
+    epochs: usize,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let model = model_config(ds);
+    let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
+    // Pool entries are at most the full graph; find a fitting artifact.
+    let spec = engine.registry.find(&model, ArtifactKind::Train, n, 2 * m)?.clone();
+    let mut rng = Rng::new(BENCH_SEED ^ seed ^ 0x5A);
+    let pool = build_pool(ds, sampler, spec.n_pad, spec.e_pad, &mut rng)?;
+    let mut run = engine.prepare_batches(&model, pool, RunMode::Rotate, seed)?;
+    let eval = engine.prepare_eval(ds)?;
+    // Rotating batches see 1/pool of the data per step: give them
+    // proportionally more steps (paper trains samplers for many epochs).
+    let cfg = TrainConfig { epochs: epochs * 2, eval_every: 20, seed, ..Default::default() };
+    let (hist, _, _) = engine.train(&mut run, Some(&eval), &cfg)?;
+    Ok(hist.best())
+}
+
+pub fn table2(opts: &ExpOptions) -> Result<String> {
+    let cells: [(&str, [usize; 2]); 3] = [
+        ("reddit-sim", [2, 4]),
+        ("products-sim", [5, 10]),
+        ("yelp-sim", [3, 6]),
+    ];
+    let mut out = String::new();
+    let mut csv = Vec::new();
+    writeln!(out, "Table 2: test accuracy (%) at scale {ACC_SCALE}. DistDGL/PipeGCN/BNS-GCN train the full-graph paradigm (they differ from it only by communication schedule), so they share the full-graph row here.")?;
+    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let e = opts.acc_epochs;
+    for (ds_name, ps) in cells {
+        let ds = ds_build(ds_name, ACC_SCALE)?;
+        writeln!(out, "\n== {ds_name} ==")?;
+        for sampler in [
+            Sampler::GraphSage { frac: 0.3 },
+            Sampler::ClusterGcn { clusters: 8 },
+            Sampler::GraphSaint { frac: 0.3, pool: 16 },
+        ] {
+            let (_, test) = train_sampler_acc(&mut engine, &ds, sampler, e, 1)?;
+            writeln!(out, "{:<26} {:>8.2}", sampler.name(), test * 100.0)?;
+            csv.push(format!("{ds_name},{},0,{:.4}", sampler.name(), test));
+        }
+        let (_, full_test) = train_full_acc(&mut engine, &ds, e, 1)?;
+        writeln!(out, "{:<26} {:>8.2}   (= DistDGL / PipeGCN / BNS-GCN paradigm)", "full-graph", full_test * 100.0)?;
+        csv.push(format!("{ds_name},full-graph,1,{:.4}", full_test));
+        for (label, dropedge) in [("CoFree-GNN", None), ("CoFree-GNN+DropEdge-K", Some((10usize, 0.5)))] {
+            let mut line = format!("{label:<26}");
+            for &p in &ps {
+                let (_, test) =
+                    train_cofree_acc(&mut engine, &ds, p, "ne", Reweighting::Dar, dropedge, e, 1)?;
+                write!(line, " p={p}: {:>6.2}", test * 100.0)?;
+                csv.push(format!("{ds_name},{label},{p},{test:.4}"));
+            }
+            writeln!(out, "{line}")?;
+        }
+    }
+    write_csv(&opts.results.join("table2.csv"), "dataset,method,partitions,test_acc", &csv)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 3: reweighting ablation at many partitions.
+// ---------------------------------------------------------------------------
+
+/// Large-p setting for the ablations: the paper uses 256 partitions on
+/// million-node graphs; our graphs are ~256x smaller, so 64 partitions
+/// keeps a comparable nodes-per-partition granularity (EXPERIMENTS.md).
+pub const ABLATION_PARTS: usize = 64;
+
+pub fn table3(opts: &ExpOptions) -> Result<String> {
+    let mut out = String::new();
+    let mut csv = Vec::new();
+    writeln!(out, "Table 3: reweighting ablation, {ABLATION_PARTS} partitions (paper: 256 on 256x larger graphs), NE vertex cut.")?;
+    writeln!(out, "{:<16} {:>12} {:>14} {:>12}", "scheme", "reddit-sim", "products-sim", "yelp-sim")?;
+    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut rows: Vec<[f64; 3]> = Vec::new();
+    for rw in [Reweighting::None, Reweighting::VanillaInv, Reweighting::Dar] {
+        let mut vals = [0.0; 3];
+        for (i, ds_name) in ["reddit-sim", "products-sim", "yelp-sim"].iter().enumerate() {
+            let ds = ds_build(ds_name, ACC_SCALE)?;
+            let (_, test) =
+                train_cofree_acc(&mut engine, &ds, ABLATION_PARTS, "ne", rw, None, opts.acc_epochs, 1)?;
+            vals[i] = test;
+            csv.push(format!("{ds_name},{},{:.4}", rw.name(), test));
+        }
+        writeln!(out, "{:<16} {:>12.2} {:>14.2} {:>12.2}", rw.name(), vals[0] * 100.0, vals[1] * 100.0, vals[2] * 100.0)?;
+        rows.push(vals);
+    }
+    write_csv(&opts.results.join("table3.csv"), "dataset,scheme,test_acc", &csv)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: partition-algorithm ablation.
+// ---------------------------------------------------------------------------
+
+/// Edge-cut (METIS-like) training: cross-partition edges dropped, no
+/// replicas, weight 1 per node — the paper's Edge Cut row.
+fn train_edge_cut_acc(
+    engine: &mut TrainEngine,
+    ds: &Dataset,
+    p: usize,
+    epochs: usize,
+    seed: u64,
+) -> Result<(f64, f64)> {
+    let model = model_config(ds);
+    let mut rng = Rng::new(BENCH_SEED ^ seed);
+    let ec = LdgEdgeCut::default().partition(&ds.graph, p, &mut rng);
+    let mut batches = Vec::new();
+    for part in &ec.parts {
+        if part.global_ids.is_empty() {
+            continue;
+        }
+        let spec = engine
+            .registry
+            .find(&model, ArtifactKind::Train, part.global_ids.len(), 2 * part.local.num_edges().max(1))?
+            .clone();
+        let w = vec![1.0f32; part.global_ids.len()];
+        batches.push(tensorize_subgraph(&part.global_ids, &part.local, &ds.data, &w, spec.n_pad, spec.e_pad)?);
+    }
+    let mut run = engine.prepare_batches(&model, batches, RunMode::AllParts, seed)?;
+    let eval = engine.prepare_eval(ds)?;
+    let cfg = TrainConfig { epochs, eval_every: 10, seed, ..Default::default() };
+    let (hist, _, _) = engine.train(&mut run, Some(&eval), &cfg)?;
+    Ok(hist.best())
+}
+
+pub fn table4(opts: &ExpOptions) -> Result<String> {
+    let mut out = String::new();
+    let mut csv = Vec::new();
+    writeln!(out, "Table 4: partition-algorithm ablation, {ABLATION_PARTS} partitions, DAR reweighting.")?;
+    writeln!(out, "{:<22} {:>12} {:>14} {:>12}", "partitioner", "reddit-sim", "products-sim", "yelp-sim")?;
+    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let algos: [(&str, &str); 5] = [
+        ("Edge Cut (METIS-like)", "edge-cut"),
+        ("Vertex Cut Random", "random"),
+        ("Vertex Cut NE", "ne"),
+        ("Vertex Cut DBH", "dbh"),
+        ("Vertex Cut HEP", "hep"),
+    ];
+    for (label, algo) in algos {
+        let mut vals = [0.0; 3];
+        for (i, ds_name) in ["reddit-sim", "products-sim", "yelp-sim"].iter().enumerate() {
+            let ds = ds_build(ds_name, ACC_SCALE)?;
+            let (_, test) = if algo == "edge-cut" {
+                train_edge_cut_acc(&mut engine, &ds, ABLATION_PARTS, opts.acc_epochs, 1)?
+            } else {
+                train_cofree_acc(&mut engine, &ds, ABLATION_PARTS, algo, Reweighting::Dar, None, opts.acc_epochs, 1)?
+            };
+            vals[i] = test;
+            csv.push(format!("{ds_name},{algo},{test:.4}"));
+        }
+        writeln!(out, "{:<22} {:>12.2} {:>14.2} {:>12.2}", label, vals[0] * 100.0, vals[1] * 100.0, vals[2] * 100.0)?;
+    }
+    write_csv(&opts.results.join("table4.csv"), "dataset,algorithm,test_acc", &csv)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 2: multi-node papers100M stand-in, 192 partitions.
+// ---------------------------------------------------------------------------
+
+pub fn fig2(opts: &ExpOptions) -> Result<String> {
+    let mut out = String::new();
+    let ds = ds_build("papers-sim", BENCH_SCALE)?;
+    let p = 192;
+    // 192 partitions over 3 machines x 8 GPUs (the paper's Figure 2 setup):
+    // 8 partitions timeshare each GPU.
+    let cluster = Cluster::multi_node(3, 8);
+    writeln!(
+        out,
+        "Figure 2: simulated per-iteration time on papers-sim (n={}, m={}), {p} partitions over a 3x8-GPU cluster (compute calibration {}x).",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        gpu_speedup()
+    )?;
+    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut csv = Vec::new();
+    // Baselines: measured halo-graph compute (x8 partitions per GPU) +
+    // multi-node comm model.
+    let (base_compute_s, straggler) = measure_baseline_compute(&mut engine, &ds, p, opts)?;
+    let parts_per_gpu = (p as f64 / cluster.total_gpus() as f64).ceil();
+    for method in [Method::DistDgl, Method::PipeGcn, Method::BnsGcn { sigma: 0.1 }] {
+        let ms = baseline_sim_ms(method, base_compute_s * parts_per_gpu, &straggler, &ds, &cluster);
+        writeln!(out, "{:<14} {:>10.2} ms", method.name(), ms)?;
+        csv.push(format!("{},{ms:.4}", method.name()));
+    }
+    let (mean_s, _) = measure_cofree_compute(&mut engine, &ds, p, None, opts)?;
+    let ms = cofree_sim_ms(mean_s * parts_per_gpu, &ds, p, &cluster);
+    writeln!(out, "{:<14} {:>10.2} ms (compute measured)", "CoFree-GNN", ms)?;
+    csv.push(format!("CoFree-GNN,{ms:.4}"));
+    write_csv(&opts.results.join("fig2.csv"), "method,sim_ms_per_iter", &csv)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 3: scaling with partition count.
+// ---------------------------------------------------------------------------
+
+pub fn fig3(opts: &ExpOptions) -> Result<String> {
+    let mut out = String::new();
+    let mut csv = Vec::new();
+    writeln!(out, "Figure 3: measured per-iteration compute (ms, raw CPU) vs number of partitions (NE + DAR).")?;
+    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let ps = [2usize, 4, 8, 16, 32];
+    writeln!(out, "{:<16} {}", "dataset", ps.map(|p| format!("{p:>9}")).join(""))?;
+    for ds_name in ["reddit-sim", "products-sim", "yelp-sim"] {
+        let ds = ds_build(ds_name, BENCH_SCALE)?;
+        let mut line = format!("{ds_name:<16}");
+        for &p in &ps {
+            let (mean_s, _) = measure_cofree_compute(&mut engine, &ds, p, None, opts)?;
+            write!(line, "{:>9.1}", mean_s * 1e3)?;
+            csv.push(format!("{ds_name},{p},{:.4}", mean_s * 1e3));
+        }
+        writeln!(out, "{line}")?;
+    }
+    write_csv(&opts.results.join("fig3.csv"), "dataset,partitions,compute_ms_per_iter", &csv)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 4: convergence curves, CoFree vs full graph.
+// ---------------------------------------------------------------------------
+
+pub fn fig4(opts: &ExpOptions) -> Result<String> {
+    let mut out = String::new();
+    let ds = ds_build("reddit-sim", ACC_SCALE)?;
+    let epochs = opts.acc_epochs;
+    writeln!(out, "Figure 4: training curves on reddit-sim (scale {ACC_SCALE}), CoFree-GNN (p=4, NE, DAR) vs full-graph training.")?;
+    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let eval = engine.prepare_eval(&ds)?;
+
+    let mut full = engine.prepare_full(&ds, None, 0)?;
+    let cfg = TrainConfig { epochs, eval_every: 5, ..Default::default() };
+    let (h_full, _, _) = engine.train(&mut full, Some(&eval), &cfg)?;
+
+    let mut rng = Rng::new(BENCH_SEED);
+    let vc = VertexCut::create(&ds.graph, 4, algorithm("ne").unwrap().as_ref(), &mut rng);
+    let mut part = engine.prepare_partitions(&ds, &vc, Reweighting::Dar, None, 0)?;
+    let (h_part, _, _) = engine.train(&mut part, Some(&eval), &cfg)?;
+
+    let mut csv = Vec::new();
+    for (h, name) in [(&h_full, "full-graph"), (&h_part, "cofree-p4")] {
+        for e in &h.epochs {
+            csv.push(format!("{name},{},{:.6},{:.4},{:.4}", e.epoch, e.train_loss, e.train_acc, e.val_acc));
+        }
+    }
+    write_csv(&opts.results.join("fig4.csv"), "run,epoch,train_loss,train_acc,val_acc", &csv)?;
+    // Print a coarse text rendition of the loss curves.
+    writeln!(out, "{:<8} {:>14} {:>14}", "epoch", "full loss", "cofree loss")?;
+    let step = (epochs / 10).max(1);
+    for i in (0..epochs).step_by(step) {
+        writeln!(out, "{:<8} {:>14.4} {:>14.4}", i, h_full.epochs[i].train_loss, h_part.epochs[i].train_loss)?;
+    }
+    writeln!(
+        out,
+        "final val acc: full={:.4} cofree={:.4}",
+        h_full.final_val_acc(),
+        h_part.final_val_acc()
+    )?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Figure 5: accuracy vs number of partitions.
+// ---------------------------------------------------------------------------
+
+pub fn fig5(opts: &ExpOptions) -> Result<String> {
+    let mut out = String::new();
+    let mut csv = Vec::new();
+    let ps = [2usize, 8, 32, 128, 256];
+    writeln!(out, "Figure 5: test accuracy vs number of partitions (NE + DAR, gradient accumulation).")?;
+    writeln!(out, "{:<16} {}", "dataset", ps.map(|p| format!("{p:>9}")).join(""))?;
+    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    for ds_name in ["reddit-sim", "products-sim", "yelp-sim"] {
+        let ds = ds_build(ds_name, ACC_SCALE)?;
+        let mut line = format!("{ds_name:<16}");
+        for &p in &ps {
+            let (_, test) =
+                train_cofree_acc(&mut engine, &ds, p, "ne", Reweighting::Dar, None, opts.acc_epochs, 1)?;
+            write!(line, "{:>9.2}", test * 100.0)?;
+            csv.push(format!("{ds_name},{p},{test:.4}"));
+        }
+        writeln!(out, "{line}")?;
+    }
+    write_csv(&opts.results.join("fig5.csv"), "dataset,partitions,test_acc", &csv)?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Partition-quality report (supports Table 4 discussion + Thm 4.1/4.2).
+// ---------------------------------------------------------------------------
+
+pub fn partition_report(ds_name: &str, scale: f64, p: usize) -> Result<String> {
+    let ds = ds_build(ds_name, scale)?;
+    let mut out = String::new();
+    writeln!(out, "Partition quality on {ds_name} (scale {scale}), p={p}:")?;
+    let rng = Rng::new(BENCH_SEED);
+    for name in crate::partition::ALGORITHMS {
+        let vc = VertexCut::create(&ds.graph, p, algorithm(name).unwrap().as_ref(), &mut rng.fork(1));
+        let m = PartitionMetrics::vertex_cut(&ds.graph, &vc);
+        writeln!(out, "  {name:<8} {}", m.row())?;
+    }
+    let ec = LdgEdgeCut::default().partition(&ds.graph, p, &mut rng.fork(2));
+    let m = PartitionMetrics::edge_cut(&ds.graph, &ec);
+    writeln!(out, "  {:<8} {}", "metis", m.row())?;
+    writeln!(
+        out,
+        "  Thm 4.2 imbalance bound (random cut): {:.2}",
+        crate::graph::stats::rf_imbalance_bound(&ds.graph, p)
+    )?;
+    Ok(out)
+}
+
+/// Dispatch an experiment by name.
+pub fn run(name: &str, opts: &ExpOptions) -> Result<String> {
+    match name {
+        "table1" => table1(opts),
+        "table2" => table2(opts),
+        "table3" => table3(opts),
+        "table4" => table4(opts),
+        "fig2" => fig2(opts),
+        "fig3" => fig3(opts),
+        "fig4" => fig4(opts),
+        "fig5" => fig5(opts),
+        _ => anyhow::bail!("unknown experiment {name} (table1-4, fig2-5)"),
+    }
+    .with_context(|| format!("running experiment {name}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_errors() {
+        let opts = ExpOptions::default();
+        assert!(run("table9", &opts).is_err());
+    }
+
+    #[test]
+    fn options_env_defaults() {
+        let o = ExpOptions::default();
+        assert!(o.trials >= 1);
+        assert!(o.time_iters >= 1);
+        assert!(o.acc_epochs >= 1);
+    }
+}

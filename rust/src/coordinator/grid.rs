@@ -1,0 +1,187 @@
+//! The experiment grid: which (dataset, partition-count) cells the paper's
+//! evaluation visits. `cofree emit-bucket-spec` derives the AOT shape
+//! buckets from exactly this grid, so `make artifacts` always covers what
+//! the benches run.
+
+use crate::graph::datasets;
+use crate::runtime::{ArtifactKind, ArtifactSpec, ModelConfig};
+use crate::train::bucket::bucket_shapes;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Deterministic seed used by all benches (10-trial std-devs fork from it).
+pub const BENCH_SEED: u64 = 42;
+/// Dataset scale used by the timing benches (Table 1, Figures 2–3).
+pub const BENCH_SCALE: f64 = 1.0;
+/// Dataset scale used by the accuracy benches (Tables 2–4, Figures 4–5) —
+/// smaller because they train to convergence.
+pub const ACC_SCALE: f64 = 0.25;
+
+/// One dataset's partition sweep.
+#[derive(Clone, Copy, Debug)]
+pub struct GridEntry {
+    pub dataset: &'static str,
+    pub scale: f64,
+    pub partitions: &'static [usize],
+}
+
+/// Partition counts covering Table 1 (2/4, 5/10, 3/6), Figure 3's sweep and
+/// Figure 5 / Tables 3–4's large-p settings.
+pub fn train_grid() -> Vec<GridEntry> {
+    vec![
+        GridEntry {
+            dataset: "reddit-sim",
+            scale: BENCH_SCALE,
+            partitions: &[1, 2, 3, 4, 6, 8, 16, 32, 64, 128, 256],
+        },
+        GridEntry {
+            dataset: "products-sim",
+            scale: BENCH_SCALE,
+            partitions: &[1, 2, 4, 5, 8, 10, 16, 32, 64, 128, 256],
+        },
+        GridEntry {
+            dataset: "yelp-sim",
+            scale: BENCH_SCALE,
+            partitions: &[1, 2, 3, 4, 6, 8, 16, 32, 64, 128, 256],
+        },
+        // Figure 2: multi-node papers100M stand-in, 192 partitions only.
+        GridEntry { dataset: "papers-sim", scale: BENCH_SCALE, partitions: &[192] },
+        // Accuracy experiments run at a smaller scale: cover the same p
+        // values on the shrunken graphs.
+        GridEntry {
+            dataset: "reddit-sim",
+            scale: ACC_SCALE,
+            partitions: &[1, 2, 4, 8, 16, 32, 64, 128, 256],
+        },
+        GridEntry {
+            dataset: "products-sim",
+            scale: ACC_SCALE,
+            partitions: &[1, 2, 4, 8, 16, 32, 64, 128, 256],
+        },
+        GridEntry {
+            dataset: "yelp-sim",
+            scale: ACC_SCALE,
+            partitions: &[1, 2, 4, 8, 16, 32, 64, 128, 256],
+        },
+    ]
+}
+
+/// Cells where the *baselines'* halo compute graphs are executed for the
+/// timing comparisons (Table 1 + Figure 2). Halo subgraphs are larger than
+/// vertex-cut partitions (owned ∪ halo nodes, intra + cut edges), so they
+/// get their own buckets, sized from the deterministic LDG edge cut that
+/// `experiments::measure_baseline_compute` reproduces at run time.
+pub const BASELINE_CELLS: [(&str, &[usize]); 4] = [
+    ("reddit-sim", &[2, 4]),
+    ("products-sim", &[5, 10]),
+    ("yelp-sim", &[3, 6]),
+    ("papers-sim", &[192]),
+];
+
+/// Datasets that need full-graph eval artifacts (accuracy tables/curves).
+pub fn eval_grid() -> Vec<(&'static str, f64)> {
+    vec![
+        ("reddit-sim", BENCH_SCALE),
+        ("products-sim", BENCH_SCALE),
+        ("yelp-sim", BENCH_SCALE),
+        ("reddit-sim", ACC_SCALE),
+        ("products-sim", ACC_SCALE),
+        ("yelp-sim", ACC_SCALE),
+    ]
+}
+
+/// Enumerate every artifact bucket the grid needs (deduplicated), as
+/// `bucket ...` spec lines for `compile/aot.py`.
+pub fn bucket_spec_lines() -> anyhow::Result<Vec<String>> {
+    // name -> line; BTreeMap for stable output order.
+    let mut lines: BTreeMap<String, String> = BTreeMap::new();
+    let mut push = |model: &ModelConfig, n_pad: usize, e_pad: usize, kind: ArtifactKind| {
+        let name = ArtifactSpec::bucket_name("sage", model, n_pad, e_pad, kind);
+        let spec = ArtifactSpec {
+            name: name.clone(),
+            kind,
+            model: *model,
+            n_pad,
+            e_pad,
+            file: PathBuf::new(),
+        };
+        lines.entry(name).or_insert_with(|| spec.spec_line());
+    };
+    for entry in train_grid() {
+        let ds = datasets::build(entry.dataset, entry.scale, BENCH_SEED)?;
+        let model = crate::train::engine::model_config(&ds);
+        let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
+        for &p in entry.partitions {
+            let (n_pad, e_pad) = bucket_shapes(n, m, p);
+            push(&model, n_pad, e_pad, ArtifactKind::Train);
+        }
+    }
+    for (name, scale) in eval_grid() {
+        let ds = datasets::build(name, scale, BENCH_SEED)?;
+        let model = crate::train::engine::model_config(&ds);
+        let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
+        let (n_pad, e_pad) = bucket_shapes(n, m, 1);
+        push(&model, n_pad, e_pad, ArtifactKind::Eval);
+    }
+    // Halo-compute buckets for the timing baselines, sized from the exact
+    // deterministic edge cut the benches will build.
+    for (name, ps) in BASELINE_CELLS {
+        let ds = datasets::build(name, BENCH_SCALE, BENCH_SEED)?;
+        let model = crate::train::engine::model_config(&ds);
+        for &p in ps {
+            let mut rng = crate::util::rng::Rng::new(BENCH_SEED);
+            let ec = crate::partition::LdgEdgeCut::default().partition(&ds.graph, p, &mut rng);
+            let (mut n_max, mut e_max) = (0usize, 0usize);
+            for i in 0..p {
+                let n_i = ec.owned[i].len() + ec.halos[i].len();
+                // Edges incident to owned nodes: intra once + cut once.
+                let deg_sum: usize =
+                    ec.owned[i].iter().map(|&v| ds.graph.degree(v) as usize).sum();
+                let e_i = deg_sum - ec.parts[i].local.num_edges();
+                n_max = n_max.max(n_i);
+                e_max = e_max.max(e_i);
+            }
+            let (n_pad, e_pad) = crate::train::bucket::pad_explicit(
+                (n_max as f64 * 1.05) as usize + 1,
+                2 * ((e_max as f64 * 1.05) as usize + 1),
+            );
+            push(&model, n_pad, e_pad, ArtifactKind::Train);
+        }
+    }
+    Ok(lines.into_values().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_covers_table1_cells() {
+        let g = train_grid();
+        let get = |name: &str| g.iter().find(|e| e.dataset == name && e.scale == BENCH_SCALE).unwrap();
+        assert!(get("reddit-sim").partitions.contains(&2));
+        assert!(get("reddit-sim").partitions.contains(&4));
+        assert!(get("products-sim").partitions.contains(&5));
+        assert!(get("products-sim").partitions.contains(&10));
+        assert!(get("yelp-sim").partitions.contains(&3));
+        assert!(get("yelp-sim").partitions.contains(&6));
+        assert!(get("papers-sim").partitions.contains(&192));
+    }
+
+    #[test]
+    fn bucket_lines_dedupe_and_parse() {
+        // Use tiny scales to keep the test fast: rebuild the function's core
+        // over a reduced grid by just calling it (datasets are cached? no —
+        // they are cheap at these sizes; papers-sim dominates at ~1s).
+        let lines = bucket_spec_lines().unwrap();
+        assert!(lines.len() > 10, "expected a real ladder, got {}", lines.len());
+        let mut seen = std::collections::HashSet::new();
+        for l in &lines {
+            assert!(l.starts_with("bucket name=sage-"), "{l}");
+            assert!(seen.insert(l.clone()), "duplicate line {l}");
+        }
+        // Both kinds appear.
+        assert!(lines.iter().any(|l| l.contains("kind=train")));
+        assert!(lines.iter().any(|l| l.contains("kind=eval")));
+    }
+}

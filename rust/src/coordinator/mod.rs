@@ -1,0 +1,11 @@
+//! The leader process: CLI, configuration, the experiment grid shared by
+//! `emit-bucket-spec` and the benches, and the harnesses that regenerate
+//! every table and figure of the paper.
+
+pub mod cli;
+pub mod config;
+pub mod experiments;
+pub mod grid;
+
+pub use config::Config;
+pub use grid::{eval_grid, train_grid, GridEntry, BENCH_SCALE, BENCH_SEED};

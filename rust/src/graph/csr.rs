@@ -1,0 +1,160 @@
+//! Compressed-sparse-row representation of an undirected graph.
+//!
+//! The graph is stored symmetrically (every undirected edge appears in both
+//! adjacency lists) plus a canonical edge list `edges[k] = (u, v)` with
+//! `u < v`, which is what the Vertex Cut partitioners operate on: a vertex
+//! cut assigns every *canonical* edge to exactly one partition.
+
+/// Undirected graph in CSR form. Node ids are dense `0..n`.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// CSR row offsets, length `n + 1`.
+    offsets: Vec<u32>,
+    /// Concatenated (symmetric) adjacency lists, length `2 * m`.
+    targets: Vec<u32>,
+    /// Canonical undirected edges, `u < v`, sorted lexicographically.
+    edges: Vec<(u32, u32)>,
+}
+
+impl Graph {
+    /// Build from CSR parts; callers normally use [`crate::graph::builder::GraphBuilder`].
+    pub(crate) fn from_parts(offsets: Vec<u32>, targets: Vec<u32>, edges: Vec<(u32, u32)>) -> Self {
+        debug_assert!(!offsets.is_empty());
+        debug_assert_eq!(*offsets.last().unwrap() as usize, targets.len());
+        debug_assert_eq!(targets.len(), edges.len() * 2);
+        Graph { offsets, targets, edges }
+    }
+
+    /// Number of nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Degree of node `v` (number of distinct neighbors).
+    #[inline]
+    pub fn degree(&self, v: u32) -> u32 {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Neighbors of `v`, sorted ascending.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.targets[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Canonical edge list (`u < v`, lexicographically sorted).
+    #[inline]
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// All degrees as a vector.
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.num_nodes() as u32).map(|v| self.degree(v)).collect()
+    }
+
+    /// Average degree `2m / n`.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_nodes() == 0 {
+            0.0
+        } else {
+            2.0 * self.num_edges() as f64 / self.num_nodes() as f64
+        }
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> u32 {
+        (0..self.num_nodes() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Minimum degree (0 if the graph has isolated nodes).
+    pub fn min_degree(&self) -> u32 {
+        (0..self.num_nodes() as u32).map(|v| self.degree(v)).min().unwrap_or(0)
+    }
+
+    /// True if the edge `(u, v)` exists (binary search on the adjacency row).
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Number of isolated (degree-0) nodes.
+    pub fn num_isolated(&self) -> usize {
+        (0..self.num_nodes() as u32).filter(|&v| self.degree(v) == 0).count()
+    }
+
+    /// Verify structural invariants; used by tests and after deserialization.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        let n = self.num_nodes() as u32;
+        ensure!(self.offsets[0] == 0, "offsets must start at 0");
+        for w in self.offsets.windows(2) {
+            ensure!(w[0] <= w[1], "offsets must be non-decreasing");
+        }
+        ensure!(
+            *self.offsets.last().unwrap() as usize == self.targets.len(),
+            "offsets must end at targets.len()"
+        );
+        ensure!(self.targets.len() == 2 * self.edges.len(), "symmetric storage");
+        for v in 0..n {
+            let row = self.neighbors(v);
+            for w in row.windows(2) {
+                ensure!(w[0] < w[1], "adjacency rows must be strictly sorted (node {v})");
+            }
+            for &t in row {
+                ensure!(t < n, "target out of range");
+                ensure!(t != v, "self loop at {v}");
+            }
+        }
+        for (i, &(u, v)) in self.edges.iter().enumerate() {
+            ensure!(u < v, "edge {i} not canonical");
+            ensure!(v < n, "edge {i} endpoint out of range");
+            ensure!(self.has_edge(u, v) && self.has_edge(v, u), "edge {i} missing from CSR");
+            if i > 0 {
+                ensure!(self.edges[i - 1] < (u, v), "edges not sorted/unique at {i}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::builder::GraphBuilder;
+
+    fn triangle_plus_tail() -> super::Graph {
+        // 0-1, 1-2, 0-2, 2-3
+        GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (0, 2), (2, 3)]).build()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.neighbors(2), &[0, 1, 3]);
+        assert!(g.has_edge(0, 2));
+        assert!(g.has_edge(2, 0));
+        assert!(!g.has_edge(0, 3));
+        assert_eq!(g.max_degree(), 3);
+        assert_eq!(g.min_degree(), 1);
+        assert!((g.avg_degree() - 2.0).abs() < 1e-12);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn isolated_nodes_counted() {
+        let g = GraphBuilder::new(5).edges(&[(0, 1)]).build();
+        assert_eq!(g.num_isolated(), 3);
+        g.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,213 @@
+//! Dataset recipes: laptop-scale stand-ins for the paper's four datasets.
+//!
+//! | paper dataset     | nodes | edges | avg deg | here (default scale=1)      |
+//! |-------------------|-------|-------|---------|------------------------------|
+//! | Reddit            | 233k  | 114M  | ~489    | `reddit-sim`: 4k, deg≈48     |
+//! | ogbn-products     | 2.4M  | 62M   | ~51     | `products-sim`: 16k, deg≈16  |
+//! | Yelp              | 716k  | 7M    | ~19     | `yelp-sim`: 8k, deg≈10       |
+//! | ogbn-papers100M   | 111M  | 1.6B  | ~29     | `papers-sim`: 64k, deg≈12    |
+//!
+//! The *relative density ordering* (reddit ≫ products > yelp ≈ papers) is
+//! preserved, which is what drives the relative compute/communication ratios
+//! in Table 1. All are degree-corrected SBMs so that degree heavy-tails
+//! (Thm 4.2) and homophily (Thm 4.3) both hold. `scale` multiplies node
+//! counts for users with more than one core to spare.
+
+use super::csr::Graph;
+use super::features::{synthesize, FeatureParams, NodeData};
+use super::generators::{degree_corrected_sbm, power_law_degrees};
+use crate::util::rng::Rng;
+
+/// A fully materialized dataset: topology + features + labels + splits,
+/// plus the GNN hyperparameters the paper uses for that dataset (scaled).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub graph: Graph,
+    pub data: NodeData,
+    /// Model depth used by the paper for this dataset (scaled-down width).
+    pub layers: usize,
+    pub hidden: usize,
+}
+
+/// Recipe parameters for one simulated dataset.
+#[derive(Clone, Debug)]
+pub struct Recipe {
+    pub name: &'static str,
+    pub base_nodes: usize,
+    pub avg_degree: f64,
+    pub gamma: f64,
+    pub max_degree_frac: f64,
+    pub classes: usize,
+    pub feat_dim: usize,
+    pub homophily: f64,
+    pub layers: usize,
+    pub hidden: usize,
+    pub noise: f32,
+}
+
+/// The four recipes. Paper model configs (Appendix B) are: reddit 4×256,
+/// products 3×128, yelp 4×512, papers100M 3×128 — depth is kept, width is
+/// scaled to the CPU budget.
+pub const RECIPES: [Recipe; 4] = [
+    Recipe {
+        name: "reddit-sim",
+        base_nodes: 4096,
+        avg_degree: 48.0,
+        gamma: 2.1,
+        max_degree_frac: 0.12,
+        classes: 16,
+        feat_dim: 64,
+        homophily: 0.70,
+        layers: 4,
+        hidden: 64,
+        noise: 10.0,
+    },
+    Recipe {
+        name: "products-sim",
+        base_nodes: 16384,
+        avg_degree: 16.0,
+        gamma: 2.3,
+        max_degree_frac: 0.06,
+        classes: 16,
+        feat_dim: 64,
+        homophily: 0.68,
+        layers: 3,
+        hidden: 64,
+        noise: 10.0,
+    },
+    Recipe {
+        name: "yelp-sim",
+        base_nodes: 8192,
+        avg_degree: 10.0,
+        gamma: 2.4,
+        max_degree_frac: 0.05,
+        classes: 16,
+        feat_dim: 64,
+        homophily: 0.66,
+        layers: 4,
+        hidden: 64,
+        noise: 10.0,
+    },
+    Recipe {
+        name: "papers-sim",
+        base_nodes: 65536,
+        avg_degree: 12.0,
+        gamma: 2.4,
+        max_degree_frac: 0.02,
+        classes: 16,
+        feat_dim: 32,
+        homophily: 0.68,
+        layers: 3,
+        hidden: 32,
+        noise: 10.0,
+    },
+];
+
+/// Look up a recipe by name.
+pub fn recipe(name: &str) -> Option<&'static Recipe> {
+    RECIPES.iter().find(|r| r.name == name)
+}
+
+/// Materialize a dataset at `scale` (node count multiplier) from `seed`.
+pub fn build(name: &str, scale: f64, seed: u64) -> anyhow::Result<Dataset> {
+    let r = recipe(name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown dataset '{name}' (known: {})",
+            RECIPES.iter().map(|r| r.name).collect::<Vec<_>>().join(", ")
+        )
+    })?;
+    Ok(build_recipe(r, scale, seed))
+}
+
+/// Materialize from an explicit recipe.
+pub fn build_recipe(r: &Recipe, scale: f64, seed: u64) -> Dataset {
+    assert!(scale > 0.0);
+    let n = ((r.base_nodes as f64 * scale) as usize).max(r.classes * 4);
+    let rng = Rng::new(seed ^ fxhash(r.name));
+    // Degree sequence targeting the recipe's average degree: sample a power
+    // law, then rescale weights so the realized average lands close.
+    let d_max = ((n as f64 * r.max_degree_frac) as u32).max(8);
+    let mut w = power_law_degrees(n, r.gamma, 2, d_max, &mut rng.fork(1));
+    let mean_w = w.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+    let boost = r.avg_degree / mean_w;
+    if boost > 1.0 {
+        for x in w.iter_mut() {
+            *x = ((*x as f64) * boost).round().max(2.0) as u32;
+        }
+    }
+    let (graph, comm) = degree_corrected_sbm(n, r.classes, &w, r.homophily, &mut rng.fork(2));
+    let data = synthesize(
+        &comm,
+        r.classes,
+        &FeatureParams {
+            dim: r.feat_dim,
+            noise: r.noise,
+            train_frac: 0.6,
+            val_frac: 0.2,
+        },
+        &mut rng.fork(3),
+    );
+    Dataset {
+        name: r.name.to_string(),
+        graph,
+        data,
+        layers: r.layers,
+        hidden: r.hidden,
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_recipes_materialize_at_small_scale() {
+        for r in &RECIPES {
+            let ds = build_recipe(r, 0.1, 7);
+            assert!(ds.graph.num_nodes() > 0, "{}", r.name);
+            assert_eq!(ds.data.num_nodes(), ds.graph.num_nodes());
+            assert!(ds.graph.avg_degree() > 0.3 * r.avg_degree, "{} too sparse: {}", r.name, ds.graph.avg_degree());
+            ds.graph.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn density_ordering_matches_paper() {
+        let reddit = build("reddit-sim", 0.25, 1).unwrap();
+        let products = build("products-sim", 0.25, 1).unwrap();
+        let yelp = build("yelp-sim", 0.25, 1).unwrap();
+        assert!(reddit.graph.avg_degree() > products.graph.avg_degree());
+        assert!(products.graph.avg_degree() > yelp.graph.avg_degree());
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let a = build("yelp-sim", 0.1, 5).unwrap();
+        let b = build("yelp-sim", 0.1, 5).unwrap();
+        let c = build("yelp-sim", 0.1, 6).unwrap();
+        assert_eq!(a.graph.edges(), b.graph.edges());
+        assert_ne!(a.graph.edges(), c.graph.edges());
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(build("nope", 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn homophily_is_materialized() {
+        let ds = build("products-sim", 0.2, 3).unwrap();
+        let h = crate::graph::generators::sbm::edge_homophily(&ds.graph, &ds.data.labels);
+        assert!(h > 0.6, "homophily {h}");
+    }
+}

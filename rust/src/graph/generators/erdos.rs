@@ -1,0 +1,49 @@
+//! Erdős–Rényi G(n, m) generator — the simplest baseline topology, used in
+//! tests and as the "no structure" control in ablations.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::Graph;
+use crate::util::rng::Rng;
+
+/// Sample a uniform graph with `n` nodes and (approximately, after dedup)
+/// `m` undirected edges.
+pub fn erdos_renyi(n: usize, m: usize, rng: &mut Rng) -> Graph {
+    assert!(n >= 2 || m == 0, "need at least two nodes to place edges");
+    let mut b = GraphBuilder::new(n);
+    // Oversample slightly to counter dedup losses, then trim at build.
+    let mut placed = 0usize;
+    let mut attempts = 0usize;
+    let max_attempts = m.saturating_mul(4) + 16;
+    while placed < m && attempts < max_attempts {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        attempts += 1;
+        if u != v {
+            b.edge(u, v);
+            placed += 1;
+        }
+    }
+    b.edges(&[]).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_are_close() {
+        let mut rng = Rng::new(1);
+        let g = erdos_renyi(1000, 5000, &mut rng);
+        assert_eq!(g.num_nodes(), 1000);
+        // Dedup can only shrink, and for n=1000, m=5000 collisions are rare.
+        assert!(g.num_edges() > 4800 && g.num_edges() <= 5000, "m={}", g.num_edges());
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deterministic() {
+        let g1 = erdos_renyi(100, 300, &mut Rng::new(7));
+        let g2 = erdos_renyi(100, 300, &mut Rng::new(7));
+        assert_eq!(g1.edges(), g2.edges());
+    }
+}

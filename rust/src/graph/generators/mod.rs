@@ -1,0 +1,27 @@
+//! Synthetic graph generators.
+//!
+//! The paper evaluates on Reddit, Yelp, ogbn-products and ogbn-papers100M.
+//! Those datasets are not available here, so each is *simulated* by a
+//! generator matched on the statistics that drive the paper's phenomena:
+//!
+//! * **degree distribution** (power law) — controls the replication-factor
+//!   imbalance of Theorem 4.2 and therefore how much DAR matters;
+//! * **density** (average degree) — controls compute vs. communication
+//!   balance in Table 1;
+//! * **homophilic community structure** — controls whether partition-local
+//!   training can recover accuracy (Theorem 4.3 assumes homophily), supplied
+//!   by overlaying an SBM on top of the degree sequence.
+//!
+//! See `DESIGN.md` §2 for the substitution rationale.
+
+pub mod ba;
+pub mod chung_lu;
+pub mod erdos;
+pub mod rmat;
+pub mod sbm;
+
+pub use ba::barabasi_albert;
+pub use chung_lu::{chung_lu, power_law_degrees};
+pub use erdos::erdos_renyi;
+pub use rmat::rmat;
+pub use sbm::{degree_corrected_sbm, planted_communities};

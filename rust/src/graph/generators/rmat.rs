@@ -1,0 +1,85 @@
+//! R-MAT (recursive matrix) generator (Chakrabarti et al., SDM'04).
+//!
+//! Produces the heavy-tailed, community-ish degree structure typical of web
+//! and social graphs; this is the default topology for our `*-sim` datasets'
+//! *hub structure* when no explicit community overlay is requested.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::Graph;
+use crate::util::rng::Rng;
+
+/// R-MAT parameters; `a + b + c + d = 1`. The classic "social" setting is
+/// `(0.57, 0.19, 0.19, 0.05)`.
+#[derive(Clone, Copy, Debug)]
+pub struct RmatParams {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub d: f64,
+}
+
+impl Default for RmatParams {
+    fn default() -> Self {
+        RmatParams { a: 0.57, b: 0.19, c: 0.19, d: 0.05 }
+    }
+}
+
+/// Generate an R-MAT graph with `2^scale` nodes and ~`m` undirected edges
+/// (dedup and self-loop removal can shrink the final count slightly).
+pub fn rmat(scale: u32, m: usize, params: RmatParams, rng: &mut Rng) -> Graph {
+    let n = 1usize << scale;
+    let RmatParams { a, b, c, d } = params;
+    assert!((a + b + c + d - 1.0).abs() < 1e-9, "R-MAT params must sum to 1");
+    let mut builder = GraphBuilder::new(n);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            u <<= 1;
+            v <<= 1;
+            let r = rng.f64();
+            if r < a {
+                // top-left: no bits set
+            } else if r < a + b {
+                v |= 1;
+            } else if r < a + b + c {
+                u |= 1;
+            } else {
+                u |= 1;
+                v |= 1;
+            }
+        }
+        if u != v {
+            builder.edge(u as u32, v as u32);
+        }
+    }
+    builder.edges(&[]).build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skewed_degrees() {
+        let mut rng = Rng::new(3);
+        let g = rmat(10, 8192, RmatParams::default(), &mut rng);
+        assert_eq!(g.num_nodes(), 1024);
+        assert!(g.num_edges() > 4000);
+        // R-MAT should be much more skewed than uniform: max degree far above
+        // the average.
+        let avg = g.avg_degree();
+        assert!(
+            g.max_degree() as f64 > 5.0 * avg,
+            "max={} avg={avg}",
+            g.max_degree()
+        );
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    #[should_panic]
+    fn params_must_sum_to_one() {
+        let mut rng = Rng::new(0);
+        rmat(4, 10, RmatParams { a: 0.5, b: 0.5, c: 0.5, d: 0.5 }, &mut rng);
+    }
+}

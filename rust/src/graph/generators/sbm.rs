@@ -1,0 +1,180 @@
+//! Homophilic community structure: stochastic block models.
+//!
+//! Theorem 4.3 (DAR recovers full-graph training) assumes homophily; the
+//! accuracy experiments (Tables 2–4, Figure 5) therefore need graphs whose
+//! labels are *learnable from neighborhoods*. We provide:
+//!
+//! * [`planted_communities`] — plain SBM: `k` equal communities, intra-edge
+//!   probability `p_in`, inter `p_out` (expressed through average degrees).
+//! * [`degree_corrected_sbm`] — SBM overlaid with a power-law degree
+//!   sequence (degree-corrected SBM), so accuracy experiments run on graphs
+//!   that are simultaneously homophilic *and* heavy-tailed, matching the
+//!   regime of the paper's datasets.
+//!
+//! Both return the community assignment, which [`crate::graph::features`]
+//! turns into features and labels.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::Graph;
+use crate::util::rng::Rng;
+
+/// Plain planted-partition SBM.
+///
+/// `avg_deg_in` / `avg_deg_out`: expected number of intra- and
+/// inter-community neighbors per node. Returns `(graph, community)`.
+pub fn planted_communities(
+    n: usize,
+    k: usize,
+    avg_deg_in: f64,
+    avg_deg_out: f64,
+    rng: &mut Rng,
+) -> (Graph, Vec<u32>) {
+    assert!(k >= 1 && n >= k);
+    let comm: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+    // Edges are sampled by count (like G(n, m)) within and across blocks.
+    let m_in = (n as f64 * avg_deg_in / 2.0) as usize;
+    let m_out = (n as f64 * avg_deg_out / 2.0) as usize;
+    let per_comm = n / k;
+    let mut b = GraphBuilder::new(n);
+    // Intra-community edges: pick a community, then two members.
+    for _ in 0..m_in {
+        let c = rng.below(k);
+        let u = (c + k * rng.below(per_comm)) as u32;
+        let v = (c + k * rng.below(per_comm)) as u32;
+        if u != v && (u as usize) < n && (v as usize) < n {
+            b.edge(u, v);
+        }
+    }
+    // Inter-community edges: uniform pairs with different community.
+    let mut placed = 0;
+    let mut guard = 0;
+    while placed < m_out && guard < 10 * m_out + 100 {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        guard += 1;
+        if u != v && comm[u as usize] != comm[v as usize] {
+            b.edge(u, v);
+            placed += 1;
+        }
+    }
+    (b.edges(&[]).build(), comm)
+}
+
+/// Degree-corrected SBM: nodes carry power-law weights; endpoints of each
+/// edge are drawn degree-proportionally, with a coin deciding whether the
+/// edge is intra-community (homophily) or uniform.
+///
+/// `homophily` in [0,1] is the probability that an edge is constrained to be
+/// intra-community. Returns `(graph, community)`.
+pub fn degree_corrected_sbm(
+    n: usize,
+    k: usize,
+    weights: &[u32],
+    homophily: f64,
+    rng: &mut Rng,
+) -> (Graph, Vec<u32>) {
+    assert_eq!(weights.len(), n);
+    assert!((0.0..=1.0).contains(&homophily));
+    let comm: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+    // Per-community cumulative weight tables for intra draws.
+    let mut by_comm: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (i, &c) in comm.iter().enumerate() {
+        by_comm[c as usize].push(i as u32);
+    }
+    let cum_of = |ids: &[u32]| -> (Vec<u64>, u64) {
+        let mut cum = Vec::with_capacity(ids.len());
+        let mut acc = 0u64;
+        for &i in ids {
+            acc += weights[i as usize] as u64;
+            cum.push(acc);
+        }
+        (cum, acc)
+    };
+    let tables: Vec<(Vec<u64>, u64)> = by_comm.iter().map(|ids| cum_of(ids)).collect();
+    let (gcum, gtot) = cum_of(&(0..n as u32).collect::<Vec<_>>());
+    let draw = |rng: &mut Rng, cum: &[u64], tot: u64, ids: Option<&[u32]>| -> u32 {
+        let t = (rng.next_u64() as u128 * tot as u128 >> 64) as u64;
+        let pos = cum.partition_point(|&c| c <= t);
+        match ids {
+            Some(ids) => ids[pos.min(ids.len() - 1)],
+            None => pos.min(cum.len() - 1) as u32,
+        }
+    };
+    let total_w: u64 = weights.iter().map(|&w| w as u64).sum();
+    let m = (total_w / 2) as usize;
+    let mut b = GraphBuilder::new(n);
+    for _ in 0..m {
+        if rng.chance(homophily) {
+            // Intra-community, degree-proportional within the block.
+            let c = comm[draw(rng, &gcum, gtot, None) as usize] as usize;
+            let (cum, tot) = &tables[c];
+            if *tot == 0 {
+                continue;
+            }
+            let u = draw(rng, cum, *tot, Some(&by_comm[c]));
+            let v = draw(rng, cum, *tot, Some(&by_comm[c]));
+            if u != v {
+                b.edge(u, v);
+            }
+        } else {
+            let u = draw(rng, &gcum, gtot, None);
+            let v = draw(rng, &gcum, gtot, None);
+            if u != v {
+                b.edge(u, v);
+            }
+        }
+    }
+    (b.edges(&[]).build(), comm)
+}
+
+/// Fraction of edges whose endpoints share a community (edge homophily).
+pub fn edge_homophily(g: &Graph, comm: &[u32]) -> f64 {
+    if g.num_edges() == 0 {
+        return 0.0;
+    }
+    let intra = g
+        .edges()
+        .iter()
+        .filter(|&&(u, v)| comm[u as usize] == comm[v as usize])
+        .count();
+    intra as f64 / g.num_edges() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::chung_lu::power_law_degrees;
+
+    #[test]
+    fn planted_homophily_holds() {
+        let mut rng = Rng::new(6);
+        let (g, comm) = planted_communities(2000, 8, 12.0, 2.0, &mut rng);
+        assert_eq!(comm.len(), 2000);
+        let h = edge_homophily(&g, &comm);
+        assert!(h > 0.75, "homophily {h}");
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn dcsbm_heavy_tail_and_homophily() {
+        let mut rng = Rng::new(7);
+        let n = 4000;
+        let w = power_law_degrees(n, 2.2, 4, 200, &mut rng);
+        let (g, comm) = degree_corrected_sbm(n, 10, &w, 0.85, &mut rng);
+        let h = edge_homophily(&g, &comm);
+        assert!(h > 0.7, "homophily {h}");
+        assert!(g.max_degree() as f64 > 4.0 * g.avg_degree());
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn communities_balanced() {
+        let mut rng = Rng::new(8);
+        let (_, comm) = planted_communities(1000, 10, 8.0, 1.0, &mut rng);
+        let mut counts = [0usize; 10];
+        for &c in &comm {
+            counts[c as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 100));
+    }
+}

@@ -1,0 +1,223 @@
+//! Graph (de)serialization.
+//!
+//! Two formats:
+//! * **edge list text** — `u v` per line, `#` comments; interchange with
+//!   external tools.
+//! * **binary snapshot** — a compact little-endian dump of the CSR plus
+//!   optional `NodeData`, so dataset generation cost is paid once per seed
+//!   (`cofree gen --out g.bin`).
+
+use super::builder::GraphBuilder;
+use super::csr::Graph;
+use super::features::NodeData;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"COFREEG1";
+
+/// Write a graph as a text edge list.
+pub fn write_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# nodes {}", g.num_nodes())?;
+    for &(u, v) in g.edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+/// Read a text edge list (format written by [`write_edge_list`]; a
+/// `# nodes N` header is honored, otherwise n = max id + 1).
+pub fn read_edge_list(path: &Path) -> Result<Graph> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let r = BufReader::new(f);
+    let mut edges: Vec<(u32, u32)> = Vec::new();
+    let mut n: Option<usize> = None;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix('#') {
+            let mut it = rest.split_whitespace();
+            if it.next() == Some("nodes") {
+                if let Some(v) = it.next() {
+                    n = Some(v.parse().context("bad # nodes header")?);
+                }
+            }
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(a), Some(b)) => (a.parse::<u32>(), b.parse::<u32>()),
+            _ => bail!("line {}: expected 'u v'", lineno + 1),
+        };
+        edges.push((u.context("bad u")?, v.context("bad v")?));
+    }
+    let n = n.unwrap_or_else(|| {
+        edges.iter().map(|&(u, v)| u.max(v) as usize + 1).max().unwrap_or(0)
+    });
+    Ok(GraphBuilder::new(n).edges(&edges).build())
+}
+
+fn put_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn get_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let len = u64::from_le_bytes(len8) as usize;
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+fn put_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    w.write_all(&(xs.len() as u64).to_le_bytes())?;
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn get_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let mut len8 = [0u8; 8];
+    r.read_exact(&mut len8)?;
+    let len = u64::from_le_bytes(len8) as usize;
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Write graph + optional node data as a binary snapshot.
+pub fn write_snapshot(g: &Graph, nd: Option<&NodeData>, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(g.num_nodes() as u64).to_le_bytes())?;
+    let flat: Vec<u32> = g.edges().iter().flat_map(|&(u, v)| [u, v]).collect();
+    put_u32s(&mut w, &flat)?;
+    match nd {
+        None => w.write_all(&[0u8])?,
+        Some(nd) => {
+            w.write_all(&[1u8])?;
+            w.write_all(&(nd.dim as u64).to_le_bytes())?;
+            w.write_all(&(nd.num_classes as u64).to_le_bytes())?;
+            put_f32s(&mut w, &nd.features)?;
+            put_u32s(&mut w, &nd.labels)?;
+            w.write_all(&(nd.split.len() as u64).to_le_bytes())?;
+            w.write_all(&nd.split)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a binary snapshot written by [`write_snapshot`].
+pub fn read_snapshot(path: &Path) -> Result<(Graph, Option<NodeData>)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a cofree snapshot: bad magic");
+    }
+    let mut n8 = [0u8; 8];
+    r.read_exact(&mut n8)?;
+    let n = u64::from_le_bytes(n8) as usize;
+    let flat = get_u32s(&mut r)?;
+    if flat.len() % 2 != 0 {
+        bail!("corrupt edge array");
+    }
+    let edges: Vec<(u32, u32)> = flat.chunks_exact(2).map(|c| (c[0], c[1])).collect();
+    let g = GraphBuilder::new(n).edges(&edges).build();
+    let mut flag = [0u8; 1];
+    r.read_exact(&mut flag)?;
+    let nd = if flag[0] == 1 {
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let dim = u64::from_le_bytes(b8) as usize;
+        r.read_exact(&mut b8)?;
+        let num_classes = u64::from_le_bytes(b8) as usize;
+        let features = get_f32s(&mut r)?;
+        let labels = get_u32s(&mut r)?;
+        r.read_exact(&mut b8)?;
+        let slen = u64::from_le_bytes(b8) as usize;
+        let mut split = vec![0u8; slen];
+        r.read_exact(&mut split)?;
+        Some(NodeData { features, dim, labels, num_classes, split })
+    } else {
+        None
+    };
+    Ok((g, nd))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::features::{synthesize, FeatureParams};
+    use crate::graph::generators::barabasi_albert;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("cofree_io_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let mut rng = Rng::new(20);
+        let g = barabasi_albert(200, 2, &mut rng);
+        let p = tmp("el");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p).unwrap();
+        assert_eq!(g.num_nodes(), g2.num_nodes());
+        assert_eq!(g.edges(), g2.edges());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn snapshot_roundtrip_with_nodedata() {
+        let mut rng = Rng::new(21);
+        let g = barabasi_albert(150, 3, &mut rng);
+        let comm: Vec<u32> = (0..150).map(|i| (i % 4) as u32).collect();
+        let nd = synthesize(&comm, 4, &FeatureParams { dim: 8, ..Default::default() }, &mut rng);
+        let p = tmp("snap");
+        write_snapshot(&g, Some(&nd), &p).unwrap();
+        let (g2, nd2) = read_snapshot(&p).unwrap();
+        let nd2 = nd2.unwrap();
+        assert_eq!(g.edges(), g2.edges());
+        assert_eq!(nd.features, nd2.features);
+        assert_eq!(nd.labels, nd2.labels);
+        assert_eq!(nd.split, nd2.split);
+        assert_eq!(nd.num_classes, nd2.num_classes);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn snapshot_without_nodedata() {
+        let mut rng = Rng::new(22);
+        let g = barabasi_albert(50, 2, &mut rng);
+        let p = tmp("snap2");
+        write_snapshot(&g, None, &p).unwrap();
+        let (g2, nd2) = read_snapshot(&p).unwrap();
+        assert!(nd2.is_none());
+        assert_eq!(g.edges(), g2.edges());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("bad");
+        std::fs::write(&p, b"NOTMAGIC........").unwrap();
+        assert!(read_snapshot(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,15 @@
+//! Graph substrate: CSR storage, construction, synthetic generators,
+//! feature/label synthesis, statistics, and (de)serialization.
+
+pub mod builder;
+pub mod csr;
+pub mod datasets;
+pub mod features;
+pub mod generators;
+pub mod io;
+pub mod stats;
+
+pub use builder::GraphBuilder;
+pub use csr::Graph;
+pub use datasets::Dataset;
+pub use features::NodeData;

@@ -1,0 +1,149 @@
+//! Descriptive statistics over graphs: degree histograms, power-law fit,
+//! and the Theorem 4.2 replication-imbalance bound.
+
+use super::csr::Graph;
+
+/// Summary statistics used by `cofree inspect` and the experiment logs.
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub nodes: usize,
+    pub edges: usize,
+    pub avg_degree: f64,
+    pub min_degree: u32,
+    pub max_degree: u32,
+    pub isolated: usize,
+    /// Maximum-likelihood power-law exponent (Clauset et al. estimator over
+    /// degrees >= d_min); `None` for degenerate graphs.
+    pub powerlaw_gamma: Option<f64>,
+}
+
+/// Compute [`GraphStats`].
+pub fn stats(g: &Graph) -> GraphStats {
+    GraphStats {
+        nodes: g.num_nodes(),
+        edges: g.num_edges(),
+        avg_degree: g.avg_degree(),
+        min_degree: g.min_degree(),
+        max_degree: g.max_degree(),
+        isolated: g.num_isolated(),
+        powerlaw_gamma: powerlaw_mle(&g.degrees(), 2),
+    }
+}
+
+/// Continuous MLE `γ = 1 + n / Σ ln(d_i / (d_min - 0.5))` over degrees
+/// `>= d_min` (Clauset–Shalizi–Newman).
+pub fn powerlaw_mle(degrees: &[u32], d_min: u32) -> Option<f64> {
+    let xm = d_min as f64 - 0.5;
+    let mut n = 0usize;
+    let mut s = 0f64;
+    for &d in degrees {
+        if d >= d_min {
+            n += 1;
+            s += (d as f64 / xm).ln();
+        }
+    }
+    if n < 10 || s <= 0.0 {
+        None
+    } else {
+        Some(1.0 + n as f64 / s)
+    }
+}
+
+/// Degree histogram in log2 buckets: `out[k]` counts nodes with
+/// `2^k <= d < 2^(k+1)` (bucket 0 also holds degree-0 nodes).
+pub fn degree_log_histogram(g: &Graph) -> Vec<usize> {
+    let maxd = g.max_degree();
+    let buckets = if maxd == 0 { 1 } else { 64 - u64::from(maxd).leading_zeros() as usize };
+    let mut out = vec![0usize; buckets.max(1)];
+    for v in 0..g.num_nodes() as u32 {
+        let d = g.degree(v);
+        let b = if d <= 1 { 0 } else { 63 - u64::from(d).leading_zeros() as usize };
+        let idx = b.min(out.len() - 1);
+        out[idx] += 1;
+    }
+    out
+}
+
+/// Theorem 4.2 lower bound on the replication-factor imbalance ratio for a
+/// random vertex cut into `p` partitions:
+/// `(1 - (1-1/p)^maxdeg) / (1 - (1-1/p)^mindeg)`.
+pub fn rf_imbalance_bound(g: &Graph, p: usize) -> f64 {
+    assert!(p >= 1);
+    let q = 1.0 - 1.0 / p as f64;
+    let mind = g.min_degree().max(1) as f64;
+    let maxd = g.max_degree() as f64;
+    let denom = 1.0 - q.powf(mind);
+    if denom <= 0.0 {
+        return 1.0;
+    }
+    (1.0 - q.powf(maxd)) / denom
+}
+
+/// Theorem 4.2 expectation: `E[RF(v)] = p (1 - (1-1/p)^deg)` under a uniform
+/// random edge assignment.
+pub fn expected_rf(degree: u32, p: usize) -> f64 {
+    let q = 1.0 - 1.0 / p as f64;
+    p as f64 * (1.0 - q.powf(degree as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{barabasi_albert, chung_lu, power_law_degrees};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mle_recovers_exponent_roughly() {
+        let mut rng = Rng::new(10);
+        let d = power_law_degrees(50_000, 2.5, 2, 10_000, &mut rng);
+        // Discretization (floor + clamp) biases the continuous MLE downward a
+        // bit at small d_min; estimate over the tail to reduce it.
+        let g = powerlaw_mle(&d, 5).unwrap();
+        assert!((g - 2.5).abs() < 0.3, "estimated {g}");
+    }
+
+    #[test]
+    fn histogram_sums_to_n() {
+        let mut rng = Rng::new(11);
+        let g = barabasi_albert(1000, 2, &mut rng);
+        let h = degree_log_histogram(&g);
+        assert_eq!(h.iter().sum::<usize>(), 1000);
+    }
+
+    #[test]
+    fn imbalance_bound_behaviour() {
+        let mut rng = Rng::new(12);
+        let w = power_law_degrees(3000, 2.3, 3, 300, &mut rng);
+        let g = chung_lu(&w, &mut rng);
+        // Bound grows with p and is >= 1.
+        let b2 = rf_imbalance_bound(&g, 2);
+        let b16 = rf_imbalance_bound(&g, 16);
+        assert!(b2 >= 1.0);
+        assert!(b16 > b2, "b2={b2} b16={b16}");
+        // Regular graph: bound is exactly 1.
+        let ring: Vec<(u32, u32)> = (0..100u32).map(|i| (i, (i + 1) % 100)).collect();
+        let rg = crate::graph::builder::GraphBuilder::new(100).edges(&ring).build();
+        assert!((rf_imbalance_bound(&rg, 8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expected_rf_limits() {
+        // Degree 1 node: RF = 1 always.
+        assert!((expected_rf(1, 8) - 1.0).abs() < 1e-12);
+        // Huge degree: RF -> p.
+        assert!((expected_rf(10_000, 8) - 8.0).abs() < 1e-6);
+        // Monotone in degree.
+        assert!(expected_rf(4, 8) < expected_rf(16, 8));
+    }
+
+    #[test]
+    fn stats_snapshot() {
+        let mut rng = Rng::new(13);
+        let g = barabasi_albert(500, 3, &mut rng);
+        let s = stats(&g);
+        assert_eq!(s.nodes, 500);
+        assert_eq!(s.isolated, 0);
+        assert!(s.min_degree >= 3);
+        assert!(s.powerlaw_gamma.is_some());
+    }
+}

@@ -1,0 +1,26 @@
+//! # CoFree-GNN
+//!
+//! A from-scratch reproduction of *“Communication-Free Distributed GNN
+//! Training with Vertex Cut”* (Cao et al., 2023) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **Rust (this crate)** — the distributed-training coordinator: graph
+//!   substrate, vertex-cut/edge-cut partitioners, Degree-Aware Reweighting,
+//!   DropEdge-K, the communication-free data-parallel training runtime over
+//!   AOT-compiled XLA executables (PJRT), baseline communication simulators,
+//!   and the experiment harnesses that regenerate every table and figure of
+//!   the paper.
+//! * **JAX / Pallas (build-time, `python/compile/`)** — the GraphSAGE
+//!   forward/backward `train_step` with the Pallas matmul hot-spot kernel,
+//!   lowered once to HLO text and loaded here via the `xla` crate.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod coordinator;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod simnet;
+pub mod train;
+pub mod util;

@@ -1,0 +1,12 @@
+//! `cofree` — the CoFree-GNN leader binary.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match cofree_gnn::coordinator::cli::main(argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

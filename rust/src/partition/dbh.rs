@@ -1,0 +1,99 @@
+//! Degree-Based Hashing (Xie et al., NeurIPS'14) — the "DBH" row of Table 4.
+//!
+//! Each edge is assigned by hashing the id of its *lower-degree* endpoint,
+//! which concentrates the cutting on high-degree vertices: a hub's edges are
+//! scattered by its many low-degree neighbors, while a low-degree node's few
+//! edges all hash to the same partition and it is never replicated. This is
+//! exactly the "cut the high-degree vertices" heuristic the paper cites when
+//! arguing real vertex cuts are *more* imbalanced than the random bound.
+
+use super::VertexCutAlgorithm;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Degree-based hashing vertex cut.
+pub struct Dbh;
+
+#[inline]
+fn hash_u64(x: u64) -> u64 {
+    // splitmix-style finalizer.
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl VertexCutAlgorithm for Dbh {
+    fn name(&self) -> &'static str {
+        "dbh"
+    }
+
+    fn assign(&self, g: &Graph, p: usize, rng: &mut Rng) -> Vec<u32> {
+        // A per-run salt keeps different seeds from producing identical cuts
+        // while the assignment stays a pure function of (salt, node id).
+        let salt = rng.next_u64();
+        g.edges()
+            .iter()
+            .map(|&(u, v)| {
+                let (du, dv) = (g.degree(u), g.degree(v));
+                let key = if du < dv || (du == dv && u < v) { u } else { v };
+                (hash_u64(salt ^ key as u64) % p as u64) as u32
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::partition::VertexCut;
+
+    #[test]
+    fn low_degree_nodes_never_replicated() {
+        // Star graph: leaves have degree 1, hub has degree n-1. DBH hashes
+        // every edge by its leaf, so leaves have RF=1 and the hub is cut.
+        let n = 100u32;
+        let g = GraphBuilder::new(n as usize)
+            .edges(&(1..n).map(|i| (0, i)).collect::<Vec<_>>())
+            .build();
+        let mut rng = Rng::new(3);
+        let vc = VertexCut::create(&g, 8, &Dbh, &mut rng);
+        let rf = vc.node_replication(&g);
+        for leaf in 1..n {
+            assert_eq!(rf[leaf as usize], 1, "leaf {leaf}");
+        }
+        assert!(rf[0] > 1, "hub should be replicated, rf={}", rf[0]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = GraphBuilder::new(50)
+            .edges(&(1..50u32).map(|i| (i - 1, i)).collect::<Vec<_>>())
+            .build();
+        let a = Dbh.assign(&g, 4, &mut Rng::new(9));
+        let b = Dbh.assign(&g, 4, &mut Rng::new(9));
+        let c = Dbh.assign(&g, 4, &mut Rng::new(10));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn dbh_beats_random_rf_on_power_law() {
+        use crate::graph::generators::barabasi_albert;
+        use crate::partition::metrics::PartitionMetrics;
+        let mut rng = Rng::new(4);
+        let g = barabasi_albert(3000, 3, &mut rng);
+        let vc_dbh = VertexCut::create(&g, 16, &Dbh, &mut rng.fork(1));
+        let vc_rnd =
+            VertexCut::create(&g, 16, &crate::partition::random::RandomVertexCut, &mut rng.fork(2));
+        let m_dbh = PartitionMetrics::vertex_cut(&g, &vc_dbh);
+        let m_rnd = PartitionMetrics::vertex_cut(&g, &vc_rnd);
+        assert!(
+            m_dbh.replication_factor < m_rnd.replication_factor,
+            "dbh {} vs random {}",
+            m_dbh.replication_factor,
+            m_rnd.replication_factor
+        );
+    }
+}

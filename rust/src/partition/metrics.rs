@@ -1,0 +1,158 @@
+//! Partition-quality metrics: replication factor (Eq. 1), balance, and
+//! boundary statistics — the quantities Table 1/4 and the simnet models are
+//! driven by.
+
+use super::{EdgeCut, VertexCut};
+use crate::graph::Graph;
+use crate::util::mean_std;
+
+/// Quality summary of a partitioning.
+#[derive(Clone, Debug)]
+pub struct PartitionMetrics {
+    pub num_parts: usize,
+    /// Eq. 1: `RF = (1/|V|) Σ_i |V[i]|` (vertex cut) or halo-inflated node
+    /// count over |V| (edge cut).
+    pub replication_factor: f64,
+    /// Max / mean edges per partition (1.0 = perfectly balanced).
+    pub edge_balance: f64,
+    /// Max / mean (replicated) nodes per partition.
+    pub node_balance: f64,
+    /// Mean and std of per-node RF (vertex cut) — the imbalance Thm 4.2
+    /// talks about.
+    pub rf_mean: f64,
+    pub rf_std: f64,
+    /// Max per-node RF observed.
+    pub rf_max: u32,
+    /// Edge-cut only: number of cut edges (0 for vertex cuts).
+    pub cut_edges: usize,
+    /// Edge-cut only: total halo copies (the `H` of Thm 4.1).
+    pub halo_nodes: usize,
+}
+
+impl PartitionMetrics {
+    /// Metrics for a vertex cut.
+    pub fn vertex_cut(g: &Graph, vc: &VertexCut) -> Self {
+        let n_effective = g.num_nodes() - g.num_isolated();
+        let total_nodes: usize = vc.parts.iter().map(|p| p.num_nodes()).sum();
+        let rf = vc.node_replication(g);
+        let rf_nonzero: Vec<f64> =
+            rf.iter().filter(|&&r| r > 0).map(|&r| r as f64).collect();
+        let (rf_mean, rf_std) = mean_std(&rf_nonzero);
+        let edge_sizes: Vec<f64> = vc.parts.iter().map(|p| p.num_edges() as f64).collect();
+        let node_sizes: Vec<f64> = vc.parts.iter().map(|p| p.num_nodes() as f64).collect();
+        PartitionMetrics {
+            num_parts: vc.num_parts,
+            replication_factor: if n_effective == 0 {
+                1.0
+            } else {
+                total_nodes as f64 / n_effective as f64
+            },
+            edge_balance: balance(&edge_sizes),
+            node_balance: balance(&node_sizes),
+            rf_mean,
+            rf_std,
+            rf_max: rf.iter().copied().max().unwrap_or(0),
+            cut_edges: 0,
+            halo_nodes: 0,
+        }
+    }
+
+    /// Metrics for an edge cut: replication counts owned + halo copies.
+    pub fn edge_cut(g: &Graph, ec: &EdgeCut) -> Self {
+        let n = g.num_nodes();
+        let halo = ec.total_halos();
+        let edge_sizes: Vec<f64> = ec.parts.iter().map(|p| p.local.num_edges() as f64).collect();
+        let node_sizes: Vec<f64> = ec
+            .owned
+            .iter()
+            .zip(&ec.halos)
+            .map(|(o, h)| (o.len() + h.len()) as f64)
+            .collect();
+        // Per-node replication under halos: 1 (owner) + #partitions holding
+        // it as halo.
+        let mut rf = vec![1u32; n];
+        for h in &ec.halos {
+            for &v in h {
+                rf[v as usize] += 1;
+            }
+        }
+        let rfv: Vec<f64> = rf.iter().map(|&r| r as f64).collect();
+        let (rf_mean, rf_std) = mean_std(&rfv);
+        PartitionMetrics {
+            num_parts: ec.num_parts,
+            replication_factor: if n == 0 { 1.0 } else { (n + halo) as f64 / n as f64 },
+            edge_balance: balance(&edge_sizes),
+            node_balance: balance(&node_sizes),
+            rf_mean,
+            rf_std,
+            rf_max: rf.iter().copied().max().unwrap_or(0),
+            cut_edges: ec.cut_edges,
+            halo_nodes: halo,
+        }
+    }
+
+    /// One-line table row used by `cofree inspect` and the benches.
+    pub fn row(&self) -> String {
+        format!(
+            "p={:<4} RF={:.3} rf_max={:<4} edge_bal={:.3} node_bal={:.3} cut={} halos={}",
+            self.num_parts,
+            self.replication_factor,
+            self.rf_max,
+            self.edge_balance,
+            self.node_balance,
+            self.cut_edges,
+            self.halo_nodes
+        )
+    }
+}
+
+fn balance(sizes: &[f64]) -> f64 {
+    if sizes.is_empty() {
+        return 1.0;
+    }
+    let mean = sizes.iter().sum::<f64>() / sizes.len() as f64;
+    if mean == 0.0 {
+        1.0
+    } else {
+        sizes.iter().cloned().fold(0.0, f64::max) / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::barabasi_albert;
+    use crate::partition::{random::RandomVertexCut, LdgEdgeCut, VertexCut};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn vertex_cut_rf_consistency() {
+        let mut rng = Rng::new(30);
+        let g = barabasi_albert(1000, 3, &mut rng);
+        let vc = VertexCut::create(&g, 8, &RandomVertexCut, &mut rng);
+        let m = PartitionMetrics::vertex_cut(&g, &vc);
+        // RF(G) (Eq. 1 over non-isolated nodes) == mean per-node RF.
+        assert!((m.replication_factor - m.rf_mean).abs() < 1e-9);
+        assert!(m.replication_factor >= 1.0);
+        assert!(m.replication_factor <= 8.0);
+        assert!(m.edge_balance >= 1.0);
+    }
+
+    #[test]
+    fn edge_cut_metrics() {
+        let mut rng = Rng::new(31);
+        let g = barabasi_albert(500, 3, &mut rng);
+        let ec = LdgEdgeCut::default().partition(&g, 4, &mut rng);
+        let m = PartitionMetrics::edge_cut(&g, &ec);
+        assert_eq!(m.halo_nodes, ec.total_halos());
+        assert_eq!(m.cut_edges, ec.cut_edges);
+        assert!(m.replication_factor >= 1.0);
+        assert!(!m.row().is_empty());
+    }
+
+    #[test]
+    fn perfect_balance_is_one() {
+        assert!((super::balance(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
+        assert!(super::balance(&[10.0, 5.0, 0.0]) > 1.9);
+    }
+}

@@ -1,0 +1,283 @@
+//! Graph partitioning: Vertex Cut (the paper's choice) and Edge Cut (the
+//! baseline it replaces).
+//!
+//! A **vertex cut** assigns every *canonical undirected edge* of the input
+//! graph to exactly one of `p` partitions ([`VertexCut::assignment`]);
+//! vertices incident to edges in several partitions are *replicated*. The
+//! materialized [`PartGraph`]s are self-contained local graphs — that is the
+//! property that makes training communication-free.
+//!
+//! An **edge cut** assigns every *node* to one partition; cross-partition
+//! edges are either dropped (the METIS row of Table 4) or served through
+//! halo nodes + synchronization (the DistDGL/PipeGCN/BNS-GCN baselines,
+//! whose traffic `simnet` models from the boundary statistics computed
+//! here).
+
+pub mod dar;
+pub mod dbh;
+pub mod edge_cut;
+pub mod greedy;
+pub mod hep;
+pub mod metrics;
+pub mod ne;
+pub mod random;
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::util::rng::Rng;
+use std::collections::HashMap;
+
+pub use dar::{dar_weights, Reweighting};
+pub use edge_cut::{EdgeCut, LdgEdgeCut};
+pub use metrics::PartitionMetrics;
+
+/// A vertex-cut partitioning algorithm: maps each canonical edge to a part.
+pub trait VertexCutAlgorithm {
+    /// Short stable identifier (used in CLIs, tables, artifact names).
+    fn name(&self) -> &'static str;
+    /// Assignment of `g.edges()[k]` to a part in `0..p`.
+    fn assign(&self, g: &Graph, p: usize, rng: &mut Rng) -> Vec<u32>;
+}
+
+/// One partition's local graph under a vertex cut.
+#[derive(Clone, Debug)]
+pub struct PartGraph {
+    pub part_id: usize,
+    /// Local node id -> global node id (sorted ascending).
+    pub global_ids: Vec<u32>,
+    /// The local topology: every edge assigned to this part, re-indexed to
+    /// local ids. Symmetric CSR, exactly like the full [`Graph`].
+    pub local: Graph,
+}
+
+impl PartGraph {
+    /// Number of (replicated) nodes present in this partition.
+    pub fn num_nodes(&self) -> usize {
+        self.global_ids.len()
+    }
+    /// Number of canonical edges assigned to this partition.
+    pub fn num_edges(&self) -> usize {
+        self.local.num_edges()
+    }
+    /// Local id of a global node, if present (binary search).
+    pub fn local_of(&self, global: u32) -> Option<u32> {
+        self.global_ids.binary_search(&global).ok().map(|i| i as u32)
+    }
+}
+
+/// A complete vertex-cut partitioning of a graph.
+#[derive(Clone, Debug)]
+pub struct VertexCut {
+    pub num_parts: usize,
+    /// Per canonical edge (index into `Graph::edges()`): owning part.
+    pub assignment: Vec<u32>,
+    pub parts: Vec<PartGraph>,
+}
+
+impl VertexCut {
+    /// Run `algo` and materialize the per-partition local graphs.
+    pub fn create(g: &Graph, p: usize, algo: &dyn VertexCutAlgorithm, rng: &mut Rng) -> VertexCut {
+        let assignment = algo.assign(g, p, rng);
+        Self::from_assignment(g, p, assignment)
+    }
+
+    /// Materialize from a precomputed edge assignment.
+    pub fn from_assignment(g: &Graph, p: usize, assignment: Vec<u32>) -> VertexCut {
+        assert_eq!(assignment.len(), g.num_edges(), "one part per canonical edge");
+        assert!(assignment.iter().all(|&a| (a as usize) < p), "part id out of range");
+        // Collect each part's global vertex set + edge list.
+        let mut part_edges: Vec<Vec<(u32, u32)>> = vec![Vec::new(); p];
+        for (k, &(u, v)) in g.edges().iter().enumerate() {
+            part_edges[assignment[k] as usize].push((u, v));
+        }
+        let parts = part_edges
+            .into_iter()
+            .enumerate()
+            .map(|(i, edges)| {
+                let mut ids: Vec<u32> = edges.iter().flat_map(|&(u, v)| [u, v]).collect();
+                ids.sort_unstable();
+                ids.dedup();
+                let index: HashMap<u32, u32> =
+                    ids.iter().enumerate().map(|(l, &gid)| (gid, l as u32)).collect();
+                let mut b = GraphBuilder::new(ids.len());
+                for &(u, v) in &edges {
+                    b.edge(index[&u], index[&v]);
+                }
+                PartGraph { part_id: i, global_ids: ids, local: b.edges(&[]).build() }
+            })
+            .collect();
+        VertexCut { num_parts: p, assignment, parts }
+    }
+
+    /// Per-node replication factor `RF(v) = Σ_i 1[v ∈ V[i]]` (0 for isolated
+    /// nodes, which appear in no partition).
+    pub fn node_replication(&self, g: &Graph) -> Vec<u32> {
+        let mut rf = vec![0u32; g.num_nodes()];
+        for part in &self.parts {
+            for &gid in &part.global_ids {
+                rf[gid as usize] += 1;
+            }
+        }
+        rf
+    }
+
+    /// Check the vertex-cut invariants against the source graph.
+    pub fn check_invariants(&self, g: &Graph) -> anyhow::Result<()> {
+        use anyhow::ensure;
+        ensure!(self.assignment.len() == g.num_edges());
+        // Partition edge counts must sum to m (disjoint + covering, since
+        // each edge is assigned exactly once by construction).
+        let total: usize = self.parts.iter().map(|p| p.num_edges()).sum();
+        ensure!(total == g.num_edges(), "edges lost or duplicated: {total} vs {}", g.num_edges());
+        // Local degree sums must reconstruct global degrees.
+        let mut deg = vec![0u64; g.num_nodes()];
+        for part in &self.parts {
+            part.local.check_invariants()?;
+            for (l, &gid) in part.global_ids.iter().enumerate() {
+                let d = part.local.degree(l as u32);
+                ensure!(d > 0, "partition {} contains isolated replica of {gid}", part.part_id);
+                deg[gid as usize] += d as u64;
+            }
+        }
+        for v in 0..g.num_nodes() {
+            ensure!(
+                deg[v] == g.degree(v as u32) as u64,
+                "degree of node {v} not preserved: {} vs {}",
+                deg[v],
+                g.degree(v as u32)
+            );
+        }
+        // Edge sets must match exactly (re-projected to global ids).
+        let mut all: Vec<(u32, u32)> = Vec::with_capacity(g.num_edges());
+        for part in &self.parts {
+            for &(lu, lv) in part.local.edges() {
+                let gu = part.global_ids[lu as usize];
+                let gv = part.global_ids[lv as usize];
+                all.push(if gu < gv { (gu, gv) } else { (gv, gu) });
+            }
+        }
+        all.sort_unstable();
+        ensure!(all == g.edges(), "partition edges differ from graph edges");
+        Ok(())
+    }
+}
+
+/// Look up a vertex-cut algorithm by CLI name.
+pub fn algorithm(name: &str) -> Option<Box<dyn VertexCutAlgorithm>> {
+    match name {
+        "random" => Some(Box::new(random::RandomVertexCut)),
+        "dbh" => Some(Box::new(dbh::Dbh)),
+        "greedy" => Some(Box::new(greedy::PowerGraphGreedy)),
+        "ne" => Some(Box::new(ne::NeighborExpansion::default())),
+        "hep" => Some(Box::new(hep::Hep::default())),
+        _ => None,
+    }
+}
+
+/// All vertex-cut algorithm names (Table 4 order).
+pub const ALGORITHMS: [&str; 5] = ["random", "ne", "dbh", "hep", "greedy"];
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::graph::generators::{barabasi_albert, erdos_renyi};
+
+    /// A small zoo of graphs for invariant tests.
+    pub fn graph_zoo(seed: u64) -> Vec<Graph> {
+        let rng = Rng::new(seed);
+        let ring: Vec<(u32, u32)> = (0..40u32).map(|i| (i, (i + 1) % 40)).collect();
+        vec![
+            GraphBuilder::new(40).edges(&ring).build(),
+            erdos_renyi(100, 300, &mut rng.fork(1)),
+            barabasi_albert(200, 3, &mut rng.fork(2)),
+            // Star: worst case for replication imbalance.
+            GraphBuilder::new(65)
+                .edges(&(1..65u32).map(|i| (0, i)).collect::<Vec<_>>())
+                .build(),
+            // With isolated nodes.
+            GraphBuilder::new(20).edges(&[(0, 1), (2, 3), (4, 5)]).build(),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::graph_zoo;
+    use super::*;
+
+    /// Property test: every algorithm preserves the vertex-cut invariants on
+    /// every zoo graph for several partition counts and seeds.
+    #[test]
+    fn all_algorithms_satisfy_invariants() {
+        for (gi, g) in graph_zoo(42).iter().enumerate() {
+            for &name in ALGORITHMS.iter() {
+                let algo = algorithm(name).unwrap();
+                for &p in &[1usize, 2, 3, 8] {
+                    for seed in 0..3u64 {
+                        let mut rng = Rng::new(seed * 1000 + gi as u64);
+                        let vc = VertexCut::create(g, p, algo.as_ref(), &mut rng);
+                        vc.check_invariants(g).unwrap_or_else(|e| {
+                            panic!("{name} p={p} graph#{gi} seed={seed}: {e}")
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn replication_counts_match_metrics() {
+        let g = &graph_zoo(1)[2];
+        let mut rng = Rng::new(5);
+        let vc = VertexCut::create(g, 4, &random::RandomVertexCut, &mut rng);
+        let rf = vc.node_replication(g);
+        let total: u32 = rf.iter().sum();
+        let by_parts: usize = vc.parts.iter().map(|p| p.num_nodes()).sum();
+        assert_eq!(total as usize, by_parts);
+        // RF bounds: 1..=min(p, degree) for non-isolated nodes.
+        for v in 0..g.num_nodes() as u32 {
+            let d = g.degree(v);
+            if d == 0 {
+                assert_eq!(rf[v as usize], 0);
+            } else {
+                assert!(rf[v as usize] >= 1);
+                assert!(rf[v as usize] <= d.min(4));
+            }
+        }
+    }
+
+    #[test]
+    fn single_partition_is_identity() {
+        let g = &graph_zoo(2)[1];
+        let mut rng = Rng::new(0);
+        let vc = VertexCut::create(g, 1, &random::RandomVertexCut, &mut rng);
+        assert_eq!(vc.parts.len(), 1);
+        assert_eq!(vc.parts[0].num_edges(), g.num_edges());
+        // Every non-isolated node appears exactly once.
+        let rf = vc.node_replication(g);
+        for v in 0..g.num_nodes() as u32 {
+            assert_eq!(rf[v as usize], u32::from(g.degree(v) > 0));
+        }
+    }
+
+    #[test]
+    fn local_of_lookup() {
+        let g = &graph_zoo(3)[0];
+        let mut rng = Rng::new(1);
+        let vc = VertexCut::create(g, 2, &random::RandomVertexCut, &mut rng);
+        for part in &vc.parts {
+            for (l, &gid) in part.global_ids.iter().enumerate() {
+                assert_eq!(part.local_of(gid), Some(l as u32));
+            }
+            assert_eq!(part.local_of(10_000), None);
+        }
+    }
+
+    #[test]
+    fn algorithm_lookup() {
+        for &name in ALGORITHMS.iter() {
+            assert!(algorithm(name).is_some(), "{name}");
+            assert_eq!(algorithm(name).unwrap().name(), name);
+        }
+        assert!(algorithm("metis").is_none());
+    }
+}

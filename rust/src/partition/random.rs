@@ -1,0 +1,70 @@
+//! Uniform random vertex cut — the "Random" row of Table 4 and the model
+//! under which Theorem 4.2's expected replication factor is exact.
+
+use super::VertexCutAlgorithm;
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Assign each canonical edge to a uniformly random partition.
+pub struct RandomVertexCut;
+
+impl VertexCutAlgorithm for RandomVertexCut {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn assign(&self, g: &Graph, p: usize, rng: &mut Rng) -> Vec<u32> {
+        (0..g.num_edges()).map(|_| rng.below(p) as u32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::erdos_renyi;
+    use crate::graph::stats::expected_rf;
+    use crate::partition::VertexCut;
+
+    #[test]
+    fn uniform_load() {
+        let mut rng = Rng::new(1);
+        let g = erdos_renyi(500, 4000, &mut rng);
+        let vc = VertexCut::create(&g, 8, &RandomVertexCut, &mut rng);
+        let sizes: Vec<usize> = vc.parts.iter().map(|p| p.num_edges()).collect();
+        let avg = g.num_edges() as f64 / 8.0;
+        for s in sizes {
+            assert!((s as f64) > 0.8 * avg && (s as f64) < 1.2 * avg, "s={s} avg={avg}");
+        }
+    }
+
+    /// Theorem 4.2's expectation formula should match the empirical mean RF
+    /// of random assignment (this is the theorem's own proof model).
+    #[test]
+    fn rf_matches_theorem_4_2_expectation() {
+        let rng = Rng::new(2);
+        // d-regular-ish graph: ring + chords, all degrees 4.
+        let n = 2000u32;
+        let mut edges = Vec::new();
+        for i in 0..n {
+            edges.push((i, (i + 1) % n));
+            edges.push((i, (i + 7) % n));
+        }
+        let g = crate::graph::GraphBuilder::new(n as usize).edges(&edges).build();
+        assert_eq!(g.min_degree(), 4);
+        assert_eq!(g.max_degree(), 4);
+        let p = 8;
+        let mut mean_rf = 0.0;
+        let trials = 5;
+        for t in 0..trials {
+            let vc = VertexCut::create(&g, p, &RandomVertexCut, &mut rng.fork(t));
+            let rf = vc.node_replication(&g);
+            mean_rf += rf.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        }
+        mean_rf /= trials as f64;
+        let expect = expected_rf(4, p);
+        assert!(
+            (mean_rf - expect).abs() < 0.05 * expect,
+            "empirical {mean_rf} vs theorem {expect}"
+        );
+    }
+}

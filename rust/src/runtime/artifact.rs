@@ -1,0 +1,277 @@
+//! Artifact registry: manifest parsing, shape-bucket lookup, and the
+//! parameter-shape contract shared with `python/compile/model.py`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Model hyperparameters that select an artifact family.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ModelConfig {
+    pub layers: usize,
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl ModelConfig {
+    /// Shapes of the flat parameter list, in lowering order — MUST mirror
+    /// `model.param_shapes` on the Python side:
+    /// per layer `W [in, H]`, `b [H]`, `U [H+in, out]`, `c [out]`.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(self.layers * 4);
+        for l in 0..self.layers {
+            let d_in = if l == 0 { self.feat_dim } else { self.hidden };
+            let d_out = if l == self.layers - 1 { self.classes } else { self.hidden };
+            out.push(vec![d_in, self.hidden]);
+            out.push(vec![self.hidden]);
+            out.push(vec![self.hidden + d_in, d_out]);
+            out.push(vec![d_out]);
+        }
+        out
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        self.param_shapes().iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// Train or eval artifact.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Train,
+    Eval,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "train" => Some(ArtifactKind::Train),
+            "eval" => Some(ArtifactKind::Eval),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArtifactKind::Train => "train",
+            ArtifactKind::Eval => "eval",
+        }
+    }
+}
+
+/// One manifest entry: a lowered HLO module for a shape bucket.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub kind: ArtifactKind,
+    pub model: ModelConfig,
+    pub n_pad: usize,
+    pub e_pad: usize,
+    pub file: PathBuf,
+}
+
+impl ArtifactSpec {
+    /// Stable bucket name used both here and by `emit-bucket-spec`.
+    pub fn bucket_name(
+        tag: &str,
+        model: &ModelConfig,
+        n_pad: usize,
+        e_pad: usize,
+        kind: ArtifactKind,
+    ) -> String {
+        format!(
+            "{tag}-L{}-h{}-d{}-c{}-n{}-e{}-{}",
+            model.layers,
+            model.hidden,
+            model.feat_dim,
+            model.classes,
+            n_pad,
+            e_pad,
+            kind.name()
+        )
+    }
+
+    /// The `bucket ...` spec line consumed by `compile/aot.py`.
+    pub fn spec_line(&self) -> String {
+        format!(
+            "bucket name={} kind={} layers={} feat={} hidden={} classes={} n_pad={} e_pad={}",
+            self.name,
+            self.kind.name(),
+            self.model.layers,
+            self.model.feat_dim,
+            self.model.hidden,
+            self.model.classes,
+            self.n_pad,
+            self.e_pad
+        )
+    }
+}
+
+fn parse_kv(line: &str) -> (Option<&str>, HashMap<&str, &str>) {
+    let mut toks = line.split_whitespace();
+    let head = toks.next();
+    let mut kv = HashMap::new();
+    for t in toks {
+        if let Some((k, v)) = t.split_once('=') {
+            kv.insert(k, v);
+        }
+    }
+    (head, kv)
+}
+
+/// The set of available artifacts, loaded from `artifacts/manifest.txt`.
+pub struct Registry {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Registry {
+    /// Load from an artifacts directory (expects `manifest.txt`).
+    pub fn load(dir: &Path) -> Result<Registry> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!("reading {manifest:?} — run `make artifacts` first")
+        })?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (head, kv) = parse_kv(line);
+            if head != Some("artifact") {
+                continue;
+            }
+            let get = |k: &str| -> Result<&str> {
+                kv.get(k).copied().with_context(|| format!("manifest line {}: missing {k}", lineno + 1))
+            };
+            let kind = ArtifactKind::parse(get("kind")?)
+                .with_context(|| format!("bad kind on line {}", lineno + 1))?;
+            artifacts.push(ArtifactSpec {
+                name: get("name")?.to_string(),
+                kind,
+                model: ModelConfig {
+                    layers: get("layers")?.parse()?,
+                    feat_dim: get("feat")?.parse()?,
+                    hidden: get("hidden")?.parse()?,
+                    classes: get("classes")?.parse()?,
+                },
+                n_pad: get("n_pad")?.parse()?,
+                e_pad: get("e_pad")?.parse()?,
+                file: dir.join(get("file")?),
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("no artifacts in {manifest:?} — run `make artifacts`");
+        }
+        Ok(Registry { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find the smallest artifact of `kind` for `model` that fits a
+    /// partition with `n_need` nodes and `e_need` *directed* edges.
+    pub fn find(
+        &self,
+        model: &ModelConfig,
+        kind: ArtifactKind,
+        n_need: usize,
+        e_need: usize,
+    ) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && &a.model == model)
+            .filter(|a| a.n_pad >= n_need && a.e_pad >= e_need)
+            .min_by_key(|a| (a.n_pad, a.e_pad))
+            .with_context(|| {
+                format!(
+                    "no {} artifact fits n={n_need} e={e_need} for {model:?}; \
+                     add the bucket to buckets.spec and re-run `make artifacts`",
+                    kind.name()
+                )
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_shapes_mirror_python_contract() {
+        // Mirrors python/tests/test_model.py::test_param_shapes_contract.
+        let m = ModelConfig { layers: 3, feat_dim: 64, hidden: 32, classes: 10 };
+        let s = m.param_shapes();
+        assert_eq!(s.len(), 12);
+        assert_eq!(s[0], vec![64, 32]);
+        assert_eq!(s[1], vec![32]);
+        assert_eq!(s[2], vec![96, 32]);
+        assert_eq!(s[10], vec![64, 10]);
+        assert_eq!(s[11], vec![10]);
+        assert_eq!(
+            m.num_params(),
+            64 * 32 + 32 + 96 * 32 + 32 + 32 * 32 + 32 + 64 * 32 + 32 + 32 * 32 + 32 + 64 * 10 + 10
+        );
+    }
+
+    fn write_manifest(dir: &Path, lines: &[&str]) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), lines.join("\n")).unwrap();
+    }
+
+    #[test]
+    fn manifest_parse_and_find() {
+        let dir = std::env::temp_dir().join(format!("cofree_reg_{}", std::process::id()));
+        write_manifest(
+            &dir,
+            &[
+                "# comment",
+                "artifact name=a kind=train layers=2 feat=8 hidden=8 classes=3 n_pad=64 e_pad=256 file=a.hlo.txt hash=x",
+                "artifact name=b kind=train layers=2 feat=8 hidden=8 classes=3 n_pad=128 e_pad=512 file=b.hlo.txt hash=y",
+                "artifact name=c kind=eval layers=2 feat=8 hidden=8 classes=3 n_pad=128 e_pad=512 file=c.hlo.txt hash=z",
+            ],
+        );
+        let reg = Registry::load(&dir).unwrap();
+        assert_eq!(reg.artifacts.len(), 3);
+        let m = ModelConfig { layers: 2, feat_dim: 8, hidden: 8, classes: 3 };
+        // Smallest fitting bucket wins.
+        let a = reg.find(&m, ArtifactKind::Train, 50, 200).unwrap();
+        assert_eq!(a.name, "a");
+        let b = reg.find(&m, ArtifactKind::Train, 65, 200).unwrap();
+        assert_eq!(b.name, "b");
+        assert!(reg.find(&m, ArtifactKind::Train, 1000, 10).is_err());
+        let c = reg.find(&m, ArtifactKind::Eval, 100, 500).unwrap();
+        assert_eq!(c.name, "c");
+        // Model mismatch -> no fit.
+        let m2 = ModelConfig { layers: 3, ..m };
+        assert!(reg.find(&m2, ArtifactKind::Train, 10, 10).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = match Registry::load(Path::new("/nonexistent/dir")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn bucket_name_and_spec_line_roundtrip() {
+        let m = ModelConfig { layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
+        let name = ArtifactSpec::bucket_name("tiny", &m, 64, 256, ArtifactKind::Train);
+        assert_eq!(name, "tiny-L2-h16-d8-c4-n64-e256-train");
+        let spec = ArtifactSpec {
+            name: name.clone(),
+            kind: ArtifactKind::Train,
+            model: m,
+            n_pad: 64,
+            e_pad: 256,
+            file: PathBuf::from("x"),
+        };
+        let line = spec.spec_line();
+        assert!(line.starts_with("bucket name=tiny-L2-h16-d8-c4-n64-e256-train kind=train"));
+        assert!(line.contains("n_pad=64"));
+        assert!(line.contains("e_pad=256"));
+    }
+}

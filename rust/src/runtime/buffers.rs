@@ -1,0 +1,135 @@
+//! Host-side tensors and literal packing.
+//!
+//! A minimal dense tensor type shared by the training engine: f32 or i32
+//! payload plus dims, with conversions to `xla::Literal` (for `execute`) and
+//! device buffers (for `execute_b`, the hot path — static inputs are
+//! uploaded once and reused every iteration).
+
+use anyhow::{ensure, Result};
+
+/// Payload of a [`Tensor`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, dims: &[usize]) -> Tensor {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor { dims: dims.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn i32(data: Vec<i32>, dims: &[usize]) -> Tensor {
+        debug_assert_eq!(data.len(), dims.iter().product::<usize>());
+        Tensor { dims: dims.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Tensor {
+        Tensor::f32(vec![0.0; dims.iter().product()], dims)
+    }
+
+    pub fn len(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow the f32 payload (panics on dtype mismatch — a programming
+    /// error, not an input error).
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("expected i32 tensor"),
+        }
+    }
+
+    /// Convert to an `xla::Literal` with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        ensure!(!self.dims.is_empty(), "rank-0 tensors unsupported; use dims=[1]");
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Upload to the device.
+    pub fn to_device(&self, rt: &super::RuntimeClient) -> Result<xla::PjRtBuffer> {
+        match &self.data {
+            TensorData::F32(v) => rt.to_device_f32(v, &self.dims),
+            TensorData::I32(v) => rt.to_device_i32(v, &self.dims),
+        }
+    }
+}
+
+/// Read back a device buffer as a f32 vector.
+pub fn buffer_to_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+    Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), t.as_f32());
+        let shape = lit.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 3]);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::i32(vec![5, 6, 7], &[3]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), t.as_i32());
+    }
+
+    #[test]
+    fn zeros_shape() {
+        let t = Tensor::zeros(&[4, 5]);
+        assert_eq!(t.len(), 20);
+        assert!(t.as_f32().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "expected f32")]
+    fn dtype_mismatch_panics() {
+        Tensor::i32(vec![1], &[1]).as_f32();
+    }
+
+    #[test]
+    fn device_roundtrip() {
+        let rt = crate::runtime::RuntimeClient::cpu().unwrap();
+        let t = Tensor::f32(vec![9.0, 8.0], &[2]);
+        let buf = t.to_device(&rt).unwrap();
+        assert_eq!(buffer_to_f32(&buf).unwrap(), vec![9.0, 8.0]);
+    }
+}

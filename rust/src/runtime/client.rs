@@ -1,0 +1,71 @@
+//! PJRT client wrapper.
+//!
+//! One CPU client per process; executables and device buffers hold a clone
+//! of it (the underlying `xla::PjRtClient` is reference-counted).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Thin wrapper owning the PJRT CPU client.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        crate::log_debug!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(RuntimeClient { client })
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+    }
+
+    /// Upload an f32 tensor to the device.
+    pub fn to_device_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor to the device.
+    pub fn to_device_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Access the raw client (for tests / advanced callers).
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_boots_and_uploads() {
+        let rt = RuntimeClient::cpu().unwrap();
+        let buf = rt.to_device_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let ib = rt.to_device_i32(&[7, 8], &[2]).unwrap();
+        assert_eq!(ib.to_literal_sync().unwrap().to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn wrong_dims_rejected() {
+        let rt = RuntimeClient::cpu().unwrap();
+        assert!(rt.to_device_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+}

@@ -1,0 +1,196 @@
+//! Typed execution of compiled train/eval artifacts.
+//!
+//! An [`Executor`] owns one compiled `PjRtLoadedExecutable` plus its
+//! [`ArtifactSpec`]. The hot path is [`Executor::execute_train`]: the
+//! partition's static data tensors live on the device as `PjRtBuffer`s
+//! (uploaded once by the worker), and only the parameters are re-uploaded
+//! each iteration.
+
+use super::artifact::{ArtifactKind, ArtifactSpec, ModelConfig};
+use super::buffers::Tensor;
+use super::client::RuntimeClient;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+
+/// The model parameters as flat host vectors (lowering order).
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub dims: Vec<Vec<usize>>,
+    pub data: Vec<Vec<f32>>,
+}
+
+impl ParamSet {
+    /// Glorot-uniform init for matrices, zeros for biases (mirrors
+    /// `model.init_params` in spirit; exact values need not match Python —
+    /// initialization happens on the Rust side only).
+    pub fn init_glorot(cfg: &ModelConfig, rng: &mut Rng) -> ParamSet {
+        let dims = cfg.param_shapes();
+        let data = dims
+            .iter()
+            .map(|shape| {
+                let len: usize = shape.iter().product();
+                if shape.len() == 1 {
+                    vec![0.0; len]
+                } else {
+                    let lim = (6.0 / (shape[0] + shape[1]) as f64).sqrt();
+                    (0..len).map(|_| ((rng.f64() * 2.0 - 1.0) * lim) as f32).collect()
+                }
+            })
+            .collect();
+        ParamSet { dims, data }
+    }
+
+    /// Number of scalar parameters.
+    pub fn num_elements(&self) -> usize {
+        self.data.iter().map(|d| d.len()).sum()
+    }
+
+    /// L2 norm of all parameters (diagnostics).
+    pub fn l2_norm(&self) -> f64 {
+        self.data
+            .iter()
+            .flat_map(|d| d.iter())
+            .map(|&x| (x as f64) * (x as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+/// Outputs of one `train_step` execution.
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    /// Sum of DAR-weighted losses over this partition.
+    pub loss_sum: f32,
+    /// Sum of the weights (for diagnostics / normalization checks).
+    pub weight_sum: f32,
+    /// Number of correct train-node predictions.
+    pub correct: f32,
+    /// Flattened gradients, one vec per parameter tensor, lowering order.
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// Outputs of one `eval_step` execution.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOut {
+    pub correct: f32,
+    pub count: f32,
+    pub loss_sum: f32,
+}
+
+impl EvalOut {
+    pub fn accuracy(&self) -> f64 {
+        if self.count == 0.0 {
+            f64::NAN
+        } else {
+            self.correct as f64 / self.count as f64
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executor {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executor {
+    /// Compile `spec`'s HLO file on `rt`.
+    pub fn compile(rt: &RuntimeClient, spec: &ArtifactSpec) -> Result<Executor> {
+        let t0 = std::time::Instant::now();
+        let exe = rt.compile_hlo_file(&spec.file)?;
+        crate::log_debug!("compiled {} in {:.2}s", spec.name, t0.elapsed().as_secs_f64());
+        Ok(Executor { spec: spec.clone(), exe })
+    }
+
+    /// Upload a data batch (everything except params) to the device.
+    pub fn upload_data(&self, rt: &RuntimeClient, data: &[Tensor]) -> Result<Vec<xla::PjRtBuffer>> {
+        data.iter().map(|t| t.to_device(rt)).collect()
+    }
+
+    /// Execute with host params + device-resident data; returns the
+    /// destructured output tuple as f32 vectors.
+    fn run(
+        &self,
+        rt: &RuntimeClient,
+        params: &ParamSet,
+        data: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Vec<f32>>> {
+        let n_params = self.spec.model.param_shapes().len();
+        ensure!(params.data.len() == n_params, "expected {n_params} params, got {}", params.data.len());
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::with_capacity(n_params);
+        for (dims, d) in params.dims.iter().zip(&params.data) {
+            owned.push(rt.to_device_f32(d, dims)?);
+        }
+        let args: Vec<&xla::PjRtBuffer> = owned.iter().chain(data.iter().copied()).collect();
+        let result = self.exe.execute_b(&args).context("execute_b")?;
+        // return_tuple=True => single output, a tuple literal.
+        let lit = result[0][0].to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect::<Result<Vec<_>>>()
+    }
+
+    /// Execute a train step: `outputs = (loss_sum, weight_sum, correct, *grads)`.
+    pub fn execute_train(
+        &self,
+        rt: &RuntimeClient,
+        params: &ParamSet,
+        device_data: &[&xla::PjRtBuffer],
+    ) -> Result<TrainOut> {
+        ensure!(self.spec.kind == ArtifactKind::Train, "not a train artifact");
+        ensure!(device_data.len() == 7, "train step takes 7 data tensors");
+        let outs = self.run(rt, params, device_data)?;
+        let n_params = self.spec.model.param_shapes().len();
+        ensure!(outs.len() == 3 + n_params, "unexpected output arity {}", outs.len());
+        Ok(TrainOut {
+            loss_sum: outs[0][0],
+            weight_sum: outs[1][0],
+            correct: outs[2][0],
+            grads: outs[3..].to_vec(),
+        })
+    }
+
+    /// Execute an eval step: `outputs = (correct, count, loss_sum)`.
+    pub fn execute_eval(
+        &self,
+        rt: &RuntimeClient,
+        params: &ParamSet,
+        device_data: &[&xla::PjRtBuffer],
+    ) -> Result<EvalOut> {
+        ensure!(self.spec.kind == ArtifactKind::Eval, "not an eval artifact");
+        ensure!(device_data.len() == 6, "eval step takes 6 data tensors");
+        let outs = self.run(rt, params, device_data)?;
+        ensure!(outs.len() == 3, "unexpected output arity {}", outs.len());
+        Ok(EvalOut { correct: outs[0][0], count: outs[1][0], loss_sum: outs[2][0] })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paramset_shapes_and_norm() {
+        let cfg = ModelConfig { layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
+        let mut rng = Rng::new(1);
+        let p = ParamSet::init_glorot(&cfg, &mut rng);
+        assert_eq!(p.dims.len(), 8);
+        assert_eq!(p.num_elements(), cfg.num_params());
+        assert!(p.l2_norm() > 0.0);
+        // Biases are zero.
+        assert!(p.data[1].iter().all(|&x| x == 0.0));
+        // Matrices are bounded by the Glorot limit.
+        let lim = (6.0_f64 / (8.0 + 16.0)).sqrt() as f32;
+        assert!(p.data[0].iter().all(|&x| x.abs() <= lim));
+    }
+
+    #[test]
+    fn paramset_deterministic() {
+        let cfg = ModelConfig { layers: 1, feat_dim: 4, hidden: 4, classes: 2 };
+        let a = ParamSet::init_glorot(&cfg, &mut Rng::new(5));
+        let b = ParamSet::init_glorot(&cfg, &mut Rng::new(5));
+        assert_eq!(a.data, b.data);
+    }
+}
+
+// End-to-end executor tests (needing real artifacts) live in
+// `rust/tests/integration.rs`.

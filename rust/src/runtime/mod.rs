@@ -1,0 +1,17 @@
+//! Runtime: loading and executing the AOT-compiled XLA artifacts.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the GraphSAGE
+//! `train_step` / `eval_step` per *shape bucket* to HLO text under
+//! `artifacts/`; this module loads those files through the PJRT C API
+//! (`xla` crate), compiles them once per process, and exposes typed
+//! execute calls. Python never runs here.
+
+pub mod artifact;
+pub mod buffers;
+pub mod client;
+pub mod executor;
+
+pub use artifact::{ArtifactKind, ArtifactSpec, ModelConfig, Registry};
+pub use buffers::{Tensor, TensorData};
+pub use client::RuntimeClient;
+pub use executor::{EvalOut, Executor, ParamSet, TrainOut};

@@ -1,0 +1,148 @@
+//! Link and cluster models.
+//!
+//! Parameters follow the paper's testbed (§5.1): NVIDIA A100 servers whose
+//! intra-server traffic (CPU–GPU and GPU–GPU) rides PCIe 4.0 ×16, and a
+//! multi-node setup (Figure 2: 3 machines × 8 GPUs) with a datacenter
+//! Ethernet fabric between machines.
+
+/// A point-to-point link: constant latency plus bandwidth.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    pub name: &'static str,
+    /// One-way message latency, seconds.
+    pub latency: f64,
+    /// Effective bandwidth, bytes/second.
+    pub bandwidth: f64,
+}
+
+impl LinkModel {
+    /// PCIe 4.0 ×16: ~26 GB/s effective, ~5 µs latency (the paper's
+    /// intra-server interconnect).
+    pub const PCIE4: LinkModel =
+        LinkModel { name: "pcie4", latency: 5e-6, bandwidth: 26.0e9 };
+
+    /// NVLink 3.0 (for what-if ablations): 200 GB/s, 2 µs.
+    pub const NVLINK: LinkModel =
+        LinkModel { name: "nvlink", latency: 2e-6, bandwidth: 200.0e9 };
+
+    /// 100 GbE RDMA between machines: ~11 GB/s effective, ~12 µs.
+    pub const ETH100G: LinkModel =
+        LinkModel { name: "eth100g", latency: 12e-6, bandwidth: 11.0e9 };
+
+    /// Time to move `bytes` across this link.
+    pub fn transfer(&self, bytes: f64) -> f64 {
+        if bytes <= 0.0 {
+            return 0.0;
+        }
+        self.latency + bytes / self.bandwidth
+    }
+
+    /// Ring all-reduce of `bytes` across `p` peers on this link:
+    /// `2 (p-1)` steps, each moving `bytes / p`.
+    pub fn ring_allreduce(&self, bytes: f64, p: usize) -> f64 {
+        if p <= 1 || bytes <= 0.0 {
+            return 0.0;
+        }
+        let steps = 2 * (p - 1);
+        steps as f64 * self.transfer(bytes / p as f64)
+    }
+}
+
+/// A cluster: `machines` × `gpus_per_machine`, intra- and inter-machine
+/// links.
+#[derive(Clone, Copy, Debug)]
+pub struct Cluster {
+    pub machines: usize,
+    pub gpus_per_machine: usize,
+    pub intra: LinkModel,
+    pub inter: LinkModel,
+}
+
+impl Cluster {
+    /// The paper's single-server setting (Table 1): all partitions on one
+    /// machine over PCIe 4.0.
+    pub fn single_server(gpus: usize) -> Cluster {
+        Cluster { machines: 1, gpus_per_machine: gpus, intra: LinkModel::PCIE4, inter: LinkModel::ETH100G }
+    }
+
+    /// The Figure 2 setting: 3 machines × 8 GPUs.
+    pub fn multi_node(machines: usize, gpus_per_machine: usize) -> Cluster {
+        Cluster { machines, gpus_per_machine, intra: LinkModel::PCIE4, inter: LinkModel::ETH100G }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.machines * self.gpus_per_machine
+    }
+
+    /// Fraction of peer pairs that cross machines (uniform placement).
+    pub fn cross_machine_fraction(&self) -> f64 {
+        let p = self.total_gpus() as f64;
+        if self.machines <= 1 || p <= 1.0 {
+            return 0.0;
+        }
+        let same = (self.gpus_per_machine as f64 - 1.0) / (p - 1.0);
+        1.0 - same
+    }
+
+    /// Effective link for uniformly scattered peer-to-peer traffic: a
+    /// latency/bandwidth mix of intra and inter links weighted by the
+    /// cross-machine fraction (inter bandwidth is additionally shared by the
+    /// GPUs on one machine contending for the NIC).
+    pub fn effective_p2p(&self) -> LinkModel {
+        let f = self.cross_machine_fraction();
+        if f == 0.0 {
+            return self.intra;
+        }
+        let shared_inter_bw = self.inter.bandwidth / self.gpus_per_machine as f64;
+        let inv_bw = (1.0 - f) / self.intra.bandwidth + f / shared_inter_bw;
+        LinkModel {
+            name: "mixed",
+            latency: (1.0 - f) * self.intra.latency + f * self.inter.latency,
+            bandwidth: 1.0 / inv_bw,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_time_components() {
+        let l = LinkModel::PCIE4;
+        assert_eq!(l.transfer(0.0), 0.0);
+        let t = l.transfer(26.0e9);
+        assert!((t - (1.0 + 5e-6)).abs() < 1e-9);
+        // Latency-dominated for tiny messages.
+        assert!(l.transfer(8.0) < 2.0 * l.latency);
+    }
+
+    #[test]
+    fn ring_allreduce_scales() {
+        let l = LinkModel::PCIE4;
+        assert_eq!(l.ring_allreduce(1e6, 1), 0.0);
+        let t2 = l.ring_allreduce(1e6, 2);
+        let t8 = l.ring_allreduce(1e6, 8);
+        assert!(t2 > 0.0);
+        // Bandwidth term is ~2(p-1)/p * bytes/bw: grows slowly with p.
+        assert!(t8 < 4.0 * t2, "t2={t2} t8={t8}");
+    }
+
+    #[test]
+    fn single_server_has_no_cross_traffic() {
+        let c = Cluster::single_server(8);
+        assert_eq!(c.cross_machine_fraction(), 0.0);
+        assert_eq!(c.effective_p2p().name, "pcie4");
+    }
+
+    #[test]
+    fn multinode_mixes_links() {
+        let c = Cluster::multi_node(3, 8);
+        let f = c.cross_machine_fraction();
+        assert!(f > 0.6 && f < 0.75, "f={f}");
+        let eff = c.effective_p2p();
+        // Mixed link must be slower than pure intra.
+        assert!(eff.bandwidth < c.intra.bandwidth);
+        assert!(eff.latency > c.intra.latency);
+    }
+}

@@ -1,0 +1,194 @@
+//! Per-method iteration-time models.
+//!
+//! Each method's per-iteration wall time is assembled from
+//! (a) a *measured* compute term and (b) the *modeled* communication of
+//! `volume.rs` over the `link.rs` cluster. The modeled structure follows
+//! each system's published design:
+//!
+//! * `DistDGL` — sampled mini-batch training: compute runs on the sampled
+//!   subgraph but every iteration blocks on KVStore feature pulls and batch
+//!   staging (no overlap), plus a per-iteration sampling overhead that the
+//!   paper's §5.2 calls out ("within each GPU, it continues to use several
+//!   samplers ... which introduces additional runtime overhead").
+//! * `PipeGCN` — full-graph training, per-layer boundary exchanges (fwd +
+//!   bwd), overlapped with compute (pipelined makespan).
+//! * `BnsGcn` — PipeGCN's pattern with σ-sampled boundaries.
+//! * `CoFree` — measured compute + ring all-reduce of gradients. Nothing
+//!   else: that is the paper.
+
+use super::link::Cluster;
+use super::timeline::{pipelined_makespan, LayerCost};
+use super::volume::{BaselineVolumes, PartitionCommStats};
+use crate::runtime::ModelConfig;
+
+/// Distributed GNN training method (Table 1 rows).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    DistDgl,
+    PipeGcn,
+    BnsGcn { sigma: f64 },
+    CoFree,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::DistDgl => "DistDGL",
+            Method::PipeGcn => "PipeGCN",
+            Method::BnsGcn { .. } => "BNS-GCN",
+            Method::CoFree => "CoFree-GNN",
+        }
+    }
+}
+
+/// DistDGL's sampler/staging overhead multiplier on compute (samplers,
+/// batch assembly, CPU→GPU copies serialized with training).
+pub const DISTDGL_SAMPLER_OVERHEAD: f64 = 1.6;
+
+/// Fraction of each boundary exchange that cannot hide behind compute even
+/// with pipelining (per-layer synchronization barriers, kernel-launch
+/// serialization, staleness bookkeeping). PipeGCN's own evaluation shows
+/// communication remains a large cost after overlap; 0.35 reproduces its
+/// reported compute/comm balance at the paper's scales.
+pub const UNHIDEABLE_COMM_FRACTION: f64 = 0.35;
+
+/// Breakdown of one modeled iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct IterationBreakdown {
+    pub compute_s: f64,
+    pub comm_s: f64,
+    /// Reported wall time (with overlap where the system pipelines).
+    pub total_s: f64,
+}
+
+/// Model one iteration for `method` on a cluster.
+///
+/// `compute_s`: measured per-worker compute for THIS method's partition
+/// (max over partitions — the straggler sets the pace in synchronous
+/// training). `stats`: boundary stats of the straggler partition (edge-cut
+/// baselines) — pass the max-boundary partition.
+pub fn iteration_time(
+    method: Method,
+    compute_s: f64,
+    stats: &PartitionCommStats,
+    model: &ModelConfig,
+    cluster: &Cluster,
+) -> IterationBreakdown {
+    let link = cluster.effective_p2p();
+    let p = cluster.total_gpus();
+    match method {
+        Method::DistDgl => {
+            let v = BaselineVolumes::compute(stats, model, 1.0);
+            // Feature pulls + staging block the iteration; gradient
+            // all-reduce at the end.
+            let comm = link.transfer(v.distdgl_bytes) + link.ring_allreduce(v.grad_bytes, p);
+            let compute = compute_s * DISTDGL_SAMPLER_OVERHEAD;
+            IterationBreakdown { compute_s: compute, comm_s: comm, total_s: compute + comm }
+        }
+        Method::PipeGcn | Method::BnsGcn { .. } => {
+            let sigma = if let Method::BnsGcn { sigma } = method { sigma } else { 1.0 };
+            let v = BaselineVolumes::compute(stats, model, sigma);
+            let layer_bytes = if sigma < 1.0 { v.bnsgcn_layer_bytes } else { v.pipegcn_layer_bytes };
+            let l = model.layers;
+            // fwd exchange per layer + bwd gradient exchange per layer,
+            // overlapped with per-layer compute except for the blocking
+            // fraction (sync barriers).
+            let per_layer_compute = compute_s / (2 * l) as f64; // fwd+bwd halves
+            let per_layer_comm = link.transfer(layer_bytes);
+            let blocking = UNHIDEABLE_COMM_FRACTION * per_layer_comm;
+            let layers: Vec<LayerCost> = (0..2 * l)
+                .map(|_| LayerCost { compute: per_layer_compute, comm: per_layer_comm - blocking })
+                .collect();
+            let body = pipelined_makespan(&layers) + blocking * (2 * l) as f64;
+            let allreduce = link.ring_allreduce(v.grad_bytes, p);
+            let comm = per_layer_comm * (2 * l) as f64 + allreduce;
+            IterationBreakdown { compute_s, comm_s: comm, total_s: body + allreduce }
+        }
+        Method::CoFree => {
+            let grad_bytes = model.num_params() as f64 * 4.0;
+            let allreduce = link.ring_allreduce(grad_bytes, p);
+            IterationBreakdown { compute_s, comm_s: allreduce, total_s: compute_s + allreduce }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::link::Cluster;
+
+    fn model() -> ModelConfig {
+        ModelConfig { layers: 3, feat_dim: 64, hidden: 64, classes: 16 }
+    }
+
+    fn stats(halo: usize) -> PartitionCommStats {
+        PartitionCommStats { owned: 1000, halo_in: halo, sent_copies: halo, intra_edges: 8000 }
+    }
+
+    #[test]
+    fn cofree_time_is_compute_plus_tiny_allreduce() {
+        let c = Cluster::single_server(4);
+        let b = iteration_time(Method::CoFree, 0.050, &stats(5000), &model(), &c);
+        assert!(b.total_s >= 0.050);
+        // Gradient all-reduce of ~60k params over PCIe: well under 1 ms.
+        assert!(b.comm_s < 1e-3, "comm {}", b.comm_s);
+    }
+
+    #[test]
+    fn baselines_pay_for_halos() {
+        let c = Cluster::single_server(4);
+        let m = model();
+        let small = iteration_time(Method::PipeGcn, 0.050, &stats(100), &m, &c);
+        let large = iteration_time(Method::PipeGcn, 0.050, &stats(100_000), &m, &c);
+        assert!(large.total_s > small.total_s);
+        assert!(large.comm_s > 10.0 * small.comm_s);
+    }
+
+    #[test]
+    fn bns_communicates_about_sigma_of_pipegcn() {
+        let c = Cluster::single_server(4);
+        let m = model();
+        let pipe = iteration_time(Method::PipeGcn, 0.050, &stats(50_000), &m, &c);
+        let bns = iteration_time(Method::BnsGcn { sigma: 0.1 }, 0.050, &stats(50_000), &m, &c);
+        // comm includes the (equal) allreduce, so ratio is slightly above 0.1.
+        assert!(bns.comm_s < 0.2 * pipe.comm_s + 1e-3);
+    }
+
+    #[test]
+    fn distdgl_is_slowest_with_sampler_overhead() {
+        // Paper-scale setting (Reddit config: 4 layers × 256 hidden, large
+        // boundaries). Expected ordering (Table 1): DistDGL > PipeGCN >
+        // CoFree, even when CoFree's compute is higher due to duplicated
+        // nodes.
+        let c = Cluster::single_server(4);
+        let m = ModelConfig { layers: 4, feat_dim: 602, hidden: 256, classes: 41 };
+        let s = PartitionCommStats {
+            owned: 58_000,
+            halo_in: 150_000,
+            sent_copies: 150_000,
+            intra_edges: 20_000_000,
+        };
+        let dgl = iteration_time(Method::DistDgl, 0.050, &s, &m, &c);
+        let pipe = iteration_time(Method::PipeGcn, 0.050, &s, &m, &c);
+        let cofree = iteration_time(Method::CoFree, 0.060, &s, &m, &c);
+        assert!(dgl.total_s > pipe.total_s, "dgl {} pipe {}", dgl.total_s, pipe.total_s);
+        assert!(pipe.total_s > cofree.total_s, "pipe {} cofree {}", pipe.total_s, cofree.total_s);
+    }
+
+    #[test]
+    fn multinode_inflates_baseline_comm_more_than_cofree() {
+        // Figure 2's story: cross-machine links amplify halo traffic but the
+        // tiny gradient all-reduce barely notices.
+        let single = Cluster::single_server(24);
+        let multi = Cluster::multi_node(3, 8);
+        let m = model();
+        let s = stats(80_000);
+        let pipe_s = iteration_time(Method::PipeGcn, 0.050, &s, &m, &single);
+        let pipe_m = iteration_time(Method::PipeGcn, 0.050, &s, &m, &multi);
+        let co_s = iteration_time(Method::CoFree, 0.055, &s, &m, &single);
+        let co_m = iteration_time(Method::CoFree, 0.055, &s, &m, &multi);
+        let pipe_blowup = pipe_m.total_s / pipe_s.total_s;
+        let co_blowup = co_m.total_s / co_s.total_s;
+        assert!(pipe_blowup > co_blowup, "pipe {pipe_blowup} vs cofree {co_blowup}");
+    }
+}

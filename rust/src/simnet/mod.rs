@@ -1,0 +1,24 @@
+//! Communication simulation for the baseline distributed-GNN systems.
+//!
+//! The paper's Table 1 / Figure 2 compare CoFree-GNN against DistDGL,
+//! PipeGCN and BNS-GCN on real clusters. We do not have A100s or NICs; what
+//! we *do* have is (a) real measured compute times from the PJRT workers and
+//! (b) the exact boundary/halo statistics of real partitions of the actual
+//! graphs. The baselines' defining characteristic — per-iteration halo
+//! embedding traffic proportional to boundary size — is therefore *modeled*
+//! on top of measured compute, using published link characteristics (PCIe
+//! 4.0 / NVLink / 100 GbE) and each system's documented communication
+//! pattern. CoFree rows are fully measured (its only traffic, the gradient
+//! all-reduce, is modeled with the same link model for consistency).
+//!
+//! DESIGN.md §2 records this substitution; `benches/table1.rs` prints which
+//! cells are measured vs. modeled.
+
+pub mod link;
+pub mod methods;
+pub mod timeline;
+pub mod volume;
+
+pub use link::{Cluster, LinkModel};
+pub use methods::{iteration_time, IterationBreakdown, Method};
+pub use volume::{BaselineVolumes, PartitionCommStats};

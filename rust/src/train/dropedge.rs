@@ -1,0 +1,146 @@
+//! DropEdge-K (paper §4.4): pre-generated DropEdge masks.
+//!
+//! Naïve DropEdge re-samples an edge mask every iteration, which on large
+//! partitions can cost more than the backward pass. DropEdge-K instead
+//! pre-generates `K` masks at setup time; each iteration picks one at
+//! random. Our runtime goes one step further: the K masked `emask` tensors
+//! are uploaded to the device once, so the per-iteration cost of DropEdge-K
+//! is *zero* host work (just a different buffer pointer) — see
+//! EXPERIMENTS.md §Perf.
+//!
+//! Masks drop *undirected* edges atomically: the tensorize layout places the
+//! reverse copy of canonical edge `k` at slot `k + m`, and the mask bank
+//! zeroes both slots together.
+
+use super::tensorize::TrainBatch;
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+/// A bank of K pre-generated DropEdge masks for one partition.
+#[derive(Clone, Debug)]
+pub struct MaskBank {
+    /// Each mask is a full `emask` tensor (base validity ∧ keep-decision).
+    pub masks: Vec<Tensor>,
+    /// Drop probability used.
+    pub ratio: f64,
+}
+
+impl MaskBank {
+    /// Generate `k` masks with drop probability `ratio` over the valid
+    /// (canonical) edges of `batch`.
+    pub fn generate(batch: &TrainBatch, k: usize, ratio: f64, rng: &mut Rng) -> MaskBank {
+        assert!(k >= 1);
+        assert!((0.0..1.0).contains(&ratio));
+        let base = batch.emask().as_f32();
+        let m = batch.e_used / 2;
+        let masks = (0..k)
+            .map(|i| {
+                let mut rng = rng.fork(i as u64);
+                let mut mask = base.to_vec();
+                for e in 0..m {
+                    if rng.chance(ratio) {
+                        mask[e] = 0.0;
+                        mask[e + m] = 0.0;
+                    }
+                }
+                Tensor::f32(mask, &[batch.e_pad])
+            })
+            .collect();
+        MaskBank { masks, ratio }
+    }
+
+    /// Number of masks.
+    pub fn len(&self) -> usize {
+        self.masks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.masks.is_empty()
+    }
+
+    /// Pick a random mask index for this iteration.
+    pub fn pick(&self, rng: &mut Rng) -> usize {
+        rng.below(self.masks.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::features::{synthesize, FeatureParams};
+    use crate::graph::generators::barabasi_albert;
+    use crate::partition::{dar_weights, random::RandomVertexCut, Reweighting, VertexCut};
+    use crate::train::tensorize::tensorize_partition;
+
+    fn batch() -> TrainBatch {
+        let mut rng = Rng::new(70);
+        let g = barabasi_albert(200, 3, &mut rng);
+        let comm: Vec<u32> = (0..200).map(|i| (i % 4) as u32).collect();
+        let nd = synthesize(&comm, 4, &FeatureParams { dim: 4, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        tensorize_partition(&vc.parts[0], &nd, &w[0], 512, 2048).unwrap()
+    }
+
+    #[test]
+    fn masks_drop_pairs_atomically() {
+        let b = batch();
+        let m = b.e_used / 2;
+        let mut rng = Rng::new(1);
+        let bank = MaskBank::generate(&b, 5, 0.5, &mut rng);
+        assert_eq!(bank.len(), 5);
+        for mask in &bank.masks {
+            let v = mask.as_f32();
+            for e in 0..m {
+                assert_eq!(v[e], v[e + m], "pair {e} split");
+            }
+            // Padding slots stay zero.
+            for e in b.e_used..b.e_pad {
+                assert_eq!(v[e], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn drop_rate_close_to_ratio() {
+        let b = batch();
+        let m = (b.e_used / 2) as f64;
+        let mut rng = Rng::new(2);
+        let bank = MaskBank::generate(&b, 20, 0.5, &mut rng);
+        let mut kept = 0f64;
+        for mask in &bank.masks {
+            kept += mask.as_f32()[..b.e_used / 2].iter().sum::<f32>() as f64;
+        }
+        let keep_rate = kept / (m * 20.0);
+        assert!((keep_rate - 0.5).abs() < 0.08, "keep rate {keep_rate}");
+    }
+
+    #[test]
+    fn masks_differ_from_each_other() {
+        let b = batch();
+        let mut rng = Rng::new(3);
+        let bank = MaskBank::generate(&b, 3, 0.5, &mut rng);
+        assert_ne!(bank.masks[0].as_f32(), bank.masks[1].as_f32());
+        assert_ne!(bank.masks[1].as_f32(), bank.masks[2].as_f32());
+    }
+
+    #[test]
+    fn ratio_zero_keeps_everything() {
+        let b = batch();
+        let mut rng = Rng::new(4);
+        let bank = MaskBank::generate(&b, 2, 0.0, &mut rng);
+        for mask in &bank.masks {
+            assert_eq!(mask.as_f32(), b.emask().as_f32());
+        }
+    }
+
+    #[test]
+    fn pick_is_in_range() {
+        let b = batch();
+        let mut rng = Rng::new(5);
+        let bank = MaskBank::generate(&b, 7, 0.3, &mut rng);
+        for _ in 0..50 {
+            assert!(bank.pick(&mut rng) < 7);
+        }
+    }
+}

@@ -1,0 +1,379 @@
+//! The training loop (Algorithm 1 of the paper).
+//!
+//! ```text
+//! partition G  →  tensorize per partition  →  upload device buffers once
+//! while not converged:
+//!     for each worker i:   (communication-free — no embedding exchange)
+//!         pick DropEdge mask k_i; run train_step artifact on partition i
+//!     sum gradients (the only cross-worker traffic)
+//!     params ← Adam(params, Σ grads / |V_train|)
+//! ```
+//!
+//! On this single-core testbed workers execute sequentially; we time each
+//! worker's `train_step` individually and report the *parallel-machine*
+//! iteration time `max_i(compute_i) + allreduce + optimizer`, which is what
+//! Table 1 measures on real hardware. The all-reduce term is supplied by the
+//! caller (from `simnet`, or 0 for in-process semantics).
+
+use super::allreduce::GradAccumulator;
+use super::dropedge::MaskBank;
+use super::metrics::{EpochStats, History};
+use super::optimizer::{Adam, Optimizer, Sgd};
+use super::tensorize::{
+    tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch,
+};
+use crate::graph::Dataset;
+use crate::partition::{dar_weights, Reweighting, VertexCut};
+use crate::runtime::{ArtifactKind, Executor, ModelConfig, ParamSet, Registry, RuntimeClient};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Training hyperparameters.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    /// Evaluate every N epochs (0 = only at the end).
+    pub eval_every: usize,
+    /// DropEdge-K: `Some((K, drop_ratio))`.
+    pub dropedge: Option<(usize, f64)>,
+    pub seed: u64,
+    pub use_adam: bool,
+    /// Modeled all-reduce seconds added to each iteration's reported time
+    /// (0.0 for pure in-process runs; benches pass the simnet value).
+    pub allreduce_seconds: f64,
+    /// Log every N epochs (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 100,
+            lr: 0.01,
+            eval_every: 10,
+            dropedge: None,
+            seed: 0,
+            use_adam: true,
+            allreduce_seconds: 0.0,
+            log_every: 0,
+        }
+    }
+}
+
+/// One worker = one partition's state: device-resident batch + executor.
+struct WorkerState {
+    batch: TrainBatch,
+    /// Device buffers in tensor order (emask slot swapped per iteration).
+    device: Vec<xla::PjRtBuffer>,
+    /// DropEdge masks, pre-uploaded.
+    mask_buffers: Vec<xla::PjRtBuffer>,
+    executor: Rc<Executor>,
+}
+
+/// How the workers are scheduled each iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunMode {
+    /// Algorithm 1: every partition contributes every iteration.
+    AllParts,
+    /// Sampling-based baselines (Cluster-GCN, GraphSAINT): one randomly
+    /// chosen batch per iteration.
+    Rotate,
+}
+
+/// A prepared training run over a set of partitions.
+pub struct Run {
+    workers: Vec<WorkerState>,
+    pub model: ModelConfig,
+    /// Global Σ tmask·dar — the DAR-normalizing constant (≈ |V_train|).
+    pub total_train_weight: f64,
+    pub num_partitions: usize,
+    pub mode: RunMode,
+}
+
+/// A prepared full-graph evaluation setup.
+pub struct EvalSetup {
+    batch: EvalBatch,
+    device: Vec<xla::PjRtBuffer>,
+    mask_buffers: [xla::PjRtBuffer; 3],
+    executor: Rc<Executor>,
+}
+
+/// The engine: PJRT client + artifact registry + executable cache.
+pub struct TrainEngine {
+    pub rt: RuntimeClient,
+    pub registry: Registry,
+    cache: HashMap<String, Rc<Executor>>,
+}
+
+/// Model config implied by a dataset's recipe.
+pub fn model_config(ds: &Dataset) -> ModelConfig {
+    ModelConfig {
+        layers: ds.layers,
+        feat_dim: ds.data.dim,
+        hidden: ds.hidden,
+        classes: ds.data.num_classes,
+    }
+}
+
+impl TrainEngine {
+    pub fn new(artifacts_dir: &Path) -> Result<TrainEngine> {
+        Ok(TrainEngine {
+            rt: RuntimeClient::cpu()?,
+            registry: Registry::load(artifacts_dir)?,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Compile-or-fetch an executor for an artifact.
+    fn executor(&mut self, model: &ModelConfig, kind: ArtifactKind, n: usize, e: usize) -> Result<Rc<Executor>> {
+        let spec = self.registry.find(model, kind, n, e)?.clone();
+        if let Some(exe) = self.cache.get(&spec.name) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(Executor::compile(&self.rt, &spec)?);
+        self.cache.insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn make_worker(
+        &mut self,
+        model: &ModelConfig,
+        batch: TrainBatch,
+        dropedge: Option<(usize, f64)>,
+        rng: &mut Rng,
+    ) -> Result<WorkerState> {
+        let executor = self.executor(model, ArtifactKind::Train, batch.n_pad, batch.e_pad)?;
+        // NOTE: the batch was built for (n_pad, e_pad) from `bucket_shapes`;
+        // the registry may return a larger artifact. Re-tensorize is not
+        // needed because we build batches directly at the artifact's shape —
+        // callers use `prepare_*` below which do exactly that.
+        let device = executor.upload_data(&self.rt, &batch.tensors)?;
+        let mask_buffers = match dropedge {
+            None => Vec::new(),
+            Some((k, ratio)) => {
+                let bank = MaskBank::generate(&batch, k, ratio, rng);
+                bank.masks
+                    .iter()
+                    .map(|m| m.to_device(&self.rt))
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        Ok(WorkerState { batch, device, mask_buffers, executor })
+    }
+
+    /// Prepare a communication-free run over a vertex cut (Algorithm 1
+    /// lines 1–5).
+    pub fn prepare_partitions(
+        &mut self,
+        ds: &Dataset,
+        vc: &VertexCut,
+        reweighting: Reweighting,
+        dropedge: Option<(usize, f64)>,
+        seed: u64,
+    ) -> Result<Run> {
+        let model = model_config(ds);
+        let weights = dar_weights(&ds.graph, vc, reweighting);
+        let rng = Rng::new(seed ^ 0xD20B);
+        let mut workers = Vec::with_capacity(vc.parts.len());
+        let mut total_train_weight = 0.0;
+        for (i, part) in vc.parts.iter().enumerate() {
+            // Find the smallest artifact that fits this partition, then
+            // tensorize directly at the artifact's padded shape.
+            let spec = self
+                .registry
+                .find(&model, ArtifactKind::Train, part.num_nodes(), 2 * part.num_edges())?
+                .clone();
+            let batch = tensorize_partition(part, &ds.data, &weights[i], spec.n_pad, spec.e_pad)
+                .with_context(|| format!("tensorizing partition {i}"))?;
+            total_train_weight += batch.local_train_weight;
+            workers.push(self.make_worker(&model, batch, dropedge, &mut rng.fork(i as u64))?);
+        }
+        Ok(Run {
+            workers,
+            model,
+            total_train_weight,
+            num_partitions: vc.parts.len(),
+            mode: RunMode::AllParts,
+        })
+    }
+
+    /// Prepare a run from explicit pre-tensorized batches (used by the
+    /// sampling-based baselines and the edge-cut ablation).
+    pub fn prepare_batches(
+        &mut self,
+        model: &ModelConfig,
+        batches: Vec<TrainBatch>,
+        mode: RunMode,
+        seed: u64,
+    ) -> Result<Run> {
+        let rng = Rng::new(seed ^ 0xBA7C);
+        let mut workers = Vec::with_capacity(batches.len());
+        let mut total_train_weight = 0.0;
+        let n = batches.len();
+        for (i, batch) in batches.into_iter().enumerate() {
+            total_train_weight += batch.local_train_weight;
+            workers.push(self.make_worker(model, batch, None, &mut rng.fork(i as u64))?);
+        }
+        Ok(Run { workers, model: *model, total_train_weight, num_partitions: n, mode })
+    }
+
+    /// Prepare a full-graph (single-partition) run — the Figure 4 baseline.
+    pub fn prepare_full(&mut self, ds: &Dataset, dropedge: Option<(usize, f64)>, seed: u64) -> Result<Run> {
+        let model = model_config(ds);
+        let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
+        let spec = self.registry.find(&model, ArtifactKind::Train, n, 2 * m)?.clone();
+        let batch = tensorize_full_train(&ds.graph, &ds.data, spec.n_pad, spec.e_pad)?;
+        let total_train_weight = batch.local_train_weight;
+        let mut rng = Rng::new(seed ^ 0xF011);
+        let worker = self.make_worker(&model, batch, dropedge, &mut rng)?;
+        Ok(Run {
+            workers: vec![worker],
+            model,
+            total_train_weight,
+            num_partitions: 1,
+            mode: RunMode::AllParts,
+        })
+    }
+
+    /// Prepare full-graph evaluation (val/test accuracy for the tables).
+    pub fn prepare_eval(&mut self, ds: &Dataset) -> Result<EvalSetup> {
+        let model = model_config(ds);
+        let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
+        let spec = self.registry.find(&model, ArtifactKind::Eval, n, 2 * m)?.clone();
+        let executor = self.executor(&model, ArtifactKind::Eval, n, 2 * m)?;
+        let batch = tensorize_full_eval(&ds.graph, &ds.data, spec.n_pad, spec.e_pad)?;
+        let device = executor.upload_data(&self.rt, &batch.tensors)?;
+        let mask_buffers = [
+            batch.masks[0].to_device(&self.rt)?,
+            batch.masks[1].to_device(&self.rt)?,
+            batch.masks[2].to_device(&self.rt)?,
+        ];
+        Ok(EvalSetup { batch, device, mask_buffers, executor })
+    }
+
+    /// Evaluate accuracy on a split (0 train, 1 val, 2 test).
+    pub fn evaluate(&self, setup: &EvalSetup, params: &ParamSet, split: usize) -> Result<f64> {
+        let mut refs: Vec<&xla::PjRtBuffer> = setup.device.iter().collect();
+        refs.push(&setup.mask_buffers[split]);
+        let out = setup.executor.execute_eval(&self.rt, params, &refs)?;
+        let _ = &setup.batch; // keep host copy alive alongside device buffers
+        Ok(out.accuracy())
+    }
+
+    /// Run Algorithm 1 for `cfg.epochs` iterations.
+    pub fn train(
+        &mut self,
+        run: &mut Run,
+        eval: Option<&EvalSetup>,
+        cfg: &TrainConfig,
+    ) -> Result<(History, ParamSet, PhaseTimer)> {
+        let rng = Rng::new(cfg.seed ^ 0x7247);
+        let mut params = ParamSet::init_glorot(&run.model, &mut rng.fork(1));
+        let mut opt: Box<dyn Optimizer> = if cfg.use_adam {
+            Box::new(Adam::new(cfg.lr))
+        } else {
+            Box::new(Sgd { lr: cfg.lr })
+        };
+        let mut acc = GradAccumulator::new();
+        let mut history = History::default();
+        let mut timer = PhaseTimer::new();
+        let scale = if run.total_train_weight > 0.0 {
+            (1.0 / run.total_train_weight) as f32
+        } else {
+            1.0
+        };
+        let mut mask_rng = rng.fork(2);
+        let mut rotate_rng = rng.fork(3);
+        for epoch in 0..cfg.epochs {
+            acc.reset();
+            let mut max_worker = 0f64;
+            // Rotate mode: one random batch this epoch; AllParts: everyone.
+            let selected: Vec<usize> = match run.mode {
+                RunMode::AllParts => (0..run.workers.len()).collect(),
+                RunMode::Rotate => vec![rotate_rng.below(run.workers.len())],
+            };
+            let mut epoch_weight = 0.0f64;
+            for &wi in &selected {
+                let w = &run.workers[wi];
+                epoch_weight += w.batch.local_train_weight;
+                // DropEdge-K: swap the emask device buffer (zero host work).
+                let t0 = Instant::now();
+                let out = {
+                    let mut refs: Vec<&xla::PjRtBuffer> = w.device.iter().collect();
+                    if !w.mask_buffers.is_empty() {
+                        let k = mask_rng.below(w.mask_buffers.len());
+                        refs[TrainBatch::EMASK_IDX] = &w.mask_buffers[k];
+                    }
+                    w.executor.execute_train(&self.rt, &params, &refs)?
+                };
+                let dt = t0.elapsed().as_secs_f64();
+                max_worker = max_worker.max(dt);
+                timer.add("execute", t0.elapsed());
+                let t1 = Instant::now();
+                acc.add(&out);
+                timer.add("allreduce", t1.elapsed());
+            }
+            let t2 = Instant::now();
+            let epoch_scale = match run.mode {
+                RunMode::AllParts => scale,
+                // Rotate: normalize by the chosen batch's own weight sum.
+                RunMode::Rotate => {
+                    if epoch_weight > 0.0 {
+                        (1.0 / epoch_weight) as f32
+                    } else {
+                        1.0
+                    }
+                }
+            };
+            opt.step(&mut params.data, acc.grads(), epoch_scale);
+            timer.add("optim", t2.elapsed());
+            let optim_s = t2.elapsed().as_secs_f64();
+
+            let do_eval = eval.is_some()
+                && (epoch + 1 == cfg.epochs
+                    || (cfg.eval_every > 0 && epoch % cfg.eval_every == 0));
+            let (val_acc, test_acc) = if do_eval {
+                let setup = eval.unwrap();
+                (self.evaluate(setup, &params, 1)?, self.evaluate(setup, &params, 2)?)
+            } else {
+                (f64::NAN, f64::NAN)
+            };
+            let norm = match run.mode {
+                RunMode::AllParts => run.total_train_weight,
+                RunMode::Rotate => epoch_weight,
+            };
+            let train_loss = acc.loss_sum / norm.max(1e-9);
+            let train_acc = acc.correct
+                / selected
+                    .iter()
+                    .map(|&wi| {
+                        run.workers[wi].batch.tensors[6].as_f32().iter().sum::<f32>() as f64
+                    })
+                    .sum::<f64>()
+                    .max(1e-9);
+            let stats = EpochStats {
+                epoch,
+                train_loss,
+                train_acc,
+                val_acc,
+                test_acc,
+                iter_time: max_worker + cfg.allreduce_seconds + optim_s,
+                max_worker_time: max_worker,
+            };
+            if cfg.log_every > 0 && epoch % cfg.log_every == 0 {
+                crate::log_info!(
+                    "epoch {epoch:4} loss={train_loss:.4} train_acc={train_acc:.3} val={val_acc:.3} test={test_acc:.3} iter={:.1}ms",
+                    stats.iter_time * 1e3
+                );
+            }
+            history.push(stats);
+        }
+        Ok((history, params, timer))
+    }
+}

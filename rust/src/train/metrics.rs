@@ -1,0 +1,137 @@
+//! Training history: loss/accuracy curves, timing breakdowns, CSV export.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Stats for one epoch (= one full-batch iteration over all partitions).
+#[derive(Clone, Copy, Debug)]
+pub struct EpochStats {
+    pub epoch: usize,
+    /// Global DAR-normalized training loss (mean per train node).
+    pub train_loss: f64,
+    pub train_acc: f64,
+    /// Validation/test accuracy (NaN when eval was skipped this epoch).
+    pub val_acc: f64,
+    pub test_acc: f64,
+    /// Parallel-machine iteration time: max over workers of compute + the
+    /// modeled all-reduce + optimizer time, seconds.
+    pub iter_time: f64,
+    /// Max per-worker execute time, seconds (the compute component).
+    pub max_worker_time: f64,
+}
+
+/// Full training history.
+#[derive(Clone, Debug, Default)]
+pub struct History {
+    pub epochs: Vec<EpochStats>,
+}
+
+impl History {
+    pub fn push(&mut self, s: EpochStats) {
+        self.epochs.push(s);
+    }
+
+    pub fn final_val_acc(&self) -> f64 {
+        self.epochs.iter().rev().find(|e| !e.val_acc.is_nan()).map(|e| e.val_acc).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_test_acc(&self) -> f64 {
+        self.epochs
+            .iter()
+            .rev()
+            .find(|e| !e.test_acc.is_nan())
+            .map(|e| e.test_acc)
+            .unwrap_or(f64::NAN)
+    }
+
+    /// Best validation accuracy and the test accuracy at that epoch (early
+    /// stopping semantics, as the paper reports test at best-val).
+    pub fn best(&self) -> (f64, f64) {
+        let mut best = (f64::NAN, f64::NAN);
+        let mut best_val = f64::NEG_INFINITY;
+        for e in &self.epochs {
+            if !e.val_acc.is_nan() && e.val_acc > best_val {
+                best_val = e.val_acc;
+                best = (e.val_acc, e.test_acc);
+            }
+        }
+        best
+    }
+
+    /// Mean and std of per-iteration time (skipping the first `skip` warmup
+    /// epochs), in milliseconds — the Table 1 quantity.
+    pub fn iter_time_ms(&self, skip: usize) -> (f64, f64) {
+        let times: Vec<f64> =
+            self.epochs.iter().skip(skip).map(|e| e.iter_time * 1e3).collect();
+        crate::util::mean_std(&times)
+    }
+
+    /// Write the history as CSV.
+    pub fn write_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "epoch,train_loss,train_acc,val_acc,test_acc,iter_time_s,max_worker_s")?;
+        for e in &self.epochs {
+            writeln!(
+                f,
+                "{},{:.6},{:.4},{:.4},{:.4},{:.6},{:.6}",
+                e.epoch, e.train_loss, e.train_acc, e.val_acc, e.test_acc, e.iter_time, e.max_worker_time
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn e(epoch: usize, val: f64, test: f64, t: f64) -> EpochStats {
+        EpochStats {
+            epoch,
+            train_loss: 1.0,
+            train_acc: 0.5,
+            val_acc: val,
+            test_acc: test,
+            iter_time: t,
+            max_worker_time: t * 0.9,
+        }
+    }
+
+    #[test]
+    fn best_tracks_val() {
+        let mut h = History::default();
+        h.push(e(0, 0.5, 0.48, 0.1));
+        h.push(e(1, f64::NAN, f64::NAN, 0.1));
+        h.push(e(2, 0.7, 0.69, 0.1));
+        h.push(e(3, 0.6, 0.80, 0.1));
+        let (v, t) = h.best();
+        assert_eq!((v, t), (0.7, 0.69));
+        assert_eq!(h.final_val_acc(), 0.6);
+    }
+
+    #[test]
+    fn iter_time_skips_warmup()
+    {
+        let mut h = History::default();
+        h.push(e(0, 0.1, 0.1, 10.0)); // compile warmup
+        h.push(e(1, 0.1, 0.1, 0.002));
+        h.push(e(2, 0.1, 0.1, 0.004));
+        let (mean, _) = h.iter_time_ms(1);
+        assert!((mean - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut h = History::default();
+        h.push(e(0, 0.5, 0.5, 0.1));
+        let p = std::env::temp_dir().join(format!("cofree_hist_{}.csv", std::process::id()));
+        h.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.starts_with("epoch,"));
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,24 @@
+//! The CoFree-GNN training engine (Layer 3).
+//!
+//! Implements Algorithm 1 of the paper: vertex-cut partitions are
+//! tensorized into padded shape buckets, each worker executes the
+//! AOT-compiled `train_step` on its own partition with **zero embedding
+//! communication**, the leader sums the DAR-weighted gradients (the only
+//! cross-worker traffic) and applies the optimizer.
+
+pub mod allreduce;
+pub mod bucket;
+pub mod dropedge;
+pub mod engine;
+pub mod metrics;
+pub mod optimizer;
+pub mod reference;
+pub mod sampling;
+pub mod tensorize;
+
+pub use bucket::bucket_shapes;
+pub use dropedge::MaskBank;
+pub use engine::{TrainConfig, TrainEngine};
+pub use metrics::{EpochStats, History};
+pub use optimizer::{Adam, Optimizer, Sgd};
+pub use tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch};

@@ -1,0 +1,144 @@
+//! Optimizers (leader-side). The paper uses Adam (Appendix B); plain SGD is
+//! provided for ablations. Parameters and gradients are flat f32 vectors in
+//! artifact lowering order.
+
+/// A first-order optimizer over a flat parameter list.
+pub trait Optimizer {
+    /// Apply one update. `grads[i]` matches `params[i]` element-wise;
+    /// `scale` multiplies every gradient (used for the global `1/|V_train|`
+    /// normalization of the summed DAR gradients).
+    fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], scale: f32);
+    fn name(&self) -> &'static str;
+}
+
+/// Plain SGD.
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], scale: f32) {
+        for (p, g) in params.iter_mut().zip(grads) {
+            debug_assert_eq!(p.len(), g.len());
+            for (pi, &gi) in p.iter_mut().zip(g.iter()) {
+                *pi -= self.lr * scale * gi;
+            }
+        }
+    }
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: i32,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], scale: f32) {
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| vec![0.0; p.len()]).collect();
+            self.v = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t);
+        let bc2 = 1.0 - self.beta2.powi(self.t);
+        for (((p, g), m), v) in params.iter_mut().zip(grads).zip(&mut self.m).zip(&mut self.v) {
+            debug_assert_eq!(p.len(), g.len());
+            for i in 0..p.len() {
+                let gi = scale * g[i];
+                m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * gi;
+                v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * gi * gi;
+                let mhat = m[i] / bc1;
+                let vhat = v[i] / bc2;
+                p[i] -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step_matches_formula() {
+        let mut p = vec![vec![1.0f32, 2.0], vec![3.0]];
+        let g = vec![vec![0.5f32, -1.0], vec![2.0]];
+        Sgd { lr: 0.1 }.step(&mut p, &g, 2.0);
+        assert_eq!(p[0], vec![1.0 - 0.1 * 2.0 * 0.5, 2.0 + 0.1 * 2.0]);
+        assert_eq!(p[1], vec![3.0 - 0.1 * 2.0 * 2.0]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With bias correction, the very first Adam step has magnitude ≈ lr
+        // regardless of gradient scale.
+        for &gscale in &[0.001f32, 1.0, 1000.0] {
+            let mut p = vec![vec![0.0f32]];
+            let g = vec![vec![gscale]];
+            let mut opt = Adam::new(0.01);
+            opt.step(&mut p, &g, 1.0);
+            assert!((p[0][0] + 0.01).abs() < 1e-4, "gscale={gscale}: {}", p[0][0]);
+        }
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        // Minimize f(x) = (x - 3)^2 — Adam should get close in a few hundred
+        // steps.
+        let mut p = vec![vec![0.0f32]];
+        let mut opt = Adam::new(0.05);
+        for _ in 0..500 {
+            let g = vec![vec![2.0 * (p[0][0] - 3.0)]];
+            opt.step(&mut p, &g, 1.0);
+        }
+        assert!((p[0][0] - 3.0).abs() < 0.05, "{}", p[0][0]);
+    }
+
+    #[test]
+    fn adam_matches_reference_trajectory() {
+        // Hand-computed two steps of Adam (lr=0.1, g=1 both steps).
+        let mut p = vec![vec![0.0f32]];
+        let mut opt = Adam::new(0.1);
+        opt.step(&mut p, &[vec![1.0]], 1.0);
+        // Step 1: mhat = 1, vhat = 1 -> p = -0.1 * 1/(1 + eps) ≈ -0.1.
+        assert!((p[0][0] + 0.1).abs() < 1e-5);
+        opt.step(&mut p, &[vec![1.0]], 1.0);
+        // Step 2: m = 0.19, bc1 = 0.19 -> mhat = 1; v similar -> ≈ -0.2.
+        assert!((p[0][0] + 0.2).abs() < 1e-4, "{}", p[0][0]);
+    }
+
+    #[test]
+    fn scale_is_applied_before_moments() {
+        // Adam(g, scale=s) must equal Adam(s*g, scale=1).
+        let g = vec![vec![0.7f32, -0.3]];
+        let mut p1 = vec![vec![1.0f32, 1.0]];
+        let mut p2 = vec![vec![1.0f32, 1.0]];
+        let mut o1 = Adam::new(0.01);
+        let mut o2 = Adam::new(0.01);
+        for _ in 0..5 {
+            o1.step(&mut p1, &g, 0.5);
+            o2.step(&mut p2, &[vec![0.35, -0.15]], 1.0);
+        }
+        for (a, b) in p1[0].iter().zip(&p2[0]) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

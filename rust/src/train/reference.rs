@@ -1,0 +1,209 @@
+//! Pure-Rust GraphSAGE forward pass — a second, independent implementation
+//! of the model used to cross-validate the AOT artifacts end-to-end
+//! (tensorize → HLO execute must agree with this, see
+//! `rust/tests/integration.rs`).
+
+use super::tensorize::TrainBatch;
+use crate::runtime::{ModelConfig, ParamSet};
+
+/// Forward pass over a tensorized batch; returns logits `[n_pad, classes]`
+/// (row-major).
+pub fn forward(cfg: &ModelConfig, params: &ParamSet, batch: &TrainBatch) -> Vec<f32> {
+    let n = batch.n_pad;
+    let feat = batch.tensors[0].as_f32();
+    let src = batch.tensors[1].as_i32();
+    let dst = batch.tensors[2].as_i32();
+    let emask = batch.tensors[3].as_f32();
+    let mut h: Vec<f32> = feat.to_vec();
+    let mut d_in = cfg.feat_dim;
+    for l in 0..cfg.layers {
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let hdim = cfg.hidden;
+        let w = &params.data[4 * l];
+        let b = &params.data[4 * l + 1];
+        let u = &params.data[4 * l + 2];
+        let c = &params.data[4 * l + 3];
+        // msg = relu(h @ W + b): [n, hdim]
+        let mut msg = vec![0f32; n * hdim];
+        for i in 0..n {
+            for k in 0..d_in {
+                let x = h[i * d_in + k];
+                if x != 0.0 {
+                    for j in 0..hdim {
+                        msg[i * hdim + j] += x * w[k * hdim + j];
+                    }
+                }
+            }
+            for j in 0..hdim {
+                let v = msg[i * hdim + j] + b[j];
+                msg[i * hdim + j] = if v > 0.0 { v } else { 0.0 };
+            }
+        }
+        // agg = weighted segment mean over incoming messages.
+        let mut agg = vec![0f32; n * hdim];
+        let mut cnt = vec![0f32; n];
+        for e in 0..batch.e_pad {
+            let wgt = emask[e];
+            if wgt == 0.0 {
+                continue;
+            }
+            let (s, d) = (src[e] as usize, dst[e] as usize);
+            for j in 0..hdim {
+                agg[d * hdim + j] += wgt * msg[s * hdim + j];
+            }
+            cnt[d] += wgt;
+        }
+        for i in 0..n {
+            let denom = cnt[i].max(1e-9);
+            for j in 0..hdim {
+                agg[i * hdim + j] /= denom;
+            }
+        }
+        // h' = concat(agg, h) @ U + c: [n, d_out]
+        let concat_dim = hdim + d_in;
+        let mut out = vec![0f32; n * d_out];
+        for i in 0..n {
+            for j in 0..d_out {
+                out[i * d_out + j] = c[j];
+            }
+            for k in 0..hdim {
+                let x = agg[i * hdim + k];
+                if x != 0.0 {
+                    for j in 0..d_out {
+                        out[i * d_out + j] += x * u[k * d_out + j];
+                    }
+                }
+            }
+            for k in 0..d_in {
+                let x = h[i * d_in + k];
+                if x != 0.0 {
+                    for j in 0..d_out {
+                        out[i * d_out + j] += x * u[(hdim + k) * d_out + j];
+                    }
+                }
+            }
+        }
+        let _ = concat_dim;
+        h = out;
+        d_in = d_out;
+    }
+    h
+}
+
+/// DAR-weighted cross-entropy loss + weight sum + correct count, matching
+/// the artifact's train-step outputs (`loss_sum`, `weight_sum`, `correct`).
+pub fn loss_and_metrics(
+    cfg: &ModelConfig,
+    logits: &[f32],
+    batch: &TrainBatch,
+) -> (f64, f64, f64) {
+    let n = batch.n_pad;
+    let c = cfg.classes;
+    let dar = batch.tensors[4].as_f32();
+    let labels = batch.tensors[5].as_i32();
+    let tmask = batch.tensors[6].as_f32();
+    let (mut loss, mut wsum, mut correct) = (0f64, 0f64, 0f64);
+    for i in 0..n {
+        let w = (dar[i] * tmask[i]) as f64;
+        let row = &logits[i * c..(i + 1) * c];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if tmask[i] > 0.0 {
+            let argmax = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j as i32)
+                .unwrap();
+            if argmax == labels[i] {
+                correct += tmask[i] as f64;
+            }
+        }
+        if w > 0.0 {
+            let logz =
+                maxv as f64 + row.iter().map(|&x| ((x - maxv) as f64).exp()).sum::<f64>().ln();
+            let ce = logz - row[labels[i] as usize] as f64;
+            loss += w * ce;
+            wsum += w;
+        }
+    }
+    (loss, wsum, correct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::features::{synthesize, FeatureParams};
+    use crate::graph::generators::barabasi_albert;
+    use crate::partition::{dar_weights, random::RandomVertexCut, Reweighting, VertexCut};
+    use crate::train::tensorize::tensorize_partition;
+    use crate::util::rng::Rng;
+
+    fn setup(layers: usize) -> (ModelConfig, ParamSet, TrainBatch) {
+        let mut rng = Rng::new(80);
+        let g = barabasi_albert(120, 3, &mut rng);
+        let comm: Vec<u32> = (0..120).map(|i| (i % 3) as u32).collect();
+        let nd = synthesize(&comm, 3, &FeatureParams { dim: 6, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 128, 1024).unwrap();
+        let cfg = ModelConfig { layers, feat_dim: 6, hidden: 8, classes: 3 };
+        let params = ParamSet::init_glorot(&cfg, &mut rng);
+        (cfg, params, batch)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        for layers in [1, 2, 3] {
+            let (cfg, params, batch) = setup(layers);
+            let logits = forward(&cfg, &params, &batch);
+            assert_eq!(logits.len(), batch.n_pad * cfg.classes);
+            assert!(logits.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn loss_is_ln_c_at_uniform_logits() {
+        // With all-zero parameters, logits are 0 -> CE = ln(C) per node.
+        let (cfg, mut params, batch) = setup(2);
+        for p in &mut params.data {
+            p.iter_mut().for_each(|x| *x = 0.0);
+        }
+        let logits = forward(&cfg, &params, &batch);
+        let (loss, wsum, _) = loss_and_metrics(&cfg, &logits, &batch);
+        let per_node = loss / wsum;
+        assert!((per_node - (3f64).ln()).abs() < 1e-6, "{per_node}");
+        assert!((wsum - batch.local_train_weight).abs() < 1e-4);
+    }
+
+    #[test]
+    fn padding_rows_do_not_contribute() {
+        let (cfg, params, batch) = setup(2);
+        let logits = forward(&cfg, &params, &batch);
+        let (l1, w1, c1) = loss_and_metrics(&cfg, &logits, &batch);
+        // Scribble on padding logits: nothing changes.
+        let mut logits2 = logits.clone();
+        for i in batch.n_used..batch.n_pad {
+            for j in 0..cfg.classes {
+                logits2[i * cfg.classes + j] = 1e9;
+            }
+        }
+        let (l2, w2, c2) = loss_and_metrics(&cfg, &logits2, &batch);
+        assert_eq!((l1, w1, c1), (l2, w2, c2));
+    }
+
+    #[test]
+    fn isolated_in_batch_nodes_get_bias_plus_self() {
+        // A node with no incoming kept edges aggregates zeros: its output is
+        // c + h @ U_lower — check the aggregation half is exactly zero by
+        // comparing against manual computation for a degree-0 padding row.
+        let (cfg, params, batch) = setup(1);
+        let logits = forward(&cfg, &params, &batch);
+        // Padding rows have zero features and no edges: logits = c exactly.
+        let c = &params.data[3];
+        for i in batch.n_used..batch.n_pad {
+            for j in 0..cfg.classes {
+                assert!((logits[i * cfg.classes + j] - c[j]).abs() < 1e-6);
+            }
+        }
+    }
+}

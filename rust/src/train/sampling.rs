@@ -1,0 +1,214 @@
+//! Sampling-based training baselines (Table 2's first block).
+//!
+//! The paper compares against GraphSAGE (neighbor sampling), Cluster-GCN
+//! (cluster mini-batches) and GraphSAINT (normalized subgraph sampling).
+//! All three are *subgraph-per-iteration* methods; we realize them on the
+//! same static-shape artifacts used by CoFree-GNN by pre-generating a pool
+//! of subgraph batches and rotating through them (`RunMode::Rotate`):
+//!
+//! * **Cluster-GCN** — the pool is an edge-cut clustering (our LDG
+//!   partitioner standing in for METIS); each iteration trains on one
+//!   cluster's intra edges. Faithful to the original design.
+//! * **GraphSAINT (node sampler)** — each pool entry is the induced
+//!   subgraph of a degree-proportional node sample; the loss is
+//!   bias-corrected with inverse inclusion probabilities (the paper's
+//!   normalization technique).
+//! * **GraphSAGE (as deployed here)** — uniform node-sampled induced
+//!   subgraphs *without* bias correction. This keeps the sampling +
+//!   no-correction character that makes GraphSAGE-style training lose
+//!   accuracy in Table 2, while fitting the static-shape runtime; the
+//!   substitution is recorded in DESIGN.md §2.
+
+use super::tensorize::{tensorize_subgraph, TrainBatch};
+use crate::graph::{Dataset, Graph, GraphBuilder};
+use crate::partition::LdgEdgeCut;
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Which sampling baseline to build a batch pool for.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampler {
+    /// Uniform node sampling, no bias correction.
+    GraphSage { frac: f64 },
+    /// LDG clustering, one cluster per iteration.
+    ClusterGcn { clusters: usize },
+    /// Degree-proportional node sampling + inverse-probability weights.
+    GraphSaint { frac: f64, pool: usize },
+}
+
+impl Sampler {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Sampler::GraphSage { .. } => "GraphSAGE",
+            Sampler::ClusterGcn { .. } => "Cluster-GCN",
+            Sampler::GraphSaint { .. } => "GraphSAINT",
+        }
+    }
+}
+
+/// Induced subgraph over `nodes` (global ids, deduplicated + sorted).
+fn induced_subgraph(g: &Graph, mut nodes: Vec<u32>) -> (Vec<u32>, Graph) {
+    nodes.sort_unstable();
+    nodes.dedup();
+    let index: HashMap<u32, u32> =
+        nodes.iter().enumerate().map(|(l, &gid)| (gid, l as u32)).collect();
+    let mut b = GraphBuilder::new(nodes.len());
+    for &gid in &nodes {
+        let lu = index[&gid];
+        for &nb in g.neighbors(gid) {
+            if nb > gid {
+                if let Some(&lv) = index.get(&nb) {
+                    b.edge(lu, lv);
+                }
+            }
+        }
+    }
+    (nodes, b.edges(&[]).build())
+}
+
+/// Build the batch pool for a sampler. `n_pad`/`e_pad` must fit the largest
+/// pool entry (callers take them from the artifact registry).
+pub fn build_pool(
+    ds: &Dataset,
+    sampler: Sampler,
+    n_pad: usize,
+    e_pad: usize,
+    rng: &mut Rng,
+) -> Result<Vec<TrainBatch>> {
+    let g = &ds.graph;
+    let n = g.num_nodes();
+    match sampler {
+        Sampler::ClusterGcn { clusters } => {
+            let ec = LdgEdgeCut::default().partition(g, clusters, rng);
+            ec.parts
+                .iter()
+                .map(|part| {
+                    let w = vec![1.0f32; part.global_ids.len()];
+                    tensorize_subgraph(&part.global_ids, &part.local, &ds.data, &w, n_pad, e_pad)
+                })
+                .collect()
+        }
+        Sampler::GraphSage { frac } => {
+            let pool = 16;
+            let k = ((n as f64 * frac) as usize).max(8);
+            (0..pool)
+                .map(|i| {
+                    let mut r = rng.fork(i as u64);
+                    let nodes: Vec<u32> =
+                        r.sample_indices(n, k.min(n)).into_iter().map(|x| x as u32).collect();
+                    let (ids, local) = induced_subgraph(g, nodes);
+                    let w = vec![1.0f32; ids.len()];
+                    tensorize_subgraph(&ids, &local, &ds.data, &w, n_pad, e_pad)
+                })
+                .collect()
+        }
+        Sampler::GraphSaint { frac, pool } => {
+            let k = ((n as f64 * frac) as usize).max(8);
+            // Degree-proportional sampling with replacement; inclusion
+            // probability per draw ∝ deg, corrected by 1/(expected count).
+            let degs: Vec<u64> = (0..n as u32).map(|v| g.degree(v).max(1) as u64).collect();
+            let total: u64 = degs.iter().sum();
+            let mut cum = Vec::with_capacity(n);
+            let mut acc = 0u64;
+            for &d in &degs {
+                acc += d;
+                cum.push(acc);
+            }
+            (0..pool)
+                .map(|i| {
+                    let mut r = rng.fork(1000 + i as u64);
+                    let mut nodes = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        let t = (r.next_u64() as u128 * total as u128 >> 64) as u64;
+                        let v = cum.partition_point(|&c| c <= t) as u32;
+                        nodes.push(v.min(n as u32 - 1));
+                    }
+                    let (ids, local) = induced_subgraph(g, nodes);
+                    // E[count of v] = k * deg_v / total; weight = 1/E.
+                    let w: Vec<f32> = ids
+                        .iter()
+                        .map(|&gid| {
+                            let e = k as f64 * degs[gid as usize] as f64 / total as f64;
+                            (1.0 / e.max(1e-6)).min(10.0) as f32
+                        })
+                        .collect();
+                    tensorize_subgraph(&ids, &local, &ds.data, &w, n_pad, e_pad)
+                })
+                .collect()
+        }
+    }
+}
+
+/// Per-iteration host-side sampling cost (seconds) a real deployment pays:
+/// for rotating pools this is ~0 (pregenerated); the figure reported in
+/// Table 1 for DistDGL-style samplers is modeled in `simnet` instead.
+pub fn pool_stats(pool: &[TrainBatch]) -> (usize, usize, usize) {
+    let max_n = pool.iter().map(|b| b.n_used).max().unwrap_or(0);
+    let max_e = pool.iter().map(|b| b.e_used).max().unwrap_or(0);
+    (pool.len(), max_n, max_e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::datasets;
+
+    fn tiny() -> Dataset {
+        datasets::build("yelp-sim", 0.05, 3).unwrap()
+    }
+
+    #[test]
+    fn cluster_pool_partitions_nodes() {
+        let ds = tiny();
+        let mut rng = Rng::new(1);
+        let pool = build_pool(&ds, Sampler::ClusterGcn { clusters: 4 }, 4096, 16384, &mut rng).unwrap();
+        assert_eq!(pool.len(), 4);
+        let total: usize = pool.iter().map(|b| b.n_used).sum();
+        assert_eq!(total, ds.graph.num_nodes());
+    }
+
+    #[test]
+    fn sage_pool_sizes() {
+        let ds = tiny();
+        let mut rng = Rng::new(2);
+        let pool = build_pool(&ds, Sampler::GraphSage { frac: 0.3 }, 4096, 16384, &mut rng).unwrap();
+        assert_eq!(pool.len(), 16);
+        for b in &pool {
+            assert!(b.n_used <= (ds.graph.num_nodes() as f64 * 0.3) as usize + 1);
+        }
+        let (_, max_n, max_e) = pool_stats(&pool);
+        assert!(max_n > 0 && max_e > 0);
+    }
+
+    #[test]
+    fn saint_weights_are_inverse_probability() {
+        let ds = tiny();
+        let mut rng = Rng::new(3);
+        let pool =
+            build_pool(&ds, Sampler::GraphSaint { frac: 0.3, pool: 4 }, 4096, 16384, &mut rng)
+                .unwrap();
+        for b in &pool {
+            let dar = b.tensors[4].as_f32();
+            // High-degree nodes (more likely sampled) must carry lower
+            // weights: check weights vary and are positive.
+            let used: Vec<f32> = dar[..b.n_used].to_vec();
+            assert!(used.iter().all(|&w| w > 0.0));
+            let min = used.iter().cloned().fold(f32::INFINITY, f32::min);
+            let max = used.iter().cloned().fold(0.0f32, f32::max);
+            assert!(max > min, "weights should vary");
+        }
+    }
+
+    #[test]
+    fn induced_subgraph_correct() {
+        let ds = tiny();
+        let nodes: Vec<u32> = (0..50).collect();
+        let (ids, local) = induced_subgraph(&ds.graph, nodes.clone());
+        assert_eq!(ids, nodes);
+        for &(lu, lv) in local.edges() {
+            assert!(ds.graph.has_edge(ids[lu as usize], ids[lv as usize]));
+        }
+        local.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,313 @@
+//! Partition → padded tensor batches (the contract with `model.py`).
+//!
+//! Train batch tensor order (after params): `feat [n,d]`, `src [e]`,
+//! `dst [e]`, `emask [e]`, `dar [n]`, `labels [n]`, `tmask [n]`.
+//! Eval batch: `feat`, `src`, `dst`, `emask`, `labels` + a `mask [n]` fed
+//! per call (val or test).
+//!
+//! Padding contract (verified by `python/tests/test_model.py`):
+//! * padded node rows have `dar = tmask = 0` → no loss/gradient,
+//! * padded edge slots have `emask = 0` and endpoints pointing at node 0 →
+//!   invisible to the masked segment-mean.
+
+use crate::graph::{Graph, NodeData};
+use crate::partition::PartGraph;
+use crate::runtime::Tensor;
+use anyhow::{ensure, Result};
+
+/// A tensorized, padded training batch for one partition.
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    pub n_used: usize,
+    /// Directed message edges in use (2 × canonical local edges).
+    pub e_used: usize,
+    pub n_pad: usize,
+    pub e_pad: usize,
+    /// Tensors in artifact order: feat, src, dst, emask, dar, labels, tmask.
+    pub tensors: Vec<Tensor>,
+    /// Number of train nodes counted with weight 1 (for global loss
+    /// normalization: `Σ_part Σ_j tmask_j · dar_j` over replicas = global
+    /// train-node count under DAR).
+    pub local_train_weight: f64,
+}
+
+impl TrainBatch {
+    pub fn feat(&self) -> &Tensor {
+        &self.tensors[0]
+    }
+    pub fn emask(&self) -> &Tensor {
+        &self.tensors[3]
+    }
+    /// Index of the emask tensor inside `tensors` (swapped by DropEdge-K).
+    pub const EMASK_IDX: usize = 3;
+}
+
+/// A tensorized full-graph eval batch.
+#[derive(Clone, Debug)]
+pub struct EvalBatch {
+    pub n_pad: usize,
+    pub e_pad: usize,
+    /// feat, src, dst, emask, labels (mask appended per call).
+    pub tensors: Vec<Tensor>,
+    /// Split masks: index by 0 = train, 1 = val, 2 = test.
+    pub masks: [Tensor; 3],
+}
+
+fn directed_edges(local: &Graph, e_pad: usize) -> Result<(Vec<i32>, Vec<i32>, Vec<f32>, usize)> {
+    let m = local.num_edges();
+    let e_used = 2 * m;
+    ensure!(e_used <= e_pad, "partition has {e_used} directed edges > bucket {e_pad}");
+    let mut src = vec![0i32; e_pad];
+    let mut dst = vec![0i32; e_pad];
+    let mut emask = vec![0f32; e_pad];
+    for (k, &(u, v)) in local.edges().iter().enumerate() {
+        // Forward copy at k, reverse copy at k + m (the DropEdge mask bank
+        // relies on this pairing to drop undirected edges atomically).
+        src[k] = u as i32;
+        dst[k] = v as i32;
+        src[k + m] = v as i32;
+        dst[k + m] = u as i32;
+        emask[k] = 1.0;
+        emask[k + m] = 1.0;
+    }
+    Ok((src, dst, emask, e_used))
+}
+
+fn gather_rows(nd: &NodeData, ids: &[u32], n_pad: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+    let d = nd.dim;
+    let mut feat = vec![0f32; n_pad * d];
+    let mut labels = vec![0i32; n_pad];
+    let mut tmask = vec![0f32; n_pad];
+    for (l, &gid) in ids.iter().enumerate() {
+        feat[l * d..(l + 1) * d].copy_from_slice(nd.feature(gid));
+        labels[l] = nd.labels[gid as usize] as i32;
+        tmask[l] = if nd.split[gid as usize] == 0 { 1.0 } else { 0.0 };
+    }
+    (feat, labels, tmask)
+}
+
+/// Tensorize one vertex-cut partition with its DAR weights.
+pub fn tensorize_partition(
+    part: &PartGraph,
+    nd: &NodeData,
+    dar_w: &[f32],
+    n_pad: usize,
+    e_pad: usize,
+) -> Result<TrainBatch> {
+    tensorize_subgraph(&part.global_ids, &part.local, nd, dar_w, n_pad, e_pad)
+}
+
+/// Tensorize an arbitrary subgraph given its global-id mapping and per-node
+/// loss weights — shared by vertex-cut partitions, edge-cut parts (weights
+/// ≡ 1) and the sampled subgraphs of the sampling-based baselines.
+pub fn tensorize_subgraph(
+    global_ids: &[u32],
+    local: &Graph,
+    nd: &NodeData,
+    node_w: &[f32],
+    n_pad: usize,
+    e_pad: usize,
+) -> Result<TrainBatch> {
+    let n_used = global_ids.len();
+    ensure!(n_used == local.num_nodes(), "id map / local graph mismatch");
+    ensure!(n_used <= n_pad, "partition has {n_used} nodes > bucket {n_pad}");
+    ensure!(node_w.len() == n_used, "node weights length mismatch");
+    let d = nd.dim;
+    let (feat, labels, tmask) = gather_rows(nd, global_ids, n_pad);
+    let (src, dst, emask, e_used) = directed_edges(local, e_pad)?;
+    let mut dar = vec![0f32; n_pad];
+    dar[..n_used].copy_from_slice(node_w);
+    let local_train_weight: f64 = (0..n_used)
+        .map(|l| (tmask[l] * dar[l]) as f64)
+        .sum();
+    Ok(TrainBatch {
+        n_used,
+        e_used,
+        n_pad,
+        e_pad,
+        tensors: vec![
+            Tensor::f32(feat, &[n_pad, d]),
+            Tensor::i32(src, &[e_pad]),
+            Tensor::i32(dst, &[e_pad]),
+            Tensor::f32(emask, &[e_pad]),
+            Tensor::f32(dar, &[n_pad]),
+            Tensor::i32(labels, &[n_pad]),
+            Tensor::f32(tmask, &[n_pad]),
+        ],
+        local_train_weight,
+    })
+}
+
+/// Tensorize the FULL graph as a training batch (the full-graph baseline of
+/// Figure 4): one "partition" containing everything, DAR ≡ 1.
+pub fn tensorize_full_train(g: &Graph, nd: &NodeData, n_pad: usize, e_pad: usize) -> Result<TrainBatch> {
+    let n_used = g.num_nodes();
+    ensure!(n_used <= n_pad);
+    let d = nd.dim;
+    let ids: Vec<u32> = (0..n_used as u32).collect();
+    let (feat, labels, tmask) = gather_rows(nd, &ids, n_pad);
+    let (src, dst, emask, e_used) = directed_edges(g, e_pad)?;
+    let mut dar = vec![0f32; n_pad];
+    dar[..n_used].fill(1.0);
+    let local_train_weight = tmask.iter().map(|&t| t as f64).sum();
+    Ok(TrainBatch {
+        n_used,
+        e_used,
+        n_pad,
+        e_pad,
+        tensors: vec![
+            Tensor::f32(feat, &[n_pad, d]),
+            Tensor::i32(src, &[e_pad]),
+            Tensor::i32(dst, &[e_pad]),
+            Tensor::f32(emask, &[e_pad]),
+            Tensor::f32(dar, &[n_pad]),
+            Tensor::i32(labels, &[n_pad]),
+            Tensor::f32(tmask, &[n_pad]),
+        ],
+        local_train_weight,
+    })
+}
+
+/// Tensorize the full graph for evaluation (split masks included).
+pub fn tensorize_full_eval(g: &Graph, nd: &NodeData, n_pad: usize, e_pad: usize) -> Result<EvalBatch> {
+    let n_used = g.num_nodes();
+    ensure!(n_used <= n_pad);
+    let d = nd.dim;
+    let ids: Vec<u32> = (0..n_used as u32).collect();
+    let (feat, labels, _) = gather_rows(nd, &ids, n_pad);
+    let (src, dst, emask, _) = directed_edges(g, e_pad)?;
+    let mut masks = [vec![0f32; n_pad], vec![0f32; n_pad], vec![0f32; n_pad]];
+    for v in 0..n_used {
+        masks[nd.split[v] as usize][v] = 1.0;
+    }
+    Ok(EvalBatch {
+        n_pad,
+        e_pad,
+        tensors: vec![
+            Tensor::f32(feat, &[n_pad, d]),
+            Tensor::i32(src, &[e_pad]),
+            Tensor::i32(dst, &[e_pad]),
+            Tensor::f32(emask, &[e_pad]),
+            Tensor::i32(labels, &[n_pad]),
+        ],
+        masks: [
+            Tensor::f32(masks[0].clone(), &[n_pad]),
+            Tensor::f32(masks[1].clone(), &[n_pad]),
+            Tensor::f32(masks[2].clone(), &[n_pad]),
+        ],
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::features::{synthesize, FeatureParams};
+    use crate::graph::generators::barabasi_albert;
+    use crate::partition::{dar_weights, random::RandomVertexCut, Reweighting, VertexCut};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (Graph, NodeData, VertexCut, Vec<Vec<f32>>) {
+        let mut rng = Rng::new(60);
+        let g = barabasi_albert(300, 3, &mut rng);
+        let comm: Vec<u32> = (0..300).map(|i| (i % 4) as u32).collect();
+        let nd = synthesize(&comm, 4, &FeatureParams { dim: 8, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 4, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        (g, nd, vc, w)
+    }
+
+    #[test]
+    fn partition_batch_shapes_and_padding() {
+        let (_, nd, vc, w) = setup();
+        let part = &vc.parts[0];
+        let (n_pad, e_pad) = (512, 2048);
+        let b = tensorize_partition(part, &nd, &w[0], n_pad, e_pad).unwrap();
+        assert_eq!(b.n_used, part.num_nodes());
+        assert_eq!(b.e_used, 2 * part.num_edges());
+        assert_eq!(b.tensors.len(), 7);
+        assert_eq!(b.feat().dims, vec![n_pad, 8]);
+        // Padding rows are all-zero.
+        let dar = b.tensors[4].as_f32();
+        let tmask = b.tensors[6].as_f32();
+        for l in b.n_used..n_pad {
+            assert_eq!(dar[l], 0.0);
+            assert_eq!(tmask[l], 0.0);
+        }
+        let emask = b.emask().as_f32();
+        for e in b.e_used..e_pad {
+            assert_eq!(emask[e], 0.0);
+        }
+        // Src/dst indices within bounds.
+        for &s in b.tensors[1].as_i32() {
+            assert!((s as usize) < n_pad);
+        }
+    }
+
+    #[test]
+    fn directed_edge_pairing_contract() {
+        let (_, nd, vc, w) = setup();
+        let part = &vc.parts[1];
+        let b = tensorize_partition(part, &nd, &w[1], 512, 2048).unwrap();
+        let m = part.num_edges();
+        let (src, dst) = (b.tensors[1].as_i32(), b.tensors[2].as_i32());
+        for k in 0..m {
+            assert_eq!(src[k], dst[k + m], "reverse pairing at {k}");
+            assert_eq!(dst[k], src[k + m]);
+        }
+    }
+
+    #[test]
+    fn feature_rows_match_global_ids() {
+        let (_, nd, vc, w) = setup();
+        let part = &vc.parts[2];
+        let b = tensorize_partition(part, &nd, &w[2], 512, 2048).unwrap();
+        let feat = b.feat().as_f32();
+        for (l, &gid) in part.global_ids.iter().enumerate() {
+            assert_eq!(&feat[l * 8..(l + 1) * 8], nd.feature(gid), "row {l}");
+            assert_eq!(b.tensors[5].as_i32()[l], nd.labels[gid as usize] as i32);
+        }
+    }
+
+    #[test]
+    fn train_weight_sums_to_global_train_count() {
+        // Σ over partitions of Σ_j tmask·dar == number of train nodes with
+        // degree > 0 (DAR weights sum to 1 per node).
+        let (g, nd, vc, w) = setup();
+        let mut total = 0f64;
+        for (i, part) in vc.parts.iter().enumerate() {
+            let b = tensorize_partition(part, &nd, &w[i], 512, 2048).unwrap();
+            total += b.local_train_weight;
+        }
+        let want = (0..g.num_nodes())
+            .filter(|&v| nd.split[v] == 0 && g.degree(v as u32) > 0)
+            .count() as f64;
+        assert!((total - want).abs() < 1e-3, "{total} vs {want}");
+    }
+
+    #[test]
+    fn overflow_is_an_error() {
+        let (_, nd, vc, w) = setup();
+        assert!(tensorize_partition(&vc.parts[0], &nd, &w[0], 4, 2048).is_err());
+        assert!(tensorize_partition(&vc.parts[0], &nd, &w[0], 512, 4).is_err());
+    }
+
+    #[test]
+    fn eval_batch_masks_partition_nodes() {
+        let (g, nd, _, _) = setup();
+        let b = tensorize_full_eval(&g, &nd, 512, 2048).unwrap();
+        let total: f32 = b.masks.iter().map(|m| m.as_f32().iter().sum::<f32>()).sum();
+        assert_eq!(total as usize, g.num_nodes());
+        assert_eq!(b.tensors.len(), 5);
+    }
+
+    #[test]
+    fn full_train_batch_dar_is_one() {
+        let (g, nd, _, _) = setup();
+        let b = tensorize_full_train(&g, &nd, 512, 2048).unwrap();
+        let dar = b.tensors[4].as_f32();
+        for v in 0..g.num_nodes() {
+            assert_eq!(dar[v], 1.0);
+        }
+        assert_eq!(b.e_used, 2 * g.num_edges());
+    }
+}

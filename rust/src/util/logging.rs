@@ -1,0 +1,111 @@
+//! Minimal leveled logger writing to stderr.
+//!
+//! We avoid external logging crates (the build is fully offline); this gives
+//! the coordinator structured, timestamped progress lines controlled by
+//! `COFREE_LOG` (error|warn|info|debug|trace, default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // info
+static INIT: std::sync::Once = std::sync::Once::new();
+static mut START: Option<Instant> = None;
+
+/// Log severity, ordered from quietest to loudest.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn parse(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// Initialise the logger (idempotent). Reads `COFREE_LOG`.
+pub fn init() {
+    INIT.call_once(|| {
+        // SAFETY: guarded by Once; written exactly once before any read.
+        unsafe { START = Some(Instant::now()) };
+        if let Ok(v) = std::env::var("COFREE_LOG") {
+            LEVEL.store(Level::parse(&v) as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+/// Override the level programmatically.
+pub fn set_level(level: Level) {
+    init();
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// True if a message at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    init();
+    (level as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit a log line (used by the macros).
+pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = unsafe {
+        #[allow(static_mut_refs)]
+        START.as_ref().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
+    };
+    eprintln!("[{t:9.3}s {}] {args}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_info { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Info, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Warn, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_error { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Error, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Debug, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_trace { ($($a:tt)*) => { $crate::util::logging::log($crate::util::logging::Level::Trace, format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("error"), Level::Error);
+        assert_eq!(Level::parse("WARN"), Level::Warn);
+        assert_eq!(Level::parse("bogus"), Level::Info);
+        assert_eq!(Level::parse("trace"), Level::Trace);
+    }
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

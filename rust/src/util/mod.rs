@@ -1,0 +1,43 @@
+//! Small shared utilities: deterministic RNG, logging, timing helpers.
+
+pub mod logging;
+pub mod rng;
+pub mod timer;
+
+/// Round `n` up to the next power of two, with a floor.
+pub fn next_pow2_at_least(n: usize, floor: usize) -> usize {
+    let n = n.max(floor).max(1);
+    n.next_power_of_two()
+}
+
+/// Mean and (population) standard deviation of a slice.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_rounding() {
+        assert_eq!(next_pow2_at_least(0, 16), 16);
+        assert_eq!(next_pow2_at_least(16, 16), 16);
+        assert_eq!(next_pow2_at_least(17, 16), 32);
+        assert_eq!(next_pow2_at_least(1000, 1), 1024);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+        let (m0, s0) = mean_std(&[]);
+        assert_eq!((m0, s0), (0.0, 0.0));
+    }
+}

@@ -1,0 +1,110 @@
+//! Lightweight timing utilities used by the training loop and benches.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// A named accumulator of wall-clock spans, e.g. per-phase breakdowns
+/// (`tensorize`, `execute`, `allreduce`, `optim`) of a training iteration.
+#[derive(Default, Debug, Clone)]
+pub struct PhaseTimer {
+    acc: BTreeMap<&'static str, (Duration, u64)>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed());
+        out
+    }
+
+    /// Record an externally measured span.
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        let e = self.acc.entry(name).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    /// Total accumulated time for a phase.
+    pub fn total(&self, name: &str) -> Duration {
+        self.acc.get(name).map(|e| e.0).unwrap_or(Duration::ZERO)
+    }
+
+    /// Number of recorded spans for a phase.
+    pub fn count(&self, name: &str) -> u64 {
+        self.acc.get(name).map(|e| e.1).unwrap_or(0)
+    }
+
+    /// Mean span length in milliseconds.
+    pub fn mean_ms(&self, name: &str) -> f64 {
+        let (d, n) = self.acc.get(name).copied().unwrap_or((Duration::ZERO, 0));
+        if n == 0 {
+            0.0
+        } else {
+            d.as_secs_f64() * 1e3 / n as f64
+        }
+    }
+
+    /// Render a compact one-line report, phases sorted by name.
+    pub fn report(&self) -> String {
+        let mut parts = Vec::new();
+        for (name, (d, n)) in &self.acc {
+            parts.push(format!("{name}={:.1}ms/{n}", d.as_secs_f64() * 1e3));
+        }
+        parts.join(" ")
+    }
+
+    pub fn clear(&mut self) {
+        self.acc.clear();
+    }
+}
+
+/// Measure `f` repeatedly: `warmup` unrecorded runs then `iters` recorded,
+/// returning per-iteration seconds. The spine of our criterion-free benches.
+pub fn sample<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut t = PhaseTimer::new();
+        t.add("x", Duration::from_millis(10));
+        t.add("x", Duration::from_millis(20));
+        t.add("y", Duration::from_millis(5));
+        assert_eq!(t.count("x"), 2);
+        assert_eq!(t.count("y"), 1);
+        assert!((t.mean_ms("x") - 15.0).abs() < 1e-9);
+        assert_eq!(t.total("z"), Duration::ZERO);
+        assert!(t.report().contains("x="));
+    }
+
+    #[test]
+    fn sample_counts() {
+        let mut n = 0u64;
+        let s = sample(2, 5, || {
+            n += 1;
+            n
+        });
+        assert_eq!(s.len(), 5);
+        assert_eq!(n, 7);
+        assert!(s.iter().all(|&x| x >= 0.0));
+    }
+}

@@ -1,0 +1,198 @@
+//! End-to-end integration tests: graph → partition → tensorize → AOT
+//! artifact → PJRT execute → optimizer, cross-checked against the pure-Rust
+//! reference model.
+//!
+//! These tests need artifacts. They use `artifacts/` if present (built by
+//! `make artifacts`); otherwise they lower a tiny calibration bucket into
+//! `target/test-artifacts/` by invoking the Python AOT pipeline once (and
+//! are skipped with a notice if Python/JAX is unavailable).
+
+use cofree_gnn::graph::datasets;
+use cofree_gnn::graph::features::{synthesize, FeatureParams};
+use cofree_gnn::graph::generators::degree_corrected_sbm;
+use cofree_gnn::graph::generators::power_law_degrees;
+use cofree_gnn::graph::Dataset;
+use cofree_gnn::partition::{algorithm, Reweighting, VertexCut};
+use cofree_gnn::train::engine::{model_config, TrainConfig, TrainEngine};
+use cofree_gnn::train::reference;
+use cofree_gnn::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+/// Tiny dataset matching the calibration bucket (L2, h16, d8, c4).
+fn tiny_dataset(seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let n = 180;
+    let w = power_law_degrees(n, 2.3, 2, 30, &mut rng.fork(1));
+    let (graph, comm) = degree_corrected_sbm(n, 4, &w, 0.85, &mut rng.fork(2));
+    let data = synthesize(
+        &comm,
+        4,
+        &FeatureParams { dim: 8, noise: 0.8, train_frac: 0.6, val_frac: 0.2 },
+        &mut rng.fork(3),
+    );
+    Dataset { name: "tiny".into(), graph, data, layers: 2, hidden: 16 }
+}
+
+/// Locate (or build) an artifacts directory containing the tiny bucket.
+fn artifacts_dir() -> Option<&'static PathBuf> {
+    static DIR: OnceLock<Option<PathBuf>> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        let test_dir = repo.join("target/test-artifacts");
+        let manifest = test_dir.join("manifest.txt");
+        let spec = "bucket name=cal-L2-h16-d8-c4-n256-e2048-train kind=train layers=2 feat=8 hidden=16 classes=4 n_pad=256 e_pad=2048\n\
+                    bucket name=cal-L2-h16-d8-c4-n256-e2048-eval kind=eval layers=2 feat=8 hidden=16 classes=4 n_pad=256 e_pad=2048\n";
+        std::fs::create_dir_all(&test_dir).ok()?;
+        let spec_path = test_dir.join("buckets.spec");
+        // (Re)write the spec; aot.py skips unchanged buckets via the manifest.
+        std::fs::write(&spec_path, spec).ok()?;
+        let status = std::process::Command::new("python")
+            .args(["-m", "compile.aot", "--spec"])
+            .arg(&spec_path)
+            .arg("--out")
+            .arg(&test_dir)
+            .current_dir(repo.join("python"))
+            .status();
+        match status {
+            Ok(s) if s.success() && manifest.exists() => Some(test_dir),
+            _ => {
+                eprintln!("NOTE: integration tests skipped (python AOT unavailable)");
+                None
+            }
+        }
+    })
+    .as_ref()
+}
+
+#[test]
+fn train_step_matches_rust_reference_forward() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = tiny_dataset(1);
+    let mut rng = Rng::new(2);
+    let vc = VertexCut::create(&ds.graph, 2, algorithm("ne").unwrap().as_ref(), &mut rng);
+    let mut engine = TrainEngine::new(dir).unwrap();
+    let mut run = engine
+        .prepare_partitions(&ds, &vc, Reweighting::Dar, None, 0)
+        .unwrap();
+    // One epoch with zero LR: the loss reported by the artifact must match
+    // the pure-Rust reference forward on the same batches.
+    let cfg = TrainConfig { epochs: 1, lr: 0.0, eval_every: 0, use_adam: false, ..Default::default() };
+    let (history, params, _) = engine.train(&mut run, None, &cfg).unwrap();
+    // Recompute with the reference model (params unchanged by lr=0).
+    let model = model_config(&ds);
+    let weights = cofree_gnn::partition::dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let mut ref_loss = 0.0;
+    let mut total_w = 0.0;
+    for (i, part) in vc.parts.iter().enumerate() {
+        let spec = engine
+            .registry
+            .find(&model, cofree_gnn::runtime::ArtifactKind::Train, part.num_nodes(), 2 * part.num_edges())
+            .unwrap();
+        let batch = cofree_gnn::train::tensorize_partition(part, &ds.data, &weights[i], spec.n_pad, spec.e_pad).unwrap();
+        let logits = reference::forward(&model, &params, &batch);
+        let (l, w, _) = reference::loss_and_metrics(&model, &logits, &batch);
+        ref_loss += l;
+        total_w += w;
+    }
+    let artifact_loss = history.epochs[0].train_loss * run.total_train_weight;
+    assert!(
+        (artifact_loss - ref_loss).abs() / ref_loss.max(1e-9) < 1e-3,
+        "artifact {artifact_loss} vs reference {ref_loss}"
+    );
+    assert!((total_w - run.total_train_weight).abs() < 1e-3);
+}
+
+#[test]
+fn cofree_training_reduces_loss_and_learns() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = tiny_dataset(3);
+    let mut rng = Rng::new(4);
+    let vc = VertexCut::create(&ds.graph, 2, algorithm("ne").unwrap().as_ref(), &mut rng);
+    let mut engine = TrainEngine::new(dir).unwrap();
+    let mut run = engine
+        .prepare_partitions(&ds, &vc, Reweighting::Dar, None, 0)
+        .unwrap();
+    let eval = engine.prepare_eval(&ds).unwrap();
+    let cfg = TrainConfig { epochs: 60, lr: 0.01, eval_every: 0, ..Default::default() };
+    let (history, _, _) = engine.train(&mut run, Some(&eval), &cfg).unwrap();
+    let first = history.epochs[0].train_loss;
+    let last = history.epochs.last().unwrap().train_loss;
+    assert!(last < 0.7 * first, "loss did not decrease: {first} -> {last}");
+    // Better than chance (4 classes -> 0.25) on val by the end.
+    let val = history.final_val_acc();
+    assert!(val > 0.4, "val acc {val}");
+}
+
+#[test]
+fn full_graph_and_partitioned_runs_converge_similarly() {
+    // Figure 4's property, in miniature: CoFree (p=2, DAR) and full-graph
+    // training should reach similar final training loss.
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = tiny_dataset(5);
+    let mut engine = TrainEngine::new(dir).unwrap();
+    let cfg = TrainConfig { epochs: 50, lr: 0.01, eval_every: 0, ..Default::default() };
+
+    let mut full = engine.prepare_full(&ds, None, 0).unwrap();
+    let (h_full, _, _) = engine.train(&mut full, None, &cfg).unwrap();
+
+    let mut rng = Rng::new(6);
+    let vc = VertexCut::create(&ds.graph, 2, algorithm("ne").unwrap().as_ref(), &mut rng);
+    let mut part = engine.prepare_partitions(&ds, &vc, Reweighting::Dar, None, 0).unwrap();
+    let (h_part, _, _) = engine.train(&mut part, None, &cfg).unwrap();
+
+    let lf = h_full.epochs.last().unwrap().train_loss;
+    let lp = h_part.epochs.last().unwrap().train_loss;
+    assert!(
+        (lf - lp).abs() < 0.35 * lf.max(lp),
+        "full {lf} vs partitioned {lp} diverge"
+    );
+}
+
+#[test]
+fn dropedge_k_runs_and_still_learns() {
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = tiny_dataset(7);
+    let mut rng = Rng::new(8);
+    let vc = VertexCut::create(&ds.graph, 2, algorithm("random").unwrap().as_ref(), &mut rng);
+    let mut engine = TrainEngine::new(dir).unwrap();
+    let mut run = engine
+        .prepare_partitions(&ds, &vc, Reweighting::Dar, Some((5, 0.5)), 0)
+        .unwrap();
+    let cfg = TrainConfig { epochs: 40, lr: 0.01, eval_every: 0, ..Default::default() };
+    let (history, _, _) = engine.train(&mut run, None, &cfg).unwrap();
+    let first = history.epochs[0].train_loss;
+    let last = history.epochs.last().unwrap().train_loss;
+    assert!(last < first, "dropedge run did not improve: {first} -> {last}");
+}
+
+#[test]
+fn gradient_accumulation_many_partitions() {
+    // Many partitions sharing one small bucket (the Figure 5 / Table 3
+    // simulated-by-accumulation setting).
+    let Some(dir) = artifacts_dir() else { return };
+    let ds = tiny_dataset(9);
+    let mut rng = Rng::new(10);
+    let vc = VertexCut::create(&ds.graph, 8, algorithm("dbh").unwrap().as_ref(), &mut rng);
+    let mut engine = TrainEngine::new(dir).unwrap();
+    let mut run = engine
+        .prepare_partitions(&ds, &vc, Reweighting::Dar, None, 0)
+        .unwrap();
+    assert_eq!(run.num_partitions, 8);
+    let cfg = TrainConfig { epochs: 30, lr: 0.01, eval_every: 0, ..Default::default() };
+    let (history, _, _) = engine.train(&mut run, None, &cfg).unwrap();
+    assert!(history.epochs.last().unwrap().train_loss < history.epochs[0].train_loss);
+}
+
+#[test]
+fn dataset_recipes_have_artifact_compatible_configs() {
+    // Guard: every recipe's model config has consistent shapes (params
+    // enumerable, positive sizes) — catches drift between datasets.rs and
+    // the bucket emitter.
+    for r in &datasets::RECIPES {
+        let ds = datasets::build_recipe(r, 0.05, 1);
+        let m = model_config(&ds);
+        assert!(m.num_params() > 0);
+        assert_eq!(m.layers, r.layers);
+    }
+}

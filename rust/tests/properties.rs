@@ -1,0 +1,193 @@
+//! Cross-module property tests: randomized graphs × partitioners × p,
+//! checking the system-level invariants end to end (no artifacts needed).
+//!
+//! This is the crate's proptest-style suite: a seeded generator produces
+//! arbitrary graphs (several families, random sizes), and every case must
+//! uphold the invariants the distributed-training semantics rely on.
+
+use cofree_gnn::graph::generators::{
+    barabasi_albert, chung_lu, erdos_renyi, planted_communities, power_law_degrees,
+};
+use cofree_gnn::graph::{io, Graph, GraphBuilder};
+use cofree_gnn::partition::{
+    algorithm, dar_weights, LdgEdgeCut, PartitionMetrics, Reweighting, VertexCut, ALGORITHMS,
+};
+use cofree_gnn::train::bucket::{bucket_shapes, full_graph_bucket};
+use cofree_gnn::util::rng::Rng;
+
+/// Draw a random graph from a random family.
+fn arbitrary_graph(rng: &mut Rng) -> Graph {
+    let family = rng.below(5);
+    let n = 50 + rng.below(400);
+    match family {
+        0 => erdos_renyi(n, n * (1 + rng.below(6)), &mut rng.fork(1)),
+        1 => barabasi_albert(n, 1 + rng.below(4), &mut rng.fork(2)),
+        2 => {
+            let w = power_law_degrees(n, 2.1 + rng.f64(), 2, (n / 4).max(8) as u32, &mut rng.fork(3));
+            chung_lu(&w, &mut rng.fork(4))
+        }
+        3 => planted_communities(n, 2 + rng.below(6), 6.0, 1.5, &mut rng.fork(5)).0,
+        _ => {
+            // Pathological: star + ring + isolated nodes.
+            let mut b = GraphBuilder::new(n);
+            for i in 1..(n as u32 / 2) {
+                b.edge(0, i);
+            }
+            for i in (n as u32 / 2)..(n as u32 - 5) {
+                b.edge(i, i + 1);
+            }
+            b.edges(&[]).build()
+        }
+    }
+}
+
+const CASES: u64 = 25;
+
+#[test]
+fn prop_vertex_cut_invariants_hold_for_all_algorithms() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xC0FFEE ^ case);
+        let g = arbitrary_graph(&mut rng);
+        let p = 1 + rng.below(12);
+        for name in ALGORITHMS {
+            let vc = VertexCut::create(&g, p, algorithm(name).unwrap().as_ref(), &mut rng.fork(7));
+            vc.check_invariants(&g)
+                .unwrap_or_else(|e| panic!("case {case} {name} p={p}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn prop_dar_weights_always_sum_to_one() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xDA2 ^ case);
+        let g = arbitrary_graph(&mut rng);
+        let p = 2 + rng.below(10);
+        let name = ALGORITHMS[rng.below(ALGORITHMS.len())];
+        let vc = VertexCut::create(&g, p, algorithm(name).unwrap().as_ref(), &mut rng.fork(1));
+        for scheme in [Reweighting::Dar, Reweighting::VanillaInv] {
+            let w = dar_weights(&g, &vc, scheme);
+            let mut per_node = vec![0f64; g.num_nodes()];
+            for (i, part) in vc.parts.iter().enumerate() {
+                for (l, &gid) in part.global_ids.iter().enumerate() {
+                    per_node[gid as usize] += w[i][l] as f64;
+                }
+            }
+            for v in 0..g.num_nodes() {
+                if g.degree(v as u32) > 0 {
+                    assert!(
+                        (per_node[v] - 1.0).abs() < 1e-4,
+                        "case {case} {name} {scheme:?} node {v}: {}",
+                        per_node[v]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_replication_factor_bounds() {
+    // 1 <= RF(G) <= min(p, max_degree) for any vertex cut; per-node
+    // RF(v) <= min(p, deg(v)).
+    for case in 0..CASES {
+        let mut rng = Rng::new(0x2F ^ case);
+        let g = arbitrary_graph(&mut rng);
+        if g.num_edges() == 0 {
+            continue;
+        }
+        let p = 1 + rng.below(12);
+        let name = ALGORITHMS[rng.below(ALGORITHMS.len())];
+        let vc = VertexCut::create(&g, p, algorithm(name).unwrap().as_ref(), &mut rng.fork(1));
+        let m = PartitionMetrics::vertex_cut(&g, &vc);
+        assert!(m.replication_factor >= 1.0 - 1e-9, "case {case}");
+        assert!(m.replication_factor <= p as f64 + 1e-9, "case {case}");
+        let rf = vc.node_replication(&g);
+        for v in 0..g.num_nodes() as u32 {
+            assert!(rf[v as usize] <= g.degree(v).min(p as u32), "case {case} node {v}");
+        }
+    }
+}
+
+#[test]
+fn prop_edge_cut_invariants_and_thm41() {
+    use cofree_gnn::partition::edge_cut::vertex_cut_from_edge_cut;
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xEC ^ case);
+        let g = arbitrary_graph(&mut rng);
+        let p = 2 + rng.below(8);
+        let ec = LdgEdgeCut::default().partition(&g, p, &mut rng.fork(1));
+        ec.check_invariants(&g).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        // Theorem 4.1 whenever the cut is non-trivial.
+        let (halos, vc) = vertex_cut_from_edge_cut(&g, &ec);
+        vc.check_invariants(&g).unwrap();
+        if halos > 0 {
+            let dup: usize =
+                vc.node_replication(&g).iter().map(|&r| (r.max(1) - 1) as usize).sum();
+            assert!(dup < halos, "case {case}: Thm 4.1 violated ({dup} >= {halos})");
+        }
+    }
+}
+
+#[test]
+fn prop_bucket_ladder_always_covers_ne_partitions() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(0xB0C ^ case);
+        let g = arbitrary_graph(&mut rng);
+        if g.num_edges() < 8 {
+            continue;
+        }
+        let p = 1 + rng.below(10);
+        let (n, m) = (g.num_nodes(), g.num_edges());
+        let mut ladder: Vec<(usize, usize)> = (1..=p).map(|q| bucket_shapes(n, m, q)).collect();
+        ladder.push(full_graph_bucket(n, m));
+        let vc = VertexCut::create(&g, p, algorithm("ne").unwrap().as_ref(), &mut rng.fork(1));
+        for part in &vc.parts {
+            assert!(
+                ladder
+                    .iter()
+                    .any(|&(np, ep)| part.num_nodes() <= np && 2 * part.num_edges() <= ep),
+                "case {case} p={p}: partition ({} n, {} e) unfittable",
+                part.num_nodes(),
+                part.num_edges()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_snapshot_roundtrip_any_graph() {
+    for case in 0..8u64 {
+        let mut rng = Rng::new(0x10 ^ case);
+        let g = arbitrary_graph(&mut rng);
+        let path = std::env::temp_dir().join(format!(
+            "cofree_prop_{}_{case}.bin",
+            std::process::id()
+        ));
+        io::write_snapshot(&g, None, &path).unwrap();
+        let (g2, nd) = io::read_snapshot(&path).unwrap();
+        assert!(nd.is_none());
+        assert_eq!(g.num_nodes(), g2.num_nodes());
+        assert_eq!(g.edges(), g2.edges());
+        std::fs::remove_file(&path).unwrap();
+    }
+}
+
+#[test]
+fn prop_partition_determinism() {
+    // Same seed => identical assignment, different seed => (almost surely)
+    // different assignment for randomized algorithms.
+    for case in 0..10u64 {
+        let mut rng = Rng::new(0xDE ^ case);
+        let g = arbitrary_graph(&mut rng);
+        if g.num_edges() < 20 {
+            continue;
+        }
+        for name in ALGORITHMS {
+            let algo = algorithm(name).unwrap();
+            let a = algo.assign(&g, 4, &mut Rng::new(1234));
+            let b = algo.assign(&g, 4, &mut Rng::new(1234));
+            assert_eq!(a, b, "case {case} {name} not deterministic");
+        }
+    }
+}
