@@ -1,0 +1,410 @@
+//! Partitioning-pipeline benchmark: graph build → vertex-cut assign →
+//! materialization, old (pre-PR sequential) vs new (parallel,
+//! allocation-lean) paths, on R-MAT and Chung–Lu graphs.
+//!
+//! Run: `cargo bench --bench bench_partition`. Knobs (environment):
+//! * `COFREE_BENCH_EDGES` — target raw edge count (default 10_000_000)
+//! * `COFREE_BENCH_ITERS` — timing repetitions per phase (default 2)
+//! * `COFREE_BENCH_PARTS` — partition count (default 8)
+//! * `COFREE_BENCH_ALGOS` — comma list of vertex cuts (default `greedy,hep`)
+//! * `COFREE_BENCH_OUT`   — output JSON path (default `BENCH_partition.json`)
+//!
+//! Emits `BENCH_partition.json` so the perf trajectory is tracked in-repo:
+//! per graph and per algorithm, old/new seconds and speedups for build,
+//! assign, materialize and end-to-end, plus a bit-identity check of the
+//! materialized partitions across rayon pool sizes 1/2/8. The "old" sides
+//! are the retained pre-PR implementations (`build_reference`,
+//! `from_assignment_reference`, and frozen copies of the pre-PR greedy/HEP
+//! inner loops below), so the comparison stays honest as the fast paths
+//! evolve.
+
+use cofree_gnn::graph::generators::{chung_lu_pairs, power_law_degrees, rmat_pairs, RmatParams};
+use cofree_gnn::graph::{Graph, GraphBuilder};
+use cofree_gnn::partition::{algorithm, VertexCut};
+use cofree_gnn::util::rng::Rng;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_string(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+/// Time `f` `iters` times; returns (mean seconds, last result).
+fn timed<T>(iters: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    assert!(iters >= 1);
+    let mut total = 0.0;
+    let mut out = None;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        out = Some(std::hint::black_box(f()));
+        total += t0.elapsed().as_secs_f64();
+    }
+    (total / iters as f64, out.unwrap())
+}
+
+#[inline]
+fn fnv(h: &mut u64, x: u64) {
+    *h ^= x;
+    *h = h.wrapping_mul(0x0000_0100_0000_01B3);
+}
+
+/// FNV-1a over a graph's full structure (edges + every adjacency row).
+fn fingerprint_graph(g: &Graph) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    fnv(&mut h, g.num_nodes() as u64);
+    for &(u, v) in g.edges() {
+        fnv(&mut h, ((u as u64) << 32) | v as u64);
+    }
+    for v in 0..g.num_nodes() as u32 {
+        for &w in g.neighbors(v) {
+            fnv(&mut h, w as u64);
+        }
+    }
+    h
+}
+
+/// FNV-1a over a vertex cut's full structure (assignment, id tables, local
+/// CSRs). Equal fingerprints ⇒ byte-identical cuts.
+fn fingerprint_vc(vc: &VertexCut) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &a in &vc.assignment {
+        fnv(&mut h, a as u64);
+    }
+    for part in &vc.parts {
+        fnv(&mut h, part.part_id as u64);
+        for &gid in &part.global_ids {
+            fnv(&mut h, gid as u64);
+        }
+        fnv(&mut h, fingerprint_graph(&part.local));
+    }
+    h
+}
+
+/// Frozen pre-PR implementations, kept verbatim so "old" timings do not
+/// silently improve as the library's shared fast paths evolve.
+mod pre_pr {
+    use cofree_gnn::graph::{Graph, GraphBuilder};
+    use cofree_gnn::partition::ne::NeighborExpansion;
+    use cofree_gnn::partition::VertexCutAlgorithm;
+    use cofree_gnn::util::rng::Rng;
+
+    /// Pre-PR PowerGraph greedy: materializes host-set `Vec`s per edge.
+    pub fn greedy_assign(g: &Graph, p: usize, rng: &mut Rng) -> Vec<u32> {
+        let m = g.num_edges();
+        let n = g.num_nodes();
+        let mut order: Vec<u32> = (0..m as u32).collect();
+        rng.shuffle(&mut order);
+        let use_bits = p <= 64;
+        let mut abits = vec![0u64; if use_bits { n } else { 0 }];
+        let mut avec: Vec<Vec<u32>> = if use_bits { Vec::new() } else { vec![Vec::new(); n] };
+        let mut load = vec![0usize; p];
+        let mut out = vec![0u32; m];
+        let hosts = |abits: &[u64], avec: &[Vec<u32>], v: usize| -> Vec<u32> {
+            if use_bits {
+                let mut b = abits[v];
+                let mut out = Vec::new();
+                while b != 0 {
+                    let i = b.trailing_zeros();
+                    out.push(i);
+                    b &= b - 1;
+                }
+                out
+            } else {
+                avec[v].clone()
+            }
+        };
+        for &k in &order {
+            let (u, v) = g.edges()[k as usize];
+            let hu = hosts(&abits, &avec, u as usize);
+            let hv = hosts(&abits, &avec, v as usize);
+            let least = |cands: &[u32], load: &[usize]| -> u32 {
+                *cands.iter().min_by_key(|&&c| load[c as usize]).unwrap()
+            };
+            let common: Vec<u32> = hu.iter().copied().filter(|c| hv.contains(c)).collect();
+            let choice = if !common.is_empty() {
+                least(&common, &load)
+            } else if !hu.is_empty() && !hv.is_empty() {
+                let pick = if g.degree(u) >= g.degree(v) { &hu } else { &hv };
+                least(pick, &load)
+            } else if !hu.is_empty() {
+                least(&hu, &load)
+            } else if !hv.is_empty() {
+                least(&hv, &load)
+            } else {
+                (0..p as u32).min_by_key(|&c| load[c as usize]).unwrap()
+            };
+            out[k as usize] = choice;
+            load[choice as usize] += 1;
+            if use_bits {
+                abits[u as usize] |= 1 << choice;
+                abits[v as usize] |= 1 << choice;
+            } else {
+                for &node in &[u, v] {
+                    let a = &mut avec[node as usize];
+                    if let Err(pos) = a.binary_search(&choice) {
+                        a.insert(pos, choice);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Pre-PR HEP: clones the cold edge list twice (pairs for the builder,
+    /// (u, v, k) triples for the sort-based back-mapping) and re-sorts it
+    /// through the sequential `GraphBuilder` path.
+    pub fn hep_assign(g: &Graph, p: usize, tau: f64, rng: &mut Rng) -> Vec<u32> {
+        let m = g.num_edges();
+        if p == 1 {
+            return vec![0; m];
+        }
+        let threshold = (tau * g.avg_degree()).max(1.0) as u32;
+        let salt = rng.next_u64();
+        let hash = |x: u32| -> u32 {
+            let mut z = (salt ^ x as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+            ((z ^ (z >> 31)) % p as u64) as u32
+        };
+        let mut assign = vec![u32::MAX; m];
+        let mut cold_edges: Vec<u32> = Vec::new();
+        for (k, &(u, v)) in g.edges().iter().enumerate() {
+            let (du, dv) = (g.degree(u), g.degree(v));
+            let low = du.min(dv);
+            if low > threshold {
+                let key = if du < dv || (du == dv && u < v) { u } else { v };
+                assign[k] = hash(key);
+            } else {
+                cold_edges.push(k as u32);
+            }
+        }
+        if !cold_edges.is_empty() {
+            let sub_pairs: Vec<(u32, u32)> =
+                cold_edges.iter().map(|&k| g.edges()[k as usize]).collect();
+            let sub = GraphBuilder::new(g.num_nodes()).edges(&sub_pairs).build_reference();
+            let mut sorted_cold: Vec<(u32, u32, u32)> = cold_edges
+                .iter()
+                .map(|&k| {
+                    let (u, v) = g.edges()[k as usize];
+                    (u, v, k)
+                })
+                .collect();
+            sorted_cold.sort_unstable();
+            let ne = NeighborExpansion::default();
+            let sub_assign = ne.assign(&sub, p, rng);
+            for (i, &(_, _, k)) in sorted_cold.iter().enumerate() {
+                assign[k as usize] = sub_assign[i];
+            }
+        }
+        assign
+    }
+}
+
+struct PhaseTimes {
+    old_s: f64,
+    new_s: f64,
+}
+
+impl PhaseTimes {
+    fn speedup(&self) -> f64 {
+        self.old_s / self.new_s.max(1e-12)
+    }
+    fn json(&self) -> String {
+        format!(
+            "{{\"old_s\": {:.6}, \"new_s\": {:.6}, \"speedup\": {:.3}}}",
+            self.old_s,
+            self.new_s,
+            self.speedup()
+        )
+    }
+}
+
+struct AlgoResult {
+    name: String,
+    assign: PhaseTimes,
+    materialize: PhaseTimes,
+    end_to_end: PhaseTimes,
+    assign_has_frozen_old: bool,
+    identical_across_threads: bool,
+}
+
+fn main() {
+    let target = env_usize("COFREE_BENCH_EDGES", 10_000_000);
+    let iters = env_usize("COFREE_BENCH_ITERS", 2);
+    let p = env_usize("COFREE_BENCH_PARTS", 8);
+    let algo_list = env_string("COFREE_BENCH_ALGOS", "greedy,hep");
+    let out_path = env_string("COFREE_BENCH_OUT", "BENCH_partition.json");
+    let algos: Vec<&str> = algo_list.split(',').map(|s| s.trim()).filter(|s| !s.is_empty()).collect();
+
+    println!("== bench_partition: build -> assign -> materialize ==");
+    println!(
+        "target_edges={target} iters={iters} p={p} algos={algos:?} rayon_threads={}",
+        rayon::current_num_threads()
+    );
+
+    let mut graph_jsons: Vec<String> = Vec::new();
+
+    let specs: [(&str, u64); 2] = [("rmat", 0xA11CE), ("chung-lu", 0xB0B)];
+    for (family, seed) in specs {
+        // --- Raw edge stream -------------------------------------------------
+        let mut rng = Rng::new(seed);
+        let (n, pairs) = match family {
+            "rmat" => {
+                let scale = ((target / 10).max(2) as f64).log2().ceil() as u32;
+                (1usize << scale, rmat_pairs(scale, target, RmatParams::default(), &mut rng))
+            }
+            _ => {
+                let n = (target / 6).max(64);
+                let w = power_law_degrees(n, 2.2, 4, 1000, &mut rng.fork(1));
+                (n, chung_lu_pairs(&w, &mut rng.fork(2)))
+            }
+        };
+        println!("\n-- {family}: n={n}, raw pairs={} --", pairs.len());
+
+        // --- Build phase -----------------------------------------------------
+        let (build_old_s, g_old) =
+            timed(iters, || GraphBuilder::new(n).edges(&pairs).build_reference());
+        let (build_new_s, g) = timed(iters, || GraphBuilder::new(n).edges(&pairs).build());
+        assert_eq!(
+            fingerprint_graph(&g_old),
+            fingerprint_graph(&g),
+            "{family}: parallel build diverged from reference"
+        );
+        drop(g_old);
+        let build = PhaseTimes { old_s: build_old_s, new_s: build_new_s };
+        println!(
+            "build          old {:>8.3}s  new {:>8.3}s  ({:.2}x)   m={}",
+            build.old_s,
+            build.new_s,
+            build.speedup(),
+            g.num_edges()
+        );
+
+        // --- Per-algorithm assign + materialize ------------------------------
+        let mut algo_results: Vec<AlgoResult> = Vec::new();
+        for &name in &algos {
+            let algo = match algorithm(name) {
+                Some(a) => a,
+                None => {
+                    eprintln!("unknown algorithm {name:?}, skipping");
+                    continue;
+                }
+            };
+            let (assign_new_s, assignment) =
+                timed(iters, || algo.assign(&g, p, &mut Rng::new(7)));
+            let (assign_old_s, frozen) = match name {
+                "greedy" => {
+                    let (t, a_old) =
+                        timed(iters, || pre_pr::greedy_assign(&g, p, &mut Rng::new(7)));
+                    assert_eq!(
+                        a_old, assignment,
+                        "{family}: new greedy diverged from pre-PR reference"
+                    );
+                    (t, true)
+                }
+                "hep" => {
+                    let (t, a_old) =
+                        timed(iters, || pre_pr::hep_assign(&g, p, 4.0, &mut Rng::new(7)));
+                    assert_eq!(
+                        a_old, assignment,
+                        "{family}: new hep diverged from pre-PR reference"
+                    );
+                    (t, true)
+                }
+                // No frozen pre-PR copy: the algorithm's inner loop was not
+                // rewritten, so old ≈ new by construction.
+                _ => (timed(iters, || algo.assign(&g, p, &mut Rng::new(7))).0, false),
+            };
+
+            let (mat_old_s, vc_old) = timed(iters, || {
+                VertexCut::from_assignment_reference(&g, p, assignment.clone())
+            });
+            let (mat_new_s, vc_new) =
+                timed(iters, || VertexCut::from_assignment(&g, p, assignment.clone()));
+            let fp = fingerprint_vc(&vc_new);
+            assert_eq!(
+                fingerprint_vc(&vc_old),
+                fp,
+                "{family}/{name}: fast materialization diverged from reference"
+            );
+            drop(vc_old);
+            drop(vc_new);
+
+            // Bit-identity across rayon pool sizes.
+            let mut identical = true;
+            for threads in [1usize, 2, 8] {
+                let pool =
+                    rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+                let vc =
+                    pool.install(|| VertexCut::from_assignment(&g, p, assignment.clone()));
+                if fingerprint_vc(&vc) != fp {
+                    eprintln!("{family}/{name}: output differs at {threads} threads!");
+                    identical = false;
+                }
+            }
+
+            let res = AlgoResult {
+                name: name.to_string(),
+                assign: PhaseTimes { old_s: assign_old_s, new_s: assign_new_s },
+                materialize: PhaseTimes { old_s: mat_old_s, new_s: mat_new_s },
+                end_to_end: PhaseTimes {
+                    old_s: build.old_s + assign_old_s + mat_old_s,
+                    new_s: build.new_s + assign_new_s + mat_new_s,
+                },
+                assign_has_frozen_old: frozen,
+                identical_across_threads: identical,
+            };
+            println!(
+                "{name:<8} assign old {:>8.3}s new {:>8.3}s ({:.2}x) | materialize old {:>8.3}s new {:>8.3}s ({:.2}x) | e2e {:.2}x | threads-identical={}",
+                res.assign.old_s,
+                res.assign.new_s,
+                res.assign.speedup(),
+                res.materialize.old_s,
+                res.materialize.new_s,
+                res.materialize.speedup(),
+                res.end_to_end.speedup(),
+                res.identical_across_threads
+            );
+            algo_results.push(res);
+        }
+
+        // --- JSON ------------------------------------------------------------
+        let mut algos_json = String::new();
+        for (i, r) in algo_results.iter().enumerate() {
+            if i > 0 {
+                algos_json.push_str(", ");
+            }
+            write!(
+                algos_json,
+                "{{\"name\": \"{}\", \"assign\": {}, \"assign_has_frozen_old\": {}, \"materialize\": {}, \"end_to_end\": {}, \"identical_across_threads\": {}}}",
+                r.name,
+                r.assign.json(),
+                r.assign_has_frozen_old,
+                r.materialize.json(),
+                r.end_to_end.json(),
+                r.identical_across_threads
+            )
+            .unwrap();
+        }
+        graph_jsons.push(format!(
+            "{{\"name\": \"{family}\", \"nodes\": {}, \"edges\": {}, \"raw_pairs\": {}, \"build\": {}, \"algos\": [{algos_json}]}}",
+            g.num_nodes(),
+            g.num_edges(),
+            pairs.len(),
+            build.json()
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"partition_pipeline\",\n  \"config\": {{\"edges_target\": {target}, \"partitions\": {p}, \"iters\": {iters}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"graphs\": [\n    {}\n  ]\n}}\n",
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1),
+        rayon::current_num_threads(),
+        graph_jsons.join(",\n    ")
+    );
+    std::fs::write(&out_path, &json).expect("writing bench JSON");
+    println!("\nwrote {out_path}");
+}

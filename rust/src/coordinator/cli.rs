@@ -11,15 +11,19 @@
 //! cofree bench            table1|table2|table3|table4|fig2|fig3|fig4|fig5|all
 //! ```
 
-use super::config::Config;
 use super::experiments::{self, ExpOptions};
 use crate::graph::{datasets, io, stats};
-use crate::partition::{algorithm, LdgEdgeCut, PartitionMetrics, Reweighting, VertexCut};
-use crate::train::engine::{TrainConfig, TrainEngine};
+use crate::partition::{algorithm, LdgEdgeCut, PartitionMetrics, VertexCut};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
+#[cfg(feature = "xla")]
+use {
+    super::config::Config,
+    crate::partition::Reweighting,
+    crate::train::engine::{TrainConfig, TrainEngine},
+};
 
 /// Parsed flags: `--key value` pairs plus positional args.
 pub struct Args {
@@ -177,6 +181,17 @@ fn cmd_emit_bucket_spec(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `cofree train` needs the PJRT execution layer.
+#[cfg(not(feature = "xla"))]
+fn cmd_train(_args: &Args) -> Result<i32> {
+    bail!(
+        "`cofree train` requires the `xla` cargo feature (PJRT execution layer): \
+         vendor the `xla` crate (xla-rs bindings + XLA toolchain), add it as an \
+         optional dependency wired to the feature, then rebuild with --features xla"
+    )
+}
+
+#[cfg(feature = "xla")]
 fn cmd_train(args: &Args) -> Result<i32> {
     // Optional config file; CLI flags override.
     let file_cfg = match args.get("config") {

@@ -10,21 +10,27 @@
 //! * `COFREE_TRIALS`, `COFREE_ACC_EPOCHS`, `COFREE_TIME_ITERS` — overrides.
 
 use crate::graph::{datasets, Dataset};
-use crate::partition::{
-    algorithm, LdgEdgeCut, PartitionMetrics, Reweighting, VertexCut,
-};
-use crate::runtime::ArtifactKind;
-use crate::simnet::{iteration_time, Cluster, Method, PartitionCommStats};
-use crate::train::engine::{model_config, RunMode, TrainConfig, TrainEngine};
-use crate::train::sampling::{build_pool, Sampler};
-use crate::train::tensorize::tensorize_subgraph;
-use crate::util::mean_std;
+use crate::partition::{algorithm, LdgEdgeCut, PartitionMetrics, VertexCut};
 use crate::util::rng::Rng;
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::fmt::Write as _;
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
-use super::grid::{ACC_SCALE, BENCH_SCALE, BENCH_SEED};
+use super::grid::BENCH_SEED;
+
+#[cfg(feature = "xla")]
+use {
+    super::grid::{ACC_SCALE, BENCH_SCALE},
+    crate::partition::Reweighting,
+    crate::runtime::ArtifactKind,
+    crate::simnet::{iteration_time, Cluster, Method, PartitionCommStats},
+    crate::train::engine::{model_config, RunMode, TrainConfig, TrainEngine},
+    crate::train::sampling::{build_pool, Sampler},
+    crate::train::tensorize::tensorize_subgraph,
+    crate::util::mean_std,
+    anyhow::Context,
+    std::path::Path,
+};
 
 /// Harness options.
 #[derive(Clone, Debug)]
@@ -57,6 +63,7 @@ impl Default for ExpOptions {
     }
 }
 
+#[cfg(feature = "xla")]
 fn write_csv(path: &Path, header: &str, rows: &[String]) -> Result<()> {
     if let Some(p) = path.parent() {
         std::fs::create_dir_all(p)?;
@@ -92,6 +99,7 @@ pub fn gpu_speedup() -> f64 {
 
 /// Measure CoFree per-iteration *compute* (max over workers, seconds):
 /// returns (mean_s, std_s) over `trials × time_iters` iterations.
+#[cfg(feature = "xla")]
 fn measure_cofree_compute(
     engine: &mut TrainEngine,
     ds: &Dataset,
@@ -118,6 +126,7 @@ fn measure_cofree_compute(
 
 /// CoFree simulated-cluster iteration time (ms): calibrated compute + the
 /// ring all-reduce of the gradients (its only communication).
+#[cfg(feature = "xla")]
 fn cofree_sim_ms(compute_s: f64, ds: &Dataset, p: usize, cluster: &Cluster) -> f64 {
     let model = model_config(ds);
     let grad_bytes = model.num_params() as f64 * 4.0;
@@ -130,6 +139,7 @@ fn cofree_sim_ms(compute_s: f64, ds: &Dataset, p: usize, cluster: &Cluster) -> f
 /// actual halo compute graphs (owned ∪ halo nodes, intra + cut edges) of a
 /// real edge-cut partitioning. Returns `(max_worker_compute_s,
 /// straggler_comm_stats)`.
+#[cfg(feature = "xla")]
 fn measure_baseline_compute(
     engine: &mut TrainEngine,
     ds: &Dataset,
@@ -169,6 +179,7 @@ fn measure_baseline_compute(
 
 /// A baseline's simulated-cluster iteration time (ms): measured halo-graph
 /// compute (calibrated) + the method's communication pattern.
+#[cfg(feature = "xla")]
 fn baseline_sim_ms(
     method: Method,
     compute_s: f64,
@@ -184,6 +195,7 @@ fn baseline_sim_ms(
 // Table 1: per-iteration runtime.
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 pub fn table1(opts: &ExpOptions) -> Result<String> {
     let cells: [(&str, [usize; 2]); 3] = [
         ("reddit-sim", [2, 4]),
@@ -268,6 +280,7 @@ pub fn table1(opts: &ExpOptions) -> Result<String> {
 // ---------------------------------------------------------------------------
 
 /// Train CoFree on a vertex cut and return (best-val, test-at-best).
+#[cfg(feature = "xla")]
 fn train_cofree_acc(
     engine: &mut TrainEngine,
     ds: &Dataset,
@@ -287,6 +300,7 @@ fn train_cofree_acc(
     Ok(hist.best())
 }
 
+#[cfg(feature = "xla")]
 fn train_full_acc(engine: &mut TrainEngine, ds: &Dataset, epochs: usize, seed: u64) -> Result<(f64, f64)> {
     let mut run = engine.prepare_full(ds, None, seed)?;
     let eval = engine.prepare_eval(ds)?;
@@ -295,6 +309,7 @@ fn train_full_acc(engine: &mut TrainEngine, ds: &Dataset, epochs: usize, seed: u
     Ok(hist.best())
 }
 
+#[cfg(feature = "xla")]
 fn train_sampler_acc(
     engine: &mut TrainEngine,
     ds: &Dataset,
@@ -317,6 +332,7 @@ fn train_sampler_acc(
     Ok(hist.best())
 }
 
+#[cfg(feature = "xla")]
 pub fn table2(opts: &ExpOptions) -> Result<String> {
     let cells: [(&str, [usize; 2]); 3] = [
         ("reddit-sim", [2, 4]),
@@ -367,6 +383,7 @@ pub fn table2(opts: &ExpOptions) -> Result<String> {
 /// keeps a comparable nodes-per-partition granularity (EXPERIMENTS.md).
 pub const ABLATION_PARTS: usize = 64;
 
+#[cfg(feature = "xla")]
 pub fn table3(opts: &ExpOptions) -> Result<String> {
     let mut out = String::new();
     let mut csv = Vec::new();
@@ -396,6 +413,7 @@ pub fn table3(opts: &ExpOptions) -> Result<String> {
 
 /// Edge-cut (METIS-like) training: cross-partition edges dropped, no
 /// replicas, weight 1 per node — the paper's Edge Cut row.
+#[cfg(feature = "xla")]
 fn train_edge_cut_acc(
     engine: &mut TrainEngine,
     ds: &Dataset,
@@ -425,6 +443,7 @@ fn train_edge_cut_acc(
     Ok(hist.best())
 }
 
+#[cfg(feature = "xla")]
 pub fn table4(opts: &ExpOptions) -> Result<String> {
     let mut out = String::new();
     let mut csv = Vec::new();
@@ -460,6 +479,7 @@ pub fn table4(opts: &ExpOptions) -> Result<String> {
 // Figure 2: multi-node papers100M stand-in, 192 partitions.
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 pub fn fig2(opts: &ExpOptions) -> Result<String> {
     let mut out = String::new();
     let ds = ds_build("papers-sim", BENCH_SCALE)?;
@@ -497,6 +517,7 @@ pub fn fig2(opts: &ExpOptions) -> Result<String> {
 // Figure 3: scaling with partition count.
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 pub fn fig3(opts: &ExpOptions) -> Result<String> {
     let mut out = String::new();
     let mut csv = Vec::new();
@@ -522,6 +543,7 @@ pub fn fig3(opts: &ExpOptions) -> Result<String> {
 // Figure 4: convergence curves, CoFree vs full graph.
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 pub fn fig4(opts: &ExpOptions) -> Result<String> {
     let mut out = String::new();
     let ds = ds_build("reddit-sim", ACC_SCALE)?;
@@ -565,6 +587,7 @@ pub fn fig4(opts: &ExpOptions) -> Result<String> {
 // Figure 5: accuracy vs number of partitions.
 // ---------------------------------------------------------------------------
 
+#[cfg(feature = "xla")]
 pub fn fig5(opts: &ExpOptions) -> Result<String> {
     let mut out = String::new();
     let mut csv = Vec::new();
@@ -613,6 +636,7 @@ pub fn partition_report(ds_name: &str, scale: f64, p: usize) -> Result<String> {
 }
 
 /// Dispatch an experiment by name.
+#[cfg(feature = "xla")]
 pub fn run(name: &str, opts: &ExpOptions) -> Result<String> {
     match name {
         "table1" => table1(opts),
@@ -626,6 +650,23 @@ pub fn run(name: &str, opts: &ExpOptions) -> Result<String> {
         _ => anyhow::bail!("unknown experiment {name} (table1-4, fig2-5)"),
     }
     .with_context(|| format!("running experiment {name}"))
+}
+
+/// Without the `xla` feature the table/figure harnesses cannot execute
+/// (they measure real PJRT runs); fail with an actionable message.
+#[cfg(not(feature = "xla"))]
+pub fn run(name: &str, opts: &ExpOptions) -> Result<String> {
+    let _ = opts;
+    match name {
+        "table1" | "table2" | "table3" | "table4" | "fig2" | "fig3" | "fig4" | "fig5" => {
+            anyhow::bail!(
+                "experiment {name} requires the `xla` cargo feature (PJRT execution layer): \
+                 vendor the `xla` crate, wire it to the feature in rust/Cargo.toml, \
+                 then rebuild with --features xla"
+            )
+        }
+        _ => anyhow::bail!("unknown experiment {name} (table1-4, fig2-5)"),
+    }
 }
 
 #[cfg(test)]

@@ -2,9 +2,14 @@
 //!
 //! All generators and loaders feed through [`GraphBuilder`], which
 //! canonicalizes (u < v), strips self-loops, de-duplicates, and builds the
-//! symmetric CSR in two counting passes.
+//! symmetric CSR. [`GraphBuilder::build`] is the parallel fast path: a rayon
+//! sort of the canonical edge list followed by a counting-sort CSR fill that
+//! never re-sorts adjacency rows. [`GraphBuilder::build_reference`] retains
+//! the pre-optimization sequential construction; tests and the
+//! `bench_partition` harness compare the two for byte-identical output.
 
 use super::csr::Graph;
+use rayon::prelude::*;
 
 /// Accumulates edges, then builds a [`Graph`].
 pub struct GraphBuilder {
@@ -44,8 +49,20 @@ impl GraphBuilder {
         self.edges.len()
     }
 
-    /// Finalize: sort + dedup the canonical edge list, build symmetric CSR.
+    /// Finalize: parallel sort + dedup of the canonical edge list, then a
+    /// counting-sort CSR fill with no per-row re-sort. Output is identical
+    /// to [`GraphBuilder::build_reference`] (unstable sort of a list whose
+    /// duplicates are equal is deterministic), for any rayon thread count.
     pub fn build(mut self) -> Graph {
+        self.edges.par_sort_unstable();
+        self.edges.dedup();
+        Graph::from_sorted_edges(self.n, self.edges)
+    }
+
+    /// The pre-optimization sequential build: global sort + interleaved
+    /// scatter + per-row sort. Kept as the oracle for the fast path; used by
+    /// parity tests and as the "old" side of `bench_partition`.
+    pub fn build_reference(mut self) -> Graph {
         self.edges.sort_unstable();
         self.edges.dedup();
         let n = self.n;
@@ -103,6 +120,27 @@ mod tests {
         let g = GraphBuilder::new(0).edges(&[]).build();
         assert_eq!(g.num_nodes(), 0);
         assert_eq!(g.num_edges(), 0);
+    }
+
+    #[test]
+    fn fast_build_matches_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(77);
+        for (n, m) in [(1usize, 0usize), (2, 1), (50, 400), (300, 5000)] {
+            let mut pairs = Vec::with_capacity(m);
+            for _ in 0..m {
+                // Deliberately includes self-loops and duplicates.
+                pairs.push((rng.below(n) as u32, rng.below(n) as u32));
+            }
+            let fast = GraphBuilder::new(n).edges(&pairs).build();
+            let slow = GraphBuilder::new(n).edges(&pairs).build_reference();
+            assert_eq!(fast.num_nodes(), slow.num_nodes());
+            assert_eq!(fast.edges(), slow.edges());
+            for v in 0..n as u32 {
+                assert_eq!(fast.neighbors(v), slow.neighbors(v), "row {v}");
+            }
+            fast.check_invariants().unwrap();
+        }
     }
 
     #[test]

@@ -25,6 +25,61 @@ impl Graph {
         Graph { offsets, targets, edges }
     }
 
+    /// Build the symmetric CSR from a canonical edge list that is already
+    /// sorted lexicographically, deduplicated and self-loop free (`u < v`
+    /// for every edge). This is the shared fast path of the partitioning
+    /// pipeline ([`crate::graph::builder::GraphBuilder::build`], vertex-cut
+    /// materialization, HEP's cold subgraph): two counting passes and one
+    /// scatter, **no per-row sort**. Row `v` comes out sorted because its
+    /// smaller neighbors are scattered in ascending order (counting-sort of
+    /// the edges by second endpoint) into the row prefix, and its larger
+    /// neighbors are a contiguous ascending run of the edge list copied into
+    /// the row suffix.
+    pub(crate) fn from_sorted_edges(n: usize, edges: Vec<(u32, u32)>) -> Graph {
+        debug_assert!(edges.windows(2).all(|w| w[0] < w[1]), "edges must be sorted + unique");
+        debug_assert!(edges.iter().all(|&(u, v)| u < v && (v as usize) < n));
+        let m = edges.len();
+        // deg_hi[v]: neighbors greater than v; deg_lo[v]: neighbors smaller.
+        let mut deg_lo = vec![0u32; n];
+        let mut deg_hi = vec![0u32; n];
+        for &(u, v) in &edges {
+            deg_hi[u as usize] += 1;
+            deg_lo[v as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg_lo[i] + deg_hi[i];
+        }
+        // Counting-sort the edges by second endpoint: back[in_off[v]..in_off[v+1]]
+        // lists v's smaller neighbors ascending (the scan preserves order).
+        let mut in_off = vec![0u32; n + 1];
+        for i in 0..n {
+            in_off[i + 1] = in_off[i] + deg_lo[i];
+        }
+        let mut back = vec![0u32; m];
+        let mut cursor = in_off[..n].to_vec();
+        for &(u, v) in &edges {
+            back[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        // Forward runs: edges[e_off[v]..e_off[v+1]] are v's larger neighbors.
+        let mut e_off = vec![0u32; n + 1];
+        for i in 0..n {
+            e_off[i + 1] = e_off[i] + deg_hi[i];
+        }
+        let mut targets = vec![0u32; 2 * m];
+        for v in 0..n {
+            let row = &mut targets[offsets[v] as usize..offsets[v + 1] as usize];
+            let lo = deg_lo[v] as usize;
+            row[..lo].copy_from_slice(&back[in_off[v] as usize..in_off[v + 1] as usize]);
+            let fwd = &edges[e_off[v] as usize..e_off[v + 1] as usize];
+            for (slot, &(_, w)) in row[lo..].iter_mut().zip(fwd) {
+                *slot = w;
+            }
+        }
+        Graph::from_parts(offsets, targets, edges)
+    }
+
     /// Number of nodes.
     #[inline]
     pub fn num_nodes(&self) -> usize {

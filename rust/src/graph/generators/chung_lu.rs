@@ -27,10 +27,10 @@ pub fn power_law_degrees(n: usize, gamma: f64, d_min: u32, d_max: u32, rng: &mut
         .collect()
 }
 
-/// Chung–Lu: connect `u, v` with probability `≈ w_u w_v / Σw`, realized by
-/// sampling `Σw / 2` endpoint pairs from the weight distribution. Expected
-/// degrees match `weights` up to collision/dedup losses.
-pub fn chung_lu(weights: &[u32], rng: &mut Rng) -> Graph {
+/// Sample the raw Chung–Lu endpoint pairs (`Σw / 2` draws from the weight
+/// distribution; may contain self-loops and duplicates). Exposed separately
+/// so `bench_partition` can time graph construction on the raw stream.
+pub fn chung_lu_pairs(weights: &[u32], rng: &mut Rng) -> Vec<(u32, u32)> {
     let n = weights.len();
     let total: u64 = weights.iter().map(|&w| w as u64).sum();
     // Alias-free sampling: cumulative table + binary search. Fine at our
@@ -46,15 +46,21 @@ pub fn chung_lu(weights: &[u32], rng: &mut Rng) -> Graph {
         cum.partition_point(|&c| c <= t) as u32
     };
     let m = (total / 2) as usize;
-    let mut b = GraphBuilder::new(n);
+    let mut pairs = Vec::with_capacity(m);
     for _ in 0..m {
         let u = draw(rng, &cum);
         let v = draw(rng, &cum);
-        if u != v {
-            b.edge(u, v);
-        }
+        pairs.push((u, v));
     }
-    b.edges(&[]).build()
+    pairs
+}
+
+/// Chung–Lu: connect `u, v` with probability `≈ w_u w_v / Σw`, realized by
+/// sampling `Σw / 2` endpoint pairs from the weight distribution. Expected
+/// degrees match `weights` up to collision/dedup losses.
+pub fn chung_lu(weights: &[u32], rng: &mut Rng) -> Graph {
+    let n = weights.len();
+    GraphBuilder::new(n).edges(&chung_lu_pairs(weights, rng)).build()
 }
 
 #[cfg(test)]

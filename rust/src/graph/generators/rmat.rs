@@ -24,13 +24,14 @@ impl Default for RmatParams {
     }
 }
 
-/// Generate an R-MAT graph with `2^scale` nodes and ~`m` undirected edges
-/// (dedup and self-loop removal can shrink the final count slightly).
-pub fn rmat(scale: u32, m: usize, params: RmatParams, rng: &mut Rng) -> Graph {
-    let n = 1usize << scale;
+/// Sample `m` raw R-MAT endpoint pairs over `2^scale` nodes. The stream may
+/// contain self-loops and duplicates — it is exactly what [`rmat`] feeds its
+/// builder, exposed separately so `bench_partition` can time graph
+/// construction on a realistic raw edge stream.
+pub fn rmat_pairs(scale: u32, m: usize, params: RmatParams, rng: &mut Rng) -> Vec<(u32, u32)> {
     let RmatParams { a, b, c, d } = params;
     assert!((a + b + c + d - 1.0).abs() < 1e-9, "R-MAT params must sum to 1");
-    let mut builder = GraphBuilder::new(n);
+    let mut pairs = Vec::with_capacity(m);
     for _ in 0..m {
         let (mut u, mut v) = (0usize, 0usize);
         for _ in 0..scale {
@@ -48,11 +49,16 @@ pub fn rmat(scale: u32, m: usize, params: RmatParams, rng: &mut Rng) -> Graph {
                 v |= 1;
             }
         }
-        if u != v {
-            builder.edge(u as u32, v as u32);
-        }
+        pairs.push((u as u32, v as u32));
     }
-    builder.edges(&[]).build()
+    pairs
+}
+
+/// Generate an R-MAT graph with `2^scale` nodes and ~`m` undirected edges
+/// (dedup and self-loop removal can shrink the final count slightly).
+pub fn rmat(scale: u32, m: usize, params: RmatParams, rng: &mut Rng) -> Graph {
+    let n = 1usize << scale;
+    GraphBuilder::new(n).edges(&rmat_pairs(scale, m, params, rng)).build()
 }
 
 #[cfg(test)]

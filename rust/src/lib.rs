@@ -12,10 +12,11 @@
 //!   the paper.
 //! * **JAX / Pallas (build-time, `python/compile/`)** — the GraphSAGE
 //!   forward/backward `train_step` with the Pallas matmul hot-spot kernel,
-//!   lowered once to HLO text and loaded here via the `xla` crate.
+//!   lowered once to HLO text and loaded here via the `xla` crate (enable
+//!   the `xla` cargo feature; the default build is execution-layer free).
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
-//! paper-vs-measured record.
+//! See `DESIGN.md` at the repository root for the system inventory and the
+//! partitioning-pipeline architecture.
 
 pub mod coordinator;
 pub mod graph;

@@ -32,10 +32,12 @@ impl VertexCutAlgorithm for Dbh {
         // A per-run salt keeps different seeds from producing identical cuts
         // while the assignment stays a pure function of (salt, node id).
         let salt = rng.next_u64();
+        // One precomputed degree slice for the whole edge scan.
+        let degree = g.degrees();
         g.edges()
             .iter()
             .map(|&(u, v)| {
-                let (du, dv) = (g.degree(u), g.degree(v));
+                let (du, dv) = (degree[u as usize], degree[v as usize]);
                 let key = if du < dv || (du == dv && u < v) { u } else { v };
                 (hash_u64(salt ^ key as u64) % p as u64) as u32
             })

@@ -10,6 +10,12 @@
 //!    total degree, as the original does with unplaced-edge counts),
 //! 3. exactly one non-empty → least-loaded partition hosting that endpoint,
 //! 4. both new → globally least-loaded partition.
+//!
+//! For `p ≤ 64` the host sets are single `u64` bitsets intersected in place
+//! (`abits[u] & abits[v]`), so the per-edge loop performs **no heap
+//! allocation**; `p > 64` falls back to sorted small-vecs. All ties resolve
+//! to the lowest part id, making the assignment a pure function of
+//! (graph, seed) — identical across runs and rayon thread counts.
 
 use super::VertexCutAlgorithm;
 use crate::graph::Graph;
@@ -17,6 +23,42 @@ use crate::util::rng::Rng;
 
 /// Greedy streaming vertex cut.
 pub struct PowerGraphGreedy;
+
+/// Least-loaded partition among the set bits of `mask`; ties go to the
+/// lowest part id (the first-minimum rule of `Iterator::min_by_key`).
+#[inline]
+fn least_loaded_bit(mut mask: u64, load: &[usize]) -> u32 {
+    debug_assert!(mask != 0);
+    let mut best = mask.trailing_zeros();
+    mask &= mask - 1;
+    while mask != 0 {
+        let c = mask.trailing_zeros();
+        if load[c as usize] < load[best as usize] {
+            best = c;
+        }
+        mask &= mask - 1;
+    }
+    best
+}
+
+/// Least-loaded partition overall; ties go to the lowest part id.
+#[inline]
+fn least_loaded_all(p: usize, load: &[usize]) -> u32 {
+    (0..p as u32).min_by_key(|&c| load[c as usize]).unwrap()
+}
+
+/// Case 2 (both host sets non-empty, disjoint): favor the endpoint with
+/// more remaining edges, approximated by total degree. Degree ties go to
+/// the canonical lower endpoint `u` — an explicit, deterministic rule, not
+/// an artifact of set representation.
+#[inline]
+fn case2_pick(du: u32, dv: u32, hosts_u: u64, hosts_v: u64) -> u64 {
+    if du >= dv {
+        hosts_u
+    } else {
+        hosts_v
+    }
+}
 
 impl VertexCutAlgorithm for PowerGraphGreedy {
     fn name(&self) -> &'static str {
@@ -28,55 +70,67 @@ impl VertexCutAlgorithm for PowerGraphGreedy {
         let n = g.num_nodes();
         let mut order: Vec<u32> = (0..m as u32).collect();
         rng.shuffle(&mut order);
-        // A(v) as a bitset when p <= 64, else a sorted small vec; p > 64 is
-        // supported via the vec path.
-        let use_bits = p <= 64;
-        let mut abits = vec![0u64; if use_bits { n } else { 0 }];
-        let mut avec: Vec<Vec<u32>> = if use_bits { Vec::new() } else { vec![Vec::new(); n] };
+        // One precomputed degree slice for the whole stream (case-2 rule)
+        // instead of per-edge accessor calls.
+        let degree = g.degrees();
         let mut load = vec![0usize; p];
         let mut out = vec![0u32; m];
-        let hosts = |abits: &[u64], avec: &[Vec<u32>], v: usize| -> Vec<u32> {
-            if use_bits {
-                let mut b = abits[v];
-                let mut out = Vec::new();
-                while b != 0 {
-                    let i = b.trailing_zeros();
-                    out.push(i);
-                    b &= b - 1;
-                }
-                out
-            } else {
-                avec[v].clone()
+        if p <= 64 {
+            // Bitset path: A(v) is one u64 word; the inner loop touches no
+            // heap at all.
+            let mut abits = vec![0u64; n];
+            for &k in &order {
+                let (u, v) = g.edges()[k as usize];
+                let (bu, bv) = (abits[u as usize], abits[v as usize]);
+                let common = bu & bv;
+                let choice = if common != 0 {
+                    least_loaded_bit(common, &load)
+                } else if bu != 0 && bv != 0 {
+                    let pick = case2_pick(degree[u as usize], degree[v as usize], bu, bv);
+                    least_loaded_bit(pick, &load)
+                } else if bu != 0 {
+                    least_loaded_bit(bu, &load)
+                } else if bv != 0 {
+                    least_loaded_bit(bv, &load)
+                } else {
+                    least_loaded_all(p, &load)
+                };
+                out[k as usize] = choice;
+                load[choice as usize] += 1;
+                let bit = 1u64 << choice;
+                abits[u as usize] |= bit;
+                abits[v as usize] |= bit;
             }
-        };
-        for &k in &order {
-            let (u, v) = g.edges()[k as usize];
-            let hu = hosts(&abits, &avec, u as usize);
-            let hv = hosts(&abits, &avec, v as usize);
-            let least = |cands: &[u32], load: &[usize]| -> u32 {
-                *cands.iter().min_by_key(|&&c| load[c as usize]).unwrap()
-            };
-            let common: Vec<u32> = hu.iter().copied().filter(|c| hv.contains(c)).collect();
-            let choice = if !common.is_empty() {
-                least(&common, &load)
-            } else if !hu.is_empty() && !hv.is_empty() {
-                // Case 2: favor the higher-degree endpoint's partitions (its
-                // future edges are the ones worth co-locating).
-                let pick = if g.degree(u) >= g.degree(v) { &hu } else { &hv };
-                least(pick, &load)
-            } else if !hu.is_empty() {
-                least(&hu, &load)
-            } else if !hv.is_empty() {
-                least(&hv, &load)
-            } else {
-                (0..p as u32).min_by_key(|&c| load[c as usize]).unwrap()
-            };
-            out[k as usize] = choice;
-            load[choice as usize] += 1;
-            if use_bits {
-                abits[u as usize] |= 1 << choice;
-                abits[v as usize] |= 1 << choice;
-            } else {
+        } else {
+            // p > 64: sorted small-vec host sets. The selection borrows the
+            // sets in place (no per-edge clones or scratch vectors).
+            let mut avec: Vec<Vec<u32>> = vec![Vec::new(); n];
+            for &k in &order {
+                let (u, v) = g.edges()[k as usize];
+                let choice = {
+                    let hu = &avec[u as usize];
+                    let hv = &avec[v as usize];
+                    let common = hu
+                        .iter()
+                        .copied()
+                        .filter(|c| hv.binary_search(c).is_ok())
+                        .min_by_key(|&c| load[c as usize]);
+                    if let Some(c) = common {
+                        c
+                    } else if !hu.is_empty() && !hv.is_empty() {
+                        let pick =
+                            if degree[u as usize] >= degree[v as usize] { hu } else { hv };
+                        *pick.iter().min_by_key(|&&c| load[c as usize]).unwrap()
+                    } else if !hu.is_empty() {
+                        *hu.iter().min_by_key(|&&c| load[c as usize]).unwrap()
+                    } else if !hv.is_empty() {
+                        *hv.iter().min_by_key(|&&c| load[c as usize]).unwrap()
+                    } else {
+                        least_loaded_all(p, &load)
+                    }
+                };
+                out[k as usize] = choice;
+                load[choice as usize] += 1;
                 for &node in &[u, v] {
                     let a = &mut avec[node as usize];
                     if let Err(pos) = a.binary_search(&choice) {
@@ -128,5 +182,33 @@ mod tests {
         let g = barabasi_albert(800, 3, &mut rng);
         let vc = VertexCut::create(&g, 100, &PowerGraphGreedy, &mut rng);
         vc.check_invariants(&g).unwrap();
+    }
+
+    #[test]
+    fn case2_tie_breaks_to_lower_endpoint() {
+        // Higher-degree endpoint wins; equal degrees go to u's hosts.
+        assert_eq!(case2_pick(4, 3, 0b01, 0b10), 0b01);
+        assert_eq!(case2_pick(2, 3, 0b01, 0b10), 0b10);
+        assert_eq!(case2_pick(3, 3, 0b01, 0b10), 0b01);
+    }
+
+    /// Regression (satellite): the same seed must yield the same assignment
+    /// on every run and under every rayon pool size, on both host-set
+    /// representations.
+    #[test]
+    fn deterministic_across_runs_and_thread_counts() {
+        let mut rng = Rng::new(21);
+        let g = barabasi_albert(1500, 4, &mut rng);
+        for p in [8usize, 80] {
+            let a = PowerGraphGreedy.assign(&g, p, &mut Rng::new(5));
+            let b = PowerGraphGreedy.assign(&g, p, &mut Rng::new(5));
+            assert_eq!(a, b, "p={p}: two runs diverged");
+            for threads in [1usize, 2, 8] {
+                let pool =
+                    rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+                let c = pool.install(|| PowerGraphGreedy.assign(&g, p, &mut Rng::new(5)));
+                assert_eq!(a, c, "p={p} threads={threads}");
+            }
+        }
     }
 }

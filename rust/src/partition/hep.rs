@@ -16,7 +16,7 @@
 
 use super::ne::NeighborExpansion;
 use super::VertexCutAlgorithm;
-use crate::graph::{Graph, GraphBuilder};
+use crate::graph::Graph;
 use crate::util::rng::Rng;
 
 /// Hybrid edge partitioner.
@@ -50,38 +50,34 @@ impl VertexCutAlgorithm for Hep {
             ((z ^ (z >> 31)) % p as u64) as u32
         };
         let mut assign = vec![u32::MAX; m];
-        // Hot edges -> DBH; cold edges -> collected for the NE pass.
-        let mut cold_edges: Vec<u32> = Vec::new();
+        // One precomputed degree slice for the hot/cold split instead of two
+        // accessor calls per edge.
+        let degree = g.degrees();
+        // Hot edges -> DBH in place; cold edges -> collected ONCE as
+        // (pair, original index). Scanning the canonical edge list in order
+        // keeps the cold pairs sorted, unique and self-loop free, so the
+        // cold subgraph is built by the no-re-sort CSR fast path and sub
+        // edge `i` maps back to `cold_idx[i]` by position — no second copy,
+        // no re-sort of the cold list.
+        let mut cold_pairs: Vec<(u32, u32)> = Vec::new();
+        let mut cold_idx: Vec<u32> = Vec::new();
         for (k, &(u, v)) in g.edges().iter().enumerate() {
-            let (du, dv) = (g.degree(u), g.degree(v));
+            let (du, dv) = (degree[u as usize], degree[v as usize]);
             let low = du.min(dv);
             if low > threshold {
                 let key = if du < dv || (du == dv && u < v) { u } else { v };
                 assign[k] = hash(key);
             } else {
-                cold_edges.push(k as u32);
+                cold_pairs.push((u, v));
+                cold_idx.push(k as u32);
             }
         }
-        if !cold_edges.is_empty() {
-            // Build the cold subgraph (same node id space is fine for NE via
-            // a sub-edge list; we reuse NE by constructing a subgraph whose
-            // canonical edge order we can map back).
-            let sub_pairs: Vec<(u32, u32)> =
-                cold_edges.iter().map(|&k| g.edges()[k as usize]).collect();
-            let sub = GraphBuilder::new(g.num_nodes()).edges(&sub_pairs).build();
-            // GraphBuilder sorts canonical edges; map sub edge -> original k.
-            let mut sorted_cold: Vec<(u32, u32, u32)> = cold_edges
-                .iter()
-                .map(|&k| {
-                    let (u, v) = g.edges()[k as usize];
-                    (u, v, k)
-                })
-                .collect();
-            sorted_cold.sort_unstable();
-            debug_assert_eq!(sub.num_edges(), sorted_cold.len());
+        if !cold_idx.is_empty() {
+            let sub = Graph::from_sorted_edges(g.num_nodes(), cold_pairs);
+            debug_assert_eq!(sub.num_edges(), cold_idx.len());
             let ne = NeighborExpansion::default();
             let sub_assign = ne.assign(&sub, p, rng);
-            for (i, &(_, _, k)) in sorted_cold.iter().enumerate() {
+            for (i, &k) in cold_idx.iter().enumerate() {
                 assign[k as usize] = sub_assign[i];
             }
         }
@@ -111,6 +107,16 @@ mod tests {
             mh.replication_factor,
             mr.replication_factor
         );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(15);
+        let w = power_law_degrees(1000, 2.2, 2, 80, &mut rng);
+        let g = chung_lu(&w, &mut rng);
+        let a = Hep::default().assign(&g, 6, &mut Rng::new(3));
+        let b = Hep::default().assign(&g, 6, &mut Rng::new(3));
+        assert_eq!(a, b);
     }
 
     #[test]

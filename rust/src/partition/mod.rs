@@ -24,6 +24,7 @@ pub mod random;
 
 use crate::graph::{Graph, GraphBuilder};
 use crate::util::rng::Rng;
+use rayon::prelude::*;
 use std::collections::HashMap;
 
 pub use dar::{dar_weights, Reweighting};
@@ -81,7 +82,47 @@ impl VertexCut {
     }
 
     /// Materialize from a precomputed edge assignment.
+    ///
+    /// Fast path: one counting-sort pass buckets the canonical edges by
+    /// owning part (the scan preserves the global lexicographic order, so
+    /// every bucket arrives pre-canonicalized, pre-sorted and
+    /// duplicate-free), then the parts are materialized in parallel. The
+    /// global→local remap is a binary search on the sorted id table — no
+    /// per-part `HashMap` — and, because that map is monotone, the local
+    /// edge list stays sorted and feeds [`Graph::from_sorted_edges`]
+    /// directly, skipping `GraphBuilder`'s redundant re-sort/dedup.
+    ///
+    /// Output is byte-identical to [`VertexCut::from_assignment_reference`]
+    /// for any rayon thread count (see the parity property test).
     pub fn from_assignment(g: &Graph, p: usize, assignment: Vec<u32>) -> VertexCut {
+        assert_eq!(assignment.len(), g.num_edges(), "one part per canonical edge");
+        assert!(assignment.iter().all(|&a| (a as usize) < p), "part id out of range");
+        // Counting-sort bucketing: off[i]..off[i+1] is part i's edge range.
+        let mut off = vec![0usize; p + 1];
+        for &a in &assignment {
+            off[a as usize + 1] += 1;
+        }
+        for i in 0..p {
+            off[i + 1] += off[i];
+        }
+        let mut bucketed = vec![(0u32, 0u32); g.num_edges()];
+        let mut cursor = off[..p].to_vec();
+        for (k, &e) in g.edges().iter().enumerate() {
+            let part = assignment[k] as usize;
+            bucketed[cursor[part]] = e;
+            cursor[part] += 1;
+        }
+        let parts: Vec<PartGraph> = (0..p)
+            .into_par_iter()
+            .map(|i| materialize_part(i, &bucketed[off[i]..off[i + 1]]))
+            .collect();
+        VertexCut { num_parts: p, assignment, parts }
+    }
+
+    /// The pre-optimization sequential materializer (per-part `HashMap`
+    /// remap + `GraphBuilder` re-sort). Kept as the oracle the fast path is
+    /// property-tested against, and as the "old" side of `bench_partition`.
+    pub fn from_assignment_reference(g: &Graph, p: usize, assignment: Vec<u32>) -> VertexCut {
         assert_eq!(assignment.len(), g.num_edges(), "one part per canonical edge");
         assert!(assignment.iter().all(|&a| (a as usize) < p), "part id out of range");
         // Collect each part's global vertex set + edge list.
@@ -102,7 +143,7 @@ impl VertexCut {
                 for &(u, v) in &edges {
                     b.edge(index[&u], index[&v]);
                 }
-                PartGraph { part_id: i, global_ids: ids, local: b.edges(&[]).build() }
+                PartGraph { part_id: i, global_ids: ids, local: b.edges(&[]).build_reference() }
             })
             .collect();
         VertexCut { num_parts: p, assignment, parts }
@@ -159,6 +200,32 @@ impl VertexCut {
         ensure!(all == g.edges(), "partition edges differ from graph edges");
         Ok(())
     }
+}
+
+/// Materialize one partition from its (sorted, canonical, unique) slice of
+/// the bucketed edge list. Allocation-lean: the only allocations are the id
+/// table, the local edge list and the CSR arrays themselves.
+fn materialize_part(part_id: usize, edges: &[(u32, u32)]) -> PartGraph {
+    let mut ids: Vec<u32> = Vec::with_capacity(edges.len() * 2);
+    for &(u, v) in edges {
+        ids.push(u);
+        ids.push(v);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    // Monotone global→local remap by binary search: the bucketed slice is
+    // lexicographically sorted with u < v, and a monotone map preserves
+    // both, so the local list is directly CSR-ready.
+    let local_edges: Vec<(u32, u32)> = edges
+        .iter()
+        .map(|&(u, v)| {
+            let lu = ids.binary_search(&u).expect("endpoint in id table") as u32;
+            let lv = ids.binary_search(&v).expect("endpoint in id table") as u32;
+            (lu, lv)
+        })
+        .collect();
+    let n_local = ids.len();
+    PartGraph { part_id, global_ids: ids, local: Graph::from_sorted_edges(n_local, local_edges) }
 }
 
 /// Look up a vertex-cut algorithm by CLI name.
@@ -221,6 +288,64 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// Full structural snapshot of a vertex cut: assignment, per-part id
+    /// tables, canonical local edges and every adjacency row. Two cuts with
+    /// equal snapshots are byte-identical for all observable purposes.
+    fn snapshot(vc: &VertexCut) -> (Vec<u32>, Vec<(Vec<u32>, Vec<(u32, u32)>, Vec<u32>)>) {
+        let parts = vc
+            .parts
+            .iter()
+            .map(|part| {
+                let rows: Vec<u32> = (0..part.local.num_nodes() as u32)
+                    .flat_map(|v| part.local.neighbors(v).iter().copied())
+                    .collect();
+                (part.global_ids.clone(), part.local.edges().to_vec(), rows)
+            })
+            .collect();
+        (vc.assignment.clone(), parts)
+    }
+
+    /// Property test (satellite): the counting-sort fast path produces
+    /// byte-identical output to the retained sequential reference — same
+    /// assignment, same global id tables, same local CSR, same edge order —
+    /// across the whole graph zoo, every algorithm and several p.
+    #[test]
+    fn fast_materialization_matches_reference_on_zoo() {
+        for (gi, g) in graph_zoo(7).iter().enumerate() {
+            for &name in ALGORITHMS.iter() {
+                let algo = algorithm(name).unwrap();
+                for &p in &[1usize, 2, 3, 8] {
+                    let mut rng = Rng::new(31 * gi as u64 + p as u64);
+                    let assignment = algo.assign(g, p, &mut rng);
+                    let fast = VertexCut::from_assignment(g, p, assignment.clone());
+                    let slow = VertexCut::from_assignment_reference(g, p, assignment);
+                    assert_eq!(
+                        snapshot(&fast),
+                        snapshot(&slow),
+                        "{name} p={p} graph#{gi}: fast path diverged from reference"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Materialization must be bit-identical regardless of the rayon pool
+    /// size (the per-part map is index-ordered, so scheduling cannot leak
+    /// into the output).
+    #[test]
+    fn materialization_identical_across_thread_counts() {
+        let g = &graph_zoo(9)[2];
+        let mut rng = Rng::new(404);
+        let assignment = algorithm("greedy").unwrap().assign(g, 8, &mut rng);
+        let baseline = snapshot(&VertexCut::from_assignment(g, 8, assignment.clone()));
+        for threads in [1usize, 2, 8] {
+            let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+            let vc =
+                pool.install(|| VertexCut::from_assignment(g, 8, assignment.clone()));
+            assert_eq!(snapshot(&vc), baseline, "threads={threads}");
         }
     }
 

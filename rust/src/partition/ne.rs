@@ -38,13 +38,26 @@ impl VertexCutAlgorithm for NeighborExpansion {
         }
         let quota = ((m as f64 / p as f64) * (1.0 + self.slack.max(0.0))).ceil() as usize;
         let mut assign = vec![UNASSIGNED; m];
-        // Edge index: for each node, the indices of its canonical edges.
-        let mut incident: Vec<Vec<u32>> = vec![Vec::new(); n];
-        for (k, &(u, v)) in g.edges().iter().enumerate() {
-            incident[u as usize].push(k as u32);
-            incident[v as usize].push(k as u32);
+        // Single precomputed degree slice; also sizes the incident index.
+        let degree = g.degrees();
+        // Incident-edge index in flat CSR form (one allocation instead of a
+        // Vec per node): incident[inc_off[v]..inc_off[v+1]] are the canonical
+        // edge ids touching v, ascending.
+        let mut inc_off = vec![0u32; n + 1];
+        for v in 0..n {
+            inc_off[v + 1] = inc_off[v] + degree[v];
         }
-        let mut unassigned_deg: Vec<u32> = (0..n as u32).map(|v| g.degree(v)).collect();
+        let mut incident = vec![0u32; 2 * m];
+        {
+            let mut cursor = inc_off[..n].to_vec();
+            for (k, &(u, v)) in g.edges().iter().enumerate() {
+                incident[cursor[u as usize] as usize] = k as u32;
+                cursor[u as usize] += 1;
+                incident[cursor[v as usize] as usize] = k as u32;
+                cursor[v as usize] += 1;
+            }
+        }
+        let mut unassigned_deg: Vec<u32> = degree;
         let mut assigned_edges = 0usize;
 
         // in_front[v]: which partition's frontier v currently belongs to
@@ -103,7 +116,7 @@ impl VertexCutAlgorithm for NeighborExpansion {
                 };
                 in_core[x as usize] = true;
                 // Allocate all unassigned incident edges of x to this part.
-                for &k in &incident[x as usize] {
+                for &k in &incident[inc_off[x as usize] as usize..inc_off[x as usize + 1] as usize] {
                     if assign[k as usize] != UNASSIGNED {
                         continue;
                     }

@@ -5,6 +5,7 @@
 //! device buffers (for `execute_b`, the hot path — static inputs are
 //! uploaded once and reused every iteration).
 
+#[cfg(feature = "xla")]
 use anyhow::{ensure, Result};
 
 /// Payload of a [`Tensor`].
@@ -68,6 +69,7 @@ impl Tensor {
     }
 
     /// Convert to an `xla::Literal` with this tensor's shape.
+    #[cfg(feature = "xla")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -79,6 +81,7 @@ impl Tensor {
     }
 
     /// Upload to the device.
+    #[cfg(feature = "xla")]
     pub fn to_device(&self, rt: &super::RuntimeClient) -> Result<xla::PjRtBuffer> {
         match &self.data {
             TensorData::F32(v) => rt.to_device_f32(v, &self.dims),
@@ -88,6 +91,7 @@ impl Tensor {
 }
 
 /// Read back a device buffer as a f32 vector.
+#[cfg(feature = "xla")]
 pub fn buffer_to_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
     Ok(buf.to_literal_sync()?.to_vec::<f32>()?)
 }
@@ -96,6 +100,7 @@ pub fn buffer_to_f32(buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
@@ -105,6 +110,7 @@ mod tests {
         assert_eq!(shape.dims(), &[2, 3]);
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn literal_roundtrip_i32() {
         let t = Tensor::i32(vec![5, 6, 7], &[3]);
@@ -125,6 +131,7 @@ mod tests {
         Tensor::i32(vec![1], &[1]).as_f32();
     }
 
+    #[cfg(feature = "xla")]
     #[test]
     fn device_roundtrip() {
         let rt = crate::runtime::RuntimeClient::cpu().unwrap();

@@ -6,11 +6,15 @@
 //! (uploaded once by the worker), and only the parameters are re-uploaded
 //! each iteration.
 
-use super::artifact::{ArtifactKind, ArtifactSpec, ModelConfig};
-use super::buffers::Tensor;
-use super::client::RuntimeClient;
+use super::artifact::ModelConfig;
 use crate::util::rng::Rng;
-use anyhow::{ensure, Context, Result};
+#[cfg(feature = "xla")]
+use {
+    super::artifact::{ArtifactKind, ArtifactSpec},
+    super::buffers::Tensor,
+    super::client::RuntimeClient,
+    anyhow::{ensure, Context, Result},
+};
 
 /// The model parameters as flat host vectors (lowering order).
 #[derive(Clone, Debug)]
@@ -87,12 +91,14 @@ impl EvalOut {
     }
 }
 
-/// A compiled artifact ready to execute.
+/// A compiled artifact ready to execute (needs the `xla` feature).
+#[cfg(feature = "xla")]
 pub struct Executor {
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
 
+#[cfg(feature = "xla")]
 impl Executor {
     /// Compile `spec`'s HLO file on `rt`.
     pub fn compile(rt: &RuntimeClient, spec: &ArtifactSpec) -> Result<Executor> {

@@ -5,13 +5,23 @@
 //! `artifacts/`; this module loads those files through the PJRT C API
 //! (`xla` crate), compiles them once per process, and exposes typed
 //! execute calls. Python never runs here.
+//!
+//! The PJRT pieces (client, compiled executor, device transfers) require
+//! the XLA toolchain and are gated behind the `xla` cargo feature; the
+//! host-side types (artifact registry, tensors, parameter sets, train/eval
+//! outputs) build everywhere and are what the partitioning pipeline and
+//! benches depend on.
 
 pub mod artifact;
 pub mod buffers;
+#[cfg(feature = "xla")]
 pub mod client;
 pub mod executor;
 
 pub use artifact::{ArtifactKind, ArtifactSpec, ModelConfig, Registry};
 pub use buffers::{Tensor, TensorData};
+#[cfg(feature = "xla")]
 pub use client::RuntimeClient;
-pub use executor::{EvalOut, Executor, ParamSet, TrainOut};
+#[cfg(feature = "xla")]
+pub use executor::Executor;
+pub use executor::{EvalOut, ParamSet, TrainOut};

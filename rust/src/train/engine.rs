@@ -15,23 +15,27 @@
 //! Table 1 measures on real hardware. The all-reduce term is supplied by the
 //! caller (from `simnet`, or 0 for in-process semantics).
 
-use super::allreduce::GradAccumulator;
-use super::dropedge::MaskBank;
-use super::metrics::{EpochStats, History};
-use super::optimizer::{Adam, Optimizer, Sgd};
-use super::tensorize::{
-    tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch,
-};
 use crate::graph::Dataset;
-use crate::partition::{dar_weights, Reweighting, VertexCut};
-use crate::runtime::{ArtifactKind, Executor, ModelConfig, ParamSet, Registry, RuntimeClient};
-use crate::util::rng::Rng;
-use crate::util::timer::PhaseTimer;
-use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::path::Path;
-use std::rc::Rc;
-use std::time::Instant;
+use crate::runtime::ModelConfig;
+#[cfg(feature = "xla")]
+use {
+    super::allreduce::GradAccumulator,
+    super::dropedge::MaskBank,
+    super::metrics::{EpochStats, History},
+    super::optimizer::{Adam, Optimizer, Sgd},
+    super::tensorize::{
+        tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch,
+    },
+    crate::partition::{dar_weights, Reweighting, VertexCut},
+    crate::runtime::{ArtifactKind, Executor, ParamSet, Registry, RuntimeClient},
+    crate::util::rng::Rng,
+    crate::util::timer::PhaseTimer,
+    anyhow::{Context, Result},
+    std::collections::HashMap,
+    std::path::Path,
+    std::rc::Rc,
+    std::time::Instant,
+};
 
 /// Training hyperparameters.
 #[derive(Clone, Debug)]
@@ -67,6 +71,7 @@ impl Default for TrainConfig {
 }
 
 /// One worker = one partition's state: device-resident batch + executor.
+#[cfg(feature = "xla")]
 struct WorkerState {
     batch: TrainBatch,
     /// Device buffers in tensor order (emask slot swapped per iteration).
@@ -87,6 +92,7 @@ pub enum RunMode {
 }
 
 /// A prepared training run over a set of partitions.
+#[cfg(feature = "xla")]
 pub struct Run {
     workers: Vec<WorkerState>,
     pub model: ModelConfig,
@@ -97,6 +103,7 @@ pub struct Run {
 }
 
 /// A prepared full-graph evaluation setup.
+#[cfg(feature = "xla")]
 pub struct EvalSetup {
     batch: EvalBatch,
     device: Vec<xla::PjRtBuffer>,
@@ -104,7 +111,9 @@ pub struct EvalSetup {
     executor: Rc<Executor>,
 }
 
-/// The engine: PJRT client + artifact registry + executable cache.
+/// The engine: PJRT client + artifact registry + executable cache (needs
+/// the `xla` feature).
+#[cfg(feature = "xla")]
 pub struct TrainEngine {
     pub rt: RuntimeClient,
     pub registry: Registry,
@@ -121,6 +130,7 @@ pub fn model_config(ds: &Dataset) -> ModelConfig {
     }
 }
 
+#[cfg(feature = "xla")]
 impl TrainEngine {
     pub fn new(artifacts_dir: &Path) -> Result<TrainEngine> {
         Ok(TrainEngine {

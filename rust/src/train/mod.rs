@@ -18,7 +18,9 @@ pub mod tensorize;
 
 pub use bucket::bucket_shapes;
 pub use dropedge::MaskBank;
-pub use engine::{TrainConfig, TrainEngine};
+pub use engine::TrainConfig;
+#[cfg(feature = "xla")]
+pub use engine::TrainEngine;
 pub use metrics::{EpochStats, History};
 pub use optimizer::{Adam, Optimizer, Sgd};
 pub use tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch};
