@@ -1,0 +1,271 @@
+//! Training-backend benchmark: naive reference forward vs the native CPU
+//! backend (fwd / fwd+bwd train step / full engine epoch) across shape
+//! buckets and partition counts on the R-MAT and Chung–Lu zoo.
+//!
+//! Run: `cargo bench --bench bench_train`. Knobs (environment):
+//! * `COFREE_BENCH_TRAIN_EDGES` — target raw edge count (default 1_000_000)
+//! * `COFREE_BENCH_TRAIN_ITERS` — timing repetitions (default 2)
+//! * `COFREE_BENCH_TRAIN_PARTS` — comma list of partition counts (default `1,4,8`)
+//! * `COFREE_BENCH_TRAIN_OUT`   — output JSON path (default `BENCH_train.json`)
+//!
+//! Emits `BENCH_train.json` alongside `BENCH_partition.json` so the perf
+//! trajectory of the training hot path is tracked in-repo. The "old" side
+//! is `train::reference::forward` — the deliberately naive single-threaded
+//! oracle that was the only XLA-free model code before the native backend
+//! existed — and stays frozen by its parity-test role. The headline number
+//! is `default_bucket.forward_speedup`: native vs reference forward on the
+//! default bucket (R-MAT, p = 1, the full-graph shape).
+
+use cofree_gnn::graph::features::{synthesize, FeatureParams};
+use cofree_gnn::graph::generators::{chung_lu_pairs, power_law_degrees, rmat_pairs, RmatParams};
+use cofree_gnn::graph::{Dataset, GraphBuilder};
+use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
+use cofree_gnn::runtime::{ModelConfig, ParamSet};
+use cofree_gnn::train::bucket::pad_explicit;
+use cofree_gnn::train::cpu::{self, sage::EdgeCsr};
+use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
+use cofree_gnn::train::reference;
+use cofree_gnn::train::tensorize::{tensorize_partition, TrainBatch};
+use cofree_gnn::util::rng::Rng;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_string(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+/// Time `f` `iters` times; returns mean seconds.
+fn timed<T>(iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    assert!(iters >= 1);
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        total += t0.elapsed().as_secs_f64();
+    }
+    total / iters as f64
+}
+
+struct PartSetup {
+    batch: TrainBatch,
+    csr: EdgeCsr,
+}
+
+struct PartRow {
+    p: usize,
+    n_pad_max: usize,
+    e_pad_max: usize,
+    fwd_old_s: f64,
+    fwd_new_s: f64,
+    step_new_s: f64,
+    epoch_new_s: f64,
+}
+
+impl PartRow {
+    fn fwd_speedup(&self) -> f64 {
+        self.fwd_old_s / self.fwd_new_s.max(1e-12)
+    }
+}
+
+fn main() {
+    let target = env_usize("COFREE_BENCH_TRAIN_EDGES", 1_000_000);
+    let iters = env_usize("COFREE_BENCH_TRAIN_ITERS", 2);
+    let parts_list = env_string("COFREE_BENCH_TRAIN_PARTS", "1,4,8");
+    let out_path = env_string("COFREE_BENCH_TRAIN_OUT", "BENCH_train.json");
+    let parts: Vec<usize> = parts_list
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&p| p >= 1)
+        .collect();
+    let model = ModelConfig { layers: 2, feat_dim: 64, hidden: 64, classes: 16 };
+
+    println!("== bench_train: reference forward vs native backend ==");
+    println!(
+        "target_edges={target} iters={iters} parts={parts:?} model=L{}-d{}-h{}-c{} rayon_threads={}",
+        model.layers,
+        model.feat_dim,
+        model.hidden,
+        model.classes,
+        rayon::current_num_threads()
+    );
+
+    let mut graph_jsons: Vec<String> = Vec::new();
+    let mut default_bucket_json = String::from("null");
+
+    let specs: [(&str, u64); 2] = [("rmat", 0x7EA1), ("chung-lu", 0x5EED)];
+    for (family, seed) in specs {
+        let mut rng = Rng::new(seed);
+        let (n, pairs) = match family {
+            "rmat" => {
+                let scale = ((target / 10).max(2) as f64).log2().ceil() as u32;
+                (1usize << scale, rmat_pairs(scale, target, RmatParams::default(), &mut rng))
+            }
+            _ => {
+                let n = (target / 6).max(64);
+                let w = power_law_degrees(n, 2.2, 4, 1000, &mut rng.fork(1));
+                (n, chung_lu_pairs(&w, &mut rng.fork(2)))
+            }
+        };
+        let g = GraphBuilder::new(n).edges(&pairs).build();
+        let comm: Vec<u32> = (0..n).map(|i| (i % model.classes) as u32).collect();
+        let nd = synthesize(
+            &comm,
+            model.classes,
+            &FeatureParams { dim: model.feat_dim, ..Default::default() },
+            &mut rng.fork(3),
+        );
+        let params = ParamSet::init_glorot(&model, &mut rng.fork(4));
+        println!("\n-- {family}: n={}, m={} --", g.num_nodes(), g.num_edges());
+        // One Dataset per family (prepare_partitions only borrows it).
+        let ds = Dataset {
+            name: format!("{family}-bench"),
+            graph: g.clone(),
+            data: nd.clone(),
+            layers: model.layers,
+            hidden: model.hidden,
+        };
+
+        let mut rows: Vec<PartRow> = Vec::new();
+        for &p in &parts {
+            // Partition, tensorize at the quantum-ladder buckets, index.
+            let vc = VertexCut::create(&g, p, algorithm("dbh").unwrap().as_ref(), &mut rng.fork(p as u64));
+            let weights = dar_weights(&g, &vc, Reweighting::Dar);
+            let mut setups: Vec<PartSetup> = Vec::new();
+            for (i, part) in vc.parts.iter().enumerate() {
+                if part.num_edges() == 0 {
+                    continue;
+                }
+                let (n_pad, e_pad) = pad_explicit(part.num_nodes(), 2 * part.num_edges());
+                let batch =
+                    tensorize_partition(part, &nd, &weights[i], n_pad, e_pad).expect("tensorize");
+                let csr = EdgeCsr::from_batch(&batch);
+                setups.push(PartSetup { batch, csr });
+            }
+            let n_pad_max = setups.iter().map(|s| s.batch.n_pad).max().unwrap_or(0);
+            let e_pad_max = setups.iter().map(|s| s.batch.e_pad).max().unwrap_or(0);
+
+            // Naive reference forward over all partitions (single-threaded).
+            let fwd_old_s = timed(iters, || {
+                for s in &setups {
+                    std::hint::black_box(reference::forward(&model, &params, &s.batch));
+                }
+            });
+            // Native fast forward over all partitions.
+            let fwd_new_s = timed(iters, || {
+                for s in &setups {
+                    std::hint::black_box(cpu::sage::forward(
+                        &model,
+                        &params,
+                        s.batch.tensors[0].as_f32(),
+                        s.batch.emask().as_f32(),
+                        &s.csr,
+                        s.batch.n_pad,
+                    ));
+                }
+            });
+            // Full native train step (forward + loss/grad + backward).
+            let step_new_s = timed(iters, || {
+                for s in &setups {
+                    std::hint::black_box(cpu::train_step(
+                        &model,
+                        &params,
+                        &s.batch,
+                        &s.csr,
+                        s.batch.emask().as_f32(),
+                    ));
+                }
+            });
+            // Full engine epoch (parallel workers + allreduce + Adam).
+            let mut engine = TrainEngine::native();
+            let mut run = engine
+                .prepare_partitions(&ds, &vc, Reweighting::Dar, None, 9)
+                .expect("prepare");
+            let epochs = (iters + 1).max(2);
+            let cfg = TrainConfig {
+                epochs,
+                eval_every: 0,
+                seed: 9,
+                ..Default::default()
+            };
+            let t0 = Instant::now();
+            let (hist, _, _) = engine.train(&mut run, None, &cfg).expect("train");
+            let wall = t0.elapsed().as_secs_f64();
+            let epoch_new_s = wall / epochs as f64;
+            drop(hist);
+
+            let row = PartRow {
+                p,
+                n_pad_max,
+                e_pad_max,
+                fwd_old_s,
+                fwd_new_s,
+                step_new_s,
+                epoch_new_s,
+            };
+            println!(
+                "p={p:<3} bucket<=({n_pad_max},{e_pad_max})  fwd old {:>8.3}s new {:>8.3}s ({:.2}x)  step {:>8.3}s  epoch {:>8.3}s",
+                row.fwd_old_s,
+                row.fwd_new_s,
+                row.fwd_speedup(),
+                row.step_new_s,
+                row.epoch_new_s
+            );
+            rows.push(row);
+        }
+
+        // The default bucket: R-MAT at p = 1 (the full-graph shape).
+        if family == "rmat" {
+            if let Some(r) = rows.iter().find(|r| r.p == 1).or_else(|| rows.first()) {
+                default_bucket_json = format!(
+                    "{{\"family\": \"rmat\", \"partitions\": {}, \"n_pad\": {}, \"e_pad\": {}, \"forward_speedup\": {:.3}}}",
+                    r.p,
+                    r.n_pad_max,
+                    r.e_pad_max,
+                    r.fwd_speedup()
+                );
+            }
+        }
+
+        let mut rows_json = String::new();
+        for (i, r) in rows.iter().enumerate() {
+            if i > 0 {
+                rows_json.push_str(", ");
+            }
+            write!(
+                rows_json,
+                "{{\"partitions\": {}, \"n_pad_max\": {}, \"e_pad_max\": {}, \"forward\": {{\"old_s\": {:.6}, \"new_s\": {:.6}, \"speedup\": {:.3}}}, \"train_step_new_s\": {:.6}, \"epoch_new_s\": {:.6}}}",
+                r.p,
+                r.n_pad_max,
+                r.e_pad_max,
+                r.fwd_old_s,
+                r.fwd_new_s,
+                r.fwd_speedup(),
+                r.step_new_s,
+                r.epoch_new_s
+            )
+            .unwrap();
+        }
+        graph_jsons.push(format!(
+            "{{\"name\": \"{family}\", \"nodes\": {}, \"edges\": {}, \"parts\": [{rows_json}]}}",
+            g.num_nodes(),
+            g.num_edges()
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"train_cpu\",\n  \"config\": {{\"edges_target\": {target}, \"iters\": {iters}, \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"default_bucket\": {default_bucket_json},\n  \"graphs\": [\n    {}\n  ]\n}}\n",
+        model.layers,
+        model.feat_dim,
+        model.hidden,
+        model.classes,
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1),
+        rayon::current_num_threads(),
+        graph_jsons.join(",\n    ")
+    );
+    std::fs::write(&out_path, &json).expect("writing bench JSON");
+    println!("\nwrote {out_path}");
+}

@@ -6,24 +6,23 @@
 //! cofree partition        --dataset products-sim --algo ne --partitions 8
 //! cofree emit-bucket-spec [--out python/compile/buckets.spec]
 //! cofree train            --dataset products-sim --partitions 4 [--algo ne]
-//!                         [--reweight dar|inv|none] [--epochs N] [--lr F]
+//!                         [--backend native|xla] [--reweight dar|inv|none]
+//!                         [--epochs N] [--lr F]
 //!                         [--dropedge-k K --dropedge-ratio R] [--config F]
 //! cofree bench            table1|table2|table3|table4|fig2|fig3|fig4|fig5|all
 //! ```
 
+use super::config::Config;
 use super::experiments::{self, ExpOptions};
-use crate::graph::{datasets, io, stats};
-use crate::partition::{algorithm, LdgEdgeCut, PartitionMetrics, VertexCut};
+use crate::graph::{datasets, io, stats, Dataset};
+use crate::partition::{algorithm, LdgEdgeCut, PartitionMetrics, Reweighting, VertexCut};
+use crate::train::backend::Backend;
+use crate::train::engine::{TrainConfig, TrainEngine};
+use crate::train::metrics::History;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
-#[cfg(feature = "xla")]
-use {
-    super::config::Config,
-    crate::partition::Reweighting,
-    crate::train::engine::{TrainConfig, TrainEngine},
-};
 
 /// Parsed flags: `--key value` pairs plus positional args.
 pub struct Args {
@@ -79,12 +78,14 @@ USAGE:
   cofree partition --dataset NAME --algo ALGO --partitions P [--scale F]
   cofree emit-bucket-spec [--out FILE]
   cofree train --dataset NAME --partitions P [--algo ne] [--reweight dar]
-               [--epochs N] [--lr F] [--dropedge-k K --dropedge-ratio R]
+               [--backend native|xla] [--epochs N] [--lr F]
+               [--dropedge-k K --dropedge-ratio R]
                [--scale F] [--artifacts DIR] [--out-csv FILE] [--config FILE]
   cofree bench NAME            (table1|table2|table3|table4|fig2|fig3|fig4|fig5|all)
 
 DATASETS: reddit-sim, products-sim, yelp-sim, papers-sim
 ALGOS:    random, ne, dbh, hep, greedy (vertex cut); metis (edge cut)
+BACKENDS: native (pure-Rust CPU, default) | xla (PJRT artifacts, needs --features xla)
 ";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -181,17 +182,37 @@ fn cmd_emit_bucket_spec(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// `cofree train` needs the PJRT execution layer.
-#[cfg(not(feature = "xla"))]
-fn cmd_train(_args: &Args) -> Result<i32> {
-    bail!(
-        "`cofree train` requires the `xla` cargo feature (PJRT execution layer): \
-         vendor the `xla` crate (xla-rs bindings + XLA toolchain), add it as an \
-         optional dependency wired to the feature, then rebuild with --features xla"
-    )
+/// The backend-independent half of `cofree train`: partition, prepare,
+/// train, report.
+#[allow(clippy::too_many_arguments)]
+fn run_train<B: Backend>(
+    engine: &mut TrainEngine<B>,
+    ds: &Dataset,
+    p: usize,
+    algo_name: &str,
+    rw: Reweighting,
+    dropedge: Option<(usize, f64)>,
+    cfg: &TrainConfig,
+    seed: u64,
+) -> Result<History> {
+    let eval = engine.prepare_eval(ds)?;
+    let history = if p <= 1 {
+        let mut run = engine.prepare_full(ds, dropedge, seed)?;
+        engine.train(&mut run, Some(&eval), cfg)?.0
+    } else {
+        let algo = algorithm(algo_name).with_context(|| format!("unknown algo {algo_name}"))?;
+        let mut rng = Rng::new(seed);
+        let vc = VertexCut::create(&ds.graph, p, algo.as_ref(), &mut rng);
+        let m = PartitionMetrics::vertex_cut(&ds.graph, &vc);
+        crate::log_info!("partitioned: {}", m.row());
+        let mut run = engine.prepare_partitions(ds, &vc, rw, dropedge, seed)?;
+        engine.train(&mut run, Some(&eval), cfg)?.0
+    };
+    Ok(history)
 }
 
-#[cfg(feature = "xla")]
+/// `cofree train` — runs on the native CPU backend by default; pass
+/// `--backend xla` for the PJRT artifact path (needs `--features xla`).
 fn cmd_train(args: &Args) -> Result<i32> {
     // Optional config file; CLI flags override.
     let file_cfg = match args.get("config") {
@@ -215,19 +236,24 @@ fn cmd_train(args: &Args) -> Result<i32> {
     let lr: f32 = get("train.lr", "lr", "0.01").parse()?;
     let k: usize = get("train.dropedge_k", "dropedge-k", "0").parse()?;
     let ratio: f64 = get("train.dropedge_ratio", "dropedge-ratio", "0.5").parse()?;
-    let artifacts = PathBuf::from(get("run.artifacts", "artifacts", "artifacts"));
+    let backend = get("train.backend", "backend", "native");
+    if k > 0 && !(0.0..1.0).contains(&ratio) {
+        bail!("--dropedge-ratio must be in [0, 1), got {ratio}");
+    }
     let dropedge = if k > 0 { Some((k, ratio)) } else { None };
+    // `--artifacts` only means something on the PJRT path; erroring beats
+    // silently training on the native backend with the flag ignored.
+    if args.get("artifacts").is_some() && backend != "xla" {
+        bail!("--artifacts is only used by the PJRT path; add --backend xla (requires --features xla)");
+    }
 
     let ds = datasets::build(&ds_name, scale, seed)?;
-    let mut engine = TrainEngine::new(&artifacts)?;
-    let mut rng = Rng::new(seed);
     crate::log_info!(
-        "training {ds_name} (n={} m={}) p={p} algo={algo_name} reweight={} dropedge={dropedge:?}",
+        "training {ds_name} (n={} m={}) p={p} algo={algo_name} backend={backend} reweight={} dropedge={dropedge:?}",
         ds.graph.num_nodes(),
         ds.graph.num_edges(),
         rw.name()
     );
-    let eval = engine.prepare_eval(&ds)?;
     let cfg = TrainConfig {
         epochs,
         lr,
@@ -238,16 +264,24 @@ fn cmd_train(args: &Args) -> Result<i32> {
         allreduce_seconds: 0.0,
         log_every: (epochs / 20).max(1),
     };
-    let history = if p <= 1 {
-        let mut run = engine.prepare_full(&ds, dropedge, seed)?;
-        engine.train(&mut run, Some(&eval), &cfg)?.0
-    } else {
-        let algo = algorithm(&algo_name).with_context(|| format!("unknown algo {algo_name}"))?;
-        let vc = VertexCut::create(&ds.graph, p, algo.as_ref(), &mut rng);
-        let m = PartitionMetrics::vertex_cut(&ds.graph, &vc);
-        crate::log_info!("partitioned: {}", m.row());
-        let mut run = engine.prepare_partitions(&ds, &vc, rw, dropedge, seed)?;
-        engine.train(&mut run, Some(&eval), &cfg)?.0
+    let history = match backend.as_str() {
+        "native" | "cpu" => {
+            let mut engine = TrainEngine::native();
+            run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed)?
+        }
+        #[cfg(feature = "xla")]
+        "xla" => {
+            let artifacts = PathBuf::from(get("run.artifacts", "artifacts", "artifacts"));
+            let mut engine = TrainEngine::new(&artifacts)?;
+            run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed)?
+        }
+        #[cfg(not(feature = "xla"))]
+        "xla" => bail!(
+            "--backend xla requires the `xla` cargo feature (PJRT execution \
+             layer); rebuild with --features xla, or use the default native \
+             backend"
+        ),
+        other => bail!("--backend must be native|xla, got {other:?}"),
     };
     let (best_val, test_at_best) = history.best();
     let (iter_ms, iter_std) = history.iter_time_ms(2.min(epochs.saturating_sub(1)));
@@ -333,6 +367,66 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn train_command_runs_on_native_backend() {
+        // End-to-end through the CLI on the default (no-XLA) build.
+        let code = main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--partitions",
+            "2",
+            "--algo",
+            "dbh",
+            "--epochs",
+            "3",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn train_rejects_bad_dropedge_ratio() {
+        assert!(main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--dropedge-k",
+            "2",
+            "--dropedge-ratio",
+            "1.0",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn train_rejects_artifacts_flag_on_native_backend() {
+        assert!(main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--artifacts",
+            "artifacts",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn train_rejects_unknown_backend() {
+        assert!(main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--backend",
+            "tpu",
+        ]))
+        .is_err());
     }
 
     #[test]

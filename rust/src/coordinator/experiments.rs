@@ -24,7 +24,7 @@ use {
     crate::partition::Reweighting,
     crate::runtime::ArtifactKind,
     crate::simnet::{iteration_time, Cluster, Method, PartitionCommStats},
-    crate::train::engine::{model_config, RunMode, TrainConfig, TrainEngine},
+    crate::train::engine::{model_config, RunMode, TrainConfig, XlaEngine},
     crate::train::sampling::{build_pool, Sampler},
     crate::train::tensorize::tensorize_subgraph,
     crate::util::mean_std,
@@ -101,7 +101,7 @@ pub fn gpu_speedup() -> f64 {
 /// returns (mean_s, std_s) over `trials × time_iters` iterations.
 #[cfg(feature = "xla")]
 fn measure_cofree_compute(
-    engine: &mut TrainEngine,
+    engine: &mut XlaEngine,
     ds: &Dataset,
     p: usize,
     dropedge: Option<(usize, f64)>,
@@ -141,7 +141,7 @@ fn cofree_sim_ms(compute_s: f64, ds: &Dataset, p: usize, cluster: &Cluster) -> f
 /// straggler_comm_stats)`.
 #[cfg(feature = "xla")]
 fn measure_baseline_compute(
-    engine: &mut TrainEngine,
+    engine: &mut XlaEngine,
     ds: &Dataset,
     p: usize,
     opts: &ExpOptions,
@@ -162,6 +162,7 @@ fn measure_baseline_compute(
             continue;
         }
         let spec = engine
+            .backend
             .registry
             .find(&model, ArtifactKind::Train, ids.len(), 2 * local.num_edges().max(1))?
             .clone();
@@ -210,7 +211,7 @@ pub fn table1(opts: &ExpOptions) -> Result<String> {
         1,
         gpu_speedup()
     )?;
-    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut engine = XlaEngine::new(&opts.artifacts)?;
     for (ds_name, ps) in cells {
         let ds = ds_build(ds_name, BENCH_SCALE)?;
         writeln!(out, "\n== {ds_name} (n={}, m={}) ==", ds.graph.num_nodes(), ds.graph.num_edges())?;
@@ -282,7 +283,7 @@ pub fn table1(opts: &ExpOptions) -> Result<String> {
 /// Train CoFree on a vertex cut and return (best-val, test-at-best).
 #[cfg(feature = "xla")]
 fn train_cofree_acc(
-    engine: &mut TrainEngine,
+    engine: &mut XlaEngine,
     ds: &Dataset,
     p: usize,
     algo: &str,
@@ -301,7 +302,7 @@ fn train_cofree_acc(
 }
 
 #[cfg(feature = "xla")]
-fn train_full_acc(engine: &mut TrainEngine, ds: &Dataset, epochs: usize, seed: u64) -> Result<(f64, f64)> {
+fn train_full_acc(engine: &mut XlaEngine, ds: &Dataset, epochs: usize, seed: u64) -> Result<(f64, f64)> {
     let mut run = engine.prepare_full(ds, None, seed)?;
     let eval = engine.prepare_eval(ds)?;
     let cfg = TrainConfig { epochs, eval_every: 10, seed, ..Default::default() };
@@ -311,7 +312,7 @@ fn train_full_acc(engine: &mut TrainEngine, ds: &Dataset, epochs: usize, seed: u
 
 #[cfg(feature = "xla")]
 fn train_sampler_acc(
-    engine: &mut TrainEngine,
+    engine: &mut XlaEngine,
     ds: &Dataset,
     sampler: Sampler,
     epochs: usize,
@@ -320,7 +321,7 @@ fn train_sampler_acc(
     let model = model_config(ds);
     let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
     // Pool entries are at most the full graph; find a fitting artifact.
-    let spec = engine.registry.find(&model, ArtifactKind::Train, n, 2 * m)?.clone();
+    let spec = engine.backend.registry.find(&model, ArtifactKind::Train, n, 2 * m)?.clone();
     let mut rng = Rng::new(BENCH_SEED ^ seed ^ 0x5A);
     let pool = build_pool(ds, sampler, spec.n_pad, spec.e_pad, &mut rng)?;
     let mut run = engine.prepare_batches(&model, pool, RunMode::Rotate, seed)?;
@@ -342,7 +343,7 @@ pub fn table2(opts: &ExpOptions) -> Result<String> {
     let mut out = String::new();
     let mut csv = Vec::new();
     writeln!(out, "Table 2: test accuracy (%) at scale {ACC_SCALE}. DistDGL/PipeGCN/BNS-GCN train the full-graph paradigm (they differ from it only by communication schedule), so they share the full-graph row here.")?;
-    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut engine = XlaEngine::new(&opts.artifacts)?;
     let e = opts.acc_epochs;
     for (ds_name, ps) in cells {
         let ds = ds_build(ds_name, ACC_SCALE)?;
@@ -389,7 +390,7 @@ pub fn table3(opts: &ExpOptions) -> Result<String> {
     let mut csv = Vec::new();
     writeln!(out, "Table 3: reweighting ablation, {ABLATION_PARTS} partitions (paper: 256 on 256x larger graphs), NE vertex cut.")?;
     writeln!(out, "{:<16} {:>12} {:>14} {:>12}", "scheme", "reddit-sim", "products-sim", "yelp-sim")?;
-    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut engine = XlaEngine::new(&opts.artifacts)?;
     let mut rows: Vec<[f64; 3]> = Vec::new();
     for rw in [Reweighting::None, Reweighting::VanillaInv, Reweighting::Dar] {
         let mut vals = [0.0; 3];
@@ -415,7 +416,7 @@ pub fn table3(opts: &ExpOptions) -> Result<String> {
 /// replicas, weight 1 per node — the paper's Edge Cut row.
 #[cfg(feature = "xla")]
 fn train_edge_cut_acc(
-    engine: &mut TrainEngine,
+    engine: &mut XlaEngine,
     ds: &Dataset,
     p: usize,
     epochs: usize,
@@ -430,6 +431,7 @@ fn train_edge_cut_acc(
             continue;
         }
         let spec = engine
+            .backend
             .registry
             .find(&model, ArtifactKind::Train, part.global_ids.len(), 2 * part.local.num_edges().max(1))?
             .clone();
@@ -449,7 +451,7 @@ pub fn table4(opts: &ExpOptions) -> Result<String> {
     let mut csv = Vec::new();
     writeln!(out, "Table 4: partition-algorithm ablation, {ABLATION_PARTS} partitions, DAR reweighting.")?;
     writeln!(out, "{:<22} {:>12} {:>14} {:>12}", "partitioner", "reddit-sim", "products-sim", "yelp-sim")?;
-    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut engine = XlaEngine::new(&opts.artifacts)?;
     let algos: [(&str, &str); 5] = [
         ("Edge Cut (METIS-like)", "edge-cut"),
         ("Vertex Cut Random", "random"),
@@ -494,7 +496,7 @@ pub fn fig2(opts: &ExpOptions) -> Result<String> {
         ds.graph.num_edges(),
         gpu_speedup()
     )?;
-    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut engine = XlaEngine::new(&opts.artifacts)?;
     let mut csv = Vec::new();
     // Baselines: measured halo-graph compute (x8 partitions per GPU) +
     // multi-node comm model.
@@ -522,7 +524,7 @@ pub fn fig3(opts: &ExpOptions) -> Result<String> {
     let mut out = String::new();
     let mut csv = Vec::new();
     writeln!(out, "Figure 3: measured per-iteration compute (ms, raw CPU) vs number of partitions (NE + DAR).")?;
-    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut engine = XlaEngine::new(&opts.artifacts)?;
     let ps = [2usize, 4, 8, 16, 32];
     writeln!(out, "{:<16} {}", "dataset", ps.map(|p| format!("{p:>9}")).join(""))?;
     for ds_name in ["reddit-sim", "products-sim", "yelp-sim"] {
@@ -549,7 +551,7 @@ pub fn fig4(opts: &ExpOptions) -> Result<String> {
     let ds = ds_build("reddit-sim", ACC_SCALE)?;
     let epochs = opts.acc_epochs;
     writeln!(out, "Figure 4: training curves on reddit-sim (scale {ACC_SCALE}), CoFree-GNN (p=4, NE, DAR) vs full-graph training.")?;
-    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut engine = XlaEngine::new(&opts.artifacts)?;
     let eval = engine.prepare_eval(&ds)?;
 
     let mut full = engine.prepare_full(&ds, None, 0)?;
@@ -594,7 +596,7 @@ pub fn fig5(opts: &ExpOptions) -> Result<String> {
     let ps = [2usize, 8, 32, 128, 256];
     writeln!(out, "Figure 5: test accuracy vs number of partitions (NE + DAR, gradient accumulation).")?;
     writeln!(out, "{:<16} {}", "dataset", ps.map(|p| format!("{p:>9}")).join(""))?;
-    let mut engine = TrainEngine::new(&opts.artifacts)?;
+    let mut engine = XlaEngine::new(&opts.artifacts)?;
     for ds_name in ["reddit-sim", "products-sim", "yelp-sim"] {
         let ds = ds_build(ds_name, ACC_SCALE)?;
         let mut line = format!("{ds_name:<16}");

@@ -1,0 +1,102 @@
+//! The backend abstraction: one training loop, many execution substrates.
+//!
+//! [`crate::train::engine::TrainEngine`] implements Algorithm 1 once — worker
+//! selection, DropEdge-K mask picks, gradient all-reduce, optimizer step,
+//! metrics — and drives the per-partition `train_step` through this trait.
+//! Two backends implement it:
+//!
+//! * [`crate::train::cpu::CpuBackend`] — the native pure-Rust GraphSAGE
+//!   forward/backward (cache-blocked rayon SGEMM + CSR segment
+//!   aggregation). Default features; workers run in parallel on the host,
+//!   demonstrating communication-free parallelism in-process.
+//! * `XlaBackend` (`--features xla`) — the AOT-compiled PJRT artifacts.
+//!
+//! Determinism contract: [`Backend::run_workers`] must return outputs in
+//! `selected` order and every implementation must be bit-stable under any
+//! thread count; the engine then folds gradients sequentially in that order,
+//! so the summed gradient (and the whole training trajectory) is identical
+//! whether workers ran serially, on 2 threads, or on 64.
+
+use super::tensorize::{EvalBatch, TrainBatch};
+use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, TrainOut};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// Host-side per-worker metadata the engine keeps for loss normalization and
+/// accuracy denominators (so the trait needs no accessor methods).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerMeta {
+    /// `Σ_j tmask_j · dar_j` of the worker's batch.
+    pub local_train_weight: f64,
+    /// `Σ_j tmask_j` (train-accuracy denominator).
+    pub tmask_sum: f64,
+    /// Size of the worker's DropEdge-K mask bank (0 = no DropEdge).
+    pub num_masks: usize,
+}
+
+/// An execution substrate for the communication-free training loop.
+pub trait Backend {
+    /// Per-partition prepared state (device buffers, CSR indexes, …).
+    type Worker;
+    /// Prepared full-graph evaluation state.
+    type Eval;
+
+    /// Short stable identifier (`"cpu"`, `"xla"`).
+    fn name(&self) -> &'static str;
+
+    /// Padded `(n_pad, e_pad)` shape for a batch needing `n_need` nodes and
+    /// `e_need` *directed* edges. The PJRT backend answers from its artifact
+    /// registry; the native backend rounds to the quantum ladder.
+    fn bucket(
+        &mut self,
+        model: &ModelConfig,
+        kind: ArtifactKind,
+        n_need: usize,
+        e_need: usize,
+    ) -> Result<(usize, usize)>;
+
+    /// Prepare one worker from its tensorized batch (uploads / index
+    /// construction / DropEdge-K mask bank generation happen here, once).
+    fn prepare_worker(
+        &mut self,
+        model: &ModelConfig,
+        batch: TrainBatch,
+        dropedge: Option<(usize, f64)>,
+        rng: &mut Rng,
+    ) -> Result<Self::Worker>;
+
+    /// Prepare full-graph evaluation state.
+    fn prepare_eval(&mut self, model: &ModelConfig, batch: EvalBatch) -> Result<Self::Eval>;
+
+    /// Execute `train_step` on `workers[selected[i]]` with DropEdge mask
+    /// `picks[i]` for every `i`, returning `(TrainOut, compute_seconds)` in
+    /// `selected` order. Implementations are free to run the workers in
+    /// parallel (the native backend does, via rayon); `compute_seconds` is
+    /// each worker's own wall-clock, the `compute_i` in the reported
+    /// parallel-machine iteration time `max_i(compute_i) + allreduce`.
+    /// Timing caveat: when workers share one host (the native backend),
+    /// concurrent workers contend for cores, so `compute_seconds` is an
+    /// *upper bound* on each worker's dedicated-machine compute — honest
+    /// for wall-clock comparisons on this host, conservative for Table-1
+    /// style projections. The PJRT backend times workers sequentially and
+    /// has no such inflation.
+    fn run_workers(
+        &self,
+        workers: &[Self::Worker],
+        selected: &[usize],
+        picks: &[Option<usize>],
+        params: &ParamSet,
+    ) -> Result<Vec<(TrainOut, f64)>>;
+
+    /// Accuracy on a split (0 train, 1 val, 2 test) of a prepared eval setup.
+    fn evaluate(&self, eval: &Self::Eval, params: &ParamSet, split: usize) -> Result<f64>;
+
+    /// `(val, test)` accuracy in one call. Backends whose forward pass does
+    /// not depend on the split (the native backend) override this to run
+    /// the full-graph forward once and score both masks; the default just
+    /// evaluates twice (the PJRT artifact takes the mask as a device input,
+    /// so two executions is its natural shape).
+    fn evaluate_val_test(&self, eval: &Self::Eval, params: &ParamSet) -> Result<(f64, f64)> {
+        Ok((self.evaluate(eval, params, 1)?, self.evaluate(eval, params, 2)?))
+    }
+}

@@ -1,0 +1,370 @@
+//! Cache-blocked, rayon-parallel f32 matrix kernels for the native backend.
+//!
+//! Shapes here are small-to-medium (`n_pad` rows × feature/hidden columns),
+//! so the kernels optimize for the things that matter at that scale: B-row
+//! reuse (a 4-row micro-kernel loads each row of `b` once per four rows of
+//! `a`, quadrupling arithmetic intensity over the naive i-k-j loop),
+//! k-blocking to keep the active slice of `b` in L1/L2, and row-block
+//! parallelism via rayon.
+//!
+//! **Determinism:** every kernel accumulates each output element in a fixed
+//! ascending-`k` order and parallelizes over disjoint row blocks of fixed
+//! size, so results are bit-identical for any rayon pool size. `matmul` /
+//! `matmul_acc` also preserve the exact floating-point summation order of
+//! the naive `i-k-j` loop (ascending `k` per output element), which keeps
+//! the fast forward bit-compatible with `train::reference::forward`'s
+//! per-element sums.
+
+use rayon::prelude::*;
+
+/// Rows per rayon work unit. Fixed (not thread-count-derived) so chunk
+/// boundaries — and therefore results — do not depend on the pool size.
+const ROW_CHUNK: usize = 64;
+/// K-blocking depth: `KC` rows of `b` (`KC × n` floats) stay hot per pass.
+const KC: usize = 256;
+
+/// `c = a @ b` with `a: [m, k]`, `b: [k, n]`, `c: [m, n]`, all row-major.
+pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    matmul_acc(a, b, c, m, k, n);
+}
+
+/// `c += a @ b` (same shapes as [`matmul`]).
+pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    c.par_chunks_mut(ROW_CHUNK * n)
+        .zip(a.par_chunks(ROW_CHUNK * k))
+        .for_each(|(c_blk, a_blk)| {
+            let rows = c_blk.len() / n;
+            debug_assert_eq!(rows * k, a_blk.len());
+            block_acc(a_blk, b, c_blk, rows, k, n);
+        });
+}
+
+/// Column-tile width of the register micro-kernel: 4 rows × `JT` columns of
+/// accumulators (32 scalars) live in SIMD registers across the whole k
+/// sweep, so `c` is touched once per tile instead of once per `k` step.
+const JT: usize = 8;
+
+/// Serial row-block kernel: 4 rows of `a` at a time, `JT`-wide register
+/// accumulator tiles, `KC`-deep k blocks. Per output element the products
+/// accumulate in ascending-`k` order, exactly like the naive loop.
+fn block_acc(a: &[f32], b: &[f32], c: &mut [f32], rows: usize, k: usize, n: usize) {
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let mut i = 0;
+        while i + 4 <= rows {
+            let a0 = &a[i * k..(i + 1) * k];
+            let a1 = &a[(i + 1) * k..(i + 2) * k];
+            let a2 = &a[(i + 2) * k..(i + 3) * k];
+            let a3 = &a[(i + 3) * k..(i + 4) * k];
+            let mut j = 0;
+            while j + JT <= n {
+                let mut acc = [[0f32; JT]; 4];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let base = (i + r) * n + j;
+                    accr.copy_from_slice(&c[base..base + JT]);
+                }
+                for kk in k0..k1 {
+                    let xs = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                    let bt = &b[kk * n + j..kk * n + j + JT];
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let x = xs[r];
+                        for (av, &bv) in accr.iter_mut().zip(bt.iter()) {
+                            *av += x * bv;
+                        }
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate() {
+                    let base = (i + r) * n + j;
+                    c[base..base + JT].copy_from_slice(accr);
+                }
+                j += JT;
+            }
+            if j < n {
+                // Column tail (< JT columns): per-element accumulation in
+                // the same ascending-k order.
+                for kk in k0..k1 {
+                    let xs = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for (r, &x) in xs.iter().enumerate() {
+                        if x == 0.0 {
+                            continue;
+                        }
+                        let crow = &mut c[(i + r) * n..(i + r + 1) * n];
+                        for jj in j..n {
+                            crow[jj] += x * brow[jj];
+                        }
+                    }
+                }
+            }
+            i += 4;
+        }
+        // Row tail (< 4 rows).
+        while i < rows {
+            let crow = &mut c[i * n..(i + 1) * n];
+            let arow = &a[i * k..(i + 1) * k];
+            for kk in k0..k1 {
+                let x = arow[kk];
+                if x == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..kk * n + n];
+                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *cv += x * bv;
+                }
+            }
+            i += 1;
+        }
+        k0 = k1;
+    }
+}
+
+/// `c = aᵀ @ b` with `a: [m, k]`, `b: [m, n]`, `c: [k, n]` — the
+/// weight-gradient shape (`dW = hᵀ @ dpre`). Parallel over the `k` output
+/// rows; each row sums over `i` in fixed ascending order.
+pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(c.len(), k * n);
+    if k == 0 || n == 0 {
+        return;
+    }
+    c.par_chunks_mut(n).enumerate().for_each(|(kk, crow)| {
+        crow.fill(0.0);
+        for i in 0..m {
+            let x = a[i * k + kk];
+            if x != 0.0 {
+                let brow = &b[i * n..i * n + n];
+                for (j, &bv) in brow.iter().enumerate() {
+                    crow[j] += x * bv;
+                }
+            }
+        }
+    });
+}
+
+/// `c = a @ bᵀ` with `a: [m, n]`, `b: [p, n]`, `c: [m, p]` — the
+/// input-gradient shape (`dh = dout @ Uᵀ`). Row-parallel; each output
+/// element is one contiguous-row dot product.
+pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, p: usize) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(b.len(), p * n);
+    debug_assert_eq!(c.len(), m * p);
+    if m == 0 || p == 0 {
+        return;
+    }
+    if n == 0 {
+        c.fill(0.0);
+        return;
+    }
+    c.par_chunks_mut(p).zip(a.par_chunks(n)).for_each(|(crow, arow)| {
+        for (kk, cv) in crow.iter_mut().enumerate() {
+            let brow = &b[kk * n..kk * n + n];
+            let mut s = 0.0f32;
+            for (j, &av) in arow.iter().enumerate() {
+                s += av * brow[j];
+            }
+            *cv = s;
+        }
+    });
+}
+
+/// Broadcast a length-`n` row into every row of `c` (bias init before the
+/// accumulating matmuls — matches the reference's `out[i][j] = c[j] + …`
+/// summation order).
+pub fn broadcast_rows(row: &[f32], c: &mut [f32], n: usize) {
+    debug_assert_eq!(row.len(), n);
+    debug_assert_eq!(c.len() % n, 0);
+    c.par_chunks_mut(n).for_each(|r| r.copy_from_slice(row));
+}
+
+/// Fused `c[i][j] = relu(c[i][j] + bias[j])` over rows (matches the
+/// reference's `(Σ products) + b` order, *then* ReLU).
+pub fn bias_relu_rows(c: &mut [f32], bias: &[f32], n: usize) {
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(c.len() % n, 0);
+    c.par_chunks_mut(n).for_each(|row| {
+        for (j, x) in row.iter_mut().enumerate() {
+            let v = *x + bias[j];
+            *x = if v > 0.0 { v } else { 0.0 };
+        }
+    });
+}
+
+/// Column sums: `out[j] = Σ_i a[i][j]` (`a: [m, n]`) — the bias-gradient
+/// reduction. Sequential ascending-`i`, deterministic by construction.
+pub fn col_sums(a: &[f32], m: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * n);
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * n..i * n + n];
+        for (j, &v) in arow.iter().enumerate() {
+            out[j] += v;
+        }
+    }
+}
+
+/// Elementwise `c += other`.
+pub fn add_assign(c: &mut [f32], other: &[f32]) {
+    debug_assert_eq!(c.len(), other.len());
+    c.par_chunks_mut(4096).zip(other.par_chunks(4096)).for_each(|(cb, ob)| {
+        for (x, &y) in cb.iter_mut().zip(ob.iter()) {
+            *x += y;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.f32() * 2.0 - 1.0).collect()
+    }
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let x = a[i * k + kk];
+                if x != 0.0 {
+                    for j in 0..n {
+                        c[i * n + j] += x * b[kk * n + j];
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+        assert_eq!(got.len(), want.len());
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * (1.0 + w.abs()),
+                "elem {i}: got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive_on_odd_shapes() {
+        let mut rng = Rng::new(1);
+        // Shapes straddling the MR=4, ROW_CHUNK=64 and KC=256 boundaries.
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 8, 16),
+            (65, 300, 9),
+            (130, 257, 33),
+            (7, 1, 4),
+        ] {
+            let a = rand_mat(&mut rng, m * k);
+            let b = rand_mat(&mut rng, k * n);
+            let mut c = vec![9.9f32; m * n];
+            matmul(&a, &b, &mut c, m, k, n);
+            assert_close(&c, &naive(&a, &b, m, k, n), 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_acc_accumulates() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (10usize, 6usize, 5usize);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let mut c = vec![1.0f32; m * n];
+        matmul_acc(&a, &b, &mut c, m, k, n);
+        let mut want = naive(&a, &b, m, k, n);
+        want.iter_mut().for_each(|x| *x += 1.0);
+        assert_close(&c, &want, 1e-5);
+    }
+
+    #[test]
+    fn matmul_tn_matches_transposed_naive() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (33usize, 7usize, 11usize);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, m * n);
+        let mut c = vec![0f32; k * n];
+        matmul_tn(&a, &b, &mut c, m, k, n);
+        // aᵀ laid out explicitly, then naive.
+        let mut at = vec![0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        assert_close(&c, &naive(&at, &b, k, m, n), 1e-5);
+    }
+
+    #[test]
+    fn matmul_nt_matches_transposed_naive() {
+        let mut rng = Rng::new(4);
+        let (m, n, p) = (9usize, 13usize, 6usize);
+        let a = rand_mat(&mut rng, m * n);
+        let b = rand_mat(&mut rng, p * n);
+        let mut c = vec![0f32; m * p];
+        matmul_nt(&a, &b, &mut c, m, n, p);
+        let mut bt = vec![0f32; n * p];
+        for kk in 0..p {
+            for j in 0..n {
+                bt[j * p + kk] = b[kk * n + j];
+            }
+        }
+        assert_close(&c, &naive(&a, &bt, m, n, p), 1e-5);
+    }
+
+    #[test]
+    fn kernels_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (200usize, 130usize, 40usize);
+        let a = rand_mat(&mut rng, m * k);
+        let b = rand_mat(&mut rng, k * n);
+        let mut base = vec![0f32; m * n];
+        matmul(&a, &b, &mut base, m, k, n);
+        for threads in [1usize, 2, 8] {
+            let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+            let mut c = vec![0f32; m * n];
+            pool.install(|| matmul(&a, &b, &mut c, m, k, n));
+            assert_eq!(c, base, "matmul differs at {threads} threads");
+            let bb = rand_mat(&mut Rng::new(6), m * n);
+            let mut t = vec![0f32; k * n];
+            let mut t_base = vec![0f32; k * n];
+            matmul_tn(&a, &bb, &mut t_base, m, k, n);
+            pool.install(|| matmul_tn(&a, &bb, &mut t, m, k, n));
+            assert_eq!(t, t_base, "matmul_tn differs at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn bias_relu_and_colsums() {
+        let c0 = vec![1.0f32, -2.0, 0.5, -0.1, 3.0, 0.0];
+        let bias = vec![0.1f32, 0.2];
+        let mut c = c0.clone();
+        bias_relu_rows(&mut c, &bias, 2);
+        assert_close(&c, &[1.1, 0.0, 0.6, 0.1, 3.1, 0.2], 1e-6);
+        let mut sums = vec![0f32; 2];
+        col_sums(&c0, 3, 2, &mut sums);
+        assert!((sums[0] - 4.5).abs() < 1e-6);
+        assert!((sums[1] + 2.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn broadcast_and_add_assign() {
+        let mut c = vec![0f32; 6];
+        broadcast_rows(&[1.0, 2.0], &mut c, 2);
+        assert_eq!(c, vec![1.0, 2.0, 1.0, 2.0, 1.0, 2.0]);
+        add_assign(&mut c, &[1.0; 6]);
+        assert_eq!(c, vec![2.0, 3.0, 2.0, 3.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,619 @@
+//! Native GraphSAGE forward + backward over a tensorized batch.
+//!
+//! The math mirrors `train::reference` layer-for-layer (that module stays
+//! the slow parity oracle); the differences are purely mechanical:
+//!
+//! * the `h@W` / `concat@U` products run through the blocked, rayon-parallel
+//!   kernels in [`super::gemm`] instead of naive triple loops;
+//! * the weighted neighbor mean is a CSR-style segment sum over a
+//!   prebuilt [`EdgeCsr`] (parallel over destination nodes, no per-edge
+//!   scatter, no atomics) and its backward is the mirror-image gather over
+//!   the source-grouped half of the index;
+//! * the DAR-weighted softmax-CE gradient is computed analytically, so one
+//!   [`train_step`](super::train_step) produces the same
+//!   `(loss_sum, weight_sum, correct, grads)` tuple the PJRT artifacts emit.
+//!
+//! Everything here is deterministic for any rayon pool size: per-element
+//! accumulation orders are fixed (ascending `k`, ascending edge id,
+//! ascending node id) and cross-node reductions fold sequentially.
+
+use super::gemm;
+use crate::runtime::{ModelConfig, ParamSet};
+use crate::train::reference::argmax;
+use crate::train::tensorize::{EvalBatch, TrainBatch};
+use rayon::prelude::*;
+
+/// Edge index of one padded batch: the directed message edges grouped both
+/// by destination (forward aggregation) and by source (backward scatter).
+/// Built once per worker from the *base* `emask` — padding slots never
+/// enter; DropEdge masks are applied per-iteration through the stored edge
+/// ids.
+#[derive(Clone, Debug)]
+pub struct EdgeCsr {
+    pub n: usize,
+    /// `in_off[d]..in_off[d+1]` indexes `in_src`/`in_eid`: incoming edges of
+    /// `d` in ascending edge-id order (matching the reference's scatter
+    /// order per destination, so sums agree bit-for-bit).
+    pub in_off: Vec<u32>,
+    pub in_src: Vec<u32>,
+    pub in_eid: Vec<u32>,
+    /// `out_off[s]..out_off[s+1]` indexes `out_dst`/`out_eid`: edges whose
+    /// source is `s`, ascending edge-id order.
+    pub out_off: Vec<u32>,
+    pub out_dst: Vec<u32>,
+    pub out_eid: Vec<u32>,
+}
+
+impl EdgeCsr {
+    /// Build from a batch's `src`/`dst`/`emask` tensors (counting sort,
+    /// two passes each way). Slots with `base_emask == 0` (padding) are
+    /// excluded.
+    pub fn build(n: usize, src: &[i32], dst: &[i32], base_emask: &[f32]) -> EdgeCsr {
+        let e = src.len();
+        debug_assert_eq!(dst.len(), e);
+        debug_assert_eq!(base_emask.len(), e);
+        let mut in_off = vec![0u32; n + 1];
+        let mut out_off = vec![0u32; n + 1];
+        let mut live = 0usize;
+        for k in 0..e {
+            if base_emask[k] == 0.0 {
+                continue;
+            }
+            in_off[dst[k] as usize + 1] += 1;
+            out_off[src[k] as usize + 1] += 1;
+            live += 1;
+        }
+        for v in 0..n {
+            in_off[v + 1] += in_off[v];
+            out_off[v + 1] += out_off[v];
+        }
+        let mut in_src = vec![0u32; live];
+        let mut in_eid = vec![0u32; live];
+        let mut out_dst = vec![0u32; live];
+        let mut out_eid = vec![0u32; live];
+        let mut in_cur: Vec<u32> = in_off[..n].to_vec();
+        let mut out_cur: Vec<u32> = out_off[..n].to_vec();
+        for k in 0..e {
+            if base_emask[k] == 0.0 {
+                continue;
+            }
+            let (s, d) = (src[k] as usize, dst[k] as usize);
+            let ic = in_cur[d] as usize;
+            in_src[ic] = s as u32;
+            in_eid[ic] = k as u32;
+            in_cur[d] += 1;
+            let oc = out_cur[s] as usize;
+            out_dst[oc] = d as u32;
+            out_eid[oc] = k as u32;
+            out_cur[s] += 1;
+        }
+        EdgeCsr { n, in_off, in_src, in_eid, out_off, out_dst, out_eid }
+    }
+
+    /// Build from a training batch's `src`/`dst`/base-`emask` tensors.
+    pub fn from_batch(batch: &TrainBatch) -> EdgeCsr {
+        EdgeCsr::build(
+            batch.n_pad,
+            batch.tensors[1].as_i32(),
+            batch.tensors[2].as_i32(),
+            batch.emask().as_f32(),
+        )
+    }
+
+    /// Build from an eval batch (same `src`/`dst`/`emask` tensor slots).
+    pub fn from_eval(batch: &EvalBatch) -> EdgeCsr {
+        EdgeCsr::build(
+            batch.n_pad,
+            batch.tensors[1].as_i32(),
+            batch.tensors[2].as_i32(),
+            batch.tensors[3].as_f32(),
+        )
+    }
+
+    /// Number of live (non-padding) directed edges.
+    pub fn num_edges(&self) -> usize {
+        self.in_src.len()
+    }
+}
+
+/// All per-layer intermediates of one forward pass, kept for the backward.
+/// The feature matrix itself is NOT copied in — layer 0's input stays the
+/// caller's `feat` slice (re-passed to [`backward`]), so a train step
+/// allocates no per-iteration copy of the features.
+pub struct ForwardState {
+    pub n: usize,
+    /// `outs[l]` = output of layer `l`; `outs[layers-1]` = logits
+    /// `[n, classes]`.
+    pub outs: Vec<Vec<f32>>,
+    /// Post-ReLU messages per layer, `[n, hidden]`.
+    pub msgs: Vec<Vec<f32>>,
+    /// Aggregated (weighted-mean) neighbor messages per layer.
+    pub aggs: Vec<Vec<f32>>,
+    /// Per-node mean denominators `max(Σ w, 1e-9)` per layer.
+    pub denoms: Vec<Vec<f32>>,
+}
+
+impl ForwardState {
+    pub fn logits(&self) -> &[f32] {
+        self.outs.last().expect("forward ran")
+    }
+}
+
+/// Weighted segment mean: `agg[d] = Σ_{e→d} w_e · msg[src_e] / denom_d`.
+fn aggregate(
+    csr: &EdgeCsr,
+    emask: &[f32],
+    msg: &[f32],
+    agg: &mut [f32],
+    denom: &mut [f32],
+    h: usize,
+) {
+    agg.par_chunks_mut(h).zip(denom.par_iter_mut()).enumerate().for_each(
+        |(d, (row, den))| {
+            let mut cnt = 0f32;
+            let lo = csr.in_off[d] as usize;
+            let hi = csr.in_off[d + 1] as usize;
+            for idx in lo..hi {
+                let w = emask[csr.in_eid[idx] as usize];
+                if w == 0.0 {
+                    continue;
+                }
+                let s = csr.in_src[idx] as usize;
+                let srow = &msg[s * h..s * h + h];
+                for (j, &mv) in srow.iter().enumerate() {
+                    row[j] += w * mv;
+                }
+                cnt += w;
+            }
+            let dn = cnt.max(1e-9);
+            for v in row.iter_mut() {
+                *v /= dn;
+            }
+            *den = dn;
+        },
+    );
+}
+
+/// Backward of [`aggregate`] w.r.t. `msg`:
+/// `dmsg[s] = Σ_{e: src_e = s} (w_e / denom_{dst_e}) · dagg[dst_e]`.
+fn scatter_grad(
+    csr: &EdgeCsr,
+    emask: &[f32],
+    denom: &[f32],
+    dagg: &[f32],
+    dmsg: &mut [f32],
+    h: usize,
+) {
+    dmsg.par_chunks_mut(h).enumerate().for_each(|(s, row)| {
+        row.fill(0.0);
+        let lo = csr.out_off[s] as usize;
+        let hi = csr.out_off[s + 1] as usize;
+        for idx in lo..hi {
+            let w = emask[csr.out_eid[idx] as usize];
+            if w == 0.0 {
+                continue;
+            }
+            let d = csr.out_dst[idx] as usize;
+            let f = w / denom[d];
+            let drow = &dagg[d * h..d * h + h];
+            for (j, &dv) in drow.iter().enumerate() {
+                row[j] += f * dv;
+            }
+        }
+    });
+}
+
+/// Fast forward pass; keeps every intermediate needed by [`backward`].
+pub fn forward(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    feat: &[f32],
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+) -> ForwardState {
+    debug_assert_eq!(feat.len(), n * cfg.feat_dim);
+    debug_assert_eq!(csr.n, n);
+    let h = cfg.hidden;
+    let mut outs: Vec<Vec<f32>> = Vec::with_capacity(cfg.layers);
+    let mut msgs = Vec::with_capacity(cfg.layers);
+    let mut aggs = Vec::with_capacity(cfg.layers);
+    let mut denoms = Vec::with_capacity(cfg.layers);
+    let mut d_in = cfg.feat_dim;
+    for l in 0..cfg.layers {
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let w = &params.data[4 * l];
+        let b = &params.data[4 * l + 1];
+        let u = &params.data[4 * l + 2];
+        let c = &params.data[4 * l + 3];
+        let hin: &[f32] = if l == 0 { feat } else { &outs[l - 1] };
+        // msg = relu(hin @ W + b)
+        let mut msg = vec![0f32; n * h];
+        gemm::matmul(hin, w, &mut msg, n, d_in, h);
+        gemm::bias_relu_rows(&mut msg, b, h);
+        // agg = masked weighted neighbor mean
+        let mut agg = vec![0f32; n * h];
+        let mut denom = vec![0f32; n];
+        aggregate(csr, emask, &msg, &mut agg, &mut denom, h);
+        // out = concat(agg, hin) @ U + c  (bias first, then the two halves —
+        // the reference's exact summation order)
+        let mut out = vec![0f32; n * d_out];
+        gemm::broadcast_rows(c, &mut out, d_out);
+        gemm::matmul_acc(&agg, &u[..h * d_out], &mut out, n, h, d_out);
+        gemm::matmul_acc(hin, &u[h * d_out..], &mut out, n, d_in, d_out);
+        msgs.push(msg);
+        aggs.push(agg);
+        denoms.push(denom);
+        outs.push(out);
+        d_in = d_out;
+    }
+    ForwardState { n, outs, msgs, aggs, denoms }
+}
+
+/// Loss, metrics and the logits gradient in one pass.
+pub struct LossOut {
+    pub loss_sum: f64,
+    pub weight_sum: f64,
+    pub correct: f64,
+    /// `d loss_sum / d logits`, `[n, classes]`.
+    pub dlogits: Vec<f32>,
+}
+
+/// DAR-weighted softmax cross-entropy: matches
+/// `reference::loss_and_metrics` on the scalar outputs and additionally
+/// returns the analytic logits gradient `w_i · (softmax − onehot)`.
+pub fn loss_and_grad(
+    cfg: &ModelConfig,
+    logits: &[f32],
+    dar: &[f32],
+    labels: &[i32],
+    tmask: &[f32],
+    n: usize,
+) -> LossOut {
+    let c = cfg.classes;
+    debug_assert_eq!(logits.len(), n * c);
+    let mut dlogits = vec![0f32; n * c];
+    let mut per_node = vec![(0f64, 0f64, 0f64); n];
+    dlogits.par_chunks_mut(c).zip(per_node.par_iter_mut()).enumerate().for_each(
+        |(i, (drow, acc))| {
+            let row = &logits[i * c..i * c + c];
+            let t = tmask[i];
+            let w = (dar[i] * t) as f64;
+            let mut correct = 0f64;
+            if t > 0.0 {
+                let am = argmax(row);
+                // NaN at the winner ⇒ no real prediction ⇒ never correct.
+                if !row[am].is_nan() && am as i32 == labels[i] {
+                    correct = t as f64;
+                }
+            }
+            if w > 0.0 {
+                let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0f64;
+                for &x in row {
+                    z += ((x - maxv) as f64).exp();
+                }
+                let logz = maxv as f64 + z.ln();
+                let ce = logz - row[labels[i] as usize] as f64;
+                let wf = w as f32;
+                for (j, dv) in drow.iter_mut().enumerate() {
+                    let p = (((row[j] - maxv) as f64).exp() / z) as f32;
+                    let onehot = if j as i32 == labels[i] { 1.0 } else { 0.0 };
+                    *dv = wf * (p - onehot);
+                }
+                *acc = (w * ce, w, correct);
+            } else {
+                *acc = (0.0, 0.0, correct);
+            }
+        },
+    );
+    // Sequential fold in node order: deterministic for any pool size.
+    let (mut loss_sum, mut weight_sum, mut correct) = (0f64, 0f64, 0f64);
+    for &(l, w, cr) in &per_node {
+        loss_sum += l;
+        weight_sum += w;
+        correct += cr;
+    }
+    LossOut { loss_sum, weight_sum, correct, dlogits }
+}
+
+/// Backward pass: gradients of `loss_sum` w.r.t. every parameter, in the
+/// artifact's lowering order (`W, b, U, c` per layer).
+pub fn backward(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    st: &ForwardState,
+    feat: &[f32],
+    dlogits: Vec<f32>,
+    emask: &[f32],
+    csr: &EdgeCsr,
+) -> Vec<Vec<f32>> {
+    let n = st.n;
+    let h = cfg.hidden;
+    let mut grads: Vec<Vec<f32>> = params.data.iter().map(|p| vec![0f32; p.len()]).collect();
+    let mut dout = dlogits;
+    for l in (0..cfg.layers).rev() {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let w = &params.data[4 * l];
+        let u = &params.data[4 * l + 2];
+        let hin: &[f32] = if l == 0 { feat } else { &st.outs[l - 1] };
+        let msg = &st.msgs[l];
+        let agg = &st.aggs[l];
+        let denom = &st.denoms[l];
+        debug_assert_eq!(dout.len(), n * d_out);
+        // dc = column sums of dout.
+        gemm::col_sums(&dout, n, d_out, &mut grads[4 * l + 3]);
+        // dU: top h rows from the agg half, bottom d_in rows from the h half.
+        {
+            let du = &mut grads[4 * l + 2];
+            gemm::matmul_tn(agg, &dout, &mut du[..h * d_out], n, h, d_out);
+            gemm::matmul_tn(hin, &dout, &mut du[h * d_out..], n, d_in, d_out);
+        }
+        // Gradient flowing into the aggregation half of the concat.
+        let mut dagg = vec![0f32; n * h];
+        gemm::matmul_nt(&dout, &u[..h * d_out], &mut dagg, n, d_out, h);
+        // Through the mean aggregation (denominators are weight-only
+        // constants) and the ReLU.
+        let mut dmsg = vec![0f32; n * h];
+        scatter_grad(csr, emask, denom, &dagg, &mut dmsg, h);
+        dmsg.par_chunks_mut(h)
+            .zip(msg.par_chunks(h))
+            .for_each(|(drow, mrow)| {
+                for (dv, &mv) in drow.iter_mut().zip(mrow.iter()) {
+                    if mv <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+            });
+        gemm::matmul_tn(hin, &dmsg, &mut grads[4 * l], n, d_in, h);
+        gemm::col_sums(&dmsg, n, h, &mut grads[4 * l + 1]);
+        // Input gradient for the next (shallower) layer — skipped at layer
+        // 0, where the input is the feature data and its gradient would be
+        // two n×d_in GEMMs of pure waste.
+        if l == 0 {
+            break;
+        }
+        let mut dh = vec![0f32; n * d_in];
+        gemm::matmul_nt(&dout, &u[h * d_out..], &mut dh, n, d_out, d_in);
+        let mut dh_msg = vec![0f32; n * d_in];
+        gemm::matmul_nt(&dmsg, w, &mut dh_msg, n, h, d_in);
+        gemm::add_assign(&mut dh, &dh_msg);
+        dout = dh;
+    }
+    grads
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::features::{synthesize, FeatureParams};
+    use crate::graph::generators::barabasi_albert;
+    use crate::partition::testutil::graph_zoo;
+    use crate::partition::{dar_weights, random::RandomVertexCut, Reweighting, VertexCut};
+    use crate::train::reference;
+    use crate::train::tensorize::{tensorize_partition, TrainBatch};
+    use crate::util::rng::Rng;
+
+    fn batch_csr(batch: &TrainBatch) -> EdgeCsr {
+        EdgeCsr::from_batch(batch)
+    }
+
+    fn setup(layers: usize, seed: u64) -> (ModelConfig, ParamSet, TrainBatch) {
+        let mut rng = Rng::new(seed);
+        let g = barabasi_albert(120, 3, &mut rng);
+        let comm: Vec<u32> = (0..120).map(|i| (i % 3) as u32).collect();
+        let nd = synthesize(&comm, 3, &FeatureParams { dim: 6, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 128, 1024).unwrap();
+        let cfg = ModelConfig { layers, feat_dim: 6, hidden: 8, classes: 3 };
+        let params = ParamSet::init_glorot(&cfg, &mut rng);
+        (cfg, params, batch)
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!(
+                (g - w).abs() <= tol * (1.0 + w.abs()),
+                "{what} elem {i}: got {g}, want {w}"
+            );
+        }
+    }
+
+    #[test]
+    fn edge_csr_covers_live_edges_both_ways() {
+        let (_, _, batch) = setup(1, 80);
+        let csr = batch_csr(&batch);
+        assert_eq!(csr.num_edges(), batch.e_used);
+        assert_eq!(csr.out_eid.len(), batch.e_used);
+        // Every live edge appears exactly once on each side, with matching
+        // endpoints.
+        let src = batch.tensors[1].as_i32();
+        let dst = batch.tensors[2].as_i32();
+        let mut seen = vec![false; batch.e_pad];
+        for d in 0..csr.n {
+            for idx in csr.in_off[d] as usize..csr.in_off[d + 1] as usize {
+                let e = csr.in_eid[idx] as usize;
+                assert!(!seen[e]);
+                seen[e] = true;
+                assert_eq!(dst[e] as usize, d);
+                assert_eq!(src[e] as u32, csr.in_src[idx]);
+            }
+        }
+        assert_eq!(seen.iter().filter(|&&s| s).count(), batch.e_used);
+    }
+
+    /// Satellite: the fast forward matches `reference::forward` within tight
+    /// f32 tolerance across the graph zoo, several layer counts, and any
+    /// rayon pool size.
+    #[test]
+    fn forward_matches_reference_across_zoo_and_threads() {
+        for (gi, g) in graph_zoo(21).iter().enumerate() {
+            let n = g.num_nodes();
+            let mut rng = Rng::new(100 + gi as u64);
+            let comm: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+            let nd =
+                synthesize(&comm, 4, &FeatureParams { dim: 5, ..Default::default() }, &mut rng);
+            let vc = VertexCut::create(g, 2, &RandomVertexCut, &mut rng);
+            let w = dar_weights(g, &vc, Reweighting::Dar);
+            if vc.parts[0].num_edges() == 0 {
+                continue;
+            }
+            let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 256, 2048).unwrap();
+            let csr = batch_csr(&batch);
+            for layers in [1usize, 2, 3] {
+                let cfg = ModelConfig { layers, feat_dim: 5, hidden: 7, classes: 4 };
+                let params = ParamSet::init_glorot(&cfg, &mut rng.fork(layers as u64));
+                let want = reference::forward(&cfg, &params, &batch);
+                let feat = batch.tensors[0].as_f32();
+                let emask = batch.emask().as_f32();
+                let got = forward(&cfg, &params, feat, emask, &csr, batch.n_pad);
+                assert_close(got.logits(), &want, 1e-4, "logits");
+                for threads in [1usize, 2, 8] {
+                    let pool = rayon::ThreadPoolBuilder::new()
+                        .num_threads(threads)
+                        .build()
+                        .unwrap();
+                    let got_t = pool
+                        .install(|| forward(&cfg, &params, feat, emask, &csr, batch.n_pad));
+                    assert_eq!(
+                        got_t.logits(),
+                        got.logits(),
+                        "graph#{gi} layers={layers}: forward differs at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn loss_and_grad_matches_reference_metrics() {
+        let (cfg, params, batch) = setup(2, 80);
+        let csr = batch_csr(&batch);
+        let st = forward(
+            &cfg,
+            &params,
+            batch.tensors[0].as_f32(),
+            batch.emask().as_f32(),
+            &csr,
+            batch.n_pad,
+        );
+        let logits = reference::forward(&cfg, &params, &batch);
+        let (l, w, c) = reference::loss_and_metrics(&cfg, &logits, &batch);
+        let lo = loss_and_grad(
+            &cfg,
+            st.logits(),
+            batch.tensors[4].as_f32(),
+            batch.tensors[5].as_i32(),
+            batch.tensors[6].as_f32(),
+            batch.n_pad,
+        );
+        assert!((lo.loss_sum - l).abs() < 1e-3 * (1.0 + l.abs()), "{} vs {l}", lo.loss_sum);
+        assert!((lo.weight_sum - w).abs() < 1e-4, "{} vs {w}", lo.weight_sum);
+        // The two forwards agree to f32 noise; allow at most one tie-flip in
+        // the argmax-based correct count.
+        assert!((lo.correct - c).abs() <= 1.0, "{} vs {c}", lo.correct);
+        // dlogits rows sum to ~0 (softmax minus one-hot, scaled).
+        for i in 0..batch.n_pad {
+            let s: f32 = lo.dlogits[i * cfg.classes..(i + 1) * cfg.classes].iter().sum();
+            assert!(s.abs() < 1e-4, "row {i} grad sum {s}");
+        }
+    }
+
+    /// Satellite: finite-difference gradient check of the native backward on
+    /// a small graph. Central differences at f32 working precision: the
+    /// tolerance is loose in ULP terms but far tighter than any sign or
+    /// indexing bug.
+    #[test]
+    fn backward_matches_finite_differences() {
+        let (cfg, mut params, batch) = setup(2, 81);
+        let csr = batch_csr(&batch);
+        let feat = batch.tensors[0].as_f32().to_vec();
+        let emask = batch.emask().as_f32().to_vec();
+        let dar = batch.tensors[4].as_f32().to_vec();
+        let labels = batch.tensors[5].as_i32().to_vec();
+        let tmask = batch.tensors[6].as_f32().to_vec();
+        let n = batch.n_pad;
+        let loss_of = |p: &ParamSet| -> f64 {
+            let st = forward(&cfg, p, &feat, &emask, &csr, n);
+            loss_and_grad(&cfg, st.logits(), &dar, &labels, &tmask, n).loss_sum
+        };
+        let st = forward(&cfg, &params, &feat, &emask, &csr, n);
+        let lo = loss_and_grad(&cfg, st.logits(), &dar, &labels, &tmask, n);
+        let grads = backward(&cfg, &params, &st, &feat, lo.dlogits, &emask, &csr);
+        assert_eq!(grads.len(), params.data.len());
+        let eps = 2e-2f32;
+        let (mut num_sq, mut diff_sq) = (0f64, 0f64);
+        let mut checked = 0usize;
+        for pi in 0..params.data.len() {
+            // Probe a spread of entries in every parameter tensor.
+            let len = params.data[pi].len();
+            let step = (len / 25).max(1);
+            for ei in (0..len).step_by(step) {
+                let orig = params.data[pi][ei];
+                params.data[pi][ei] = orig + eps;
+                let lp = loss_of(&params);
+                params.data[pi][ei] = orig - eps;
+                let lm = loss_of(&params);
+                params.data[pi][ei] = orig;
+                let numeric = (lp - lm) / (2.0 * eps as f64);
+                let analytic = grads[pi][ei] as f64;
+                num_sq += numeric * numeric;
+                diff_sq += (analytic - numeric) * (analytic - numeric);
+                checked += 1;
+                // Per-entry check with a generous absolute floor (f32
+                // forward noise) on top of 5% relative.
+                assert!(
+                    (analytic - numeric).abs() <= 0.05 * numeric.abs().max(1.0) + 5e-3,
+                    "param {pi} elem {ei}: analytic {analytic} vs numeric {numeric}"
+                );
+            }
+        }
+        assert!(checked > 50, "probe coverage too small: {checked}");
+        // Aggregate: relative L2 error across all probes.
+        let rel = (diff_sq / num_sq.max(1e-12)).sqrt();
+        assert!(rel < 0.05, "aggregate finite-difference error {rel}");
+    }
+
+    #[test]
+    fn backward_bit_identical_across_thread_counts() {
+        let (cfg, params, batch) = setup(3, 82);
+        let csr = batch_csr(&batch);
+        let feat = batch.tensors[0].as_f32();
+        let emask = batch.emask().as_f32();
+        let dar = batch.tensors[4].as_f32();
+        let labels = batch.tensors[5].as_i32();
+        let tmask = batch.tensors[6].as_f32();
+        let run = || {
+            let st = forward(&cfg, &params, feat, emask, &csr, batch.n_pad);
+            let lo = loss_and_grad(&cfg, st.logits(), dar, labels, tmask, batch.n_pad);
+            backward(&cfg, &params, &st, feat, lo.dlogits, emask, &csr)
+        };
+        let base = run();
+        for threads in [1usize, 2, 8] {
+            let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+            let got = pool.install(run);
+            assert_eq!(got, base, "gradients differ at {threads} threads");
+        }
+    }
+
+    #[test]
+    fn dropedge_mask_changes_aggregation_only_through_weights() {
+        // Zeroing every edge weight makes agg zero: logits collapse to the
+        // no-neighbor path, and the CSR (built from the base mask) still
+        // works with the swapped-in empty mask.
+        let (cfg, params, batch) = setup(1, 83);
+        let csr = batch_csr(&batch);
+        let feat = batch.tensors[0].as_f32();
+        let zeros = vec![0f32; batch.e_pad];
+        let st = forward(&cfg, &params, feat, &zeros, &csr, batch.n_pad);
+        for denom in &st.denoms[0][..batch.n_used] {
+            assert_eq!(*denom, 1e-9);
+        }
+        for v in &st.aggs[0] {
+            assert_eq!(*v, 0.0);
+        }
+    }
+}

@@ -15,6 +15,7 @@
 use super::tensorize::TrainBatch;
 use crate::runtime::Tensor;
 use crate::util::rng::Rng;
+use rayon::prelude::*;
 
 /// A bank of K pre-generated DropEdge masks for one partition.
 #[derive(Clone, Debug)]
@@ -28,7 +29,39 @@ pub struct MaskBank {
 impl MaskBank {
     /// Generate `k` masks with drop probability `ratio` over the valid
     /// (canonical) edges of `batch`.
+    ///
+    /// Rayon-parallel over the masks: each mask draws from its own forked
+    /// RNG sub-stream, so the output is order-independent and bit-identical
+    /// to the sequential path ([`MaskBank::generate_reference`], kept as the
+    /// regression oracle) for any pool size. Allocation-lean: the only
+    /// allocation per mask is its own `e_pad` buffer, seeded by one memcpy
+    /// of the base mask.
     pub fn generate(batch: &TrainBatch, k: usize, ratio: f64, rng: &mut Rng) -> MaskBank {
+        assert!(k >= 1);
+        assert!((0.0..1.0).contains(&ratio));
+        let base = batch.emask().as_f32();
+        let m = batch.e_used / 2;
+        let parent: &Rng = rng;
+        let masks = (0..k)
+            .into_par_iter()
+            .map(|i| {
+                let mut rng = parent.fork(i as u64);
+                let mut mask = base.to_vec();
+                for e in 0..m {
+                    if rng.chance(ratio) {
+                        mask[e] = 0.0;
+                        mask[e + m] = 0.0;
+                    }
+                }
+                Tensor::f32(mask, &[batch.e_pad])
+            })
+            .collect();
+        MaskBank { masks, ratio }
+    }
+
+    /// The sequential pre-PR generator, retained as the parity oracle for
+    /// the parallel path (see `parallel_generate_matches_sequential`).
+    pub fn generate_reference(batch: &TrainBatch, k: usize, ratio: f64, rng: &mut Rng) -> MaskBank {
         assert!(k >= 1);
         assert!((0.0..1.0).contains(&ratio));
         let base = batch.emask().as_f32();
@@ -131,6 +164,29 @@ mod tests {
         let bank = MaskBank::generate(&b, 2, 0.0, &mut rng);
         for mask in &bank.masks {
             assert_eq!(mask.as_f32(), b.emask().as_f32());
+        }
+    }
+
+    /// Satellite regression: the rayon-parallel generator is bit-identical
+    /// to the retained sequential path, for any pool size.
+    #[test]
+    fn parallel_generate_matches_sequential() {
+        let b = batch();
+        for &(k, ratio) in &[(1usize, 0.3f64), (8, 0.5), (16, 0.05)] {
+            let want = MaskBank::generate_reference(&b, k, ratio, &mut Rng::new(99));
+            let got = MaskBank::generate(&b, k, ratio, &mut Rng::new(99));
+            assert_eq!(got.masks.len(), want.masks.len());
+            for (i, (g, w)) in got.masks.iter().zip(&want.masks).enumerate() {
+                assert_eq!(g.as_f32(), w.as_f32(), "mask {i} (k={k}, ratio={ratio})");
+            }
+            for threads in [1usize, 2, 8] {
+                let pool =
+                    rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+                let got_t = pool.install(|| MaskBank::generate(&b, k, ratio, &mut Rng::new(99)));
+                for (i, (g, w)) in got_t.masks.iter().zip(&want.masks).enumerate() {
+                    assert_eq!(g.as_f32(), w.as_f32(), "mask {i} at {threads} threads");
+                }
+            }
         }
     }
 

@@ -1,40 +1,52 @@
-//! The training loop (Algorithm 1 of the paper).
+//! The training loop (Algorithm 1 of the paper), generic over the
+//! execution [`Backend`].
 //!
 //! ```text
-//! partition G  →  tensorize per partition  →  upload device buffers once
+//! partition G  →  tensorize per partition  →  prepare workers once
 //! while not converged:
-//!     for each worker i:   (communication-free — no embedding exchange)
-//!         pick DropEdge mask k_i; run train_step artifact on partition i
+//!     for each worker i in parallel:   (communication-free — no embedding
+//!         pick DropEdge mask k_i;       exchange, ever)
+//!         run train_step on partition i
 //!     sum gradients (the only cross-worker traffic)
 //!     params ← Adam(params, Σ grads / |V_train|)
 //! ```
 //!
-//! On this single-core testbed workers execute sequentially; we time each
-//! worker's `train_step` individually and report the *parallel-machine*
-//! iteration time `max_i(compute_i) + allreduce + optimizer`, which is what
-//! Table 1 measures on real hardware. The all-reduce term is supplied by the
-//! caller (from `simnet`, or 0 for in-process semantics).
+//! The engine implements the loop once; the backend supplies `train_step`.
+//! With the default features that is [`CpuBackend`] — the native rayon
+//! forward/backward, workers genuinely in parallel on the host. With
+//! `--features xla` it is [`XlaBackend`] — the AOT-compiled PJRT artifacts,
+//! workers sequential on the single device. Either way we time each
+//! worker's step individually and report the *parallel-machine* iteration
+//! time `max_i(compute_i) + allreduce + optimizer`, which is what Table 1
+//! measures on real hardware; the all-reduce term is supplied by the caller
+//! (from `simnet`, or 0 for in-process semantics).
+//!
+//! Determinism: DropEdge mask picks are pre-drawn in worker order, worker
+//! outputs return in that order, and the gradient fold is sequential — so
+//! the training trajectory is bit-identical for any rayon pool size.
 
+use super::allreduce::GradAccumulator;
+use super::backend::{Backend, WorkerMeta};
+use super::metrics::{EpochStats, History};
+use super::optimizer::{Adam, Optimizer, Sgd};
+use super::tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, TrainBatch};
 use crate::graph::Dataset;
-use crate::runtime::ModelConfig;
+use crate::partition::{dar_weights, Reweighting, VertexCut};
+use crate::runtime::{ArtifactKind, ModelConfig, ParamSet};
+use crate::train::cpu::CpuBackend;
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use anyhow::{Context, Result};
+use std::time::Instant;
+
 #[cfg(feature = "xla")]
 use {
-    super::allreduce::GradAccumulator,
     super::dropedge::MaskBank,
-    super::metrics::{EpochStats, History},
-    super::optimizer::{Adam, Optimizer, Sgd},
-    super::tensorize::{
-        tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch,
-    },
-    crate::partition::{dar_weights, Reweighting, VertexCut},
-    crate::runtime::{ArtifactKind, Executor, ParamSet, Registry, RuntimeClient},
-    crate::util::rng::Rng,
-    crate::util::timer::PhaseTimer,
-    anyhow::{Context, Result},
+    super::tensorize::EvalBatch,
+    crate::runtime::{Executor, Registry, RuntimeClient, TrainOut},
     std::collections::HashMap,
     std::path::Path,
     std::rc::Rc,
-    std::time::Instant,
 };
 
 /// Training hyperparameters.
@@ -70,17 +82,6 @@ impl Default for TrainConfig {
     }
 }
 
-/// One worker = one partition's state: device-resident batch + executor.
-#[cfg(feature = "xla")]
-struct WorkerState {
-    batch: TrainBatch,
-    /// Device buffers in tensor order (emask slot swapped per iteration).
-    device: Vec<xla::PjRtBuffer>,
-    /// DropEdge masks, pre-uploaded.
-    mask_buffers: Vec<xla::PjRtBuffer>,
-    executor: Rc<Executor>,
-}
-
 /// How the workers are scheduled each iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RunMode {
@@ -92,9 +93,9 @@ pub enum RunMode {
 }
 
 /// A prepared training run over a set of partitions.
-#[cfg(feature = "xla")]
-pub struct Run {
-    workers: Vec<WorkerState>,
+pub struct Run<B: Backend> {
+    workers: Vec<B::Worker>,
+    meta: Vec<WorkerMeta>,
     pub model: ModelConfig,
     /// Global Σ tmask·dar — the DAR-normalizing constant (≈ |V_train|).
     pub total_train_weight: f64,
@@ -102,22 +103,9 @@ pub struct Run {
     pub mode: RunMode,
 }
 
-/// A prepared full-graph evaluation setup.
-#[cfg(feature = "xla")]
-pub struct EvalSetup {
-    batch: EvalBatch,
-    device: Vec<xla::PjRtBuffer>,
-    mask_buffers: [xla::PjRtBuffer; 3],
-    executor: Rc<Executor>,
-}
-
-/// The engine: PJRT client + artifact registry + executable cache (needs
-/// the `xla` feature).
-#[cfg(feature = "xla")]
-pub struct TrainEngine {
-    pub rt: RuntimeClient,
-    pub registry: Registry,
-    cache: HashMap<String, Rc<Executor>>,
+/// The engine: Algorithm 1 over any [`Backend`].
+pub struct TrainEngine<B: Backend> {
+    pub backend: B,
 }
 
 /// Model config implied by a dataset's recipe.
@@ -130,51 +118,28 @@ pub fn model_config(ds: &Dataset) -> ModelConfig {
     }
 }
 
-#[cfg(feature = "xla")]
-impl TrainEngine {
-    pub fn new(artifacts_dir: &Path) -> Result<TrainEngine> {
-        Ok(TrainEngine {
-            rt: RuntimeClient::cpu()?,
-            registry: Registry::load(artifacts_dir)?,
-            cache: HashMap::new(),
-        })
+impl TrainEngine<CpuBackend> {
+    /// The native CPU engine (default features, no XLA toolchain needed).
+    pub fn native() -> TrainEngine<CpuBackend> {
+        TrainEngine { backend: CpuBackend::new() }
     }
+}
 
-    /// Compile-or-fetch an executor for an artifact.
-    fn executor(&mut self, model: &ModelConfig, kind: ArtifactKind, n: usize, e: usize) -> Result<Rc<Executor>> {
-        let spec = self.registry.find(model, kind, n, e)?.clone();
-        if let Some(exe) = self.cache.get(&spec.name) {
-            return Ok(exe.clone());
-        }
-        let exe = Rc::new(Executor::compile(&self.rt, &spec)?);
-        self.cache.insert(spec.name.clone(), exe.clone());
-        Ok(exe)
-    }
-
+impl<B: Backend> TrainEngine<B> {
     fn make_worker(
         &mut self,
         model: &ModelConfig,
         batch: TrainBatch,
         dropedge: Option<(usize, f64)>,
         rng: &mut Rng,
-    ) -> Result<WorkerState> {
-        let executor = self.executor(model, ArtifactKind::Train, batch.n_pad, batch.e_pad)?;
-        // NOTE: the batch was built for (n_pad, e_pad) from `bucket_shapes`;
-        // the registry may return a larger artifact. Re-tensorize is not
-        // needed because we build batches directly at the artifact's shape —
-        // callers use `prepare_*` below which do exactly that.
-        let device = executor.upload_data(&self.rt, &batch.tensors)?;
-        let mask_buffers = match dropedge {
-            None => Vec::new(),
-            Some((k, ratio)) => {
-                let bank = MaskBank::generate(&batch, k, ratio, rng);
-                bank.masks
-                    .iter()
-                    .map(|m| m.to_device(&self.rt))
-                    .collect::<Result<Vec<_>>>()?
-            }
+    ) -> Result<(B::Worker, WorkerMeta)> {
+        let meta = WorkerMeta {
+            local_train_weight: batch.local_train_weight,
+            tmask_sum: batch.tensors[6].as_f32().iter().sum::<f32>() as f64,
+            num_masks: dropedge.map(|(k, _)| k).unwrap_or(0),
         };
-        Ok(WorkerState { batch, device, mask_buffers, executor })
+        let worker = self.backend.prepare_worker(model, batch, dropedge, rng)?;
+        Ok((worker, meta))
     }
 
     /// Prepare a communication-free run over a vertex cut (Algorithm 1
@@ -186,26 +151,34 @@ impl TrainEngine {
         reweighting: Reweighting,
         dropedge: Option<(usize, f64)>,
         seed: u64,
-    ) -> Result<Run> {
+    ) -> Result<Run<B>> {
         let model = model_config(ds);
         let weights = dar_weights(&ds.graph, vc, reweighting);
         let rng = Rng::new(seed ^ 0xD20B);
         let mut workers = Vec::with_capacity(vc.parts.len());
+        let mut meta = Vec::with_capacity(vc.parts.len());
         let mut total_train_weight = 0.0;
         for (i, part) in vc.parts.iter().enumerate() {
-            // Find the smallest artifact that fits this partition, then
-            // tensorize directly at the artifact's padded shape.
-            let spec = self
-                .registry
-                .find(&model, ArtifactKind::Train, part.num_nodes(), 2 * part.num_edges())?
-                .clone();
-            let batch = tensorize_partition(part, &ds.data, &weights[i], spec.n_pad, spec.e_pad)
+            // Smallest shape bucket that fits this partition (the PJRT
+            // backend answers from its artifact registry; the native backend
+            // rounds to the quantum ladder), then tensorize directly at the
+            // padded shape.
+            let (n_pad, e_pad) = self.backend.bucket(
+                &model,
+                ArtifactKind::Train,
+                part.num_nodes(),
+                2 * part.num_edges(),
+            )?;
+            let batch = tensorize_partition(part, &ds.data, &weights[i], n_pad, e_pad)
                 .with_context(|| format!("tensorizing partition {i}"))?;
             total_train_weight += batch.local_train_weight;
-            workers.push(self.make_worker(&model, batch, dropedge, &mut rng.fork(i as u64))?);
+            let (w, m) = self.make_worker(&model, batch, dropedge, &mut rng.fork(i as u64))?;
+            workers.push(w);
+            meta.push(m);
         }
         Ok(Run {
             workers,
+            meta,
             model,
             total_train_weight,
             num_partitions: vc.parts.len(),
@@ -221,29 +194,38 @@ impl TrainEngine {
         batches: Vec<TrainBatch>,
         mode: RunMode,
         seed: u64,
-    ) -> Result<Run> {
+    ) -> Result<Run<B>> {
         let rng = Rng::new(seed ^ 0xBA7C);
         let mut workers = Vec::with_capacity(batches.len());
+        let mut meta = Vec::with_capacity(batches.len());
         let mut total_train_weight = 0.0;
         let n = batches.len();
         for (i, batch) in batches.into_iter().enumerate() {
             total_train_weight += batch.local_train_weight;
-            workers.push(self.make_worker(model, batch, None, &mut rng.fork(i as u64))?);
+            let (w, m) = self.make_worker(model, batch, None, &mut rng.fork(i as u64))?;
+            workers.push(w);
+            meta.push(m);
         }
-        Ok(Run { workers, model: *model, total_train_weight, num_partitions: n, mode })
+        Ok(Run { workers, meta, model: *model, total_train_weight, num_partitions: n, mode })
     }
 
     /// Prepare a full-graph (single-partition) run — the Figure 4 baseline.
-    pub fn prepare_full(&mut self, ds: &Dataset, dropedge: Option<(usize, f64)>, seed: u64) -> Result<Run> {
+    pub fn prepare_full(
+        &mut self,
+        ds: &Dataset,
+        dropedge: Option<(usize, f64)>,
+        seed: u64,
+    ) -> Result<Run<B>> {
         let model = model_config(ds);
         let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
-        let spec = self.registry.find(&model, ArtifactKind::Train, n, 2 * m)?.clone();
-        let batch = tensorize_full_train(&ds.graph, &ds.data, spec.n_pad, spec.e_pad)?;
+        let (n_pad, e_pad) = self.backend.bucket(&model, ArtifactKind::Train, n, 2 * m)?;
+        let batch = tensorize_full_train(&ds.graph, &ds.data, n_pad, e_pad)?;
         let total_train_weight = batch.local_train_weight;
         let mut rng = Rng::new(seed ^ 0xF011);
-        let worker = self.make_worker(&model, batch, dropedge, &mut rng)?;
+        let (worker, wm) = self.make_worker(&model, batch, dropedge, &mut rng)?;
         Ok(Run {
             workers: vec![worker],
+            meta: vec![wm],
             model,
             total_train_weight,
             num_partitions: 1,
@@ -252,35 +234,24 @@ impl TrainEngine {
     }
 
     /// Prepare full-graph evaluation (val/test accuracy for the tables).
-    pub fn prepare_eval(&mut self, ds: &Dataset) -> Result<EvalSetup> {
+    pub fn prepare_eval(&mut self, ds: &Dataset) -> Result<B::Eval> {
         let model = model_config(ds);
         let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
-        let spec = self.registry.find(&model, ArtifactKind::Eval, n, 2 * m)?.clone();
-        let executor = self.executor(&model, ArtifactKind::Eval, n, 2 * m)?;
-        let batch = tensorize_full_eval(&ds.graph, &ds.data, spec.n_pad, spec.e_pad)?;
-        let device = executor.upload_data(&self.rt, &batch.tensors)?;
-        let mask_buffers = [
-            batch.masks[0].to_device(&self.rt)?,
-            batch.masks[1].to_device(&self.rt)?,
-            batch.masks[2].to_device(&self.rt)?,
-        ];
-        Ok(EvalSetup { batch, device, mask_buffers, executor })
+        let (n_pad, e_pad) = self.backend.bucket(&model, ArtifactKind::Eval, n, 2 * m)?;
+        let batch = tensorize_full_eval(&ds.graph, &ds.data, n_pad, e_pad)?;
+        self.backend.prepare_eval(&model, batch)
     }
 
     /// Evaluate accuracy on a split (0 train, 1 val, 2 test).
-    pub fn evaluate(&self, setup: &EvalSetup, params: &ParamSet, split: usize) -> Result<f64> {
-        let mut refs: Vec<&xla::PjRtBuffer> = setup.device.iter().collect();
-        refs.push(&setup.mask_buffers[split]);
-        let out = setup.executor.execute_eval(&self.rt, params, &refs)?;
-        let _ = &setup.batch; // keep host copy alive alongside device buffers
-        Ok(out.accuracy())
+    pub fn evaluate(&self, eval: &B::Eval, params: &ParamSet, split: usize) -> Result<f64> {
+        self.backend.evaluate(eval, params, split)
     }
 
     /// Run Algorithm 1 for `cfg.epochs` iterations.
     pub fn train(
         &mut self,
-        run: &mut Run,
-        eval: Option<&EvalSetup>,
+        run: &mut Run<B>,
+        eval: Option<&B::Eval>,
         cfg: &TrainConfig,
     ) -> Result<(History, ParamSet, PhaseTimer)> {
         let rng = Rng::new(cfg.seed ^ 0x7247);
@@ -302,33 +273,38 @@ impl TrainEngine {
         let mut rotate_rng = rng.fork(3);
         for epoch in 0..cfg.epochs {
             acc.reset();
-            let mut max_worker = 0f64;
             // Rotate mode: one random batch this epoch; AllParts: everyone.
             let selected: Vec<usize> = match run.mode {
                 RunMode::AllParts => (0..run.workers.len()).collect(),
                 RunMode::Rotate => vec![rotate_rng.below(run.workers.len())],
             };
-            let mut epoch_weight = 0.0f64;
-            for &wi in &selected {
-                let w = &run.workers[wi];
-                epoch_weight += w.batch.local_train_weight;
-                // DropEdge-K: swap the emask device buffer (zero host work).
-                let t0 = Instant::now();
-                let out = {
-                    let mut refs: Vec<&xla::PjRtBuffer> = w.device.iter().collect();
-                    if !w.mask_buffers.is_empty() {
-                        let k = mask_rng.below(w.mask_buffers.len());
-                        refs[TrainBatch::EMASK_IDX] = &w.mask_buffers[k];
+            // Pre-draw DropEdge mask picks in worker order so the RNG stream
+            // (and therefore the whole trajectory) does not depend on how
+            // the backend schedules the workers.
+            let picks: Vec<Option<usize>> = selected
+                .iter()
+                .map(|&wi| {
+                    let nm = run.meta[wi].num_masks;
+                    if nm > 0 {
+                        Some(mask_rng.below(nm))
+                    } else {
+                        None
                     }
-                    w.executor.execute_train(&self.rt, &params, &refs)?
-                };
-                let dt = t0.elapsed().as_secs_f64();
-                max_worker = max_worker.max(dt);
-                timer.add("execute", t0.elapsed());
-                let t1 = Instant::now();
-                acc.add(&out);
-                timer.add("allreduce", t1.elapsed());
+                })
+                .collect();
+            let t0 = Instant::now();
+            let outs = self.backend.run_workers(&run.workers, &selected, &picks, &params)?;
+            timer.add("execute", t0.elapsed());
+            // The only cross-worker traffic: sum gradients, in worker order.
+            let t1 = Instant::now();
+            let mut max_worker = 0f64;
+            let mut epoch_weight = 0.0f64;
+            for ((out, dt), &wi) in outs.iter().zip(&selected) {
+                max_worker = max_worker.max(*dt);
+                epoch_weight += run.meta[wi].local_train_weight;
+                acc.add(out);
             }
+            timer.add("allreduce", t1.elapsed());
             let t2 = Instant::now();
             let epoch_scale = match run.mode {
                 RunMode::AllParts => scale,
@@ -349,8 +325,9 @@ impl TrainEngine {
                 && (epoch + 1 == cfg.epochs
                     || (cfg.eval_every > 0 && epoch % cfg.eval_every == 0));
             let (val_acc, test_acc) = if do_eval {
-                let setup = eval.unwrap();
-                (self.evaluate(setup, &params, 1)?, self.evaluate(setup, &params, 2)?)
+                // Single call: backends that can score both splits from one
+                // forward (the native backend) do so.
+                self.backend.evaluate_val_test(eval.unwrap(), &params)?
             } else {
                 (f64::NAN, f64::NAN)
             };
@@ -362,9 +339,7 @@ impl TrainEngine {
             let train_acc = acc.correct
                 / selected
                     .iter()
-                    .map(|&wi| {
-                        run.workers[wi].batch.tensors[6].as_f32().iter().sum::<f32>() as f64
-                    })
+                    .map(|&wi| run.meta[wi].tmask_sum)
                     .sum::<f64>()
                     .max(1e-9);
             let stats = EpochStats {
@@ -385,5 +360,165 @@ impl TrainEngine {
             history.push(stats);
         }
         Ok((history, params, timer))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The PJRT backend (`--features xla`): AOT-compiled artifacts executed
+// through the PJRT C API.
+// ---------------------------------------------------------------------------
+
+/// One worker = one partition's state: device-resident batch + executor.
+#[cfg(feature = "xla")]
+pub struct XlaWorker {
+    batch: TrainBatch,
+    /// Device buffers in tensor order (emask slot swapped per iteration).
+    device: Vec<xla::PjRtBuffer>,
+    /// DropEdge masks, pre-uploaded.
+    mask_buffers: Vec<xla::PjRtBuffer>,
+    executor: Rc<Executor>,
+}
+
+/// A prepared full-graph evaluation setup on the device.
+#[cfg(feature = "xla")]
+pub struct EvalSetup {
+    batch: EvalBatch,
+    device: Vec<xla::PjRtBuffer>,
+    mask_buffers: [xla::PjRtBuffer; 3],
+    executor: Rc<Executor>,
+}
+
+/// PJRT client + artifact registry + executable cache.
+#[cfg(feature = "xla")]
+pub struct XlaBackend {
+    pub rt: RuntimeClient,
+    pub registry: Registry,
+    cache: HashMap<String, Rc<Executor>>,
+}
+
+/// The engine over the PJRT backend (the pre-refactor `TrainEngine`).
+#[cfg(feature = "xla")]
+pub type XlaEngine = TrainEngine<XlaBackend>;
+
+#[cfg(feature = "xla")]
+impl TrainEngine<XlaBackend> {
+    pub fn new(artifacts_dir: &Path) -> Result<TrainEngine<XlaBackend>> {
+        Ok(TrainEngine {
+            backend: XlaBackend {
+                rt: RuntimeClient::cpu()?,
+                registry: Registry::load(artifacts_dir)?,
+                cache: HashMap::new(),
+            },
+        })
+    }
+}
+
+#[cfg(feature = "xla")]
+impl XlaBackend {
+    /// Compile-or-fetch an executor for an artifact.
+    fn executor(
+        &mut self,
+        model: &ModelConfig,
+        kind: ArtifactKind,
+        n: usize,
+        e: usize,
+    ) -> Result<Rc<Executor>> {
+        let spec = self.registry.find(model, kind, n, e)?.clone();
+        if let Some(exe) = self.cache.get(&spec.name) {
+            return Ok(exe.clone());
+        }
+        let exe = Rc::new(Executor::compile(&self.rt, &spec)?);
+        self.cache.insert(spec.name.clone(), exe.clone());
+        Ok(exe)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl Backend for XlaBackend {
+    type Worker = XlaWorker;
+    type Eval = EvalSetup;
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn bucket(
+        &mut self,
+        model: &ModelConfig,
+        kind: ArtifactKind,
+        n_need: usize,
+        e_need: usize,
+    ) -> Result<(usize, usize)> {
+        let spec = self.registry.find(model, kind, n_need, e_need)?;
+        Ok((spec.n_pad, spec.e_pad))
+    }
+
+    fn prepare_worker(
+        &mut self,
+        model: &ModelConfig,
+        batch: TrainBatch,
+        dropedge: Option<(usize, f64)>,
+        rng: &mut Rng,
+    ) -> Result<XlaWorker> {
+        let executor = self.executor(model, ArtifactKind::Train, batch.n_pad, batch.e_pad)?;
+        let device = executor.upload_data(&self.rt, &batch.tensors)?;
+        let mask_buffers = match dropedge {
+            None => Vec::new(),
+            Some((k, ratio)) => {
+                let bank = MaskBank::generate(&batch, k, ratio, rng);
+                bank.masks
+                    .iter()
+                    .map(|m| m.to_device(&self.rt))
+                    .collect::<Result<Vec<_>>>()?
+            }
+        };
+        Ok(XlaWorker { batch, device, mask_buffers, executor })
+    }
+
+    fn prepare_eval(&mut self, model: &ModelConfig, batch: EvalBatch) -> Result<EvalSetup> {
+        let executor = self.executor(model, ArtifactKind::Eval, batch.n_pad, batch.e_pad)?;
+        let device = executor.upload_data(&self.rt, &batch.tensors)?;
+        let mask_buffers = [
+            batch.masks[0].to_device(&self.rt)?,
+            batch.masks[1].to_device(&self.rt)?,
+            batch.masks[2].to_device(&self.rt)?,
+        ];
+        Ok(EvalSetup { batch, device, mask_buffers, executor })
+    }
+
+    fn run_workers(
+        &self,
+        workers: &[XlaWorker],
+        selected: &[usize],
+        picks: &[Option<usize>],
+        params: &ParamSet,
+    ) -> Result<Vec<(TrainOut, f64)>> {
+        // One device: workers execute sequentially; each step is timed
+        // individually so the engine can report max_i(compute_i).
+        let mut outs = Vec::with_capacity(selected.len());
+        for (&wi, pick) in selected.iter().zip(picks) {
+            let w = &workers[wi];
+            let t0 = Instant::now();
+            let out = {
+                let mut refs: Vec<&xla::PjRtBuffer> = w.device.iter().collect();
+                if let Some(k) = pick {
+                    // DropEdge-K: swap the emask device buffer (zero host
+                    // work).
+                    refs[TrainBatch::EMASK_IDX] = &w.mask_buffers[*k];
+                }
+                w.executor.execute_train(&self.rt, params, &refs)?
+            };
+            let _ = &w.batch; // keep host copy alive alongside device buffers
+            outs.push((out, t0.elapsed().as_secs_f64()));
+        }
+        Ok(outs)
+    }
+
+    fn evaluate(&self, eval: &EvalSetup, params: &ParamSet, split: usize) -> Result<f64> {
+        let mut refs: Vec<&xla::PjRtBuffer> = eval.device.iter().collect();
+        refs.push(&eval.mask_buffers[split]);
+        let out = eval.executor.execute_eval(&self.rt, params, &refs)?;
+        let _ = &eval.batch; // keep host copy alive alongside device buffers
+        Ok(out.accuracy())
     }
 }

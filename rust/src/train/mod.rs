@@ -1,13 +1,22 @@
 //! The CoFree-GNN training engine (Layer 3).
 //!
 //! Implements Algorithm 1 of the paper: vertex-cut partitions are
-//! tensorized into padded shape buckets, each worker executes the
-//! AOT-compiled `train_step` on its own partition with **zero embedding
-//! communication**, the leader sums the DAR-weighted gradients (the only
-//! cross-worker traffic) and applies the optimizer.
+//! tensorized into padded shape buckets, each worker executes `train_step`
+//! on its own partition with **zero embedding communication**, the leader
+//! sums the DAR-weighted gradients (the only cross-worker traffic) and
+//! applies the optimizer.
+//!
+//! The loop is generic over an execution [`Backend`]: the native
+//! [`CpuBackend`] (default features — rayon-parallel pure-Rust GraphSAGE
+//! forward/backward, workers run concurrently on the host) or the PJRT
+//! `XlaBackend` (`--features xla` — AOT-compiled XLA artifacts). The
+//! deliberately naive [`reference`] forward stays as the parity oracle for
+//! both.
 
 pub mod allreduce;
+pub mod backend;
 pub mod bucket;
+pub mod cpu;
 pub mod dropedge;
 pub mod engine;
 pub mod metrics;
@@ -16,11 +25,13 @@ pub mod reference;
 pub mod sampling;
 pub mod tensorize;
 
+pub use backend::{Backend, WorkerMeta};
 pub use bucket::bucket_shapes;
+pub use cpu::CpuBackend;
 pub use dropedge::MaskBank;
-pub use engine::TrainConfig;
+pub use engine::{model_config, Run, RunMode, TrainConfig, TrainEngine};
 #[cfg(feature = "xla")]
-pub use engine::TrainEngine;
+pub use engine::{XlaBackend, XlaEngine};
 pub use metrics::{EpochStats, History};
 pub use optimizer::{Adam, Optimizer, Sgd};
 pub use tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch};

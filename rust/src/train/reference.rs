@@ -60,7 +60,6 @@ pub fn forward(cfg: &ModelConfig, params: &ParamSet, batch: &TrainBatch) -> Vec<
             }
         }
         // h' = concat(agg, h) @ U + c: [n, d_out]
-        let concat_dim = hdim + d_in;
         let mut out = vec![0f32; n * d_out];
         for i in 0..n {
             for j in 0..d_out {
@@ -83,11 +82,33 @@ pub fn forward(cfg: &ModelConfig, params: &ParamSet, batch: &TrainBatch) -> Vec<
                 }
             }
         }
-        let _ = concat_dim;
         h = out;
         d_in = d_out;
     }
     h
+}
+
+/// Index of the largest entry of `row`, NaN-safe: NaN entries never win,
+/// ties break deterministically to the lowest index, and an all-NaN (or
+/// empty) row falls back to 0. Callers that score predictions must check
+/// `row[argmax(row)]` is not NaN before counting a hit, so an all-NaN row
+/// never scores as "correct class 0". Shared by the reference and native
+/// backends so their `correct` counts agree.
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    let mut found = false;
+    for (j, &x) in row.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        if !found || x > best_v {
+            best = j;
+            best_v = x;
+            found = true;
+        }
+    }
+    best
 }
 
 /// DAR-weighted cross-entropy loss + weight sum + correct count, matching
@@ -108,13 +129,9 @@ pub fn loss_and_metrics(
         let row = &logits[i * c..(i + 1) * c];
         let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         if tmask[i] > 0.0 {
-            let argmax = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(j, _)| j as i32)
-                .unwrap();
-            if argmax == labels[i] {
+            let am = argmax(row);
+            // NaN at the winner ⇒ no real prediction ⇒ never correct.
+            if !row[am].is_nan() && am as i32 == labels[i] {
                 correct += tmask[i] as f64;
             }
         }
@@ -189,6 +206,40 @@ mod tests {
         }
         let (l2, w2, c2) = loss_and_metrics(&cfg, &logits2, &batch);
         assert_eq!((l1, w1, c1), (l2, w2, c2));
+    }
+
+    #[test]
+    fn argmax_is_nan_safe_with_lowest_index_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        // Ties break to the lowest index.
+        assert_eq!(argmax(&[2.0, 5.0, 5.0, 1.0]), 1);
+        // NaN entries never win, wherever they sit.
+        assert_eq!(argmax(&[f32::NAN, 1.0, 2.0]), 2);
+        assert_eq!(argmax(&[1.0, f32::NAN, 0.5]), 0);
+        // All-NaN (and empty) rows fall back to 0 instead of panicking.
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[]), 0);
+        // -inf is a real value and can win over nothing else.
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN]), 0);
+    }
+
+    #[test]
+    fn loss_metrics_survive_nan_logits() {
+        // A NaN logit row must not panic the argmax; the node simply scores
+        // as (in)correct per the NaN-safe rule.
+        let (cfg, params, batch) = setup(1);
+        let mut logits = forward(&cfg, &params, &batch);
+        for j in 0..cfg.classes {
+            logits[j] = f32::NAN;
+        }
+        let (_, wsum, correct) = loss_and_metrics(&cfg, &logits, &batch);
+        assert!(wsum.is_finite());
+        assert!(correct.is_finite());
+        // Fully-NaN logits predict nothing: zero correct, even for class-0
+        // labels (the argmax fallback index must not score as a hit).
+        let all_nan = vec![f32::NAN; logits.len()];
+        let (_, _, c_nan) = loss_and_metrics(&cfg, &all_nan, &batch);
+        assert_eq!(c_nan, 0.0);
     }
 
     #[test]

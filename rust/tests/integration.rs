@@ -86,6 +86,7 @@ fn train_step_matches_rust_reference_forward() {
     let mut total_w = 0.0;
     for (i, part) in vc.parts.iter().enumerate() {
         let spec = engine
+            .backend
             .registry
             .find(&model, cofree_gnn::runtime::ArtifactKind::Train, part.num_nodes(), 2 * part.num_edges())
             .unwrap();
