@@ -1,0 +1,186 @@
+//! Distributed-runtime benchmark: shard store I/O throughput and the
+//! multi-process coordinator/worker protocol vs the in-process engine.
+//!
+//! Run: `cargo bench --bench bench_dist`. Knobs (environment):
+//! * `COFREE_BENCH_DIST_EDGES`  — target raw edge count (default 200_000)
+//! * `COFREE_BENCH_DIST_EPOCHS` — training epochs per timing run (default 3)
+//! * `COFREE_BENCH_DIST_PARTS`  — comma list of worker counts (default `2,4,8`)
+//! * `COFREE_BENCH_DIST_OUT`    — output JSON path (default `BENCH_dist.json`)
+//!
+//! For each p the bench: (1) writes and re-loads the shard store, timing
+//! both sides (MB/s); (2) trains the same cut for E epochs in-process and
+//! across p real worker processes, reporting per-epoch wall clock, wire
+//! bytes per epoch, and the headline `bytes_per_epoch_per_param` — which
+//! is bounded by ≈ `8·p` (4 bytes of θ down + 4 of ∇ up per worker)
+//! regardless of graph size, CoFree's whole point; and (3) asserts that
+//! the two trajectories end in bit-identical parameters (`parity` in the
+//! JSON must be true).
+
+use cofree_gnn::dist::{self, ProcOptions, Shard};
+use cofree_gnn::graph::features::{synthesize, FeatureParams};
+use cofree_gnn::graph::generators::{rmat_pairs, RmatParams};
+use cofree_gnn::graph::{Dataset, GraphBuilder};
+use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
+use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
+use cofree_gnn::util::rng::Rng;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_string(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+struct Row {
+    p: usize,
+    shard_bytes: u64,
+    shard_write_s: f64,
+    shard_load_s: f64,
+    inproc_epoch_s: f64,
+    proc_epoch_s: f64,
+    handshake_s: f64,
+    wire_bytes_per_epoch: f64,
+    bytes_per_epoch_per_param: f64,
+    parity: bool,
+}
+
+fn main() {
+    let target = env_usize("COFREE_BENCH_DIST_EDGES", 200_000);
+    let epochs = env_usize("COFREE_BENCH_DIST_EPOCHS", 3);
+    let parts_list = env_string("COFREE_BENCH_DIST_PARTS", "2,4,8");
+    let out_path = env_string("COFREE_BENCH_DIST_OUT", "BENCH_dist.json");
+    let parts: Vec<usize> = parts_list
+        .split(',')
+        .filter_map(|s| s.trim().parse().ok())
+        .filter(|&p| p >= 1)
+        .collect();
+    let seed = 42u64;
+    let worker_bin = PathBuf::from(env!("CARGO_BIN_EXE_cofree"));
+
+    // R-MAT graph + synthetic supervision, one dataset for every p.
+    let mut rng = Rng::new(0xD157);
+    let scale = ((target / 10).max(2) as f64).log2().ceil() as u32;
+    let n = 1usize << scale;
+    let pairs = rmat_pairs(scale, target, RmatParams::default(), &mut rng);
+    let g = GraphBuilder::new(n).edges(&pairs).build();
+    let classes = 16usize;
+    let comm: Vec<u32> = (0..n).map(|i| (i % classes) as u32).collect();
+    let nd = synthesize(&comm, classes, &FeatureParams { dim: 64, ..Default::default() }, &mut rng.fork(3));
+    let ds = Dataset { name: "rmat-dist-bench".into(), graph: g, data: nd, layers: 2, hidden: 64 };
+    println!("== bench_dist: shard store + proc transport vs inproc ==");
+    println!(
+        "n={}, m={}, epochs={epochs}, parts={parts:?}, worker_bin={}",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        worker_bin.display()
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+    for &p in &parts {
+        let vc = VertexCut::create(&ds.graph, p, algorithm("dbh").unwrap().as_ref(), &mut Rng::new(seed));
+        let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+
+        // Shard store: write throughput…
+        let dir = std::env::temp_dir().join(format!("cofree_bench_dist_{}_{p}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t0 = Instant::now();
+        let stats = dist::write_shards(&ds, &vc, &weights, seed, &dir).expect("write shards");
+        let shard_write_s = t0.elapsed().as_secs_f64();
+        // …and load throughput (full streamed read of every shard).
+        let files = dist::shard_files(&dir).expect("shard files");
+        let t1 = Instant::now();
+        let mut loaded_edges = 0usize;
+        for f in &files {
+            loaded_edges += Shard::read(f).expect("read shard").local.num_edges();
+        }
+        let shard_load_s = t1.elapsed().as_secs_f64();
+        assert_eq!(loaded_edges, ds.graph.num_edges(), "shards lost edges");
+
+        // In-process reference trajectory.
+        let cfg = TrainConfig { epochs, eval_every: 0, seed, ..Default::default() };
+        let mut engine = TrainEngine::native();
+        let mut run = engine
+            .prepare_partitions(&ds, &vc, Reweighting::Dar, None, seed)
+            .expect("prepare inproc");
+        let t2 = Instant::now();
+        let (_, params_in, _) = engine.train(&mut run, None, &cfg).expect("inproc train");
+        let inproc_epoch_s = t2.elapsed().as_secs_f64() / epochs as f64;
+
+        // Multi-process trajectory over the same shards.
+        let opts = ProcOptions::new(worker_bin.clone());
+        let t3 = Instant::now();
+        let (_, ck, dstats) =
+            dist::train_over_shards(&ds, &dir, &cfg, &opts, None).expect("proc train");
+        let proc_total_s = t3.elapsed().as_secs_f64();
+        let proc_epoch_s = (proc_total_s - dstats.handshake_seconds).max(0.0) / epochs as f64;
+        let parity = params_in.data == ck.params.data;
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let row = Row {
+            p,
+            shard_bytes: stats.total_bytes,
+            shard_write_s,
+            shard_load_s,
+            inproc_epoch_s,
+            proc_epoch_s,
+            handshake_s: dstats.handshake_seconds,
+            wire_bytes_per_epoch: dstats.bytes_per_epoch(),
+            bytes_per_epoch_per_param: dstats.bytes_per_epoch_per_param(),
+            parity,
+        };
+        let mib = row.shard_bytes as f64 / (1024.0 * 1024.0);
+        println!(
+            "p={p:<3} shards {mib:7.1} MiB (write {:6.1} MiB/s, load {:6.1} MiB/s)  epoch inproc {:7.4}s proc {:7.4}s  wire {:8.1} KiB/epoch ({:.2} B/epoch/param)  parity={}",
+            mib / row.shard_write_s.max(1e-9),
+            mib / row.shard_load_s.max(1e-9),
+            row.inproc_epoch_s,
+            row.proc_epoch_s,
+            row.wire_bytes_per_epoch / 1024.0,
+            row.bytes_per_epoch_per_param,
+            row.parity
+        );
+        assert!(row.parity, "p={p}: multi-process trajectory diverged from inproc");
+        rows.push(row);
+    }
+
+    // Headline: the middle worker count (p=4 with defaults).
+    let headline = rows.get(rows.len() / 2).or_else(|| rows.last()).expect("no rows");
+    let mut rows_json = String::new();
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            rows_json.push_str(",\n    ");
+        }
+        write!(
+            rows_json,
+            "{{\"workers\": {}, \"shard\": {{\"bytes\": {}, \"write_s\": {:.6}, \"load_s\": {:.6}, \"write_mib_s\": {:.3}, \"load_mib_s\": {:.3}}}, \"epoch\": {{\"inproc_s\": {:.6}, \"proc_s\": {:.6}, \"handshake_s\": {:.6}}}, \"wire\": {{\"bytes_per_epoch\": {:.1}, \"bytes_per_epoch_per_param\": {:.3}}}, \"parity\": {}}}",
+            r.p,
+            r.shard_bytes,
+            r.shard_write_s,
+            r.shard_load_s,
+            r.shard_bytes as f64 / (1024.0 * 1024.0) / r.shard_write_s.max(1e-9),
+            r.shard_bytes as f64 / (1024.0 * 1024.0) / r.shard_load_s.max(1e-9),
+            r.inproc_epoch_s,
+            r.proc_epoch_s,
+            r.handshake_s,
+            r.wire_bytes_per_epoch,
+            r.bytes_per_epoch_per_param,
+            r.parity
+        )
+        .unwrap();
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"dist\",\n  \"config\": {{\"edges_target\": {target}, \"epochs\": {epochs}, \"seed\": {seed}}},\n  \"graph\": {{\"nodes\": {}, \"edges\": {}}},\n  \"machine\": {{\"logical_cpus\": {}}},\n  \"headline\": {{\"workers\": {}, \"bytes_per_epoch_per_param\": {:.3}, \"parity\": {}}},\n  \"rows\": [\n    {rows_json}\n  ]\n}}\n",
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1),
+        headline.p,
+        headline.bytes_per_epoch_per_param,
+        headline.parity
+    );
+    std::fs::write(&out_path, &json).expect("writing bench JSON");
+    println!("\nwrote {out_path}");
+}

@@ -4,9 +4,13 @@
 //! cofree gen              --dataset products-sim --scale 1.0 --out g.bin
 //! cofree inspect          --dataset products-sim [--partitions 8]
 //! cofree partition        --dataset products-sim --algo ne --partitions 8
+//! cofree shard            --dataset products-sim --partitions 8 --out shards/
+//! cofree worker           --shard shards/shard_0003.bin --connect 127.0.0.1:9000
 //! cofree emit-bucket-spec [--out python/compile/buckets.spec]
 //! cofree train            --dataset products-sim --partitions 4 [--algo ne]
 //!                         [--backend native|xla] [--reweight dar|inv|none]
+//!                         [--transport inproc|proc] [--workers N]
+//!                         [--save-model m.bin] [--load-model m.bin]
 //!                         [--epochs N] [--lr F]
 //!                         [--dropedge-k K --dropedge-ratio R] [--config F]
 //! cofree bench            table1|table2|table3|table4|fig2|fig3|fig4|fig5|all
@@ -14,15 +18,17 @@
 
 use super::config::Config;
 use super::experiments::{self, ExpOptions};
+use crate::dist::{self, coordinator::ProcOptions, coordinator::Transport};
 use crate::graph::{datasets, io, stats, Dataset};
-use crate::partition::{algorithm, LdgEdgeCut, PartitionMetrics, Reweighting, VertexCut};
+use crate::partition::{algorithm, dar_weights, LdgEdgeCut, PartitionMetrics, Reweighting, VertexCut};
 use crate::train::backend::Backend;
+use crate::train::checkpoint::TrainCheckpoint;
 use crate::train::engine::{TrainConfig, TrainEngine};
 use crate::train::metrics::History;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 /// Parsed flags: `--key value` pairs plus positional args.
 pub struct Args {
@@ -76,16 +82,24 @@ USAGE:
   cofree gen --dataset NAME [--scale F] [--seed N] --out FILE
   cofree inspect --dataset NAME [--scale F] [--partitions P]
   cofree partition --dataset NAME --algo ALGO --partitions P [--scale F]
+  cofree shard --dataset NAME --partitions P --out DIR
+               [--algo ne] [--reweight dar] [--scale F] [--seed N]
+  cofree worker --shard FILE --connect ADDR     (ADDR: host:port or unix:/path)
   cofree emit-bucket-spec [--out FILE]
   cofree train --dataset NAME --partitions P [--algo ne] [--reweight dar]
                [--backend native|xla] [--epochs N] [--lr F]
                [--dropedge-k K --dropedge-ratio R]
+               [--transport inproc|proc] [--workers N] [--shard-dir DIR]
+               [--socket tcp|unix] [--worker-bin PATH]
+               [--save-model FILE] [--load-model FILE]
                [--scale F] [--artifacts DIR] [--out-csv FILE] [--config FILE]
   cofree bench NAME            (table1|table2|table3|table4|fig2|fig3|fig4|fig5|all)
 
-DATASETS: reddit-sim, products-sim, yelp-sim, papers-sim
-ALGOS:    random, ne, dbh, hep, greedy (vertex cut); metis (edge cut)
-BACKENDS: native (pure-Rust CPU, default) | xla (PJRT artifacts, needs --features xla)
+DATASETS:   reddit-sim, products-sim, yelp-sim, papers-sim
+ALGOS:      random, ne, dbh, hep, greedy (vertex cut); metis (edge cut)
+BACKENDS:   native (pure-Rust CPU, default) | xla (PJRT artifacts, needs --features xla)
+TRANSPORTS: inproc (default; rayon workers in one process) | proc (one worker
+            process per shard; bit-identical trajectory to inproc)
 ";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -101,6 +115,8 @@ pub fn main(argv: Vec<String>) -> Result<i32> {
         "gen" => cmd_gen(&args),
         "inspect" => cmd_inspect(&args),
         "partition" => cmd_partition(&args),
+        "shard" => cmd_shard(&args),
+        "worker" => cmd_worker(&args),
         "emit-bucket-spec" => cmd_emit_bucket_spec(&args),
         "train" => cmd_train(&args),
         "bench" => cmd_bench(&args),
@@ -169,6 +185,49 @@ fn cmd_partition(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// `cofree shard` — run the partitioning pipeline once and write the
+/// per-partition shard store (`shard_NNNN.bin` + `manifest.json`).
+fn cmd_shard(args: &Args) -> Result<i32> {
+    // Defaults mirror `cofree train` exactly (seed 42, same RNG stream for
+    // the cut), so `cofree shard` + `cofree train --transport proc
+    // --shard-dir` reproduces the auto-sharded trajectory bit-for-bit.
+    let name = args.get("dataset").context("--dataset required")?;
+    let scale: f64 = args.parse_or("scale", 1.0)?;
+    let seed: u64 = args.parse_or("seed", 42)?;
+    let ds = datasets::build(name, scale, seed)?;
+    let p: usize = args.parse_or("partitions", 4)?;
+    let algo_name = args.get_or("algo", "ne");
+    let rw = Reweighting::parse(args.get_or("reweight", "dar"))
+        .context("--reweight must be dar|inv|none")?;
+    let out = PathBuf::from(args.get("out").context("--out DIR required")?);
+    let algo = algorithm(algo_name).with_context(|| format!("unknown algo {algo_name}"))?;
+    let mut rng = Rng::new(seed);
+    let vc = VertexCut::create(&ds.graph, p, algo.as_ref(), &mut rng);
+    let weights = dar_weights(&ds.graph, &vc, rw);
+    let stats = dist::write_shards(&ds, &vc, &weights, seed, &out)?;
+    println!(
+        "wrote {} shards ({:.1} MiB) for {} (n={}, m={}, algo={algo_name}, reweight={}) to {}",
+        stats.files.len(),
+        stats.total_bytes as f64 / (1024.0 * 1024.0),
+        ds.name,
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        rw.name(),
+        out.display()
+    );
+    Ok(0)
+}
+
+/// `cofree worker` — the shard-local worker role of the multi-process
+/// runtime (normally spawned by the coordinator, but usable by hand for
+/// multi-host experiments).
+fn cmd_worker(args: &Args) -> Result<i32> {
+    let shard = PathBuf::from(args.get("shard").context("--shard FILE required")?);
+    let connect = args.get("connect").context("--connect ADDR required")?;
+    dist::worker::run(&shard, connect)?;
+    Ok(0)
+}
+
 fn cmd_emit_bucket_spec(args: &Args) -> Result<i32> {
     let out = PathBuf::from(args.get_or("out", "python/compile/buckets.spec"));
     let lines = super::grid::bucket_spec_lines()?;
@@ -182,8 +241,9 @@ fn cmd_emit_bucket_spec(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
-/// The backend-independent half of `cofree train`: partition, prepare,
-/// train, report.
+/// The backend-independent half of `cofree train --transport inproc`:
+/// partition, prepare, train, report. Returns the history plus the
+/// end-of-run checkpoint (for `--save-model`).
 #[allow(clippy::too_many_arguments)]
 fn run_train<B: Backend>(
     engine: &mut TrainEngine<B>,
@@ -194,11 +254,12 @@ fn run_train<B: Backend>(
     dropedge: Option<(usize, f64)>,
     cfg: &TrainConfig,
     seed: u64,
-) -> Result<History> {
+    resume: Option<TrainCheckpoint>,
+) -> Result<(History, TrainCheckpoint)> {
     let eval = engine.prepare_eval(ds)?;
-    let history = if p <= 1 {
+    let (history, ck, _timer) = if p <= 1 {
         let mut run = engine.prepare_full(ds, dropedge, seed)?;
-        engine.train(&mut run, Some(&eval), cfg)?.0
+        engine.train_resumable(&mut run, Some(&eval), cfg, resume)?
     } else {
         let algo = algorithm(algo_name).with_context(|| format!("unknown algo {algo_name}"))?;
         let mut rng = Rng::new(seed);
@@ -206,9 +267,84 @@ fn run_train<B: Backend>(
         let m = PartitionMetrics::vertex_cut(&ds.graph, &vc);
         crate::log_info!("partitioned: {}", m.row());
         let mut run = engine.prepare_partitions(ds, &vc, rw, dropedge, seed)?;
-        engine.train(&mut run, Some(&eval), cfg)?.0
+        engine.train_resumable(&mut run, Some(&eval), cfg, resume)?
     };
-    Ok(history)
+    Ok((history, ck))
+}
+
+/// The `--transport proc` half: shard (unless `--shard-dir` points at an
+/// existing store), spawn one worker process per shard, train over the
+/// wire. The trajectory is bit-identical to the inproc path for the same
+/// dataset/partitions/seed/config.
+#[allow(clippy::too_many_arguments)]
+fn run_train_proc(
+    ds: &Dataset,
+    p: usize,
+    algo_name: &str,
+    rw: Reweighting,
+    cfg: &TrainConfig,
+    seed: u64,
+    args: &Args,
+    resume: Option<TrainCheckpoint>,
+) -> Result<(History, TrainCheckpoint)> {
+    let socket = args.get_or("socket", "tcp");
+    let transport = Transport::parse(socket).context("--socket must be tcp|unix")?;
+    let worker_bin = match args.get("worker-bin") {
+        Some(p) => PathBuf::from(p),
+        None => match std::env::var("COFREE_WORKER_BIN") {
+            Ok(p) => PathBuf::from(p),
+            Err(_) => std::env::current_exe().context("locating the cofree binary")?,
+        },
+    };
+    // Shards: reuse a store written by `cofree shard`, or shard into a
+    // scratch dir (removed afterwards).
+    let (dir, scratch) = match args.get("shard-dir") {
+        Some(d) => (PathBuf::from(d), false),
+        None => {
+            let dir = std::env::temp_dir()
+                .join(format!("cofree_autoshard_{}_{seed}_{p}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            let algo =
+                algorithm(algo_name).with_context(|| format!("unknown algo {algo_name}"))?;
+            let mut rng = Rng::new(seed);
+            let vc = VertexCut::create(&ds.graph, p, algo.as_ref(), &mut rng);
+            let m = PartitionMetrics::vertex_cut(&ds.graph, &vc);
+            crate::log_info!("partitioned: {}", m.row());
+            let weights = dar_weights(&ds.graph, &vc, rw);
+            let stats = dist::write_shards(ds, &vc, &weights, seed, &dir)?;
+            crate::log_info!(
+                "sharded {} parts ({:.1} MiB) into {}",
+                stats.files.len(),
+                stats.total_bytes as f64 / (1024.0 * 1024.0),
+                dir.display()
+            );
+            (dir, true)
+        }
+    };
+    let n_shards = dist::shard_files(&dir)?.len();
+    if args.get("workers").is_some() {
+        // An explicitly requested worker count must match the store (one
+        // process per shard — with an existing --shard-dir the store wins).
+        anyhow::ensure!(
+            n_shards == p,
+            "--workers {p} but {} holds {n_shards} shards",
+            dir.display()
+        );
+    }
+    let opts = ProcOptions { transport, ..ProcOptions::new(worker_bin) };
+    let result = dist::train_over_shards(ds, &dir, cfg, &opts, resume);
+    if scratch {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    let (history, ck, stats) = result?;
+    println!(
+        "proc transport: {} workers, {:.1} KiB/epoch on the wire, {:.2} bytes/epoch/param, handshake {:.2}s",
+        stats.num_workers,
+        stats.bytes_per_epoch() / 1024.0,
+        stats.bytes_per_epoch_per_param(),
+        stats.handshake_seconds
+    );
+    Ok((history, ck))
 }
 
 /// `cofree train` — runs on the native CPU backend by default; pass
@@ -237,6 +373,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
     let k: usize = get("train.dropedge_k", "dropedge-k", "0").parse()?;
     let ratio: f64 = get("train.dropedge_ratio", "dropedge-ratio", "0.5").parse()?;
     let backend = get("train.backend", "backend", "native");
+    let transport = get("train.transport", "transport", "inproc");
     if k > 0 && !(0.0..1.0).contains(&ratio) {
         bail!("--dropedge-ratio must be in [0, 1), got {ratio}");
     }
@@ -246,10 +383,20 @@ fn cmd_train(args: &Args) -> Result<i32> {
     if args.get("artifacts").is_some() && backend != "xla" {
         bail!("--artifacts is only used by the PJRT path; add --backend xla (requires --features xla)");
     }
+    // `--load-model` resumes a checkpoint; `--epochs` stays the TOTAL
+    // trajectory length (resume trains the remaining epochs).
+    let resume = match args.get("load-model").or_else(|| file_cfg.get("run.load_model")) {
+        Some(path) => {
+            let ck = TrainCheckpoint::load(Path::new(path))?;
+            crate::log_info!("resuming from {path} ({} epochs done)", ck.epochs_done);
+            Some(ck)
+        }
+        None => None,
+    };
 
     let ds = datasets::build(&ds_name, scale, seed)?;
     crate::log_info!(
-        "training {ds_name} (n={} m={}) p={p} algo={algo_name} backend={backend} reweight={} dropedge={dropedge:?}",
+        "training {ds_name} (n={} m={}) p={p} algo={algo_name} backend={backend} transport={transport} reweight={} dropedge={dropedge:?}",
         ds.graph.num_nodes(),
         ds.graph.num_edges(),
         rw.name()
@@ -264,30 +411,62 @@ fn cmd_train(args: &Args) -> Result<i32> {
         allreduce_seconds: 0.0,
         log_every: (epochs / 20).max(1),
     };
-    let history = match backend.as_str() {
-        "native" | "cpu" => {
-            let mut engine = TrainEngine::native();
-            run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed)?
+    // Proc-only flags must not be silently ignored on the inproc path
+    // (same rule as --artifacts above).
+    if transport != "proc" {
+        for flag in ["workers", "shard-dir", "worker-bin", "socket"] {
+            if args.get(flag).is_some() {
+                bail!("--{flag} is only used by the proc transport; add --transport proc");
+            }
         }
-        #[cfg(feature = "xla")]
-        "xla" => {
-            let artifacts = PathBuf::from(get("run.artifacts", "artifacts", "artifacts"));
-            let mut engine = TrainEngine::new(&artifacts)?;
-            run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed)?
+    }
+    let (history, checkpoint) = match transport.as_str() {
+        "inproc" => match backend.as_str() {
+            "native" | "cpu" => {
+                let mut engine = TrainEngine::native();
+                run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed, resume)?
+            }
+            #[cfg(feature = "xla")]
+            "xla" => {
+                let artifacts = PathBuf::from(get("run.artifacts", "artifacts", "artifacts"));
+                let mut engine = TrainEngine::new(&artifacts)?;
+                run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed, resume)?
+            }
+            #[cfg(not(feature = "xla"))]
+            "xla" => bail!(
+                "--backend xla requires the `xla` cargo feature (PJRT execution \
+                 layer); rebuild with --features xla, or use the default native \
+                 backend"
+            ),
+            other => bail!("--backend must be native|xla, got {other:?}"),
+        },
+        "proc" => {
+            if backend != "native" && backend != "cpu" {
+                bail!("--transport proc runs native workers; --backend {backend} is not supported");
+            }
+            // One worker per partition: an explicit --workers that
+            // contradicts an explicit --partitions would silently train a
+            // different cut than requested — reject it instead.
+            let workers: usize = args.parse_or("workers", p)?;
+            if args.get("workers").is_some() && args.get("partitions").is_some() && workers != p {
+                bail!(
+                    "--workers {workers} conflicts with --partitions {p}: the proc transport \
+                     runs one worker per partition (drop one of the flags)"
+                );
+            }
+            run_train_proc(&ds, workers, &algo_name, rw, &cfg, seed, args, resume)?
         }
-        #[cfg(not(feature = "xla"))]
-        "xla" => bail!(
-            "--backend xla requires the `xla` cargo feature (PJRT execution \
-             layer); rebuild with --features xla, or use the default native \
-             backend"
-        ),
-        other => bail!("--backend must be native|xla, got {other:?}"),
+        other => bail!("--transport must be inproc|proc, got {other:?}"),
     };
     let (best_val, test_at_best) = history.best();
     let (iter_ms, iter_std) = history.iter_time_ms(2.min(epochs.saturating_sub(1)));
     println!(
         "done: best val acc {best_val:.4}, test @ best {test_at_best:.4}, iter {iter_ms:.1}±{iter_std:.1} ms"
     );
+    if let Some(path) = args.get("save-model").or_else(|| file_cfg.get("run.save_model")) {
+        let bytes = checkpoint.save(Path::new(path))?;
+        println!("model -> {path} ({bytes} bytes, {} epochs)", checkpoint.epochs_done);
+    }
     if let Some(csv) = args.get("out-csv").or_else(|| file_cfg.get("run.out_csv")) {
         history.write_csv(std::path::Path::new(csv))?;
         println!("history -> {csv}");
@@ -425,6 +604,101 @@ mod tests {
             "0.04",
             "--backend",
             "tpu",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn shard_command_writes_store() {
+        let dir = std::env::temp_dir().join(format!("cofree_cli_shards_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let code = main(argv(&[
+            "shard",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--partitions",
+            "2",
+            "--out",
+            dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert!(dir.join("manifest.json").exists());
+        assert_eq!(crate::dist::shard_files(&dir).unwrap().len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn worker_requires_shard_and_connect() {
+        assert!(main(argv(&["worker"])).is_err());
+        assert!(main(argv(&["worker", "--shard", "/nonexistent.bin"])).is_err());
+    }
+
+    #[test]
+    fn train_rejects_unknown_transport() {
+        assert!(main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--transport",
+            "carrier-pigeon",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn train_rejects_conflicting_workers_and_partitions() {
+        assert!(main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--transport",
+            "proc",
+            "--partitions",
+            "8",
+            "--workers",
+            "4",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn train_rejects_proc_flags_on_inproc_transport() {
+        for flag in ["--workers", "--shard-dir", "--worker-bin", "--socket"] {
+            assert!(
+                main(argv(&[
+                    "train",
+                    "--dataset",
+                    "yelp-sim",
+                    "--scale",
+                    "0.04",
+                    flag,
+                    "4",
+                ]))
+                .is_err(),
+                "{flag} silently accepted without --transport proc"
+            );
+        }
+    }
+
+    #[test]
+    fn train_rejects_proc_with_xla_backend() {
+        assert!(main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--transport",
+            "proc",
+            "--backend",
+            "xla",
         ]))
         .is_err());
     }

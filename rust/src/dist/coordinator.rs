@@ -1,0 +1,507 @@
+//! The coordinator: multi-process communication-free training.
+//!
+//! The coordinator owns the model — parameter initialization, the
+//! per-epoch DropEdge mask picks (drawn centrally, in worker order, from
+//! the same RNG streams as the in-process engine), the gradient fold in
+//! deterministic rank order, the optimizer, and full-graph evaluation. The
+//! workers own the data: each loads one shard and runs `train_step` in its
+//! own process. The only per-epoch traffic is the parameter broadcast down
+//! and the `TrainOut` partial sums back up — the paper's one-vector-per-
+//! epoch protocol over real process boundaries.
+//!
+//! Mechanically this is just another [`Backend`]: [`ProcBackend`] sends a
+//! `Step` frame to every selected worker and collects `StepResult`s in
+//! `selected` order, so the unmodified `TrainEngine` loop drives the
+//! remote fleet. Because the engine code, the RNG streams, the shard
+//! bytes, and the worker kernels are all identical to the in-process
+//! path, the multi-process trajectory is **bit-identical** to
+//! `--transport inproc` for the same seed/config — proven end-to-end in
+//! `tests/dist_proc.rs`.
+
+use super::proto::{self, Frame, Stream, PROTO_VERSION};
+use super::shard::shard_files;
+use crate::graph::Dataset;
+use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, TrainOut};
+use crate::train::backend::{Backend, WorkerMeta};
+use crate::train::checkpoint::TrainCheckpoint;
+use crate::train::cpu::{CpuBackend, CpuEval};
+use crate::train::engine::{model_config, Run, RunMode, TrainConfig, TrainEngine};
+use crate::train::metrics::History;
+use crate::train::tensorize::{EvalBatch, TrainBatch};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::cell::{Cell, RefCell};
+use std::net::TcpListener;
+#[cfg(unix)]
+use std::os::unix::net::UnixListener;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// How workers and the coordinator talk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// TCP on 127.0.0.1 (an ephemeral port): works everywhere.
+    Tcp,
+    /// A Unix-domain socket in the temp dir (unix targets only).
+    Unix,
+}
+
+impl Transport {
+    pub fn parse(s: &str) -> Option<Transport> {
+        match s {
+            "tcp" => Some(Transport::Tcp),
+            "unix" => Some(Transport::Unix),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Transport::Tcp => "tcp",
+            Transport::Unix => "unix",
+        }
+    }
+}
+
+/// Options for a multi-process training run.
+#[derive(Clone, Debug)]
+pub struct ProcOptions {
+    /// Executable to spawn for the worker role (normally the `cofree`
+    /// binary itself; tests and benches pass `CARGO_BIN_EXE_cofree`).
+    pub worker_bin: PathBuf,
+    pub transport: Transport,
+    /// How long to wait for all workers to connect and report meta.
+    pub handshake_timeout: Duration,
+}
+
+impl ProcOptions {
+    pub fn new(worker_bin: PathBuf) -> ProcOptions {
+        ProcOptions {
+            worker_bin,
+            transport: Transport::Tcp,
+            handshake_timeout: Duration::from_secs(60),
+        }
+    }
+}
+
+/// Wire/timing accounting for one multi-process run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DistStats {
+    pub num_workers: usize,
+    pub epochs_run: usize,
+    pub num_params: usize,
+    /// Step-loop traffic only (the per-epoch cost the paper bounds).
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    /// One-off handshake traffic (hello/config/meta/shutdown).
+    pub handshake_bytes: u64,
+    pub handshake_seconds: f64,
+    pub train_seconds: f64,
+}
+
+impl DistStats {
+    /// Total step-loop bytes per epoch (params down + gradients up, all
+    /// workers).
+    pub fn bytes_per_epoch(&self) -> f64 {
+        if self.epochs_run == 0 {
+            0.0
+        } else {
+            (self.bytes_sent + self.bytes_recv) as f64 / self.epochs_run as f64
+        }
+    }
+    /// The headline: wire bytes per epoch per model parameter. The
+    /// communication-free bound is `≈ 8·p` (4 bytes of θ down + 4 bytes of
+    /// ∇ up, per worker) — independent of graph size.
+    pub fn bytes_per_epoch_per_param(&self) -> f64 {
+        if self.num_params == 0 {
+            0.0
+        } else {
+            self.bytes_per_epoch() / self.num_params as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ProcBackend: the engine's Backend over remote worker processes.
+// ---------------------------------------------------------------------------
+
+/// A connected remote worker (one process, one shard).
+pub struct ProcWorker {
+    pub rank: usize,
+    stream: RefCell<Stream>,
+}
+
+/// Backend that executes `train_step` on remote worker processes and
+/// evaluates on the coordinator (full-graph eval never leaves the leader).
+pub struct ProcBackend {
+    cpu: CpuBackend,
+    bytes_sent: Cell<u64>,
+    bytes_recv: Cell<u64>,
+}
+
+impl ProcBackend {
+    pub fn new() -> ProcBackend {
+        ProcBackend { cpu: CpuBackend::new(), bytes_sent: Cell::new(0), bytes_recv: Cell::new(0) }
+    }
+}
+
+impl Default for ProcBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for ProcBackend {
+    type Worker = ProcWorker;
+    type Eval = CpuEval;
+
+    fn name(&self) -> &'static str {
+        "proc"
+    }
+
+    fn bucket(
+        &mut self,
+        model: &ModelConfig,
+        kind: ArtifactKind,
+        n_need: usize,
+        e_need: usize,
+    ) -> Result<(usize, usize)> {
+        self.cpu.bucket(model, kind, n_need, e_need)
+    }
+
+    fn prepare_worker(
+        &mut self,
+        _model: &ModelConfig,
+        _batch: TrainBatch,
+        _dropedge: Option<(usize, f64)>,
+        _rng: &mut Rng,
+    ) -> Result<ProcWorker> {
+        bail!(
+            "proc workers are prepared by the shard handshake \
+             (Run::from_workers), not from host-side batches"
+        )
+    }
+
+    fn prepare_eval(&mut self, model: &ModelConfig, batch: EvalBatch) -> Result<CpuEval> {
+        self.cpu.prepare_eval(model, batch)
+    }
+
+    fn run_workers(
+        &self,
+        workers: &[ProcWorker],
+        selected: &[usize],
+        picks: &[Option<usize>],
+        params: &ParamSet,
+    ) -> Result<Vec<(TrainOut, f64)>> {
+        debug_assert_eq!(selected.len(), picks.len());
+        // Broadcast phase: every selected worker gets its Step frame first,
+        // so the remote processes compute concurrently. The parameter
+        // payload is identical for all workers (only the pick differs), so
+        // it is serialized exactly once per epoch.
+        let encoded = proto::EncodedParams::encode(&params.data)?;
+        for (&wi, pick) in selected.iter().zip(picks) {
+            let w = &workers[wi];
+            let n = proto::write_step_encoded(&mut *w.stream.borrow_mut(), *pick, &encoded)
+                .with_context(|| format!("sending step to worker rank {}", w.rank))?;
+            self.bytes_sent.set(self.bytes_sent.get() + n);
+        }
+        // …collect phase: results are read back in `selected` order, which
+        // keeps the engine's sequential gradient fold deterministic.
+        let mut outs = Vec::with_capacity(selected.len());
+        for &wi in selected {
+            let w = &workers[wi];
+            let (frame, n) = proto::read_frame(&mut *w.stream.borrow_mut())
+                .with_context(|| format!("reading step result from worker rank {}", w.rank))?;
+            self.bytes_recv.set(self.bytes_recv.get() + n);
+            match frame {
+                Frame::StepResult { out, compute_seconds } => outs.push((out, compute_seconds)),
+                other => bail!("worker rank {}: expected StepResult, got {other:?}", w.rank),
+            }
+        }
+        Ok(outs)
+    }
+
+    fn evaluate(&self, eval: &CpuEval, params: &ParamSet, split: usize) -> Result<f64> {
+        self.cpu.evaluate(eval, params, split)
+    }
+
+    fn evaluate_val_test(&self, eval: &CpuEval, params: &ParamSet) -> Result<(f64, f64)> {
+        self.cpu.evaluate_val_test(eval, params)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Listener + child-process plumbing.
+// ---------------------------------------------------------------------------
+
+static SOCK_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener, PathBuf),
+}
+
+impl Listener {
+    fn bind(transport: Transport) -> Result<(Listener, String)> {
+        match transport {
+            Transport::Tcp => {
+                let l = TcpListener::bind("127.0.0.1:0").context("binding 127.0.0.1:0")?;
+                l.set_nonblocking(true)?;
+                let addr = l.local_addr()?.to_string();
+                Ok((Listener::Tcp(l), addr))
+            }
+            Transport::Unix => Listener::bind_unix(),
+        }
+    }
+
+    #[cfg(unix)]
+    fn bind_unix() -> Result<(Listener, String)> {
+        let path = std::env::temp_dir().join(format!(
+            "cofree_coord_{}_{}.sock",
+            std::process::id(),
+            SOCK_COUNTER.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_file(&path);
+        let l = UnixListener::bind(&path)
+            .with_context(|| format!("binding unix socket {path:?}"))?;
+        l.set_nonblocking(true)?;
+        let addr = format!("unix:{}", path.display());
+        Ok((Listener::Unix(l, path), addr))
+    }
+
+    #[cfg(not(unix))]
+    fn bind_unix() -> Result<(Listener, String)> {
+        bail!("unix-socket transport is not available on this platform")
+    }
+
+    /// Non-blocking accept; `Ok(None)` when no connection is pending. The
+    /// accepted stream is switched to blocking mode.
+    fn accept(&self) -> Result<Option<Stream>> {
+        match self {
+            Listener::Tcp(l) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    Ok(Some(Stream::from_tcp(s)?))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e.into()),
+            },
+            #[cfg(unix)]
+            Listener::Unix(l, _) => match l.accept() {
+                Ok((s, _)) => {
+                    s.set_nonblocking(false)?;
+                    Ok(Some(Stream::from_unix(s)))
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(None),
+                Err(e) => Err(e.into()),
+            },
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Unix(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// Kills every still-running child on drop (error paths); `defuse` after a
+/// clean shutdown.
+struct ChildGuard {
+    children: Vec<Child>,
+    defused: bool,
+}
+
+impl ChildGuard {
+    fn wait_all(&mut self) -> Result<()> {
+        for c in &mut self.children {
+            let status = c.wait()?;
+            ensure!(status.success(), "worker process exited with {status}");
+        }
+        self.defused = true;
+        Ok(())
+    }
+
+    /// True if any child has already exited (with its status).
+    fn any_dead(&mut self) -> Result<Option<std::process::ExitStatus>> {
+        for c in &mut self.children {
+            if let Some(status) = c.try_wait()? {
+                return Ok(Some(status));
+            }
+        }
+        Ok(None)
+    }
+}
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        if !self.defused {
+            for c in &mut self.children {
+                let _ = c.kill();
+                let _ = c.wait();
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The run.
+// ---------------------------------------------------------------------------
+
+/// Train over the shards in `shard_dir` with one worker process per shard.
+///
+/// The dataset is only used coordinator-side, for full-graph evaluation —
+/// worker processes see nothing but their own shard file. `cfg.epochs`,
+/// `cfg.seed` and `cfg.dropedge` must match the intended in-process run
+/// for trajectory parity. Returns the history, the end-of-run checkpoint
+/// (parameters + optimizer state) and wire statistics.
+pub fn train_over_shards(
+    ds: &Dataset,
+    shard_dir: &Path,
+    cfg: &TrainConfig,
+    opts: &ProcOptions,
+    resume: Option<TrainCheckpoint>,
+) -> Result<(History, TrainCheckpoint, DistStats)> {
+    let files = shard_files(shard_dir)?;
+    let p = files.len();
+    let model = model_config(ds);
+    let mut stats = DistStats { num_workers: p, num_params: model.num_params(), ..Default::default() };
+
+    let t_handshake = Instant::now();
+    let (listener, addr) = Listener::bind(opts.transport)?;
+    crate::log_info!(
+        "coordinator: {p} workers over {} at {addr}, shards from {}",
+        opts.transport.name(),
+        shard_dir.display()
+    );
+    // Spawn one worker per shard. Workers log to stderr; stdout is
+    // discarded so coordinator output stays parseable.
+    let mut guard = ChildGuard { children: Vec::with_capacity(p), defused: false };
+    for file in &files {
+        let child = Command::new(&opts.worker_bin)
+            .arg("worker")
+            .arg("--shard")
+            .arg(file)
+            .arg("--connect")
+            .arg(&addr)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning worker {:?} for {file:?}", opts.worker_bin))?;
+        guard.children.push(child);
+    }
+
+    // Handshake: accept p connections, index by self-reported rank.
+    let deadline = Instant::now() + opts.handshake_timeout;
+    let mut streams: Vec<Option<Stream>> = (0..p).map(|_| None).collect();
+    let mut connected = 0usize;
+    while connected < p {
+        match listener.accept()? {
+            Some(mut s) => {
+                // A peer that connects but never speaks (stray local
+                // process, hung worker) must not hang the coordinator:
+                // handshake reads are bounded; the step loop later
+                // restores unbounded reads.
+                s.set_read_timeout(Some(opts.handshake_timeout))?;
+                let (frame, n) = proto::read_frame(&mut s).context("reading Hello")?;
+                stats.handshake_bytes += n;
+                let Frame::Hello { proto_version, rank, num_parts } = frame else {
+                    bail!("expected Hello frame, got {frame:?}");
+                };
+                ensure!(
+                    proto_version == PROTO_VERSION,
+                    "worker speaks protocol v{proto_version}, coordinator v{PROTO_VERSION}"
+                );
+                ensure!(
+                    num_parts as usize == p,
+                    "worker shard says {num_parts} parts, coordinator has {p} shards"
+                );
+                let rank = rank as usize;
+                ensure!(rank < p, "worker rank {rank} out of range");
+                ensure!(streams[rank].is_none(), "duplicate worker rank {rank}");
+                streams[rank] = Some(s);
+                connected += 1;
+            }
+            None => {
+                if let Some(status) = guard.any_dead()? {
+                    bail!("a worker exited during handshake with {status}");
+                }
+                ensure!(
+                    Instant::now() < deadline,
+                    "handshake timeout: {connected}/{p} workers connected after {:?}",
+                    opts.handshake_timeout
+                );
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+
+    // Config down, meta back, in rank order.
+    let (dropedge_k, dropedge_ratio) = match cfg.dropedge {
+        Some((k, r)) => (k as u32, r),
+        None => (0, 0.0),
+    };
+    let config = Frame::Config { seed: cfg.seed, dropedge_k, dropedge_ratio, model };
+    // Config to everyone first, so all workers tensorize + build their
+    // DropEdge banks concurrently; then collect Meta in rank order.
+    let mut prepared: Vec<Stream> = Vec::with_capacity(p);
+    for slot in streams.iter_mut() {
+        let mut s = slot.take().expect("stream present after handshake");
+        stats.handshake_bytes += proto::write_frame(&mut s, &config)?;
+        prepared.push(s);
+    }
+    let mut workers = Vec::with_capacity(p);
+    let mut metas = Vec::with_capacity(p);
+    for (rank, mut s) in prepared.into_iter().enumerate() {
+        let (frame, n) = proto::read_frame(&mut s)
+            .with_context(|| format!("reading Meta from rank {rank}"))?;
+        stats.handshake_bytes += n;
+        let Frame::Meta { local_train_weight, tmask_sum, num_masks } = frame else {
+            bail!("rank {rank}: expected Meta frame, got {frame:?}");
+        };
+        metas.push(WorkerMeta {
+            local_train_weight,
+            tmask_sum,
+            num_masks: num_masks as usize,
+        });
+        // Step-loop reads are unbounded again (epochs can legitimately
+        // take longer than the handshake timeout).
+        s.set_read_timeout(None)?;
+        workers.push(ProcWorker { rank, stream: RefCell::new(s) });
+    }
+    stats.handshake_seconds = t_handshake.elapsed().as_secs_f64();
+
+    // The unmodified engine loop over the remote fleet.
+    let mut engine = TrainEngine { backend: ProcBackend::new() };
+    let eval = engine.prepare_eval(ds)?;
+    let mut run: Run<ProcBackend> = Run::from_workers(workers, metas, model, RunMode::AllParts);
+    let t_train = Instant::now();
+    let (history, checkpoint, _timer) =
+        engine.train_resumable(&mut run, Some(&eval), cfg, resume)?;
+    stats.train_seconds = t_train.elapsed().as_secs_f64();
+    stats.epochs_run = history.epochs.len();
+    stats.bytes_sent = engine.backend.bytes_sent.get();
+    stats.bytes_recv = engine.backend.bytes_recv.get();
+
+    // Clean shutdown: one frame each, then reap.
+    for w in run.workers() {
+        stats.handshake_bytes += proto::write_frame(&mut *w.stream.borrow_mut(), &Frame::Shutdown)
+            .with_context(|| format!("shutting down rank {}", w.rank))?;
+    }
+    drop(run);
+    drop(eval);
+    guard.wait_all()?;
+    crate::log_info!(
+        "coordinator: {} epochs over {p} workers — {:.1} KiB/epoch on the wire ({:.2} B/epoch/param)",
+        stats.epochs_run,
+        stats.bytes_per_epoch() / 1024.0,
+        stats.bytes_per_epoch_per_param()
+    );
+    Ok((history, checkpoint, stats))
+}

@@ -1,0 +1,34 @@
+//! The multi-process distributed runtime (Layer 4).
+//!
+//! Everything below this module trains in one address space; `dist` takes
+//! the same communication-free loop across real process boundaries:
+//!
+//! * [`shard`] — the partition shard store: `cofree shard` writes one
+//!   self-describing binary per partition (local CSR, id tables, DAR
+//!   weights, feature/label/split rows) plus a manifest, so a worker
+//!   process streams exactly its slice of the graph and nothing else.
+//! * [`proto`] — the length-prefixed wire protocol (TCP or Unix socket):
+//!   parameters down, `TrainOut` partial sums up, once per epoch. That is
+//!   the *entire* communication schedule.
+//! * [`worker`] — the `cofree worker --shard … --connect …` role: load a
+//!   shard, answer `Step` frames with bit-deterministic `train_step`s.
+//! * [`coordinator`] — spawns/handshakes the fleet, draws DropEdge picks
+//!   centrally in worker order, folds gradients in rank order, owns the
+//!   optimizer and evaluation. Exposed to the engine as just another
+//!   [`Backend`](crate::train::backend::Backend) (`ProcBackend`), so the
+//!   training loop is byte-for-byte the in-process one.
+//!
+//! Determinism contract, extended across processes: shard f32 payloads
+//! round-trip bit-exactly, workers re-derive their DropEdge banks from the
+//! same forked RNG streams as `prepare_partitions`, results return in rank
+//! order, and the coordinator's fold is sequential — so `--transport proc`
+//! reproduces the `--transport inproc` trajectory bit-for-bit
+//! (`tests/dist_proc.rs`).
+
+pub mod coordinator;
+pub mod proto;
+pub mod shard;
+pub mod worker;
+
+pub use coordinator::{train_over_shards, DistStats, ProcBackend, ProcOptions, Transport};
+pub use shard::{shard_file_name, shard_files, write_shards, Shard, ShardSetStats};

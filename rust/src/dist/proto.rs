@@ -1,0 +1,429 @@
+//! The coordinator ↔ worker wire protocol.
+//!
+//! A deliberately small, length-prefixed binary protocol over a byte
+//! stream (TCP on `127.0.0.1` or a Unix-domain socket — [`Stream`]
+//! abstracts the two). Every message is one *frame*:
+//!
+//! ```text
+//! u8 tag | u64 payload_len (LE) | payload
+//! ```
+//!
+//! and the per-epoch conversation is exactly the paper's communication
+//! model: the coordinator broadcasts the parameter vector (+ the centrally
+//! drawn DropEdge mask pick) to every worker, each worker runs its local
+//! `train_step` with **zero** embedding exchange, and sends back the
+//! per-partition `TrainOut` partial sum. Nothing else ever crosses a
+//! process boundary, so bytes-on-wire per epoch is `p × (|θ| + |∇|)` plus
+//! a few dozen bytes of framing — the quantity `bench_dist` reports as
+//! `bytes_per_epoch_per_param`.
+//!
+//! Handshake sequence (worker-initiated):
+//!
+//! ```text
+//! worker → Hello   { proto_version, rank, num_parts }
+//! coord  → Config  { seed, dropedge, model }
+//! worker → Meta    { local_train_weight, tmask_sum, num_masks }
+//! repeat: coord → Step { pick, params }, worker → StepResult { TrainOut }
+//! coord  → Shutdown
+//! ```
+//!
+//! All payload scalars are little-endian via [`crate::util::binio`]; f32
+//! tensors round-trip bit-exactly, which is what makes the cross-process
+//! trajectory bit-identical to the in-process engine.
+
+use crate::runtime::{ModelConfig, TrainOut};
+use crate::util::binio;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+
+/// Bump on any frame-layout change.
+pub const PROTO_VERSION: u32 = 1;
+
+/// Sanity cap on a single frame payload (1 GiB).
+const MAX_FRAME: u64 = 1 << 30;
+
+const TAG_HELLO: u8 = 1;
+const TAG_CONFIG: u8 = 2;
+const TAG_META: u8 = 3;
+const TAG_STEP: u8 = 4;
+const TAG_STEP_RESULT: u8 = 5;
+const TAG_SHUTDOWN: u8 = 6;
+
+/// A connected byte stream: TCP or Unix-domain socket.
+pub enum Stream {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Stream {
+    /// Connect to `addr`: `unix:/path/to.sock` or `host:port`.
+    pub fn connect(addr: &str) -> Result<Stream> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let s = UnixStream::connect(path)
+                    .with_context(|| format!("connect unix socket {path}"))?;
+                return Ok(Stream::Unix(s));
+            }
+            #[cfg(not(unix))]
+            bail!("unix-socket transport is not available on this platform ({path})");
+        }
+        let s = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        // Frames are small and latency-bound; never wait on Nagle.
+        s.set_nodelay(true)?;
+        Ok(Stream::Tcp(s))
+    }
+
+    pub fn from_tcp(s: TcpStream) -> Result<Stream> {
+        s.set_nodelay(true)?;
+        Ok(Stream::Tcp(s))
+    }
+
+    #[cfg(unix)]
+    pub fn from_unix(s: UnixStream) -> Stream {
+        Stream::Unix(s)
+    }
+
+    /// Bound blocking reads (used by the coordinator during the handshake
+    /// so a peer that connects but never speaks cannot hang it; `None`
+    /// restores unbounded reads for the step loop).
+    pub fn set_read_timeout(&self, dur: Option<std::time::Duration>) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(dur),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_read_timeout(dur),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A decoded protocol message.
+#[derive(Clone, Debug)]
+pub enum Frame {
+    Hello { proto_version: u32, rank: u32, num_parts: u32 },
+    Config { seed: u64, dropedge_k: u32, dropedge_ratio: f64, model: ModelConfig },
+    Meta { local_train_weight: f64, tmask_sum: f64, num_masks: u32 },
+    Step { pick: Option<usize>, params: Vec<Vec<f32>> },
+    StepResult { out: TrainOut, compute_seconds: f64 },
+    Shutdown,
+}
+
+fn put_tensor_list(w: &mut impl Write, tensors: &[Vec<f32>]) -> Result<()> {
+    binio::write_u32(w, tensors.len() as u32)?;
+    for t in tensors {
+        binio::write_f32s(w, t)?;
+    }
+    Ok(())
+}
+
+fn get_tensor_list(r: &mut impl Read) -> Result<Vec<Vec<f32>>> {
+    let k = binio::read_u32(r)? as usize;
+    ensure!(k <= 4096, "corrupt frame: {k} tensors");
+    (0..k).map(|_| binio::read_f32s(r)).collect()
+}
+
+fn put_model(w: &mut impl Write, m: &ModelConfig) -> Result<()> {
+    for d in [m.layers, m.feat_dim, m.hidden, m.classes] {
+        binio::write_u32(w, d as u32)?;
+    }
+    Ok(())
+}
+
+fn get_model(r: &mut impl Read) -> Result<ModelConfig> {
+    Ok(ModelConfig {
+        layers: binio::read_u32(r)? as usize,
+        feat_dim: binio::read_u32(r)? as usize,
+        hidden: binio::read_u32(r)? as usize,
+        classes: binio::read_u32(r)? as usize,
+    })
+}
+
+/// Write one frame; returns total bytes on the wire (header + payload).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
+    let mut payload = Vec::new();
+    let tag = match frame {
+        Frame::Hello { proto_version, rank, num_parts } => {
+            binio::write_u32(&mut payload, *proto_version)?;
+            binio::write_u32(&mut payload, *rank)?;
+            binio::write_u32(&mut payload, *num_parts)?;
+            TAG_HELLO
+        }
+        Frame::Config { seed, dropedge_k, dropedge_ratio, model } => {
+            binio::write_u64(&mut payload, *seed)?;
+            binio::write_u32(&mut payload, *dropedge_k)?;
+            binio::write_f64(&mut payload, *dropedge_ratio)?;
+            put_model(&mut payload, model)?;
+            TAG_CONFIG
+        }
+        Frame::Meta { local_train_weight, tmask_sum, num_masks } => {
+            binio::write_f64(&mut payload, *local_train_weight)?;
+            binio::write_f64(&mut payload, *tmask_sum)?;
+            binio::write_u32(&mut payload, *num_masks)?;
+            TAG_META
+        }
+        Frame::Step { pick, params } => {
+            let pick_code: i64 = match pick {
+                None => -1,
+                Some(k) => *k as i64,
+            };
+            binio::write_u64(&mut payload, pick_code as u64)?;
+            put_tensor_list(&mut payload, params)?;
+            TAG_STEP
+        }
+        Frame::StepResult { out, compute_seconds } => {
+            binio::write_f32(&mut payload, out.loss_sum)?;
+            binio::write_f32(&mut payload, out.weight_sum)?;
+            binio::write_f32(&mut payload, out.correct)?;
+            binio::write_f64(&mut payload, *compute_seconds)?;
+            put_tensor_list(&mut payload, &out.grads)?;
+            TAG_STEP_RESULT
+        }
+        Frame::Shutdown => TAG_SHUTDOWN,
+    };
+    write_raw(w, tag, &payload)
+}
+
+/// A parameter payload pre-encoded once per epoch. A `Step` frame is the
+/// 8-byte pick code followed by this body; only the pick differs across
+/// workers, so the coordinator serializes the tensors once and streams
+/// the same bytes to every worker ([`write_step_encoded`]).
+pub struct EncodedParams {
+    body: Vec<u8>,
+}
+
+impl EncodedParams {
+    pub fn encode(params: &[Vec<f32>]) -> Result<EncodedParams> {
+        let mut body = Vec::new();
+        put_tensor_list(&mut body, params)?;
+        Ok(EncodedParams { body })
+    }
+}
+
+/// Broadcast-side fast path: write a `Step` frame from a pre-encoded
+/// parameter payload (no per-worker re-serialization).
+pub fn write_step_encoded(
+    w: &mut impl Write,
+    pick: Option<usize>,
+    params: &EncodedParams,
+) -> Result<u64> {
+    let pick_code: i64 = match pick {
+        None => -1,
+        Some(k) => k as i64,
+    };
+    let mut header = [0u8; 17];
+    header[0] = TAG_STEP;
+    let len = 8 + params.body.len() as u64;
+    header[1..9].copy_from_slice(&len.to_le_bytes());
+    header[9..17].copy_from_slice(&(pick_code as u64).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(&params.body)?;
+    w.flush()?;
+    Ok(9 + len)
+}
+
+/// One-off `Step` write (tests; single-worker sends). Byte-identical to
+/// [`write_step_encoded`] with a fresh [`EncodedParams`].
+pub fn write_step(w: &mut impl Write, pick: Option<usize>, params: &[Vec<f32>]) -> Result<u64> {
+    write_step_encoded(w, pick, &EncodedParams::encode(params)?)
+}
+
+fn write_raw(w: &mut impl Write, tag: u8, payload: &[u8]) -> Result<u64> {
+    let mut header = [0u8; 9];
+    header[0] = tag;
+    header[1..9].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+    w.write_all(&header)?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(9 + payload.len() as u64)
+}
+
+/// Read one frame; returns the decoded message and its wire size.
+pub fn read_frame(r: &mut impl Read) -> Result<(Frame, u64)> {
+    let mut header = [0u8; 9];
+    r.read_exact(&mut header).context("reading frame header (peer closed?)")?;
+    let tag = header[0];
+    let len = u64::from_le_bytes(header[1..9].try_into().unwrap());
+    ensure!(len <= MAX_FRAME, "frame payload {len} exceeds sanity cap {MAX_FRAME}");
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).context("reading frame payload")?;
+    let mut p: &[u8] = &payload;
+    let frame = match tag {
+        TAG_HELLO => Frame::Hello {
+            proto_version: binio::read_u32(&mut p)?,
+            rank: binio::read_u32(&mut p)?,
+            num_parts: binio::read_u32(&mut p)?,
+        },
+        TAG_CONFIG => Frame::Config {
+            seed: binio::read_u64(&mut p)?,
+            dropedge_k: binio::read_u32(&mut p)?,
+            dropedge_ratio: binio::read_f64(&mut p)?,
+            model: get_model(&mut p)?,
+        },
+        TAG_META => Frame::Meta {
+            local_train_weight: binio::read_f64(&mut p)?,
+            tmask_sum: binio::read_f64(&mut p)?,
+            num_masks: binio::read_u32(&mut p)?,
+        },
+        TAG_STEP => {
+            let pick_code = binio::read_u64(&mut p)? as i64;
+            let params = get_tensor_list(&mut p)?;
+            ensure!(pick_code >= -1, "corrupt Step frame: pick {pick_code}");
+            let pick = if pick_code < 0 { None } else { Some(pick_code as usize) };
+            Frame::Step { pick, params }
+        }
+        TAG_STEP_RESULT => {
+            let loss_sum = binio::read_f32(&mut p)?;
+            let weight_sum = binio::read_f32(&mut p)?;
+            let correct = binio::read_f32(&mut p)?;
+            let compute_seconds = binio::read_f64(&mut p)?;
+            let grads = get_tensor_list(&mut p)?;
+            Frame::StepResult {
+                out: TrainOut { loss_sum, weight_sum, correct, grads },
+                compute_seconds,
+            }
+        }
+        TAG_SHUTDOWN => Frame::Shutdown,
+        other => bail!("unknown frame tag {other}"),
+    };
+    ensure!(p.is_empty(), "frame tag {tag}: {} trailing payload bytes", p.len());
+    Ok((frame, 9 + len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, f).unwrap();
+        assert_eq!(n as usize, buf.len());
+        let mut r: &[u8] = &buf;
+        let (got, m) = read_frame(&mut r).unwrap();
+        assert_eq!(m as usize, buf.len());
+        assert!(r.is_empty());
+        got
+    }
+
+    #[test]
+    fn hello_config_meta_roundtrip() {
+        let model = ModelConfig { layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
+        match roundtrip(&Frame::Hello { proto_version: 1, rank: 3, num_parts: 8 }) {
+            Frame::Hello { proto_version, rank, num_parts } => {
+                assert_eq!((proto_version, rank, num_parts), (1, 3, 8));
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(&Frame::Config {
+            seed: 42,
+            dropedge_k: 5,
+            dropedge_ratio: 0.25,
+            model,
+        }) {
+            Frame::Config { seed, dropedge_k, dropedge_ratio, model: m } => {
+                assert_eq!((seed, dropedge_k, dropedge_ratio), (42, 5, 0.25));
+                assert_eq!(m, model);
+            }
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(&Frame::Meta {
+            local_train_weight: 12.5,
+            tmask_sum: 30.0,
+            num_masks: 4,
+        }) {
+            Frame::Meta { local_train_weight, tmask_sum, num_masks } => {
+                assert_eq!((local_train_weight, tmask_sum, num_masks), (12.5, 30.0, 4));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn step_roundtrip_and_fast_path_agree() {
+        let params = vec![vec![1.0f32, -2.5, 3.25], vec![0.0, f32::MIN_POSITIVE]];
+        let mut a = Vec::new();
+        write_frame(&mut a, &Frame::Step { pick: Some(2), params: params.clone() }).unwrap();
+        let mut b = Vec::new();
+        write_step(&mut b, Some(2), &params).unwrap();
+        assert_eq!(a, b, "fast path must emit identical bytes");
+        let mut r: &[u8] = &a;
+        match read_frame(&mut r).unwrap().0 {
+            Frame::Step { pick, params: p } => {
+                assert_eq!(pick, Some(2));
+                assert_eq!(p, params);
+            }
+            other => panic!("{other:?}"),
+        }
+        // pick = None encodes as -1.
+        let mut c = Vec::new();
+        write_step(&mut c, None, &params).unwrap();
+        let mut r: &[u8] = &c;
+        match read_frame(&mut r).unwrap().0 {
+            Frame::Step { pick, .. } => assert_eq!(pick, None),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn step_result_roundtrip_bit_exact() {
+        let out = TrainOut {
+            loss_sum: 3.75,
+            weight_sum: 11.0,
+            correct: 7.0,
+            grads: vec![vec![0.1f32, -0.0, f32::NAN], vec![1e-30]],
+        };
+        match roundtrip(&Frame::StepResult { out: out.clone(), compute_seconds: 0.125 }) {
+            Frame::StepResult { out: got, compute_seconds } => {
+                assert_eq!(compute_seconds, 0.125);
+                assert_eq!(got.loss_sum, out.loss_sum);
+                assert_eq!(got.weight_sum, out.weight_sum);
+                assert_eq!(got.correct, out.correct);
+                assert_eq!(got.grads.len(), out.grads.len());
+                for (a, b) in got.grads.iter().zip(&out.grads) {
+                    let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                    let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(ab, bb);
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn shutdown_and_garbage() {
+        assert!(matches!(roundtrip(&Frame::Shutdown), Frame::Shutdown));
+        let mut r: &[u8] = &[99u8, 0, 0, 0, 0, 0, 0, 0, 0];
+        assert!(read_frame(&mut r).is_err(), "unknown tag must error");
+        let mut r2: &[u8] = &[1u8, 2, 0];
+        assert!(read_frame(&mut r2).is_err(), "truncated header must error");
+    }
+}

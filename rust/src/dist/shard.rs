@@ -1,0 +1,428 @@
+//! The partition shard store: per-partition on-disk artifacts.
+//!
+//! `cofree shard --partitions N --out dir/` runs the partitioning pipeline
+//! once and writes one self-describing binary file per partition
+//! (`shard_0000.bin`, …) plus a human-readable `manifest.json`. A shard
+//! holds everything a worker process needs to train on its partition and
+//! **nothing else** — the local CSR (as the sorted canonical local edge
+//! list it was materialized from), the local→global id table, the DAR
+//! weights, and the partition's rows of the feature/label/split arrays —
+//! so no worker process ever materializes the full graph. Workers stream
+//! the file front-to-back in one pass ([`Shard::read`]); every f32
+//! round-trips bit-exactly, which is load-bearing for the cross-process
+//! determinism contract.
+//!
+//! Format (version 1, little-endian, shared [`binio`] header helpers):
+//!
+//! ```text
+//! magic "COFREESH" | u32 version
+//! u32 part_id | u32 num_parts
+//! u32×4 model (layers, feat_dim, hidden, classes)
+//! u64 seed | u64 global_nodes | u64 global_edges
+//! u32s global_ids            (len n_local)
+//! u32s local edge endpoints  (len 2·m_local, canonical order, u<v sorted)
+//! f32s dar weights           (len n_local)
+//! f32s features              (len n_local·feat_dim, row-major)
+//! u32s labels                (len n_local)
+//! bytes split masks          (len n_local)
+//! ```
+
+use crate::graph::{Dataset, Graph, NodeData};
+use crate::partition::VertexCut;
+use crate::runtime::ModelConfig;
+use crate::train::engine::model_config;
+use crate::train::tensorize::{tensorize_subgraph, TrainBatch};
+use crate::util::binio;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+pub const SHARD_MAGIC: &[u8; 8] = b"COFREESH";
+pub const SHARD_VERSION: u32 = 1;
+
+/// One partition's self-contained training data, as stored on disk.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub part_id: usize,
+    pub num_parts: usize,
+    pub model: ModelConfig,
+    /// Dataset seed (provenance; not consumed at train time).
+    pub seed: u64,
+    /// Full-graph sizes, for manifest cross-checks and sanity reporting.
+    pub global_nodes: usize,
+    pub global_edges: usize,
+    /// Local id → global id (sorted ascending, as materialized).
+    pub global_ids: Vec<u32>,
+    /// The partition's local topology.
+    pub local: Graph,
+    /// DAR weight per local node.
+    pub dar: Vec<f32>,
+    /// The partition's rows of features/labels/splits, locally indexed.
+    pub data: NodeData,
+}
+
+/// Canonical shard file name for a partition.
+pub fn shard_file_name(part_id: usize) -> String {
+    format!("shard_{part_id:04}.bin")
+}
+
+impl Shard {
+    /// Gather partition `i` of a vertex cut into a shard.
+    pub fn from_part(ds: &Dataset, vc: &VertexCut, weights: &[Vec<f32>], i: usize, seed: u64) -> Shard {
+        let part = &vc.parts[i];
+        let nd = &ds.data;
+        let n_local = part.num_nodes();
+        let d = nd.dim;
+        let mut features = Vec::with_capacity(n_local * d);
+        let mut labels = Vec::with_capacity(n_local);
+        let mut split = Vec::with_capacity(n_local);
+        for &gid in &part.global_ids {
+            features.extend_from_slice(nd.feature(gid));
+            labels.push(nd.labels[gid as usize]);
+            split.push(nd.split[gid as usize]);
+        }
+        Shard {
+            part_id: i,
+            num_parts: vc.num_parts,
+            model: model_config(ds),
+            seed,
+            global_nodes: ds.graph.num_nodes(),
+            global_edges: ds.graph.num_edges(),
+            global_ids: part.global_ids.clone(),
+            local: part.local.clone(),
+            dar: weights[i].clone(),
+            data: NodeData {
+                features,
+                dim: d,
+                labels,
+                num_classes: nd.num_classes,
+                split,
+            },
+        }
+    }
+
+    /// Write to `path`; returns bytes written.
+    pub fn write(&self, path: &Path) -> Result<u64> {
+        let n_local = self.global_ids.len();
+        ensure!(self.dar.len() == n_local, "dar length mismatch");
+        ensure!(self.data.labels.len() == n_local, "labels length mismatch");
+        ensure!(self.data.split.len() == n_local, "split length mismatch");
+        ensure!(self.data.features.len() == n_local * self.data.dim, "features length mismatch");
+        let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        binio::write_magic(&mut w, SHARD_MAGIC)?;
+        binio::write_version(&mut w, SHARD_VERSION)?;
+        binio::write_u32(&mut w, self.part_id as u32)?;
+        binio::write_u32(&mut w, self.num_parts as u32)?;
+        for d in [self.model.layers, self.model.feat_dim, self.model.hidden, self.model.classes] {
+            binio::write_u32(&mut w, d as u32)?;
+        }
+        binio::write_u64(&mut w, self.seed)?;
+        binio::write_u64(&mut w, self.global_nodes as u64)?;
+        binio::write_u64(&mut w, self.global_edges as u64)?;
+        binio::write_u32s(&mut w, &self.global_ids)?;
+        let flat: Vec<u32> = self.local.edges().iter().flat_map(|&(u, v)| [u, v]).collect();
+        binio::write_u32s(&mut w, &flat)?;
+        binio::write_f32s(&mut w, &self.dar)?;
+        binio::write_f32s(&mut w, &self.data.features)?;
+        binio::write_u32s(&mut w, &self.data.labels)?;
+        binio::write_bytes(&mut w, &self.data.split)?;
+        w.flush()?;
+        Ok(std::fs::metadata(path)?.len())
+    }
+
+    /// Stream a shard from `path`, rebuilding the local CSR from the sorted
+    /// canonical edge list (the same construction the partitioner used, so
+    /// the in-memory graph is byte-identical to the one that was written).
+    pub fn read(path: &Path) -> Result<Shard> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = BufReader::new(f);
+        binio::expect_magic(&mut r, SHARD_MAGIC, "cofree partition shard")
+            .with_context(|| format!("reading {path:?}"))?;
+        binio::expect_version(&mut r, SHARD_VERSION, "partition shard")?;
+        let part_id = binio::read_u32(&mut r)? as usize;
+        let num_parts = binio::read_u32(&mut r)? as usize;
+        let model = ModelConfig {
+            layers: binio::read_u32(&mut r)? as usize,
+            feat_dim: binio::read_u32(&mut r)? as usize,
+            hidden: binio::read_u32(&mut r)? as usize,
+            classes: binio::read_u32(&mut r)? as usize,
+        };
+        let seed = binio::read_u64(&mut r)?;
+        let global_nodes = binio::read_u64(&mut r)? as usize;
+        let global_edges = binio::read_u64(&mut r)? as usize;
+        ensure!(part_id < num_parts, "shard part_id {part_id} out of range {num_parts}");
+        let global_ids = binio::read_u32s(&mut r).context("reading id table")?;
+        let flat = binio::read_u32s(&mut r).context("reading local edges")?;
+        ensure!(flat.len() % 2 == 0, "corrupt local edge array: odd endpoint count");
+        let n_local = global_ids.len();
+        let edges: Vec<(u32, u32)> = flat.chunks_exact(2).map(|c| (c[0], c[1])).collect();
+        for (k, &(u, v)) in edges.iter().enumerate() {
+            ensure!(
+                u < v && (v as usize) < n_local,
+                "corrupt local edge {k}: ({u},{v}) with n_local {n_local}"
+            );
+            if k > 0 {
+                ensure!(edges[k - 1] < edges[k], "local edges not sorted/unique at {k}");
+            }
+        }
+        let local = Graph::from_sorted_edges(n_local, edges);
+        let dar = binio::read_f32s(&mut r).context("reading dar weights")?;
+        let features = binio::read_f32s(&mut r).context("reading features")?;
+        let labels = binio::read_u32s(&mut r).context("reading labels")?;
+        let split = binio::read_bytes(&mut r).context("reading split masks")?;
+        ensure!(dar.len() == n_local, "dar length {} != {n_local}", dar.len());
+        ensure!(labels.len() == n_local, "labels length {} != {n_local}", labels.len());
+        ensure!(split.len() == n_local, "split length {} != {n_local}", split.len());
+        ensure!(
+            features.len() == n_local * model.feat_dim,
+            "features length {} != n_local {n_local} × feat_dim {}",
+            features.len(),
+            model.feat_dim
+        );
+        Ok(Shard {
+            part_id,
+            num_parts,
+            model,
+            seed,
+            global_nodes,
+            global_edges,
+            global_ids,
+            local,
+            dar,
+            data: NodeData {
+                features,
+                dim: model.feat_dim,
+                labels,
+                num_classes: model.classes,
+                split,
+            },
+        })
+    }
+
+    /// Tensorize this shard at a padded shape — produces the exact batch
+    /// `tensorize_partition` builds from the full graph for this partition
+    /// (the id map is the identity over local rows, and the stored rows
+    /// were gathered with the same global ids).
+    pub fn tensorize(&self, n_pad: usize, e_pad: usize) -> Result<TrainBatch> {
+        let ids: Vec<u32> = (0..self.global_ids.len() as u32).collect();
+        tensorize_subgraph(&ids, &self.local, &self.data, &self.dar, n_pad, e_pad)
+    }
+}
+
+/// Aggregate output of [`write_shards`].
+#[derive(Clone, Debug)]
+pub struct ShardSetStats {
+    /// `(file name, bytes)` per shard, part order.
+    pub files: Vec<(String, u64)>,
+    pub total_bytes: u64,
+}
+
+/// Write every partition of `vc` as a shard under `dir` (created if
+/// missing), plus `manifest.json`.
+pub fn write_shards(
+    ds: &Dataset,
+    vc: &VertexCut,
+    weights: &[Vec<f32>],
+    seed: u64,
+    dir: &Path,
+) -> Result<ShardSetStats> {
+    ensure!(weights.len() == vc.parts.len(), "one weight table per part");
+    std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+    let mut files = Vec::with_capacity(vc.parts.len());
+    let mut total_bytes = 0u64;
+    for i in 0..vc.parts.len() {
+        let shard = Shard::from_part(ds, vc, weights, i, seed);
+        let name = shard_file_name(i);
+        let bytes = shard.write(&dir.join(&name))?;
+        total_bytes += bytes;
+        files.push((name, bytes));
+    }
+    let stats = ShardSetStats { files, total_bytes };
+    write_manifest(ds, vc, seed, dir, &stats)?;
+    Ok(stats)
+}
+
+/// Write `manifest.json` (documentation + tooling aid; the shard files are
+/// self-describing, so nothing at train time parses this back).
+fn write_manifest(
+    ds: &Dataset,
+    vc: &VertexCut,
+    seed: u64,
+    dir: &Path,
+    stats: &ShardSetStats,
+) -> Result<()> {
+    let model = model_config(ds);
+    let mut shards = String::new();
+    for (i, (name, bytes)) in stats.files.iter().enumerate() {
+        if i > 0 {
+            shards.push_str(",\n    ");
+        }
+        let part = &vc.parts[i];
+        shards.push_str(&format!(
+            "{{\"file\": \"{name}\", \"part_id\": {i}, \"nodes\": {}, \"edges\": {}, \"bytes\": {bytes}}}",
+            part.num_nodes(),
+            part.num_edges()
+        ));
+    }
+    let json = format!(
+        "{{\n  \"format\": \"cofree-shards-v{SHARD_VERSION}\",\n  \"dataset\": \"{}\",\n  \"seed\": {seed},\n  \"num_parts\": {},\n  \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}},\n  \"graph\": {{\"nodes\": {}, \"edges\": {}}},\n  \"total_bytes\": {},\n  \"shards\": [\n    {shards}\n  ]\n}}\n",
+        ds.name,
+        vc.num_parts,
+        model.layers,
+        model.feat_dim,
+        model.hidden,
+        model.classes,
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        stats.total_bytes
+    );
+    let mut f = std::fs::File::create(dir.join("manifest.json"))?;
+    f.write_all(json.as_bytes())?;
+    Ok(())
+}
+
+/// List the shard files in `dir`, sorted by part id (file-name order).
+/// Errors if the directory holds no shards.
+pub fn shard_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("read shard dir {dir:?}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("shard_") && n.ends_with(".bin"))
+                .unwrap_or(false)
+        })
+        .collect();
+    if out.is_empty() {
+        bail!("no shard_*.bin files in {dir:?} (run `cofree shard --out {}` first)", dir.display());
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::features::{synthesize, FeatureParams};
+    use crate::partition::testutil::graph_zoo;
+    use crate::partition::{algorithm, dar_weights, Reweighting, ALGORITHMS};
+    use crate::util::rng::Rng;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!("cofree_shards_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn dataset_for(g: &Graph, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let n = g.num_nodes();
+        let comm: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+        let nd = synthesize(&comm, 4, &FeatureParams { dim: 6, ..Default::default() }, &mut rng);
+        Dataset { name: format!("zoo-{seed}"), graph: g.clone(), data: nd, layers: 2, hidden: 8 }
+    }
+
+    /// Adjacency-row snapshot for byte-identity comparisons.
+    fn rows(g: &Graph) -> Vec<u32> {
+        (0..g.num_nodes() as u32).flat_map(|v| g.neighbors(v).iter().copied().collect::<Vec<_>>()).collect()
+    }
+
+    /// Satellite property test: write shards → load → byte-identical
+    /// `VertexCut` parts, id tables, DAR weights and node data, across the
+    /// graph zoo and every partitioner.
+    #[test]
+    fn shard_roundtrip_is_byte_identical_across_zoo() {
+        let dir = tmp_dir("zoo");
+        for (gi, g) in graph_zoo(23).iter().enumerate() {
+            let ds = dataset_for(g, 100 + gi as u64);
+            for &name in ALGORITHMS.iter() {
+                for &p in &[1usize, 3] {
+                    let mut rng = Rng::new(7 * gi as u64 + p as u64);
+                    let vc = VertexCut::create(g, p, algorithm(name).unwrap().as_ref(), &mut rng);
+                    let weights = dar_weights(g, &vc, Reweighting::Dar);
+                    let sub = dir.join(format!("{name}_{gi}_{p}"));
+                    let stats = write_shards(&ds, &vc, &weights, 9, &sub).unwrap();
+                    assert_eq!(stats.files.len(), p);
+                    assert!(sub.join("manifest.json").exists());
+                    let files = shard_files(&sub).unwrap();
+                    assert_eq!(files.len(), p);
+                    for (i, file) in files.iter().enumerate() {
+                        let sh = Shard::read(file).unwrap();
+                        let part = &vc.parts[i];
+                        assert_eq!(sh.part_id, i);
+                        assert_eq!(sh.num_parts, p);
+                        assert_eq!(sh.global_ids, part.global_ids, "{name} g{gi} p{p} shard {i}");
+                        assert_eq!(sh.local.edges(), part.local.edges());
+                        assert_eq!(rows(&sh.local), rows(&part.local));
+                        // DAR weights bit-exact.
+                        let a: Vec<u32> = sh.dar.iter().map(|x| x.to_bits()).collect();
+                        let b: Vec<u32> = weights[i].iter().map(|x| x.to_bits()).collect();
+                        assert_eq!(a, b);
+                        // Gathered node data matches the global arrays.
+                        for (l, &gid) in part.global_ids.iter().enumerate() {
+                            assert_eq!(
+                                &sh.data.features[l * 6..(l + 1) * 6],
+                                ds.data.feature(gid)
+                            );
+                            assert_eq!(sh.data.labels[l], ds.data.labels[gid as usize]);
+                            assert_eq!(sh.data.split[l], ds.data.split[gid as usize]);
+                        }
+                    }
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A shard tensorizes to the exact batch the in-process engine builds
+    /// for the same partition — the worker-side half of the cross-process
+    /// determinism contract.
+    #[test]
+    fn shard_tensorize_matches_tensorize_partition() {
+        use crate::train::tensorize::tensorize_partition;
+        let g = &graph_zoo(5)[2];
+        let ds = dataset_for(g, 55);
+        let mut rng = Rng::new(8);
+        let vc = VertexCut::create(g, 4, algorithm("ne").unwrap().as_ref(), &mut rng);
+        let weights = dar_weights(g, &vc, Reweighting::Dar);
+        let dir = tmp_dir("tensorize");
+        write_shards(&ds, &vc, &weights, 3, &dir).unwrap();
+        for (i, file) in shard_files(&dir).unwrap().iter().enumerate() {
+            let sh = Shard::read(file).unwrap();
+            let (n_pad, e_pad) = (256, 1024);
+            let a = sh.tensorize(n_pad, e_pad).unwrap();
+            let b = tensorize_partition(&vc.parts[i], &ds.data, &weights[i], n_pad, e_pad).unwrap();
+            assert_eq!(a.n_used, b.n_used);
+            assert_eq!(a.e_used, b.e_used);
+            assert_eq!(a.local_train_weight, b.local_train_weight);
+            assert_eq!(a.tensors.len(), b.tensors.len());
+            for (ti, (x, y)) in a.tensors.iter().zip(&b.tensors).enumerate() {
+                assert_eq!(x, y, "tensor {ti} of shard {i}");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_rejects_wrong_magic_with_found_vs_expected() {
+        let dir = tmp_dir("badmagic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("shard_0000.bin");
+        std::fs::write(&p, b"COFREEG1........").unwrap();
+        let err = Shard::read(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("COFREESH") && msg.contains("COFREEG1"), "{msg}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_files_requires_shards() {
+        let dir = tmp_dir("empty");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(shard_files(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

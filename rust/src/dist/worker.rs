@@ -1,0 +1,110 @@
+//! The `cofree worker` role: one process, one shard, zero graph knowledge
+//! beyond its own partition.
+//!
+//! A worker streams its shard from disk, connects to the coordinator,
+//! prepares its partition exactly the way the in-process engine would —
+//! same padded bucket ([`pad_explicit`]), same tensorization, same
+//! DropEdge-K mask bank drawn from the same forked RNG stream
+//! ([`worker_mask_rng`], the single definition `prepare_partitions` also
+//! uses) — and then answers `Step` frames with `StepResult`s until the
+//! coordinator says `Shutdown`. Because every input bit and every RNG
+//! draw matches the in-process path, the `TrainOut` it returns is
+//! bit-identical to what the same partition would have produced inside
+//! the coordinator's address space.
+
+use super::proto::{self, Frame, Stream, PROTO_VERSION};
+use super::shard::Shard;
+use crate::runtime::ParamSet;
+use crate::train::bucket::pad_explicit;
+use crate::train::cpu::{self, EdgeCsr};
+use crate::train::dropedge::MaskBank;
+use crate::train::engine::worker_mask_rng;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::Path;
+use std::time::Instant;
+
+/// Run the worker loop to completion. Returns the number of train steps
+/// served.
+pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
+    let shard = Shard::read(shard_path)
+        .with_context(|| format!("loading shard {}", shard_path.display()))?;
+    let rank = shard.part_id;
+    crate::log_info!(
+        "worker rank {rank}/{}: shard {} (n_local={}, m_local={}), connecting to {connect}",
+        shard.num_parts,
+        shard_path.display(),
+        shard.global_ids.len(),
+        shard.local.num_edges()
+    );
+    let mut stream = Stream::connect(connect)?;
+    proto::write_frame(
+        &mut stream,
+        &Frame::Hello {
+            proto_version: PROTO_VERSION,
+            rank: rank as u32,
+            num_parts: shard.num_parts as u32,
+        },
+    )?;
+    let (frame, _) = proto::read_frame(&mut stream)?;
+    let Frame::Config { seed, dropedge_k, dropedge_ratio, model } = frame else {
+        bail!("expected Config frame after Hello, got {frame:?}");
+    };
+    ensure!(
+        model == shard.model,
+        "coordinator model {model:?} does not match shard model {:?}",
+        shard.model
+    );
+
+    // Prepare the partition exactly like TrainEngine::prepare_partitions +
+    // CpuBackend::prepare_worker would have.
+    let (n_pad, e_pad) = pad_explicit(shard.local.num_nodes(), 2 * shard.local.num_edges());
+    let batch = shard.tensorize(n_pad, e_pad).context("tensorizing shard")?;
+    let csr = EdgeCsr::from_batch(&batch);
+    let masks = if dropedge_k > 0 {
+        let mut rng = worker_mask_rng(seed, rank);
+        MaskBank::generate(&batch, dropedge_k as usize, dropedge_ratio, &mut rng).masks
+    } else {
+        Vec::new()
+    };
+    proto::write_frame(
+        &mut stream,
+        &Frame::Meta {
+            local_train_weight: batch.local_train_weight,
+            tmask_sum: batch.tmask_sum(),
+            num_masks: masks.len() as u32,
+        },
+    )?;
+
+    let dims = model.param_shapes();
+    let mut steps = 0usize;
+    loop {
+        let (frame, _) = proto::read_frame(&mut stream)?;
+        match frame {
+            Frame::Step { pick, params } => {
+                ensure!(params.len() == dims.len(), "expected {} param tensors, got {}", dims.len(), params.len());
+                for (i, (p, shape)) in params.iter().zip(&dims).enumerate() {
+                    let want: usize = shape.iter().product();
+                    ensure!(p.len() == want, "param tensor {i}: {} elements, expected {want}", p.len());
+                }
+                let params = ParamSet { dims: dims.clone(), data: params };
+                let emask = match pick {
+                    Some(k) => {
+                        ensure!(k < masks.len(), "mask pick {k} out of range {}", masks.len());
+                        masks[k].as_f32()
+                    }
+                    None => batch.emask().as_f32(),
+                };
+                let t0 = Instant::now();
+                let out = cpu::train_step(&shard.model, &params, &batch, &csr, emask);
+                let compute_seconds = t0.elapsed().as_secs_f64();
+                proto::write_frame(&mut stream, &Frame::StepResult { out, compute_seconds })?;
+                steps += 1;
+            }
+            Frame::Shutdown => {
+                crate::log_info!("worker rank {rank}: shutdown after {steps} steps");
+                return Ok(steps);
+            }
+            other => bail!("unexpected frame in step loop: {other:?}"),
+        }
+    }
+}

@@ -10,8 +10,9 @@
 use super::builder::GraphBuilder;
 use super::csr::Graph;
 use super::features::NodeData;
+use crate::util::binio;
 use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"COFREEG1";
@@ -62,95 +63,51 @@ pub fn read_edge_list(path: &Path) -> Result<Graph> {
     Ok(GraphBuilder::new(n).edges(&edges).build())
 }
 
-fn put_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
-    w.write_all(&(xs.len() as u64).to_le_bytes())?;
-    for &x in xs {
-        w.write_all(&x.to_le_bytes())?;
-    }
-    Ok(())
-}
-
-fn get_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
-    let mut len8 = [0u8; 8];
-    r.read_exact(&mut len8)?;
-    let len = u64::from_le_bytes(len8) as usize;
-    let mut buf = vec![0u8; len * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
-}
-
-fn put_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
-    w.write_all(&(xs.len() as u64).to_le_bytes())?;
-    for &x in xs {
-        w.write_all(&x.to_le_bytes())?;
-    }
-    Ok(())
-}
-
-fn get_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
-    let mut len8 = [0u8; 8];
-    r.read_exact(&mut len8)?;
-    let len = u64::from_le_bytes(len8) as usize;
-    let mut buf = vec![0u8; len * 4];
-    r.read_exact(&mut buf)?;
-    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
-}
-
 /// Write graph + optional node data as a binary snapshot.
 pub fn write_snapshot(g: &Graph, nd: Option<&NodeData>, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    w.write_all(&(g.num_nodes() as u64).to_le_bytes())?;
+    binio::write_magic(&mut w, MAGIC)?;
+    binio::write_u64(&mut w, g.num_nodes() as u64)?;
     let flat: Vec<u32> = g.edges().iter().flat_map(|&(u, v)| [u, v]).collect();
-    put_u32s(&mut w, &flat)?;
+    binio::write_u32s(&mut w, &flat)?;
     match nd {
-        None => w.write_all(&[0u8])?,
+        None => binio::write_u8(&mut w, 0)?,
         Some(nd) => {
-            w.write_all(&[1u8])?;
-            w.write_all(&(nd.dim as u64).to_le_bytes())?;
-            w.write_all(&(nd.num_classes as u64).to_le_bytes())?;
-            put_f32s(&mut w, &nd.features)?;
-            put_u32s(&mut w, &nd.labels)?;
-            w.write_all(&(nd.split.len() as u64).to_le_bytes())?;
-            w.write_all(&nd.split)?;
+            binio::write_u8(&mut w, 1)?;
+            binio::write_u64(&mut w, nd.dim as u64)?;
+            binio::write_u64(&mut w, nd.num_classes as u64)?;
+            binio::write_f32s(&mut w, &nd.features)?;
+            binio::write_u32s(&mut w, &nd.labels)?;
+            binio::write_bytes(&mut w, &nd.split)?;
         }
     }
     Ok(())
 }
 
 /// Read a binary snapshot written by [`write_snapshot`].
+///
+/// A wrong or truncated header reports found-vs-expected bytes (the same
+/// [`binio`] check the shard store and checkpoints use), so a truncated
+/// snapshot is not misdiagnosed as "not a snapshot".
 pub fn read_snapshot(path: &Path) -> Result<(Graph, Option<NodeData>)> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let mut r = BufReader::new(f);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a cofree snapshot: bad magic");
-    }
-    let mut n8 = [0u8; 8];
-    r.read_exact(&mut n8)?;
-    let n = u64::from_le_bytes(n8) as usize;
-    let flat = get_u32s(&mut r)?;
+    binio::expect_magic(&mut r, MAGIC, "cofree graph snapshot")
+        .with_context(|| format!("reading {path:?}"))?;
+    let n = binio::read_u64(&mut r)? as usize;
+    let flat = binio::read_u32s(&mut r).context("reading edge array")?;
     if flat.len() % 2 != 0 {
-        bail!("corrupt edge array");
+        bail!("corrupt edge array: odd endpoint count {}", flat.len());
     }
     let edges: Vec<(u32, u32)> = flat.chunks_exact(2).map(|c| (c[0], c[1])).collect();
     let g = GraphBuilder::new(n).edges(&edges).build();
-    let mut flag = [0u8; 1];
-    r.read_exact(&mut flag)?;
-    let nd = if flag[0] == 1 {
-        let mut b8 = [0u8; 8];
-        r.read_exact(&mut b8)?;
-        let dim = u64::from_le_bytes(b8) as usize;
-        r.read_exact(&mut b8)?;
-        let num_classes = u64::from_le_bytes(b8) as usize;
-        let features = get_f32s(&mut r)?;
-        let labels = get_u32s(&mut r)?;
-        r.read_exact(&mut b8)?;
-        let slen = u64::from_le_bytes(b8) as usize;
-        let mut split = vec![0u8; slen];
-        r.read_exact(&mut split)?;
+    let nd = if binio::read_u8(&mut r)? == 1 {
+        let dim = binio::read_u64(&mut r)? as usize;
+        let num_classes = binio::read_u64(&mut r)? as usize;
+        let features = binio::read_f32s(&mut r).context("reading features")?;
+        let labels = binio::read_u32s(&mut r).context("reading labels")?;
+        let split = binio::read_bytes(&mut r).context("reading split masks")?;
         Some(NodeData { features, dim, labels, num_classes, split })
     } else {
         None
@@ -214,10 +171,23 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_magic() {
+    fn rejects_bad_magic_with_found_vs_expected() {
         let p = tmp("bad");
         std::fs::write(&p, b"NOTMAGIC........").unwrap();
-        assert!(read_snapshot(&p).is_err());
+        let err = read_snapshot(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("COFREEG1"), "expected bytes missing: {msg}");
+        assert!(msg.contains("NOTMAGIC"), "found bytes missing: {msg}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn truncated_snapshot_reports_truncation_not_bad_magic() {
+        let p = tmp("trunc");
+        std::fs::write(&p, b"COFRE").unwrap();
+        let err = read_snapshot(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated"), "{msg}");
         std::fs::remove_file(&p).unwrap();
     }
 }

@@ -14,11 +14,16 @@
 //!   forward/backward `train_step` with the Pallas matmul hot-spot kernel,
 //!   lowered once to HLO text and loaded here via the `xla` crate (enable
 //!   the `xla` cargo feature; the default build is execution-layer free).
+//! * **Distributed runtime (`dist`)** — the partition shard store and the
+//!   coordinator/worker protocol that run the same communication-free loop
+//!   across real process boundaries (`cofree shard`, `cofree worker`,
+//!   `cofree train --transport proc`), bit-identical to in-process.
 //!
 //! See `DESIGN.md` at the repository root for the system inventory and the
 //! partitioning-pipeline architecture.
 
 pub mod coordinator;
+pub mod dist;
 pub mod graph;
 pub mod partition;
 pub mod runtime;

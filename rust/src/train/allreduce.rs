@@ -53,6 +53,32 @@ impl GradAccumulator {
         self.parts_seen += 1;
     }
 
+    /// Fold another accumulator into this one — the reduction step for
+    /// remote partial sums: each rank accumulates its own workers with
+    /// [`GradAccumulator::add`], the coordinator then merges the per-rank
+    /// partials in rank order. `merge(a, b)` equals replaying every `add`
+    /// that `b` saw onto `a` (one fused addition per element, so it is
+    /// bitwise-equal to the sequential fold whenever the partial sums are
+    /// exact, and within normal f32 reassociation otherwise).
+    pub fn merge(&mut self, other: &Self) {
+        if !other.grads.is_empty() {
+            if self.grads.is_empty() {
+                self.grads = other.grads.iter().map(|g| vec![0.0; g.len()]).collect();
+            }
+            assert_eq!(self.grads.len(), other.grads.len(), "gradient arity mismatch");
+            for (acc, g) in self.grads.iter_mut().zip(&other.grads) {
+                assert_eq!(acc.len(), g.len(), "gradient shape mismatch");
+                for (a, &x) in acc.iter_mut().zip(g.iter()) {
+                    *a += x;
+                }
+            }
+        }
+        self.loss_sum += other.loss_sum;
+        self.weight_sum += other.weight_sum;
+        self.correct += other.correct;
+        self.parts_seen += other.parts_seen;
+    }
+
     /// The summed gradients (valid after at least one `add`).
     pub fn grads(&self) -> &[Vec<f32>] {
         &self.grads
@@ -97,6 +123,52 @@ mod tests {
         // Same allocation reused.
         assert_eq!(acc.grads()[0].as_ptr(), ptr);
         assert_eq!(acc.grads()[0][0], 2.0);
+    }
+
+    /// The satellite contract: merging per-rank partial accumulators equals
+    /// one sequential `add` of every `TrainOut`. The values are dyadic
+    /// rationals, so every partial sum is exact and the equality is bitwise.
+    #[test]
+    fn merge_of_rank_partials_equals_sequential_add() {
+        let outs: Vec<TrainOut> = (0..6)
+            .map(|i| {
+                let s = 0.25 * (i + 1) as f32;
+                out(s, vec![vec![s, -s, 2.0 * s], vec![s * 0.5]])
+            })
+            .collect();
+        // Sequential fold of all six, in order.
+        let mut seq = GradAccumulator::new();
+        for o in &outs {
+            seq.add(o);
+        }
+        // Three "ranks" of two workers each, then a rank-order merge.
+        let mut merged = GradAccumulator::new();
+        for rank in 0..3 {
+            let mut partial = GradAccumulator::new();
+            partial.add(&outs[2 * rank]);
+            partial.add(&outs[2 * rank + 1]);
+            merged.merge(&partial);
+        }
+        assert_eq!(merged.grads(), seq.grads());
+        assert_eq!(merged.loss_sum, seq.loss_sum);
+        assert_eq!(merged.weight_sum, seq.weight_sum);
+        assert_eq!(merged.correct, seq.correct);
+        assert_eq!(merged.parts_seen, seq.parts_seen);
+    }
+
+    #[test]
+    fn merge_into_empty_and_with_empty() {
+        let mut a = GradAccumulator::new();
+        let mut b = GradAccumulator::new();
+        b.add(&out(1.0, vec![vec![1.0, 2.0]]));
+        // Empty ← non-empty adopts shapes and values.
+        a.merge(&b);
+        assert_eq!(a.grads()[0], vec![1.0, 2.0]);
+        assert_eq!(a.parts_seen, 1);
+        // Non-empty ← empty is a no-op on gradients.
+        a.merge(&GradAccumulator::new());
+        assert_eq!(a.grads()[0], vec![1.0, 2.0]);
+        assert_eq!(a.parts_seen, 1);
     }
 
     #[test]

@@ -27,6 +27,7 @@
 
 use super::allreduce::GradAccumulator;
 use super::backend::{Backend, WorkerMeta};
+use super::checkpoint::TrainCheckpoint;
 use super::metrics::{EpochStats, History};
 use super::optimizer::{Adam, Optimizer, Sgd};
 use super::tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, TrainBatch};
@@ -36,7 +37,7 @@ use crate::runtime::{ArtifactKind, ModelConfig, ParamSet};
 use crate::train::cpu::CpuBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
 use std::time::Instant;
 
 #[cfg(feature = "xla")]
@@ -103,6 +104,35 @@ pub struct Run<B: Backend> {
     pub mode: RunMode,
 }
 
+impl<B: Backend> Run<B> {
+    /// Assemble a run from workers prepared outside the engine — the
+    /// multi-process runtime: workers live in other processes, tensorize
+    /// their own shards, and report their [`WorkerMeta`] over the wire.
+    /// `meta` must be in worker (rank) order; the total train weight folds
+    /// left-to-right over it, matching `prepare_partitions`' accumulation
+    /// order so the loss normalization is bit-identical.
+    pub fn from_workers(
+        workers: Vec<B::Worker>,
+        meta: Vec<WorkerMeta>,
+        model: ModelConfig,
+        mode: RunMode,
+    ) -> Run<B> {
+        assert_eq!(workers.len(), meta.len(), "one meta per worker");
+        let mut total_train_weight = 0.0;
+        for m in &meta {
+            total_train_weight += m.local_train_weight;
+        }
+        let num_partitions = workers.len();
+        Run { workers, meta, model, total_train_weight, num_partitions, mode }
+    }
+
+    /// The prepared workers, in worker order (the dist coordinator uses
+    /// this to send shutdown frames after training).
+    pub fn workers(&self) -> &[B::Worker] {
+        &self.workers
+    }
+}
+
 /// The engine: Algorithm 1 over any [`Backend`].
 pub struct TrainEngine<B: Backend> {
     pub backend: B,
@@ -116,6 +146,15 @@ pub fn model_config(ds: &Dataset) -> ModelConfig {
         hidden: ds.hidden,
         classes: ds.data.num_classes,
     }
+}
+
+/// The RNG stream worker `i` uses to generate its DropEdge-K mask bank.
+/// This is THE definition of that stream: `prepare_partitions` draws from
+/// it in-process, and the remote worker role re-derives it from
+/// `(seed, rank)` alone — both sides must agree bit-for-bit for the
+/// cross-process determinism contract to hold.
+pub fn worker_mask_rng(seed: u64, worker: usize) -> Rng {
+    Rng::new(seed ^ 0xD20B).fork(worker as u64)
 }
 
 impl TrainEngine<CpuBackend> {
@@ -135,7 +174,7 @@ impl<B: Backend> TrainEngine<B> {
     ) -> Result<(B::Worker, WorkerMeta)> {
         let meta = WorkerMeta {
             local_train_weight: batch.local_train_weight,
-            tmask_sum: batch.tensors[6].as_f32().iter().sum::<f32>() as f64,
+            tmask_sum: batch.tmask_sum(),
             num_masks: dropedge.map(|(k, _)| k).unwrap_or(0),
         };
         let worker = self.backend.prepare_worker(model, batch, dropedge, rng)?;
@@ -154,7 +193,6 @@ impl<B: Backend> TrainEngine<B> {
     ) -> Result<Run<B>> {
         let model = model_config(ds);
         let weights = dar_weights(&ds.graph, vc, reweighting);
-        let rng = Rng::new(seed ^ 0xD20B);
         let mut workers = Vec::with_capacity(vc.parts.len());
         let mut meta = Vec::with_capacity(vc.parts.len());
         let mut total_train_weight = 0.0;
@@ -172,7 +210,7 @@ impl<B: Backend> TrainEngine<B> {
             let batch = tensorize_partition(part, &ds.data, &weights[i], n_pad, e_pad)
                 .with_context(|| format!("tensorizing partition {i}"))?;
             total_train_weight += batch.local_train_weight;
-            let (w, m) = self.make_worker(&model, batch, dropedge, &mut rng.fork(i as u64))?;
+            let (w, m) = self.make_worker(&model, batch, dropedge, &mut worker_mask_rng(seed, i))?;
             workers.push(w);
             meta.push(m);
         }
@@ -254,12 +292,54 @@ impl<B: Backend> TrainEngine<B> {
         eval: Option<&B::Eval>,
         cfg: &TrainConfig,
     ) -> Result<(History, ParamSet, PhaseTimer)> {
+        let (history, ck, timer) = self.train_resumable(run, eval, cfg, None)?;
+        Ok((history, ck.params, timer))
+    }
+
+    /// Run Algorithm 1, optionally resuming from a [`TrainCheckpoint`].
+    ///
+    /// `cfg.epochs` is the TOTAL trajectory length: resuming a checkpoint
+    /// with `epochs_done = k` trains the remaining `cfg.epochs - k` epochs.
+    /// For the already-completed epochs the loop replays only the epoch-
+    /// level RNG draws (Rotate selection, DropEdge mask picks) so every
+    /// stream is positioned exactly where the uninterrupted run would have
+    /// it — the save→load→continue trajectory is bit-identical to a
+    /// straight run of the same seed and total length. Returns the history
+    /// of the epochs actually executed plus the end-of-run checkpoint.
+    pub fn train_resumable(
+        &mut self,
+        run: &mut Run<B>,
+        eval: Option<&B::Eval>,
+        cfg: &TrainConfig,
+        resume: Option<TrainCheckpoint>,
+    ) -> Result<(History, TrainCheckpoint, PhaseTimer)> {
         let rng = Rng::new(cfg.seed ^ 0x7247);
-        let mut params = ParamSet::init_glorot(&run.model, &mut rng.fork(1));
         let mut opt: Box<dyn Optimizer> = if cfg.use_adam {
             Box::new(Adam::new(cfg.lr))
         } else {
             Box::new(Sgd { lr: cfg.lr })
+        };
+        let mut start_epoch = 0usize;
+        let mut params = match resume {
+            None => ParamSet::init_glorot(&run.model, &mut rng.fork(1)),
+            Some(ck) => {
+                ensure!(
+                    ck.model == run.model,
+                    "checkpoint model {:?} does not match run model {:?}",
+                    ck.model,
+                    run.model
+                );
+                ensure!(
+                    ck.epochs_done <= cfg.epochs,
+                    "checkpoint has {} epochs done but the run is only {} epochs long",
+                    ck.epochs_done,
+                    cfg.epochs
+                );
+                opt.import_state(ck.opt)
+                    .context("restoring optimizer state from checkpoint")?;
+                start_epoch = ck.epochs_done;
+                ck.params
+            }
         };
         let mut acc = GradAccumulator::new();
         let mut history = History::default();
@@ -272,7 +352,6 @@ impl<B: Backend> TrainEngine<B> {
         let mut mask_rng = rng.fork(2);
         let mut rotate_rng = rng.fork(3);
         for epoch in 0..cfg.epochs {
-            acc.reset();
             // Rotate mode: one random batch this epoch; AllParts: everyone.
             let selected: Vec<usize> = match run.mode {
                 RunMode::AllParts => (0..run.workers.len()).collect(),
@@ -292,6 +371,12 @@ impl<B: Backend> TrainEngine<B> {
                     }
                 })
                 .collect();
+            if epoch < start_epoch {
+                // Resumed epoch: the draws above already advanced the RNG
+                // streams; the compute itself is in the checkpoint.
+                continue;
+            }
+            acc.reset();
             let t0 = Instant::now();
             let outs = self.backend.run_workers(&run.workers, &selected, &picks, &params)?;
             timer.add("execute", t0.elapsed());
@@ -359,7 +444,13 @@ impl<B: Backend> TrainEngine<B> {
             }
             history.push(stats);
         }
-        Ok((history, params, timer))
+        let checkpoint = TrainCheckpoint {
+            epochs_done: cfg.epochs,
+            model: run.model,
+            params,
+            opt: opt.export_state(),
+        };
+        Ok((history, checkpoint, timer))
     }
 }
 

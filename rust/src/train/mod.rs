@@ -16,6 +16,7 @@
 pub mod allreduce;
 pub mod backend;
 pub mod bucket;
+pub mod checkpoint;
 pub mod cpu;
 pub mod dropedge;
 pub mod engine;
@@ -27,11 +28,12 @@ pub mod tensorize;
 
 pub use backend::{Backend, WorkerMeta};
 pub use bucket::bucket_shapes;
+pub use checkpoint::TrainCheckpoint;
 pub use cpu::CpuBackend;
 pub use dropedge::MaskBank;
-pub use engine::{model_config, Run, RunMode, TrainConfig, TrainEngine};
+pub use engine::{model_config, worker_mask_rng, Run, RunMode, TrainConfig, TrainEngine};
 #[cfg(feature = "xla")]
 pub use engine::{XlaBackend, XlaEngine};
 pub use metrics::{EpochStats, History};
-pub use optimizer::{Adam, Optimizer, Sgd};
+pub use optimizer::{Adam, Optimizer, OptimizerState, Sgd};
 pub use tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch};

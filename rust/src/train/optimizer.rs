@@ -2,6 +2,27 @@
 //! provided for ablations. Parameters and gradients are flat f32 vectors in
 //! artifact lowering order.
 
+/// Snapshot of an optimizer's internal state, for checkpointing
+/// (`cofree train --save-model` / `--load-model`). Restoring a snapshot
+/// into a fresh optimizer of the same kind and hyperparameters makes the
+/// continued trajectory bit-identical to an uninterrupted run.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OptimizerState {
+    /// SGD is stateless.
+    Sgd,
+    /// Adam step counter + first/second moment estimates (parameter order).
+    Adam { t: i32, m: Vec<Vec<f32>>, v: Vec<Vec<f32>> },
+}
+
+impl OptimizerState {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            OptimizerState::Sgd => "sgd",
+            OptimizerState::Adam { .. } => "adam",
+        }
+    }
+}
+
 /// A first-order optimizer over a flat parameter list.
 pub trait Optimizer {
     /// Apply one update. `grads[i]` matches `params[i]` element-wise;
@@ -9,6 +30,10 @@ pub trait Optimizer {
     /// normalization of the summed DAR gradients).
     fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], scale: f32);
     fn name(&self) -> &'static str;
+    /// Snapshot the internal state for checkpointing.
+    fn export_state(&self) -> OptimizerState;
+    /// Restore a snapshot taken from an optimizer of the same kind.
+    fn import_state(&mut self, state: OptimizerState) -> anyhow::Result<()>;
 }
 
 /// Plain SGD.
@@ -27,6 +52,17 @@ impl Optimizer for Sgd {
     }
     fn name(&self) -> &'static str {
         "sgd"
+    }
+    fn export_state(&self) -> OptimizerState {
+        OptimizerState::Sgd
+    }
+    fn import_state(&mut self, state: OptimizerState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            matches!(state, OptimizerState::Sgd),
+            "checkpoint holds {} state, optimizer is sgd",
+            state.kind()
+        );
+        Ok(())
     }
 }
 
@@ -70,6 +106,26 @@ impl Optimizer for Adam {
     }
     fn name(&self) -> &'static str {
         "adam"
+    }
+    fn export_state(&self) -> OptimizerState {
+        OptimizerState::Adam { t: self.t, m: self.m.clone(), v: self.v.clone() }
+    }
+    fn import_state(&mut self, state: OptimizerState) -> anyhow::Result<()> {
+        match state {
+            OptimizerState::Adam { t, m, v } => {
+                anyhow::ensure!(
+                    m.len() == v.len(),
+                    "corrupt adam state: {} m tensors vs {} v tensors",
+                    m.len(),
+                    v.len()
+                );
+                self.t = t;
+                self.m = m;
+                self.v = v;
+                Ok(())
+            }
+            other => anyhow::bail!("checkpoint holds {} state, optimizer is adam", other.kind()),
+        }
     }
 }
 
@@ -123,6 +179,41 @@ mod tests {
         opt.step(&mut p, &[vec![1.0]], 1.0);
         // Step 2: m = 0.19, bc1 = 0.19 -> mhat = 1; v similar -> ≈ -0.2.
         assert!((p[0][0] + 0.2).abs() < 1e-4, "{}", p[0][0]);
+    }
+
+    #[test]
+    fn adam_state_roundtrip_continues_bit_identically() {
+        // Run A: 10 steps straight. Run B: 5 steps, export, import into a
+        // fresh optimizer, 5 more. Trajectories must match bitwise.
+        let grad_at = |i: usize| vec![vec![0.3 + 0.1 * i as f32, -0.7]];
+        let mut pa = vec![vec![1.0f32, -1.0]];
+        let mut oa = Adam::new(0.02);
+        for i in 0..10 {
+            oa.step(&mut pa, &grad_at(i), 1.0);
+        }
+        let mut pb = vec![vec![1.0f32, -1.0]];
+        let mut ob = Adam::new(0.02);
+        for i in 0..5 {
+            ob.step(&mut pb, &grad_at(i), 1.0);
+        }
+        let st = ob.export_state();
+        let mut oc = Adam::new(0.02);
+        oc.import_state(st).unwrap();
+        for i in 5..10 {
+            oc.step(&mut pb, &grad_at(i), 1.0);
+        }
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn import_rejects_kind_mismatch() {
+        let mut adam = Adam::new(0.01);
+        assert!(adam.import_state(OptimizerState::Sgd).is_err());
+        let mut sgd = Sgd { lr: 0.1 };
+        assert!(sgd
+            .import_state(OptimizerState::Adam { t: 1, m: vec![], v: vec![] })
+            .is_err());
+        assert!(sgd.import_state(OptimizerState::Sgd).is_ok());
     }
 
     #[test]

@@ -40,6 +40,14 @@ impl TrainBatch {
     }
     /// Index of the emask tensor inside `tensors` (swapped by DropEdge-K).
     pub const EMASK_IDX: usize = 3;
+
+    /// `Σ_j tmask_j` — the train-accuracy denominator. One definition
+    /// shared by the in-process engine and the remote worker role: the
+    /// cross-process parity contract needs both sides to sum the same
+    /// tensor in the same (f32, ascending-index) order.
+    pub fn tmask_sum(&self) -> f64 {
+        self.tensors[6].as_f32().iter().sum::<f32>() as f64
+    }
 }
 
 /// A tensorized full-graph eval batch.

@@ -1,0 +1,281 @@
+//! Shared little-endian binary (de)serialization primitives.
+//!
+//! One set of length-prefixed slice codecs and magic/version header checks
+//! used by every on-disk and on-wire format in the crate: the graph
+//! snapshot (`graph/io.rs`), the partition shard store (`dist/shard.rs`),
+//! model checkpoints (`train/checkpoint.rs`) and the coordinator/worker
+//! wire protocol (`dist/proto.rs`). Keeping the codecs in one place means a
+//! truncated or mismatched file fails with the same found-vs-expected
+//! diagnostics everywhere instead of a bare `UnexpectedEof`.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+/// Sanity cap on length prefixes (2^33 elements): a corrupt or adversarial
+/// length must not be able to request a multi-terabyte allocation.
+const MAX_LEN: u64 = 1 << 33;
+
+/// Render a magic as ASCII where printable, escaped elsewhere (for errors).
+fn show_magic(m: &[u8]) -> String {
+    m.iter()
+        .map(|&b| {
+            if (0x20..0x7f).contains(&b) {
+                (b as char).to_string()
+            } else {
+                format!("\\x{b:02x}")
+            }
+        })
+        .collect()
+}
+
+/// Write an 8-byte magic tag.
+pub fn write_magic(w: &mut impl Write, magic: &[u8; 8]) -> Result<()> {
+    w.write_all(magic)?;
+    Ok(())
+}
+
+/// Read and verify an 8-byte magic tag, reporting found-vs-expected bytes
+/// (and distinguishing a truncated header from a wrong one).
+pub fn expect_magic(r: &mut impl Read, magic: &[u8; 8], what: &str) -> Result<()> {
+    let mut found = [0u8; 8];
+    let mut got = 0usize;
+    while got < 8 {
+        match r.read(&mut found[got..]) {
+            Ok(0) => break,
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e).with_context(|| format!("reading {what} magic")),
+        }
+    }
+    if got < 8 {
+        bail!(
+            "not a {what}: file truncated inside the magic (got {got} of 8 bytes, \
+             expected {:?} = {:?})",
+            show_magic(magic),
+            magic
+        );
+    }
+    if &found != magic {
+        bail!(
+            "not a {what}: bad magic — expected {:?} ({:?}), found {:?} ({:?})",
+            show_magic(magic),
+            magic,
+            show_magic(&found),
+            found
+        );
+    }
+    Ok(())
+}
+
+/// Write a u32 format version.
+pub fn write_version(w: &mut impl Write, version: u32) -> Result<()> {
+    w.write_all(&version.to_le_bytes())?;
+    Ok(())
+}
+
+/// Read and verify a u32 format version, reporting found-vs-expected.
+pub fn expect_version(r: &mut impl Read, expected: u32, what: &str) -> Result<()> {
+    let found = read_u32(r).with_context(|| format!("reading {what} version"))?;
+    if found != expected {
+        bail!("unsupported {what} version: expected {expected}, found {found}");
+    }
+    Ok(())
+}
+
+pub fn write_u8(w: &mut impl Write, x: u8) -> Result<()> {
+    w.write_all(&[x])?;
+    Ok(())
+}
+
+pub fn read_u8(r: &mut impl Read) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub fn write_u32(w: &mut impl Write, x: u32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+pub fn write_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn write_f32(w: &mut impl Write, x: f32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn read_f32(r: &mut impl Read) -> Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+pub fn write_f64(w: &mut impl Write, x: f64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+pub fn read_f64(r: &mut impl Read) -> Result<f64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(f64::from_le_bytes(b))
+}
+
+/// Read a u64 length prefix, rejecting absurd values (corrupt stream).
+fn read_len(r: &mut impl Read, what: &str) -> Result<usize> {
+    let len = read_u64(r).with_context(|| format!("reading {what} length"))?;
+    if len > MAX_LEN {
+        bail!("corrupt {what}: length prefix {len} exceeds sanity cap {MAX_LEN}");
+    }
+    Ok(len as usize)
+}
+
+/// Write a length-prefixed byte slice.
+pub fn write_bytes(w: &mut impl Write, xs: &[u8]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    w.write_all(xs)?;
+    Ok(())
+}
+
+/// Read a length-prefixed byte slice.
+pub fn read_bytes(r: &mut impl Read) -> Result<Vec<u8>> {
+    let len = read_len(r, "byte array")?;
+    let mut buf = vec![0u8; len];
+    r.read_exact(&mut buf).context("reading byte array payload")?;
+    Ok(buf)
+}
+
+/// Write a length-prefixed u32 slice (little-endian).
+pub fn write_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read a length-prefixed u32 slice.
+pub fn read_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
+    let len = read_len(r, "u32 array")?;
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf).context("reading u32 array payload")?;
+    Ok(buf.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Write a length-prefixed f32 slice (little-endian bit patterns — the
+/// round trip is bit-exact, NaNs and signed zeros included).
+pub fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read a length-prefixed f32 slice.
+pub fn read_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let len = read_len(r, "f32 array")?;
+    let mut buf = vec![0u8; len * 4];
+    r.read_exact(&mut buf).context("reading f32 array payload")?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrips() {
+        let mut buf = Vec::new();
+        write_u8(&mut buf, 7).unwrap();
+        write_u32(&mut buf, 0xDEAD_BEEF).unwrap();
+        write_u64(&mut buf, u64::MAX - 1).unwrap();
+        write_f32(&mut buf, -0.0).unwrap();
+        write_f64(&mut buf, f64::MIN_POSITIVE).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(read_u8(&mut r).unwrap(), 7);
+        assert_eq!(read_u32(&mut r).unwrap(), 0xDEAD_BEEF);
+        assert_eq!(read_u64(&mut r).unwrap(), u64::MAX - 1);
+        assert_eq!(read_f32(&mut r).unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(read_f64(&mut r).unwrap(), f64::MIN_POSITIVE);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn slice_roundtrips_bit_exact() {
+        let mut buf = Vec::new();
+        let u = vec![0u32, 1, u32::MAX];
+        let f = vec![1.5f32, f32::NAN, -0.0, f32::INFINITY];
+        let b = vec![0u8, 255, 42];
+        write_u32s(&mut buf, &u).unwrap();
+        write_f32s(&mut buf, &f).unwrap();
+        write_bytes(&mut buf, &b).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(read_u32s(&mut r).unwrap(), u);
+        let f2 = read_f32s(&mut r).unwrap();
+        assert_eq!(
+            f.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            f2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(read_bytes(&mut r).unwrap(), b);
+    }
+
+    #[test]
+    fn magic_mismatch_reports_found_vs_expected() {
+        let mut r: &[u8] = b"WRONGMAG rest";
+        let err = expect_magic(&mut r, b"COFREESH", "test shard").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("COFREESH"), "{msg}");
+        assert!(msg.contains("WRONGMAG"), "{msg}");
+    }
+
+    #[test]
+    fn magic_truncation_is_distinguished() {
+        let mut r: &[u8] = b"COF";
+        let err = expect_magic(&mut r, b"COFREESH", "test shard").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated"), "{msg}");
+        assert!(msg.contains("3 of 8"), "{msg}");
+    }
+
+    #[test]
+    fn version_mismatch_reports_both() {
+        let mut buf = Vec::new();
+        write_version(&mut buf, 3).unwrap();
+        let mut r: &[u8] = &buf;
+        expect_version(&mut r, 3, "thing").unwrap();
+        let mut r2: &[u8] = &buf;
+        let err = expect_version(&mut r2, 4, "thing").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("expected 4") && msg.contains("found 3"), "{msg}");
+    }
+
+    #[test]
+    fn corrupt_length_is_rejected_not_allocated() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, u64::MAX / 2).unwrap();
+        let mut r: &[u8] = &buf;
+        let err = read_f32s(&mut r).unwrap_err();
+        assert!(format!("{err:#}").contains("sanity cap"));
+    }
+}

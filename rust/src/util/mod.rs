@@ -1,5 +1,7 @@
-//! Small shared utilities: deterministic RNG, logging, timing helpers.
+//! Small shared utilities: deterministic RNG, logging, timing helpers, and
+//! the shared binary codecs every on-disk/on-wire format is built from.
 
+pub mod binio;
 pub mod logging;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,194 @@
+//! End-to-end multi-process training (default features).
+//!
+//! The distributed determinism contract, proven over real process
+//! boundaries: `cofree`'s shard store + coordinator/worker protocol must
+//! reproduce the in-process engine's trajectory **bit-for-bit** — losses,
+//! accuracies, and final parameters — for the same dataset, cut, seed and
+//! config. Worker processes are the actual `cofree` binary
+//! (`CARGO_BIN_EXE_cofree`), spawned over TCP (and a Unix socket variant),
+//! so these tests exercise shard I/O, the wire protocol, the handshake,
+//! and the rank-ordered gradient fold, not a mock.
+
+use cofree_gnn::dist::{self, DistStats, ProcOptions, Transport};
+use cofree_gnn::graph::{datasets, Dataset};
+use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
+use cofree_gnn::runtime::ParamSet;
+use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
+use cofree_gnn::train::metrics::History;
+use cofree_gnn::util::rng::Rng;
+use std::path::PathBuf;
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_cofree"))
+}
+
+fn ds_small() -> Dataset {
+    // ~400 nodes, ~2k edges: whole fleets run in seconds.
+    datasets::build("yelp-sim", 0.04, 7).unwrap()
+}
+
+fn cut(ds: &Dataset, p: usize, seed: u64) -> VertexCut {
+    let mut rng = Rng::new(seed);
+    VertexCut::create(&ds.graph, p, algorithm("dbh").unwrap().as_ref(), &mut rng)
+}
+
+fn cfg_for(epochs: usize, seed: u64, dropedge: Option<(usize, f64)>) -> TrainConfig {
+    TrainConfig { epochs, eval_every: 5, dropedge, seed, ..Default::default() }
+}
+
+/// The in-process reference trajectory.
+fn run_inproc(
+    p: usize,
+    seed: u64,
+    dropedge: Option<(usize, f64)>,
+    epochs: usize,
+) -> (History, ParamSet) {
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let mut engine = TrainEngine::native();
+    let eval = engine.prepare_eval(&ds).unwrap();
+    let mut run = engine
+        .prepare_partitions(&ds, &vc, Reweighting::Dar, dropedge, seed)
+        .unwrap();
+    let cfg = cfg_for(epochs, seed, dropedge);
+    let (h, params, _) = engine.train(&mut run, Some(&eval), &cfg).unwrap();
+    (h, params)
+}
+
+/// The same trajectory over real worker processes.
+fn run_proc(
+    p: usize,
+    seed: u64,
+    dropedge: Option<(usize, f64)>,
+    epochs: usize,
+    transport: Transport,
+    tag: &str,
+) -> (History, ParamSet, DistStats) {
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let dir = std::env::temp_dir().join(format!(
+        "cofree_dist_test_{tag}_{}_{p}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dist::write_shards(&ds, &vc, &weights, seed, &dir).unwrap();
+    let opts = ProcOptions { transport, ..ProcOptions::new(worker_bin()) };
+    let cfg = cfg_for(epochs, seed, dropedge);
+    let (h, ck, stats) = dist::train_over_shards(&ds, &dir, &cfg, &opts, None).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+    (h, ck.params, stats)
+}
+
+fn assert_trajectories_identical(a: &History, b: &History) {
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.epoch, y.epoch);
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "epoch {} loss: {} vs {}",
+            x.epoch,
+            x.train_loss,
+            y.train_loss
+        );
+        assert_eq!(x.train_acc.to_bits(), y.train_acc.to_bits(), "epoch {} acc", x.epoch);
+        // val/test are NaN on non-eval epochs on both sides identically.
+        assert_eq!(x.val_acc.to_bits(), y.val_acc.to_bits(), "epoch {} val", x.epoch);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "epoch {} test", x.epoch);
+    }
+}
+
+/// The 2-process smoke test (CI satellite): trajectory parity with DropEdge
+/// in play, so shard bytes, mask-bank RNG forking, pick broadcasting and
+/// the gradient fold all have to line up.
+#[test]
+fn two_process_training_matches_inproc_bitwise() {
+    let (p, seed, epochs) = (2usize, 11u64, 6usize);
+    let dropedge = Some((3usize, 0.4f64));
+    let (h_in, params_in) = run_inproc(p, seed, dropedge, epochs);
+    let (h_proc, params_proc, stats) = run_proc(p, seed, dropedge, epochs, Transport::Tcp, "two");
+    assert_trajectories_identical(&h_in, &h_proc);
+    assert_eq!(params_in.data, params_proc.data, "final parameters diverged");
+    // Wire accounting: roughly 4 bytes of θ down + 4 bytes of ∇ up per
+    // parameter per worker per epoch, plus small framing overhead.
+    assert_eq!(stats.epochs_run, epochs);
+    assert_eq!(stats.num_workers, p);
+    assert!(stats.bytes_sent > 0 && stats.bytes_recv > 0);
+    let ideal = (8 * p * params_in.num_elements()) as f64;
+    let per_epoch = stats.bytes_per_epoch();
+    assert!(per_epoch >= ideal, "per-epoch bytes {per_epoch} below the {ideal} floor?");
+    assert!(
+        per_epoch < ideal * 1.25,
+        "framing overhead too large: {per_epoch} vs ideal {ideal}"
+    );
+}
+
+/// The acceptance-criteria shape: 4 workers, multi-epoch, bit-identical
+/// trajectory (no DropEdge — exercises the pick=None path).
+#[test]
+fn four_process_training_matches_inproc_bitwise() {
+    let (p, seed, epochs) = (4usize, 21u64, 5usize);
+    let (h_in, params_in) = run_inproc(p, seed, None, epochs);
+    let (h_proc, params_proc, stats) = run_proc(p, seed, None, epochs, Transport::Tcp, "four");
+    assert_trajectories_identical(&h_in, &h_proc);
+    assert_eq!(params_in.data, params_proc.data);
+    assert_eq!(stats.num_workers, 4);
+}
+
+/// Unix-domain sockets carry the same bits as TCP.
+#[cfg(unix)]
+#[test]
+fn unix_socket_transport_matches_inproc() {
+    let (p, seed, epochs) = (2usize, 31u64, 3usize);
+    let (_, params_in) = run_inproc(p, seed, None, epochs);
+    let (_, params_proc, _) = run_proc(p, seed, None, epochs, Transport::Unix, "unix");
+    assert_eq!(params_in.data, params_proc.data);
+}
+
+/// The CLI surface end-to-end: `cofree shard` + `cofree train --transport
+/// proc --workers 4 --shard-dir …` completes multi-epoch training against
+/// a pre-written store.
+#[test]
+fn cli_shard_then_train_proc() {
+    use cofree_gnn::coordinator::cli;
+    let dir = std::env::temp_dir().join(format!("cofree_cli_proc_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let argv = |s: &[&str]| s.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+    let code = cli::main(argv(&[
+        "shard",
+        "--dataset",
+        "yelp-sim",
+        "--scale",
+        "0.04",
+        "--partitions",
+        "4",
+        "--out",
+        dir.to_str().unwrap(),
+    ]))
+    .unwrap();
+    assert_eq!(code, 0);
+    let bin = worker_bin();
+    let code = cli::main(argv(&[
+        "train",
+        "--dataset",
+        "yelp-sim",
+        "--scale",
+        "0.04",
+        "--partitions",
+        "4",
+        "--epochs",
+        "4",
+        "--transport",
+        "proc",
+        "--workers",
+        "4",
+        "--shard-dir",
+        dir.to_str().unwrap(),
+        "--worker-bin",
+        bin.to_str().unwrap(),
+    ]))
+    .unwrap();
+    assert_eq!(code, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}

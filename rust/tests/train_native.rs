@@ -10,7 +10,7 @@
 use cofree_gnn::graph::datasets;
 use cofree_gnn::partition::{algorithm, Reweighting, VertexCut};
 use cofree_gnn::train::engine::{RunMode, TrainConfig, TrainEngine};
-use cofree_gnn::train::{model_config, tensorize_full_train};
+use cofree_gnn::train::{model_config, tensorize_full_train, TrainCheckpoint};
 use cofree_gnn::util::rng::Rng;
 
 fn ds_small() -> cofree_gnn::graph::Dataset {
@@ -104,6 +104,43 @@ fn native_training_bit_stable_across_thread_counts() {
         for (pi, (g, b)) in got.iter().zip(&base).enumerate() {
             assert_eq!(g, b, "param {pi} differs at {threads} threads");
         }
+    }
+}
+
+/// Checkpointing satellite: an 8-epoch run equals 4 epochs + save to disk +
+/// load + 4 more, bit-for-bit — parameters AND optimizer moments — with
+/// DropEdge in play (the resume path replays the mask-pick RNG draws).
+#[test]
+fn checkpoint_save_load_continue_is_bit_identical() {
+    let run_with = |resume: Option<TrainCheckpoint>, epochs: usize| {
+        let ds = ds_small();
+        let mut rng = Rng::new(5);
+        let vc = VertexCut::create(&ds.graph, 3, algorithm("dbh").unwrap().as_ref(), &mut rng);
+        let mut engine = TrainEngine::native();
+        let mut run = engine
+            .prepare_partitions(&ds, &vc, Reweighting::Dar, Some((3, 0.4)), 31)
+            .unwrap();
+        let cfg = TrainConfig { epochs, eval_every: 0, seed: 31, ..Default::default() };
+        engine.train_resumable(&mut run, None, &cfg, resume).unwrap()
+    };
+    let (h_full, full, _) = run_with(None, 8);
+    assert_eq!(h_full.epochs.len(), 8);
+    let (_, half, _) = run_with(None, 4);
+    assert_eq!(half.epochs_done, 4);
+    // Through the file format, not just in memory.
+    let path = std::env::temp_dir().join(format!("cofree_ck_resume_{}.bin", std::process::id()));
+    half.save(&path).unwrap();
+    let loaded = TrainCheckpoint::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    let (h_rest, resumed, _) = run_with(Some(loaded), 8);
+    // Only the continued epochs execute, numbered 4..8.
+    assert_eq!(h_rest.epochs.len(), 4);
+    assert_eq!(h_rest.epochs[0].epoch, 4);
+    assert_eq!(resumed.params.data, full.params.data, "parameters diverged after resume");
+    assert_eq!(resumed.opt, full.opt, "optimizer state diverged after resume");
+    // And the continued losses match the tail of the straight run exactly.
+    for (a, b) in h_rest.epochs.iter().zip(&h_full.epochs[4..]) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "epoch {}", a.epoch);
     }
 }
 
