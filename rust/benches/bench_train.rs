@@ -20,12 +20,13 @@ use cofree_gnn::graph::features::{synthesize, FeatureParams};
 use cofree_gnn::graph::generators::{chung_lu_pairs, power_law_degrees, rmat_pairs, RmatParams};
 use cofree_gnn::graph::{Dataset, GraphBuilder};
 use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
-use cofree_gnn::runtime::{ModelConfig, ParamSet};
+use cofree_gnn::runtime::{ModelConfig, ParamSet, TrainOut};
 use cofree_gnn::train::bucket::pad_explicit;
 use cofree_gnn::train::cpu::{self, sage::EdgeCsr};
 use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
 use cofree_gnn::train::reference;
 use cofree_gnn::train::tensorize::{tensorize_partition, TrainBatch};
+use cofree_gnn::train::workspace::SageWorkspace;
 use cofree_gnn::util::rng::Rng;
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -61,6 +62,7 @@ struct PartRow {
     e_pad_max: usize,
     fwd_old_s: f64,
     fwd_new_s: f64,
+    step_scalar_s: f64,
     step_new_s: f64,
     epoch_new_s: f64,
 }
@@ -68,6 +70,9 @@ struct PartRow {
 impl PartRow {
     fn fwd_speedup(&self) -> f64 {
         self.fwd_old_s / self.fwd_new_s.max(1e-12)
+    }
+    fn step_speedup(&self) -> f64 {
+        self.step_scalar_s / self.step_new_s.max(1e-12)
     }
 }
 
@@ -154,23 +159,27 @@ fn main() {
                     std::hint::black_box(reference::forward(&model, &params, &s.batch));
                 }
             });
-            // Native fast forward over all partitions.
+            // Native packed forward over all partitions (persistent arenas).
+            let mut workspaces: Vec<SageWorkspace> =
+                setups.iter().map(|s| SageWorkspace::new(&model, s.batch.n_pad)).collect();
             let fwd_new_s = timed(iters, || {
-                for s in &setups {
-                    std::hint::black_box(cpu::sage::forward(
+                for (s, ws) in setups.iter().zip(workspaces.iter_mut()) {
+                    cpu::sage::forward_into(
                         &model,
                         &params,
                         s.batch.tensors[0].as_f32(),
                         s.batch.emask().as_f32(),
                         &s.csr,
                         s.batch.n_pad,
-                    ));
+                        ws,
+                    );
+                    std::hint::black_box(ws.logits().len());
                 }
             });
-            // Full native train step (forward + loss/grad + backward).
-            let step_new_s = timed(iters, || {
+            // Pre-PR scalar train step (the retained oracle path).
+            let step_scalar_s = timed(iters, || {
                 for s in &setups {
-                    std::hint::black_box(cpu::train_step(
+                    std::hint::black_box(cpu::train_step_scalar(
                         &model,
                         &params,
                         &s.batch,
@@ -179,6 +188,54 @@ fn main() {
                     ));
                 }
             });
+            // Full packed train step (forward + loss/grad + backward, into
+            // reused workspaces and output slots).
+            let mut step_outs: Vec<TrainOut> =
+                setups.iter().map(|_| TrainOut::default()).collect();
+            let step_new_s = timed(iters, || {
+                for ((s, ws), out) in
+                    setups.iter().zip(workspaces.iter_mut()).zip(step_outs.iter_mut())
+                {
+                    cpu::train_step_into(
+                        &model,
+                        &params,
+                        &s.batch,
+                        &s.csr,
+                        s.batch.emask().as_f32(),
+                        ws,
+                        out,
+                    );
+                    std::hint::black_box(out.loss_sum);
+                }
+            });
+            // Hard parity assert: the packed step must reproduce the scalar
+            // oracle bit-for-bit on every partition.
+            for ((s, ws), out) in
+                setups.iter().zip(workspaces.iter_mut()).zip(step_outs.iter_mut())
+            {
+                cpu::train_step_into(
+                    &model,
+                    &params,
+                    &s.batch,
+                    &s.csr,
+                    s.batch.emask().as_f32(),
+                    ws,
+                    out,
+                );
+                let old = cpu::train_step_scalar(
+                    &model,
+                    &params,
+                    &s.batch,
+                    &s.csr,
+                    s.batch.emask().as_f32(),
+                );
+                assert_eq!(
+                    old.loss_sum.to_bits(),
+                    out.loss_sum.to_bits(),
+                    "p={p}: packed loss diverged from scalar oracle"
+                );
+                assert_eq!(old.grads, out.grads, "p={p}: packed grads diverged from scalar oracle");
+            }
             // Full engine epoch (parallel workers + allreduce + Adam).
             let mut engine = TrainEngine::native();
             let mut run = engine
@@ -203,15 +260,18 @@ fn main() {
                 e_pad_max,
                 fwd_old_s,
                 fwd_new_s,
+                step_scalar_s,
                 step_new_s,
                 epoch_new_s,
             };
             println!(
-                "p={p:<3} bucket<=({n_pad_max},{e_pad_max})  fwd old {:>8.3}s new {:>8.3}s ({:.2}x)  step {:>8.3}s  epoch {:>8.3}s",
+                "p={p:<3} bucket<=({n_pad_max},{e_pad_max})  fwd old {:>8.3}s new {:>8.3}s ({:.2}x)  step scalar {:>8.3}s packed {:>8.3}s ({:.2}x)  epoch {:>8.3}s",
                 row.fwd_old_s,
                 row.fwd_new_s,
                 row.fwd_speedup(),
+                row.step_scalar_s,
                 row.step_new_s,
+                row.step_speedup(),
                 row.epoch_new_s
             );
             rows.push(row);
@@ -237,14 +297,16 @@ fn main() {
             }
             write!(
                 rows_json,
-                "{{\"partitions\": {}, \"n_pad_max\": {}, \"e_pad_max\": {}, \"forward\": {{\"old_s\": {:.6}, \"new_s\": {:.6}, \"speedup\": {:.3}}}, \"train_step_new_s\": {:.6}, \"epoch_new_s\": {:.6}}}",
+                "{{\"partitions\": {}, \"n_pad_max\": {}, \"e_pad_max\": {}, \"forward\": {{\"old_s\": {:.6}, \"new_s\": {:.6}, \"speedup\": {:.3}}}, \"step\": {{\"scalar_s\": {:.6}, \"new_s\": {:.6}, \"speedup\": {:.3}}}, \"epoch_new_s\": {:.6}}}",
                 r.p,
                 r.n_pad_max,
                 r.e_pad_max,
                 r.fwd_old_s,
                 r.fwd_new_s,
                 r.fwd_speedup(),
+                r.step_scalar_s,
                 r.step_new_s,
+                r.step_speedup(),
                 r.epoch_new_s
             )
             .unwrap();

@@ -94,6 +94,9 @@ USAGE:
                [--save-model FILE] [--load-model FILE]
                [--scale F] [--artifacts DIR] [--out-csv FILE] [--config FILE]
   cofree bench NAME            (table1|table2|table3|table4|fig2|fig3|fig4|fig5|all)
+  cofree bench --quick [--edges N] [--dist-edges N] [--epochs E]
+               [--parts LIST] [--out FILE]
+               (reduced partition/train/dist benches -> BENCH_summary.json)
 
 DATASETS:   reddit-sim, products-sim, yelp-sim, papers-sim
 ALGOS:      random, ne, dbh, hep, greedy (vertex cut); metis (edge cut)
@@ -475,11 +478,45 @@ fn cmd_train(args: &Args) -> Result<i32> {
 }
 
 fn cmd_bench(args: &Args) -> Result<i32> {
+    // `cofree bench --quick`: the aggregate reduced-size perf snapshot
+    // (partition/train/dist) written to one BENCH_summary.json — no XLA,
+    // no positional name.
+    if args.get("quick").is_some() {
+        let d = super::quickbench::QuickOptions::default();
+        let parts = match args.get("parts") {
+            None => d.parts,
+            Some(list) => {
+                // Strict: a typo must not silently shrink the bench matrix.
+                let parsed: Vec<usize> = list
+                    .split(',')
+                    .map(|s| {
+                        let p: usize = s
+                            .trim()
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("--parts: cannot parse {s:?}"))?;
+                        anyhow::ensure!(p >= 1, "--parts: worker count must be >= 1, got {p}");
+                        Ok(p)
+                    })
+                    .collect::<Result<_>>()?;
+                anyhow::ensure!(!parsed.is_empty(), "--parts: no worker counts in {list:?}");
+                parsed
+            }
+        };
+        let opts = super::quickbench::QuickOptions {
+            edges: args.parse_or("edges", d.edges)?,
+            dist_edges: args.parse_or("dist-edges", d.dist_edges)?,
+            epochs: args.parse_or("epochs", d.epochs)?,
+            parts,
+            out: args.get("out").map(PathBuf::from).unwrap_or(d.out),
+        };
+        super::quickbench::run(&opts)?;
+        return Ok(0);
+    }
     let name = args
         .positional
         .first()
         .map(|s| s.as_str())
-        .context("bench needs a name: table1|table2|table3|table4|fig2|fig3|fig4|fig5|all")?;
+        .context("bench needs a name (table1|...|fig5|all) or --quick")?;
     let mut opts = ExpOptions::default();
     if let Some(dir) = args.get("artifacts") {
         opts.artifacts = PathBuf::from(dir);

@@ -6,6 +6,7 @@ pub mod cli;
 pub mod config;
 pub mod experiments;
 pub mod grid;
+pub mod quickbench;
 
 pub use config::Config;
 pub use grid::{eval_grid, train_grid, GridEntry, BENCH_SCALE, BENCH_SEED};

@@ -1,0 +1,416 @@
+//! `cofree bench --quick` — the aggregate perf snapshot.
+//!
+//! Runs reduced-size versions of the three tracked benches
+//! (`bench_partition`, `bench_train`, `bench_dist`) inside the `cofree`
+//! binary itself and writes one `BENCH_summary.json`, so a single cheap
+//! command (CI runs it on every push and uploads the JSON as an artifact)
+//! captures the whole perf trajectory PR-over-PR:
+//!
+//! * **partition** — graph build new-vs-reference on an R-MAT instance,
+//!   plus the vertex-cut assignment+materialization time;
+//! * **train** — the tentpole numbers: packed-kernel forward / train step
+//!   / full epoch vs the retained pre-PR scalar path, same model, same
+//!   bucket. Both epoch loops are structurally identical (rayon workers →
+//!   rank-ordered fold → Adam), so the ratio isolates the kernels +
+//!   workspace arena; the run **hard-asserts** that the two trajectories
+//!   end in bit-identical parameters (the SIMD path must be bit-identical
+//!   to its oracle, not just faster);
+//! * **dist** — shard write / mmap load throughput and inproc-vs-proc
+//!   epoch wall clock at several worker counts, with the proc/inproc
+//!   parity hard-assert (the overlapped transport must not change a bit).
+//!
+//! Headline: `headline.native_epoch_speedup` — the acceptance number for
+//! the allocation-free SIMD epoch loop (old scalar epoch ÷ new epoch on
+//! the default bucket).
+//!
+//! Knobs (flags on `cofree bench --quick`): `--edges N` (train/partition
+//! graph size, default 300k), `--dist-edges N` (default 60k), `--epochs E`
+//! (timed epochs per loop, default 3), `--parts LIST` (dist worker counts,
+//! default `2,4`), `--out FILE` (default `BENCH_summary.json`).
+
+use crate::dist::{self, MappedShard, ProcOptions, Shard};
+use crate::graph::features::{synthesize, FeatureParams};
+use crate::graph::generators::{rmat_pairs, RmatParams};
+use crate::graph::{Dataset, GraphBuilder};
+use crate::partition::{algorithm, dar_weights, Reweighting, VertexCut};
+use crate::runtime::{ModelConfig, ParamSet, TrainOut};
+use crate::train::allreduce::GradAccumulator;
+use crate::train::bucket::pad_explicit;
+use crate::train::cpu::{self, EdgeCsr};
+use crate::train::engine::TrainConfig;
+use crate::train::optimizer::{Adam, Optimizer};
+use crate::train::tensorize::{tensorize_partition, TrainBatch};
+use crate::train::workspace::SageWorkspace;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Context, Result};
+use rayon::prelude::*;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+pub struct QuickOptions {
+    pub edges: usize,
+    pub dist_edges: usize,
+    pub epochs: usize,
+    pub parts: Vec<usize>,
+    pub out: PathBuf,
+}
+
+impl Default for QuickOptions {
+    fn default() -> Self {
+        QuickOptions {
+            edges: 300_000,
+            dist_edges: 60_000,
+            epochs: 3,
+            parts: vec![2, 4],
+            out: PathBuf::from("BENCH_summary.json"),
+        }
+    }
+}
+
+fn timed<T>(iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    assert!(iters >= 1);
+    let mut total = 0.0;
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        total += t0.elapsed().as_secs_f64();
+    }
+    total / iters as f64
+}
+
+fn rmat_dataset(target_edges: usize, model: &ModelConfig, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let scale = ((target_edges / 10).max(2) as f64).log2().ceil() as u32;
+    let n = 1usize << scale;
+    let pairs = rmat_pairs(scale, target_edges, RmatParams::default(), &mut rng);
+    let g = GraphBuilder::new(n).edges(&pairs).build();
+    let comm: Vec<u32> = (0..n).map(|i| (i % model.classes) as u32).collect();
+    let nd = synthesize(
+        &comm,
+        model.classes,
+        &FeatureParams { dim: model.feat_dim, ..Default::default() },
+        &mut rng.fork(3),
+    );
+    Dataset {
+        name: "rmat-quick".into(),
+        graph: g,
+        data: nd,
+        layers: model.layers,
+        hidden: model.hidden,
+    }
+}
+
+struct PartSetup {
+    batch: TrainBatch,
+    csr: EdgeCsr,
+}
+
+/// One epoch of the pre-PR scalar path: parallel `train_step_scalar` over
+/// all partitions, rank-ordered fold, Adam. Structurally identical to
+/// [`new_epoch`] so the timing ratio isolates kernels + arena.
+fn scalar_epoch(
+    model: &ModelConfig,
+    setups: &[PartSetup],
+    params: &mut ParamSet,
+    acc: &mut GradAccumulator,
+    opt: &mut Adam,
+    scale: f32,
+) {
+    let outs: Vec<TrainOut> = setups
+        .par_iter()
+        .map(|s| cpu::train_step_scalar(model, params, &s.batch, &s.csr, s.batch.emask().as_f32()))
+        .collect();
+    acc.reset();
+    for out in &outs {
+        acc.add(out);
+    }
+    opt.step(&mut params.data, acc.grads(), scale);
+}
+
+/// One epoch of the new path: parallel `train_step_into` through each
+/// partition's persistent workspace into reused output slots, rank-ordered
+/// fold, Adam.
+#[allow(clippy::too_many_arguments)]
+fn new_epoch(
+    model: &ModelConfig,
+    setups: &[PartSetup],
+    workspaces: &[Mutex<SageWorkspace>],
+    outs: &mut [(TrainOut, f64)],
+    params: &mut ParamSet,
+    acc: &mut GradAccumulator,
+    opt: &mut Adam,
+    scale: f32,
+) {
+    outs.par_iter_mut().zip(setups.par_iter().zip(workspaces.par_iter())).for_each(
+        |(slot, (s, ws))| {
+            let mut ws = ws.lock().expect("workspace poisoned");
+            cpu::train_step_into(
+                model,
+                params,
+                &s.batch,
+                &s.csr,
+                s.batch.emask().as_f32(),
+                &mut ws,
+                &mut slot.0,
+            );
+        },
+    );
+    acc.reset();
+    for (out, _) in outs.iter() {
+        acc.add(out);
+    }
+    opt.step(&mut params.data, acc.grads(), scale);
+}
+
+pub fn run(opts: &QuickOptions) -> Result<()> {
+    let model = ModelConfig { layers: 2, feat_dim: 64, hidden: 64, classes: 16 };
+    println!("== cofree bench --quick: aggregate perf snapshot ==");
+    println!(
+        "edges={} dist_edges={} epochs={} parts={:?} rayon_threads={}",
+        opts.edges,
+        opts.dist_edges,
+        opts.epochs,
+        opts.parts,
+        rayon::current_num_threads()
+    );
+
+    // ---------------------------------------------------------------- partition
+    let mut rng = Rng::new(0xBE9C);
+    let scale_exp = ((opts.edges / 10).max(2) as f64).log2().ceil() as u32;
+    let n_nodes = 1usize << scale_exp;
+    let pairs = rmat_pairs(scale_exp, opts.edges, RmatParams::default(), &mut rng);
+    let build_new_s = timed(1, || GraphBuilder::new(n_nodes).edges(&pairs).build());
+    let build_ref_s = timed(1, || GraphBuilder::new(n_nodes).edges(&pairs).build_reference());
+    let g = GraphBuilder::new(n_nodes).edges(&pairs).build();
+    let cut_s = timed(1, || {
+        VertexCut::create(&g, 8, algorithm("dbh").unwrap().as_ref(), &mut Rng::new(1))
+    });
+    let build_speedup = build_ref_s / build_new_s.max(1e-12);
+    println!(
+        "partition: build new {build_new_s:.3}s vs reference {build_ref_s:.3}s ({build_speedup:.2}x), dbh p=8 cut {cut_s:.3}s"
+    );
+
+    // -------------------------------------------------------------------- train
+    let ds = rmat_dataset(opts.edges, &model, 0x7EA1);
+    let params0 = ParamSet::init_glorot(&model, &mut Rng::new(4));
+    let vc = VertexCut::create(&ds.graph, 1, algorithm("dbh").unwrap().as_ref(), &mut Rng::new(2));
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let mut setups = Vec::new();
+    let mut total_train_weight = 0.0f64;
+    for (i, part) in vc.parts.iter().enumerate() {
+        if part.num_edges() == 0 {
+            continue;
+        }
+        let (n_pad, e_pad) = pad_explicit(part.num_nodes(), 2 * part.num_edges());
+        let batch = tensorize_partition(part, &ds.data, &weights[i], n_pad, e_pad)
+            .context("tensorizing quick-bench partition")?;
+        total_train_weight += batch.local_train_weight;
+        let csr = EdgeCsr::from_batch(&batch);
+        setups.push(PartSetup { batch, csr });
+    }
+    let scale = if total_train_weight > 0.0 { (1.0 / total_train_weight) as f32 } else { 1.0 };
+    ensure!(!setups.is_empty(), "quick-bench graph produced no non-empty partition");
+    let s0 = &setups[0];
+    let emask0 = s0.batch.emask().as_f32();
+
+    // Forward: scalar oracle vs packed workspace path (+ bit parity).
+    let fwd_old_s = timed(opts.epochs, || {
+        cpu::sage::forward_scalar(
+            &model,
+            &params0,
+            s0.batch.tensors[0].as_f32(),
+            emask0,
+            &s0.csr,
+            s0.batch.n_pad,
+        )
+    });
+    let mut ws0 = SageWorkspace::new(&model, s0.batch.n_pad);
+    let fwd_new_s = timed(opts.epochs, || {
+        cpu::sage::forward_into(
+            &model,
+            &params0,
+            s0.batch.tensors[0].as_f32(),
+            emask0,
+            &s0.csr,
+            s0.batch.n_pad,
+            &mut ws0,
+        )
+    });
+    {
+        let st = cpu::sage::forward_scalar(
+            &model,
+            &params0,
+            s0.batch.tensors[0].as_f32(),
+            emask0,
+            &s0.csr,
+            s0.batch.n_pad,
+        );
+        ensure!(
+            st.logits() == ws0.logits(),
+            "PARITY FAILURE: packed forward diverged from the scalar oracle"
+        );
+    }
+
+    // Full train step old vs new (+ bit parity on loss and every gradient).
+    let step_old_s = timed(opts.epochs, || {
+        cpu::train_step_scalar(&model, &params0, &s0.batch, &s0.csr, emask0)
+    });
+    let mut out0 = TrainOut::default();
+    let step_new_s = timed(opts.epochs, || {
+        cpu::train_step_into(&model, &params0, &s0.batch, &s0.csr, emask0, &mut ws0, &mut out0)
+    });
+    {
+        let old = cpu::train_step_scalar(&model, &params0, &s0.batch, &s0.csr, emask0);
+        ensure!(
+            old.loss_sum.to_bits() == out0.loss_sum.to_bits() && old.grads == out0.grads,
+            "PARITY FAILURE: packed train step diverged from the scalar oracle"
+        );
+    }
+
+    // Epoch loops, structurally identical, trajectories compared bitwise.
+    let cfg = TrainConfig::default();
+    let mut params_old = params0.clone();
+    let mut acc = GradAccumulator::new();
+    let mut opt_old = Adam::new(cfg.lr);
+    // One warm-up epoch each (excluded from timing), then `epochs` timed.
+    scalar_epoch(&model, &setups, &mut params_old, &mut acc, &mut opt_old, scale);
+    let epoch_old_s = timed(opts.epochs, || {
+        scalar_epoch(&model, &setups, &mut params_old, &mut acc, &mut opt_old, scale)
+    });
+    let workspaces: Vec<Mutex<SageWorkspace>> = setups
+        .iter()
+        .map(|s| Mutex::new(SageWorkspace::new(&model, s.batch.n_pad)))
+        .collect();
+    let mut outs: Vec<(TrainOut, f64)> =
+        (0..setups.len()).map(|_| (TrainOut::default(), 0.0)).collect();
+    let mut params_new = params0.clone();
+    let mut opt_new = Adam::new(cfg.lr);
+    new_epoch(
+        &model,
+        &setups,
+        &workspaces,
+        &mut outs,
+        &mut params_new,
+        &mut acc,
+        &mut opt_new,
+        scale,
+    );
+    let epoch_new_s = timed(opts.epochs, || {
+        new_epoch(
+            &model,
+            &setups,
+            &workspaces,
+            &mut outs,
+            &mut params_new,
+            &mut acc,
+            &mut opt_new,
+            scale,
+        )
+    });
+    // Both loops ran 1 + epochs identical-structure epochs from the same
+    // init; the SIMD trajectory must be bit-identical to the oracle's.
+    ensure!(
+        params_old.data == params_new.data,
+        "PARITY FAILURE: scalar and packed epoch trajectories diverged"
+    );
+    let fwd_speedup = fwd_old_s / fwd_new_s.max(1e-12);
+    let step_speedup = step_old_s / step_new_s.max(1e-12);
+    let epoch_speedup = epoch_old_s / epoch_new_s.max(1e-12);
+    println!(
+        "train: fwd {fwd_old_s:.3}s→{fwd_new_s:.3}s ({fwd_speedup:.2}x)  step {step_old_s:.3}s→{step_new_s:.3}s ({step_speedup:.2}x)  epoch {epoch_old_s:.3}s→{epoch_new_s:.3}s ({epoch_speedup:.2}x)  parity=ok"
+    );
+
+    // --------------------------------------------------------------------- dist
+    let dist_model = model;
+    let dds = rmat_dataset(opts.dist_edges, &dist_model, 0xD157);
+    let worker_bin = std::env::current_exe().context("locating the cofree binary")?;
+    let mut dist_rows = String::new();
+    let mut proc_overhead_mid = f64::NAN;
+    for (pi, &p) in opts.parts.iter().enumerate() {
+        let vc =
+            VertexCut::create(&dds.graph, p, algorithm("dbh").unwrap().as_ref(), &mut Rng::new(42));
+        let w = dar_weights(&dds.graph, &vc, Reweighting::Dar);
+        let dir = std::env::temp_dir().join(format!("cofree_quick_{}_{p}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let t0 = Instant::now();
+        let sstats = dist::write_shards(&dds, &vc, &w, 42, &dir)?;
+        let write_s = t0.elapsed().as_secs_f64();
+        let files = dist::shard_files(&dir)?;
+        let t1 = Instant::now();
+        let mut mapped_edges = 0usize;
+        for f in &files {
+            mapped_edges += MappedShard::open(f)?.local.num_edges();
+        }
+        let map_s = t1.elapsed().as_secs_f64();
+        let t2 = Instant::now();
+        for f in &files {
+            let _ = Shard::read(f)?;
+        }
+        let read_s = t2.elapsed().as_secs_f64();
+        ensure!(mapped_edges == dds.graph.num_edges(), "shards lost edges");
+
+        let cfg =
+            TrainConfig { epochs: opts.epochs, eval_every: 0, seed: 42, ..Default::default() };
+        let mut engine = crate::train::engine::TrainEngine::native();
+        let mut run = engine.prepare_partitions(&dds, &vc, Reweighting::Dar, None, 42)?;
+        let t3 = Instant::now();
+        let (_, params_in, _) = engine.train(&mut run, None, &cfg)?;
+        let inproc_epoch_s = t3.elapsed().as_secs_f64() / opts.epochs as f64;
+
+        let popts = ProcOptions::new(worker_bin.clone());
+        let t4 = Instant::now();
+        let (_, ck, dstats) = dist::train_over_shards(&dds, &dir, &cfg, &popts, None)?;
+        let proc_total = t4.elapsed().as_secs_f64();
+        let proc_epoch_s =
+            (proc_total - dstats.handshake_seconds).max(0.0) / opts.epochs as f64;
+        let _ = std::fs::remove_dir_all(&dir);
+        ensure!(
+            params_in.data == ck.params.data,
+            "PARITY FAILURE: p={p} proc trajectory diverged from inproc"
+        );
+        let overhead = proc_epoch_s / inproc_epoch_s.max(1e-12);
+        if pi == opts.parts.len() / 2 {
+            proc_overhead_mid = overhead;
+        }
+        let mib = sstats.total_bytes as f64 / (1024.0 * 1024.0);
+        println!(
+            "dist p={p}: shards {mib:.1} MiB (write {:.0} MiB/s, mmap-load {:.0} MiB/s, read {:.0} MiB/s)  epoch inproc {inproc_epoch_s:.4}s proc {proc_epoch_s:.4}s ({overhead:.2}x)  {:.2} B/epoch/param  parity=ok",
+            mib / write_s.max(1e-9),
+            mib / map_s.max(1e-9),
+            mib / read_s.max(1e-9),
+            dstats.bytes_per_epoch_per_param()
+        );
+        if !dist_rows.is_empty() {
+            dist_rows.push_str(",\n    ");
+        }
+        write!(
+            dist_rows,
+            "{{\"workers\": {p}, \"shard\": {{\"bytes\": {}, \"write_s\": {write_s:.6}, \"mmap_load_s\": {map_s:.6}, \"read_s\": {read_s:.6}}}, \"epoch\": {{\"inproc_s\": {inproc_epoch_s:.6}, \"proc_s\": {proc_epoch_s:.6}, \"overhead\": {overhead:.3}}}, \"wire_bytes_per_epoch_per_param\": {:.3}, \"parity\": true}}",
+            sstats.total_bytes,
+            dstats.bytes_per_epoch_per_param()
+        )
+        .unwrap();
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"summary\",\n  \"generated_by\": \"cofree bench --quick\",\n  \"config\": {{\"edges\": {}, \"dist_edges\": {}, \"epochs\": {}, \"parts\": {:?}, \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"headline\": {{\"native_epoch_speedup\": {epoch_speedup:.3}, \"forward_speedup\": {fwd_speedup:.3}, \"proc_epoch_overhead_mid\": {proc_overhead_mid:.3}}},\n  \"partition\": {{\"build_new_s\": {build_new_s:.6}, \"build_reference_s\": {build_ref_s:.6}, \"build_speedup\": {build_speedup:.3}, \"dbh_p8_cut_s\": {cut_s:.6}}},\n  \"train\": {{\"bucket\": {{\"n_pad\": {}, \"e_pad\": {}}}, \"forward\": {{\"old_s\": {fwd_old_s:.6}, \"new_s\": {fwd_new_s:.6}, \"speedup\": {fwd_speedup:.3}}}, \"step\": {{\"old_s\": {step_old_s:.6}, \"new_s\": {step_new_s:.6}, \"speedup\": {step_speedup:.3}}}, \"epoch\": {{\"old_s\": {epoch_old_s:.6}, \"new_s\": {epoch_new_s:.6}, \"speedup\": {epoch_speedup:.3}}}, \"parity\": true}},\n  \"dist\": [\n    {dist_rows}\n  ]\n}}\n",
+        opts.edges,
+        opts.dist_edges,
+        opts.epochs,
+        opts.parts,
+        model.layers,
+        model.feat_dim,
+        model.hidden,
+        model.classes,
+        std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1),
+        rayon::current_num_threads(),
+        s0.batch.n_pad,
+        s0.batch.e_pad,
+    );
+    std::fs::write(&opts.out, &json)
+        .with_context(|| format!("writing {}", opts.out.display()))?;
+    println!("wrote {}", opts.out.display());
+    Ok(())
+}

@@ -130,19 +130,103 @@ impl DistStats {
 pub struct ProcWorker {
     pub rank: usize,
     stream: RefCell<Stream>,
+    /// Reusable receive buffer: step results land here frame after frame,
+    /// epoch after epoch, with no per-frame payload allocation.
+    recv: RefCell<proto::FrameBuf>,
 }
 
 /// Backend that executes `train_step` on remote worker processes and
 /// evaluates on the coordinator (full-graph eval never leaves the leader).
+///
+/// Per epoch it serializes the parameter payload **once** into a reused
+/// buffer, broadcasts a `Step` frame to every selected worker before
+/// reading anything back (so all remote processes compute concurrently),
+/// then collects `StepResult`s **as they arrive** by readiness-polling all
+/// sockets round-robin — a slow rank no longer blocks draining the fast
+/// ranks' results. Results are still indexed by rank into the engine's
+/// output slots, and the engine still folds them sequentially in rank
+/// order, so the trajectory stays bit-identical to the in-process engine
+/// (`tests/dist_proc.rs`).
 pub struct ProcBackend {
     cpu: CpuBackend,
     bytes_sent: Cell<u64>,
     bytes_recv: Cell<u64>,
+    /// The once-per-epoch serialized parameter payload (reused).
+    encoded: RefCell<proto::EncodedParams>,
+    /// Per-selected-worker incremental frame readers (reused).
+    recv_states: RefCell<Vec<proto::StepResultRecv>>,
+    /// Per-selected-worker completion flags (reused).
+    recv_done: RefCell<Vec<bool>>,
 }
 
 impl ProcBackend {
     pub fn new() -> ProcBackend {
-        ProcBackend { cpu: CpuBackend::new(), bytes_sent: Cell::new(0), bytes_recv: Cell::new(0) }
+        ProcBackend {
+            cpu: CpuBackend::new(),
+            bytes_sent: Cell::new(0),
+            bytes_recv: Cell::new(0),
+            encoded: RefCell::new(proto::EncodedParams::new()),
+            recv_states: RefCell::new(Vec::new()),
+            recv_done: RefCell::new(Vec::new()),
+        }
+    }
+}
+
+impl ProcBackend {
+    /// Drain one `StepResult` per selected worker, round-robin over
+    /// nonblocking sockets: each pass pumps whatever bytes every pending
+    /// socket has ready ([`proto::StepResultRecv`]), decodes completed
+    /// frames straight into their rank's output slot, and only sleeps
+    /// (200 µs) when a full pass moved no bytes at all. Wall clock is
+    /// therefore governed by the slowest worker, not by rank order.
+    fn collect_overlapped(
+        &self,
+        workers: &[ProcWorker],
+        selected: &[usize],
+        outs: &mut [(TrainOut, f64)],
+    ) -> Result<()> {
+        let mut states = self.recv_states.borrow_mut();
+        states.clear();
+        states.resize_with(selected.len(), proto::StepResultRecv::new);
+        let mut done = self.recv_done.borrow_mut();
+        done.clear();
+        done.resize(selected.len(), false);
+        let mut pending = selected.len();
+        while pending > 0 {
+            let mut moved = false;
+            for i in 0..selected.len() {
+                if done[i] {
+                    continue;
+                }
+                let w = &workers[selected[i]];
+                let before = states[i].bytes_buffered();
+                let polled = {
+                    let mut stream = w.stream.borrow_mut();
+                    let mut recv = w.recv.borrow_mut();
+                    states[i].poll(&mut *stream, &mut recv)
+                }
+                .with_context(|| format!("collecting step result from worker rank {}", w.rank))?;
+                if states[i].bytes_buffered() != before {
+                    moved = true;
+                }
+                if let Some(wire) = polled {
+                    self.bytes_recv.set(self.bytes_recv.get() + wire);
+                    let recv = w.recv.borrow();
+                    let secs = proto::decode_step_result_into(recv.payload(), &mut outs[i].0)
+                        .with_context(|| {
+                            format!("decoding step result from worker rank {}", w.rank)
+                        })?;
+                    outs[i].1 = secs;
+                    done[i] = true;
+                    pending -= 1;
+                    moved = true;
+                }
+            }
+            if !moved {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -193,33 +277,46 @@ impl Backend for ProcBackend {
         selected: &[usize],
         picks: &[Option<usize>],
         params: &ParamSet,
-    ) -> Result<Vec<(TrainOut, f64)>> {
+        outs: &mut Vec<(TrainOut, f64)>,
+    ) -> Result<()> {
         debug_assert_eq!(selected.len(), picks.len());
-        // Broadcast phase: every selected worker gets its Step frame first,
-        // so the remote processes compute concurrently. The parameter
-        // payload is identical for all workers (only the pick differs), so
-        // it is serialized exactly once per epoch.
-        let encoded = proto::EncodedParams::encode(&params.data)?;
-        for (&wi, pick) in selected.iter().zip(picks) {
-            let w = &workers[wi];
-            let n = proto::write_step_encoded(&mut *w.stream.borrow_mut(), *pick, &encoded)
-                .with_context(|| format!("sending step to worker rank {}", w.rank))?;
-            self.bytes_sent.set(self.bytes_sent.get() + n);
-        }
-        // …collect phase: results are read back in `selected` order, which
-        // keeps the engine's sequential gradient fold deterministic.
-        let mut outs = Vec::with_capacity(selected.len());
-        for &wi in selected {
-            let w = &workers[wi];
-            let (frame, n) = proto::read_frame(&mut *w.stream.borrow_mut())
-                .with_context(|| format!("reading step result from worker rank {}", w.rank))?;
-            self.bytes_recv.set(self.bytes_recv.get() + n);
-            match frame {
-                Frame::StepResult { out, compute_seconds } => outs.push((out, compute_seconds)),
-                other => bail!("worker rank {}: expected StepResult, got {other:?}", w.rank),
+        // Broadcast phase: every selected worker gets its Step frame before
+        // any read, so the remote processes compute concurrently. The
+        // parameter payload is identical for all workers (only the pick
+        // differs), so it is serialized exactly once per epoch — into a
+        // buffer reused across epochs.
+        {
+            let mut encoded = self.encoded.borrow_mut();
+            encoded.encode_from(&params.data)?;
+            for (&wi, pick) in selected.iter().zip(picks) {
+                let w = &workers[wi];
+                let n = proto::write_step_encoded(&mut *w.stream.borrow_mut(), *pick, &encoded)
+                    .with_context(|| format!("sending step to worker rank {}", w.rank))?;
+                self.bytes_sent.set(self.bytes_sent.get() + n);
             }
         }
-        Ok(outs)
+        // Collect phase: readiness-polled, overlapped. Slot `i` of `outs`
+        // is worker `selected[i]` — results land by rank regardless of
+        // arrival order, and the engine's sequential fold over `outs`
+        // keeps the gradient sum in rank order, bit-identical to inproc.
+        outs.truncate(selected.len());
+        while outs.len() < selected.len() {
+            outs.push((TrainOut::default(), 0.0));
+        }
+        for &wi in selected {
+            workers[wi]
+                .stream
+                .borrow()
+                .set_nonblocking(true)
+                .with_context(|| format!("worker rank {}: nonblocking", workers[wi].rank))?;
+        }
+        let collect = self.collect_overlapped(workers, selected, outs);
+        // Always restore blocking mode (the handshake/shutdown paths and
+        // the next epoch's broadcast expect it), even when collect failed.
+        for &wi in selected {
+            let _ = workers[wi].stream.borrow().set_nonblocking(false);
+        }
+        collect
     }
 
     fn evaluate(&self, eval: &CpuEval, params: &ParamSet, split: usize) -> Result<f64> {
@@ -473,7 +570,11 @@ pub fn train_over_shards(
         // Step-loop reads are unbounded again (epochs can legitimately
         // take longer than the handshake timeout).
         s.set_read_timeout(None)?;
-        workers.push(ProcWorker { rank, stream: RefCell::new(s) });
+        workers.push(ProcWorker {
+            rank,
+            stream: RefCell::new(s),
+            recv: RefCell::new(proto::FrameBuf::new()),
+        });
     }
     stats.handshake_seconds = t_handshake.elapsed().as_secs_f64();
 

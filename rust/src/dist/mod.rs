@@ -31,4 +31,4 @@ pub mod shard;
 pub mod worker;
 
 pub use coordinator::{train_over_shards, DistStats, ProcBackend, ProcOptions, Transport};
-pub use shard::{shard_file_name, shard_files, write_shards, Shard, ShardSetStats};
+pub use shard::{shard_file_name, shard_files, write_shards, MappedShard, Shard, ShardSetStats};

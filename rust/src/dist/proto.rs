@@ -17,6 +17,21 @@
 //! a few dozen bytes of framing — the quantity `bench_dist` reports as
 //! `bytes_per_epoch_per_param`.
 //!
+//! The steady-state step loop is engineered allocation-free on both ends:
+//!
+//! * reads land in a caller-owned [`FrameBuf`] ([`read_frame_into`]) and
+//!   decode into reused tensors ([`decode_step_into`],
+//!   [`decode_step_result_into`]) — no per-frame `vec![0u8; len]`;
+//! * writes go through [`EncodedParams`] (the parameter payload is
+//!   serialized once per epoch and streamed to every worker) and
+//!   [`write_step_result_buffered`] (reused payload buffer), and every
+//!   header+payload pair leaves in one vectored write — one packet, not
+//!   two, under `TCP_NODELAY`;
+//! * the coordinator's collect side uses [`StepResultRecv`], an
+//!   incremental reader that makes progress on whatever bytes a
+//!   nonblocking socket has ready, so results are drained **as workers
+//!   finish** instead of in strict rank order.
+//!
 //! Handshake sequence (worker-initiated):
 //!
 //! ```text
@@ -34,7 +49,7 @@
 use crate::runtime::{ModelConfig, TrainOut};
 use crate::util::binio;
 use anyhow::{bail, ensure, Context, Result};
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
 #[cfg(unix)]
 use std::os::unix::net::UnixStream;
@@ -45,12 +60,12 @@ pub const PROTO_VERSION: u32 = 1;
 /// Sanity cap on a single frame payload (1 GiB).
 const MAX_FRAME: u64 = 1 << 30;
 
-const TAG_HELLO: u8 = 1;
-const TAG_CONFIG: u8 = 2;
-const TAG_META: u8 = 3;
-const TAG_STEP: u8 = 4;
-const TAG_STEP_RESULT: u8 = 5;
-const TAG_SHUTDOWN: u8 = 6;
+pub(crate) const TAG_HELLO: u8 = 1;
+pub(crate) const TAG_CONFIG: u8 = 2;
+pub(crate) const TAG_META: u8 = 3;
+pub(crate) const TAG_STEP: u8 = 4;
+pub(crate) const TAG_STEP_RESULT: u8 = 5;
+pub(crate) const TAG_SHUTDOWN: u8 = 6;
 
 /// A connected byte stream: TCP or Unix-domain socket.
 pub enum Stream {
@@ -98,6 +113,17 @@ impl Stream {
             Stream::Unix(s) => s.set_read_timeout(dur),
         }
     }
+
+    /// Toggle nonblocking mode (the coordinator's overlapped collect phase
+    /// polls all workers' sockets for readiness; blocking mode is restored
+    /// afterwards).
+    pub fn set_nonblocking(&self, nonblocking: bool) -> std::io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_nonblocking(nonblocking),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.set_nonblocking(nonblocking),
+        }
+    }
 }
 
 impl Read for Stream {
@@ -116,6 +142,15 @@ impl Write for Stream {
             Stream::Tcp(s) => s.write(buf),
             #[cfg(unix)]
             Stream::Unix(s) => s.write(buf),
+        }
+    }
+    /// Forward vectored writes to the socket so a header+payload pair
+    /// leaves in one syscall (and, with `TCP_NODELAY`, one packet).
+    fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write_vectored(bufs),
+            #[cfg(unix)]
+            Stream::Unix(s) => s.write_vectored(bufs),
         }
     }
     fn flush(&mut self) -> std::io::Result<()> {
@@ -171,24 +206,32 @@ fn get_model(r: &mut impl Read) -> Result<ModelConfig> {
 /// Write one frame; returns total bytes on the wire (header + payload).
 pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
     let mut payload = Vec::new();
+    let tag = encode_payload(frame, &mut payload)?;
+    write_raw(w, tag, &payload)
+}
+
+/// Serialize `frame`'s payload into `payload` (cleared first); returns the
+/// tag byte.
+fn encode_payload(frame: &Frame, payload: &mut Vec<u8>) -> Result<u8> {
+    payload.clear();
     let tag = match frame {
         Frame::Hello { proto_version, rank, num_parts } => {
-            binio::write_u32(&mut payload, *proto_version)?;
-            binio::write_u32(&mut payload, *rank)?;
-            binio::write_u32(&mut payload, *num_parts)?;
+            binio::write_u32(payload, *proto_version)?;
+            binio::write_u32(payload, *rank)?;
+            binio::write_u32(payload, *num_parts)?;
             TAG_HELLO
         }
         Frame::Config { seed, dropedge_k, dropedge_ratio, model } => {
-            binio::write_u64(&mut payload, *seed)?;
-            binio::write_u32(&mut payload, *dropedge_k)?;
-            binio::write_f64(&mut payload, *dropedge_ratio)?;
-            put_model(&mut payload, model)?;
+            binio::write_u64(payload, *seed)?;
+            binio::write_u32(payload, *dropedge_k)?;
+            binio::write_f64(payload, *dropedge_ratio)?;
+            put_model(payload, model)?;
             TAG_CONFIG
         }
         Frame::Meta { local_train_weight, tmask_sum, num_masks } => {
-            binio::write_f64(&mut payload, *local_train_weight)?;
-            binio::write_f64(&mut payload, *tmask_sum)?;
-            binio::write_u32(&mut payload, *num_masks)?;
+            binio::write_f64(payload, *local_train_weight)?;
+            binio::write_f64(payload, *tmask_sum)?;
+            binio::write_u32(payload, *num_masks)?;
             TAG_META
         }
         Frame::Step { pick, params } => {
@@ -196,41 +239,62 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> Result<u64> {
                 None => -1,
                 Some(k) => *k as i64,
             };
-            binio::write_u64(&mut payload, pick_code as u64)?;
-            put_tensor_list(&mut payload, params)?;
+            binio::write_u64(payload, pick_code as u64)?;
+            put_tensor_list(payload, params)?;
             TAG_STEP
         }
         Frame::StepResult { out, compute_seconds } => {
-            binio::write_f32(&mut payload, out.loss_sum)?;
-            binio::write_f32(&mut payload, out.weight_sum)?;
-            binio::write_f32(&mut payload, out.correct)?;
-            binio::write_f64(&mut payload, *compute_seconds)?;
-            put_tensor_list(&mut payload, &out.grads)?;
+            binio::write_f32(payload, out.loss_sum)?;
+            binio::write_f32(payload, out.weight_sum)?;
+            binio::write_f32(payload, out.correct)?;
+            binio::write_f64(payload, *compute_seconds)?;
+            put_tensor_list(payload, &out.grads)?;
             TAG_STEP_RESULT
         }
         Frame::Shutdown => TAG_SHUTDOWN,
     };
-    write_raw(w, tag, &payload)
+    Ok(tag)
 }
 
 /// A parameter payload pre-encoded once per epoch. A `Step` frame is the
 /// 8-byte pick code followed by this body; only the pick differs across
 /// workers, so the coordinator serializes the tensors once and streams
-/// the same bytes to every worker ([`write_step_encoded`]).
+/// the same bytes to every worker ([`write_step_encoded`]). The buffer is
+/// reusable: [`EncodedParams::encode_from`] refills it in place, so the
+/// coordinator's broadcast allocates nothing after the first epoch.
 pub struct EncodedParams {
     body: Vec<u8>,
 }
 
 impl EncodedParams {
+    /// An empty buffer, ready for [`EncodedParams::encode_from`].
+    pub fn new() -> EncodedParams {
+        EncodedParams { body: Vec::new() }
+    }
+
     pub fn encode(params: &[Vec<f32>]) -> Result<EncodedParams> {
-        let mut body = Vec::new();
-        put_tensor_list(&mut body, params)?;
-        Ok(EncodedParams { body })
+        let mut enc = EncodedParams::new();
+        enc.encode_from(params)?;
+        Ok(enc)
+    }
+
+    /// Re-serialize `params` into the existing buffer (no reallocation in
+    /// steady state — parameter shapes are fixed for a run).
+    pub fn encode_from(&mut self, params: &[Vec<f32>]) -> Result<()> {
+        self.body.clear();
+        put_tensor_list(&mut self.body, params)
+    }
+}
+
+impl Default for EncodedParams {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
 /// Broadcast-side fast path: write a `Step` frame from a pre-encoded
-/// parameter payload (no per-worker re-serialization).
+/// parameter payload (no per-worker re-serialization; header + body leave
+/// in one vectored write).
 pub fn write_step_encoded(
     w: &mut impl Write,
     pick: Option<usize>,
@@ -245,8 +309,7 @@ pub fn write_step_encoded(
     let len = 8 + params.body.len() as u64;
     header[1..9].copy_from_slice(&len.to_le_bytes());
     header[9..17].copy_from_slice(&(pick_code as u64).to_le_bytes());
-    w.write_all(&header)?;
-    w.write_all(&params.body)?;
+    write_all_vectored2(w, &header, &params.body)?;
     w.flush()?;
     Ok(9 + len)
 }
@@ -257,26 +320,104 @@ pub fn write_step(w: &mut impl Write, pick: Option<usize>, params: &[Vec<f32>]) 
     write_step_encoded(w, pick, &EncodedParams::encode(params)?)
 }
 
+/// Worker-side fast path: write a `StepResult` frame through a reusable
+/// payload buffer (byte-identical to `write_frame(Frame::StepResult)`).
+pub fn write_step_result_buffered(
+    w: &mut impl Write,
+    out: &TrainOut,
+    compute_seconds: f64,
+    payload: &mut Vec<u8>,
+) -> Result<u64> {
+    payload.clear();
+    binio::write_f32(payload, out.loss_sum)?;
+    binio::write_f32(payload, out.weight_sum)?;
+    binio::write_f32(payload, out.correct)?;
+    binio::write_f64(payload, compute_seconds)?;
+    put_tensor_list(payload, &out.grads)?;
+    write_raw(w, TAG_STEP_RESULT, payload)
+}
+
 fn write_raw(w: &mut impl Write, tag: u8, payload: &[u8]) -> Result<u64> {
     let mut header = [0u8; 9];
     header[0] = tag;
     header[1..9].copy_from_slice(&(payload.len() as u64).to_le_bytes());
-    w.write_all(&header)?;
-    w.write_all(payload)?;
+    write_all_vectored2(w, &header, payload)?;
     w.flush()?;
     Ok(9 + payload.len() as u64)
 }
 
-/// Read one frame; returns the decoded message and its wire size.
-pub fn read_frame(r: &mut impl Read) -> Result<(Frame, u64)> {
+/// Write the concatenation of two buffers, preferring a single vectored
+/// syscall (std's stable API has no `write_all_vectored`, so the partial-
+/// write bookkeeping lives here). Falls back to plain writes for the
+/// remainder on short writes.
+fn write_all_vectored2(w: &mut impl Write, a: &[u8], b: &[u8]) -> std::io::Result<()> {
+    let mut done_a = 0usize;
+    let mut done_b = 0usize;
+    while done_a < a.len() || done_b < b.len() {
+        let res = if done_a < a.len() {
+            let bufs = [IoSlice::new(&a[done_a..]), IoSlice::new(&b[done_b..])];
+            w.write_vectored(&bufs)
+        } else {
+            w.write(&b[done_b..])
+        };
+        match res {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(n) => {
+                let adv_a = n.min(a.len() - done_a);
+                done_a += adv_a;
+                done_b += n - adv_a;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// A reusable frame-payload buffer: one per stream, so the hot loop never
+/// performs the per-frame `vec![0u8; len]` the pre-PR reader did.
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    pub fn new() -> FrameBuf {
+        FrameBuf { buf: Vec::new() }
+    }
+
+    /// The payload of the last completed read.
+    pub fn payload(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl Default for FrameBuf {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Read one frame into `buf` (reusing its allocation); returns the tag,
+/// the payload slice and the wire size. The hot-loop counterpart of
+/// [`read_frame`].
+pub fn read_frame_into<'a>(
+    r: &mut impl Read,
+    buf: &'a mut FrameBuf,
+) -> Result<(u8, &'a [u8], u64)> {
     let mut header = [0u8; 9];
     r.read_exact(&mut header).context("reading frame header (peer closed?)")?;
     let tag = header[0];
     let len = u64::from_le_bytes(header[1..9].try_into().unwrap());
     ensure!(len <= MAX_FRAME, "frame payload {len} exceeds sanity cap {MAX_FRAME}");
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload).context("reading frame payload")?;
-    let mut p: &[u8] = &payload;
+    buf.buf.resize(len as usize, 0);
+    r.read_exact(&mut buf.buf).context("reading frame payload")?;
+    Ok((tag, &buf.buf[..], 9 + len))
+}
+
+/// Decode a raw payload into a [`Frame`] (allocating — handshake traffic;
+/// the step loop uses [`decode_step_into`]/[`decode_step_result_into`]).
+pub fn decode_frame(tag: u8, payload: &[u8]) -> Result<Frame> {
+    let mut p: &[u8] = payload;
     let frame = match tag {
         TAG_HELLO => Frame::Hello {
             proto_version: binio::read_u32(&mut p)?,
@@ -316,7 +457,148 @@ pub fn read_frame(r: &mut impl Read) -> Result<(Frame, u64)> {
         other => bail!("unknown frame tag {other}"),
     };
     ensure!(p.is_empty(), "frame tag {tag}: {} trailing payload bytes", p.len());
-    Ok((frame, 9 + len))
+    Ok(frame)
+}
+
+/// Read one frame; returns the decoded message and its wire size.
+pub fn read_frame(r: &mut impl Read) -> Result<(Frame, u64)> {
+    let mut fb = FrameBuf::new();
+    let (tag, _, wire) = read_frame_into(r, &mut fb)?;
+    let frame = decode_frame(tag, fb.payload())?;
+    Ok((frame, wire))
+}
+
+/// Decode a length-prefixed f32 array from a slice cursor into a reused
+/// vector (no allocation once capacity is established).
+fn get_f32s_into(p: &mut &[u8], out: &mut Vec<f32>) -> Result<()> {
+    let len64 = binio::read_u64(p).context("reading f32 array length")?;
+    ensure!(len64 <= MAX_FRAME / 4, "corrupt f32 array length {len64}");
+    let len = len64 as usize;
+    ensure!(
+        p.len() >= len * 4,
+        "truncated f32 array: need {} bytes, have {}",
+        len * 4,
+        p.len()
+    );
+    let (bytes, rest) = p.split_at(len * 4);
+    out.clear();
+    out.extend(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])));
+    *p = rest;
+    Ok(())
+}
+
+/// Decode a `Step` payload into reused parameter tensors; returns the mask
+/// pick. Allocation-free once the tensor shapes are established.
+pub fn decode_step_into(payload: &[u8], params: &mut Vec<Vec<f32>>) -> Result<Option<usize>> {
+    let mut p: &[u8] = payload;
+    let pick_code = binio::read_u64(&mut p)? as i64;
+    ensure!(pick_code >= -1, "corrupt Step frame: pick {pick_code}");
+    let k = binio::read_u32(&mut p)? as usize;
+    ensure!(k <= 4096, "corrupt frame: {k} tensors");
+    if params.len() != k {
+        params.resize_with(k, Vec::new);
+    }
+    for t in params.iter_mut() {
+        get_f32s_into(&mut p, t)?;
+    }
+    ensure!(p.is_empty(), "Step frame: {} trailing payload bytes", p.len());
+    Ok(if pick_code < 0 { None } else { Some(pick_code as usize) })
+}
+
+/// Decode a `StepResult` payload into a reused [`TrainOut`]; returns the
+/// worker's compute seconds. Allocation-free once the gradient shapes are
+/// established.
+pub fn decode_step_result_into(payload: &[u8], out: &mut TrainOut) -> Result<f64> {
+    let mut p: &[u8] = payload;
+    out.loss_sum = binio::read_f32(&mut p)?;
+    out.weight_sum = binio::read_f32(&mut p)?;
+    out.correct = binio::read_f32(&mut p)?;
+    let compute_seconds = binio::read_f64(&mut p)?;
+    let k = binio::read_u32(&mut p)? as usize;
+    ensure!(k <= 4096, "corrupt frame: {k} tensors");
+    if out.grads.len() != k {
+        out.grads.resize_with(k, Vec::new);
+    }
+    for g in out.grads.iter_mut() {
+        get_f32s_into(&mut p, g)?;
+    }
+    ensure!(p.is_empty(), "StepResult frame: {} trailing payload bytes", p.len());
+    Ok(compute_seconds)
+}
+
+/// Incremental reader of one `StepResult` frame for nonblocking sockets:
+/// [`StepResultRecv::poll`] consumes whatever bytes are ready and reports
+/// completion, so the coordinator can service all workers round-robin and
+/// fold results as they arrive (readiness polling) while still indexing
+/// them by rank.
+pub struct StepResultRecv {
+    header: [u8; 9],
+    got_header: usize,
+    need: usize,
+    got: usize,
+}
+
+impl StepResultRecv {
+    pub fn new() -> StepResultRecv {
+        StepResultRecv { header: [0u8; 9], got_header: 0, need: 0, got: 0 }
+    }
+
+    /// Bytes buffered so far (progress indicator for the poll loop's
+    /// backoff decision).
+    pub fn bytes_buffered(&self) -> usize {
+        self.got_header + self.got
+    }
+
+    /// Pump available bytes from `r` into `buf`. Returns `Ok(Some(wire))`
+    /// when the frame is complete (payload in `buf`), `Ok(None)` when the
+    /// socket has no more bytes ready (`WouldBlock`). Errors on EOF,
+    /// non-`StepResult` tags and oversized frames.
+    pub fn poll(&mut self, r: &mut impl Read, buf: &mut FrameBuf) -> Result<Option<u64>> {
+        loop {
+            if self.got_header < 9 {
+                match r.read(&mut self.header[self.got_header..]) {
+                    Ok(0) => bail!("peer closed mid-frame"),
+                    Ok(n) => {
+                        self.got_header += n;
+                        if self.got_header == 9 {
+                            let tag = self.header[0];
+                            ensure!(
+                                tag == TAG_STEP_RESULT,
+                                "expected StepResult (tag {TAG_STEP_RESULT}), got tag {tag}"
+                            );
+                            let len = u64::from_le_bytes(self.header[1..9].try_into().unwrap());
+                            ensure!(
+                                len <= MAX_FRAME,
+                                "frame payload {len} exceeds sanity cap {MAX_FRAME}"
+                            );
+                            self.need = len as usize;
+                            self.got = 0;
+                            buf.buf.resize(self.need, 0);
+                        }
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e).context("reading StepResult header"),
+                }
+            } else if self.got < self.need {
+                match r.read(&mut buf.buf[self.got..self.need]) {
+                    Ok(0) => bail!("peer closed mid-frame"),
+                    Ok(n) => self.got += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(None),
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e).context("reading StepResult payload"),
+                }
+            } else {
+                return Ok(Some(9 + self.need as u64));
+            }
+        }
+    }
+}
+
+impl Default for StepResultRecv {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 #[cfg(test)]
@@ -416,6 +698,127 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    /// Satellite regression: many frames stream through ONE reusable
+    /// [`FrameBuf`] and ONE reused parameter/gradient container — decoded
+    /// contents bit-exact, payload allocation reused (stable pointer)
+    /// after the high-water mark.
+    #[test]
+    fn many_frames_reuse_one_buffer() {
+        let shapes: Vec<usize> = vec![64, 3, 257, 1, 128];
+        let mut wire = Vec::new();
+        let mut sent: Vec<Vec<Vec<f32>>> = Vec::new();
+        for round in 0..50u32 {
+            let params: Vec<Vec<f32>> = shapes
+                .iter()
+                .map(|&len| (0..len).map(|i| (round as f32) + i as f32 * 0.5).collect())
+                .collect();
+            write_step(&mut wire, Some(round as usize % 3), &params).unwrap();
+            sent.push(params);
+        }
+        let mut r: &[u8] = &wire;
+        let mut fb = FrameBuf::new();
+        let mut decoded: Vec<Vec<f32>> = Vec::new();
+        let mut payload_ptr: Option<*const u8> = None;
+        let mut tensor_ptrs: Option<Vec<*const f32>> = None;
+        for (round, want) in sent.iter().enumerate() {
+            let (tag, payload, _) = read_frame_into(&mut r, &mut fb).unwrap();
+            assert_eq!(tag, TAG_STEP);
+            let pick = decode_step_into(payload, &mut decoded).unwrap();
+            assert_eq!(pick, Some(round % 3));
+            assert_eq!(&decoded, want, "round {round}");
+            // Frames are same-sized: after the first frame the payload
+            // buffer and every tensor allocation must be reused as-is.
+            let ptr = fb.payload().as_ptr();
+            let tptrs: Vec<*const f32> = decoded.iter().map(|t| t.as_ptr()).collect();
+            if round > 0 {
+                assert_eq!(payload_ptr.unwrap(), ptr, "payload buffer reallocated at {round}");
+                assert_eq!(
+                    tensor_ptrs.as_ref().unwrap(),
+                    &tptrs,
+                    "tensor buffers reallocated at {round}"
+                );
+            }
+            payload_ptr = Some(ptr);
+            tensor_ptrs = Some(tptrs);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn buffered_step_result_matches_frame_encoder() {
+        let out = TrainOut {
+            loss_sum: 1.5,
+            weight_sum: 2.0,
+            correct: 3.0,
+            grads: vec![vec![0.25f32; 65], vec![-1.0]],
+        };
+        let mut a = Vec::new();
+        write_frame(&mut a, &Frame::StepResult { out: out.clone(), compute_seconds: 0.5 })
+            .unwrap();
+        let mut b = Vec::new();
+        let mut scratch = Vec::new();
+        write_step_result_buffered(&mut b, &out, 0.5, &mut scratch).unwrap();
+        assert_eq!(a, b, "buffered writer must emit identical bytes");
+        // And the in-place decoder reads it back bit-exactly into a reused
+        // TrainOut.
+        let mut fb = FrameBuf::new();
+        let mut r: &[u8] = &b;
+        let (tag, payload, _) = read_frame_into(&mut r, &mut fb).unwrap();
+        assert_eq!(tag, TAG_STEP_RESULT);
+        let mut got = TrainOut::default();
+        let secs = decode_step_result_into(payload, &mut got).unwrap();
+        assert_eq!(secs, 0.5);
+        assert_eq!(got.grads, out.grads);
+        assert_eq!(got.loss_sum, out.loss_sum);
+    }
+
+    /// The incremental reader produces the same decode as the blocking
+    /// reader even when bytes dribble in one at a time.
+    #[test]
+    fn step_result_recv_handles_partial_reads() {
+        struct Dribble<'a> {
+            data: &'a [u8],
+            pos: usize,
+        }
+        impl Read for Dribble<'_> {
+            fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+                if self.pos >= self.data.len() {
+                    // Simulate an idle nonblocking socket once drained.
+                    return Err(std::io::ErrorKind::WouldBlock.into());
+                }
+                buf[0] = self.data[self.pos];
+                self.pos += 1;
+                Ok(1)
+            }
+        }
+        let out = TrainOut {
+            loss_sum: 9.0,
+            weight_sum: 1.0,
+            correct: 4.0,
+            grads: vec![vec![1.0f32, 2.0, 3.0]],
+        };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Frame::StepResult { out: out.clone(), compute_seconds: 2.0 })
+            .unwrap();
+        let mut src = Dribble { data: &wire, pos: 0 };
+        let mut recv = StepResultRecv::new();
+        let mut fb = FrameBuf::new();
+        let mut polls = 0usize;
+        let wire_len = loop {
+            polls += 1;
+            assert!(polls < 10 * wire.len(), "no progress");
+            match recv.poll(&mut src, &mut fb).unwrap() {
+                Some(n) => break n,
+                None => continue,
+            }
+        };
+        assert_eq!(wire_len as usize, wire.len());
+        let mut got = TrainOut::default();
+        let secs = decode_step_result_into(fb.payload(), &mut got).unwrap();
+        assert_eq!(secs, 2.0);
+        assert_eq!(got.grads, out.grads);
     }
 
     #[test]

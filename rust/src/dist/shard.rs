@@ -31,8 +31,9 @@ use crate::graph::{Dataset, Graph, NodeData};
 use crate::partition::VertexCut;
 use crate::runtime::ModelConfig;
 use crate::train::engine::model_config;
-use crate::train::tensorize::{tensorize_subgraph, TrainBatch};
+use crate::train::tensorize::{tensorize_subgraph, tensorize_subgraph_ref, NodeDataRef, TrainBatch};
 use crate::util::binio;
+use crate::util::mmap::Mmap;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Write};
 use std::path::{Path, PathBuf};
@@ -207,6 +208,332 @@ impl Shard {
     pub fn tensorize(&self, n_pad: usize, e_pad: usize) -> Result<TrainBatch> {
         let ids: Vec<u32> = (0..self.global_ids.len() as u32).collect();
         tensorize_subgraph(&ids, &self.local, &self.data, &self.dar, n_pad, e_pad)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Zero-copy load path.
+// ---------------------------------------------------------------------------
+
+/// Byte range of one array inside a mapped shard file.
+type ByteRange = (usize, usize);
+
+/// Parsed header + array ranges of a shard byte image (shared validation
+/// for the zero-copy path; the layout is the one documented at the top of
+/// this module and written by [`Shard::write`]).
+struct ParsedShard {
+    part_id: usize,
+    num_parts: usize,
+    model: ModelConfig,
+    seed: u64,
+    global_nodes: usize,
+    global_edges: usize,
+    n_local: usize,
+    global_ids: ByteRange,
+    edges: ByteRange,
+    dar: ByteRange,
+    features: ByteRange,
+    labels: ByteRange,
+    split: ByteRange,
+}
+
+/// Read a `u64`-length-prefixed array's byte range off the cursor.
+fn take_array(
+    bytes: &[u8],
+    r: &mut &[u8],
+    elem: usize,
+    what: &str,
+) -> Result<(usize, ByteRange)> {
+    let len = binio::read_u64(r).with_context(|| format!("reading {what} length"))? as usize;
+    let nbytes = len
+        .checked_mul(elem)
+        .with_context(|| format!("corrupt {what}: length {len} overflows"))?;
+    ensure!(
+        r.len() >= nbytes,
+        "truncated shard: {what} wants {nbytes} bytes, {} remain",
+        r.len()
+    );
+    let start = bytes.len() - r.len();
+    *r = &r[nbytes..];
+    Ok((len, (start, start + nbytes)))
+}
+
+fn parse_shard_bytes(bytes: &[u8], path: &Path) -> Result<ParsedShard> {
+    let mut r: &[u8] = bytes;
+    binio::expect_magic(&mut r, SHARD_MAGIC, "cofree partition shard")
+        .with_context(|| format!("reading {path:?}"))?;
+    binio::expect_version(&mut r, SHARD_VERSION, "partition shard")?;
+    let part_id = binio::read_u32(&mut r)? as usize;
+    let num_parts = binio::read_u32(&mut r)? as usize;
+    let model = ModelConfig {
+        layers: binio::read_u32(&mut r)? as usize,
+        feat_dim: binio::read_u32(&mut r)? as usize,
+        hidden: binio::read_u32(&mut r)? as usize,
+        classes: binio::read_u32(&mut r)? as usize,
+    };
+    let seed = binio::read_u64(&mut r)?;
+    let global_nodes = binio::read_u64(&mut r)? as usize;
+    let global_edges = binio::read_u64(&mut r)? as usize;
+    ensure!(part_id < num_parts, "shard part_id {part_id} out of range {num_parts}");
+    let (n_local, global_ids) = take_array(bytes, &mut r, 4, "id table")?;
+    let (flat_len, edges) = take_array(bytes, &mut r, 4, "local edges")?;
+    ensure!(flat_len % 2 == 0, "corrupt local edge array: odd endpoint count");
+    let (dar_len, dar) = take_array(bytes, &mut r, 4, "dar weights")?;
+    let (feat_len, features) = take_array(bytes, &mut r, 4, "features")?;
+    let (labels_len, labels) = take_array(bytes, &mut r, 4, "labels")?;
+    let (split_len, split) = take_array(bytes, &mut r, 1, "split masks")?;
+    ensure!(r.is_empty(), "corrupt shard: {} trailing bytes", r.len());
+    ensure!(dar_len == n_local, "dar length {dar_len} != {n_local}");
+    ensure!(labels_len == n_local, "labels length {labels_len} != {n_local}");
+    ensure!(split_len == n_local, "split length {split_len} != {n_local}");
+    ensure!(
+        feat_len == n_local * model.feat_dim,
+        "features length {feat_len} != n_local {n_local} × feat_dim {}",
+        model.feat_dim
+    );
+    Ok(ParsedShard {
+        part_id,
+        num_parts,
+        model,
+        seed,
+        global_nodes,
+        global_edges,
+        n_local,
+        global_ids,
+        edges,
+        dar,
+        features,
+        labels,
+        split,
+    })
+}
+
+/// Alignment-checked reinterpretation of a little-endian byte range as a
+/// 4-byte-element slice. Sound for any `T` whose every bit pattern is
+/// valid (u32, f32); the caller guarantees the target is little-endian.
+fn reinterpret_4byte<T>(bytes: &[u8]) -> Result<&[T]> {
+    // SAFETY: u32/f32 accept all bit patterns; align_to itself verifies
+    // the pointer alignment and we refuse any remainder.
+    let (pre, mid, post) = unsafe { bytes.align_to::<T>() };
+    ensure!(
+        pre.is_empty() && post.is_empty(),
+        "mapped shard array is not 4-byte aligned (offset drift?)"
+    );
+    Ok(mid)
+}
+
+/// Array storage of a [`MappedShard`]: borrowed straight out of the page
+/// cache when the platform allows, owned copies otherwise.
+enum ShardArrays {
+    Mapped {
+        map: Mmap,
+        global_ids: ByteRange,
+        dar: ByteRange,
+        features: ByteRange,
+        labels: ByteRange,
+        split: ByteRange,
+    },
+    Owned {
+        global_ids: Vec<u32>,
+        dar: Vec<f32>,
+        features: Vec<f32>,
+        labels: Vec<u32>,
+        split: Vec<u8>,
+    },
+}
+
+/// A shard opened through the zero-copy load path: the file is mmapped,
+/// the header and array layout are validated in place, and the id table,
+/// DAR weights, feature rows, labels and split masks are **borrowed from
+/// the mapping** — a worker starts without deserializing a private copy
+/// of any of them (the local CSR is rebuilt, which is graph construction,
+/// not a copy). On big-endian targets, or if the mapping cannot be
+/// aligned, the loader transparently falls back to the streamed
+/// [`Shard::read`] copy — byte-identical contents either way
+/// (property-tested below).
+///
+/// Shard files are written-once artifacts; as with any mmap reader,
+/// truncating one while a worker has it mapped is undefined behavior at
+/// the file level (the process may fault). Don't rewrite a live store.
+pub struct MappedShard {
+    pub part_id: usize,
+    pub num_parts: usize,
+    pub model: ModelConfig,
+    /// Dataset seed (provenance; not consumed at train time).
+    pub seed: u64,
+    pub global_nodes: usize,
+    pub global_edges: usize,
+    /// The partition's local topology, rebuilt from the stored sorted
+    /// canonical edge list with the same `from_sorted_edges` construction
+    /// the partitioner used.
+    pub local: Graph,
+    arrays: ShardArrays,
+}
+
+impl MappedShard {
+    /// Open `path` through the zero-copy path (with portable fallback).
+    pub fn open(path: &Path) -> Result<MappedShard> {
+        let map = Mmap::open(path)?;
+        let parsed = parse_shard_bytes(map.bytes(), path)?;
+        // Decode the edge list (endian-safe per-element reads) and rebuild
+        // the CSR exactly like Shard::read does.
+        let flat = &map.bytes()[parsed.edges.0..parsed.edges.1];
+        let n_local = parsed.n_local;
+        let edges: Vec<(u32, u32)> = flat
+            .chunks_exact(8)
+            .map(|c| {
+                (
+                    u32::from_le_bytes([c[0], c[1], c[2], c[3]]),
+                    u32::from_le_bytes([c[4], c[5], c[6], c[7]]),
+                )
+            })
+            .collect();
+        for (k, &(u, v)) in edges.iter().enumerate() {
+            ensure!(
+                u < v && (v as usize) < n_local,
+                "corrupt local edge {k}: ({u},{v}) with n_local {n_local}"
+            );
+            if k > 0 {
+                ensure!(edges[k - 1] < edges[k], "local edges not sorted/unique at {k}");
+            }
+        }
+        let local = Graph::from_sorted_edges(n_local, edges);
+        // Zero-copy needs a little-endian target (the arrays are stored LE
+        // and reinterpreted in place) and 4-byte-aligned ranges.
+        let zero_copy = cfg!(target_endian = "little")
+            && reinterpret_4byte::<u32>(&map.bytes()[parsed.global_ids.0..parsed.global_ids.1])
+                .is_ok()
+            && reinterpret_4byte::<f32>(&map.bytes()[parsed.dar.0..parsed.dar.1]).is_ok()
+            && reinterpret_4byte::<f32>(&map.bytes()[parsed.features.0..parsed.features.1])
+                .is_ok()
+            && reinterpret_4byte::<u32>(&map.bytes()[parsed.labels.0..parsed.labels.1]).is_ok();
+        let arrays = if zero_copy {
+            ShardArrays::Mapped {
+                map,
+                global_ids: parsed.global_ids,
+                dar: parsed.dar,
+                features: parsed.features,
+                labels: parsed.labels,
+                split: parsed.split,
+            }
+        } else {
+            // Portable fallback: one streamed read, owned arrays.
+            let shard = Shard::read(path)?;
+            ShardArrays::Owned {
+                global_ids: shard.global_ids,
+                dar: shard.dar,
+                features: shard.data.features,
+                labels: shard.data.labels,
+                split: shard.data.split,
+            }
+        };
+        Ok(MappedShard {
+            part_id: parsed.part_id,
+            num_parts: parsed.num_parts,
+            model: parsed.model,
+            seed: parsed.seed,
+            global_nodes: parsed.global_nodes,
+            global_edges: parsed.global_edges,
+            local,
+            arrays,
+        })
+    }
+
+    /// Whether the arrays are truly borrowed from the mapping.
+    pub fn is_zero_copy(&self) -> bool {
+        matches!(&self.arrays, ShardArrays::Mapped { map, .. } if map.is_mapped())
+    }
+
+    pub fn n_local(&self) -> usize {
+        self.global_ids().len()
+    }
+
+    /// Local id → global id (sorted ascending, as materialized).
+    pub fn global_ids(&self) -> &[u32] {
+        match &self.arrays {
+            ShardArrays::Mapped { map, global_ids, .. } => {
+                reinterpret_4byte(&map.bytes()[global_ids.0..global_ids.1])
+                    .expect("alignment verified at open")
+            }
+            ShardArrays::Owned { global_ids, .. } => global_ids,
+        }
+    }
+
+    /// DAR weight per local node.
+    pub fn dar(&self) -> &[f32] {
+        match &self.arrays {
+            ShardArrays::Mapped { map, dar, .. } => {
+                reinterpret_4byte(&map.bytes()[dar.0..dar.1]).expect("alignment verified at open")
+            }
+            ShardArrays::Owned { dar, .. } => dar,
+        }
+    }
+
+    /// The partition's feature rows, row-major `[n_local, feat_dim]`.
+    pub fn features(&self) -> &[f32] {
+        match &self.arrays {
+            ShardArrays::Mapped { map, features, .. } => {
+                reinterpret_4byte(&map.bytes()[features.0..features.1])
+                    .expect("alignment verified at open")
+            }
+            ShardArrays::Owned { features, .. } => features,
+        }
+    }
+
+    /// Class id per local node.
+    pub fn labels(&self) -> &[u32] {
+        match &self.arrays {
+            ShardArrays::Mapped { map, labels, .. } => {
+                reinterpret_4byte(&map.bytes()[labels.0..labels.1])
+                    .expect("alignment verified at open")
+            }
+            ShardArrays::Owned { labels, .. } => labels,
+        }
+    }
+
+    /// Split mask per local node (0 train, 1 val, 2 test).
+    pub fn split(&self) -> &[u8] {
+        match &self.arrays {
+            ShardArrays::Mapped { map, split, .. } => &map.bytes()[split.0..split.1],
+            ShardArrays::Owned { split, .. } => split,
+        }
+    }
+
+    /// Tensorize straight off the mapped arrays — produces the exact batch
+    /// [`Shard::tensorize`] (and therefore the in-process engine) builds
+    /// for this partition.
+    pub fn tensorize(&self, n_pad: usize, e_pad: usize) -> Result<TrainBatch> {
+        let ids: Vec<u32> = (0..self.n_local() as u32).collect();
+        let nd = NodeDataRef {
+            features: self.features(),
+            dim: self.model.feat_dim,
+            labels: self.labels(),
+            num_classes: self.model.classes,
+            split: self.split(),
+        };
+        tensorize_subgraph_ref(&ids, &self.local, nd, self.dar(), n_pad, e_pad)
+    }
+
+    /// Materialize an owned [`Shard`] (copies — used by parity tests).
+    pub fn to_shard(&self) -> Shard {
+        Shard {
+            part_id: self.part_id,
+            num_parts: self.num_parts,
+            model: self.model,
+            seed: self.seed,
+            global_nodes: self.global_nodes,
+            global_edges: self.global_edges,
+            global_ids: self.global_ids().to_vec(),
+            local: self.local.clone(),
+            dar: self.dar().to_vec(),
+            data: NodeData {
+                features: self.features().to_vec(),
+                dim: self.model.feat_dim,
+                labels: self.labels().to_vec(),
+                num_classes: self.model.classes,
+                split: self.split().to_vec(),
+            },
+        }
     }
 }
 
@@ -403,6 +730,77 @@ mod tests {
                 assert_eq!(x, y, "tensor {ti} of shard {i}");
             }
         }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite: the mmap-backed load path is byte-identical to the
+    /// streamed read — every array, the rebuilt CSR, and the tensorized
+    /// batch — across the zoo and several partitioners.
+    #[test]
+    fn mmap_load_matches_streamed_read_byte_identically() {
+        let dir = tmp_dir("mmapzoo");
+        for (gi, g) in graph_zoo(31).iter().enumerate().take(6) {
+            let ds = dataset_for(g, 500 + gi as u64);
+            for &name in &["dbh", "ne"] {
+                let p = 3usize;
+                let mut rng = Rng::new(11 * gi as u64 + 1);
+                let vc = VertexCut::create(g, p, algorithm(name).unwrap().as_ref(), &mut rng);
+                let weights = dar_weights(g, &vc, Reweighting::Dar);
+                let sub = dir.join(format!("{name}_{gi}"));
+                write_shards(&ds, &vc, &weights, 9, &sub).unwrap();
+                for file in shard_files(&sub).unwrap() {
+                    let streamed = Shard::read(&file).unwrap();
+                    let mapped = MappedShard::open(&file).unwrap();
+                    #[cfg(all(unix, target_endian = "little", target_pointer_width = "64"))]
+                    assert!(mapped.is_zero_copy(), "expected a real mapping on 64-bit unix/LE");
+                    assert_eq!(mapped.part_id, streamed.part_id);
+                    assert_eq!(mapped.num_parts, streamed.num_parts);
+                    assert_eq!(mapped.model, streamed.model);
+                    assert_eq!(mapped.seed, streamed.seed);
+                    assert_eq!(mapped.global_ids(), &streamed.global_ids[..]);
+                    assert_eq!(mapped.labels(), &streamed.data.labels[..]);
+                    assert_eq!(mapped.split(), &streamed.data.split[..]);
+                    let b = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(b(mapped.dar()), b(&streamed.dar));
+                    assert_eq!(b(mapped.features()), b(&streamed.data.features));
+                    assert_eq!(mapped.local.edges(), streamed.local.edges());
+                    assert_eq!(rows(&mapped.local), rows(&streamed.local));
+                    // Materialized and tensorized forms agree exactly too.
+                    let owned = mapped.to_shard();
+                    assert_eq!(owned.global_ids, streamed.global_ids);
+                    let (n_pad, e_pad) = (256, 2048);
+                    let ta = mapped.tensorize(n_pad, e_pad).unwrap();
+                    let tb = streamed.tensorize(n_pad, e_pad).unwrap();
+                    assert_eq!(ta.tensors, tb.tensors);
+                    assert_eq!(ta.local_train_weight, tb.local_train_weight);
+                }
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn mmap_load_rejects_corrupt_files() {
+        let dir = tmp_dir("mmapbad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("shard_0000.bin");
+        std::fs::write(&p, b"COFREEG1........").unwrap();
+        let err = MappedShard::open(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("COFREESH") && msg.contains("COFREEG1"), "{msg}");
+        // Truncated mid-array: write a valid shard then chop it.
+        let g = &graph_zoo(5)[2];
+        let ds = dataset_for(g, 77);
+        let mut rng = Rng::new(3);
+        let vc = VertexCut::create(g, 2, algorithm("dbh").unwrap().as_ref(), &mut rng);
+        let weights = dar_weights(g, &vc, Reweighting::Dar);
+        let sub = dir.join("ok");
+        write_shards(&ds, &vc, &weights, 1, &sub).unwrap();
+        let file = &shard_files(&sub).unwrap()[0];
+        let bytes = std::fs::read(file).unwrap();
+        let cut = dir.join("shard_cut.bin");
+        std::fs::write(&cut, &bytes[..bytes.len() - 7]).unwrap();
+        assert!(MappedShard::open(&cut).is_err(), "truncated shard must not load");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

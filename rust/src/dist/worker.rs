@@ -1,24 +1,32 @@
 //! The `cofree worker` role: one process, one shard, zero graph knowledge
 //! beyond its own partition.
 //!
-//! A worker streams its shard from disk, connects to the coordinator,
-//! prepares its partition exactly the way the in-process engine would —
-//! same padded bucket ([`pad_explicit`]), same tensorization, same
-//! DropEdge-K mask bank drawn from the same forked RNG stream
-//! ([`worker_mask_rng`], the single definition `prepare_partitions` also
-//! uses) — and then answers `Step` frames with `StepResult`s until the
-//! coordinator says `Shutdown`. Because every input bit and every RNG
-//! draw matches the in-process path, the `TrainOut` it returns is
-//! bit-identical to what the same partition would have produced inside
-//! the coordinator's address space.
+//! A worker **memory-maps** its shard ([`MappedShard`] — header validated
+//! in place, feature/label/weight arrays borrowed straight from the page
+//! cache, no deserialization copy), connects to the coordinator, prepares
+//! its partition exactly the way the in-process engine would — same padded
+//! bucket ([`pad_explicit`]), same tensorization, same DropEdge-K mask
+//! bank drawn from the same forked RNG stream ([`worker_mask_rng`], the
+//! single definition `prepare_partitions` also uses) — and then answers
+//! `Step` frames with `StepResult`s until the coordinator says `Shutdown`.
+//!
+//! The step loop is allocation-free in steady state: incoming frames land
+//! in one reusable [`proto::FrameBuf`], parameters decode into one reused
+//! `ParamSet`, the train step runs through the worker's persistent
+//! [`SageWorkspace`] arena into one reused `TrainOut`, and the result
+//! frame serializes through one reused payload buffer. Because every
+//! input bit and every RNG draw matches the in-process path, the
+//! `TrainOut` it returns is bit-identical to what the same partition
+//! would have produced inside the coordinator's address space.
 
 use super::proto::{self, Frame, Stream, PROTO_VERSION};
-use super::shard::Shard;
-use crate::runtime::ParamSet;
+use super::shard::MappedShard;
+use crate::runtime::{ParamSet, TrainOut};
 use crate::train::bucket::pad_explicit;
 use crate::train::cpu::{self, EdgeCsr};
 use crate::train::dropedge::MaskBank;
 use crate::train::engine::worker_mask_rng;
+use crate::train::workspace::SageWorkspace;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
 use std::time::Instant;
@@ -26,15 +34,16 @@ use std::time::Instant;
 /// Run the worker loop to completion. Returns the number of train steps
 /// served.
 pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
-    let shard = Shard::read(shard_path)
+    let shard = MappedShard::open(shard_path)
         .with_context(|| format!("loading shard {}", shard_path.display()))?;
     let rank = shard.part_id;
     crate::log_info!(
-        "worker rank {rank}/{}: shard {} (n_local={}, m_local={}), connecting to {connect}",
+        "worker rank {rank}/{}: shard {} (n_local={}, m_local={}, zero_copy={}), connecting to {connect}",
         shard.num_parts,
         shard_path.display(),
-        shard.global_ids.len(),
-        shard.local.num_edges()
+        shard.n_local(),
+        shard.local.num_edges(),
+        shard.is_zero_copy()
     );
     let mut stream = Stream::connect(connect)?;
     proto::write_frame(
@@ -75,18 +84,35 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
         },
     )?;
 
+    // Steady-state arenas: frame buffer, parameter tensors, workspace,
+    // output and result payload are all allocated here once and reused
+    // for every step.
     let dims = model.param_shapes();
+    let mut params = ParamSet { dims: dims.clone(), data: Vec::new() };
+    let mut frame_buf = proto::FrameBuf::new();
+    let mut ws = SageWorkspace::new(&shard.model, batch.n_pad);
+    let mut out = TrainOut::default();
+    let mut result_payload: Vec<u8> = Vec::new();
     let mut steps = 0usize;
     loop {
-        let (frame, _) = proto::read_frame(&mut stream)?;
-        match frame {
-            Frame::Step { pick, params } => {
-                ensure!(params.len() == dims.len(), "expected {} param tensors, got {}", dims.len(), params.len());
-                for (i, (p, shape)) in params.iter().zip(&dims).enumerate() {
+        let (tag, payload, _) = proto::read_frame_into(&mut stream, &mut frame_buf)?;
+        match tag {
+            proto::TAG_STEP => {
+                let pick = proto::decode_step_into(payload, &mut params.data)?;
+                ensure!(
+                    params.data.len() == dims.len(),
+                    "expected {} param tensors, got {}",
+                    dims.len(),
+                    params.data.len()
+                );
+                for (i, (p, shape)) in params.data.iter().zip(&dims).enumerate() {
                     let want: usize = shape.iter().product();
-                    ensure!(p.len() == want, "param tensor {i}: {} elements, expected {want}", p.len());
+                    ensure!(
+                        p.len() == want,
+                        "param tensor {i}: {} elements, expected {want}",
+                        p.len()
+                    );
                 }
-                let params = ParamSet { dims: dims.clone(), data: params };
                 let emask = match pick {
                     Some(k) => {
                         ensure!(k < masks.len(), "mask pick {k} out of range {}", masks.len());
@@ -95,16 +121,22 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
                     None => batch.emask().as_f32(),
                 };
                 let t0 = Instant::now();
-                let out = cpu::train_step(&shard.model, &params, &batch, &csr, emask);
+                cpu::train_step_into(&shard.model, &params, &batch, &csr, emask, &mut ws, &mut out);
                 let compute_seconds = t0.elapsed().as_secs_f64();
-                proto::write_frame(&mut stream, &Frame::StepResult { out, compute_seconds })?;
+                proto::write_step_result_buffered(
+                    &mut stream,
+                    &out,
+                    compute_seconds,
+                    &mut result_payload,
+                )?;
                 steps += 1;
             }
-            Frame::Shutdown => {
+            proto::TAG_SHUTDOWN => {
+                ensure!(payload.is_empty(), "Shutdown frame with payload");
                 crate::log_info!("worker rank {rank}: shutdown after {steps} steps");
                 return Ok(steps);
             }
-            other => bail!("unexpected frame in step loop: {other:?}"),
+            other => bail!("unexpected frame tag {other} in step loop"),
         }
     }
 }

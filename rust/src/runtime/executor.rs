@@ -61,7 +61,7 @@ impl ParamSet {
 }
 
 /// Outputs of one `train_step` execution.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct TrainOut {
     /// Sum of DAR-weighted losses over this partition.
     pub loss_sum: f32,

@@ -69,11 +69,17 @@ pub trait Backend {
     fn prepare_eval(&mut self, model: &ModelConfig, batch: EvalBatch) -> Result<Self::Eval>;
 
     /// Execute `train_step` on `workers[selected[i]]` with DropEdge mask
-    /// `picks[i]` for every `i`, returning `(TrainOut, compute_seconds)` in
-    /// `selected` order. Implementations are free to run the workers in
-    /// parallel (the native backend does, via rayon); `compute_seconds` is
-    /// each worker's own wall-clock, the `compute_i` in the reported
-    /// parallel-machine iteration time `max_i(compute_i) + allreduce`.
+    /// `picks[i]` for every `i`, writing `(TrainOut, compute_seconds)` into
+    /// `outs[i]` (in `selected` order). `outs` is an engine-owned scratch
+    /// vector handed back on every call: implementations must size it to
+    /// `selected.len()` while **reusing** the existing slots — and the
+    /// gradient tensors inside them — so a steady-state epoch allocates
+    /// nothing (the native backend and the proc transport do; the arena
+    /// contract is asserted by `tests/alloc_steady.rs`). Implementations
+    /// are free to run the workers in parallel (the native backend does,
+    /// via rayon); `compute_seconds` is each worker's own wall-clock, the
+    /// `compute_i` in the reported parallel-machine iteration time
+    /// `max_i(compute_i) + allreduce`.
     /// Timing caveat: when workers share one host (the native backend),
     /// concurrent workers contend for cores, so `compute_seconds` is an
     /// *upper bound* on each worker's dedicated-machine compute — honest
@@ -86,7 +92,8 @@ pub trait Backend {
         selected: &[usize],
         picks: &[Option<usize>],
         params: &ParamSet,
-    ) -> Result<Vec<(TrainOut, f64)>>;
+        outs: &mut Vec<(TrainOut, f64)>,
+    ) -> Result<()>;
 
     /// Accuracy on a split (0 train, 1 val, 2 test) of a prepared eval setup.
     fn evaluate(&self, eval: &Self::Eval, params: &ParamSet, split: usize) -> Result<f64>;

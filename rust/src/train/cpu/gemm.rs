@@ -1,27 +1,50 @@
 //! Cache-blocked, rayon-parallel f32 matrix kernels for the native backend.
 //!
-//! Shapes here are small-to-medium (`n_pad` rows × feature/hidden columns),
-//! so the kernels optimize for the things that matter at that scale: B-row
-//! reuse (a 4-row micro-kernel loads each row of `b` once per four rows of
-//! `a`, quadrupling arithmetic intensity over the naive i-k-j loop),
-//! k-blocking to keep the active slice of `b` in L1/L2, and row-block
-//! parallelism via rayon.
+//! The hot kernels are written around **packed panels and fixed-width lane
+//! tiles**: `matmul`/`matmul_acc` pack a `KC×16` B panel and a `4×KC` A
+//! panel onto the stack and run a 4-row × 16-lane register micro-kernel
+//! over them (contiguous streams, no strided loads in the inner loop);
+//! `matmul_tn` packs the group's A columns per i-block so the reduction
+//! streams B exactly once per 8 output rows; `matmul_nt` computes 4×4 dot
+//! tiles so 16 independent accumulator chains hide the FP-add latency of
+//! the naive single-chain dot product. Everything is plain safe Rust over
+//! fixed-size `[f32; LANES]` arrays — the shapes are exactly what LLVM
+//! auto-vectorizes to full-width SIMD (8-lane f32 on AVX) — so the kernels
+//! are portable and carry no `unsafe`.
 //!
-//! **Determinism:** every kernel accumulates each output element in a fixed
-//! ascending-`k` order and parallelizes over disjoint row blocks of fixed
-//! size, so results are bit-identical for any rayon pool size. `matmul` /
-//! `matmul_acc` also preserve the exact floating-point summation order of
-//! the naive `i-k-j` loop (ascending `k` per output element), which keeps
-//! the fast forward bit-compatible with `train::reference::forward`'s
-//! per-element sums.
+//! **Determinism and parity:** lanes always run across *output* elements,
+//! never across the reduction dimension, and every output element
+//! accumulates its products in the same fixed ascending order as the naive
+//! `i-k-j` loop (ascending `k` for `matmul`/`matmul_acc`, ascending `i`
+//! for `matmul_tn`, ascending `j` for `matmul_nt`). Packing moves data,
+//! never reassociates sums. The packed kernels are therefore **bit-
+//! identical** to the retained pre-PR kernels in [`scalar`] (property-
+//! tested below and zoo-wide in `cpu/sage.rs`), bit-identical for any
+//! rayon pool size (fixed row-chunk boundaries), and `matmul`/`matmul_acc`
+//! remain bit-compatible with `train::reference::forward`'s per-element
+//! sums.
+//!
+//! Parity fine print: the scalar oracle's *tail* paths skip `x == 0.0`
+//! multipliers while the packed micro-kernel multiplies through, so the
+//! two differ only when a tail accumulator holds `-0.0` while its `a`
+//! element is exactly `±0.0` (`-0.0 + 0.0 = +0.0`), or when inputs are
+//! non-finite. Neither arises in training: accumulators start from
+//! `+0.0`-seeded sums (IEEE addition can only yield `-0.0` from two
+//! `-0.0` terms, and exact cancellation rounds to `+0.0`), and the
+//! parity suites assert bitwise equality on the reachable domain.
 
 use rayon::prelude::*;
 
 /// Rows per rayon work unit. Fixed (not thread-count-derived) so chunk
 /// boundaries — and therefore results — do not depend on the pool size.
 const ROW_CHUNK: usize = 64;
-/// K-blocking depth: `KC` rows of `b` (`KC × n` floats) stay hot per pass.
+/// K-blocking depth: a `KC × 16` B panel (16 KiB) stays stack-resident per
+/// pass.
 const KC: usize = 256;
+/// Micro-kernel height: rows of A per register tile.
+const MR: usize = 4;
+/// Micro-kernel width: two 8-lane vectors of C columns per register tile.
+const NR: usize = 16;
 
 /// `c = a @ b` with `a: [m, k]`, `b: [k, n]`, `c: [m, n]`, all row-major.
 pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
@@ -42,93 +65,84 @@ pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: us
         .for_each(|(c_blk, a_blk)| {
             let rows = c_blk.len() / n;
             debug_assert_eq!(rows * k, a_blk.len());
-            block_acc(a_blk, b, c_blk, rows, k, n);
+            block_acc_packed(a_blk, b, c_blk, rows, k, n);
         });
 }
 
-/// Column-tile width of the register micro-kernel: 4 rows × `JT` columns of
-/// accumulators (32 scalars) live in SIMD registers across the whole k
-/// sweep, so `c` is touched once per tile instead of once per `k` step.
-const JT: usize = 8;
-
-/// Serial row-block kernel: 4 rows of `a` at a time, `JT`-wide register
-/// accumulator tiles, `KC`-deep k blocks. Per output element the products
-/// accumulate in ascending-`k` order, exactly like the naive loop.
-fn block_acc(a: &[f32], b: &[f32], c: &mut [f32], rows: usize, k: usize, n: usize) {
+/// Serial row-block kernel over packed panels: for each `KC` k-block and
+/// each 16-column panel, B is packed once into a contiguous stack panel
+/// (tail columns zero-padded — the padded lanes accumulate exact zeros and
+/// are never written back) and each 4-row group of A is packed k-major, so
+/// the micro-kernel reads two fully-linear streams. Per output element the
+/// products accumulate in ascending-`k` order, exactly like the naive loop.
+fn block_acc_packed(a: &[f32], b: &[f32], c: &mut [f32], rows: usize, k: usize, n: usize) {
+    let mut bp = [0f32; KC * NR];
+    let mut ap = [0f32; MR * KC];
     let mut k0 = 0;
     while k0 < k {
         let k1 = (k0 + KC).min(k);
-        let mut i = 0;
-        while i + 4 <= rows {
-            let a0 = &a[i * k..(i + 1) * k];
-            let a1 = &a[(i + 1) * k..(i + 2) * k];
-            let a2 = &a[(i + 2) * k..(i + 3) * k];
-            let a3 = &a[(i + 3) * k..(i + 4) * k];
-            let mut j = 0;
-            while j + JT <= n {
-                let mut acc = [[0f32; JT]; 4];
-                for (r, accr) in acc.iter_mut().enumerate() {
-                    let base = (i + r) * n + j;
-                    accr.copy_from_slice(&c[base..base + JT]);
+        let kc = k1 - k0;
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = NR.min(n - j0);
+            // Pack the B panel: bp[kk*NR + l] = b[(k0+kk)*n + j0 + l].
+            for kk in 0..kc {
+                let brow = &b[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + jw];
+                let dst = &mut bp[kk * NR..kk * NR + NR];
+                dst[..jw].copy_from_slice(brow);
+                dst[jw..].fill(0.0);
+            }
+            let mut i = 0;
+            while i < rows {
+                let mr = MR.min(rows - i);
+                // Pack the A group k-major: ap[kk*MR + r] = a[(i+r)*k + k0+kk].
+                for kk in 0..kc {
+                    for r in 0..MR {
+                        ap[kk * MR + r] =
+                            if r < mr { a[(i + r) * k + k0 + kk] } else { 0.0 };
+                    }
                 }
-                for kk in k0..k1 {
-                    let xs = [a0[kk], a1[kk], a2[kk], a3[kk]];
-                    let bt = &b[kk * n + j..kk * n + j + JT];
+                // Register tile: MR×NR accumulators live across the k sweep.
+                let mut acc = [[0f32; NR]; MR];
+                for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                    let base = (i + r) * n + j0;
+                    accr[..jw].copy_from_slice(&c[base..base + jw]);
+                }
+                for kk in 0..kc {
+                    let avals = &ap[kk * MR..kk * MR + MR];
+                    let brow = &bp[kk * NR..kk * NR + NR];
                     for (r, accr) in acc.iter_mut().enumerate() {
-                        let x = xs[r];
-                        for (av, &bv) in accr.iter_mut().zip(bt.iter()) {
+                        let x = avals[r];
+                        for (av, &bv) in accr.iter_mut().zip(brow.iter()) {
                             *av += x * bv;
                         }
                     }
                 }
-                for (r, accr) in acc.iter().enumerate() {
-                    let base = (i + r) * n + j;
-                    c[base..base + JT].copy_from_slice(accr);
+                for (r, accr) in acc.iter().enumerate().take(mr) {
+                    let base = (i + r) * n + j0;
+                    c[base..base + jw].copy_from_slice(&accr[..jw]);
                 }
-                j += JT;
+                i += MR;
             }
-            if j < n {
-                // Column tail (< JT columns): per-element accumulation in
-                // the same ascending-k order.
-                for kk in k0..k1 {
-                    let xs = [a0[kk], a1[kk], a2[kk], a3[kk]];
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    for (r, &x) in xs.iter().enumerate() {
-                        if x == 0.0 {
-                            continue;
-                        }
-                        let crow = &mut c[(i + r) * n..(i + r + 1) * n];
-                        for jj in j..n {
-                            crow[jj] += x * brow[jj];
-                        }
-                    }
-                }
-            }
-            i += 4;
-        }
-        // Row tail (< 4 rows).
-        while i < rows {
-            let crow = &mut c[i * n..(i + 1) * n];
-            let arow = &a[i * k..(i + 1) * k];
-            for kk in k0..k1 {
-                let x = arow[kk];
-                if x == 0.0 {
-                    continue;
-                }
-                let brow = &b[kk * n..kk * n + n];
-                for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                    *cv += x * bv;
-                }
-            }
-            i += 1;
+            j0 += NR;
         }
         k0 = k1;
     }
 }
 
+/// Output rows (columns of `a`) per `matmul_tn` work unit: B is streamed
+/// once per group instead of once per output row.
+const TN_GROUP: usize = 8;
+/// i-blocking depth of the `matmul_tn` A-column pack (16 KiB stack panel).
+const TN_IB: usize = 512;
+
 /// `c = aᵀ @ b` with `a: [m, k]`, `b: [m, n]`, `c: [k, n]` — the
-/// weight-gradient shape (`dW = hᵀ @ dpre`). Parallel over the `k` output
-/// rows; each row sums over `i` in fixed ascending order.
+/// weight-gradient shape (`dW = hᵀ @ dpre`). Parallel over fixed groups of
+/// [`TN_GROUP`] output rows; the group's A columns are packed per i-block
+/// so the strided `a[i*k + kk]` loads happen once, and B is read once per
+/// group instead of once per row. Each output element sums over `i` in
+/// fixed ascending order (identical to the scalar oracle, zero-skips
+/// included).
 pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), m * n);
@@ -136,23 +150,44 @@ pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usi
     if k == 0 || n == 0 {
         return;
     }
-    c.par_chunks_mut(n).enumerate().for_each(|(kk, crow)| {
-        crow.fill(0.0);
-        for i in 0..m {
-            let x = a[i * k + kk];
-            if x != 0.0 {
-                let brow = &b[i * n..i * n + n];
-                for (j, &bv) in brow.iter().enumerate() {
-                    crow[j] += x * bv;
+    c.par_chunks_mut(TN_GROUP * n).enumerate().for_each(|(g, cg)| {
+        let kk0 = g * TN_GROUP;
+        let rows = cg.len() / n;
+        cg.fill(0.0);
+        let mut ap = [0f32; TN_GROUP * TN_IB];
+        let mut i0 = 0;
+        while i0 < m {
+            let ib = TN_IB.min(m - i0);
+            for ii in 0..ib {
+                let arow = &a[(i0 + ii) * k + kk0..(i0 + ii) * k + kk0 + rows];
+                ap[ii * TN_GROUP..ii * TN_GROUP + rows].copy_from_slice(arow);
+            }
+            for ii in 0..ib {
+                let brow = &b[(i0 + ii) * n..(i0 + ii) * n + n];
+                for r in 0..rows {
+                    let x = ap[ii * TN_GROUP + r];
+                    if x != 0.0 {
+                        let crow = &mut cg[r * n..r * n + n];
+                        for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                            *cv += x * bv;
+                        }
+                    }
                 }
             }
+            i0 += ib;
         }
     });
 }
 
+/// Dot-tile size of `matmul_nt`: 4 rows of `a` × 4 rows of `b` = 16
+/// independent accumulator chains per pass.
+const NT_T: usize = 4;
+
 /// `c = a @ bᵀ` with `a: [m, n]`, `b: [p, n]`, `c: [m, p]` — the
-/// input-gradient shape (`dh = dout @ Uᵀ`). Row-parallel; each output
-/// element is one contiguous-row dot product.
+/// input-gradient shape (`dh = dout @ Uᵀ`). Row-parallel over fixed 4-row
+/// groups; full 4×4 tiles run 16 independent dot-product chains (the naive
+/// single-chain dot is FP-add latency-bound), tails fall back to the plain
+/// dot. Every dot accumulates over `j` in ascending order either way.
 pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, p: usize) {
     debug_assert_eq!(a.len(), m * n);
     debug_assert_eq!(b.len(), p * n);
@@ -164,14 +199,48 @@ pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, p: usi
         c.fill(0.0);
         return;
     }
-    c.par_chunks_mut(p).zip(a.par_chunks(n)).for_each(|(crow, arow)| {
-        for (kk, cv) in crow.iter_mut().enumerate() {
-            let brow = &b[kk * n..kk * n + n];
-            let mut s = 0.0f32;
-            for (j, &av) in arow.iter().enumerate() {
-                s += av * brow[j];
+    c.par_chunks_mut(NT_T * p).zip(a.par_chunks(NT_T * n)).for_each(|(cb, ab)| {
+        let rows = cb.len() / p;
+        let mut q0 = 0;
+        while q0 < p {
+            let qw = NT_T.min(p - q0);
+            if rows == NT_T && qw == NT_T {
+                let a0 = &ab[0..n];
+                let a1 = &ab[n..2 * n];
+                let a2 = &ab[2 * n..3 * n];
+                let a3 = &ab[3 * n..4 * n];
+                let b0 = &b[q0 * n..q0 * n + n];
+                let b1 = &b[(q0 + 1) * n..(q0 + 1) * n + n];
+                let b2 = &b[(q0 + 2) * n..(q0 + 2) * n + n];
+                let b3 = &b[(q0 + 3) * n..(q0 + 3) * n + n];
+                let mut acc = [[0f32; NT_T]; NT_T];
+                for j in 0..n {
+                    let avs = [a0[j], a1[j], a2[j], a3[j]];
+                    let bvs = [b0[j], b1[j], b2[j], b3[j]];
+                    for (accr, &av) in acc.iter_mut().zip(avs.iter()) {
+                        for (av_q, &bv) in accr.iter_mut().zip(bvs.iter()) {
+                            *av_q += av * bv;
+                        }
+                    }
+                }
+                for (r, accr) in acc.iter().enumerate() {
+                    cb[r * p + q0..r * p + q0 + NT_T].copy_from_slice(accr);
+                }
+            } else {
+                // Tail tile: plain ascending-j dots (same per-element order).
+                for r in 0..rows {
+                    let arow = &ab[r * n..r * n + n];
+                    for q in 0..qw {
+                        let brow = &b[(q0 + q) * n..(q0 + q) * n + n];
+                        let mut s = 0.0f32;
+                        for (av, &bv) in arow.iter().zip(brow.iter()) {
+                            s += av * bv;
+                        }
+                        cb[r * p + q0 + q] = s;
+                    }
+                }
             }
-            *cv = s;
+            q0 += NT_T;
         }
     });
 }
@@ -222,6 +291,165 @@ pub fn add_assign(c: &mut [f32], other: &[f32]) {
     });
 }
 
+/// The pre-PR kernels, frozen verbatim as the bit-parity oracles for the
+/// packed kernels above (and the "old" side of the epoch benches). Same
+/// per-element summation orders, same fixed row-chunk parallelism — the
+/// packed kernels must reproduce these bit-for-bit on finite inputs.
+pub mod scalar {
+    use rayon::prelude::*;
+
+    const ROW_CHUNK: usize = super::ROW_CHUNK;
+    const KC: usize = super::KC;
+    /// Column-tile width of the pre-PR register micro-kernel.
+    const JT: usize = 8;
+
+    /// `c = a @ b` (pre-PR path).
+    pub fn matmul(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        c.fill(0.0);
+        matmul_acc(a, b, c, m, k, n);
+    }
+
+    /// `c += a @ b` (pre-PR path).
+    pub fn matmul_acc(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        if m == 0 || n == 0 || k == 0 {
+            return;
+        }
+        c.par_chunks_mut(ROW_CHUNK * n)
+            .zip(a.par_chunks(ROW_CHUNK * k))
+            .for_each(|(c_blk, a_blk)| {
+                let rows = c_blk.len() / n;
+                debug_assert_eq!(rows * k, a_blk.len());
+                block_acc(a_blk, b, c_blk, rows, k, n);
+            });
+    }
+
+    /// Pre-PR serial row-block kernel: 4 rows of `a` at a time, `JT`-wide
+    /// register accumulator tiles, `KC`-deep k blocks, unpacked strided
+    /// B-row loads.
+    fn block_acc(a: &[f32], b: &[f32], c: &mut [f32], rows: usize, k: usize, n: usize) {
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            let mut i = 0;
+            while i + 4 <= rows {
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                let a2 = &a[(i + 2) * k..(i + 3) * k];
+                let a3 = &a[(i + 3) * k..(i + 4) * k];
+                let mut j = 0;
+                while j + JT <= n {
+                    let mut acc = [[0f32; JT]; 4];
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let base = (i + r) * n + j;
+                        accr.copy_from_slice(&c[base..base + JT]);
+                    }
+                    for kk in k0..k1 {
+                        let xs = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                        let bt = &b[kk * n + j..kk * n + j + JT];
+                        for (r, accr) in acc.iter_mut().enumerate() {
+                            let x = xs[r];
+                            for (av, &bv) in accr.iter_mut().zip(bt.iter()) {
+                                *av += x * bv;
+                            }
+                        }
+                    }
+                    for (r, accr) in acc.iter().enumerate() {
+                        let base = (i + r) * n + j;
+                        c[base..base + JT].copy_from_slice(accr);
+                    }
+                    j += JT;
+                }
+                if j < n {
+                    // Column tail (< JT columns): per-element accumulation in
+                    // the same ascending-k order.
+                    for kk in k0..k1 {
+                        let xs = [a0[kk], a1[kk], a2[kk], a3[kk]];
+                        let brow = &b[kk * n..(kk + 1) * n];
+                        for (r, &x) in xs.iter().enumerate() {
+                            if x == 0.0 {
+                                continue;
+                            }
+                            let crow = &mut c[(i + r) * n..(i + r + 1) * n];
+                            for jj in j..n {
+                                crow[jj] += x * brow[jj];
+                            }
+                        }
+                    }
+                }
+                i += 4;
+            }
+            // Row tail (< 4 rows).
+            while i < rows {
+                let crow = &mut c[i * n..(i + 1) * n];
+                let arow = &a[i * k..(i + 1) * k];
+                for kk in k0..k1 {
+                    let x = arow[kk];
+                    if x == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..kk * n + n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += x * bv;
+                    }
+                }
+                i += 1;
+            }
+            k0 = k1;
+        }
+    }
+
+    /// `c = aᵀ @ b` (pre-PR path): one output row per work unit, strided
+    /// A-column loads, B re-read once per output row.
+    pub fn matmul_tn(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(c.len(), k * n);
+        if k == 0 || n == 0 {
+            return;
+        }
+        c.par_chunks_mut(n).enumerate().for_each(|(kk, crow)| {
+            crow.fill(0.0);
+            for i in 0..m {
+                let x = a[i * k + kk];
+                if x != 0.0 {
+                    let brow = &b[i * n..i * n + n];
+                    for (j, &bv) in brow.iter().enumerate() {
+                        crow[j] += x * bv;
+                    }
+                }
+            }
+        });
+    }
+
+    /// `c = a @ bᵀ` (pre-PR path): one latency-bound dot chain per output
+    /// element.
+    pub fn matmul_nt(a: &[f32], b: &[f32], c: &mut [f32], m: usize, n: usize, p: usize) {
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(b.len(), p * n);
+        debug_assert_eq!(c.len(), m * p);
+        if m == 0 || p == 0 {
+            return;
+        }
+        if n == 0 {
+            c.fill(0.0);
+            return;
+        }
+        c.par_chunks_mut(p).zip(a.par_chunks(n)).for_each(|(crow, arow)| {
+            for (kk, cv) in crow.iter_mut().enumerate() {
+                let brow = &b[kk * n..kk * n + n];
+                let mut s = 0.0f32;
+                for (j, &av) in arow.iter().enumerate() {
+                    s += av * brow[j];
+                }
+                *cv = s;
+            }
+        });
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -256,18 +484,23 @@ mod tests {
         }
     }
 
+    /// Shapes straddling the MR=4, NR=16, ROW_CHUNK=64, KC=256, TN_GROUP=8
+    /// and TN_IB=512 boundaries.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 7),
+        (4, 8, 16),
+        (65, 300, 9),
+        (130, 257, 33),
+        (7, 1, 4),
+        (67, 513, 17),
+        (600, 19, 18),
+    ];
+
     #[test]
     fn matmul_matches_naive_on_odd_shapes() {
         let mut rng = Rng::new(1);
-        // Shapes straddling the MR=4, ROW_CHUNK=64 and KC=256 boundaries.
-        for &(m, k, n) in &[
-            (1usize, 1usize, 1usize),
-            (3, 5, 7),
-            (4, 8, 16),
-            (65, 300, 9),
-            (130, 257, 33),
-            (7, 1, 4),
-        ] {
+        for &(m, k, n) in SHAPES {
             let a = rand_mat(&mut rng, m * k);
             let b = rand_mat(&mut rng, k * n);
             let mut c = vec![9.9f32; m * n];
@@ -324,6 +557,43 @@ mod tests {
         assert_close(&c, &naive(&a, &bt, m, n, p), 1e-5);
     }
 
+    /// The tentpole parity contract: the packed-panel kernels are
+    /// bit-identical to the retained pre-PR kernels on every shape,
+    /// accumulation included.
+    #[test]
+    fn packed_kernels_match_scalar_oracle_bitwise() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in SHAPES {
+            let a = rand_mat(&mut rng, m * k);
+            let b = rand_mat(&mut rng, k * n);
+            let init = rand_mat(&mut rng, m * n);
+
+            let mut c_new = init.clone();
+            let mut c_old = init.clone();
+            matmul_acc(&a, &b, &mut c_new, m, k, n);
+            scalar::matmul_acc(&a, &b, &mut c_old, m, k, n);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&c_new), bits(&c_old), "matmul_acc {m}x{k}x{n}");
+
+            // matmul_tn: a: [m, k] → c: [k, n] against b: [m, n].
+            let bb = rand_mat(&mut rng, m * n);
+            let mut t_new = vec![0f32; k * n];
+            let mut t_old = vec![0f32; k * n];
+            matmul_tn(&a, &bb, &mut t_new, m, k, n);
+            scalar::matmul_tn(&a, &bb, &mut t_old, m, k, n);
+            assert_eq!(bits(&t_new), bits(&t_old), "matmul_tn {m}x{k}x{n}");
+
+            // matmul_nt: a: [m, n] @ bᵀ with b: [p, n] where p = k.
+            let an = rand_mat(&mut rng, m * n);
+            let bp = rand_mat(&mut rng, k * n);
+            let mut d_new = vec![0f32; m * k];
+            let mut d_old = vec![0f32; m * k];
+            matmul_nt(&an, &bp, &mut d_new, m, n, k);
+            scalar::matmul_nt(&an, &bp, &mut d_old, m, n, k);
+            assert_eq!(bits(&d_new), bits(&d_old), "matmul_nt {m}x{n}x{k}");
+        }
+    }
+
     #[test]
     fn kernels_bit_identical_across_thread_counts() {
         let mut rng = Rng::new(5);
@@ -343,6 +613,11 @@ mod tests {
             matmul_tn(&a, &bb, &mut t_base, m, k, n);
             pool.install(|| matmul_tn(&a, &bb, &mut t, m, k, n));
             assert_eq!(t, t_base, "matmul_tn differs at {threads} threads");
+            let mut d = vec![0f32; m * m];
+            let mut d_base = vec![0f32; m * m];
+            matmul_nt(&a, &a, &mut d_base, m, k, m);
+            pool.install(|| matmul_nt(&a, &a, &mut d, m, k, m));
+            assert_eq!(d, d_base, "matmul_nt differs at {threads} threads");
         }
     }
 

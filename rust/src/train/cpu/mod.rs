@@ -8,10 +8,17 @@
 //! crossing worker boundaries is the summed gradient.
 //!
 //! Worker preparation builds one [`sage::EdgeCsr`] per partition (the
-//! segment-aggregation index) and, under DropEdge-K, the pre-generated mask
-//! bank; a training step is then pure compute over those indexes. All
-//! results are bit-stable for any rayon pool size (see `train::backend` for
-//! the contract and `tests/train_native.rs` for the end-to-end proof).
+//! segment-aggregation index), the partition's
+//! [`SageWorkspace`](crate::train::workspace::SageWorkspace) arena (every
+//! per-step temporary, allocated once), and, under DropEdge-K, the
+//! pre-generated mask bank; a training step is then pure compute over
+//! those indexes into those buffers — [`train_step_into`] performs **zero
+//! heap allocations** in steady state, and `run_workers` writes its
+//! results into engine-owned reusable slots. All results are bit-stable
+//! for any rayon pool size AND bit-identical to the retained pre-PR
+//! scalar path ([`train_step_scalar`]) — see `train::backend` for the
+//! contract and `tests/train_native.rs` / `tests/alloc_steady.rs` for the
+//! end-to-end proofs.
 
 pub mod gemm;
 pub mod sage;
@@ -19,23 +26,30 @@ pub mod sage;
 use super::backend::Backend;
 use super::dropedge::MaskBank;
 use super::tensorize::{EvalBatch, TrainBatch};
+use super::workspace::{ensure_grad_shapes, SageWorkspace};
 use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, Tensor, TrainOut};
 use crate::train::bucket::pad_explicit;
 use crate::train::reference::argmax;
 use crate::util::rng::Rng;
 use anyhow::Result;
 use rayon::prelude::*;
+use std::sync::Mutex;
 use std::time::Instant;
 
 pub use sage::{EdgeCsr, ForwardState};
 
-/// One prepared partition: batch + aggregation index + DropEdge masks.
+/// One prepared partition: batch + aggregation index + DropEdge masks +
+/// the preallocated step workspace.
 pub struct CpuWorker {
     pub batch: TrainBatch,
     model: ModelConfig,
     csr: EdgeCsr,
     /// DropEdge-K mask bank (full `emask` tensors); empty = no DropEdge.
     masks: Vec<Tensor>,
+    /// The per-step arena. A `Mutex` only so `run_workers` can fill it
+    /// from a `&self` rayon loop — each worker is visited exactly once per
+    /// epoch, so the lock is never contended.
+    scratch: Mutex<SageWorkspace>,
 }
 
 /// Prepared full-graph evaluation state.
@@ -43,6 +57,8 @@ pub struct CpuEval {
     pub batch: EvalBatch,
     model: ModelConfig,
     csr: EdgeCsr,
+    /// Forward-pass arena for eval epochs (same uncontended-`Mutex` deal).
+    scratch: Mutex<SageWorkspace>,
 }
 
 /// The native backend (stateless beyond what each worker carries).
@@ -55,10 +71,55 @@ impl CpuBackend {
     }
 }
 
-/// One native train step: fast forward, DAR-weighted softmax-CE loss and
-/// metrics, analytic backward. Produces the same `TrainOut` shape the PJRT
-/// artifacts emit.
+/// One native train step into caller-owned state: packed-kernel forward,
+/// DAR-weighted softmax-CE loss and metrics, analytic backward — all
+/// temporaries live in `ws`, the gradients land in `out.grads` (sized in
+/// place), so a steady-state call performs no heap allocation. Produces
+/// the same `TrainOut` tuple the PJRT artifacts emit.
+pub fn train_step_into(
+    model: &ModelConfig,
+    params: &ParamSet,
+    batch: &TrainBatch,
+    csr: &EdgeCsr,
+    emask: &[f32],
+    ws: &mut SageWorkspace,
+    out: &mut TrainOut,
+) {
+    let n = batch.n_pad;
+    let feat = batch.tensors[0].as_f32();
+    let dar = batch.tensors[4].as_f32();
+    let labels = batch.tensors[5].as_i32();
+    let tmask = batch.tensors[6].as_f32();
+    sage::forward_into(model, params, feat, emask, csr, n, ws);
+    let (loss_sum, weight_sum, correct) = sage::loss_grad_into(model, dar, labels, tmask, n, ws);
+    ensure_grad_shapes(model, out);
+    sage::backward_into(model, params, feat, emask, csr, n, ws, &mut out.grads);
+    out.loss_sum = loss_sum as f32;
+    out.weight_sum = weight_sum as f32;
+    out.correct = correct as f32;
+}
+
+/// One native train step with a throwaway workspace — the convenience
+/// entry point for benches, tests and one-off callers. The hot loops
+/// ([`CpuBackend::run_workers`], the remote worker role) use
+/// [`train_step_into`] with a persistent arena instead.
 pub fn train_step(
+    model: &ModelConfig,
+    params: &ParamSet,
+    batch: &TrainBatch,
+    csr: &EdgeCsr,
+    emask: &[f32],
+) -> TrainOut {
+    let mut ws = SageWorkspace::new(model, batch.n_pad);
+    let mut out = TrainOut::default();
+    train_step_into(model, params, batch, csr, emask, &mut ws, &mut out);
+    out
+}
+
+/// The retained pre-PR train step (scalar kernels, allocating) — the
+/// bit-parity oracle for [`train_step_into`] and the "old" side of the
+/// epoch benches.
+pub fn train_step_scalar(
     model: &ModelConfig,
     params: &ParamSet,
     batch: &TrainBatch,
@@ -70,9 +131,9 @@ pub fn train_step(
     let dar = batch.tensors[4].as_f32();
     let labels = batch.tensors[5].as_i32();
     let tmask = batch.tensors[6].as_f32();
-    let st = sage::forward(model, params, feat, emask, csr, n);
-    let lo = sage::loss_and_grad(model, st.logits(), dar, labels, tmask, n);
-    let grads = sage::backward(model, params, &st, feat, lo.dlogits, emask, csr);
+    let st = sage::forward_scalar(model, params, feat, emask, csr, n);
+    let lo = sage::loss_and_grad_scalar(model, st.logits(), dar, labels, tmask, n);
+    let grads = sage::backward_scalar(model, params, &st, feat, lo.dlogits, emask, csr);
     TrainOut {
         loss_sum: lo.loss_sum as f32,
         weight_sum: lo.weight_sum as f32,
@@ -113,12 +174,14 @@ impl Backend for CpuBackend {
             None => Vec::new(),
             Some((k, ratio)) => MaskBank::generate(&batch, k, ratio, rng).masks,
         };
-        Ok(CpuWorker { batch, model: *model, csr, masks })
+        let scratch = Mutex::new(SageWorkspace::new(model, batch.n_pad));
+        Ok(CpuWorker { batch, model: *model, csr, masks, scratch })
     }
 
     fn prepare_eval(&mut self, model: &ModelConfig, batch: EvalBatch) -> Result<CpuEval> {
         let csr = EdgeCsr::from_eval(&batch);
-        Ok(CpuEval { batch, model: *model, csr })
+        let scratch = Mutex::new(SageWorkspace::new(model, batch.n_pad));
+        Ok(CpuEval { batch, model: *model, csr, scratch })
     }
 
     fn run_workers(
@@ -127,53 +190,63 @@ impl Backend for CpuBackend {
         selected: &[usize],
         picks: &[Option<usize>],
         params: &ParamSet,
-    ) -> Result<Vec<(TrainOut, f64)>> {
+        outs: &mut Vec<(TrainOut, f64)>,
+    ) -> Result<()> {
         debug_assert_eq!(selected.len(), picks.len());
+        // Reuse the engine-owned output slots (and the gradient tensors
+        // inside them) across epochs; in steady state this resizes nothing.
+        outs.truncate(selected.len());
+        while outs.len() < selected.len() {
+            outs.push((TrainOut::default(), 0.0));
+        }
         // Communication-free parallelism on the host: every selected worker
-        // runs its whole train step independently; outputs come back in
-        // `selected` order so the engine's sequential gradient fold is
-        // bit-stable for any pool size. Per-worker times are wall-clock
-        // under co-scheduling — an upper bound on dedicated-machine
-        // compute (see the `Backend::run_workers` timing caveat).
-        let outs: Vec<(TrainOut, f64)> = selected
-            .par_iter()
-            .zip(picks.par_iter())
-            .map(|(&wi, pick)| {
+        // runs its whole train step independently into its own workspace
+        // and output slot; slots are indexed by `selected` position, so the
+        // engine's sequential gradient fold is bit-stable for any pool
+        // size. Per-worker times are wall-clock under co-scheduling — an
+        // upper bound on dedicated-machine compute (see the
+        // `Backend::run_workers` timing caveat).
+        outs.par_iter_mut()
+            .zip(selected.par_iter().zip(picks.par_iter()))
+            .for_each(|(slot, (&wi, pick))| {
                 let w = &workers[wi];
                 let emask = match pick {
                     Some(k) => w.masks[*k].as_f32(),
                     None => w.batch.emask().as_f32(),
                 };
                 let t0 = Instant::now();
-                let out = train_step(&w.model, params, &w.batch, &w.csr, emask);
-                (out, t0.elapsed().as_secs_f64())
-            })
-            .collect();
-        Ok(outs)
+                let mut ws = w.scratch.lock().expect("worker scratch poisoned");
+                train_step_into(&w.model, params, &w.batch, &w.csr, emask, &mut ws, &mut slot.0);
+                slot.1 = t0.elapsed().as_secs_f64();
+            });
+        Ok(())
     }
 
     fn evaluate(&self, eval: &CpuEval, params: &ParamSet, split: usize) -> Result<f64> {
-        let st = eval.forward(params);
-        Ok(eval.score(st.logits(), split))
+        let mut ws = eval.scratch.lock().expect("eval scratch poisoned");
+        eval.forward(params, &mut ws);
+        Ok(eval.score(ws.logits(), split))
     }
 
     /// One full-graph forward scores both splits — halves the eval cost of
     /// every eval epoch versus the default two-pass implementation.
     fn evaluate_val_test(&self, eval: &CpuEval, params: &ParamSet) -> Result<(f64, f64)> {
-        let st = eval.forward(params);
-        Ok((eval.score(st.logits(), 1), eval.score(st.logits(), 2)))
+        let mut ws = eval.scratch.lock().expect("eval scratch poisoned");
+        eval.forward(params, &mut ws);
+        Ok((eval.score(ws.logits(), 1), eval.score(ws.logits(), 2)))
     }
 }
 
 impl CpuEval {
-    fn forward(&self, params: &ParamSet) -> ForwardState {
-        sage::forward(
+    fn forward(&self, params: &ParamSet, ws: &mut SageWorkspace) {
+        sage::forward_into(
             &self.model,
             params,
             self.batch.tensors[0].as_f32(),
             self.batch.tensors[3].as_f32(),
             &self.csr,
             self.batch.n_pad,
+            ws,
         )
     }
 
@@ -228,8 +301,8 @@ mod tests {
             .prepare_worker(&model, batch, Some((4, 0.3)), &mut Rng::new(1))
             .unwrap();
         assert_eq!(worker.masks.len(), 4);
-        let outs = be
-            .run_workers(std::slice::from_ref(&worker), &[0], &[Some(2)], &params)
+        let mut outs = Vec::new();
+        be.run_workers(std::slice::from_ref(&worker), &[0], &[Some(2)], &params, &mut outs)
             .unwrap();
         assert_eq!(outs.len(), 1);
         let (out, secs) = &outs[0];
@@ -241,6 +314,13 @@ mod tests {
         }
         assert!(out.loss_sum.is_finite() && out.loss_sum > 0.0);
         assert!(out.weight_sum > 0.0);
+        // A second epoch through the same slots reuses every gradient
+        // allocation (the engine-side half of the zero-alloc contract).
+        let ptrs: Vec<*const f32> = outs[0].0.grads.iter().map(|g| g.as_ptr()).collect();
+        be.run_workers(std::slice::from_ref(&worker), &[0], &[Some(1)], &params, &mut outs)
+            .unwrap();
+        let ptrs2: Vec<*const f32> = outs[0].0.grads.iter().map(|g| g.as_ptr()).collect();
+        assert_eq!(ptrs, ptrs2, "output slots must be reused across epochs");
     }
 
     #[test]

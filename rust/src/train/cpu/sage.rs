@@ -3,24 +3,35 @@
 //! The math mirrors `train::reference` layer-for-layer (that module stays
 //! the slow parity oracle); the differences are purely mechanical:
 //!
-//! * the `h@W` / `concat@U` products run through the blocked, rayon-parallel
-//!   kernels in [`super::gemm`] instead of naive triple loops;
-//! * the weighted neighbor mean is a CSR-style segment sum over a
-//!   prebuilt [`EdgeCsr`] (parallel over destination nodes, no per-edge
-//!   scatter, no atomics) and its backward is the mirror-image gather over
-//!   the source-grouped half of the index;
+//! * the `h@W` / `concat@U` products run through the packed-panel kernels
+//!   in [`super::gemm`] instead of naive triple loops;
+//! * the weighted neighbor mean is a CSR-style segment sum over a prebuilt
+//!   [`EdgeCsr`] (parallel over destination nodes, no per-edge scatter, no
+//!   atomics). When the message matrix outgrows the cache, the segment sum
+//!   and its mirror-image backward scatter run **column-blocked**: the
+//!   edge index is walked once per 16-column stripe so the random
+//!   `msg[src]` reads hit a stripe that fits in cache instead of missing
+//!   to DRAM on every edge;
+//! * every per-step temporary lives in a caller-owned
+//!   [`SageWorkspace`](crate::train::workspace::SageWorkspace) — the
+//!   `*_into` entry points allocate nothing;
 //! * the DAR-weighted softmax-CE gradient is computed analytically, so one
-//!   [`train_step`](super::train_step) produces the same
+//!   [`train_step_into`](super::train_step_into) produces the same
 //!   `(loss_sum, weight_sum, correct, grads)` tuple the PJRT artifacts emit.
 //!
-//! Everything here is deterministic for any rayon pool size: per-element
+//! Everything here is deterministic for any rayon pool size AND
+//! bit-identical to the retained pre-PR path ([`forward_scalar`],
+//! [`backward_scalar`], [`loss_and_grad_scalar`]): per-element
 //! accumulation orders are fixed (ascending `k`, ascending edge id,
-//! ascending node id) and cross-node reductions fold sequentially.
+//! ascending node id), column blocking never splits a single element's
+//! sum, and cross-node reductions fold sequentially. The bitwise parity is
+//! property-tested across the graph zoo below.
 
 use super::gemm;
 use crate::runtime::{ModelConfig, ParamSet};
 use crate::train::reference::argmax;
 use crate::train::tensorize::{EvalBatch, TrainBatch};
+use crate::train::workspace::SageWorkspace;
 use rayon::prelude::*;
 
 /// Edge index of one padded batch: the directed message edges grouped both
@@ -116,10 +127,348 @@ impl EdgeCsr {
     }
 }
 
-/// All per-layer intermediates of one forward pass, kept for the backward.
-/// The feature matrix itself is NOT copied in — layer 0's input stays the
-/// caller's `feat` slice (re-passed to [`backward`]), so a train step
-/// allocates no per-iteration copy of the features.
+// ---------------------------------------------------------------------------
+// Blocked aggregation (the production path).
+// ---------------------------------------------------------------------------
+
+/// Column-stripe width of the blocked segment sum: 16 f32 = one cache line.
+const AGG_COL_BLOCK: usize = 16;
+/// Blocking gate: stripe the columns once the gathered matrix exceeds this
+/// working set (stay single-pass when it is cache-resident anyway). Pure
+/// performance heuristic — the result is bit-identical either way.
+const AGG_BLOCK_MIN_BYTES: usize = 4 << 20;
+
+fn use_col_blocks(n: usize, h: usize) -> bool {
+    h > AGG_COL_BLOCK && n * h * 4 > AGG_BLOCK_MIN_BYTES
+}
+
+/// Per-destination mean denominators `max(Σ w, 1e-9)`, ascending edge-id
+/// accumulation (bit-identical to the inline sums of the scalar path).
+fn compute_denoms(csr: &EdgeCsr, emask: &[f32], denom: &mut [f32]) {
+    denom.par_iter_mut().enumerate().for_each(|(d, den)| {
+        let lo = csr.in_off[d] as usize;
+        let hi = csr.in_off[d + 1] as usize;
+        let mut cnt = 0f32;
+        for idx in lo..hi {
+            let w = emask[csr.in_eid[idx] as usize];
+            if w == 0.0 {
+                continue;
+            }
+            cnt += w;
+        }
+        *den = cnt.max(1e-9);
+    });
+}
+
+/// Weighted segment mean `agg[d] = Σ_{e→d} w_e · msg[src_e] / denom_d` into
+/// caller-owned buffers, column-blocked when `msg` outgrows the cache.
+/// Every output element accumulates in ascending edge-id order and divides
+/// once — bit-identical to [`aggregate_reference`] for any blocking.
+fn aggregate_into(
+    csr: &EdgeCsr,
+    emask: &[f32],
+    msg: &[f32],
+    agg: &mut [f32],
+    denom: &mut [f32],
+    h: usize,
+) {
+    compute_denoms(csr, emask, denom);
+    if !use_col_blocks(csr.n, h) {
+        let denom_ro: &[f32] = denom;
+        agg.par_chunks_mut(h).enumerate().for_each(|(d, row)| {
+            row.fill(0.0);
+            let lo = csr.in_off[d] as usize;
+            let hi = csr.in_off[d + 1] as usize;
+            for idx in lo..hi {
+                let w = emask[csr.in_eid[idx] as usize];
+                if w == 0.0 {
+                    continue;
+                }
+                let s = csr.in_src[idx] as usize;
+                let srow = &msg[s * h..s * h + h];
+                for (av, &mv) in row.iter_mut().zip(srow.iter()) {
+                    *av += w * mv;
+                }
+            }
+            let dn = denom_ro[d];
+            for v in row.iter_mut() {
+                *v /= dn;
+            }
+        });
+        return;
+    }
+    let denom_ro: &[f32] = denom;
+    let mut j0 = 0;
+    while j0 < h {
+        let jw = AGG_COL_BLOCK.min(h - j0);
+        agg.par_chunks_mut(h).enumerate().for_each(|(d, row)| {
+            let seg = &mut row[j0..j0 + jw];
+            seg.fill(0.0);
+            let lo = csr.in_off[d] as usize;
+            let hi = csr.in_off[d + 1] as usize;
+            for idx in lo..hi {
+                let w = emask[csr.in_eid[idx] as usize];
+                if w == 0.0 {
+                    continue;
+                }
+                let s = csr.in_src[idx] as usize;
+                let srow = &msg[s * h + j0..s * h + j0 + jw];
+                for (av, &mv) in seg.iter_mut().zip(srow.iter()) {
+                    *av += w * mv;
+                }
+            }
+            let dn = denom_ro[d];
+            for v in seg.iter_mut() {
+                *v /= dn;
+            }
+        });
+        j0 += AGG_COL_BLOCK;
+    }
+}
+
+/// Backward of [`aggregate_into`] w.r.t. `msg`:
+/// `dmsg[s] = Σ_{e: src_e = s} (w_e / denom_{dst_e}) · dagg[dst_e]`,
+/// column-blocked under the same gate, same ascending-edge-id per-element
+/// order as [`scatter_grad_reference`].
+fn scatter_grad_into(
+    csr: &EdgeCsr,
+    emask: &[f32],
+    denom: &[f32],
+    dagg: &[f32],
+    dmsg: &mut [f32],
+    h: usize,
+) {
+    if !use_col_blocks(csr.n, h) {
+        dmsg.par_chunks_mut(h).enumerate().for_each(|(s, row)| {
+            row.fill(0.0);
+            let lo = csr.out_off[s] as usize;
+            let hi = csr.out_off[s + 1] as usize;
+            for idx in lo..hi {
+                let w = emask[csr.out_eid[idx] as usize];
+                if w == 0.0 {
+                    continue;
+                }
+                let d = csr.out_dst[idx] as usize;
+                let f = w / denom[d];
+                let drow = &dagg[d * h..d * h + h];
+                for (dv, &gv) in row.iter_mut().zip(drow.iter()) {
+                    *dv += f * gv;
+                }
+            }
+        });
+        return;
+    }
+    let mut j0 = 0;
+    while j0 < h {
+        let jw = AGG_COL_BLOCK.min(h - j0);
+        dmsg.par_chunks_mut(h).enumerate().for_each(|(s, row)| {
+            let seg = &mut row[j0..j0 + jw];
+            seg.fill(0.0);
+            let lo = csr.out_off[s] as usize;
+            let hi = csr.out_off[s + 1] as usize;
+            for idx in lo..hi {
+                let w = emask[csr.out_eid[idx] as usize];
+                if w == 0.0 {
+                    continue;
+                }
+                let d = csr.out_dst[idx] as usize;
+                let f = w / denom[d];
+                let drow = &dagg[d * h + j0..d * h + j0 + jw];
+                for (dv, &gv) in seg.iter_mut().zip(drow.iter()) {
+                    *dv += f * gv;
+                }
+            }
+        });
+        j0 += AGG_COL_BLOCK;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Workspace-based forward / loss / backward (the production path).
+// ---------------------------------------------------------------------------
+
+/// Fast forward pass into a caller-owned workspace; keeps every
+/// intermediate needed by [`backward_into`]. Allocates nothing.
+pub fn forward_into(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    feat: &[f32],
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut SageWorkspace,
+) {
+    debug_assert_eq!(feat.len(), n * cfg.feat_dim);
+    debug_assert_eq!(csr.n, n);
+    debug_assert_eq!(ws.n, n);
+    debug_assert_eq!(ws.outs.len(), cfg.layers);
+    let h = cfg.hidden;
+    let SageWorkspace { outs, msgs, aggs, denoms, .. } = ws;
+    let mut d_in = cfg.feat_dim;
+    for l in 0..cfg.layers {
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let w = &params.data[4 * l];
+        let b = &params.data[4 * l + 1];
+        let u = &params.data[4 * l + 2];
+        let c = &params.data[4 * l + 3];
+        let (prev, rest) = outs.split_at_mut(l);
+        let hin: &[f32] = if l == 0 { feat } else { &prev[l - 1] };
+        let msg = &mut msgs[l];
+        // msg = relu(hin @ W + b)
+        gemm::matmul(hin, w, msg, n, d_in, h);
+        gemm::bias_relu_rows(msg, b, h);
+        // agg = masked weighted neighbor mean
+        aggregate_into(csr, emask, msg, &mut aggs[l], &mut denoms[l], h);
+        // out = concat(agg, hin) @ U + c  (bias first, then the two halves —
+        // the reference's exact summation order)
+        let out = &mut rest[0];
+        debug_assert_eq!(out.len(), n * d_out);
+        gemm::broadcast_rows(c, out, d_out);
+        gemm::matmul_acc(&aggs[l], &u[..h * d_out], out, n, h, d_out);
+        gemm::matmul_acc(hin, &u[h * d_out..], out, n, d_in, d_out);
+        d_in = d_out;
+    }
+}
+
+/// DAR-weighted softmax cross-entropy over the workspace's logits: writes
+/// the analytic logits gradient `w_i · (softmax − onehot)` into the front
+/// of `ws.dbuf_a` (where [`backward_into`] expects it) and returns
+/// `(loss_sum, weight_sum, correct)`. Allocates nothing.
+pub fn loss_grad_into(
+    cfg: &ModelConfig,
+    dar: &[f32],
+    labels: &[i32],
+    tmask: &[f32],
+    n: usize,
+    ws: &mut SageWorkspace,
+) -> (f64, f64, f64) {
+    let c = cfg.classes;
+    let SageWorkspace { outs, per_node, dbuf_a, .. } = ws;
+    let logits: &[f32] = outs.last().expect("forward_into ran");
+    debug_assert_eq!(logits.len(), n * c);
+    let dlogits = &mut dbuf_a[..n * c];
+    dlogits.par_chunks_mut(c).zip(per_node.par_iter_mut()).enumerate().for_each(
+        |(i, (drow, acc))| {
+            let row = &logits[i * c..i * c + c];
+            let t = tmask[i];
+            let w = (dar[i] * t) as f64;
+            let mut correct = 0f64;
+            if t > 0.0 {
+                let am = argmax(row);
+                // NaN at the winner ⇒ no real prediction ⇒ never correct.
+                if !row[am].is_nan() && am as i32 == labels[i] {
+                    correct = t as f64;
+                }
+            }
+            if w > 0.0 {
+                let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0f64;
+                for &x in row {
+                    z += ((x - maxv) as f64).exp();
+                }
+                let logz = maxv as f64 + z.ln();
+                let ce = logz - row[labels[i] as usize] as f64;
+                let wf = w as f32;
+                for (j, dv) in drow.iter_mut().enumerate() {
+                    let p = (((row[j] - maxv) as f64).exp() / z) as f32;
+                    let onehot = if j as i32 == labels[i] { 1.0 } else { 0.0 };
+                    *dv = wf * (p - onehot);
+                }
+                *acc = (w * ce, w, correct);
+            } else {
+                drow.fill(0.0);
+                *acc = (0.0, 0.0, correct);
+            }
+        },
+    );
+    // Sequential fold in node order: deterministic for any pool size.
+    let (mut loss_sum, mut weight_sum, mut correct) = (0f64, 0f64, 0f64);
+    for &(l, w, cr) in per_node.iter() {
+        loss_sum += l;
+        weight_sum += w;
+        correct += cr;
+    }
+    (loss_sum, weight_sum, correct)
+}
+
+/// Backward pass into caller-owned gradient tensors, in the artifact's
+/// lowering order (`W, b, U, c` per layer). Expects the logits gradient at
+/// the front of `ws.dbuf_a` (as left by [`loss_grad_into`]); the upstream
+/// gradient ping-pongs between the workspace's two `dbuf`s by pointer
+/// swap. Every element of `grads` is overwritten; nothing allocates.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_into(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    feat: &[f32],
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut SageWorkspace,
+    grads: &mut [Vec<f32>],
+) {
+    let h = cfg.hidden;
+    debug_assert_eq!(grads.len(), params.data.len());
+    let SageWorkspace { outs, msgs, aggs, denoms, dbuf_a, dbuf_b, dagg, dmsg, dh_msg, .. } = ws;
+    for l in (0..cfg.layers).rev() {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let w = &params.data[4 * l];
+        let u = &params.data[4 * l + 2];
+        let hin: &[f32] = if l == 0 { feat } else { &outs[l - 1] };
+        let msg = &msgs[l];
+        let agg = &aggs[l];
+        let denom = &denoms[l];
+        let dout = &dbuf_a[..n * d_out];
+        // dc = column sums of dout.
+        gemm::col_sums(dout, n, d_out, &mut grads[4 * l + 3]);
+        // dU: top h rows from the agg half, bottom d_in rows from the h half.
+        {
+            let du = &mut grads[4 * l + 2];
+            gemm::matmul_tn(agg, dout, &mut du[..h * d_out], n, h, d_out);
+            gemm::matmul_tn(hin, dout, &mut du[h * d_out..], n, d_in, d_out);
+        }
+        // Gradient flowing into the aggregation half of the concat.
+        gemm::matmul_nt(dout, &u[..h * d_out], dagg, n, d_out, h);
+        // Through the mean aggregation (denominators are weight-only
+        // constants) and the ReLU.
+        scatter_grad_into(csr, emask, denom, dagg, dmsg, h);
+        dmsg.par_chunks_mut(h)
+            .zip(msg.par_chunks(h))
+            .for_each(|(drow, mrow)| {
+                for (dv, &mv) in drow.iter_mut().zip(mrow.iter()) {
+                    if mv <= 0.0 {
+                        *dv = 0.0;
+                    }
+                }
+            });
+        gemm::matmul_tn(hin, dmsg, &mut grads[4 * l], n, d_in, h);
+        gemm::col_sums(dmsg, n, h, &mut grads[4 * l + 1]);
+        // Input gradient for the next (shallower) layer — skipped at layer
+        // 0, where the input is the feature data and its gradient would be
+        // two n×d_in GEMMs of pure waste.
+        if l == 0 {
+            break;
+        }
+        {
+            let dh = &mut dbuf_b[..n * d_in];
+            gemm::matmul_nt(dout, &u[h * d_out..], dh, n, d_out, d_in);
+            let dhm = &mut dh_msg[..n * d_in];
+            gemm::matmul_nt(dmsg, w, dhm, n, h, d_in);
+            gemm::add_assign(dh, dhm);
+        }
+        std::mem::swap(dbuf_a, dbuf_b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The retained pre-PR path (scalar kernels, allocating) — the bit-parity
+// oracle for everything above, and the "old" side of the epoch benches.
+// ---------------------------------------------------------------------------
+
+/// All per-layer intermediates of one pre-PR forward pass, kept for
+/// [`backward_scalar`]. The feature matrix itself is NOT copied in — layer
+/// 0's input stays the caller's `feat` slice.
 pub struct ForwardState {
     pub n: usize,
     /// `outs[l]` = output of layer `l`; `outs[layers-1]` = logits
@@ -139,8 +488,8 @@ impl ForwardState {
     }
 }
 
-/// Weighted segment mean: `agg[d] = Σ_{e→d} w_e · msg[src_e] / denom_d`.
-fn aggregate(
+/// Pre-PR weighted segment mean (single pass, inline denominators).
+fn aggregate_reference(
     csr: &EdgeCsr,
     emask: &[f32],
     msg: &[f32],
@@ -174,9 +523,8 @@ fn aggregate(
     );
 }
 
-/// Backward of [`aggregate`] w.r.t. `msg`:
-/// `dmsg[s] = Σ_{e: src_e = s} (w_e / denom_{dst_e}) · dagg[dst_e]`.
-fn scatter_grad(
+/// Pre-PR backward of the aggregation (single pass).
+fn scatter_grad_reference(
     csr: &EdgeCsr,
     emask: &[f32],
     denom: &[f32],
@@ -203,8 +551,9 @@ fn scatter_grad(
     });
 }
 
-/// Fast forward pass; keeps every intermediate needed by [`backward`].
-pub fn forward(
+/// Pre-PR forward pass (allocating, scalar kernels); keeps every
+/// intermediate needed by [`backward_scalar`].
+pub fn forward_scalar(
     cfg: &ModelConfig,
     params: &ParamSet,
     feat: &[f32],
@@ -229,18 +578,17 @@ pub fn forward(
         let hin: &[f32] = if l == 0 { feat } else { &outs[l - 1] };
         // msg = relu(hin @ W + b)
         let mut msg = vec![0f32; n * h];
-        gemm::matmul(hin, w, &mut msg, n, d_in, h);
+        gemm::scalar::matmul(hin, w, &mut msg, n, d_in, h);
         gemm::bias_relu_rows(&mut msg, b, h);
         // agg = masked weighted neighbor mean
         let mut agg = vec![0f32; n * h];
         let mut denom = vec![0f32; n];
-        aggregate(csr, emask, &msg, &mut agg, &mut denom, h);
-        // out = concat(agg, hin) @ U + c  (bias first, then the two halves —
-        // the reference's exact summation order)
+        aggregate_reference(csr, emask, &msg, &mut agg, &mut denom, h);
+        // out = concat(agg, hin) @ U + c
         let mut out = vec![0f32; n * d_out];
         gemm::broadcast_rows(c, &mut out, d_out);
-        gemm::matmul_acc(&agg, &u[..h * d_out], &mut out, n, h, d_out);
-        gemm::matmul_acc(hin, &u[h * d_out..], &mut out, n, d_in, d_out);
+        gemm::scalar::matmul_acc(&agg, &u[..h * d_out], &mut out, n, h, d_out);
+        gemm::scalar::matmul_acc(hin, &u[h * d_out..], &mut out, n, d_in, d_out);
         msgs.push(msg);
         aggs.push(agg);
         denoms.push(denom);
@@ -250,7 +598,7 @@ pub fn forward(
     ForwardState { n, outs, msgs, aggs, denoms }
 }
 
-/// Loss, metrics and the logits gradient in one pass.
+/// Loss, metrics and the logits gradient of the pre-PR path.
 pub struct LossOut {
     pub loss_sum: f64,
     pub weight_sum: f64,
@@ -259,10 +607,10 @@ pub struct LossOut {
     pub dlogits: Vec<f32>,
 }
 
-/// DAR-weighted softmax cross-entropy: matches
+/// Pre-PR DAR-weighted softmax cross-entropy (allocating): matches
 /// `reference::loss_and_metrics` on the scalar outputs and additionally
 /// returns the analytic logits gradient `w_i · (softmax − onehot)`.
-pub fn loss_and_grad(
+pub fn loss_and_grad_scalar(
     cfg: &ModelConfig,
     logits: &[f32],
     dar: &[f32],
@@ -282,7 +630,6 @@ pub fn loss_and_grad(
             let mut correct = 0f64;
             if t > 0.0 {
                 let am = argmax(row);
-                // NaN at the winner ⇒ no real prediction ⇒ never correct.
                 if !row[am].is_nan() && am as i32 == labels[i] {
                     correct = t as f64;
                 }
@@ -307,7 +654,6 @@ pub fn loss_and_grad(
             }
         },
     );
-    // Sequential fold in node order: deterministic for any pool size.
     let (mut loss_sum, mut weight_sum, mut correct) = (0f64, 0f64, 0f64);
     for &(l, w, cr) in &per_node {
         loss_sum += l;
@@ -317,9 +663,9 @@ pub fn loss_and_grad(
     LossOut { loss_sum, weight_sum, correct, dlogits }
 }
 
-/// Backward pass: gradients of `loss_sum` w.r.t. every parameter, in the
-/// artifact's lowering order (`W, b, U, c` per layer).
-pub fn backward(
+/// Pre-PR backward pass (allocating, scalar kernels): gradients of
+/// `loss_sum` w.r.t. every parameter, in the artifact's lowering order.
+pub fn backward_scalar(
     cfg: &ModelConfig,
     params: &ParamSet,
     st: &ForwardState,
@@ -342,21 +688,16 @@ pub fn backward(
         let agg = &st.aggs[l];
         let denom = &st.denoms[l];
         debug_assert_eq!(dout.len(), n * d_out);
-        // dc = column sums of dout.
         gemm::col_sums(&dout, n, d_out, &mut grads[4 * l + 3]);
-        // dU: top h rows from the agg half, bottom d_in rows from the h half.
         {
             let du = &mut grads[4 * l + 2];
-            gemm::matmul_tn(agg, &dout, &mut du[..h * d_out], n, h, d_out);
-            gemm::matmul_tn(hin, &dout, &mut du[h * d_out..], n, d_in, d_out);
+            gemm::scalar::matmul_tn(agg, &dout, &mut du[..h * d_out], n, h, d_out);
+            gemm::scalar::matmul_tn(hin, &dout, &mut du[h * d_out..], n, d_in, d_out);
         }
-        // Gradient flowing into the aggregation half of the concat.
         let mut dagg = vec![0f32; n * h];
-        gemm::matmul_nt(&dout, &u[..h * d_out], &mut dagg, n, d_out, h);
-        // Through the mean aggregation (denominators are weight-only
-        // constants) and the ReLU.
+        gemm::scalar::matmul_nt(&dout, &u[..h * d_out], &mut dagg, n, d_out, h);
         let mut dmsg = vec![0f32; n * h];
-        scatter_grad(csr, emask, denom, &dagg, &mut dmsg, h);
+        scatter_grad_reference(csr, emask, denom, &dagg, &mut dmsg, h);
         dmsg.par_chunks_mut(h)
             .zip(msg.par_chunks(h))
             .for_each(|(drow, mrow)| {
@@ -366,18 +707,15 @@ pub fn backward(
                     }
                 }
             });
-        gemm::matmul_tn(hin, &dmsg, &mut grads[4 * l], n, d_in, h);
+        gemm::scalar::matmul_tn(hin, &dmsg, &mut grads[4 * l], n, d_in, h);
         gemm::col_sums(&dmsg, n, h, &mut grads[4 * l + 1]);
-        // Input gradient for the next (shallower) layer — skipped at layer
-        // 0, where the input is the feature data and its gradient would be
-        // two n×d_in GEMMs of pure waste.
         if l == 0 {
             break;
         }
         let mut dh = vec![0f32; n * d_in];
-        gemm::matmul_nt(&dout, &u[h * d_out..], &mut dh, n, d_out, d_in);
+        gemm::scalar::matmul_nt(&dout, &u[h * d_out..], &mut dh, n, d_out, d_in);
         let mut dh_msg = vec![0f32; n * d_in];
-        gemm::matmul_nt(&dmsg, w, &mut dh_msg, n, h, d_in);
+        gemm::scalar::matmul_nt(&dmsg, w, &mut dh_msg, n, h, d_in);
         gemm::add_assign(&mut dh, &dh_msg);
         dout = dh;
     }
@@ -422,6 +760,19 @@ mod tests {
         }
     }
 
+    /// Run the workspace forward over a fresh arena.
+    fn ws_forward(
+        cfg: &ModelConfig,
+        params: &ParamSet,
+        batch: &TrainBatch,
+        csr: &EdgeCsr,
+        emask: &[f32],
+    ) -> SageWorkspace {
+        let mut ws = SageWorkspace::new(cfg, batch.n_pad);
+        forward_into(cfg, params, batch.tensors[0].as_f32(), emask, csr, batch.n_pad, &mut ws);
+        ws
+    }
+
     #[test]
     fn edge_csr_covers_live_edges_both_ways() {
         let (_, _, batch) = setup(1, 80);
@@ -447,7 +798,8 @@ mod tests {
 
     /// Satellite: the fast forward matches `reference::forward` within tight
     /// f32 tolerance across the graph zoo, several layer counts, and any
-    /// rayon pool size.
+    /// rayon pool size — and is **bit-identical** to the retained pre-PR
+    /// scalar path.
     #[test]
     fn forward_matches_reference_across_zoo_and_threads() {
         for (gi, g) in graph_zoo(21).iter().enumerate() {
@@ -469,15 +821,22 @@ mod tests {
                 let want = reference::forward(&cfg, &params, &batch);
                 let feat = batch.tensors[0].as_f32();
                 let emask = batch.emask().as_f32();
-                let got = forward(&cfg, &params, feat, emask, &csr, batch.n_pad);
+                let got = ws_forward(&cfg, &params, &batch, &csr, emask);
                 assert_close(got.logits(), &want, 1e-4, "logits");
+                // Bitwise parity with the retained pre-PR path.
+                let old = forward_scalar(&cfg, &params, feat, emask, &csr, batch.n_pad);
+                assert_eq!(
+                    got.logits(),
+                    old.logits(),
+                    "graph#{gi} layers={layers}: packed forward diverged from scalar oracle"
+                );
                 for threads in [1usize, 2, 8] {
                     let pool = rayon::ThreadPoolBuilder::new()
                         .num_threads(threads)
                         .build()
                         .unwrap();
-                    let got_t = pool
-                        .install(|| forward(&cfg, &params, feat, emask, &csr, batch.n_pad));
+                    let got_t =
+                        pool.install(|| ws_forward(&cfg, &params, &batch, &csr, emask));
                     assert_eq!(
                         got_t.logits(),
                         got.logits(),
@@ -492,33 +851,75 @@ mod tests {
     fn loss_and_grad_matches_reference_metrics() {
         let (cfg, params, batch) = setup(2, 80);
         let csr = batch_csr(&batch);
-        let st = forward(
-            &cfg,
-            &params,
-            batch.tensors[0].as_f32(),
-            batch.emask().as_f32(),
-            &csr,
-            batch.n_pad,
-        );
+        let emask = batch.emask().as_f32();
+        let mut ws = ws_forward(&cfg, &params, &batch, &csr, emask);
         let logits = reference::forward(&cfg, &params, &batch);
         let (l, w, c) = reference::loss_and_metrics(&cfg, &logits, &batch);
-        let lo = loss_and_grad(
+        let (loss_sum, weight_sum, correct) = loss_grad_into(
             &cfg,
-            st.logits(),
             batch.tensors[4].as_f32(),
             batch.tensors[5].as_i32(),
             batch.tensors[6].as_f32(),
             batch.n_pad,
+            &mut ws,
         );
-        assert!((lo.loss_sum - l).abs() < 1e-3 * (1.0 + l.abs()), "{} vs {l}", lo.loss_sum);
-        assert!((lo.weight_sum - w).abs() < 1e-4, "{} vs {w}", lo.weight_sum);
+        assert!((loss_sum - l).abs() < 1e-3 * (1.0 + l.abs()), "{loss_sum} vs {l}");
+        assert!((weight_sum - w).abs() < 1e-4, "{weight_sum} vs {w}");
         // The two forwards agree to f32 noise; allow at most one tie-flip in
         // the argmax-based correct count.
-        assert!((lo.correct - c).abs() <= 1.0, "{} vs {c}", lo.correct);
+        assert!((correct - c).abs() <= 1.0, "{correct} vs {c}");
         // dlogits rows sum to ~0 (softmax minus one-hot, scaled).
         for i in 0..batch.n_pad {
-            let s: f32 = lo.dlogits[i * cfg.classes..(i + 1) * cfg.classes].iter().sum();
+            let s: f32 = ws.dbuf_a[i * cfg.classes..(i + 1) * cfg.classes].iter().sum();
             assert!(s.abs() < 1e-4, "row {i} grad sum {s}");
+        }
+    }
+
+    /// The tentpole parity contract at the step level: workspace forward +
+    /// loss + backward is bit-identical to the retained pre-PR scalar path
+    /// — loss bits, metric bits and every gradient bit — across the zoo.
+    #[test]
+    fn workspace_step_matches_scalar_step_bitwise_across_zoo() {
+        for (gi, g) in graph_zoo(29).iter().enumerate() {
+            let n = g.num_nodes();
+            let mut rng = Rng::new(300 + gi as u64);
+            let comm: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+            let nd =
+                synthesize(&comm, 4, &FeatureParams { dim: 5, ..Default::default() }, &mut rng);
+            let vc = VertexCut::create(g, 2, &RandomVertexCut, &mut rng);
+            let w = dar_weights(g, &vc, Reweighting::Dar);
+            if vc.parts[0].num_edges() == 0 {
+                continue;
+            }
+            let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 256, 2048).unwrap();
+            let csr = batch_csr(&batch);
+            for layers in [1usize, 2, 3] {
+                let cfg = ModelConfig { layers, feat_dim: 5, hidden: 7, classes: 4 };
+                let params = ParamSet::init_glorot(&cfg, &mut rng.fork(layers as u64));
+                let new = super::super::train_step(
+                    &cfg,
+                    &params,
+                    &batch,
+                    &csr,
+                    batch.emask().as_f32(),
+                );
+                let old = super::super::train_step_scalar(
+                    &cfg,
+                    &params,
+                    &batch,
+                    &csr,
+                    batch.emask().as_f32(),
+                );
+                assert_eq!(new.loss_sum.to_bits(), old.loss_sum.to_bits(), "g{gi} L{layers}");
+                assert_eq!(new.weight_sum.to_bits(), old.weight_sum.to_bits());
+                assert_eq!(new.correct.to_bits(), old.correct.to_bits());
+                assert_eq!(new.grads.len(), old.grads.len());
+                for (pi, (a, b)) in new.grads.iter().zip(&old.grads).enumerate() {
+                    let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                    let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(ab, bb, "g{gi} L{layers} grad {pi}");
+                }
+            }
         }
     }
 
@@ -536,17 +937,21 @@ mod tests {
         let labels = batch.tensors[5].as_i32().to_vec();
         let tmask = batch.tensors[6].as_f32().to_vec();
         let n = batch.n_pad;
-        let loss_of = |p: &ParamSet| -> f64 {
-            let st = forward(&cfg, p, &feat, &emask, &csr, n);
-            loss_and_grad(&cfg, st.logits(), &dar, &labels, &tmask, n).loss_sum
+        let mut ws = SageWorkspace::new(&cfg, n);
+        let loss_of = |p: &ParamSet, ws: &mut SageWorkspace| -> f64 {
+            forward_into(&cfg, p, &feat, &emask, &csr, n, ws);
+            loss_grad_into(&cfg, &dar, &labels, &tmask, n, ws).0
         };
-        let st = forward(&cfg, &params, &feat, &emask, &csr, n);
-        let lo = loss_and_grad(&cfg, st.logits(), &dar, &labels, &tmask, n);
-        let grads = backward(&cfg, &params, &st, &feat, lo.dlogits, &emask, &csr);
+        forward_into(&cfg, &params, &feat, &emask, &csr, n, &mut ws);
+        let _ = loss_grad_into(&cfg, &dar, &labels, &tmask, n, &mut ws);
+        let mut grads: Vec<Vec<f32>> =
+            params.data.iter().map(|p| vec![0f32; p.len()]).collect();
+        backward_into(&cfg, &params, &feat, &emask, &csr, n, &mut ws, &mut grads);
         assert_eq!(grads.len(), params.data.len());
         let eps = 2e-2f32;
         let (mut num_sq, mut diff_sq) = (0f64, 0f64);
         let mut checked = 0usize;
+        let mut ws2 = SageWorkspace::new(&cfg, n);
         for pi in 0..params.data.len() {
             // Probe a spread of entries in every parameter tensor.
             let len = params.data[pi].len();
@@ -554,9 +959,9 @@ mod tests {
             for ei in (0..len).step_by(step) {
                 let orig = params.data[pi][ei];
                 params.data[pi][ei] = orig + eps;
-                let lp = loss_of(&params);
+                let lp = loss_of(&params, &mut ws2);
                 params.data[pi][ei] = orig - eps;
-                let lm = loss_of(&params);
+                let lm = loss_of(&params, &mut ws2);
                 params.data[pi][ei] = orig;
                 let numeric = (lp - lm) / (2.0 * eps as f64);
                 let analytic = grads[pi][ei] as f64;
@@ -581,15 +986,9 @@ mod tests {
     fn backward_bit_identical_across_thread_counts() {
         let (cfg, params, batch) = setup(3, 82);
         let csr = batch_csr(&batch);
-        let feat = batch.tensors[0].as_f32();
         let emask = batch.emask().as_f32();
-        let dar = batch.tensors[4].as_f32();
-        let labels = batch.tensors[5].as_i32();
-        let tmask = batch.tensors[6].as_f32();
         let run = || {
-            let st = forward(&cfg, &params, feat, emask, &csr, batch.n_pad);
-            let lo = loss_and_grad(&cfg, st.logits(), dar, labels, tmask, batch.n_pad);
-            backward(&cfg, &params, &st, feat, lo.dlogits, emask, &csr)
+            super::super::train_step(&cfg, &params, &batch, &csr, emask).grads
         };
         let base = run();
         for threads in [1usize, 2, 8] {
@@ -606,13 +1005,12 @@ mod tests {
         // works with the swapped-in empty mask.
         let (cfg, params, batch) = setup(1, 83);
         let csr = batch_csr(&batch);
-        let feat = batch.tensors[0].as_f32();
         let zeros = vec![0f32; batch.e_pad];
-        let st = forward(&cfg, &params, feat, &zeros, &csr, batch.n_pad);
-        for denom in &st.denoms[0][..batch.n_used] {
+        let ws = ws_forward(&cfg, &params, &batch, &csr, &zeros);
+        for denom in &ws.denoms[0][..batch.n_used] {
             assert_eq!(*denom, 1e-9);
         }
-        for v in &st.aggs[0] {
+        for v in &ws.aggs[0] {
             assert_eq!(*v, 0.0);
         }
     }

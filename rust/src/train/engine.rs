@@ -33,7 +33,7 @@ use super::optimizer::{Adam, Optimizer, Sgd};
 use super::tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, TrainBatch};
 use crate::graph::Dataset;
 use crate::partition::{dar_weights, Reweighting, VertexCut};
-use crate::runtime::{ArtifactKind, ModelConfig, ParamSet};
+use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, TrainOut};
 use crate::train::cpu::CpuBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
@@ -44,7 +44,7 @@ use std::time::Instant;
 use {
     super::dropedge::MaskBank,
     super::tensorize::EvalBatch,
-    crate::runtime::{Executor, Registry, RuntimeClient, TrainOut},
+    crate::runtime::{Executor, Registry, RuntimeClient},
     std::collections::HashMap,
     std::path::Path,
     std::rc::Rc,
@@ -351,26 +351,35 @@ impl<B: Backend> TrainEngine<B> {
         };
         let mut mask_rng = rng.fork(2);
         let mut rotate_rng = rng.fork(3);
+        // Epoch-level scratch, allocated once and reused every iteration:
+        // the worker selection, the pre-drawn mask picks, and the backend's
+        // output slots (whose `TrainOut` gradient tensors persist across
+        // epochs). Together with each worker's `SageWorkspace` arena this
+        // makes the steady-state epoch allocation-free — asserted by
+        // `tests/alloc_steady.rs` under a counting global allocator.
+        let mut selected: Vec<usize> = Vec::with_capacity(run.workers.len());
+        let mut picks: Vec<Option<usize>> = Vec::with_capacity(run.workers.len());
+        let mut outs: Vec<(TrainOut, f64)> = Vec::new();
+        history.epochs.reserve(cfg.epochs.saturating_sub(start_epoch));
         for epoch in 0..cfg.epochs {
             // Rotate mode: one random batch this epoch; AllParts: everyone.
-            let selected: Vec<usize> = match run.mode {
-                RunMode::AllParts => (0..run.workers.len()).collect(),
-                RunMode::Rotate => vec![rotate_rng.below(run.workers.len())],
-            };
+            selected.clear();
+            match run.mode {
+                RunMode::AllParts => selected.extend(0..run.workers.len()),
+                RunMode::Rotate => selected.push(rotate_rng.below(run.workers.len())),
+            }
             // Pre-draw DropEdge mask picks in worker order so the RNG stream
             // (and therefore the whole trajectory) does not depend on how
             // the backend schedules the workers.
-            let picks: Vec<Option<usize>> = selected
-                .iter()
-                .map(|&wi| {
-                    let nm = run.meta[wi].num_masks;
-                    if nm > 0 {
-                        Some(mask_rng.below(nm))
-                    } else {
-                        None
-                    }
-                })
-                .collect();
+            picks.clear();
+            picks.extend(selected.iter().map(|&wi| {
+                let nm = run.meta[wi].num_masks;
+                if nm > 0 {
+                    Some(mask_rng.below(nm))
+                } else {
+                    None
+                }
+            }));
             if epoch < start_epoch {
                 // Resumed epoch: the draws above already advanced the RNG
                 // streams; the compute itself is in the checkpoint.
@@ -378,7 +387,7 @@ impl<B: Backend> TrainEngine<B> {
             }
             acc.reset();
             let t0 = Instant::now();
-            let outs = self.backend.run_workers(&run.workers, &selected, &picks, &params)?;
+            self.backend.run_workers(&run.workers, &selected, &picks, &params, &mut outs)?;
             timer.add("execute", t0.elapsed());
             // The only cross-worker traffic: sum gradients, in worker order.
             let t1 = Instant::now();
@@ -506,7 +515,11 @@ impl TrainEngine<XlaBackend> {
 
 #[cfg(feature = "xla")]
 impl XlaBackend {
-    /// Compile-or-fetch an executor for an artifact.
+    /// Compile-or-fetch an executor for an artifact. The registry lookup
+    /// stays borrowed (the pre-PR code cloned the whole `ArtifactSpec` —
+    /// name, model, paths — on every call just to appease the borrow
+    /// checker); the spec is only cloned once, inside `Executor::compile`,
+    /// on the cache-miss path, and cache hits hand out an `Rc` handle.
     fn executor(
         &mut self,
         model: &ModelConfig,
@@ -514,12 +527,12 @@ impl XlaBackend {
         n: usize,
         e: usize,
     ) -> Result<Rc<Executor>> {
-        let spec = self.registry.find(model, kind, n, e)?.clone();
+        let spec = self.registry.find(model, kind, n, e)?;
         if let Some(exe) = self.cache.get(&spec.name) {
-            return Ok(exe.clone());
+            return Ok(Rc::clone(exe));
         }
-        let exe = Rc::new(Executor::compile(&self.rt, &spec)?);
-        self.cache.insert(spec.name.clone(), exe.clone());
+        let exe = Rc::new(Executor::compile(&self.rt, spec)?);
+        self.cache.insert(spec.name.clone(), Rc::clone(&exe));
         Ok(exe)
     }
 }
@@ -583,10 +596,14 @@ impl Backend for XlaBackend {
         selected: &[usize],
         picks: &[Option<usize>],
         params: &ParamSet,
-    ) -> Result<Vec<(TrainOut, f64)>> {
+        outs: &mut Vec<(TrainOut, f64)>,
+    ) -> Result<()> {
         // One device: workers execute sequentially; each step is timed
-        // individually so the engine can report max_i(compute_i).
-        let mut outs = Vec::with_capacity(selected.len());
+        // individually so the engine can report max_i(compute_i). (The PJRT
+        // result tuples are freshly allocated by the runtime either way, so
+        // this backend refills `outs` rather than recycling its slots.)
+        outs.clear();
+        outs.reserve(selected.len());
         for (&wi, pick) in selected.iter().zip(picks) {
             let w = &workers[wi];
             let t0 = Instant::now();
@@ -602,7 +619,7 @@ impl Backend for XlaBackend {
             let _ = &w.batch; // keep host copy alive alongside device buffers
             outs.push((out, t0.elapsed().as_secs_f64()));
         }
-        Ok(outs)
+        Ok(())
     }
 
     fn evaluate(&self, eval: &EvalSetup, params: &ParamSet, split: usize) -> Result<f64> {

@@ -25,6 +25,7 @@ pub mod optimizer;
 pub mod reference;
 pub mod sampling;
 pub mod tensorize;
+pub mod workspace;
 
 pub use backend::{Backend, WorkerMeta};
 pub use bucket::bucket_shapes;
@@ -37,3 +38,4 @@ pub use engine::{XlaBackend, XlaEngine};
 pub use metrics::{EpochStats, History};
 pub use optimizer::{Adam, Optimizer, OptimizerState, Sgd};
 pub use tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch};
+pub use workspace::SageWorkspace;

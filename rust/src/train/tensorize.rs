@@ -81,15 +81,42 @@ fn directed_edges(local: &Graph, e_pad: usize) -> Result<(Vec<i32>, Vec<i32>, Ve
     Ok((src, dst, emask, e_used))
 }
 
-fn gather_rows(nd: &NodeData, ids: &[u32], n_pad: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
+/// Borrowed view of per-node supervision data — the zero-copy twin of
+/// [`NodeData`], so the mmap-backed shard path can tensorize straight out
+/// of the page cache without first materializing owned vectors.
+#[derive(Clone, Copy)]
+pub struct NodeDataRef<'a> {
+    /// Row-major `[n, dim]`.
+    pub features: &'a [f32],
+    pub dim: usize,
+    pub labels: &'a [u32],
+    pub num_classes: usize,
+    /// 0 = train, 1 = val, 2 = test.
+    pub split: &'a [u8],
+}
+
+impl<'a> From<&'a NodeData> for NodeDataRef<'a> {
+    fn from(nd: &'a NodeData) -> NodeDataRef<'a> {
+        NodeDataRef {
+            features: &nd.features,
+            dim: nd.dim,
+            labels: &nd.labels,
+            num_classes: nd.num_classes,
+            split: &nd.split,
+        }
+    }
+}
+
+fn gather_rows(nd: NodeDataRef<'_>, ids: &[u32], n_pad: usize) -> (Vec<f32>, Vec<i32>, Vec<f32>) {
     let d = nd.dim;
     let mut feat = vec![0f32; n_pad * d];
     let mut labels = vec![0i32; n_pad];
     let mut tmask = vec![0f32; n_pad];
     for (l, &gid) in ids.iter().enumerate() {
-        feat[l * d..(l + 1) * d].copy_from_slice(nd.feature(gid));
-        labels[l] = nd.labels[gid as usize] as i32;
-        tmask[l] = if nd.split[gid as usize] == 0 { 1.0 } else { 0.0 };
+        let g = gid as usize;
+        feat[l * d..(l + 1) * d].copy_from_slice(&nd.features[g * d..(g + 1) * d]);
+        labels[l] = nd.labels[g] as i32;
+        tmask[l] = if nd.split[g] == 0 { 1.0 } else { 0.0 };
     }
     (feat, labels, tmask)
 }
@@ -112,6 +139,20 @@ pub fn tensorize_subgraph(
     global_ids: &[u32],
     local: &Graph,
     nd: &NodeData,
+    node_w: &[f32],
+    n_pad: usize,
+    e_pad: usize,
+) -> Result<TrainBatch> {
+    tensorize_subgraph_ref(global_ids, local, nd.into(), node_w, n_pad, e_pad)
+}
+
+/// [`tensorize_subgraph`] over borrowed node data (the mmap-backed shard
+/// path) — byte-identical output for identical inputs, whatever they are
+/// backed by.
+pub fn tensorize_subgraph_ref(
+    global_ids: &[u32],
+    local: &Graph,
+    nd: NodeDataRef<'_>,
     node_w: &[f32],
     n_pad: usize,
     e_pad: usize,
@@ -153,7 +194,7 @@ pub fn tensorize_full_train(g: &Graph, nd: &NodeData, n_pad: usize, e_pad: usize
     ensure!(n_used <= n_pad);
     let d = nd.dim;
     let ids: Vec<u32> = (0..n_used as u32).collect();
-    let (feat, labels, tmask) = gather_rows(nd, &ids, n_pad);
+    let (feat, labels, tmask) = gather_rows(nd.into(), &ids, n_pad);
     let (src, dst, emask, e_used) = directed_edges(g, e_pad)?;
     let mut dar = vec![0f32; n_pad];
     dar[..n_used].fill(1.0);
@@ -182,7 +223,7 @@ pub fn tensorize_full_eval(g: &Graph, nd: &NodeData, n_pad: usize, e_pad: usize)
     ensure!(n_used <= n_pad);
     let d = nd.dim;
     let ids: Vec<u32> = (0..n_used as u32).collect();
-    let (feat, labels, _) = gather_rows(nd, &ids, n_pad);
+    let (feat, labels, _) = gather_rows(nd.into(), &ids, n_pad);
     let (src, dst, emask, _) = directed_edges(g, e_pad)?;
     let mut masks = [vec![0f32; n_pad], vec![0f32; n_pad], vec![0f32; n_pad]];
     for v in 0..n_used {

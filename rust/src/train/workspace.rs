@@ -1,0 +1,147 @@
+//! The per-worker workspace arena: every buffer the steady-state epoch
+//! hot loop touches, allocated **once** at engine setup and reused for the
+//! life of the worker.
+//!
+//! Before this arena existed, one native train step heap-allocated every
+//! intermediate — per-layer activations, aggregates, denominators, the
+//! logits gradient, four backward scratch matrices and the gradient
+//! tensors themselves — some `4·L + 8` fresh `Vec`s per partition per
+//! epoch. [`SageWorkspace`] owns all of them at their exact padded sizes;
+//! `sage::forward_into` / `loss_grad_into` / `backward_into` overwrite
+//! them in place, and the engine reuses its epoch-level scratch
+//! (`selected`, `picks`, the `TrainOut` slots) the same way, so a
+//! steady-state epoch performs **zero heap allocations**. That claim is a
+//! test, not a comment: `tests/alloc_steady.rs` installs a counting global
+//! allocator and asserts the allocation count of a training run is
+//! independent of the epoch count.
+//!
+//! The arena is plain data — no interior mutability. Each `CpuWorker`
+//! wraps its workspace in a `Mutex` (uncontended: every worker is visited
+//! exactly once per epoch) so `run_workers` can fill workspaces from a
+//! `&self` rayon loop.
+
+use crate::runtime::{ModelConfig, TrainOut};
+
+/// All per-step temporaries of the native GraphSAGE forward + backward for
+/// one padded batch of `n` rows, preallocated at exact sizes.
+///
+/// Buffer lifetimes across one `train_step_into`:
+///
+/// * forward fills `outs[l]`, `msgs[l]`, `aggs[l]`, `denoms[l]` per layer;
+/// * the loss writes the logits gradient into the front of `dbuf_a` and
+///   the per-node partials into `per_node`;
+/// * backward reads the current upstream gradient from `dbuf_a`, scatters
+///   through `dagg`/`dmsg`, writes the next layer's input gradient into
+///   `dbuf_b` (+ `dh_msg`), then ping-pongs the two `dbuf`s — a pointer
+///   swap, never a copy.
+pub struct SageWorkspace {
+    /// Padded row count this workspace was sized for.
+    pub n: usize,
+    /// `outs[l]` = output of layer `l` (`[n, hidden]`, last `[n, classes]`).
+    pub outs: Vec<Vec<f32>>,
+    /// Post-ReLU messages per layer, `[n, hidden]`.
+    pub msgs: Vec<Vec<f32>>,
+    /// Aggregated (weighted-mean) neighbor messages per layer.
+    pub aggs: Vec<Vec<f32>>,
+    /// Per-node mean denominators `max(Σ w, 1e-9)` per layer.
+    pub denoms: Vec<Vec<f32>>,
+    /// Per-node `(weighted loss, weight, correct)` partials of the loss.
+    pub per_node: Vec<(f64, f64, f64)>,
+    /// Upstream-gradient ping buffer, `[n, max(hidden, classes)]`. Holds
+    /// the logits gradient when backward starts.
+    pub dbuf_a: Vec<f32>,
+    /// Upstream-gradient pong buffer, same size as `dbuf_a`.
+    pub dbuf_b: Vec<f32>,
+    /// Gradient flowing into the aggregation half of the concat, `[n, hidden]`.
+    pub dagg: Vec<f32>,
+    /// Gradient w.r.t. the pre-aggregation messages, `[n, hidden]`.
+    pub dmsg: Vec<f32>,
+    /// Scratch for the message half of the input gradient, `[n, hidden]`.
+    pub dh_msg: Vec<f32>,
+}
+
+impl SageWorkspace {
+    /// Allocate every buffer for a `cfg` model over `n` padded rows.
+    pub fn new(cfg: &ModelConfig, n: usize) -> SageWorkspace {
+        let h = cfg.hidden;
+        let dmax = cfg.hidden.max(cfg.classes);
+        let mut outs = Vec::with_capacity(cfg.layers);
+        let mut msgs = Vec::with_capacity(cfg.layers);
+        let mut aggs = Vec::with_capacity(cfg.layers);
+        let mut denoms = Vec::with_capacity(cfg.layers);
+        for l in 0..cfg.layers {
+            let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+            outs.push(vec![0f32; n * d_out]);
+            msgs.push(vec![0f32; n * h]);
+            aggs.push(vec![0f32; n * h]);
+            denoms.push(vec![0f32; n]);
+        }
+        SageWorkspace {
+            n,
+            outs,
+            msgs,
+            aggs,
+            denoms,
+            per_node: vec![(0.0, 0.0, 0.0); n],
+            dbuf_a: vec![0f32; n * dmax],
+            dbuf_b: vec![0f32; n * dmax],
+            dagg: vec![0f32; n * h],
+            dmsg: vec![0f32; n * h],
+            dh_msg: vec![0f32; n * h],
+        }
+    }
+
+    /// The logits of the last completed forward pass.
+    pub fn logits(&self) -> &[f32] {
+        self.outs.last().expect("forward_into ran")
+    }
+}
+
+/// Size `out`'s gradient tensors to `cfg.param_shapes()` without
+/// reallocating when they already match (the steady-state case). The
+/// values are left untouched — `backward_into` overwrites every element.
+pub fn ensure_grad_shapes(cfg: &ModelConfig, out: &mut TrainOut) {
+    let shapes = cfg.param_shapes();
+    if out.grads.len() != shapes.len() {
+        out.grads.resize_with(shapes.len(), Vec::new);
+    }
+    for (g, shape) in out.grads.iter_mut().zip(&shapes) {
+        let len: usize = shape.iter().product();
+        if g.len() != len {
+            g.resize(len, 0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_sizes_match_model() {
+        let cfg = ModelConfig { layers: 3, feat_dim: 6, hidden: 8, classes: 4 };
+        let ws = SageWorkspace::new(&cfg, 32);
+        assert_eq!(ws.outs.len(), 3);
+        assert_eq!(ws.outs[0].len(), 32 * 8);
+        assert_eq!(ws.outs[2].len(), 32 * 4);
+        assert_eq!(ws.msgs[1].len(), 32 * 8);
+        assert_eq!(ws.denoms[0].len(), 32);
+        assert_eq!(ws.dbuf_a.len(), 32 * 8);
+        assert_eq!(ws.per_node.len(), 32);
+    }
+
+    #[test]
+    fn ensure_grad_shapes_is_idempotent_and_preserves_allocations() {
+        let cfg = ModelConfig { layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
+        let mut out = TrainOut { loss_sum: 0.0, weight_sum: 0.0, correct: 0.0, grads: Vec::new() };
+        ensure_grad_shapes(&cfg, &mut out);
+        assert_eq!(out.grads.len(), cfg.param_shapes().len());
+        for (g, s) in out.grads.iter().zip(cfg.param_shapes()) {
+            assert_eq!(g.len(), s.iter().product::<usize>());
+        }
+        let ptrs: Vec<*const f32> = out.grads.iter().map(|g| g.as_ptr()).collect();
+        ensure_grad_shapes(&cfg, &mut out);
+        let ptrs2: Vec<*const f32> = out.grads.iter().map(|g| g.as_ptr()).collect();
+        assert_eq!(ptrs, ptrs2, "second sizing must not reallocate");
+    }
+}

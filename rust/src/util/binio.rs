@@ -161,14 +161,23 @@ pub fn read_bytes(r: &mut impl Read) -> Result<Vec<u8>> {
     Ok(buf)
 }
 
-/// Write a length-prefixed u32 slice (little-endian).
+/// Chunk size (in 4-byte elements) of the stack staging buffer the slice
+/// writers use: big enough to amortize `write_all` call overhead, small
+/// enough to live on the stack — the writers allocate nothing, which is
+/// load-bearing for the allocation-free epoch loop (the wire protocol
+/// serializes parameter tensors through these on every step).
+const WRITE_CHUNK: usize = 1024;
+
+/// Write a length-prefixed u32 slice (little-endian). Heap-allocation-free.
 pub fn write_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
     write_u64(w, xs.len() as u64)?;
-    let mut buf = Vec::with_capacity(xs.len() * 4);
-    for &x in xs {
-        buf.extend_from_slice(&x.to_le_bytes());
+    let mut buf = [0u8; WRITE_CHUNK * 4];
+    for chunk in xs.chunks(WRITE_CHUNK) {
+        for (slot, &x) in buf.chunks_exact_mut(4).zip(chunk.iter()) {
+            slot.copy_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf[..chunk.len() * 4])?;
     }
-    w.write_all(&buf)?;
     Ok(())
 }
 
@@ -182,13 +191,16 @@ pub fn read_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
 
 /// Write a length-prefixed f32 slice (little-endian bit patterns — the
 /// round trip is bit-exact, NaNs and signed zeros included).
+/// Heap-allocation-free.
 pub fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
     write_u64(w, xs.len() as u64)?;
-    let mut buf = Vec::with_capacity(xs.len() * 4);
-    for &x in xs {
-        buf.extend_from_slice(&x.to_le_bytes());
+    let mut buf = [0u8; WRITE_CHUNK * 4];
+    for chunk in xs.chunks(WRITE_CHUNK) {
+        for (slot, &x) in buf.chunks_exact_mut(4).zip(chunk.iter()) {
+            slot.copy_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf[..chunk.len() * 4])?;
     }
-    w.write_all(&buf)?;
     Ok(())
 }
 

@@ -1,0 +1,176 @@
+//! Minimal read-only memory mapping, dependency-free.
+//!
+//! The crate vendors no `libc`/`memmap2`, so on unix targets this module
+//! declares the two C-runtime symbols it needs (`mmap`, `munmap`) directly
+//! — they are part of the platform libc every Rust unix target already
+//! links. Non-unix targets (and any mapping failure) fall back to reading
+//! the whole file into an owned buffer, so callers get the same `&[u8]`
+//! view everywhere and zero-copy where the platform allows it.
+//!
+//! Used by the shard store (`dist/shard.rs`): a worker process maps its
+//! shard and borrows the feature/label/weight arrays straight out of the
+//! page cache instead of streaming them through intermediate heap copies.
+//!
+//! Safety note: the mapping is `MAP_PRIVATE`/`PROT_READ` over a regular
+//! file. As with every mmap-based reader, truncating the file while it is
+//! mapped can fault the process; shards are immutable artifacts written
+//! once by `cofree shard`, so this is the standard trade and is called out
+//! in the shard-store docs.
+
+use anyhow::{Context, Result};
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+/// The raw-syscall path is gated on 64-bit unix: `off_t` is only
+/// guaranteed to be `i64` there, and declaring the symbol with the wrong
+/// width on a 32-bit libc would be an ABI mismatch, not a graceful
+/// fallback. Everything else takes the owned-read path.
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod sys {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        // int is i32 and off_t is i64 on every Rust-supported 64-bit unix.
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// A read-only view of a whole file: memory-mapped where possible, owned
+/// bytes otherwise. Deref to `&[u8]` via [`Mmap::bytes`].
+pub struct Mmap {
+    inner: Inner,
+}
+
+enum Inner {
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mapped {
+        ptr: *const u8,
+        len: usize,
+    },
+    Owned(Vec<u8>),
+}
+
+// The mapping is immutable for its whole lifetime (PROT_READ, private),
+// so sharing the view across threads is as safe as sharing a &[u8].
+unsafe impl Send for Mmap {}
+unsafe impl Sync for Mmap {}
+
+impl Mmap {
+    /// Map `path` read-only (falling back to an owned read when mapping is
+    /// unavailable). Returns the view plus whether it is truly mapped.
+    pub fn open(path: &Path) -> Result<Mmap> {
+        let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {path:?}"))?
+            .len() as usize;
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            use std::os::unix::io::AsRawFd;
+            if len > 0 {
+                let ptr = unsafe {
+                    sys::mmap(
+                        std::ptr::null_mut(),
+                        len,
+                        sys::PROT_READ,
+                        sys::MAP_PRIVATE,
+                        file.as_raw_fd(),
+                        0,
+                    )
+                };
+                // MAP_FAILED is (void*)-1.
+                if ptr as isize != -1 && !ptr.is_null() {
+                    return Ok(Mmap { inner: Inner::Mapped { ptr: ptr as *const u8, len } });
+                }
+            }
+        }
+        let mut buf = Vec::with_capacity(len);
+        file.read_to_end(&mut buf).with_context(|| format!("read {path:?}"))?;
+        Ok(Mmap { inner: Inner::Owned(buf) })
+    }
+
+    /// The file contents.
+    pub fn bytes(&self) -> &[u8] {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Inner::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Inner::Owned(v) => v,
+        }
+    }
+
+    /// Whether this view is a true memory mapping (false = owned fallback).
+    pub fn is_mapped(&self) -> bool {
+        match &self.inner {
+            #[cfg(all(unix, target_pointer_width = "64"))]
+            Inner::Mapped { .. } => true,
+            Inner::Owned(_) => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Inner::Mapped { ptr, len } = &self.inner {
+            unsafe {
+                sys::munmap(*ptr as *mut std::ffi::c_void, *len);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn maps_file_contents() {
+        let path = std::env::temp_dir().join(format!("cofree_mmap_{}.bin", std::process::id()));
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::File::create(&path).unwrap().write_all(&data).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert_eq!(map.len(), data.len());
+        assert_eq!(map.bytes(), &data[..]);
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(map.is_mapped(), "64-bit unix targets should get a real mapping");
+        drop(map);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_falls_back_to_owned() {
+        let path =
+            std::env::temp_dir().join(format!("cofree_mmap_empty_{}.bin", std::process::id()));
+        std::fs::File::create(&path).unwrap();
+        let map = Mmap::open(&path).unwrap();
+        assert!(map.is_empty());
+        assert!(!map.is_mapped());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Mmap::open(Path::new("/nonexistent/cofree.bin")).is_err());
+    }
+}

@@ -3,6 +3,7 @@
 
 pub mod binio;
 pub mod logging;
+pub mod mmap;
 pub mod rng;
 pub mod timer;
 

@@ -1,0 +1,149 @@
+//! The zero-allocation steady-state epoch contract, enforced by a
+//! counting global allocator.
+//!
+//! The workspace arena (`train/workspace.rs`), the engine's epoch-level
+//! scratch (`selected`/`picks`/output slots) and the in-place kernels are
+//! supposed to make every epoch after warm-up perform **zero heap
+//! allocations**. Measuring "allocations per epoch" directly is brittle
+//! (setup, one-time pool warm-up and teardown all allocate), so the test
+//! asserts the equivalent fixed point: the total allocation count of a
+//! training run is **independent of the epoch count**. Two identical runs
+//! that differ only in `epochs` (4 vs 24) must allocate exactly the same
+//! number of times — if any per-epoch allocation sneaks back in, the long
+//! run exceeds the short one by ≥ 20× that leak and the assert names the
+//! delta.
+//!
+//! The measured runs execute inside a single-thread rayon pool so the
+//! count does not depend on which pool thread happens to first-touch its
+//! work queues; a discarded warm-up run absorbs every one-time global
+//! initialization (logger, pool deques, lazy statics). Multithreaded
+//! bit-parity is covered separately by `tests/train_native.rs`.
+
+use cofree_gnn::graph::datasets;
+use cofree_gnn::partition::{algorithm, Reweighting, VertexCut};
+use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
+use cofree_gnn::util::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_epoch_allocates_nothing() {
+    let pool = rayon::ThreadPoolBuilder::new().num_threads(1).build().unwrap();
+    pool.install(|| {
+        // ~400 nodes / 2 partitions with DropEdge-K in play, so the epoch
+        // loop exercises mask picks, the workspace forward/backward and
+        // the gradient fold.
+        let ds = datasets::build("yelp-sim", 0.04, 7).unwrap();
+        let vc = VertexCut::create(
+            &ds.graph,
+            2,
+            algorithm("dbh").unwrap().as_ref(),
+            &mut Rng::new(11),
+        );
+        let run_with = |epochs: usize| -> u64 {
+            let mut engine = TrainEngine::native();
+            let mut run = engine
+                .prepare_partitions(&ds, &vc, Reweighting::Dar, Some((3, 0.4)), 11)
+                .unwrap();
+            let cfg = TrainConfig {
+                epochs,
+                eval_every: 0,
+                dropedge: Some((3, 0.4)),
+                seed: 11,
+                log_every: 0,
+                ..Default::default()
+            };
+            let before = alloc_count();
+            let (history, _params, _timer) = engine.train(&mut run, None, &cfg).unwrap();
+            assert_eq!(history.epochs.len(), epochs);
+            before_to_now(before)
+        };
+        // Warm-up run: absorbs one-time process-global allocations (deque
+        // growth, lazy statics) so the two measured runs are identical
+        // workloads.
+        let _ = run_with(4);
+        let short = run_with(4);
+        let long = run_with(24);
+        assert_eq!(
+            short, long,
+            "20 extra epochs performed {} extra heap allocations — the \
+             steady-state epoch is supposed to perform zero (short run: {short})",
+            long.saturating_sub(short)
+        );
+    });
+}
+
+fn before_to_now(before: u64) -> u64 {
+    alloc_count() - before
+}
+
+/// The compute core alone (no engine, no optimizer): repeated
+/// `train_step_into` through one workspace must not allocate at all after
+/// the first call established shapes.
+#[test]
+fn train_step_into_is_allocation_free_after_warmup() {
+    use cofree_gnn::runtime::{ParamSet, TrainOut};
+    use cofree_gnn::train::cpu::{self, EdgeCsr};
+    use cofree_gnn::train::engine::model_config;
+    use cofree_gnn::train::tensorize::tensorize_partition;
+    use cofree_gnn::train::workspace::SageWorkspace;
+    use cofree_gnn::partition::dar_weights;
+
+    let pool = rayon::ThreadPoolBuilder::new().num_threads(1).build().unwrap();
+    pool.install(|| {
+        let ds = datasets::build("yelp-sim", 0.04, 7).unwrap();
+        let model = model_config(&ds);
+        let vc = VertexCut::create(
+            &ds.graph,
+            2,
+            algorithm("dbh").unwrap().as_ref(),
+            &mut Rng::new(5),
+        );
+        let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+        let batch = tensorize_partition(&vc.parts[0], &ds.data, &weights[0], 512, 8192).unwrap();
+        let csr = EdgeCsr::from_batch(&batch);
+        let params = ParamSet::init_glorot(&model, &mut Rng::new(6));
+        let mut ws = SageWorkspace::new(&model, batch.n_pad);
+        let mut out = TrainOut::default();
+        let emask = batch.emask().as_f32();
+        // Warm-up: establishes gradient shapes and any lazy pool state.
+        for _ in 0..3 {
+            cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws, &mut out);
+        }
+        let before = alloc_count();
+        for _ in 0..10 {
+            cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws, &mut out);
+        }
+        let delta = alloc_count() - before;
+        assert_eq!(delta, 0, "10 steady-state train steps allocated {delta} times");
+    });
+}

@@ -136,6 +136,24 @@ fn four_process_training_matches_inproc_bitwise() {
     assert_eq!(stats.num_workers, 4);
 }
 
+/// The overlapped collect path (broadcast to all, then readiness-poll the
+/// results as they arrive) must keep the trajectory bit-identical even
+/// with an odd worker count, skewed shard sizes (dbh on a power-law graph)
+/// and DropEdge picks in play — results land by rank however the sockets
+/// drain, and the fold stays in rank order.
+#[test]
+fn overlapped_collect_with_uneven_workers_matches_inproc_bitwise() {
+    let (p, seed, epochs) = (3usize, 41u64, 5usize);
+    let dropedge = Some((2usize, 0.3f64));
+    let (h_in, params_in) = run_inproc(p, seed, dropedge, epochs);
+    let (h_proc, params_proc, stats) =
+        run_proc(p, seed, dropedge, epochs, Transport::Tcp, "uneven");
+    assert_trajectories_identical(&h_in, &h_proc);
+    assert_eq!(params_in.data, params_proc.data, "final parameters diverged");
+    assert_eq!(stats.num_workers, 3);
+    assert_eq!(stats.epochs_run, epochs);
+}
+
 /// Unix-domain sockets carry the same bits as TCP.
 #[cfg(unix)]
 #[test]
