@@ -20,13 +20,13 @@ use cofree_gnn::graph::features::{synthesize, FeatureParams};
 use cofree_gnn::graph::generators::{chung_lu_pairs, power_law_degrees, rmat_pairs, RmatParams};
 use cofree_gnn::graph::{Dataset, GraphBuilder};
 use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
-use cofree_gnn::runtime::{ModelConfig, ParamSet, TrainOut};
+use cofree_gnn::runtime::{ModelConfig, ModelKind, ParamSet, TrainOut};
 use cofree_gnn::train::bucket::pad_explicit;
 use cofree_gnn::train::cpu::{self, sage::EdgeCsr};
 use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
 use cofree_gnn::train::reference;
 use cofree_gnn::train::tensorize::{tensorize_partition, TrainBatch};
-use cofree_gnn::train::workspace::SageWorkspace;
+use cofree_gnn::train::workspace::ModelWorkspace;
 use cofree_gnn::util::rng::Rng;
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -86,7 +86,8 @@ fn main() {
         .filter_map(|s| s.trim().parse().ok())
         .filter(|&p| p >= 1)
         .collect();
-    let model = ModelConfig { layers: 2, feat_dim: 64, hidden: 64, classes: 16 };
+    let model =
+        ModelConfig { kind: ModelKind::Sage, layers: 2, feat_dim: 64, hidden: 64, classes: 16 };
 
     println!("== bench_train: reference forward vs native backend ==");
     println!(
@@ -160,8 +161,8 @@ fn main() {
                 }
             });
             // Native packed forward over all partitions (persistent arenas).
-            let mut workspaces: Vec<SageWorkspace> =
-                setups.iter().map(|s| SageWorkspace::new(&model, s.batch.n_pad)).collect();
+            let mut workspaces: Vec<ModelWorkspace> =
+                setups.iter().map(|s| ModelWorkspace::new(&model, s.batch.n_pad)).collect();
             let fwd_new_s = timed(iters, || {
                 for (s, ws) in setups.iter().zip(workspaces.iter_mut()) {
                     cpu::sage::forward_into(

@@ -8,7 +8,8 @@
 //! cofree worker           --shard shards/shard_0003.bin --connect 127.0.0.1:9000
 //! cofree emit-bucket-spec [--out python/compile/buckets.spec]
 //! cofree train            --dataset products-sim --partitions 4 [--algo ne]
-//!                         [--backend native|xla] [--reweight dar|inv|none]
+//!                         [--model sage|gcn|gin] [--backend native|xla]
+//!                         [--reweight dar|inv|none]
 //!                         [--transport inproc|proc] [--workers N]
 //!                         [--save-model m.bin] [--load-model m.bin]
 //!                         [--epochs N] [--lr F]
@@ -25,6 +26,7 @@ use crate::train::backend::Backend;
 use crate::train::checkpoint::TrainCheckpoint;
 use crate::train::engine::{TrainConfig, TrainEngine};
 use crate::train::metrics::History;
+use crate::train::model::ModelKind;
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -87,7 +89,7 @@ USAGE:
   cofree worker --shard FILE --connect ADDR     (ADDR: host:port or unix:/path)
   cofree emit-bucket-spec [--out FILE]
   cofree train --dataset NAME --partitions P [--algo ne] [--reweight dar]
-               [--backend native|xla] [--epochs N] [--lr F]
+               [--model sage|gcn|gin] [--backend native|xla] [--epochs N] [--lr F]
                [--dropedge-k K --dropedge-ratio R]
                [--transport inproc|proc] [--workers N] [--shard-dir DIR]
                [--socket tcp|unix] [--worker-bin PATH]
@@ -100,6 +102,8 @@ USAGE:
 
 DATASETS:   reddit-sim, products-sim, yelp-sim, papers-sim
 ALGOS:      random, ne, dbh, hep, greedy (vertex cut); metis (edge cut)
+MODELS:     sage (GraphSAGE, default) | gcn | gin — every model trains on every
+            transport; the xla backend is sage-only (AOT artifacts)
 BACKENDS:   native (pure-Rust CPU, default) | xla (PJRT artifacts, needs --features xla)
 TRANSPORTS: inproc (default; rayon workers in one process) | proc (one worker
             process per shard; bit-identical trajectory to inproc)
@@ -285,6 +289,7 @@ fn run_train_proc(
     p: usize,
     algo_name: &str,
     rw: Reweighting,
+    kind: ModelKind,
     cfg: &TrainConfig,
     seed: u64,
     args: &Args,
@@ -334,7 +339,7 @@ fn run_train_proc(
             dir.display()
         );
     }
-    let opts = ProcOptions { transport, ..ProcOptions::new(worker_bin) };
+    let opts = ProcOptions { transport, model: kind, ..ProcOptions::new(worker_bin) };
     let result = dist::train_over_shards(ds, &dir, cfg, &opts, resume);
     if scratch {
         let _ = std::fs::remove_dir_all(&dir);
@@ -377,6 +382,9 @@ fn cmd_train(args: &Args) -> Result<i32> {
     let ratio: f64 = get("train.dropedge_ratio", "dropedge-ratio", "0.5").parse()?;
     let backend = get("train.backend", "backend", "native");
     let transport = get("train.transport", "transport", "inproc");
+    let model_name = get("train.model", "model", "sage");
+    let kind = ModelKind::parse(&model_name)
+        .with_context(|| format!("--model must be sage|gcn|gin, got {model_name:?}"))?;
     if k > 0 && !(0.0..1.0).contains(&ratio) {
         bail!("--dropedge-ratio must be in [0, 1), got {ratio}");
     }
@@ -399,7 +407,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
 
     let ds = datasets::build(&ds_name, scale, seed)?;
     crate::log_info!(
-        "training {ds_name} (n={} m={}) p={p} algo={algo_name} backend={backend} transport={transport} reweight={} dropedge={dropedge:?}",
+        "training {ds_name} (n={} m={}) p={p} model={model_name} algo={algo_name} backend={backend} transport={transport} reweight={} dropedge={dropedge:?}",
         ds.graph.num_nodes(),
         ds.graph.num_edges(),
         rw.name()
@@ -426,11 +434,17 @@ fn cmd_train(args: &Args) -> Result<i32> {
     let (history, checkpoint) = match transport.as_str() {
         "inproc" => match backend.as_str() {
             "native" | "cpu" => {
-                let mut engine = TrainEngine::native();
+                let mut engine = TrainEngine::native_model(kind);
                 run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed, resume)?
             }
             #[cfg(feature = "xla")]
             "xla" => {
+                if kind != ModelKind::Sage {
+                    bail!(
+                        "--backend xla only runs the sage model (the AOT artifacts \
+                         lower GraphSAGE); use the native backend for --model {model_name}"
+                    );
+                }
                 let artifacts = PathBuf::from(get("run.artifacts", "artifacts", "artifacts"));
                 let mut engine = TrainEngine::new(&artifacts)?;
                 run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed, resume)?
@@ -457,7 +471,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
                      runs one worker per partition (drop one of the flags)"
                 );
             }
-            run_train_proc(&ds, workers, &algo_name, rw, &cfg, seed, args, resume)?
+            run_train_proc(&ds, workers, &algo_name, rw, kind, &cfg, seed, args, resume)?
         }
         other => bail!("--transport must be inproc|proc, got {other:?}"),
     };
@@ -603,6 +617,45 @@ mod tests {
         ]))
         .unwrap();
         assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn train_command_runs_gcn_and_gin_models() {
+        // `--model gcn|gin` end-to-end through the CLI on the native
+        // backend (the tentpole's new scenarios).
+        for model in ["gcn", "gin"] {
+            let code = main(argv(&[
+                "train",
+                "--dataset",
+                "yelp-sim",
+                "--scale",
+                "0.04",
+                "--partitions",
+                "2",
+                "--algo",
+                "dbh",
+                "--model",
+                model,
+                "--epochs",
+                "3",
+            ]))
+            .unwrap();
+            assert_eq!(code, 0, "--model {model}");
+        }
+    }
+
+    #[test]
+    fn train_rejects_unknown_model() {
+        assert!(main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--model",
+            "transformer",
+        ]))
+        .is_err());
     }
 
     #[test]

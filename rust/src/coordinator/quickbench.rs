@@ -21,7 +21,10 @@
 //!
 //! Headline: `headline.native_epoch_speedup` — the acceptance number for
 //! the allocation-free SIMD epoch loop (old scalar epoch ÷ new epoch on
-//! the default bucket).
+//! the default bucket) — plus per-model epoch timings (`models.{sage,gcn,
+//! gin}.epoch_s`): the same engine-shaped epoch loop run once per
+//! `ModelKind` over the same partitions, so the cost of the model axis is
+//! tracked PR-over-PR alongside the kernel speedup.
 //!
 //! Knobs (flags on `cofree bench --quick`): `--edges N` (train/partition
 //! graph size, default 300k), `--dist-edges N` (default 60k), `--epochs E`
@@ -33,14 +36,14 @@ use crate::graph::features::{synthesize, FeatureParams};
 use crate::graph::generators::{rmat_pairs, RmatParams};
 use crate::graph::{Dataset, GraphBuilder};
 use crate::partition::{algorithm, dar_weights, Reweighting, VertexCut};
-use crate::runtime::{ModelConfig, ParamSet, TrainOut};
+use crate::runtime::{ModelConfig, ModelKind, ParamSet, TrainOut};
 use crate::train::allreduce::GradAccumulator;
 use crate::train::bucket::pad_explicit;
 use crate::train::cpu::{self, EdgeCsr};
 use crate::train::engine::TrainConfig;
 use crate::train::optimizer::{Adam, Optimizer};
 use crate::train::tensorize::{tensorize_partition, TrainBatch};
-use crate::train::workspace::SageWorkspace;
+use crate::train::workspace::ModelWorkspace;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
 use rayon::prelude::*;
@@ -136,7 +139,7 @@ fn scalar_epoch(
 fn new_epoch(
     model: &ModelConfig,
     setups: &[PartSetup],
-    workspaces: &[Mutex<SageWorkspace>],
+    workspaces: &[Mutex<ModelWorkspace>],
     outs: &mut [(TrainOut, f64)],
     params: &mut ParamSet,
     acc: &mut GradAccumulator,
@@ -165,7 +168,8 @@ fn new_epoch(
 }
 
 pub fn run(opts: &QuickOptions) -> Result<()> {
-    let model = ModelConfig { layers: 2, feat_dim: 64, hidden: 64, classes: 16 };
+    let model =
+        ModelConfig { kind: ModelKind::Sage, layers: 2, feat_dim: 64, hidden: 64, classes: 16 };
     println!("== cofree bench --quick: aggregate perf snapshot ==");
     println!(
         "edges={} dist_edges={} epochs={} parts={:?} rayon_threads={}",
@@ -226,7 +230,7 @@ pub fn run(opts: &QuickOptions) -> Result<()> {
             s0.batch.n_pad,
         )
     });
-    let mut ws0 = SageWorkspace::new(&model, s0.batch.n_pad);
+    let mut ws0 = ModelWorkspace::new(&model, s0.batch.n_pad);
     let fwd_new_s = timed(opts.epochs, || {
         cpu::sage::forward_into(
             &model,
@@ -279,9 +283,9 @@ pub fn run(opts: &QuickOptions) -> Result<()> {
     let epoch_old_s = timed(opts.epochs, || {
         scalar_epoch(&model, &setups, &mut params_old, &mut acc, &mut opt_old, scale)
     });
-    let workspaces: Vec<Mutex<SageWorkspace>> = setups
+    let workspaces: Vec<Mutex<ModelWorkspace>> = setups
         .iter()
-        .map(|s| Mutex::new(SageWorkspace::new(&model, s.batch.n_pad)))
+        .map(|s| Mutex::new(ModelWorkspace::new(&model, s.batch.n_pad)))
         .collect();
     let mut outs: Vec<(TrainOut, f64)> =
         (0..setups.len()).map(|_| (TrainOut::default(), 0.0)).collect();
@@ -321,6 +325,68 @@ pub fn run(opts: &QuickOptions) -> Result<()> {
     println!(
         "train: fwd {fwd_old_s:.3}s→{fwd_new_s:.3}s ({fwd_speedup:.2}x)  step {step_old_s:.3}s→{step_new_s:.3}s ({step_speedup:.2}x)  epoch {epoch_old_s:.3}s→{epoch_new_s:.3}s ({epoch_speedup:.2}x)  parity=ok"
     );
+
+    // Per-model epoch timings: the identical engine-shaped epoch loop over
+    // the same partitions and dims, once per architecture. The batches,
+    // EdgeCsr index and loss are shared; only the layer recipe changes.
+    let mut models_json = String::new();
+    for kind in ModelKind::ALL {
+        let mcfg = ModelConfig { kind, ..model };
+        let mparams0 = ParamSet::init_glorot(&mcfg, &mut Rng::new(4));
+        let mworkspaces: Vec<Mutex<ModelWorkspace>> = setups
+            .iter()
+            .map(|s| Mutex::new(ModelWorkspace::new(&mcfg, s.batch.n_pad)))
+            .collect();
+        let mut mouts: Vec<(TrainOut, f64)> =
+            (0..setups.len()).map(|_| (TrainOut::default(), 0.0)).collect();
+        let mut mparams = mparams0.clone();
+        let mut mopt = Adam::new(cfg.lr);
+        // Fresh accumulator per kind: reset() keeps gradient shapes, and
+        // the kinds' parameter arities differ.
+        let mut macc = GradAccumulator::new();
+        new_epoch(
+            &mcfg,
+            &setups,
+            &mworkspaces,
+            &mut mouts,
+            &mut mparams,
+            &mut macc,
+            &mut mopt,
+            scale,
+        );
+        let model_epoch_s = timed(opts.epochs, || {
+            new_epoch(
+                &mcfg,
+                &setups,
+                &mworkspaces,
+                &mut mouts,
+                &mut mparams,
+                &mut macc,
+                &mut mopt,
+                scale,
+            )
+        });
+        ensure!(
+            mparams.data.iter().flatten().all(|x| x.is_finite()),
+            "{} quick-bench epochs went non-finite",
+            kind.name()
+        );
+        println!(
+            "train model={}: {} params, epoch {model_epoch_s:.3}s",
+            kind.name(),
+            mcfg.num_params()
+        );
+        if !models_json.is_empty() {
+            models_json.push_str(", ");
+        }
+        write!(
+            models_json,
+            "\"{}\": {{\"num_params\": {}, \"epoch_s\": {model_epoch_s:.6}}}",
+            kind.name(),
+            mcfg.num_params()
+        )
+        .unwrap();
+    }
 
     // --------------------------------------------------------------------- dist
     let dist_model = model;
@@ -395,7 +461,7 @@ pub fn run(opts: &QuickOptions) -> Result<()> {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"summary\",\n  \"generated_by\": \"cofree bench --quick\",\n  \"config\": {{\"edges\": {}, \"dist_edges\": {}, \"epochs\": {}, \"parts\": {:?}, \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"headline\": {{\"native_epoch_speedup\": {epoch_speedup:.3}, \"forward_speedup\": {fwd_speedup:.3}, \"proc_epoch_overhead_mid\": {proc_overhead_mid:.3}}},\n  \"partition\": {{\"build_new_s\": {build_new_s:.6}, \"build_reference_s\": {build_ref_s:.6}, \"build_speedup\": {build_speedup:.3}, \"dbh_p8_cut_s\": {cut_s:.6}}},\n  \"train\": {{\"bucket\": {{\"n_pad\": {}, \"e_pad\": {}}}, \"forward\": {{\"old_s\": {fwd_old_s:.6}, \"new_s\": {fwd_new_s:.6}, \"speedup\": {fwd_speedup:.3}}}, \"step\": {{\"old_s\": {step_old_s:.6}, \"new_s\": {step_new_s:.6}, \"speedup\": {step_speedup:.3}}}, \"epoch\": {{\"old_s\": {epoch_old_s:.6}, \"new_s\": {epoch_new_s:.6}, \"speedup\": {epoch_speedup:.3}}}, \"parity\": true}},\n  \"dist\": [\n    {dist_rows}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"summary\",\n  \"generated_by\": \"cofree bench --quick\",\n  \"config\": {{\"edges\": {}, \"dist_edges\": {}, \"epochs\": {}, \"parts\": {:?}, \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"headline\": {{\"native_epoch_speedup\": {epoch_speedup:.3}, \"forward_speedup\": {fwd_speedup:.3}, \"proc_epoch_overhead_mid\": {proc_overhead_mid:.3}}},\n  \"models\": {{{models_json}}},\n  \"partition\": {{\"build_new_s\": {build_new_s:.6}, \"build_reference_s\": {build_ref_s:.6}, \"build_speedup\": {build_speedup:.3}, \"dbh_p8_cut_s\": {cut_s:.6}}},\n  \"train\": {{\"bucket\": {{\"n_pad\": {}, \"e_pad\": {}}}, \"forward\": {{\"old_s\": {fwd_old_s:.6}, \"new_s\": {fwd_new_s:.6}, \"speedup\": {fwd_speedup:.3}}}, \"step\": {{\"old_s\": {step_old_s:.6}, \"new_s\": {step_new_s:.6}, \"speedup\": {step_speedup:.3}}}, \"epoch\": {{\"old_s\": {epoch_old_s:.6}, \"new_s\": {epoch_new_s:.6}, \"speedup\": {epoch_speedup:.3}}}, \"parity\": true}},\n  \"dist\": [\n    {dist_rows}\n  ]\n}}\n",
         opts.edges,
         opts.dist_edges,
         opts.epochs,

@@ -25,8 +25,9 @@ use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, TrainOut};
 use crate::train::backend::{Backend, WorkerMeta};
 use crate::train::checkpoint::TrainCheckpoint;
 use crate::train::cpu::{CpuBackend, CpuEval};
-use crate::train::engine::{model_config, Run, RunMode, TrainConfig, TrainEngine};
+use crate::train::engine::{model_config_for, Run, RunMode, TrainConfig, TrainEngine};
 use crate::train::metrics::History;
+use crate::train::model::ModelKind;
 use crate::train::tensorize::{EvalBatch, TrainBatch};
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Context, Result};
@@ -71,6 +72,10 @@ pub struct ProcOptions {
     /// binary itself; tests and benches pass `CARGO_BIN_EXE_cofree`).
     pub worker_bin: PathBuf,
     pub transport: Transport,
+    /// Which GNN architecture the fleet trains. The kind is broadcast in
+    /// the `Config` frame; shards carry dims only, so one shard store
+    /// serves every model.
+    pub model: ModelKind,
     /// How long to wait for all workers to connect and report meta.
     pub handshake_timeout: Duration,
 }
@@ -80,6 +85,7 @@ impl ProcOptions {
         ProcOptions {
             worker_bin,
             transport: Transport::Tcp,
+            model: ModelKind::Sage,
             handshake_timeout: Duration::from_secs(60),
         }
     }
@@ -466,7 +472,7 @@ pub fn train_over_shards(
 ) -> Result<(History, TrainCheckpoint, DistStats)> {
     let files = shard_files(shard_dir)?;
     let p = files.len();
-    let model = model_config(ds);
+    let model = model_config_for(ds, opts.model);
     let mut stats = DistStats { num_workers: p, num_params: model.num_params(), ..Default::default() };
 
     let t_handshake = Instant::now();
@@ -579,7 +585,7 @@ pub fn train_over_shards(
     stats.handshake_seconds = t_handshake.elapsed().as_secs_f64();
 
     // The unmodified engine loop over the remote fleet.
-    let mut engine = TrainEngine { backend: ProcBackend::new() };
+    let mut engine = TrainEngine { backend: ProcBackend::new(), kind: opts.model };
     let eval = engine.prepare_eval(ds)?;
     let mut run: Run<ProcBackend> = Run::from_workers(workers, metas, model, RunMode::AllParts);
     let t_train = Instant::now();

@@ -47,6 +47,7 @@
 //! trajectory bit-identical to the in-process engine.
 
 use crate::runtime::{ModelConfig, TrainOut};
+use crate::train::model::ModelKind;
 use crate::util::binio;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{IoSlice, Read, Write};
@@ -54,8 +55,11 @@ use std::net::TcpStream;
 #[cfg(unix)]
 use std::os::unix::net::UnixStream;
 
-/// Bump on any frame-layout change.
-pub const PROTO_VERSION: u32 = 1;
+/// Bump on any frame-layout change. v2: the `Config` frame's model block
+/// leads with the architecture kind tag (the `GnnModel` refactor), so a
+/// coordinator can drive GCN/GIN fleets and a stale worker binary fails
+/// the version handshake instead of misreading the frame.
+pub const PROTO_VERSION: u32 = 2;
 
 /// Sanity cap on a single frame payload (1 GiB).
 const MAX_FRAME: u64 = 1 << 30;
@@ -188,6 +192,7 @@ fn get_tensor_list(r: &mut impl Read) -> Result<Vec<Vec<f32>>> {
 }
 
 fn put_model(w: &mut impl Write, m: &ModelConfig) -> Result<()> {
+    binio::write_u32(w, m.kind.code() as u32)?;
     for d in [m.layers, m.feat_dim, m.hidden, m.classes] {
         binio::write_u32(w, d as u32)?;
     }
@@ -195,7 +200,10 @@ fn put_model(w: &mut impl Write, m: &ModelConfig) -> Result<()> {
 }
 
 fn get_model(r: &mut impl Read) -> Result<ModelConfig> {
+    let code = binio::read_u32(r)?;
+    ensure!(code <= u8::MAX as u32, "corrupt Config frame: model kind tag {code}");
     Ok(ModelConfig {
+        kind: ModelKind::from_code(code as u8)?,
         layers: binio::read_u32(r)? as usize,
         feat_dim: binio::read_u32(r)? as usize,
         hidden: binio::read_u32(r)? as usize,
@@ -617,8 +625,25 @@ mod tests {
     }
 
     #[test]
+    fn config_model_kind_survives_the_wire() {
+        for kind in ModelKind::ALL {
+            let model = ModelConfig { kind, layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
+            match roundtrip(&Frame::Config {
+                seed: 7,
+                dropedge_k: 0,
+                dropedge_ratio: 0.0,
+                model,
+            }) {
+                Frame::Config { model: m, .. } => assert_eq!(m, model),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn hello_config_meta_roundtrip() {
-        let model = ModelConfig { layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
+        let model =
+            ModelConfig { kind: ModelKind::Sage, layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
         match roundtrip(&Frame::Hello { proto_version: 1, rank: 3, num_parts: 8 }) {
             Frame::Hello { proto_version, rank, num_parts } => {
                 assert_eq!((proto_version, rank, num_parts), (1, 3, 8));

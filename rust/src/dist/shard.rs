@@ -31,6 +31,7 @@ use crate::graph::{Dataset, Graph, NodeData};
 use crate::partition::VertexCut;
 use crate::runtime::ModelConfig;
 use crate::train::engine::model_config;
+use crate::train::model::ModelKind;
 use crate::train::tensorize::{tensorize_subgraph, tensorize_subgraph_ref, NodeDataRef, TrainBatch};
 use crate::util::binio;
 use crate::util::mmap::Mmap;
@@ -143,7 +144,11 @@ impl Shard {
         binio::expect_version(&mut r, SHARD_VERSION, "partition shard")?;
         let part_id = binio::read_u32(&mut r)? as usize;
         let num_parts = binio::read_u32(&mut r)? as usize;
+        // Shards store dims only — the arrays are architecture-agnostic;
+        // the model kind travels in the wire Config frame. The nominal
+        // kind here is the default (Sage); consumers compare dims.
         let model = ModelConfig {
+            kind: ModelKind::Sage,
             layers: binio::read_u32(&mut r)? as usize,
             feat_dim: binio::read_u32(&mut r)? as usize,
             hidden: binio::read_u32(&mut r)? as usize,
@@ -266,6 +271,7 @@ fn parse_shard_bytes(bytes: &[u8], path: &Path) -> Result<ParsedShard> {
     let part_id = binio::read_u32(&mut r)? as usize;
     let num_parts = binio::read_u32(&mut r)? as usize;
     let model = ModelConfig {
+        kind: ModelKind::Sage,
         layers: binio::read_u32(&mut r)? as usize,
         feat_dim: binio::read_u32(&mut r)? as usize,
         hidden: binio::read_u32(&mut r)? as usize,

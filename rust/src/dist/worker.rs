@@ -10,10 +10,14 @@
 //! single definition `prepare_partitions` also uses) — and then answers
 //! `Step` frames with `StepResult`s until the coordinator says `Shutdown`.
 //!
+//! The worker trains whatever architecture the coordinator's `Config`
+//! frame names ([`ModelKind`](crate::train::model::ModelKind) travels on
+//! the wire; the shard stores only dims, which must match).
+//!
 //! The step loop is allocation-free in steady state: incoming frames land
 //! in one reusable [`proto::FrameBuf`], parameters decode into one reused
 //! `ParamSet`, the train step runs through the worker's persistent
-//! [`SageWorkspace`] arena into one reused `TrainOut`, and the result
+//! [`ModelWorkspace`] arena into one reused `TrainOut`, and the result
 //! frame serializes through one reused payload buffer. Because every
 //! input bit and every RNG draw matches the in-process path, the
 //! `TrainOut` it returns is bit-identical to what the same partition
@@ -26,7 +30,7 @@ use crate::train::bucket::pad_explicit;
 use crate::train::cpu::{self, EdgeCsr};
 use crate::train::dropedge::MaskBank;
 use crate::train::engine::worker_mask_rng;
-use crate::train::workspace::SageWorkspace;
+use crate::train::workspace::ModelWorkspace;
 use anyhow::{bail, ensure, Context, Result};
 use std::path::Path;
 use std::time::Instant;
@@ -58,9 +62,12 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
     let Frame::Config { seed, dropedge_k, dropedge_ratio, model } = frame else {
         bail!("expected Config frame after Hello, got {frame:?}");
     };
+    // Shards record dims only (the stored arrays are model-agnostic); the
+    // architecture kind arrives here, in the Config frame, and the worker
+    // adopts it. Dims still have to line up with the shard's data layout.
     ensure!(
-        model == shard.model,
-        "coordinator model {model:?} does not match shard model {:?}",
+        model.dims_match(&shard.model),
+        "coordinator model dims {model:?} do not match shard dims {:?}",
         shard.model
     );
 
@@ -90,7 +97,7 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
     let dims = model.param_shapes();
     let mut params = ParamSet { dims: dims.clone(), data: Vec::new() };
     let mut frame_buf = proto::FrameBuf::new();
-    let mut ws = SageWorkspace::new(&shard.model, batch.n_pad);
+    let mut ws = ModelWorkspace::new(&model, batch.n_pad);
     let mut out = TrainOut::default();
     let mut result_payload: Vec<u8> = Vec::new();
     let mut steps = 0usize;
@@ -121,7 +128,7 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
                     None => batch.emask().as_f32(),
                 };
                 let t0 = Instant::now();
-                cpu::train_step_into(&shard.model, &params, &batch, &csr, emask, &mut ws, &mut out);
+                cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws, &mut out);
                 let compute_seconds = t0.elapsed().as_secs_f64();
                 proto::write_step_result_buffered(
                     &mut stream,

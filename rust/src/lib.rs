@@ -6,10 +6,12 @@
 //!
 //! * **Rust (this crate)** — the distributed-training coordinator: graph
 //!   substrate, vertex-cut/edge-cut partitioners, Degree-Aware Reweighting,
-//!   DropEdge-K, the communication-free data-parallel training runtime over
-//!   AOT-compiled XLA executables (PJRT), baseline communication simulators,
-//!   and the experiment harnesses that regenerate every table and figure of
-//!   the paper.
+//!   DropEdge-K, the communication-free data-parallel training runtime —
+//!   model-agnostic over the [`train::model::GnnModel`] layer recipes
+//!   (GraphSAGE, GCN, GIN via `cofree train --model`), with native CPU
+//!   kernels by default or AOT-compiled XLA executables (PJRT) —
+//!   baseline communication simulators, and the experiment harnesses that
+//!   regenerate every table and figure of the paper.
 //! * **JAX / Pallas (build-time, `python/compile/`)** — the GraphSAGE
 //!   forward/backward `train_step` with the Pallas matmul hot-spot kernel,
 //!   lowered once to HLO text and loaded here via the `xla` crate (enable

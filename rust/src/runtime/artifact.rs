@@ -1,13 +1,18 @@
 //! Artifact registry: manifest parsing, shape-bucket lookup, and the
 //! parameter-shape contract shared with `python/compile/model.py`.
 
+use crate::train::model::{GnnModel, ModelKind};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-/// Model hyperparameters that select an artifact family.
+/// Model hyperparameters that select an artifact family: the architecture
+/// [`ModelKind`] plus its dims. The parameter layout, buffer plan and
+/// kernels all dispatch on `kind` through the
+/// [`GnnModel`](crate::train::model::GnnModel) layer recipe.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct ModelConfig {
+    pub kind: ModelKind,
     pub layers: usize,
     pub feat_dim: usize,
     pub hidden: usize,
@@ -15,25 +20,30 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
-    /// Shapes of the flat parameter list, in lowering order — MUST mirror
-    /// `model.param_shapes` on the Python side:
-    /// per layer `W [in, H]`, `b [H]`, `U [H+in, out]`, `c [out]`.
+    /// Shapes of the flat parameter list, in lowering order (see
+    /// [`GnnModel::param_specs`] for the per-kind layouts). For
+    /// [`ModelKind::Sage`] this MUST mirror `model.param_shapes` on the
+    /// Python side: per layer `W [in, H]`, `b [H]`, `U [H+in, out]`,
+    /// `c [out]` — the AOT artifacts are compiled against that contract.
     pub fn param_shapes(&self) -> Vec<Vec<usize>> {
-        let mut out = Vec::with_capacity(self.layers * 4);
-        for l in 0..self.layers {
-            let d_in = if l == 0 { self.feat_dim } else { self.hidden };
-            let d_out = if l == self.layers - 1 { self.classes } else { self.hidden };
-            out.push(vec![d_in, self.hidden]);
-            out.push(vec![self.hidden]);
-            out.push(vec![self.hidden + d_in, d_out]);
-            out.push(vec![d_out]);
-        }
-        out
+        GnnModel::new(self).param_shapes()
     }
 
     /// Total parameter count.
     pub fn num_params(&self) -> usize {
         self.param_shapes().iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// Whether two configs agree on every dimension, ignoring the
+    /// architecture kind. Shard stores record dims only (the data layout is
+    /// model-agnostic); the kind travels in the wire `Config` frame, so the
+    /// worker validates dims against its shard and adopts the
+    /// coordinator's kind.
+    pub fn dims_match(&self, other: &ModelConfig) -> bool {
+        self.layers == other.layers
+            && self.feat_dim == other.feat_dim
+            && self.hidden == other.hidden
+            && self.classes == other.classes
     }
 }
 
@@ -151,7 +161,10 @@ impl Registry {
             artifacts.push(ArtifactSpec {
                 name: get("name")?.to_string(),
                 kind,
+                // The AOT pipeline lowers the GraphSAGE train/eval steps
+                // only; manifests therefore always describe Sage models.
                 model: ModelConfig {
+                    kind: ModelKind::Sage,
                     layers: get("layers")?.parse()?,
                     feat_dim: get("feat")?.parse()?,
                     hidden: get("hidden")?.parse()?,
@@ -199,7 +212,8 @@ mod tests {
     #[test]
     fn param_shapes_mirror_python_contract() {
         // Mirrors python/tests/test_model.py::test_param_shapes_contract.
-        let m = ModelConfig { layers: 3, feat_dim: 64, hidden: 32, classes: 10 };
+        let m =
+            ModelConfig { kind: ModelKind::Sage, layers: 3, feat_dim: 64, hidden: 32, classes: 10 };
         let s = m.param_shapes();
         assert_eq!(s.len(), 12);
         assert_eq!(s[0], vec![64, 32]);
@@ -232,7 +246,8 @@ mod tests {
         );
         let reg = Registry::load(&dir).unwrap();
         assert_eq!(reg.artifacts.len(), 3);
-        let m = ModelConfig { layers: 2, feat_dim: 8, hidden: 8, classes: 3 };
+        let m =
+            ModelConfig { kind: ModelKind::Sage, layers: 2, feat_dim: 8, hidden: 8, classes: 3 };
         // Smallest fitting bucket wins.
         let a = reg.find(&m, ArtifactKind::Train, 50, 200).unwrap();
         assert_eq!(a.name, "a");
@@ -242,7 +257,7 @@ mod tests {
         let c = reg.find(&m, ArtifactKind::Eval, 100, 500).unwrap();
         assert_eq!(c.name, "c");
         // Model mismatch -> no fit.
-        let m2 = ModelConfig { layers: 3, ..m };
+        let m2 = ModelConfig { kind: ModelKind::Sage, layers: 3, ..m };
         assert!(reg.find(&m2, ArtifactKind::Train, 10, 10).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
@@ -258,7 +273,8 @@ mod tests {
 
     #[test]
     fn bucket_name_and_spec_line_roundtrip() {
-        let m = ModelConfig { layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
+        let m =
+            ModelConfig { kind: ModelKind::Sage, layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
         let name = ArtifactSpec::bucket_name("tiny", &m, 64, 256, ArtifactKind::Train);
         assert_eq!(name, "tiny-L2-h16-d8-c4-n64-e256-train");
         let spec = ArtifactSpec {

@@ -173,10 +173,12 @@ impl Executor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::train::model::ModelKind;
 
     #[test]
     fn paramset_shapes_and_norm() {
-        let cfg = ModelConfig { layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
+        let cfg =
+            ModelConfig { kind: ModelKind::Sage, layers: 2, feat_dim: 8, hidden: 16, classes: 4 };
         let mut rng = Rng::new(1);
         let p = ParamSet::init_glorot(&cfg, &mut rng);
         assert_eq!(p.dims.len(), 8);
@@ -191,7 +193,8 @@ mod tests {
 
     #[test]
     fn paramset_deterministic() {
-        let cfg = ModelConfig { layers: 1, feat_dim: 4, hidden: 4, classes: 2 };
+        let cfg =
+            ModelConfig { kind: ModelKind::Sage, layers: 1, feat_dim: 4, hidden: 4, classes: 2 };
         let a = ParamSet::init_glorot(&cfg, &mut Rng::new(5));
         let b = ParamSet::init_glorot(&cfg, &mut Rng::new(5));
         assert_eq!(a.data, b.data);

@@ -19,6 +19,10 @@ pub mod client;
 pub mod executor;
 
 pub use artifact::{ArtifactKind, ArtifactSpec, ModelConfig, Registry};
+// The architecture kind lives with the `GnnModel` recipe machinery in
+// `train::model`; re-exported here so model-selecting call sites can
+// import it next to `ModelConfig`.
+pub use crate::train::model::ModelKind;
 pub use buffers::{Tensor, TensorData};
 #[cfg(feature = "xla")]
 pub use client::RuntimeClient;

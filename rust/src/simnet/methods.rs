@@ -116,9 +116,10 @@ pub fn iteration_time(
 mod tests {
     use super::*;
     use crate::simnet::link::Cluster;
+    use crate::train::model::ModelKind;
 
     fn model() -> ModelConfig {
-        ModelConfig { layers: 3, feat_dim: 64, hidden: 64, classes: 16 }
+        ModelConfig { kind: ModelKind::Sage, layers: 3, feat_dim: 64, hidden: 64, classes: 16 }
     }
 
     fn stats(halo: usize) -> PartitionCommStats {
@@ -161,7 +162,13 @@ mod tests {
         // CoFree, even when CoFree's compute is higher due to duplicated
         // nodes.
         let c = Cluster::single_server(4);
-        let m = ModelConfig { layers: 4, feat_dim: 602, hidden: 256, classes: 41 };
+        let m = ModelConfig {
+            kind: ModelKind::Sage,
+            layers: 4,
+            feat_dim: 602,
+            hidden: 256,
+            classes: 41,
+        };
         let s = PartitionCommStats {
             owned: 58_000,
             halo_in: 150_000,

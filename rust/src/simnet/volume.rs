@@ -99,6 +99,7 @@ impl BaselineVolumes {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::train::model::ModelKind;
     use crate::graph::generators::barabasi_albert;
     use crate::partition::LdgEdgeCut;
     use crate::util::rng::Rng;
@@ -131,7 +132,8 @@ mod tests {
     fn volume_ordering_matches_systems() {
         let (g, ec) = setup();
         let stats = PartitionCommStats::from_edge_cut(&g, &ec);
-        let model = ModelConfig { layers: 3, feat_dim: 64, hidden: 64, classes: 16 };
+        let model =
+            ModelConfig { kind: ModelKind::Sage, layers: 3, feat_dim: 64, hidden: 64, classes: 16 };
         for s in &stats {
             let v = BaselineVolumes::compute(s, &model, 0.1);
             // BNS-GCN communicates 10x less than PipeGCN per layer.
@@ -148,7 +150,8 @@ mod tests {
         // halo bytes grow with boundary size.
         let (g, ec) = setup();
         let stats = PartitionCommStats::from_edge_cut(&g, &ec);
-        let model = ModelConfig { layers: 3, feat_dim: 64, hidden: 64, classes: 16 };
+        let model =
+            ModelConfig { kind: ModelKind::Sage, layers: 3, feat_dim: 64, hidden: 64, classes: 16 };
         let total_pipe: f64 = stats
             .iter()
             .map(|s| BaselineVolumes::compute(s, &model, 0.1).pipegcn_layer_bytes)

@@ -12,6 +12,7 @@
 //! length-prefixed tensors. All f32 payloads round-trip bit-exactly.
 
 use crate::runtime::{ModelConfig, ParamSet};
+use crate::train::model::ModelKind;
 use crate::train::optimizer::OptimizerState;
 use crate::util::binio;
 use anyhow::{bail, ensure, Context, Result};
@@ -19,7 +20,11 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 pub const CHECKPOINT_MAGIC: &[u8; 8] = b"COFREECK";
-pub const CHECKPOINT_VERSION: u32 = 1;
+/// Version 2 added the model-kind tag to the header (the `GnnModel`
+/// refactor): a checkpoint records WHICH architecture its parameters
+/// belong to, not just the dims, so loading a GCN checkpoint into a Sage
+/// run fails loudly instead of misindexing tensors.
+pub const CHECKPOINT_VERSION: u32 = 2;
 
 /// A resumable training state: how many epochs are done, the parameters,
 /// and the optimizer's internal state.
@@ -55,6 +60,7 @@ impl TrainCheckpoint {
         binio::write_magic(&mut w, CHECKPOINT_MAGIC)?;
         binio::write_version(&mut w, CHECKPOINT_VERSION)?;
         binio::write_u64(&mut w, self.epochs_done as u64)?;
+        binio::write_u8(&mut w, self.model.kind.code())?;
         for d in [self.model.layers, self.model.feat_dim, self.model.hidden, self.model.classes] {
             binio::write_u32(&mut w, d as u32)?;
         }
@@ -91,7 +97,10 @@ impl TrainCheckpoint {
             .with_context(|| format!("reading {path:?}"))?;
         binio::expect_version(&mut r, CHECKPOINT_VERSION, "model checkpoint")?;
         let epochs_done = binio::read_u64(&mut r)? as usize;
+        let kind = ModelKind::from_code(binio::read_u8(&mut r)?)
+            .context("reading checkpoint model kind")?;
         let model = ModelConfig {
+            kind,
             layers: binio::read_u32(&mut r)? as usize,
             feat_dim: binio::read_u32(&mut r)? as usize,
             hidden: binio::read_u32(&mut r)? as usize,
@@ -151,27 +160,50 @@ mod tests {
         std::env::temp_dir().join(format!("cofree_ckpt_{name}_{}", std::process::id()))
     }
 
-    fn sample() -> TrainCheckpoint {
-        let model = ModelConfig { layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
+    fn sample_kind(kind: ModelKind) -> TrainCheckpoint {
+        let model = ModelConfig { kind, layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
         let params = ParamSet::init_glorot(&model, &mut Rng::new(3));
         let m = params.data.iter().map(|d| d.iter().map(|x| x * 0.5).collect()).collect();
         let v = params.data.iter().map(|d| d.iter().map(|x| x * x).collect()).collect();
         TrainCheckpoint { epochs_done: 7, model, params, opt: OptimizerState::Adam { t: 7, m, v } }
     }
 
+    fn sample() -> TrainCheckpoint {
+        sample_kind(ModelKind::Sage)
+    }
+
+    /// Round-trips (Adam moments included) for every model kind: the
+    /// header records the kind and it survives save → load bit-exactly.
     #[test]
-    fn roundtrip_is_bit_exact() {
-        let ck = sample();
-        let p = tmp("rt");
-        let bytes = ck.save(&p).unwrap();
-        assert!(bytes > 0);
-        let got = TrainCheckpoint::load(&p).unwrap();
-        assert_eq!(got.epochs_done, ck.epochs_done);
-        assert_eq!(got.model, ck.model);
-        assert_eq!(got.params.dims, ck.params.dims);
-        assert_eq!(got.params.data, ck.params.data);
-        assert_eq!(got.opt, ck.opt);
-        std::fs::remove_file(&p).unwrap();
+    fn roundtrip_is_bit_exact_for_every_kind() {
+        for kind in ModelKind::ALL {
+            let ck = sample_kind(kind);
+            let p = tmp(kind.name());
+            let bytes = ck.save(&p).unwrap();
+            assert!(bytes > 0);
+            let got = TrainCheckpoint::load(&p).unwrap();
+            assert_eq!(got.epochs_done, ck.epochs_done);
+            assert_eq!(got.model, ck.model);
+            assert_eq!(got.model.kind, kind);
+            assert_eq!(got.params.dims, ck.params.dims);
+            assert_eq!(got.params.data, ck.params.data);
+            assert_eq!(got.opt, ck.opt);
+            std::fs::remove_file(&p).unwrap();
+        }
+    }
+
+    /// The kinds' parameter layouts really differ (so a kind mismatch can
+    /// never alias silently), and the engine-side mismatch check has both
+    /// kinds in its message (`train_resumable` ensures `ck.model ==
+    /// run.model`; see `tests/train_native.rs` for the end-to-end case).
+    #[test]
+    fn kind_mismatch_cannot_alias() {
+        let sage = sample_kind(ModelKind::Sage);
+        let gcn = sample_kind(ModelKind::Gcn);
+        let gin = sample_kind(ModelKind::Gin);
+        assert_ne!(sage.params.dims, gcn.params.dims);
+        assert_ne!(gcn.params.dims, gin.params.dims);
+        assert_ne!(sage.model, gcn.model);
     }
 
     #[test]

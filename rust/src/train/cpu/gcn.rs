@@ -1,0 +1,393 @@
+//! Native GCN (Kipf & Welling, 2017) forward + backward over a tensorized
+//! batch.
+//!
+//! The layer recipe (see `train::model`):
+//!
+//! ```text
+//! ĉ_v    = 1 + Σ_{e→v} w_e                      (self-loop-augmented in-weight)
+//! agg_d  = Σ_{e→d} w_e / √(ĉ_s ĉ_d) · h_s      (symmetric normalization)
+//! comb   = agg + h / ĉ                          (the Ã = A + I self term)
+//! h'     = comb · W + b                         (ReLU on all but the last layer)
+//! ```
+//!
+//! This is the paper's propagation rule `D̃^-1/2 Ã D̃^-1/2 H W` with the
+//! batch's (possibly DropEdge-masked, DAR-carrying) edge weights standing
+//! in for the adjacency entries. The GEMMs run through the packed kernels
+//! in [`super::gemm`]; the aggregation walks the same [`EdgeCsr`] index as
+//! the other models (per-destination rows, ascending edge-id accumulation
+//! — deterministic for any rayon pool size); every temporary lives in the
+//! caller-owned [`ModelWorkspace`], so the `*_into` entry points allocate
+//! nothing. Backward treats the ĉ denominators as weight-only constants,
+//! the same convention as Sage's mean denominators. The naive oracle is
+//! `reference::forward` (`ModelKind::Gcn` arm); gradients are checked
+//! against central finite differences below.
+
+use super::gemm;
+use super::sage::EdgeCsr;
+use crate::runtime::{ModelConfig, ParamSet};
+use crate::train::model::ModelKind;
+use crate::train::workspace::ModelWorkspace;
+use rayon::prelude::*;
+
+/// Self-loop-augmented in-weight `ĉ_v = 1 + Σ_{e→v} w_e` per node
+/// (ascending edge-id accumulation; always ≥ 1, so no epsilon clamp).
+fn compute_denoms_hat(csr: &EdgeCsr, emask: &[f32], denom: &mut [f32]) {
+    denom.par_iter_mut().enumerate().for_each(|(d, den)| {
+        let lo = csr.in_off[d] as usize;
+        let hi = csr.in_off[d + 1] as usize;
+        let mut cnt = 1f32;
+        for idx in lo..hi {
+            let w = emask[csr.in_eid[idx] as usize];
+            if w == 0.0 {
+                continue;
+            }
+            cnt += w;
+        }
+        *den = cnt;
+    });
+}
+
+/// Symmetric-normalized aggregation
+/// `out[d] = Σ_{e→d} w_e / √(ĉ_s ĉ_d) · h[s]` into a caller-owned buffer.
+fn aggregate_sym_into(
+    csr: &EdgeCsr,
+    emask: &[f32],
+    h: &[f32],
+    denom: &[f32],
+    out: &mut [f32],
+    d_in: usize,
+) {
+    out.par_chunks_mut(d_in).enumerate().for_each(|(d, row)| {
+        row.fill(0.0);
+        let cd = denom[d];
+        let lo = csr.in_off[d] as usize;
+        let hi = csr.in_off[d + 1] as usize;
+        for idx in lo..hi {
+            let w = emask[csr.in_eid[idx] as usize];
+            if w == 0.0 {
+                continue;
+            }
+            let s = csr.in_src[idx] as usize;
+            let f = w / (denom[s] * cd).sqrt();
+            let srow = &h[s * d_in..s * d_in + d_in];
+            for (av, &hv) in row.iter_mut().zip(srow.iter()) {
+                *av += f * hv;
+            }
+        }
+    });
+}
+
+/// Backward of [`aggregate_sym_into`] w.r.t. `h`:
+/// `out[s] = Σ_{e: src_e = s} w_e / √(ĉ_s ĉ_d) · dcomb[d]` (denominators
+/// constant), same ascending-edge-id per-element order.
+fn scatter_sym_into(
+    csr: &EdgeCsr,
+    emask: &[f32],
+    denom: &[f32],
+    dcomb: &[f32],
+    out: &mut [f32],
+    d_in: usize,
+) {
+    out.par_chunks_mut(d_in).enumerate().for_each(|(s, row)| {
+        row.fill(0.0);
+        let cs = denom[s];
+        let lo = csr.out_off[s] as usize;
+        let hi = csr.out_off[s + 1] as usize;
+        for idx in lo..hi {
+            let w = emask[csr.out_eid[idx] as usize];
+            if w == 0.0 {
+                continue;
+            }
+            let d = csr.out_dst[idx] as usize;
+            let f = w / (cs * denom[d]).sqrt();
+            let drow = &dcomb[d * d_in..d * d_in + d_in];
+            for (dv, &gv) in row.iter_mut().zip(drow.iter()) {
+                *dv += f * gv;
+            }
+        }
+    });
+}
+
+/// Fast GCN forward pass into a caller-owned workspace; keeps every
+/// intermediate needed by [`backward_into`]. Allocates nothing.
+pub fn forward_into(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    feat: &[f32],
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+) {
+    debug_assert_eq!(cfg.kind, ModelKind::Gcn);
+    debug_assert_eq!(feat.len(), n * cfg.feat_dim);
+    debug_assert_eq!(csr.n, n);
+    debug_assert_eq!(ws.n, n);
+    let ModelWorkspace { outs, combs, denoms, .. } = ws;
+    // ĉ depends only on the edge weights, not the layer or the
+    // activations: one O(E) pass fills the single denominator buffer every
+    // layer (and the backward) reads.
+    compute_denoms_hat(csr, emask, &mut denoms[0]);
+    for l in 0..cfg.layers {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let w = &params.data[2 * l];
+        let b = &params.data[2 * l + 1];
+        let (prev, rest) = outs.split_at_mut(l);
+        let hin: &[f32] = if l == 0 { feat } else { &prev[l - 1] };
+        let comb = &mut combs[l];
+        aggregate_sym_into(csr, emask, hin, &denoms[0], comb, d_in);
+        // comb += h / ĉ (the normalized self-loop term).
+        {
+            let denom = &denoms[0];
+            comb.par_chunks_mut(d_in).enumerate().for_each(|(i, row)| {
+                let inv = 1.0 / denom[i];
+                let srow = &hin[i * d_in..i * d_in + d_in];
+                for (cv, &hv) in row.iter_mut().zip(srow.iter()) {
+                    *cv += inv * hv;
+                }
+            });
+        }
+        let out = &mut rest[0];
+        debug_assert_eq!(out.len(), n * d_out);
+        gemm::broadcast_rows(b, out, d_out);
+        gemm::matmul_acc(comb, w, out, n, d_in, d_out);
+        if l != cfg.layers - 1 {
+            out.par_iter_mut().for_each(|v| {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            });
+        }
+    }
+}
+
+/// Backward pass into caller-owned gradient tensors (`W, b` per layer).
+/// Expects the logits gradient at the front of `ws.dbuf_a` (as left by
+/// `loss_grad_into`). Every element of `grads` is overwritten; nothing
+/// allocates.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_into(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    feat: &[f32],
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+) {
+    debug_assert_eq!(cfg.kind, ModelKind::Gcn);
+    debug_assert_eq!(grads.len(), params.data.len());
+    let _ = feat;
+    let ModelWorkspace { outs, combs, denoms, dbuf_a, dbuf_b, dagg, dmsg, .. } = ws;
+    for l in (0..cfg.layers).rev() {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let w = &params.data[2 * l];
+        let comb = &combs[l];
+        let denom = &denoms[0];
+        // Upstream gradient w.r.t. this layer's output; for hidden layers
+        // push it through the ReLU (out = relu(pre), so mask by out > 0 —
+        // out == 0 covers pre ≤ 0).
+        if l != cfg.layers - 1 {
+            dbuf_a[..n * d_out]
+                .par_chunks_mut(d_out)
+                .zip(outs[l].par_chunks(d_out))
+                .for_each(|(drow, orow)| {
+                    for (dv, &ov) in drow.iter_mut().zip(orow.iter()) {
+                        if ov <= 0.0 {
+                            *dv = 0.0;
+                        }
+                    }
+                });
+        }
+        let dpre = &dbuf_a[..n * d_out];
+        gemm::col_sums(dpre, n, d_out, &mut grads[2 * l + 1]);
+        gemm::matmul_tn(comb, dpre, &mut grads[2 * l], n, d_in, d_out);
+        // Input gradient for the next (shallower) layer — skipped at layer
+        // 0, where the input is the feature data.
+        if l == 0 {
+            break;
+        }
+        let dcomb = &mut dagg[..n * d_in];
+        gemm::matmul_nt(dpre, w, dcomb, n, d_out, d_in);
+        let scat = &mut dmsg[..n * d_in];
+        scatter_sym_into(csr, emask, denom, dcomb, scat, d_in);
+        {
+            let dcomb_ro: &[f32] = dcomb;
+            let scat_ro: &[f32] = scat;
+            let dh = &mut dbuf_b[..n * d_in];
+            dh.par_chunks_mut(d_in).enumerate().for_each(|(i, row)| {
+                let inv = 1.0 / denom[i];
+                let crow = &dcomb_ro[i * d_in..i * d_in + d_in];
+                let srow = &scat_ro[i * d_in..i * d_in + d_in];
+                for ((dv, &cv), &sv) in row.iter_mut().zip(crow.iter()).zip(srow.iter()) {
+                    *dv = inv * cv + sv;
+                }
+            });
+        }
+        std::mem::swap(dbuf_a, dbuf_b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sage::loss_grad_into;
+    use super::*;
+    use crate::graph::features::{synthesize, FeatureParams};
+    use crate::partition::testutil::graph_zoo;
+    use crate::partition::{dar_weights, random::RandomVertexCut, Reweighting, VertexCut};
+    use crate::train::reference;
+    use crate::train::tensorize::{tensorize_partition, TrainBatch};
+    use crate::util::rng::Rng;
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!((g - w).abs() <= tol * (1.0 + w.abs()), "{what} elem {i}: got {g}, want {w}");
+        }
+    }
+
+    fn zoo_batch(gi: usize, g: &crate::graph::Graph, seed: u64) -> Option<TrainBatch> {
+        let n = g.num_nodes();
+        let mut rng = Rng::new(seed + gi as u64);
+        let comm: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+        let nd = synthesize(&comm, 4, &FeatureParams { dim: 5, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(g, &vc, Reweighting::Dar);
+        if vc.parts[0].num_edges() == 0 {
+            return None;
+        }
+        Some(tensorize_partition(&vc.parts[0], &nd, &w[0], 256, 2048).unwrap())
+    }
+
+    /// The fast GCN forward matches the naive reference oracle across the
+    /// graph zoo and layer counts, and is bit-identical for any rayon pool
+    /// size.
+    #[test]
+    fn gcn_forward_matches_reference_across_zoo_and_threads() {
+        for (gi, g) in graph_zoo(33).iter().enumerate() {
+            let Some(batch) = zoo_batch(gi, g, 700) else { continue };
+            let csr = EdgeCsr::from_batch(&batch);
+            let emask = batch.emask().as_f32();
+            let feat = batch.tensors[0].as_f32();
+            let mut rng = Rng::new(900 + gi as u64);
+            for layers in [1usize, 2, 3] {
+                let cfg = ModelConfig {
+                    kind: ModelKind::Gcn,
+                    layers,
+                    feat_dim: 5,
+                    hidden: 7,
+                    classes: 4,
+                };
+                let params = ParamSet::init_glorot(&cfg, &mut rng.fork(layers as u64));
+                let want = reference::forward(&cfg, &params, &batch);
+                let mut ws = ModelWorkspace::new(&cfg, batch.n_pad);
+                forward_into(&cfg, &params, feat, emask, &csr, batch.n_pad, &mut ws);
+                assert_close(ws.logits(), &want, 1e-4, "gcn logits");
+                for threads in [1usize, 2, 8] {
+                    let pool =
+                        rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+                    let mut ws_t = ModelWorkspace::new(&cfg, batch.n_pad);
+                    pool.install(|| {
+                        forward_into(&cfg, &params, feat, emask, &csr, batch.n_pad, &mut ws_t)
+                    });
+                    assert_eq!(
+                        ws_t.logits(),
+                        ws.logits(),
+                        "graph#{gi} layers={layers}: gcn forward differs at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Central finite differences over every parameter tensor.
+    #[test]
+    fn gcn_backward_matches_finite_differences() {
+        let mut rng = Rng::new(7);
+        let g = crate::graph::generators::barabasi_albert(120, 3, &mut rng);
+        let comm: Vec<u32> = (0..120).map(|i| (i % 3) as u32).collect();
+        let nd = synthesize(&comm, 3, &FeatureParams { dim: 6, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 128, 1024).unwrap();
+        let cfg =
+            ModelConfig { kind: ModelKind::Gcn, layers: 2, feat_dim: 6, hidden: 8, classes: 3 };
+        let mut params = ParamSet::init_glorot(&cfg, &mut rng);
+        let csr = EdgeCsr::from_batch(&batch);
+        let feat = batch.tensors[0].as_f32().to_vec();
+        let emask = batch.emask().as_f32().to_vec();
+        let dar = batch.tensors[4].as_f32().to_vec();
+        let labels = batch.tensors[5].as_i32().to_vec();
+        let tmask = batch.tensors[6].as_f32().to_vec();
+        let n = batch.n_pad;
+        let mut ws = ModelWorkspace::new(&cfg, n);
+        let loss_of = |p: &ParamSet, ws: &mut ModelWorkspace| -> f64 {
+            forward_into(&cfg, p, &feat, &emask, &csr, n, ws);
+            loss_grad_into(&cfg, &dar, &labels, &tmask, n, ws).0
+        };
+        forward_into(&cfg, &params, &feat, &emask, &csr, n, &mut ws);
+        let _ = loss_grad_into(&cfg, &dar, &labels, &tmask, n, &mut ws);
+        let mut grads: Vec<Vec<f32>> =
+            params.data.iter().map(|p| vec![0f32; p.len()]).collect();
+        backward_into(&cfg, &params, &feat, &emask, &csr, n, &mut ws, &mut grads);
+        let eps = 2e-2f32;
+        let mut ws2 = ModelWorkspace::new(&cfg, n);
+        let mut checked = 0usize;
+        for pi in 0..params.data.len() {
+            let len = params.data[pi].len();
+            let step = (len / 25).max(1);
+            for ei in (0..len).step_by(step) {
+                let orig = params.data[pi][ei];
+                params.data[pi][ei] = orig + eps;
+                let lp = loss_of(&params, &mut ws2);
+                params.data[pi][ei] = orig - eps;
+                let lm = loss_of(&params, &mut ws2);
+                params.data[pi][ei] = orig;
+                let numeric = (lp - lm) / (2.0 * eps as f64);
+                let analytic = grads[pi][ei] as f64;
+                checked += 1;
+                assert!(
+                    (analytic - numeric).abs() <= 0.05 * numeric.abs().max(1.0) + 5e-3,
+                    "param {pi} elem {ei}: analytic {analytic} vs numeric {numeric}"
+                );
+            }
+        }
+        assert!(checked > 20, "probe coverage too small: {checked}");
+    }
+
+    /// Isolated rows (no in-edges, ĉ = 1) reduce to `h·W + b`, and padding
+    /// rows (zero features) to exactly `b`.
+    #[test]
+    fn gcn_isolated_and_padding_rows() {
+        let mut rng = Rng::new(9);
+        let g = crate::graph::generators::barabasi_albert(80, 2, &mut rng);
+        let comm: Vec<u32> = (0..80).map(|i| (i % 3) as u32).collect();
+        let nd = synthesize(&comm, 3, &FeatureParams { dim: 4, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 128, 1024).unwrap();
+        let cfg =
+            ModelConfig { kind: ModelKind::Gcn, layers: 1, feat_dim: 4, hidden: 8, classes: 3 };
+        let params = ParamSet::init_glorot(&cfg, &mut rng);
+        let csr = EdgeCsr::from_batch(&batch);
+        let mut ws = ModelWorkspace::new(&cfg, batch.n_pad);
+        forward_into(
+            &cfg,
+            &params,
+            batch.tensors[0].as_f32(),
+            batch.emask().as_f32(),
+            &csr,
+            batch.n_pad,
+            &mut ws,
+        );
+        let b = &params.data[1];
+        for i in batch.n_used..batch.n_pad {
+            for j in 0..cfg.classes {
+                assert!((ws.logits()[i * cfg.classes + j] - b[j]).abs() < 1e-6);
+            }
+        }
+    }
+}

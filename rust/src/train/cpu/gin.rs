@@ -1,0 +1,365 @@
+//! Native GIN (Xu et al., "How Powerful are Graph Neural Networks?", 2019)
+//! forward + backward over a tensorized batch.
+//!
+//! The layer recipe (see `train::model`):
+//!
+//! ```text
+//! comb = (1 + ε) · h + Σ_{e→d} w_e · h_s      (sum aggregation, trainable ε)
+//! h'   = relu(comb · W1 + b1) · W2 + b2       (2-layer MLP, linear output)
+//! ```
+//!
+//! ε is a trainable scalar per layer (initialized to 0 — 1-D tensors are
+//! zero-initialized by `ParamSet::init_glorot`); its gradient is the full
+//! contraction `Σ_{i,j} h_{ij} · dcomb_{ij}`, folded sequentially in f64
+//! so it is deterministic for any rayon pool size. The sum aggregation
+//! walks the shared [`EdgeCsr`] (per-row, ascending edge-id accumulation),
+//! the GEMMs run through the packed kernels in [`super::gemm`], and every
+//! temporary lives in the caller-owned [`ModelWorkspace`] — the `*_into`
+//! entry points allocate nothing. The naive oracle is `reference::forward`
+//! (`ModelKind::Gin` arm); gradients are checked against central finite
+//! differences below, ε included.
+
+use super::gemm;
+use super::sage::EdgeCsr;
+use crate::runtime::{ModelConfig, ParamSet};
+use crate::train::model::ModelKind;
+use crate::train::workspace::ModelWorkspace;
+use rayon::prelude::*;
+
+/// Weighted sum aggregation `out[d] = Σ_{e→d} w_e · h[s]` into a
+/// caller-owned buffer (no normalization — GIN's injective aggregator).
+fn aggregate_sum_into(csr: &EdgeCsr, emask: &[f32], h: &[f32], out: &mut [f32], d_in: usize) {
+    out.par_chunks_mut(d_in).enumerate().for_each(|(d, row)| {
+        row.fill(0.0);
+        let lo = csr.in_off[d] as usize;
+        let hi = csr.in_off[d + 1] as usize;
+        for idx in lo..hi {
+            let w = emask[csr.in_eid[idx] as usize];
+            if w == 0.0 {
+                continue;
+            }
+            let s = csr.in_src[idx] as usize;
+            let srow = &h[s * d_in..s * d_in + d_in];
+            for (av, &hv) in row.iter_mut().zip(srow.iter()) {
+                *av += w * hv;
+            }
+        }
+    });
+}
+
+/// Backward of [`aggregate_sum_into`] w.r.t. `h`:
+/// `out[s] = Σ_{e: src_e = s} w_e · dcomb[d]`.
+fn scatter_sum_into(csr: &EdgeCsr, emask: &[f32], dcomb: &[f32], out: &mut [f32], d_in: usize) {
+    out.par_chunks_mut(d_in).enumerate().for_each(|(s, row)| {
+        row.fill(0.0);
+        let lo = csr.out_off[s] as usize;
+        let hi = csr.out_off[s + 1] as usize;
+        for idx in lo..hi {
+            let w = emask[csr.out_eid[idx] as usize];
+            if w == 0.0 {
+                continue;
+            }
+            let d = csr.out_dst[idx] as usize;
+            let drow = &dcomb[d * d_in..d * d_in + d_in];
+            for (dv, &gv) in row.iter_mut().zip(drow.iter()) {
+                *dv += w * gv;
+            }
+        }
+    });
+}
+
+/// Fast GIN forward pass into a caller-owned workspace; keeps every
+/// intermediate needed by [`backward_into`]. Allocates nothing.
+pub fn forward_into(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    feat: &[f32],
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+) {
+    debug_assert_eq!(cfg.kind, ModelKind::Gin);
+    debug_assert_eq!(feat.len(), n * cfg.feat_dim);
+    debug_assert_eq!(csr.n, n);
+    debug_assert_eq!(ws.n, n);
+    let h = cfg.hidden;
+    let ModelWorkspace { outs, msgs, combs, .. } = ws;
+    for l in 0..cfg.layers {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let eps = params.data[5 * l][0];
+        let w1 = &params.data[5 * l + 1];
+        let b1 = &params.data[5 * l + 2];
+        let w2 = &params.data[5 * l + 3];
+        let b2 = &params.data[5 * l + 4];
+        let (prev, rest) = outs.split_at_mut(l);
+        let hin: &[f32] = if l == 0 { feat } else { &prev[l - 1] };
+        let comb = &mut combs[l];
+        aggregate_sum_into(csr, emask, hin, comb, d_in);
+        // comb += (1 + ε) · h.
+        let self_scale = 1.0 + eps;
+        comb.par_chunks_mut(d_in).enumerate().for_each(|(i, row)| {
+            let srow = &hin[i * d_in..i * d_in + d_in];
+            for (cv, &hv) in row.iter_mut().zip(srow.iter()) {
+                *cv += self_scale * hv;
+            }
+        });
+        // hid = relu(comb · W1 + b1); out = hid · W2 + b2.
+        let hid = &mut msgs[l];
+        gemm::matmul(comb, w1, hid, n, d_in, h);
+        gemm::bias_relu_rows(hid, b1, h);
+        let out = &mut rest[0];
+        debug_assert_eq!(out.len(), n * d_out);
+        gemm::broadcast_rows(b2, out, d_out);
+        gemm::matmul_acc(hid, w2, out, n, h, d_out);
+    }
+}
+
+/// Backward pass into caller-owned gradient tensors
+/// (`ε, W1, b1, W2, b2` per layer). Expects the logits gradient at the
+/// front of `ws.dbuf_a` (as left by `loss_grad_into`). Every element of
+/// `grads` is overwritten; nothing allocates.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_into(
+    cfg: &ModelConfig,
+    params: &ParamSet,
+    feat: &[f32],
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+) {
+    debug_assert_eq!(cfg.kind, ModelKind::Gin);
+    debug_assert_eq!(grads.len(), params.data.len());
+    let h = cfg.hidden;
+    let ModelWorkspace { outs, msgs, combs, dbuf_a, dbuf_b, dagg, dmsg, dh_msg, .. } = ws;
+    for l in (0..cfg.layers).rev() {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let eps = params.data[5 * l][0];
+        let w1 = &params.data[5 * l + 1];
+        let w2 = &params.data[5 * l + 3];
+        let hin: &[f32] = if l == 0 { feat } else { &outs[l - 1] };
+        let hid = &msgs[l];
+        let comb = &combs[l];
+        // Layer outputs are linear, so the upstream gradient in dbuf_a is
+        // already the pre-bias gradient.
+        let dout = &dbuf_a[..n * d_out];
+        gemm::col_sums(dout, n, d_out, &mut grads[5 * l + 4]);
+        gemm::matmul_tn(hid, dout, &mut grads[5 * l + 3], n, h, d_out);
+        // Through the MLP hidden ReLU.
+        let dhid = &mut dmsg[..n * h];
+        gemm::matmul_nt(dout, w2, dhid, n, d_out, h);
+        dhid.par_chunks_mut(h).zip(hid.par_chunks(h)).for_each(|(drow, hrow)| {
+            for (dv, &hv) in drow.iter_mut().zip(hrow.iter()) {
+                if hv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+        });
+        gemm::col_sums(dhid, n, h, &mut grads[5 * l + 2]);
+        gemm::matmul_tn(comb, dhid, &mut grads[5 * l + 1], n, d_in, h);
+        // dcomb feeds both the ε gradient and (above layer 0) the input
+        // gradient.
+        let dcomb = &mut dagg[..n * d_in];
+        gemm::matmul_nt(dhid, w1, dcomb, n, h, d_in);
+        // dε = Σ_{ij} h_{ij} · dcomb_{ij}: sequential f64 fold, bit-stable
+        // for any pool size.
+        let mut deps = 0f64;
+        for (&hv, &cv) in hin.iter().zip(dcomb.iter()) {
+            deps += hv as f64 * cv as f64;
+        }
+        grads[5 * l][0] = deps as f32;
+        if l == 0 {
+            break;
+        }
+        // dh = (1 + ε) · dcomb + Σ_{e: s→d} w_e · dcomb[d].
+        let scat = &mut dh_msg[..n * d_in];
+        scatter_sum_into(csr, emask, dcomb, scat, d_in);
+        {
+            let dcomb_ro: &[f32] = dcomb;
+            let scat_ro: &[f32] = scat;
+            let self_scale = 1.0 + eps;
+            let dh = &mut dbuf_b[..n * d_in];
+            dh.par_chunks_mut(d_in).enumerate().for_each(|(i, row)| {
+                let crow = &dcomb_ro[i * d_in..i * d_in + d_in];
+                let srow = &scat_ro[i * d_in..i * d_in + d_in];
+                for ((dv, &cv), &sv) in row.iter_mut().zip(crow.iter()).zip(srow.iter()) {
+                    *dv = self_scale * cv + sv;
+                }
+            });
+        }
+        std::mem::swap(dbuf_a, dbuf_b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sage::loss_grad_into;
+    use super::*;
+    use crate::graph::features::{synthesize, FeatureParams};
+    use crate::partition::testutil::graph_zoo;
+    use crate::partition::{dar_weights, random::RandomVertexCut, Reweighting, VertexCut};
+    use crate::train::reference;
+    use crate::train::tensorize::{tensorize_partition, TrainBatch};
+    use crate::util::rng::Rng;
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (&g, &w)) in got.iter().zip(want.iter()).enumerate() {
+            assert!((g - w).abs() <= tol * (1.0 + w.abs()), "{what} elem {i}: got {g}, want {w}");
+        }
+    }
+
+    fn zoo_batch(gi: usize, g: &crate::graph::Graph, seed: u64) -> Option<TrainBatch> {
+        let n = g.num_nodes();
+        let mut rng = Rng::new(seed + gi as u64);
+        let comm: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+        let nd = synthesize(&comm, 4, &FeatureParams { dim: 5, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(g, &vc, Reweighting::Dar);
+        if vc.parts[0].num_edges() == 0 {
+            return None;
+        }
+        Some(tensorize_partition(&vc.parts[0], &nd, &w[0], 256, 2048).unwrap())
+    }
+
+    /// The fast GIN forward matches the naive reference oracle across the
+    /// graph zoo and layer counts, and is bit-identical for any rayon pool
+    /// size — with a nonzero ε in play so the self-scaling is exercised.
+    #[test]
+    fn gin_forward_matches_reference_across_zoo_and_threads() {
+        for (gi, g) in graph_zoo(37).iter().enumerate() {
+            let Some(batch) = zoo_batch(gi, g, 800) else { continue };
+            let csr = EdgeCsr::from_batch(&batch);
+            let emask = batch.emask().as_f32();
+            let feat = batch.tensors[0].as_f32();
+            let mut rng = Rng::new(950 + gi as u64);
+            for layers in [1usize, 2, 3] {
+                let cfg = ModelConfig {
+                    kind: ModelKind::Gin,
+                    layers,
+                    feat_dim: 5,
+                    hidden: 7,
+                    classes: 4,
+                };
+                let mut params = ParamSet::init_glorot(&cfg, &mut rng.fork(layers as u64));
+                for l in 0..layers {
+                    params.data[5 * l][0] = 0.1 * (l as f32 + 1.0);
+                }
+                let want = reference::forward(&cfg, &params, &batch);
+                let mut ws = ModelWorkspace::new(&cfg, batch.n_pad);
+                forward_into(&cfg, &params, feat, emask, &csr, batch.n_pad, &mut ws);
+                assert_close(ws.logits(), &want, 1e-4, "gin logits");
+                for threads in [1usize, 2, 8] {
+                    let pool =
+                        rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+                    let mut ws_t = ModelWorkspace::new(&cfg, batch.n_pad);
+                    pool.install(|| {
+                        forward_into(&cfg, &params, feat, emask, &csr, batch.n_pad, &mut ws_t)
+                    });
+                    assert_eq!(
+                        ws_t.logits(),
+                        ws.logits(),
+                        "graph#{gi} layers={layers}: gin forward differs at {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Central finite differences over every parameter tensor — the ε
+    /// scalars included (their probe is the whole tensor).
+    #[test]
+    fn gin_backward_matches_finite_differences() {
+        let mut rng = Rng::new(8);
+        let g = crate::graph::generators::barabasi_albert(120, 3, &mut rng);
+        let comm: Vec<u32> = (0..120).map(|i| (i % 3) as u32).collect();
+        let nd = synthesize(&comm, 3, &FeatureParams { dim: 6, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 128, 1024).unwrap();
+        let cfg =
+            ModelConfig { kind: ModelKind::Gin, layers: 2, feat_dim: 6, hidden: 8, classes: 3 };
+        let mut params = ParamSet::init_glorot(&cfg, &mut rng);
+        params.data[0][0] = 0.2; // nonzero ε so its gradient path is real
+        let csr = EdgeCsr::from_batch(&batch);
+        let feat = batch.tensors[0].as_f32().to_vec();
+        let emask = batch.emask().as_f32().to_vec();
+        let dar = batch.tensors[4].as_f32().to_vec();
+        let labels = batch.tensors[5].as_i32().to_vec();
+        let tmask = batch.tensors[6].as_f32().to_vec();
+        let n = batch.n_pad;
+        let mut ws = ModelWorkspace::new(&cfg, n);
+        let loss_of = |p: &ParamSet, ws: &mut ModelWorkspace| -> f64 {
+            forward_into(&cfg, p, &feat, &emask, &csr, n, ws);
+            loss_grad_into(&cfg, &dar, &labels, &tmask, n, ws).0
+        };
+        forward_into(&cfg, &params, &feat, &emask, &csr, n, &mut ws);
+        let _ = loss_grad_into(&cfg, &dar, &labels, &tmask, n, &mut ws);
+        let mut grads: Vec<Vec<f32>> =
+            params.data.iter().map(|p| vec![0f32; p.len()]).collect();
+        backward_into(&cfg, &params, &feat, &emask, &csr, n, &mut ws, &mut grads);
+        let eps = 2e-2f32;
+        let mut ws2 = ModelWorkspace::new(&cfg, n);
+        let mut checked = 0usize;
+        for pi in 0..params.data.len() {
+            let len = params.data[pi].len();
+            let step = (len / 25).max(1);
+            for ei in (0..len).step_by(step) {
+                let orig = params.data[pi][ei];
+                params.data[pi][ei] = orig + eps;
+                let lp = loss_of(&params, &mut ws2);
+                params.data[pi][ei] = orig - eps;
+                let lm = loss_of(&params, &mut ws2);
+                params.data[pi][ei] = orig;
+                let numeric = (lp - lm) / (2.0 * eps as f64);
+                let analytic = grads[pi][ei] as f64;
+                checked += 1;
+                assert!(
+                    (analytic - numeric).abs() <= 0.05 * numeric.abs().max(1.0) + 5e-3,
+                    "param {pi} elem {ei}: analytic {analytic} vs numeric {numeric}"
+                );
+            }
+        }
+        assert!(checked > 20, "probe coverage too small: {checked}");
+    }
+
+    /// Zeroing every edge weight collapses the aggregation: the layer sees
+    /// only `(1+ε)·h`, so padding rows (zero features) produce exactly the
+    /// MLP-of-zero logits `relu(b1)·W2 + b2`.
+    #[test]
+    fn gin_zero_mask_collapses_to_self_term() {
+        let mut rng = Rng::new(10);
+        let g = crate::graph::generators::barabasi_albert(80, 2, &mut rng);
+        let comm: Vec<u32> = (0..80).map(|i| (i % 3) as u32).collect();
+        let nd = synthesize(&comm, 3, &FeatureParams { dim: 4, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 128, 1024).unwrap();
+        let cfg =
+            ModelConfig { kind: ModelKind::Gin, layers: 1, feat_dim: 4, hidden: 8, classes: 3 };
+        let params = ParamSet::init_glorot(&cfg, &mut rng);
+        let csr = EdgeCsr::from_batch(&batch);
+        let zeros = vec![0f32; batch.e_pad];
+        let mut ws = ModelWorkspace::new(&cfg, batch.n_pad);
+        forward_into(
+            &cfg,
+            &params,
+            batch.tensors[0].as_f32(),
+            &zeros,
+            &csr,
+            batch.n_pad,
+            &mut ws,
+        );
+        // b1 is zero-initialized, so relu(b1)·W2 + b2 = b2 for zero rows.
+        let b2 = &params.data[4];
+        for i in batch.n_used..batch.n_pad {
+            for j in 0..cfg.classes {
+                assert!((ws.logits()[i * cfg.classes + j] - b2[j]).abs() < 1e-6);
+            }
+        }
+    }
+}

@@ -1,34 +1,43 @@
 //! The native CPU training backend.
 //!
-//! A fast pure-Rust GraphSAGE forward + backward (see [`sage`]) behind the
-//! [`Backend`] trait, so the default build runs real end-to-end CoFree
-//! training — no XLA toolchain required. Per-partition workers execute in
-//! parallel via rayon ([`CpuBackend::run_workers`]), which is the paper's
-//! communication-free parallelism demonstrated in-process: the only data
-//! crossing worker boundaries is the summed gradient.
+//! Fast pure-Rust forward + backward kernels for every
+//! [`ModelKind`](crate::train::model::ModelKind) — GraphSAGE ([`sage`]),
+//! GCN ([`gcn`]) and GIN ([`gin`]) — behind the [`Backend`] trait, so the
+//! default build runs real end-to-end CoFree training for any architecture
+//! with no XLA toolchain required. [`train_step_into`] dispatches on
+//! `model.kind`; everything around it (the DAR-weighted softmax-CE loss,
+//! the `EdgeCsr` aggregation index, DropEdge-K masks, the workspace arena)
+//! is shared. Per-partition workers execute in parallel via rayon
+//! ([`CpuBackend::run_workers`]), which is the paper's communication-free
+//! parallelism demonstrated in-process: the only data crossing worker
+//! boundaries is the summed gradient.
 //!
 //! Worker preparation builds one [`sage::EdgeCsr`] per partition (the
 //! segment-aggregation index), the partition's
-//! [`SageWorkspace`](crate::train::workspace::SageWorkspace) arena (every
-//! per-step temporary, allocated once), and, under DropEdge-K, the
-//! pre-generated mask bank; a training step is then pure compute over
-//! those indexes into those buffers — [`train_step_into`] performs **zero
-//! heap allocations** in steady state, and `run_workers` writes its
-//! results into engine-owned reusable slots. All results are bit-stable
-//! for any rayon pool size AND bit-identical to the retained pre-PR
+//! [`ModelWorkspace`](crate::train::workspace::ModelWorkspace) arena (every
+//! per-step temporary, allocated once at the model's shape-driven sizes),
+//! and, under DropEdge-K, the pre-generated mask bank; a training step is
+//! then pure compute over those indexes into those buffers —
+//! [`train_step_into`] performs **zero heap allocations** in steady state
+//! for every model kind, and `run_workers` writes its results into
+//! engine-owned reusable slots. All results are bit-stable for any rayon
+//! pool size AND, for GraphSAGE, bit-identical to the retained pre-PR
 //! scalar path ([`train_step_scalar`]) — see `train::backend` for the
 //! contract and `tests/train_native.rs` / `tests/alloc_steady.rs` for the
 //! end-to-end proofs.
 
+pub mod gcn;
 pub mod gemm;
+pub mod gin;
 pub mod sage;
 
 use super::backend::Backend;
 use super::dropedge::MaskBank;
 use super::tensorize::{EvalBatch, TrainBatch};
-use super::workspace::{ensure_grad_shapes, SageWorkspace};
+use super::workspace::{ensure_grad_shapes, ModelWorkspace};
 use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, Tensor, TrainOut};
 use crate::train::bucket::pad_explicit;
+use crate::train::model::ModelKind;
 use crate::train::reference::argmax;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -49,7 +58,7 @@ pub struct CpuWorker {
     /// The per-step arena. A `Mutex` only so `run_workers` can fill it
     /// from a `&self` rayon loop — each worker is visited exactly once per
     /// epoch, so the lock is never contended.
-    scratch: Mutex<SageWorkspace>,
+    scratch: Mutex<ModelWorkspace>,
 }
 
 /// Prepared full-graph evaluation state.
@@ -58,7 +67,7 @@ pub struct CpuEval {
     model: ModelConfig,
     csr: EdgeCsr,
     /// Forward-pass arena for eval epochs (same uncontended-`Mutex` deal).
-    scratch: Mutex<SageWorkspace>,
+    scratch: Mutex<ModelWorkspace>,
 }
 
 /// The native backend (stateless beyond what each worker carries).
@@ -82,7 +91,7 @@ pub fn train_step_into(
     batch: &TrainBatch,
     csr: &EdgeCsr,
     emask: &[f32],
-    ws: &mut SageWorkspace,
+    ws: &mut ModelWorkspace,
     out: &mut TrainOut,
 ) {
     let n = batch.n_pad;
@@ -90,13 +99,56 @@ pub fn train_step_into(
     let dar = batch.tensors[4].as_f32();
     let labels = batch.tensors[5].as_i32();
     let tmask = batch.tensors[6].as_f32();
-    sage::forward_into(model, params, feat, emask, csr, n, ws);
+    forward_into(model, params, feat, emask, csr, n, ws);
+    // The DAR-weighted softmax-CE loss is architecture-independent: it
+    // reads the workspace logits and leaves the logits gradient where
+    // every model's backward expects it.
     let (loss_sum, weight_sum, correct) = sage::loss_grad_into(model, dar, labels, tmask, n, ws);
     ensure_grad_shapes(model, out);
-    sage::backward_into(model, params, feat, emask, csr, n, ws, &mut out.grads);
+    backward_into(model, params, feat, emask, csr, n, ws, &mut out.grads);
     out.loss_sum = loss_sum as f32;
     out.weight_sum = weight_sum as f32;
     out.correct = correct as f32;
+}
+
+/// Model-dispatching forward pass into a caller-owned workspace (the
+/// per-kind kernels live in [`sage`], [`gcn`] and [`gin`]). Allocates
+/// nothing.
+pub fn forward_into(
+    model: &ModelConfig,
+    params: &ParamSet,
+    feat: &[f32],
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+) {
+    match model.kind {
+        ModelKind::Sage => sage::forward_into(model, params, feat, emask, csr, n, ws),
+        ModelKind::Gcn => gcn::forward_into(model, params, feat, emask, csr, n, ws),
+        ModelKind::Gin => gin::forward_into(model, params, feat, emask, csr, n, ws),
+    }
+}
+
+/// Model-dispatching backward pass into caller-owned gradient tensors.
+/// Expects the logits gradient at the front of `ws.dbuf_a`. Allocates
+/// nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_into(
+    model: &ModelConfig,
+    params: &ParamSet,
+    feat: &[f32],
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+) {
+    match model.kind {
+        ModelKind::Sage => sage::backward_into(model, params, feat, emask, csr, n, ws, grads),
+        ModelKind::Gcn => gcn::backward_into(model, params, feat, emask, csr, n, ws, grads),
+        ModelKind::Gin => gin::backward_into(model, params, feat, emask, csr, n, ws, grads),
+    }
 }
 
 /// One native train step with a throwaway workspace — the convenience
@@ -110,7 +162,7 @@ pub fn train_step(
     csr: &EdgeCsr,
     emask: &[f32],
 ) -> TrainOut {
-    let mut ws = SageWorkspace::new(model, batch.n_pad);
+    let mut ws = ModelWorkspace::new(model, batch.n_pad);
     let mut out = TrainOut::default();
     train_step_into(model, params, batch, csr, emask, &mut ws, &mut out);
     out
@@ -126,6 +178,7 @@ pub fn train_step_scalar(
     csr: &EdgeCsr,
     emask: &[f32],
 ) -> TrainOut {
+    assert_eq!(model.kind, ModelKind::Sage, "the scalar oracle covers the Sage path");
     let n = batch.n_pad;
     let feat = batch.tensors[0].as_f32();
     let dar = batch.tensors[4].as_f32();
@@ -174,13 +227,13 @@ impl Backend for CpuBackend {
             None => Vec::new(),
             Some((k, ratio)) => MaskBank::generate(&batch, k, ratio, rng).masks,
         };
-        let scratch = Mutex::new(SageWorkspace::new(model, batch.n_pad));
+        let scratch = Mutex::new(ModelWorkspace::new(model, batch.n_pad));
         Ok(CpuWorker { batch, model: *model, csr, masks, scratch })
     }
 
     fn prepare_eval(&mut self, model: &ModelConfig, batch: EvalBatch) -> Result<CpuEval> {
         let csr = EdgeCsr::from_eval(&batch);
-        let scratch = Mutex::new(SageWorkspace::new(model, batch.n_pad));
+        let scratch = Mutex::new(ModelWorkspace::new(model, batch.n_pad));
         Ok(CpuEval { batch, model: *model, csr, scratch })
     }
 
@@ -238,8 +291,8 @@ impl Backend for CpuBackend {
 }
 
 impl CpuEval {
-    fn forward(&self, params: &ParamSet, ws: &mut SageWorkspace) {
-        sage::forward_into(
+    fn forward(&self, params: &ParamSet, ws: &mut ModelWorkspace) {
+        forward_into(
             &self.model,
             params,
             self.batch.tensors[0].as_f32(),
@@ -294,7 +347,8 @@ mod tests {
         let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
         let w = dar_weights(&g, &vc, Reweighting::Dar);
         let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 256, 2048).unwrap();
-        let model = ModelConfig { layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
+        let model =
+            ModelConfig { kind: ModelKind::Sage, layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
         let params = ParamSet::init_glorot(&model, &mut rng);
         let mut be = CpuBackend::new();
         let worker = be
@@ -330,7 +384,8 @@ mod tests {
         let comm: Vec<u32> = (0..150).map(|i| (i % 4) as u32).collect();
         let nd = synthesize(&comm, 4, &FeatureParams { dim: 6, ..Default::default() }, &mut rng);
         let batch = tensorize_full_eval(&g, &nd, 256, 2048).unwrap();
-        let model = ModelConfig { layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
+        let model =
+            ModelConfig { kind: ModelKind::Sage, layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
         let params = ParamSet::init_glorot(&model, &mut rng);
         let mut be = CpuBackend::new();
         let eval = be.prepare_eval(&model, batch).unwrap();

@@ -13,7 +13,7 @@
 //!   `msg[src]` reads hit a stripe that fits in cache instead of missing
 //!   to DRAM on every edge;
 //! * every per-step temporary lives in a caller-owned
-//!   [`SageWorkspace`](crate::train::workspace::SageWorkspace) — the
+//!   [`ModelWorkspace`](crate::train::workspace::ModelWorkspace) — the
 //!   `*_into` entry points allocate nothing;
 //! * the DAR-weighted softmax-CE gradient is computed analytically, so one
 //!   [`train_step_into`](super::train_step_into) produces the same
@@ -31,7 +31,7 @@ use super::gemm;
 use crate::runtime::{ModelConfig, ParamSet};
 use crate::train::reference::argmax;
 use crate::train::tensorize::{EvalBatch, TrainBatch};
-use crate::train::workspace::SageWorkspace;
+use crate::train::workspace::ModelWorkspace;
 use rayon::prelude::*;
 
 /// Edge index of one padded batch: the directed message edges grouped both
@@ -296,14 +296,15 @@ pub fn forward_into(
     emask: &[f32],
     csr: &EdgeCsr,
     n: usize,
-    ws: &mut SageWorkspace,
+    ws: &mut ModelWorkspace,
 ) {
+    debug_assert_eq!(cfg.kind, crate::train::model::ModelKind::Sage);
     debug_assert_eq!(feat.len(), n * cfg.feat_dim);
     debug_assert_eq!(csr.n, n);
     debug_assert_eq!(ws.n, n);
     debug_assert_eq!(ws.outs.len(), cfg.layers);
     let h = cfg.hidden;
-    let SageWorkspace { outs, msgs, aggs, denoms, .. } = ws;
+    let ModelWorkspace { outs, msgs, aggs, denoms, .. } = ws;
     let mut d_in = cfg.feat_dim;
     for l in 0..cfg.layers {
         let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
@@ -340,10 +341,10 @@ pub fn loss_grad_into(
     labels: &[i32],
     tmask: &[f32],
     n: usize,
-    ws: &mut SageWorkspace,
+    ws: &mut ModelWorkspace,
 ) -> (f64, f64, f64) {
     let c = cfg.classes;
-    let SageWorkspace { outs, per_node, dbuf_a, .. } = ws;
+    let ModelWorkspace { outs, per_node, dbuf_a, .. } = ws;
     let logits: &[f32] = outs.last().expect("forward_into ran");
     debug_assert_eq!(logits.len(), n * c);
     let dlogits = &mut dbuf_a[..n * c];
@@ -404,12 +405,12 @@ pub fn backward_into(
     emask: &[f32],
     csr: &EdgeCsr,
     n: usize,
-    ws: &mut SageWorkspace,
+    ws: &mut ModelWorkspace,
     grads: &mut [Vec<f32>],
 ) {
     let h = cfg.hidden;
     debug_assert_eq!(grads.len(), params.data.len());
-    let SageWorkspace { outs, msgs, aggs, denoms, dbuf_a, dbuf_b, dagg, dmsg, dh_msg, .. } = ws;
+    let ModelWorkspace { outs, msgs, aggs, denoms, dbuf_a, dbuf_b, dagg, dmsg, dh_msg, .. } = ws;
     for l in (0..cfg.layers).rev() {
         let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
         let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
@@ -729,6 +730,7 @@ mod tests {
     use crate::graph::generators::barabasi_albert;
     use crate::partition::testutil::graph_zoo;
     use crate::partition::{dar_weights, random::RandomVertexCut, Reweighting, VertexCut};
+    use crate::train::model::ModelKind;
     use crate::train::reference;
     use crate::train::tensorize::{tensorize_partition, TrainBatch};
     use crate::util::rng::Rng;
@@ -745,7 +747,7 @@ mod tests {
         let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
         let w = dar_weights(&g, &vc, Reweighting::Dar);
         let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 128, 1024).unwrap();
-        let cfg = ModelConfig { layers, feat_dim: 6, hidden: 8, classes: 3 };
+        let cfg = ModelConfig { kind: ModelKind::Sage, layers, feat_dim: 6, hidden: 8, classes: 3 };
         let params = ParamSet::init_glorot(&cfg, &mut rng);
         (cfg, params, batch)
     }
@@ -767,8 +769,8 @@ mod tests {
         batch: &TrainBatch,
         csr: &EdgeCsr,
         emask: &[f32],
-    ) -> SageWorkspace {
-        let mut ws = SageWorkspace::new(cfg, batch.n_pad);
+    ) -> ModelWorkspace {
+        let mut ws = ModelWorkspace::new(cfg, batch.n_pad);
         forward_into(cfg, params, batch.tensors[0].as_f32(), emask, csr, batch.n_pad, &mut ws);
         ws
     }
@@ -816,7 +818,13 @@ mod tests {
             let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 256, 2048).unwrap();
             let csr = batch_csr(&batch);
             for layers in [1usize, 2, 3] {
-                let cfg = ModelConfig { layers, feat_dim: 5, hidden: 7, classes: 4 };
+                let cfg = ModelConfig {
+                    kind: ModelKind::Sage,
+                    layers,
+                    feat_dim: 5,
+                    hidden: 7,
+                    classes: 4,
+                };
                 let params = ParamSet::init_glorot(&cfg, &mut rng.fork(layers as u64));
                 let want = reference::forward(&cfg, &params, &batch);
                 let feat = batch.tensors[0].as_f32();
@@ -894,7 +902,13 @@ mod tests {
             let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 256, 2048).unwrap();
             let csr = batch_csr(&batch);
             for layers in [1usize, 2, 3] {
-                let cfg = ModelConfig { layers, feat_dim: 5, hidden: 7, classes: 4 };
+                let cfg = ModelConfig {
+                    kind: ModelKind::Sage,
+                    layers,
+                    feat_dim: 5,
+                    hidden: 7,
+                    classes: 4,
+                };
                 let params = ParamSet::init_glorot(&cfg, &mut rng.fork(layers as u64));
                 let new = super::super::train_step(
                     &cfg,
@@ -937,8 +951,8 @@ mod tests {
         let labels = batch.tensors[5].as_i32().to_vec();
         let tmask = batch.tensors[6].as_f32().to_vec();
         let n = batch.n_pad;
-        let mut ws = SageWorkspace::new(&cfg, n);
-        let loss_of = |p: &ParamSet, ws: &mut SageWorkspace| -> f64 {
+        let mut ws = ModelWorkspace::new(&cfg, n);
+        let loss_of = |p: &ParamSet, ws: &mut ModelWorkspace| -> f64 {
             forward_into(&cfg, p, &feat, &emask, &csr, n, ws);
             loss_grad_into(&cfg, &dar, &labels, &tmask, n, ws).0
         };
@@ -951,7 +965,7 @@ mod tests {
         let eps = 2e-2f32;
         let (mut num_sq, mut diff_sq) = (0f64, 0f64);
         let mut checked = 0usize;
-        let mut ws2 = SageWorkspace::new(&cfg, n);
+        let mut ws2 = ModelWorkspace::new(&cfg, n);
         for pi in 0..params.data.len() {
             // Probe a spread of entries in every parameter tensor.
             let len = params.data[pi].len();

@@ -34,6 +34,7 @@ use super::tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_part
 use crate::graph::Dataset;
 use crate::partition::{dar_weights, Reweighting, VertexCut};
 use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, TrainOut};
+use crate::train::model::ModelKind;
 use crate::train::cpu::CpuBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
@@ -133,14 +134,26 @@ impl<B: Backend> Run<B> {
     }
 }
 
-/// The engine: Algorithm 1 over any [`Backend`].
+/// The engine: Algorithm 1 over any [`Backend`]. `kind` selects the GNN
+/// architecture the engine prepares and trains (the loop itself is
+/// model-agnostic — only the backend's `train_step` and the parameter
+/// layout dispatch on it).
 pub struct TrainEngine<B: Backend> {
     pub backend: B,
+    pub kind: ModelKind,
 }
 
-/// Model config implied by a dataset's recipe.
+/// Model config implied by a dataset's recipe (GraphSAGE, the default
+/// architecture).
 pub fn model_config(ds: &Dataset) -> ModelConfig {
+    model_config_for(ds, ModelKind::Sage)
+}
+
+/// Model config implied by a dataset's recipe, for an explicit
+/// architecture kind.
+pub fn model_config_for(ds: &Dataset, kind: ModelKind) -> ModelConfig {
     ModelConfig {
+        kind,
         layers: ds.layers,
         feat_dim: ds.data.dim,
         hidden: ds.hidden,
@@ -158,9 +171,16 @@ pub fn worker_mask_rng(seed: u64, worker: usize) -> Rng {
 }
 
 impl TrainEngine<CpuBackend> {
-    /// The native CPU engine (default features, no XLA toolchain needed).
+    /// The native CPU engine (default features, no XLA toolchain needed),
+    /// training the default GraphSAGE architecture.
     pub fn native() -> TrainEngine<CpuBackend> {
-        TrainEngine { backend: CpuBackend::new() }
+        TrainEngine::native_model(ModelKind::Sage)
+    }
+
+    /// The native CPU engine for an explicit architecture
+    /// (`cofree train --model sage|gcn|gin`).
+    pub fn native_model(kind: ModelKind) -> TrainEngine<CpuBackend> {
+        TrainEngine { backend: CpuBackend::new(), kind }
     }
 }
 
@@ -191,7 +211,7 @@ impl<B: Backend> TrainEngine<B> {
         dropedge: Option<(usize, f64)>,
         seed: u64,
     ) -> Result<Run<B>> {
-        let model = model_config(ds);
+        let model = model_config_for(ds, self.kind);
         let weights = dar_weights(&ds.graph, vc, reweighting);
         let mut workers = Vec::with_capacity(vc.parts.len());
         let mut meta = Vec::with_capacity(vc.parts.len());
@@ -254,7 +274,7 @@ impl<B: Backend> TrainEngine<B> {
         dropedge: Option<(usize, f64)>,
         seed: u64,
     ) -> Result<Run<B>> {
-        let model = model_config(ds);
+        let model = model_config_for(ds, self.kind);
         let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
         let (n_pad, e_pad) = self.backend.bucket(&model, ArtifactKind::Train, n, 2 * m)?;
         let batch = tensorize_full_train(&ds.graph, &ds.data, n_pad, e_pad)?;
@@ -273,7 +293,7 @@ impl<B: Backend> TrainEngine<B> {
 
     /// Prepare full-graph evaluation (val/test accuracy for the tables).
     pub fn prepare_eval(&mut self, ds: &Dataset) -> Result<B::Eval> {
-        let model = model_config(ds);
+        let model = model_config_for(ds, self.kind);
         let (n, m) = (ds.graph.num_nodes(), ds.graph.num_edges());
         let (n_pad, e_pad) = self.backend.bucket(&model, ArtifactKind::Eval, n, 2 * m)?;
         let batch = tensorize_full_eval(&ds.graph, &ds.data, n_pad, e_pad)?;
@@ -354,7 +374,7 @@ impl<B: Backend> TrainEngine<B> {
         // Epoch-level scratch, allocated once and reused every iteration:
         // the worker selection, the pre-drawn mask picks, and the backend's
         // output slots (whose `TrainOut` gradient tensors persist across
-        // epochs). Together with each worker's `SageWorkspace` arena this
+        // epochs). Together with each worker's `ModelWorkspace` arena this
         // makes the steady-state epoch allocation-free — asserted by
         // `tests/alloc_steady.rs` under a counting global allocator.
         let mut selected: Vec<usize> = Vec::with_capacity(run.workers.len());
@@ -509,6 +529,9 @@ impl TrainEngine<XlaBackend> {
                 registry: Registry::load(artifacts_dir)?,
                 cache: HashMap::new(),
             },
+            // The AOT artifacts lower the GraphSAGE step only; other model
+            // kinds run on the native backend.
+            kind: ModelKind::Sage,
         })
     }
 }

@@ -21,6 +21,7 @@ pub mod cpu;
 pub mod dropedge;
 pub mod engine;
 pub mod metrics;
+pub mod model;
 pub mod optimizer;
 pub mod reference;
 pub mod sampling;
@@ -32,10 +33,13 @@ pub use bucket::bucket_shapes;
 pub use checkpoint::TrainCheckpoint;
 pub use cpu::CpuBackend;
 pub use dropedge::MaskBank;
-pub use engine::{model_config, worker_mask_rng, Run, RunMode, TrainConfig, TrainEngine};
+pub use engine::{
+    model_config, model_config_for, worker_mask_rng, Run, RunMode, TrainConfig, TrainEngine,
+};
 #[cfg(feature = "xla")]
 pub use engine::{XlaBackend, XlaEngine};
 pub use metrics::{EpochStats, History};
+pub use model::{GnnModel, ModelKind};
 pub use optimizer::{Adam, Optimizer, OptimizerState, Sgd};
 pub use tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch};
-pub use workspace::SageWorkspace;
+pub use workspace::ModelWorkspace;

@@ -1,0 +1,457 @@
+//! The `GnnModel` abstraction: a model is a typed **layer recipe**.
+//!
+//! The paper's communication-free training scheme is model-agnostic — its
+//! experiments run both GCN and GraphSAGE — so the training stack must not
+//! hard-wire one architecture. This module is the single place that knows
+//! what a "model" is:
+//!
+//! * a [`ModelKind`] (the architecture family) plus the dims already in
+//!   [`ModelConfig`] (layers, feat_dim, hidden, classes);
+//! * a list of **named parameter tensors with shapes**
+//!   ([`GnnModel::param_specs`]) in a stable lowering order — the order
+//!   every gradient list, checkpoint, optimizer moment and wire frame uses;
+//! * a per-layer **forward plan** over the shared primitive ops — GEMM,
+//!   weighted CSR aggregation, bias(+ReLU), concat/add combine — exposed as
+//!   buffer-width [`LayerPlan`]s so the workspace arena can preallocate
+//!   every per-step temporary at its exact size (the zero-allocation
+//!   steady-state contract of `tests/alloc_steady.rs` holds for every
+//!   kind).
+//!
+//! Three kinds ship:
+//!
+//! * **`Sage`** (GraphSAGE, the original architecture): per layer
+//!   `msg = relu(h·W + b)`, `agg = weighted neighbor mean of msg`,
+//!   `h' = concat(agg, h)·U + c`. Params `W [d_in,H], b [H],
+//!   U [H+d_in,d_out], c [d_out]`.
+//! * **`Gcn`** (Kipf & Welling 2017): symmetric-normalized aggregation
+//!   with an implicit self-loop — `ĉ_v = 1 + Σ_{e→v} w_e`,
+//!   `agg_d = Σ_{e→d} w_e/√(ĉ_s ĉ_d) · h_s`,
+//!   `comb = agg + h/ĉ` (the Ã = A + I self term), then
+//!   `h' = comb·W + b` with ReLU on every layer but the last. Params
+//!   `W [d_in,d_out], b [d_out]`.
+//! * **`Gin`** (Xu et al. 2019): sum aggregation and a 2-layer MLP with a
+//!   trainable ε — `comb = (1+ε)·h + Σ_{e→d} w_e h_s`,
+//!   `h' = relu(comb·W1 + b1)·W2 + b2` (output linear, matching the
+//!   Sage convention of linear layer outputs). Params `ε [1],
+//!   W1 [d_in,H], b1 [H], W2 [H,d_out], b2 [d_out]`.
+//!
+//! Every model consumes the same tensorized batch (feat/src/dst/emask/
+//! dar/labels/tmask), the same `EdgeCsr` index, and the same DAR-weighted
+//! softmax-CE loss, so DropEdge-K, the shard store, the wire protocol and
+//! both transports work for all kinds unchanged. The native kernels live in
+//! `train/cpu/{sage,gcn,gin}.rs`; the naive scalar oracles in
+//! `train/reference.rs`.
+
+use crate::runtime::ModelConfig;
+use anyhow::{bail, Result};
+
+/// The architecture family of a [`ModelConfig`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// GraphSAGE with mean aggregation and concat combine (the default —
+    /// the architecture this repo reproduced first).
+    #[default]
+    Sage,
+    /// GCN: symmetric-normalized aggregation, add combine.
+    Gcn,
+    /// GIN: sum aggregation, (1+ε)·self + 2-layer MLP.
+    Gin,
+}
+
+impl ModelKind {
+    /// Every supported kind, in serialization-code order.
+    pub const ALL: [ModelKind; 3] = [ModelKind::Sage, ModelKind::Gcn, ModelKind::Gin];
+
+    /// Parse a CLI/config name (`sage|gcn|gin`).
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s {
+            "sage" => Some(ModelKind::Sage),
+            "gcn" => Some(ModelKind::Gcn),
+            "gin" => Some(ModelKind::Gin),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::Sage => "sage",
+            ModelKind::Gcn => "gcn",
+            ModelKind::Gin => "gin",
+        }
+    }
+
+    /// Stable serialization tag (checkpoint header, wire `Config` frame).
+    pub fn code(&self) -> u8 {
+        match self {
+            ModelKind::Sage => 0,
+            ModelKind::Gcn => 1,
+            ModelKind::Gin => 2,
+        }
+    }
+
+    /// Inverse of [`ModelKind::code`], with a found-vs-expected error.
+    pub fn from_code(code: u8) -> Result<ModelKind> {
+        match code {
+            0 => Ok(ModelKind::Sage),
+            1 => Ok(ModelKind::Gcn),
+            2 => Ok(ModelKind::Gin),
+            other => bail!(
+                "unknown model kind tag: expected 0 (sage), 1 (gcn) or 2 (gin), found {other}"
+            ),
+        }
+    }
+}
+
+/// One named parameter tensor of a model's flat parameter list.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParamSpec {
+    /// Stable dotted name, e.g. `"l0.msg.W"` or `"l1.eps"`.
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// Buffer widths (f32 elements per padded node row) one layer of the
+/// forward/backward plan needs. A width of 0 means the model does not use
+/// that buffer at this layer; `n × width` is the exact allocation the
+/// workspace arena makes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LayerPlan {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Layer output (`outs[l]`): always `d_out`.
+    pub out_w: usize,
+    /// Hidden-activation buffer (`msgs[l]`): Sage post-ReLU messages, GIN
+    /// MLP hidden rows; unused by GCN.
+    pub msg_w: usize,
+    /// Raw aggregation buffer (`aggs[l]`): Sage keeps the aggregated
+    /// messages for backward; GCN/GIN fold the aggregate into `combs[l]`.
+    pub agg_w: usize,
+    /// Combined pre-GEMM input (`combs[l]`): GCN `agg + h/ĉ`, GIN
+    /// `(1+ε)h + Σ`; unused by Sage (its combine is the concat GEMM).
+    pub comb_w: usize,
+    /// Whether this layer keeps per-node aggregation denominators.
+    pub needs_denom: bool,
+}
+
+/// Row widths of the backward scratch buffers shared across layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScratchWidths {
+    /// Upstream-gradient ping/pong buffers (`dbuf_a`/`dbuf_b`).
+    pub dbuf: usize,
+    /// `dagg` scratch: Sage gradient into the aggregation half; GCN/GIN
+    /// gradient w.r.t. the combined input.
+    pub dagg: usize,
+    /// `dmsg` scratch: Sage/GIN gradient w.r.t. hidden activations; GCN
+    /// scatter output.
+    pub dmsg: usize,
+    /// `dh_msg` scratch: second addend of the input gradient.
+    pub dh_msg: usize,
+}
+
+/// A model = kind + dims, viewed as a typed layer recipe. Thin by design:
+/// it borrows nothing and computes everything from the [`ModelConfig`], so
+/// call sites that only need shapes (`ModelConfig::param_shapes`) stay
+/// allocation-light.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GnnModel {
+    pub cfg: ModelConfig,
+}
+
+impl GnnModel {
+    pub fn new(cfg: &ModelConfig) -> GnnModel {
+        GnnModel { cfg: *cfg }
+    }
+
+    /// Output width of layer `l` (`hidden` everywhere, `classes` last).
+    pub fn d_out(&self, l: usize) -> usize {
+        if l == self.cfg.layers - 1 {
+            self.cfg.classes
+        } else {
+            self.cfg.hidden
+        }
+    }
+
+    /// Input width of layer `l` (`feat_dim` first, `hidden` after).
+    pub fn d_in(&self, l: usize) -> usize {
+        if l == 0 {
+            self.cfg.feat_dim
+        } else {
+            self.cfg.hidden
+        }
+    }
+
+    /// Named parameter tensors in lowering order — THE definition of the
+    /// flat parameter list every gradient fold, checkpoint, optimizer
+    /// moment and wire frame indexes into.
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        let h = self.cfg.hidden;
+        let mut out = Vec::new();
+        for l in 0..self.cfg.layers {
+            let (d_in, d_out) = (self.d_in(l), self.d_out(l));
+            let mut push = |name: &str, shape: Vec<usize>| {
+                out.push(ParamSpec { name: format!("l{l}.{name}"), shape });
+            };
+            match self.cfg.kind {
+                ModelKind::Sage => {
+                    push("msg.W", vec![d_in, h]);
+                    push("msg.b", vec![h]);
+                    push("comb.U", vec![h + d_in, d_out]);
+                    push("comb.c", vec![d_out]);
+                }
+                ModelKind::Gcn => {
+                    push("W", vec![d_in, d_out]);
+                    push("b", vec![d_out]);
+                }
+                ModelKind::Gin => {
+                    push("eps", vec![1]);
+                    push("mlp.W1", vec![d_in, h]);
+                    push("mlp.b1", vec![h]);
+                    push("mlp.W2", vec![h, d_out]);
+                    push("mlp.b2", vec![d_out]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Parameter tensors per layer (the stride of the flat list).
+    pub fn params_per_layer(&self) -> usize {
+        match self.cfg.kind {
+            ModelKind::Sage => 4,
+            ModelKind::Gcn => 2,
+            ModelKind::Gin => 5,
+        }
+    }
+
+    /// Shapes of the flat parameter list, in lowering order.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        self.param_specs().into_iter().map(|s| s.shape).collect()
+    }
+
+    /// Number of tensors in the flat parameter list.
+    pub fn num_param_tensors(&self) -> usize {
+        self.cfg.layers * self.params_per_layer()
+    }
+
+    /// Visit the flat length of every parameter tensor in lowering order
+    /// **without allocating** — the hot-path form of [`param_shapes`]
+    /// (`ensure_grad_shapes` runs once per train step inside the
+    /// zero-allocation steady state, so it must not build specs or shape
+    /// vectors). Kept consistent with [`param_specs`] by a test below.
+    ///
+    /// [`param_shapes`]: GnnModel::param_shapes
+    /// [`param_specs`]: GnnModel::param_specs
+    pub fn for_each_param_len(&self, mut f: impl FnMut(usize)) {
+        let h = self.cfg.hidden;
+        for l in 0..self.cfg.layers {
+            let (d_in, d_out) = (self.d_in(l), self.d_out(l));
+            match self.cfg.kind {
+                ModelKind::Sage => {
+                    f(d_in * h);
+                    f(h);
+                    f((h + d_in) * d_out);
+                    f(d_out);
+                }
+                ModelKind::Gcn => {
+                    f(d_in * d_out);
+                    f(d_out);
+                }
+                ModelKind::Gin => {
+                    f(1);
+                    f(d_in * h);
+                    f(h);
+                    f(h * d_out);
+                    f(d_out);
+                }
+            }
+        }
+    }
+
+    /// The per-layer buffer plan the workspace arena allocates from.
+    pub fn layer_plans(&self) -> Vec<LayerPlan> {
+        let h = self.cfg.hidden;
+        (0..self.cfg.layers)
+            .map(|l| {
+                let (d_in, d_out) = (self.d_in(l), self.d_out(l));
+                match self.cfg.kind {
+                    ModelKind::Sage => LayerPlan {
+                        d_in,
+                        d_out,
+                        out_w: d_out,
+                        msg_w: h,
+                        agg_w: h,
+                        comb_w: 0,
+                        needs_denom: true,
+                    },
+                    // ĉ depends only on the edge weights, not the layer:
+                    // one denominator buffer (layer 0) serves the whole
+                    // forward/backward.
+                    ModelKind::Gcn => LayerPlan {
+                        d_in,
+                        d_out,
+                        out_w: d_out,
+                        msg_w: 0,
+                        agg_w: 0,
+                        comb_w: d_in,
+                        needs_denom: l == 0,
+                    },
+                    ModelKind::Gin => LayerPlan {
+                        d_in,
+                        d_out,
+                        out_w: d_out,
+                        msg_w: h,
+                        agg_w: 0,
+                        comb_w: d_in,
+                        needs_denom: false,
+                    },
+                }
+            })
+            .collect()
+    }
+
+    /// Row widths of the shared backward scratch buffers. Sized so every
+    /// layer's backward fits; a 0 width means the kind never touches that
+    /// buffer (single-layer models skip input gradients entirely).
+    pub fn scratch_widths(&self) -> ScratchWidths {
+        let ModelConfig { layers, feat_dim, hidden, classes, .. } = self.cfg;
+        let dbuf = hidden.max(classes);
+        let deep = layers > 1;
+        match self.cfg.kind {
+            ModelKind::Sage => {
+                ScratchWidths { dbuf, dagg: hidden, dmsg: hidden, dh_msg: hidden }
+            }
+            // dcomb (dagg) and the scatter output (dmsg) exist only when an
+            // input gradient is needed, i.e. above layer 0.
+            ModelKind::Gcn => ScratchWidths {
+                dbuf,
+                dagg: if deep { hidden } else { 0 },
+                dmsg: if deep { hidden } else { 0 },
+                dh_msg: 0,
+            },
+            // dcomb (dagg) feeds the ε gradient at EVERY layer (layer 0's
+            // width is feat_dim); dmsg holds the MLP hidden gradient; the
+            // scatter output (dh_msg) is only needed above layer 0.
+            ModelKind::Gin => ScratchWidths {
+                dbuf,
+                dagg: feat_dim.max(hidden),
+                dmsg: hidden,
+                dh_msg: if deep { hidden } else { 0 },
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: ModelKind) -> ModelConfig {
+        ModelConfig { kind, layers: 3, feat_dim: 6, hidden: 8, classes: 4 }
+    }
+
+    #[test]
+    fn kind_parse_name_code_roundtrip() {
+        for k in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(k.name()), Some(k));
+            assert_eq!(ModelKind::from_code(k.code()).unwrap(), k);
+        }
+        assert_eq!(ModelKind::parse("tpu"), None);
+        let err = ModelKind::from_code(9).unwrap_err().to_string();
+        assert!(err.contains("found 9") && err.contains("sage"), "{err}");
+        assert_eq!(ModelKind::default(), ModelKind::Sage);
+    }
+
+    #[test]
+    fn sage_specs_match_legacy_layout() {
+        let m = GnnModel::new(&cfg(ModelKind::Sage));
+        let specs = m.param_specs();
+        assert_eq!(specs.len(), 12);
+        assert_eq!(specs[0].name, "l0.msg.W");
+        assert_eq!(specs[0].shape, vec![6, 8]);
+        assert_eq!(specs[2].shape, vec![8 + 6, 8]);
+        assert_eq!(specs[10].name, "l2.comb.U");
+        assert_eq!(specs[10].shape, vec![8 + 8, 4]);
+        assert_eq!(m.params_per_layer(), 4);
+    }
+
+    #[test]
+    fn gcn_specs() {
+        let m = GnnModel::new(&cfg(ModelKind::Gcn));
+        let specs = m.param_specs();
+        assert_eq!(specs.len(), 6);
+        assert_eq!(specs[0].shape, vec![6, 8]);
+        assert_eq!(specs[1].shape, vec![8]);
+        assert_eq!(specs[4].name, "l2.W");
+        assert_eq!(specs[4].shape, vec![8, 4]);
+        assert_eq!(specs[5].shape, vec![4]);
+    }
+
+    #[test]
+    fn gin_specs() {
+        let m = GnnModel::new(&cfg(ModelKind::Gin));
+        let specs = m.param_specs();
+        assert_eq!(specs.len(), 15);
+        assert_eq!(specs[0].name, "l0.eps");
+        assert_eq!(specs[0].shape, vec![1]);
+        assert_eq!(specs[1].shape, vec![6, 8]);
+        assert_eq!(specs[13].name, "l2.mlp.W2");
+        assert_eq!(specs[13].shape, vec![8, 4]);
+    }
+
+    #[test]
+    fn layer_plans_carry_model_widths() {
+        let sage = GnnModel::new(&cfg(ModelKind::Sage)).layer_plans();
+        assert_eq!(sage.len(), 3);
+        assert_eq!((sage[0].msg_w, sage[0].agg_w, sage[0].comb_w), (8, 8, 0));
+        assert!(sage[0].needs_denom);
+        let gcn = GnnModel::new(&cfg(ModelKind::Gcn)).layer_plans();
+        assert_eq!((gcn[0].comb_w, gcn[1].comb_w), (6, 8));
+        assert_eq!(gcn[0].msg_w, 0);
+        // ĉ is layer-invariant: only layer 0 keeps a denominator buffer.
+        assert!(gcn[0].needs_denom && !gcn[1].needs_denom);
+        let gin = GnnModel::new(&cfg(ModelKind::Gin)).layer_plans();
+        assert_eq!((gin[0].comb_w, gin[0].msg_w), (6, 8));
+        assert!(!gin[0].needs_denom);
+        assert_eq!(gin[2].out_w, 4);
+    }
+
+    #[test]
+    fn param_len_visitor_matches_specs_for_every_kind() {
+        for kind in ModelKind::ALL {
+            for layers in [1usize, 2, 4] {
+                let m = GnnModel::new(&ModelConfig {
+                    kind,
+                    layers,
+                    feat_dim: 6,
+                    hidden: 8,
+                    classes: 4,
+                });
+                let want: Vec<usize> = m
+                    .param_specs()
+                    .iter()
+                    .map(|s| s.shape.iter().product())
+                    .collect();
+                let mut got = Vec::new();
+                m.for_each_param_len(|len| got.push(len));
+                assert_eq!(got, want, "{kind:?} L{layers}");
+                assert_eq!(got.len(), m.num_param_tensors());
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_widths_cover_single_layer_models() {
+        for k in ModelKind::ALL {
+            let one = ModelConfig { kind: k, layers: 1, feat_dim: 6, hidden: 8, classes: 4 };
+            let sw = GnnModel::new(&one).scratch_widths();
+            assert_eq!(sw.dbuf, 8);
+            if k == ModelKind::Gcn {
+                assert_eq!((sw.dagg, sw.dmsg), (0, 0), "1-layer gcn needs no input grads");
+            }
+            if k == ModelKind::Gin {
+                // ε gradient needs dcomb even at layer 0.
+                assert_eq!(sw.dagg, 8.max(6));
+            }
+        }
+    }
+}

@@ -1,14 +1,35 @@
-//! Pure-Rust GraphSAGE forward pass — a second, independent implementation
-//! of the model used to cross-validate the AOT artifacts end-to-end
-//! (tensorize → HLO execute must agree with this, see
-//! `rust/tests/integration.rs`).
+//! Pure-Rust per-model forward oracles — a second, independent
+//! implementation of every [`ModelKind`] used to cross-validate the fast
+//! native kernels (and, for Sage, the AOT artifacts end-to-end: tensorize
+//! → HLO execute must agree with this, see `rust/tests/integration.rs`).
+//!
+//! Oracle tiers: [`forward`] dispatches on `cfg.kind` to a deliberately
+//! naive triple-loop implementation of that architecture's layer recipe
+//! ([`forward_sage`], [`forward_gcn`], [`forward_gin`]); the fast paths in
+//! `train/cpu/{sage,gcn,gin}.rs` are property-tested against these across
+//! the graph zoo, and their backwards against central finite differences.
+//! The Sage oracle additionally anchors the bitwise chain: `forward_sage`
+//! is byte-for-byte the pre-refactor `reference::forward`, and the
+//! retained `cpu::sage::*_scalar` path is asserted bit-identical to the
+//! packed kernels.
 
 use super::tensorize::TrainBatch;
 use crate::runtime::{ModelConfig, ParamSet};
+use crate::train::model::ModelKind;
 
 /// Forward pass over a tensorized batch; returns logits `[n_pad, classes]`
-/// (row-major).
+/// (row-major). Dispatches on the model kind.
 pub fn forward(cfg: &ModelConfig, params: &ParamSet, batch: &TrainBatch) -> Vec<f32> {
+    match cfg.kind {
+        ModelKind::Sage => forward_sage(cfg, params, batch),
+        ModelKind::Gcn => forward_gcn(cfg, params, batch),
+        ModelKind::Gin => forward_gin(cfg, params, batch),
+    }
+}
+
+/// Naive GraphSAGE forward (the original reference — unchanged through the
+/// `GnnModel` refactor, which is what pins the Sage trajectory).
+pub fn forward_sage(cfg: &ModelConfig, params: &ParamSet, batch: &TrainBatch) -> Vec<f32> {
     let n = batch.n_pad;
     let feat = batch.tensors[0].as_f32();
     let src = batch.tensors[1].as_i32();
@@ -78,6 +99,147 @@ pub fn forward(cfg: &ModelConfig, params: &ParamSet, batch: &TrainBatch) -> Vec<
                 if x != 0.0 {
                     for j in 0..d_out {
                         out[i * d_out + j] += x * u[(hdim + k) * d_out + j];
+                    }
+                }
+            }
+        }
+        h = out;
+        d_in = d_out;
+    }
+    h
+}
+
+/// Naive GCN forward: symmetric-normalized aggregation with an implicit
+/// self-loop (`ĉ_v = 1 + Σ_{e→v} w_e`), add combine, ReLU on every layer
+/// but the last. Parameters per layer: `W [d_in, d_out]`, `b [d_out]`.
+pub fn forward_gcn(cfg: &ModelConfig, params: &ParamSet, batch: &TrainBatch) -> Vec<f32> {
+    let n = batch.n_pad;
+    let feat = batch.tensors[0].as_f32();
+    let src = batch.tensors[1].as_i32();
+    let dst = batch.tensors[2].as_i32();
+    let emask = batch.tensors[3].as_f32();
+    // ĉ depends only on the edge weights, not the layer.
+    let mut denom = vec![1f32; n];
+    for e in 0..batch.e_pad {
+        let w = emask[e];
+        if w != 0.0 {
+            denom[dst[e] as usize] += w;
+        }
+    }
+    let mut h: Vec<f32> = feat.to_vec();
+    let mut d_in = cfg.feat_dim;
+    for l in 0..cfg.layers {
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let w = &params.data[2 * l];
+        let b = &params.data[2 * l + 1];
+        // comb = sym-normalized neighbor sum + h/ĉ.
+        let mut comb = vec![0f32; n * d_in];
+        for e in 0..batch.e_pad {
+            let wgt = emask[e];
+            if wgt == 0.0 {
+                continue;
+            }
+            let (s, d) = (src[e] as usize, dst[e] as usize);
+            let f = wgt / (denom[s] * denom[d]).sqrt();
+            for j in 0..d_in {
+                comb[d * d_in + j] += f * h[s * d_in + j];
+            }
+        }
+        for i in 0..n {
+            let inv = 1.0 / denom[i];
+            for j in 0..d_in {
+                comb[i * d_in + j] += inv * h[i * d_in + j];
+            }
+        }
+        // out = comb @ W + b, ReLU except on logits.
+        let mut out = vec![0f32; n * d_out];
+        for i in 0..n {
+            for j in 0..d_out {
+                out[i * d_out + j] = b[j];
+            }
+            for k in 0..d_in {
+                let x = comb[i * d_in + k];
+                if x != 0.0 {
+                    for j in 0..d_out {
+                        out[i * d_out + j] += x * w[k * d_out + j];
+                    }
+                }
+            }
+            if l != cfg.layers - 1 {
+                for j in 0..d_out {
+                    if out[i * d_out + j] < 0.0 {
+                        out[i * d_out + j] = 0.0;
+                    }
+                }
+            }
+        }
+        h = out;
+        d_in = d_out;
+    }
+    h
+}
+
+/// Naive GIN forward: weighted sum aggregation, `(1+ε)·self` combine, and
+/// a 2-layer MLP with ReLU on the hidden (output linear). Parameters per
+/// layer: `ε [1]`, `W1 [d_in, H]`, `b1 [H]`, `W2 [H, d_out]`, `b2 [d_out]`.
+pub fn forward_gin(cfg: &ModelConfig, params: &ParamSet, batch: &TrainBatch) -> Vec<f32> {
+    let n = batch.n_pad;
+    let feat = batch.tensors[0].as_f32();
+    let src = batch.tensors[1].as_i32();
+    let dst = batch.tensors[2].as_i32();
+    let emask = batch.tensors[3].as_f32();
+    let hdim = cfg.hidden;
+    let mut h: Vec<f32> = feat.to_vec();
+    let mut d_in = cfg.feat_dim;
+    for l in 0..cfg.layers {
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let eps = params.data[5 * l][0];
+        let w1 = &params.data[5 * l + 1];
+        let b1 = &params.data[5 * l + 2];
+        let w2 = &params.data[5 * l + 3];
+        let b2 = &params.data[5 * l + 4];
+        // comb = (1+ε)·h + weighted neighbor sum.
+        let mut comb = vec![0f32; n * d_in];
+        for e in 0..batch.e_pad {
+            let wgt = emask[e];
+            if wgt == 0.0 {
+                continue;
+            }
+            let (s, d) = (src[e] as usize, dst[e] as usize);
+            for j in 0..d_in {
+                comb[d * d_in + j] += wgt * h[s * d_in + j];
+            }
+        }
+        for i in 0..n * d_in {
+            comb[i] += (1.0 + eps) * h[i];
+        }
+        // hid = relu(comb @ W1 + b1).
+        let mut hid = vec![0f32; n * hdim];
+        for i in 0..n {
+            for k in 0..d_in {
+                let x = comb[i * d_in + k];
+                if x != 0.0 {
+                    for j in 0..hdim {
+                        hid[i * hdim + j] += x * w1[k * hdim + j];
+                    }
+                }
+            }
+            for j in 0..hdim {
+                let v = hid[i * hdim + j] + b1[j];
+                hid[i * hdim + j] = if v > 0.0 { v } else { 0.0 };
+            }
+        }
+        // out = hid @ W2 + b2 (linear).
+        let mut out = vec![0f32; n * d_out];
+        for i in 0..n {
+            for j in 0..d_out {
+                out[i * d_out + j] = b2[j];
+            }
+            for k in 0..hdim {
+                let x = hid[i * hdim + k];
+                if x != 0.0 {
+                    for j in 0..d_out {
+                        out[i * d_out + j] += x * w2[k * d_out + j];
                     }
                 }
             }
@@ -163,7 +325,7 @@ mod tests {
         let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
         let w = dar_weights(&g, &vc, Reweighting::Dar);
         let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 128, 1024).unwrap();
-        let cfg = ModelConfig { layers, feat_dim: 6, hidden: 8, classes: 3 };
+        let cfg = ModelConfig { kind: ModelKind::Sage, layers, feat_dim: 6, hidden: 8, classes: 3 };
         let params = ParamSet::init_glorot(&cfg, &mut rng);
         (cfg, params, batch)
     }
@@ -175,6 +337,38 @@ mod tests {
             let logits = forward(&cfg, &params, &batch);
             assert_eq!(logits.len(), batch.n_pad * cfg.classes);
             assert!(logits.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn all_kinds_forward_shapes_and_finiteness() {
+        for kind in ModelKind::ALL {
+            for layers in [1, 2, 3] {
+                let (mut cfg, _, batch) = setup(layers);
+                cfg.kind = kind;
+                let params = ParamSet::init_glorot(&cfg, &mut crate::util::rng::Rng::new(17));
+                let logits = forward(&cfg, &params, &batch);
+                assert_eq!(logits.len(), batch.n_pad * cfg.classes, "{kind:?} L{layers}");
+                assert!(logits.iter().all(|x| x.is_finite()), "{kind:?} L{layers}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_kinds_loss_is_ln_c_at_zero_params() {
+        // Every architecture's logits collapse to its (zero-initialized)
+        // output bias at all-zero parameters -> CE = ln(C) per node.
+        for kind in ModelKind::ALL {
+            let (mut cfg, _, batch) = setup(2);
+            cfg.kind = kind;
+            let mut params = ParamSet::init_glorot(&cfg, &mut crate::util::rng::Rng::new(18));
+            for p in &mut params.data {
+                p.iter_mut().for_each(|x| *x = 0.0);
+            }
+            let logits = forward(&cfg, &params, &batch);
+            let (loss, wsum, _) = loss_and_metrics(&cfg, &logits, &batch);
+            let per_node = loss / wsum;
+            assert!((per_node - (3f64).ln()).abs() < 1e-6, "{kind:?}: {per_node}");
         }
     }
 

@@ -200,6 +200,40 @@ mod tests {
         }
     }
 
+    /// Satellite parity: the binary-search remap reproduces the old
+    /// map-based construction exactly — id tables, edge lists, adjacency —
+    /// across assorted node samples (duplicates and out-of-order included).
+    #[test]
+    fn induced_subgraph_matches_map_based_reference() {
+        let ds = tiny();
+        let n = ds.graph.num_nodes() as u32;
+        let mut rng = crate::util::rng::Rng::new(77);
+        let mut samples: Vec<Vec<u32>> = vec![
+            Vec::new(),
+            vec![0],
+            (0..n).collect(),
+            (0..n).rev().collect(),
+            (0..n).step_by(3).collect(),
+        ];
+        for k in [5usize, 40, 200] {
+            let mut v: Vec<u32> = (0..k).map(|_| rng.below(n as usize) as u32).collect();
+            // Inject duplicates deliberately.
+            let dup = v[0];
+            v.push(dup);
+            samples.push(v);
+        }
+        for (si, sample) in samples.into_iter().enumerate() {
+            let (ids_a, g_a) = induced_subgraph(&ds.graph, sample.clone());
+            let (ids_b, g_b) = induced_subgraph_reference(&ds.graph, sample);
+            assert_eq!(ids_a, ids_b, "sample {si}: id tables differ");
+            assert_eq!(g_a.num_nodes(), g_b.num_nodes(), "sample {si}");
+            assert_eq!(g_a.edges(), g_b.edges(), "sample {si}: edge lists differ");
+            for v in 0..g_a.num_nodes() as u32 {
+                assert_eq!(g_a.neighbors(v), g_b.neighbors(v), "sample {si} row {v}");
+            }
+        }
+    }
+
     #[test]
     fn induced_subgraph_correct() {
         let ds = tiny();

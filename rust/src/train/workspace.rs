@@ -4,16 +4,23 @@
 //!
 //! Before this arena existed, one native train step heap-allocated every
 //! intermediate — per-layer activations, aggregates, denominators, the
-//! logits gradient, four backward scratch matrices and the gradient
-//! tensors themselves — some `4·L + 8` fresh `Vec`s per partition per
-//! epoch. [`SageWorkspace`] owns all of them at their exact padded sizes;
-//! `sage::forward_into` / `loss_grad_into` / `backward_into` overwrite
-//! them in place, and the engine reuses its epoch-level scratch
-//! (`selected`, `picks`, the `TrainOut` slots) the same way, so a
-//! steady-state epoch performs **zero heap allocations**. That claim is a
-//! test, not a comment: `tests/alloc_steady.rs` installs a counting global
-//! allocator and asserts the allocation count of a training run is
-//! independent of the epoch count.
+//! logits gradient, backward scratch matrices and the gradient tensors
+//! themselves — some `4·L + 8` fresh `Vec`s per partition per epoch.
+//! [`ModelWorkspace`] owns all of them at their exact padded sizes, and it
+//! is **shape-driven**: the buffer list comes from the model's
+//! [`layer_plans`](crate::train::model::GnnModel::layer_plans) and
+//! [`scratch_widths`](crate::train::model::GnnModel::scratch_widths), so
+//! one arena type serves every [`ModelKind`](crate::train::model::ModelKind)
+//! — Sage keeps per-layer messages/aggregates/denominators, GCN keeps
+//! combined inputs + denominators, GIN keeps combined inputs + MLP hidden
+//! rows. The per-model `forward_into` / `loss_grad_into` / `backward_into`
+//! kernels overwrite the buffers in place, and the engine reuses its
+//! epoch-level scratch (`selected`, `picks`, the `TrainOut` slots) the same
+//! way, so a steady-state epoch performs **zero heap allocations** for
+//! every model kind. That claim is a test, not a comment:
+//! `tests/alloc_steady.rs` installs a counting global allocator and asserts
+//! the allocation count of a training run is independent of the epoch
+//! count — once per `ModelKind`.
 //!
 //! The arena is plain data — no interior mutability. Each `CpuWorker`
 //! wraps its workspace in a `Mutex` (uncontended: every worker is visited
@@ -21,29 +28,36 @@
 //! `&self` rayon loop.
 
 use crate::runtime::{ModelConfig, TrainOut};
+use crate::train::model::GnnModel;
 
-/// All per-step temporaries of the native GraphSAGE forward + backward for
-/// one padded batch of `n` rows, preallocated at exact sizes.
+/// All per-step temporaries of one native train step for one padded batch
+/// of `n` rows, preallocated at the exact sizes the model's layer recipe
+/// dictates. Buffers a model does not use are left at length 0.
 ///
 /// Buffer lifetimes across one `train_step_into`:
 ///
-/// * forward fills `outs[l]`, `msgs[l]`, `aggs[l]`, `denoms[l]` per layer;
+/// * forward fills the per-layer buffers (`outs[l]` always; `msgs`/`aggs`/
+///   `combs`/`denoms` per the model's plan);
 /// * the loss writes the logits gradient into the front of `dbuf_a` and
 ///   the per-node partials into `per_node`;
-/// * backward reads the current upstream gradient from `dbuf_a`, scatters
-///   through `dagg`/`dmsg`, writes the next layer's input gradient into
-///   `dbuf_b` (+ `dh_msg`), then ping-pongs the two `dbuf`s — a pointer
-///   swap, never a copy.
-pub struct SageWorkspace {
+/// * backward reads the current upstream gradient from `dbuf_a`, runs the
+///   model's scatter/GEMM chain through the scratch buffers, writes the
+///   next layer's input gradient into `dbuf_b`, then ping-pongs the two
+///   `dbuf`s — a pointer swap, never a copy.
+pub struct ModelWorkspace {
     /// Padded row count this workspace was sized for.
     pub n: usize,
     /// `outs[l]` = output of layer `l` (`[n, hidden]`, last `[n, classes]`).
     pub outs: Vec<Vec<f32>>,
-    /// Post-ReLU messages per layer, `[n, hidden]`.
+    /// Hidden activations per layer: Sage post-ReLU messages, GIN MLP
+    /// hidden rows (`[n, hidden]`); unused (empty) for GCN.
     pub msgs: Vec<Vec<f32>>,
-    /// Aggregated (weighted-mean) neighbor messages per layer.
+    /// Raw aggregated neighbor values per layer (Sage only).
     pub aggs: Vec<Vec<f32>>,
-    /// Per-node mean denominators `max(Σ w, 1e-9)` per layer.
+    /// Combined pre-GEMM inputs per layer (GCN `agg + h/ĉ`, GIN
+    /// `(1+ε)h + Σ`); unused (empty) for Sage.
+    pub combs: Vec<Vec<f32>>,
+    /// Per-node aggregation denominators per layer (Sage mean, GCN `ĉ`).
     pub denoms: Vec<Vec<f32>>,
     /// Per-node `(weighted loss, weight, correct)` partials of the loss.
     pub per_node: Vec<(f64, f64, f64)>,
@@ -52,42 +66,48 @@ pub struct SageWorkspace {
     pub dbuf_a: Vec<f32>,
     /// Upstream-gradient pong buffer, same size as `dbuf_a`.
     pub dbuf_b: Vec<f32>,
-    /// Gradient flowing into the aggregation half of the concat, `[n, hidden]`.
+    /// Scratch: Sage gradient into the aggregation half of the concat;
+    /// GCN/GIN gradient w.r.t. the combined input (`dcomb`).
     pub dagg: Vec<f32>,
-    /// Gradient w.r.t. the pre-aggregation messages, `[n, hidden]`.
+    /// Scratch: Sage/GIN gradient w.r.t. hidden activations; GCN scatter
+    /// output.
     pub dmsg: Vec<f32>,
-    /// Scratch for the message half of the input gradient, `[n, hidden]`.
+    /// Scratch for the second addend of the input gradient.
     pub dh_msg: Vec<f32>,
 }
 
-impl SageWorkspace {
-    /// Allocate every buffer for a `cfg` model over `n` padded rows.
-    pub fn new(cfg: &ModelConfig, n: usize) -> SageWorkspace {
-        let h = cfg.hidden;
-        let dmax = cfg.hidden.max(cfg.classes);
-        let mut outs = Vec::with_capacity(cfg.layers);
-        let mut msgs = Vec::with_capacity(cfg.layers);
-        let mut aggs = Vec::with_capacity(cfg.layers);
-        let mut denoms = Vec::with_capacity(cfg.layers);
-        for l in 0..cfg.layers {
-            let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
-            outs.push(vec![0f32; n * d_out]);
-            msgs.push(vec![0f32; n * h]);
-            aggs.push(vec![0f32; n * h]);
-            denoms.push(vec![0f32; n]);
+impl ModelWorkspace {
+    /// Allocate every buffer the `cfg` model's layer recipe needs over `n`
+    /// padded rows.
+    pub fn new(cfg: &ModelConfig, n: usize) -> ModelWorkspace {
+        let model = GnnModel::new(cfg);
+        let plans = model.layer_plans();
+        let mut outs = Vec::with_capacity(plans.len());
+        let mut msgs = Vec::with_capacity(plans.len());
+        let mut aggs = Vec::with_capacity(plans.len());
+        let mut combs = Vec::with_capacity(plans.len());
+        let mut denoms = Vec::with_capacity(plans.len());
+        for p in &plans {
+            outs.push(vec![0f32; n * p.out_w]);
+            msgs.push(vec![0f32; n * p.msg_w]);
+            aggs.push(vec![0f32; n * p.agg_w]);
+            combs.push(vec![0f32; n * p.comb_w]);
+            denoms.push(vec![0f32; if p.needs_denom { n } else { 0 }]);
         }
-        SageWorkspace {
+        let sw = model.scratch_widths();
+        ModelWorkspace {
             n,
             outs,
             msgs,
             aggs,
+            combs,
             denoms,
             per_node: vec![(0.0, 0.0, 0.0); n],
-            dbuf_a: vec![0f32; n * dmax],
-            dbuf_b: vec![0f32; n * dmax],
-            dagg: vec![0f32; n * h],
-            dmsg: vec![0f32; n * h],
-            dh_msg: vec![0f32; n * h],
+            dbuf_a: vec![0f32; n * sw.dbuf],
+            dbuf_b: vec![0f32; n * sw.dbuf],
+            dagg: vec![0f32; n * sw.dagg],
+            dmsg: vec![0f32; n * sw.dmsg],
+            dh_msg: vec![0f32; n * sw.dh_msg],
         }
     }
 
@@ -97,30 +117,40 @@ impl SageWorkspace {
     }
 }
 
-/// Size `out`'s gradient tensors to `cfg.param_shapes()` without
+/// Size `out`'s gradient tensors to the model's parameter layout without
 /// reallocating when they already match (the steady-state case). The
 /// values are left untouched — `backward_into` overwrites every element.
+///
+/// This runs once per train step inside the zero-allocation steady state,
+/// so it walks the parameter lengths through the allocation-free
+/// [`GnnModel::for_each_param_len`] visitor instead of materializing
+/// `param_shapes()` (which builds named specs) on every call.
 pub fn ensure_grad_shapes(cfg: &ModelConfig, out: &mut TrainOut) {
-    let shapes = cfg.param_shapes();
-    if out.grads.len() != shapes.len() {
-        out.grads.resize_with(shapes.len(), Vec::new);
+    let model = GnnModel::new(cfg);
+    let count = model.num_param_tensors();
+    if out.grads.len() != count {
+        out.grads.resize_with(count, Vec::new);
     }
-    for (g, shape) in out.grads.iter_mut().zip(&shapes) {
-        let len: usize = shape.iter().product();
+    let mut idx = 0usize;
+    model.for_each_param_len(|len| {
+        let g = &mut out.grads[idx];
         if g.len() != len {
             g.resize(len, 0.0);
         }
-    }
+        idx += 1;
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::train::model::ModelKind;
 
     #[test]
-    fn workspace_sizes_match_model() {
-        let cfg = ModelConfig { layers: 3, feat_dim: 6, hidden: 8, classes: 4 };
-        let ws = SageWorkspace::new(&cfg, 32);
+    fn sage_workspace_sizes_match_model() {
+        let cfg =
+            ModelConfig { kind: ModelKind::Sage, layers: 3, feat_dim: 6, hidden: 8, classes: 4 };
+        let ws = ModelWorkspace::new(&cfg, 32);
         assert_eq!(ws.outs.len(), 3);
         assert_eq!(ws.outs[0].len(), 32 * 8);
         assert_eq!(ws.outs[2].len(), 32 * 4);
@@ -128,20 +158,54 @@ mod tests {
         assert_eq!(ws.denoms[0].len(), 32);
         assert_eq!(ws.dbuf_a.len(), 32 * 8);
         assert_eq!(ws.per_node.len(), 32);
+        // Sage has no combined-input buffers.
+        assert!(ws.combs.iter().all(|c| c.is_empty()));
+    }
+
+    #[test]
+    fn gcn_workspace_follows_the_plan() {
+        let cfg =
+            ModelConfig { kind: ModelKind::Gcn, layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
+        let ws = ModelWorkspace::new(&cfg, 16);
+        // comb width is the layer INPUT width: feat_dim then hidden.
+        assert_eq!(ws.combs[0].len(), 16 * 6);
+        assert_eq!(ws.combs[1].len(), 16 * 8);
+        // One layer-invariant ĉ buffer (layer 0), shared by every layer.
+        assert_eq!(ws.denoms[0].len(), 16);
+        assert!(ws.denoms[1].is_empty());
+        assert!(ws.msgs.iter().all(|m| m.is_empty()));
+        assert!(ws.aggs.iter().all(|a| a.is_empty()));
+        assert_eq!(ws.dagg.len(), 16 * 8);
+        assert_eq!(ws.dh_msg.len(), 0);
+    }
+
+    #[test]
+    fn gin_workspace_follows_the_plan() {
+        let cfg =
+            ModelConfig { kind: ModelKind::Gin, layers: 2, feat_dim: 12, hidden: 8, classes: 4 };
+        let ws = ModelWorkspace::new(&cfg, 16);
+        assert_eq!(ws.combs[0].len(), 16 * 12);
+        assert_eq!(ws.msgs[0].len(), 16 * 8);
+        assert!(ws.denoms.iter().all(|d| d.is_empty()));
+        // dcomb scratch must fit the widest layer input (feat_dim here).
+        assert_eq!(ws.dagg.len(), 16 * 12);
     }
 
     #[test]
     fn ensure_grad_shapes_is_idempotent_and_preserves_allocations() {
-        let cfg = ModelConfig { layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
-        let mut out = TrainOut { loss_sum: 0.0, weight_sum: 0.0, correct: 0.0, grads: Vec::new() };
-        ensure_grad_shapes(&cfg, &mut out);
-        assert_eq!(out.grads.len(), cfg.param_shapes().len());
-        for (g, s) in out.grads.iter().zip(cfg.param_shapes()) {
-            assert_eq!(g.len(), s.iter().product::<usize>());
+        for kind in ModelKind::ALL {
+            let cfg = ModelConfig { kind, layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
+            let mut out =
+                TrainOut { loss_sum: 0.0, weight_sum: 0.0, correct: 0.0, grads: Vec::new() };
+            ensure_grad_shapes(&cfg, &mut out);
+            assert_eq!(out.grads.len(), cfg.param_shapes().len());
+            for (g, s) in out.grads.iter().zip(cfg.param_shapes()) {
+                assert_eq!(g.len(), s.iter().product::<usize>());
+            }
+            let ptrs: Vec<*const f32> = out.grads.iter().map(|g| g.as_ptr()).collect();
+            ensure_grad_shapes(&cfg, &mut out);
+            let ptrs2: Vec<*const f32> = out.grads.iter().map(|g| g.as_ptr()).collect();
+            assert_eq!(ptrs, ptrs2, "second sizing must not reallocate ({kind:?})");
         }
-        let ptrs: Vec<*const f32> = out.grads.iter().map(|g| g.as_ptr()).collect();
-        ensure_grad_shapes(&cfg, &mut out);
-        let ptrs2: Vec<*const f32> = out.grads.iter().map(|g| g.as_ptr()).collect();
-        assert_eq!(ptrs, ptrs2, "second sizing must not reallocate");
     }
 }

@@ -22,6 +22,7 @@
 use cofree_gnn::graph::datasets;
 use cofree_gnn::partition::{algorithm, Reweighting, VertexCut};
 use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
+use cofree_gnn::train::model::ModelKind;
 use cofree_gnn::util::rng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -55,8 +56,12 @@ fn alloc_count() -> u64 {
     ALLOCS.load(Ordering::Relaxed)
 }
 
+/// The zero-allocation steady state holds for EVERY `ModelKind`, not just
+/// the original GraphSAGE path: the workspace arena is shape-driven, so
+/// GCN's and GIN's per-layer buffers must be just as preallocated as
+/// Sage's.
 #[test]
-fn steady_state_epoch_allocates_nothing() {
+fn steady_state_epoch_allocates_nothing_for_every_model() {
     let pool = rayon::ThreadPoolBuilder::new().num_threads(1).build().unwrap();
     pool.install(|| {
         // ~400 nodes / 2 partitions with DropEdge-K in play, so the epoch
@@ -69,8 +74,8 @@ fn steady_state_epoch_allocates_nothing() {
             algorithm("dbh").unwrap().as_ref(),
             &mut Rng::new(11),
         );
-        let run_with = |epochs: usize| -> u64 {
-            let mut engine = TrainEngine::native();
+        let run_with = |kind: ModelKind, epochs: usize| -> u64 {
+            let mut engine = TrainEngine::native_model(kind);
             let mut run = engine
                 .prepare_partitions(&ds, &vc, Reweighting::Dar, Some((3, 0.4)), 11)
                 .unwrap();
@@ -87,18 +92,20 @@ fn steady_state_epoch_allocates_nothing() {
             assert_eq!(history.epochs.len(), epochs);
             before_to_now(before)
         };
-        // Warm-up run: absorbs one-time process-global allocations (deque
-        // growth, lazy statics) so the two measured runs are identical
-        // workloads.
-        let _ = run_with(4);
-        let short = run_with(4);
-        let long = run_with(24);
-        assert_eq!(
-            short, long,
-            "20 extra epochs performed {} extra heap allocations — the \
-             steady-state epoch is supposed to perform zero (short run: {short})",
-            long.saturating_sub(short)
-        );
+        for kind in ModelKind::ALL {
+            // Warm-up run: absorbs one-time process-global allocations
+            // (deque growth, lazy statics) so the two measured runs are
+            // identical workloads.
+            let _ = run_with(kind, 4);
+            let short = run_with(kind, 4);
+            let long = run_with(kind, 24);
+            assert_eq!(
+                short, long,
+                "{kind:?}: 20 extra epochs performed {} extra heap allocations — the \
+                 steady-state epoch is supposed to perform zero (short run: {short})",
+                long.saturating_sub(short)
+            );
+        }
     });
 }
 
@@ -108,20 +115,19 @@ fn before_to_now(before: u64) -> u64 {
 
 /// The compute core alone (no engine, no optimizer): repeated
 /// `train_step_into` through one workspace must not allocate at all after
-/// the first call established shapes.
+/// the first call established shapes — for every `ModelKind`.
 #[test]
 fn train_step_into_is_allocation_free_after_warmup() {
     use cofree_gnn::runtime::{ParamSet, TrainOut};
     use cofree_gnn::train::cpu::{self, EdgeCsr};
-    use cofree_gnn::train::engine::model_config;
+    use cofree_gnn::train::engine::model_config_for;
     use cofree_gnn::train::tensorize::tensorize_partition;
-    use cofree_gnn::train::workspace::SageWorkspace;
+    use cofree_gnn::train::workspace::ModelWorkspace;
     use cofree_gnn::partition::dar_weights;
 
     let pool = rayon::ThreadPoolBuilder::new().num_threads(1).build().unwrap();
     pool.install(|| {
         let ds = datasets::build("yelp-sim", 0.04, 7).unwrap();
-        let model = model_config(&ds);
         let vc = VertexCut::create(
             &ds.graph,
             2,
@@ -131,19 +137,25 @@ fn train_step_into_is_allocation_free_after_warmup() {
         let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
         let batch = tensorize_partition(&vc.parts[0], &ds.data, &weights[0], 512, 8192).unwrap();
         let csr = EdgeCsr::from_batch(&batch);
-        let params = ParamSet::init_glorot(&model, &mut Rng::new(6));
-        let mut ws = SageWorkspace::new(&model, batch.n_pad);
-        let mut out = TrainOut::default();
         let emask = batch.emask().as_f32();
-        // Warm-up: establishes gradient shapes and any lazy pool state.
-        for _ in 0..3 {
-            cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws, &mut out);
+        for kind in ModelKind::ALL {
+            let model = model_config_for(&ds, kind);
+            let params = ParamSet::init_glorot(&model, &mut Rng::new(6));
+            let mut ws = ModelWorkspace::new(&model, batch.n_pad);
+            let mut out = TrainOut::default();
+            // Warm-up: establishes gradient shapes and any lazy pool state.
+            for _ in 0..3 {
+                cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws, &mut out);
+            }
+            let before = alloc_count();
+            for _ in 0..10 {
+                cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws, &mut out);
+            }
+            let delta = alloc_count() - before;
+            assert_eq!(
+                delta, 0,
+                "{kind:?}: 10 steady-state train steps allocated {delta} times"
+            );
         }
-        let before = alloc_count();
-        for _ in 0..10 {
-            cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws, &mut out);
-        }
-        let delta = alloc_count() - before;
-        assert_eq!(delta, 0, "10 steady-state train steps allocated {delta} times");
     });
 }

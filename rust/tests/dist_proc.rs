@@ -14,6 +14,7 @@ use cofree_gnn::graph::{datasets, Dataset};
 use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
 use cofree_gnn::runtime::ParamSet;
 use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
+use cofree_gnn::train::model::ModelKind;
 use cofree_gnn::train::metrics::History;
 use cofree_gnn::util::rng::Rng;
 use std::path::PathBuf;
@@ -37,7 +38,8 @@ fn cfg_for(epochs: usize, seed: u64, dropedge: Option<(usize, f64)>) -> TrainCon
 }
 
 /// The in-process reference trajectory.
-fn run_inproc(
+fn run_inproc_model(
+    kind: ModelKind,
     p: usize,
     seed: u64,
     dropedge: Option<(usize, f64)>,
@@ -45,7 +47,7 @@ fn run_inproc(
 ) -> (History, ParamSet) {
     let ds = ds_small();
     let vc = cut(&ds, p, seed);
-    let mut engine = TrainEngine::native();
+    let mut engine = TrainEngine::native_model(kind);
     let eval = engine.prepare_eval(&ds).unwrap();
     let mut run = engine
         .prepare_partitions(&ds, &vc, Reweighting::Dar, dropedge, seed)
@@ -55,8 +57,18 @@ fn run_inproc(
     (h, params)
 }
 
+fn run_inproc(
+    p: usize,
+    seed: u64,
+    dropedge: Option<(usize, f64)>,
+    epochs: usize,
+) -> (History, ParamSet) {
+    run_inproc_model(ModelKind::Sage, p, seed, dropedge, epochs)
+}
+
 /// The same trajectory over real worker processes.
-fn run_proc(
+fn run_proc_model(
+    kind: ModelKind,
     p: usize,
     seed: u64,
     dropedge: Option<(usize, f64)>,
@@ -73,11 +85,22 @@ fn run_proc(
     ));
     let _ = std::fs::remove_dir_all(&dir);
     dist::write_shards(&ds, &vc, &weights, seed, &dir).unwrap();
-    let opts = ProcOptions { transport, ..ProcOptions::new(worker_bin()) };
+    let opts = ProcOptions { transport, model: kind, ..ProcOptions::new(worker_bin()) };
     let cfg = cfg_for(epochs, seed, dropedge);
     let (h, ck, stats) = dist::train_over_shards(&ds, &dir, &cfg, &opts, None).unwrap();
     std::fs::remove_dir_all(&dir).unwrap();
     (h, ck.params, stats)
+}
+
+fn run_proc(
+    p: usize,
+    seed: u64,
+    dropedge: Option<(usize, f64)>,
+    epochs: usize,
+    transport: Transport,
+    tag: &str,
+) -> (History, ParamSet, DistStats) {
+    run_proc_model(ModelKind::Sage, p, seed, dropedge, epochs, transport, tag)
 }
 
 fn assert_trajectories_identical(a: &History, b: &History) {
@@ -209,4 +232,34 @@ fn cli_shard_then_train_proc() {
     .unwrap();
     assert_eq!(code, 0);
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Acceptance criterion of the `GnnModel` refactor: both NEW architectures
+/// train end-to-end over the proc transport with trajectories bit-identical
+/// to inproc — one shard store serves every model (shards carry dims only;
+/// the kind travels in the wire Config frame), and DropEdge stays in play
+/// for GCN so the mask-pick plumbing is exercised on a non-Sage model.
+#[test]
+fn gcn_proc_training_matches_inproc_bitwise() {
+    let (p, seed, epochs) = (2usize, 61u64, 4usize);
+    let dropedge = Some((2usize, 0.3f64));
+    let (h_in, params_in) = run_inproc_model(ModelKind::Gcn, p, seed, dropedge, epochs);
+    let (h_proc, params_proc, stats) =
+        run_proc_model(ModelKind::Gcn, p, seed, dropedge, epochs, Transport::Tcp, "gcn");
+    assert_trajectories_identical(&h_in, &h_proc);
+    assert_eq!(params_in.data, params_proc.data, "gcn final parameters diverged");
+    assert_eq!(stats.num_workers, p);
+    // The wire accounting scales with the GCN parameter count, not Sage's.
+    assert_eq!(stats.num_params, params_in.num_elements());
+}
+
+#[test]
+fn gin_proc_training_matches_inproc_bitwise() {
+    let (p, seed, epochs) = (3usize, 71u64, 4usize);
+    let (h_in, params_in) = run_inproc_model(ModelKind::Gin, p, seed, None, epochs);
+    let (h_proc, params_proc, stats) =
+        run_proc_model(ModelKind::Gin, p, seed, None, epochs, Transport::Tcp, "gin");
+    assert_trajectories_identical(&h_in, &h_proc);
+    assert_eq!(params_in.data, params_proc.data, "gin final parameters diverged");
+    assert_eq!(stats.num_workers, p);
 }
