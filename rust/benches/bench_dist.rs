@@ -147,6 +147,45 @@ fn main() {
         rows.push(row);
     }
 
+    // Fault-tolerance cost: kill one worker mid-run (chaos shim) with
+    // heartbeats on every epoch, and measure what recovery and liveness
+    // actually cost — wall-clock inside recovery, ping traffic per epoch —
+    // while still requiring bit-identical parameters at the end.
+    let recovery = {
+        let p = *parts.first().unwrap_or(&2);
+        let vc = VertexCut::create(&ds.graph, p, algorithm("dbh").unwrap().as_ref(), &mut Rng::new(seed));
+        let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+        let dir = std::env::temp_dir()
+            .join(format!("cofree_bench_dist_rec_{}_{p}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dist::write_shards(&ds, &vc, &weights, seed, &dir).expect("write shards");
+        let cfg = TrainConfig { epochs, eval_every: 0, seed, ..Default::default() };
+        let mut engine = TrainEngine::native();
+        let mut run = engine
+            .prepare_partitions(&ds, &vc, Reweighting::Dar, None, seed)
+            .expect("prepare inproc");
+        let (_, params_in, _) = engine.train(&mut run, None, &cfg).expect("inproc train");
+        let kill_step = 2.min(epochs.max(1));
+        let opts = ProcOptions {
+            chaos_env: Some(format!("kill:rank=0:step={kill_step}:once")),
+            health: dist::HealthOptions { heartbeat_every: 1, ..Default::default() },
+            ..ProcOptions::new(worker_bin.clone())
+        };
+        let (_, ck, dstats) =
+            dist::train_over_shards(&ds, &dir, &cfg, &opts, None).expect("chaos train");
+        let _ = std::fs::remove_dir_all(&dir);
+        let parity = params_in.data == ck.params.data;
+        println!(
+            "recovery p={p}: {} recoveries in {:.4}s, heartbeats {:.1} B/epoch, parity={parity}",
+            dstats.recoveries,
+            dstats.recovery_seconds,
+            dstats.heartbeat_bytes_per_epoch()
+        );
+        assert!(parity, "recovered trajectory diverged from inproc");
+        assert!(dstats.recoveries >= 1, "kill fault never triggered a recovery");
+        (p, dstats, parity)
+    };
+
     // Headline: the middle worker count (p=4 with defaults).
     let headline = rows.get(rows.len() / 2).or_else(|| rows.last()).expect("no rows");
     let mut rows_json = String::new();
@@ -172,8 +211,16 @@ fn main() {
         )
         .unwrap();
     }
+    let (rec_p, rec_stats, rec_parity) = recovery;
+    let recovery_json = format!(
+        "{{\"workers\": {rec_p}, \"recoveries\": {}, \"recovery_seconds\": {:.6}, \"deadline_misses\": {}, \"heartbeat_bytes_per_epoch\": {:.1}, \"parity\": {rec_parity}}}",
+        rec_stats.recoveries,
+        rec_stats.recovery_seconds,
+        rec_stats.deadline_misses,
+        rec_stats.heartbeat_bytes_per_epoch()
+    );
     let json = format!(
-        "{{\n  \"bench\": \"dist\",\n  \"config\": {{\"edges_target\": {target}, \"epochs\": {epochs}, \"seed\": {seed}}},\n  \"graph\": {{\"nodes\": {}, \"edges\": {}}},\n  \"machine\": {{\"logical_cpus\": {}}},\n  \"headline\": {{\"workers\": {}, \"bytes_per_epoch_per_param\": {:.3}, \"parity\": {}}},\n  \"rows\": [\n    {rows_json}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"dist\",\n  \"config\": {{\"edges_target\": {target}, \"epochs\": {epochs}, \"seed\": {seed}}},\n  \"graph\": {{\"nodes\": {}, \"edges\": {}}},\n  \"machine\": {{\"logical_cpus\": {}}},\n  \"headline\": {{\"workers\": {}, \"bytes_per_epoch_per_param\": {:.3}, \"parity\": {}}},\n  \"recovery\": {recovery_json},\n  \"rows\": [\n    {rows_json}\n  ]\n}}\n",
         ds.graph.num_nodes(),
         ds.graph.num_edges(),
         std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1),

@@ -87,12 +87,20 @@ USAGE:
   cofree shard --dataset NAME --partitions P --out DIR
                [--algo ne] [--reweight dar] [--scale F] [--seed N]
   cofree worker --shard FILE --connect ADDR     (ADDR: host:port or unix:/path)
+  cofree worker --shard FILE --listen ADDR      (multi-host: accept coordinator
+               sessions on ADDR; survives coordinator restarts/reconnects)
   cofree emit-bucket-spec [--out FILE]
   cofree train --dataset NAME --partitions P [--algo ne] [--reweight dar]
                [--model sage|gcn|gin] [--backend native|xla] [--epochs N] [--lr F]
                [--dropedge-k K --dropedge-ratio R]
                [--transport inproc|proc] [--workers N] [--shard-dir DIR]
                [--socket tcp|unix] [--worker-bin PATH]
+               [--hosts a:9000,b:9000]   (proc: drive `cofree worker --listen`
+               fleets on other machines instead of spawning local workers)
+               [--epoch-deadline SECS] [--heartbeat-every N]   (proc: recover
+               workers that hang past the deadline / fail liveness pings)
+               [--checkpoint FILE] [--checkpoint-every N]   (periodic async
+               snapshots; resume with --load-model FILE)
                [--save-model FILE] [--load-model FILE]
                [--scale F] [--artifacts DIR] [--out-csv FILE] [--config FILE]
   cofree bench NAME            (table1|table2|table3|table4|fig2|fig3|fig4|fig5|all)
@@ -226,12 +234,22 @@ fn cmd_shard(args: &Args) -> Result<i32> {
 }
 
 /// `cofree worker` — the shard-local worker role of the multi-process
-/// runtime (normally spawned by the coordinator, but usable by hand for
-/// multi-host experiments).
+/// runtime. `--connect` dials a coordinator (the local-fleet shape, where
+/// the coordinator spawned this process); `--listen` binds a port and
+/// accepts coordinator sessions (the multi-host shape for
+/// `cofree train --hosts …`, where the worker outlives any one session).
 fn cmd_worker(args: &Args) -> Result<i32> {
     let shard = PathBuf::from(args.get("shard").context("--shard FILE required")?);
-    let connect = args.get("connect").context("--connect ADDR required")?;
-    dist::worker::run(&shard, connect)?;
+    match (args.get("connect"), args.get("listen")) {
+        (Some(connect), None) => {
+            dist::worker::run(&shard, connect)?;
+        }
+        (None, Some(listen)) => {
+            dist::worker::run_listen(&shard, listen)?;
+        }
+        (Some(_), Some(_)) => bail!("--connect and --listen are mutually exclusive"),
+        (None, None) => bail!("worker needs --connect ADDR or --listen ADDR"),
+    }
     Ok(0)
 }
 
@@ -304,6 +322,46 @@ fn run_train_proc(
             Err(_) => std::env::current_exe().context("locating the cofree binary")?,
         },
     };
+    // Fault-tolerance knobs, shared by spawned and remote fleets.
+    let mut health = dist::HealthOptions::default();
+    if let Some(secs) = args.get("epoch-deadline") {
+        let secs: f64 = secs.parse().map_err(|_| {
+            anyhow::anyhow!("--epoch-deadline: cannot parse {secs:?} as seconds")
+        })?;
+        anyhow::ensure!(secs > 0.0, "--epoch-deadline must be positive, got {secs}");
+        health.epoch_deadline = Some(std::time::Duration::from_secs_f64(secs));
+    }
+    health.heartbeat_every = args.parse_or("heartbeat-every", 0)?;
+    // `--hosts a:9000,b:9000`: the fleet already runs elsewhere (`cofree
+    // worker --listen`); the coordinator dials out instead of spawning.
+    if let Some(list) = args.get("hosts") {
+        anyhow::ensure!(
+            args.get("shard-dir").is_none(),
+            "--hosts workers load their own shards; drop --shard-dir"
+        );
+        let hosts: Vec<String> =
+            list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect();
+        anyhow::ensure!(!hosts.is_empty(), "--hosts: no worker endpoints in {list:?}");
+        // The host list IS the fleet; an explicit --partitions/--workers
+        // that disagrees with it would train a different cut than the
+        // remote shards hold.
+        if args.get("partitions").is_some() || args.get("workers").is_some() {
+            anyhow::ensure!(
+                hosts.len() == p,
+                "--hosts names {} workers but the run asked for {p} partitions",
+                hosts.len()
+            );
+        }
+        let opts = ProcOptions {
+            transport: Transport::Tcp,
+            model: kind,
+            health,
+            ..ProcOptions::new(worker_bin)
+        };
+        let (history, ck, stats) = dist::train_over_hosts(ds, &hosts, cfg, &opts, resume)?;
+        print_proc_stats(&stats);
+        return Ok((history, ck));
+    }
     // Shards: reuse a store written by `cofree shard`, or shard into a
     // scratch dir (removed afterwards).
     let (dir, scratch) = match args.get("shard-dir") {
@@ -339,12 +397,17 @@ fn run_train_proc(
             dir.display()
         );
     }
-    let opts = ProcOptions { transport, model: kind, ..ProcOptions::new(worker_bin) };
+    let opts = ProcOptions { transport, model: kind, health, ..ProcOptions::new(worker_bin) };
     let result = dist::train_over_shards(ds, &dir, cfg, &opts, resume);
     if scratch {
         let _ = std::fs::remove_dir_all(&dir);
     }
     let (history, ck, stats) = result?;
+    print_proc_stats(&stats);
+    Ok((history, ck))
+}
+
+fn print_proc_stats(stats: &dist::DistStats) {
     println!(
         "proc transport: {} workers, {:.1} KiB/epoch on the wire, {:.2} bytes/epoch/param, handshake {:.2}s",
         stats.num_workers,
@@ -352,7 +415,12 @@ fn run_train_proc(
         stats.bytes_per_epoch_per_param(),
         stats.handshake_seconds
     );
-    Ok((history, ck))
+    if stats.recoveries > 0 || stats.deadline_misses > 0 || stats.stragglers > 0 {
+        println!(
+            "fleet health: {} recoveries ({:.2}s), {} deadline misses, {} straggler observations",
+            stats.recoveries, stats.recovery_seconds, stats.deadline_misses, stats.stragglers
+        );
+    }
 }
 
 /// `cofree train` — runs on the native CPU backend by default; pass
@@ -412,6 +480,20 @@ fn cmd_train(args: &Args) -> Result<i32> {
         ds.graph.num_edges(),
         rw.name()
     );
+    // Periodic async checkpointing: `--checkpoint FILE` turns it on
+    // (default cadence every 10 epochs; `--checkpoint-every N` overrides).
+    let checkpoint_path = args
+        .get("checkpoint")
+        .or_else(|| file_cfg.get("run.checkpoint"))
+        .map(PathBuf::from);
+    let checkpoint_every: usize = get("run.checkpoint_every", "checkpoint-every", "0").parse()?;
+    if checkpoint_every > 0 && checkpoint_path.is_none() {
+        bail!("--checkpoint-every {checkpoint_every} needs --checkpoint FILE");
+    }
+    let checkpoint_every = match (&checkpoint_path, checkpoint_every) {
+        (Some(_), 0) => 10,
+        (_, n) => n,
+    };
     let cfg = TrainConfig {
         epochs,
         lr,
@@ -421,11 +503,15 @@ fn cmd_train(args: &Args) -> Result<i32> {
         use_adam: true,
         allreduce_seconds: 0.0,
         log_every: (epochs / 20).max(1),
+        checkpoint_every,
+        checkpoint_path,
     };
     // Proc-only flags must not be silently ignored on the inproc path
     // (same rule as --artifacts above).
     if transport != "proc" {
-        for flag in ["workers", "shard-dir", "worker-bin", "socket"] {
+        for flag in
+            ["workers", "shard-dir", "worker-bin", "socket", "hosts", "epoch-deadline", "heartbeat-every"]
+        {
             if args.get(flag).is_some() {
                 bail!("--{flag} is only used by the proc transport; add --transport proc");
             }
@@ -759,8 +845,73 @@ mod tests {
     }
 
     #[test]
+    fn worker_connect_and_listen_are_mutually_exclusive() {
+        assert!(main(argv(&[
+            "worker",
+            "--shard",
+            "/nonexistent.bin",
+            "--connect",
+            "127.0.0.1:1",
+            "--listen",
+            "127.0.0.1:2",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn train_rejects_checkpoint_every_without_path() {
+        assert!(main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--checkpoint-every",
+            "5",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn train_writes_periodic_checkpoint() {
+        let path = std::env::temp_dir()
+            .join(format!("cofree_cli_periodic_{}.bin", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let code = main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--partitions",
+            "2",
+            "--algo",
+            "dbh",
+            "--epochs",
+            "5",
+            "--checkpoint",
+            path.to_str().unwrap(),
+            "--checkpoint-every",
+            "2",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let ck = TrainCheckpoint::load(&path).expect("periodic checkpoint loads");
+        assert!(ck.epochs_done >= 2 && ck.epochs_done < 5, "{}", ck.epochs_done);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn train_rejects_proc_flags_on_inproc_transport() {
-        for flag in ["--workers", "--shard-dir", "--worker-bin", "--socket"] {
+        for flag in [
+            "--workers",
+            "--shard-dir",
+            "--worker-bin",
+            "--socket",
+            "--hosts",
+            "--epoch-deadline",
+            "--heartbeat-every",
+        ] {
             assert!(
                 main(argv(&[
                     "train",

@@ -17,7 +17,28 @@
 //! path, the multi-process trajectory is **bit-identical** to
 //! `--transport inproc` for the same seed/config — proven end-to-end in
 //! `tests/dist_proc.rs`.
+//!
+//! # Fault tolerance
+//!
+//! The fleet is **elastic**: workers are stateless between steps (the
+//! coordinator owns θ and the optimizer; a worker's mask bank re-derives
+//! from `(seed, rank)`), so losing one costs nothing but time. The
+//! control plane, [`FleetCtl`], detects loss three ways — a dead socket
+//! at broadcast or collect, a missed per-epoch deadline
+//! ([`HealthOptions::epoch_deadline`]), and a failed heartbeat sweep
+//! ([`HealthOptions::heartbeat_every`]) — and recovers the rank by
+//! respawning it (local fleets) or re-dialing it with backoff (remote
+//! `--hosts` fleets). The replacement replays the identical handshake
+//! (its `Meta` is *required* to match the original bit-for-bit), receives
+//! the current epoch's `Step` with the same pick, and recomputes the
+//! identical `TrainOut` — so the trajectory stays bit-identical to an
+//! uninterrupted run, which `tests/chaos.rs` proves under injected kills,
+//! hangs and delays. A recovery budget
+//! ([`HealthOptions::max_recoveries`]) converts "deadline shorter than an
+//! honest epoch" from an infinite respawn loop into a clear error.
 
+use super::fault;
+use super::health::{HealthOptions, StragglerMonitor};
 use super::proto::{self, Frame, Stream, PROTO_VERSION};
 use super::shard::shard_files;
 use crate::graph::Dataset;
@@ -70,6 +91,7 @@ impl Transport {
 pub struct ProcOptions {
     /// Executable to spawn for the worker role (normally the `cofree`
     /// binary itself; tests and benches pass `CARGO_BIN_EXE_cofree`).
+    /// Unused by `--hosts` fleets, whose workers already run elsewhere.
     pub worker_bin: PathBuf,
     pub transport: Transport,
     /// Which GNN architecture the fleet trains. The kind is broadcast in
@@ -78,6 +100,13 @@ pub struct ProcOptions {
     pub model: ModelKind,
     /// How long to wait for all workers to connect and report meta.
     pub handshake_timeout: Duration,
+    /// Liveness + recovery policy (deadlines, heartbeats, budgets).
+    pub health: HealthOptions,
+    /// Value for the `COFREE_CHAOS` env var on spawned workers — the
+    /// chaos harness's fault-injection channel. Scoped to the spawned
+    /// processes (never the coordinator's own environment), so parallel
+    /// test runs cannot contaminate each other.
+    pub chaos_env: Option<String>,
 }
 
 impl ProcOptions {
@@ -87,6 +116,8 @@ impl ProcOptions {
             transport: Transport::Tcp,
             model: ModelKind::Sage,
             handshake_timeout: Duration::from_secs(60),
+            health: HealthOptions::default(),
+            chaos_env: None,
         }
     }
 }
@@ -100,10 +131,23 @@ pub struct DistStats {
     /// Step-loop traffic only (the per-epoch cost the paper bounds).
     pub bytes_sent: u64,
     pub bytes_recv: u64,
-    /// One-off handshake traffic (hello/config/meta/shutdown).
+    /// One-off handshake traffic (hello/config/meta/shutdown), including
+    /// recovery re-handshakes.
     pub handshake_bytes: u64,
     pub handshake_seconds: f64,
     pub train_seconds: f64,
+    /// Workers recovered (respawned or re-dialed) during the run.
+    pub recoveries: u64,
+    /// Collect-phase deadlines that expired with results still pending.
+    pub deadline_misses: u64,
+    /// Straggler observations (rank-epochs beyond the straggler
+    /// threshold).
+    pub stragglers: u64,
+    /// Ping/Pong traffic (kept out of `bytes_sent`/`bytes_recv` so the
+    /// paper's per-epoch wire bound stays a clean measurement).
+    pub heartbeat_bytes: u64,
+    /// Wall-clock spent inside recovery (loss detected → rank rejoined).
+    pub recovery_seconds: f64,
 }
 
 impl DistStats {
@@ -126,216 +170,18 @@ impl DistStats {
             self.bytes_per_epoch() / self.num_params as f64
         }
     }
-}
-
-// ---------------------------------------------------------------------------
-// ProcBackend: the engine's Backend over remote worker processes.
-// ---------------------------------------------------------------------------
-
-/// A connected remote worker (one process, one shard).
-pub struct ProcWorker {
-    pub rank: usize,
-    stream: RefCell<Stream>,
-    /// Reusable receive buffer: step results land here frame after frame,
-    /// epoch after epoch, with no per-frame payload allocation.
-    recv: RefCell<proto::FrameBuf>,
-}
-
-/// Backend that executes `train_step` on remote worker processes and
-/// evaluates on the coordinator (full-graph eval never leaves the leader).
-///
-/// Per epoch it serializes the parameter payload **once** into a reused
-/// buffer, broadcasts a `Step` frame to every selected worker before
-/// reading anything back (so all remote processes compute concurrently),
-/// then collects `StepResult`s **as they arrive** by readiness-polling all
-/// sockets round-robin — a slow rank no longer blocks draining the fast
-/// ranks' results. Results are still indexed by rank into the engine's
-/// output slots, and the engine still folds them sequentially in rank
-/// order, so the trajectory stays bit-identical to the in-process engine
-/// (`tests/dist_proc.rs`).
-pub struct ProcBackend {
-    cpu: CpuBackend,
-    bytes_sent: Cell<u64>,
-    bytes_recv: Cell<u64>,
-    /// The once-per-epoch serialized parameter payload (reused).
-    encoded: RefCell<proto::EncodedParams>,
-    /// Per-selected-worker incremental frame readers (reused).
-    recv_states: RefCell<Vec<proto::StepResultRecv>>,
-    /// Per-selected-worker completion flags (reused).
-    recv_done: RefCell<Vec<bool>>,
-}
-
-impl ProcBackend {
-    pub fn new() -> ProcBackend {
-        ProcBackend {
-            cpu: CpuBackend::new(),
-            bytes_sent: Cell::new(0),
-            bytes_recv: Cell::new(0),
-            encoded: RefCell::new(proto::EncodedParams::new()),
-            recv_states: RefCell::new(Vec::new()),
-            recv_done: RefCell::new(Vec::new()),
+    /// Heartbeat overhead per epoch, in bytes (0 when heartbeats are off).
+    pub fn heartbeat_bytes_per_epoch(&self) -> f64 {
+        if self.epochs_run == 0 {
+            0.0
+        } else {
+            self.heartbeat_bytes as f64 / self.epochs_run as f64
         }
-    }
-}
-
-impl ProcBackend {
-    /// Drain one `StepResult` per selected worker, round-robin over
-    /// nonblocking sockets: each pass pumps whatever bytes every pending
-    /// socket has ready ([`proto::StepResultRecv`]), decodes completed
-    /// frames straight into their rank's output slot, and only sleeps
-    /// (200 µs) when a full pass moved no bytes at all. Wall clock is
-    /// therefore governed by the slowest worker, not by rank order.
-    fn collect_overlapped(
-        &self,
-        workers: &[ProcWorker],
-        selected: &[usize],
-        outs: &mut [(TrainOut, f64)],
-    ) -> Result<()> {
-        let mut states = self.recv_states.borrow_mut();
-        states.clear();
-        states.resize_with(selected.len(), proto::StepResultRecv::new);
-        let mut done = self.recv_done.borrow_mut();
-        done.clear();
-        done.resize(selected.len(), false);
-        let mut pending = selected.len();
-        while pending > 0 {
-            let mut moved = false;
-            for i in 0..selected.len() {
-                if done[i] {
-                    continue;
-                }
-                let w = &workers[selected[i]];
-                let before = states[i].bytes_buffered();
-                let polled = {
-                    let mut stream = w.stream.borrow_mut();
-                    let mut recv = w.recv.borrow_mut();
-                    states[i].poll(&mut *stream, &mut recv)
-                }
-                .with_context(|| format!("collecting step result from worker rank {}", w.rank))?;
-                if states[i].bytes_buffered() != before {
-                    moved = true;
-                }
-                if let Some(wire) = polled {
-                    self.bytes_recv.set(self.bytes_recv.get() + wire);
-                    let recv = w.recv.borrow();
-                    let secs = proto::decode_step_result_into(recv.payload(), &mut outs[i].0)
-                        .with_context(|| {
-                            format!("decoding step result from worker rank {}", w.rank)
-                        })?;
-                    outs[i].1 = secs;
-                    done[i] = true;
-                    pending -= 1;
-                    moved = true;
-                }
-            }
-            if !moved {
-                std::thread::sleep(Duration::from_micros(200));
-            }
-        }
-        Ok(())
-    }
-}
-
-impl Default for ProcBackend {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Backend for ProcBackend {
-    type Worker = ProcWorker;
-    type Eval = CpuEval;
-
-    fn name(&self) -> &'static str {
-        "proc"
-    }
-
-    fn bucket(
-        &mut self,
-        model: &ModelConfig,
-        kind: ArtifactKind,
-        n_need: usize,
-        e_need: usize,
-    ) -> Result<(usize, usize)> {
-        self.cpu.bucket(model, kind, n_need, e_need)
-    }
-
-    fn prepare_worker(
-        &mut self,
-        _model: &ModelConfig,
-        _batch: TrainBatch,
-        _dropedge: Option<(usize, f64)>,
-        _rng: &mut Rng,
-    ) -> Result<ProcWorker> {
-        bail!(
-            "proc workers are prepared by the shard handshake \
-             (Run::from_workers), not from host-side batches"
-        )
-    }
-
-    fn prepare_eval(&mut self, model: &ModelConfig, batch: EvalBatch) -> Result<CpuEval> {
-        self.cpu.prepare_eval(model, batch)
-    }
-
-    fn run_workers(
-        &self,
-        workers: &[ProcWorker],
-        selected: &[usize],
-        picks: &[Option<usize>],
-        params: &ParamSet,
-        outs: &mut Vec<(TrainOut, f64)>,
-    ) -> Result<()> {
-        debug_assert_eq!(selected.len(), picks.len());
-        // Broadcast phase: every selected worker gets its Step frame before
-        // any read, so the remote processes compute concurrently. The
-        // parameter payload is identical for all workers (only the pick
-        // differs), so it is serialized exactly once per epoch — into a
-        // buffer reused across epochs.
-        {
-            let mut encoded = self.encoded.borrow_mut();
-            encoded.encode_from(&params.data)?;
-            for (&wi, pick) in selected.iter().zip(picks) {
-                let w = &workers[wi];
-                let n = proto::write_step_encoded(&mut *w.stream.borrow_mut(), *pick, &encoded)
-                    .with_context(|| format!("sending step to worker rank {}", w.rank))?;
-                self.bytes_sent.set(self.bytes_sent.get() + n);
-            }
-        }
-        // Collect phase: readiness-polled, overlapped. Slot `i` of `outs`
-        // is worker `selected[i]` — results land by rank regardless of
-        // arrival order, and the engine's sequential fold over `outs`
-        // keeps the gradient sum in rank order, bit-identical to inproc.
-        outs.truncate(selected.len());
-        while outs.len() < selected.len() {
-            outs.push((TrainOut::default(), 0.0));
-        }
-        for &wi in selected {
-            workers[wi]
-                .stream
-                .borrow()
-                .set_nonblocking(true)
-                .with_context(|| format!("worker rank {}: nonblocking", workers[wi].rank))?;
-        }
-        let collect = self.collect_overlapped(workers, selected, outs);
-        // Always restore blocking mode (the handshake/shutdown paths and
-        // the next epoch's broadcast expect it), even when collect failed.
-        for &wi in selected {
-            let _ = workers[wi].stream.borrow().set_nonblocking(false);
-        }
-        collect
-    }
-
-    fn evaluate(&self, eval: &CpuEval, params: &ParamSet, split: usize) -> Result<f64> {
-        self.cpu.evaluate(eval, params, split)
-    }
-
-    fn evaluate_val_test(&self, eval: &CpuEval, params: &ParamSet) -> Result<(f64, f64)> {
-        self.cpu.evaluate_val_test(eval, params)
     }
 }
 
 // ---------------------------------------------------------------------------
-// Listener + child-process plumbing.
+// Listener plumbing.
 // ---------------------------------------------------------------------------
 
 static SOCK_COUNTER: AtomicU64 = AtomicU64::new(0);
@@ -413,42 +259,780 @@ impl Drop for Listener {
     }
 }
 
-/// Kills every still-running child on drop (error paths); `defuse` after a
-/// clean shutdown.
-struct ChildGuard {
-    children: Vec<Child>,
-    defused: bool,
+// ---------------------------------------------------------------------------
+// FleetCtl: the fault-tolerant control plane.
+// ---------------------------------------------------------------------------
+
+/// Validate a handshake `Hello` against the fleet shape: protocol version,
+/// partition count, rank range, and slot uniqueness. Returns the rank.
+/// Rejections name the offending rank so a misconfigured fleet (two
+/// workers on one shard, a shard from a different cut) fails loudly at
+/// Hello time instead of silently overwriting a worker slot.
+fn check_hello(frame: &Frame, num_parts: usize, taken: &[bool]) -> Result<usize> {
+    let Frame::Hello { proto_version, rank, num_parts: np } = frame else {
+        bail!("expected Hello frame, got {frame:?}");
+    };
+    ensure!(
+        *proto_version == PROTO_VERSION,
+        "worker rank {rank} speaks protocol v{proto_version}, coordinator v{PROTO_VERSION}"
+    );
+    ensure!(
+        *np as usize == num_parts,
+        "worker rank {rank}: shard says {np} parts, coordinator drives {num_parts}"
+    );
+    let rank = *rank as usize;
+    ensure!(
+        rank < num_parts,
+        "worker rank {rank} out of range for a {num_parts}-worker fleet"
+    );
+    ensure!(
+        !taken[rank],
+        "duplicate worker rank {rank}: another worker already holds that slot"
+    );
+    Ok(rank)
 }
 
-impl ChildGuard {
-    fn wait_all(&mut self) -> Result<()> {
-        for c in &mut self.children {
-            let status = c.wait()?;
-            ensure!(status.success(), "worker process exited with {status}");
+/// How the coordinator reaches one rank's worker.
+enum Endpoint {
+    /// A child process the coordinator spawned (and respawns) itself; it
+    /// dials back to our listener.
+    Local { shard: PathBuf },
+    /// A `cofree worker --listen` process on another host: the
+    /// coordinator dials out, and recovery means re-dialing with backoff.
+    Remote { addr: String },
+}
+
+/// The fleet control plane: owns the listener, the per-rank endpoints and
+/// child handles, the `Config` frame and the expected per-rank `Meta`s —
+/// everything needed to put a lost rank back exactly where its
+/// predecessor stood. Kills remaining children on drop (error paths);
+/// [`FleetCtl::wait_all`] defuses after a clean shutdown.
+struct FleetCtl {
+    /// `Some` for local fleets (respawned workers dial back here).
+    listener: Option<Listener>,
+    addr: String,
+    endpoints: Vec<Endpoint>,
+    children: Vec<Option<Child>>,
+    /// Per-rank incarnation counter, exported to respawned workers as
+    /// `COFREE_CHAOS_GEN` so `once` fault plans disarm after recovery.
+    generation: Vec<u64>,
+    /// The `Config` frame, kept for recovery re-handshakes.
+    config: Frame,
+    /// Each rank's original `Meta`. A rejoining rank must reproduce its
+    /// meta bit-for-bit — anything else means the shard or RNG stream
+    /// changed underneath the run, and the trajectory could silently
+    /// diverge.
+    metas: Vec<WorkerMeta>,
+    worker_bin: PathBuf,
+    chaos_env: Option<String>,
+    health: HealthOptions,
+    num_parts: usize,
+    defused: bool,
+    // Accounting, folded into DistStats at the end of the run.
+    recoveries: u64,
+    recovery_seconds: f64,
+    handshake_bytes: u64,
+}
+
+/// Where a fleet's workers come from.
+enum FleetSource {
+    /// Spawn one local child per shard file (rank = shard index).
+    Spawn(Vec<PathBuf>),
+    /// Dial pre-existing `cofree worker --listen` endpoints.
+    Connect(Vec<String>),
+}
+
+impl FleetCtl {
+    /// Bring up the full fleet: spawn/dial every rank, collect Hellos,
+    /// broadcast `Config`, collect `Meta`s in rank order. Returns the
+    /// control plane plus the per-rank streams, handshake complete and
+    /// reads unbounded, ready for the step loop.
+    fn launch(
+        source: FleetSource,
+        config: Frame,
+        opts: &ProcOptions,
+    ) -> Result<(FleetCtl, Vec<Stream>)> {
+        let (listener, addr, endpoints) = match &source {
+            FleetSource::Spawn(files) => {
+                let (l, addr) = Listener::bind(opts.transport)?;
+                let eps = files
+                    .iter()
+                    .map(|f| Endpoint::Local { shard: f.clone() })
+                    .collect();
+                (Some(l), addr, eps)
+            }
+            FleetSource::Connect(hosts) => {
+                // Rank order is discovered from the Hellos, not the host
+                // list order; placeholders are overwritten below.
+                let eps = hosts.iter().map(|_| Endpoint::Remote { addr: String::new() }).collect();
+                (None, String::new(), eps)
+            }
+        };
+        let p = match &source {
+            FleetSource::Spawn(files) => files.len(),
+            FleetSource::Connect(hosts) => hosts.len(),
+        };
+        ensure!(p > 0, "cannot launch an empty fleet");
+        let mut fleet = FleetCtl {
+            listener,
+            addr,
+            endpoints,
+            children: (0..p).map(|_| None).collect(),
+            generation: vec![0; p],
+            config,
+            metas: Vec::with_capacity(p),
+            worker_bin: opts.worker_bin.clone(),
+            chaos_env: opts.chaos_env.clone(),
+            health: opts.health,
+            num_parts: p,
+            defused: false,
+            recoveries: 0,
+            recovery_seconds: 0.0,
+            handshake_bytes: 0,
+        };
+        let mut streams: Vec<Option<Stream>> = (0..p).map(|_| None).collect();
+        let mut taken = vec![false; p];
+        match source {
+            FleetSource::Spawn(_) => {
+                for rank in 0..p {
+                    fleet.children[rank] = Some(fleet.spawn_child(rank)?);
+                }
+                let deadline = Instant::now() + opts.handshake_timeout;
+                let mut connected = 0usize;
+                while connected < p {
+                    match fleet.listener.as_ref().expect("local fleet").accept()? {
+                        Some(mut s) => {
+                            // A peer that connects but never speaks (stray
+                            // local process, hung worker) must not hang the
+                            // coordinator: handshake reads are bounded; the
+                            // step loop later restores unbounded reads.
+                            s.set_read_timeout(Some(opts.handshake_timeout))?;
+                            let (frame, n) =
+                                proto::read_frame(&mut s).context("reading Hello")?;
+                            fleet.handshake_bytes += n;
+                            let rank = check_hello(&frame, p, &taken)?;
+                            taken[rank] = true;
+                            streams[rank] = Some(s);
+                            connected += 1;
+                        }
+                        None => {
+                            if let Some((rank, status)) = fleet.any_dead()? {
+                                bail!("worker rank {rank} exited during handshake with {status}");
+                            }
+                            ensure!(
+                                Instant::now() < deadline,
+                                "handshake timeout: {connected}/{p} workers connected after {:?}",
+                                opts.handshake_timeout
+                            );
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                    }
+                }
+            }
+            FleetSource::Connect(hosts) => {
+                let deadline = Instant::now() + opts.handshake_timeout;
+                for host in &hosts {
+                    let (mut s, frame, n) =
+                        dial_hello(host, deadline, fleet.health.reconnect_backoff)?;
+                    fleet.handshake_bytes += n;
+                    let rank = check_hello(&frame, p, &taken)?;
+                    taken[rank] = true;
+                    fleet.endpoints[rank] = Endpoint::Remote { addr: host.clone() };
+                    s.set_read_timeout(Some(opts.handshake_timeout))?;
+                    streams[rank] = Some(s);
+                    crate::log_info!("remote worker rank {rank} at {host} joined");
+                }
+            }
         }
-        self.defused = true;
-        Ok(())
+        let streams = fleet.config_meta_exchange(streams)?;
+        Ok((fleet, streams))
     }
 
-    /// True if any child has already exited (with its status).
-    fn any_dead(&mut self) -> Result<Option<std::process::ExitStatus>> {
-        for c in &mut self.children {
-            if let Some(status) = c.try_wait()? {
-                return Ok(Some(status));
+    /// Broadcast `Config` to every rank (so all workers tensorize + build
+    /// their DropEdge banks concurrently), then collect `Meta`s in rank
+    /// order and unbound the reads for the step loop.
+    fn config_meta_exchange(&mut self, streams: Vec<Option<Stream>>) -> Result<Vec<Stream>> {
+        let mut prepared: Vec<Stream> = Vec::with_capacity(streams.len());
+        for slot in streams {
+            let mut s = slot.expect("stream present after handshake");
+            self.handshake_bytes += proto::write_frame(&mut s, &self.config)?;
+            prepared.push(s);
+        }
+        for (rank, s) in prepared.iter_mut().enumerate() {
+            let meta = self.read_meta(s, rank)?;
+            self.metas.push(meta);
+            // Step-loop reads are unbounded again (epochs can legitimately
+            // take longer than the handshake timeout); hangs are the epoch
+            // deadline's job now.
+            s.set_read_timeout(None)?;
+        }
+        Ok(prepared)
+    }
+
+    fn read_meta(&mut self, s: &mut Stream, rank: usize) -> Result<WorkerMeta> {
+        let (frame, n) = proto::read_frame(s)
+            .with_context(|| format!("reading Meta from rank {rank}"))?;
+        self.handshake_bytes += n;
+        let Frame::Meta { local_train_weight, tmask_sum, num_masks } = frame else {
+            bail!("rank {rank}: expected Meta frame, got {frame:?}");
+        };
+        Ok(WorkerMeta { local_train_weight, tmask_sum, num_masks: num_masks as usize })
+    }
+
+    fn spawn_child(&self, rank: usize) -> Result<Child> {
+        let Endpoint::Local { shard } = &self.endpoints[rank] else {
+            bail!("rank {rank} is a remote endpoint; cannot spawn it locally");
+        };
+        let mut cmd = Command::new(&self.worker_bin);
+        cmd.arg("worker")
+            .arg("--shard")
+            .arg(shard)
+            .arg("--connect")
+            .arg(&self.addr)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit());
+        if let Some(chaos) = &self.chaos_env {
+            cmd.env(fault::CHAOS_ENV, chaos)
+                .env(fault::CHAOS_GEN_ENV, self.generation[rank].to_string());
+        }
+        cmd.spawn()
+            .with_context(|| format!("spawning worker {:?} for rank {rank}", self.worker_bin))
+    }
+
+    /// Recover one lost rank: respawn (local) or re-dial (remote), replay
+    /// the handshake, and verify the replacement's `Meta` is bit-identical
+    /// to the original. Returns the fresh stream (blocking reads,
+    /// unbounded), carrying a worker that is indistinguishable from its
+    /// predecessor.
+    fn recover(&mut self, rank: usize) -> Result<Stream> {
+        ensure!(
+            (self.recoveries as usize) < self.health.max_recoveries,
+            "worker rank {rank} lost, but the recovery budget ({}) is exhausted — \
+             if healthy workers are being recycled, the epoch deadline is \
+             probably shorter than an honest epoch",
+            self.health.max_recoveries
+        );
+        self.recoveries += 1;
+        let t0 = Instant::now();
+        let mut stream = match &self.endpoints[rank] {
+            Endpoint::Local { .. } => self.respawn_local(rank)?,
+            Endpoint::Remote { addr } => {
+                let addr = addr.clone();
+                self.redial_remote(rank, &addr)?
+            }
+        };
+        self.handshake_bytes += proto::write_frame(&mut stream, &self.config)?;
+        let meta = self.read_meta(&mut stream, rank)?;
+        let want = self.metas[rank];
+        ensure!(
+            meta.local_train_weight.to_bits() == want.local_train_weight.to_bits()
+                && meta.tmask_sum.to_bits() == want.tmask_sum.to_bits()
+                && meta.num_masks == want.num_masks,
+            "recovered rank {rank} reports meta {meta:?}, original was {want:?} — \
+             its shard or RNG stream changed; refusing to continue with a \
+             divergent trajectory"
+        );
+        stream.set_read_timeout(None)?;
+        let dt = t0.elapsed();
+        self.recovery_seconds += dt.as_secs_f64();
+        crate::log_warn!(
+            "rank {rank} rejoined in {:.0}ms (incarnation {}, recovery {}/{})",
+            dt.as_secs_f64() * 1e3,
+            self.generation[rank],
+            self.recoveries,
+            self.health.max_recoveries
+        );
+        Ok(stream)
+    }
+
+    /// Kill + reap the old incarnation, spawn a replacement, and accept
+    /// its connection (validating that it really is `rank` calling back).
+    fn respawn_local(&mut self, rank: usize) -> Result<Stream> {
+        if let Some(mut child) = self.children[rank].take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        self.generation[rank] += 1;
+        crate::log_warn!(
+            "respawning worker rank {rank} (incarnation {})",
+            self.generation[rank]
+        );
+        self.children[rank] = Some(self.spawn_child(rank)?);
+        let deadline = Instant::now() + self.health.recovery_timeout;
+        let none_taken = vec![false; self.num_parts];
+        loop {
+            if let Some(mut s) = self.listener.as_ref().expect("local fleet").accept()? {
+                s.set_read_timeout(Some(self.health.recovery_timeout))?;
+                let (frame, n) =
+                    proto::read_frame(&mut s).context("reading Hello from respawned worker")?;
+                self.handshake_bytes += n;
+                let got = check_hello(&frame, self.num_parts, &none_taken)?;
+                ensure!(
+                    got == rank,
+                    "respawned worker reports rank {got}, expected rank {rank}"
+                );
+                return Ok(s);
+            }
+            if let Some(status) =
+                self.children[rank].as_mut().and_then(|c| c.try_wait().ok().flatten())
+            {
+                bail!("respawned worker rank {rank} exited during handshake with {status}");
+            }
+            ensure!(
+                Instant::now() < deadline,
+                "timeout ({:?}) waiting for respawned rank {rank} to connect",
+                self.health.recovery_timeout
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    /// Re-dial a remote rank with exponential backoff until it answers
+    /// with a valid Hello or the recovery budget runs out. The worker's
+    /// listen loop returns to `accept` when a session drops, so a live
+    /// worker is re-joinable the moment the old session dies.
+    fn redial_remote(&mut self, rank: usize, addr: &str) -> Result<Stream> {
+        crate::log_warn!("re-dialing remote worker rank {rank} at {addr}");
+        let deadline = Instant::now() + self.health.recovery_timeout;
+        let (mut s, frame, n) = dial_hello(addr, deadline, self.health.reconnect_backoff)
+            .with_context(|| format!("re-dialing rank {rank} at {addr}"))?;
+        self.handshake_bytes += n;
+        let none_taken = vec![false; self.num_parts];
+        let got = check_hello(&frame, self.num_parts, &none_taken)?;
+        ensure!(got == rank, "worker at {addr} reports rank {got}, expected rank {rank}");
+        s.set_read_timeout(Some(self.health.recovery_timeout))?;
+        Ok(s)
+    }
+
+    /// True if any child has already exited (with its rank and status).
+    fn any_dead(&mut self) -> Result<Option<(usize, std::process::ExitStatus)>> {
+        for (rank, c) in self.children.iter_mut().enumerate() {
+            if let Some(child) = c.as_mut() {
+                if let Some(status) = child.try_wait()? {
+                    return Ok(Some((rank, status)));
+                }
             }
         }
         Ok(None)
     }
+
+    /// Reap every child after a clean shutdown; defuses the drop-kill.
+    fn wait_all(&mut self) -> Result<()> {
+        for (rank, c) in self.children.iter_mut().enumerate() {
+            if let Some(mut child) = c.take() {
+                let status = child.wait()?;
+                ensure!(status.success(), "worker rank {rank} exited with {status}");
+            }
+        }
+        self.defused = true;
+        Ok(())
+    }
 }
 
-impl Drop for ChildGuard {
+impl Drop for FleetCtl {
     fn drop(&mut self) {
         if !self.defused {
-            for c in &mut self.children {
+            for c in self.children.iter_mut().flatten() {
                 let _ = c.kill();
                 let _ = c.wait();
             }
         }
+    }
+}
+
+/// Dial `addr` and read the worker's Hello, retrying with exponential
+/// backoff until `deadline` — a remote worker may still be booting (or
+/// finishing a dying session) when the coordinator first calls.
+fn dial_hello(addr: &str, deadline: Instant, backoff0: Duration) -> Result<(Stream, Frame, u64)> {
+    let mut backoff = backoff0.max(Duration::from_millis(10));
+    loop {
+        let attempt = (|| -> Result<(Stream, Frame, u64)> {
+            let mut s = Stream::connect(addr)?;
+            // Per-attempt bound: a connect that lands in a hung worker's
+            // backlog must not swallow the whole recovery budget.
+            s.set_read_timeout(Some(Duration::from_secs(2)))?;
+            let (frame, n) = proto::read_frame(&mut s).context("reading Hello")?;
+            Ok((s, frame, n))
+        })();
+        match attempt {
+            Ok(got) => return Ok(got),
+            Err(e) => {
+                ensure!(
+                    Instant::now() + backoff < deadline,
+                    "worker at {addr} unreachable before deadline: {e:#}"
+                );
+                crate::log_debug!("dial {addr}: {e:#}; retrying in {backoff:?}");
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(2));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ProcBackend: the engine's Backend over remote worker processes.
+// ---------------------------------------------------------------------------
+
+/// A connected remote worker (one process, one shard).
+pub struct ProcWorker {
+    pub rank: usize,
+    stream: RefCell<Stream>,
+    /// Reusable receive buffer: step results land here frame after frame,
+    /// epoch after epoch, with no per-frame payload allocation.
+    recv: RefCell<proto::FrameBuf>,
+}
+
+/// Backend that executes `train_step` on remote worker processes and
+/// evaluates on the coordinator (full-graph eval never leaves the leader).
+///
+/// Per epoch it serializes the parameter payload **once** into a reused
+/// buffer, broadcasts a `Step` frame to every selected worker before
+/// reading anything back (so all remote processes compute concurrently),
+/// then collects `StepResult`s **as they arrive** by readiness-polling all
+/// sockets round-robin — a slow rank no longer blocks draining the fast
+/// ranks' results. Results are still indexed by rank into the engine's
+/// output slots, and the engine still folds them sequentially in rank
+/// order, so the trajectory stays bit-identical to the in-process engine
+/// (`tests/dist_proc.rs`).
+///
+/// Failure handling per epoch: a send/poll error or a missed
+/// [`HealthOptions::epoch_deadline`] hands the rank to
+/// [`FleetCtl::recover`] and resends the *same* Step (same θ bytes, same
+/// pick) to the replacement, whose recomputed `TrainOut` is bit-identical
+/// — the engine above never notices.
+pub struct ProcBackend {
+    cpu: CpuBackend,
+    fleet: RefCell<FleetCtl>,
+    bytes_sent: Cell<u64>,
+    bytes_recv: Cell<u64>,
+    heartbeat_bytes: Cell<u64>,
+    deadline_misses: Cell<u64>,
+    /// Epoch counter (drives the heartbeat cadence).
+    epoch: Cell<usize>,
+    ping_nonce: Cell<u64>,
+    stragglers: RefCell<StragglerMonitor>,
+    /// The once-per-epoch serialized parameter payload (reused; also the
+    /// resend source for recovered workers).
+    encoded: RefCell<proto::EncodedParams>,
+    /// Per-selected-worker incremental frame readers (reused).
+    recv_states: RefCell<Vec<proto::StepResultRecv>>,
+    /// Per-selected-worker completion flags (reused).
+    recv_done: RefCell<Vec<bool>>,
+}
+
+impl ProcBackend {
+    fn new(fleet: FleetCtl) -> ProcBackend {
+        ProcBackend {
+            cpu: CpuBackend::new(),
+            fleet: RefCell::new(fleet),
+            bytes_sent: Cell::new(0),
+            bytes_recv: Cell::new(0),
+            heartbeat_bytes: Cell::new(0),
+            deadline_misses: Cell::new(0),
+            epoch: Cell::new(0),
+            ping_nonce: Cell::new(0),
+            stragglers: RefCell::new(StragglerMonitor::new()),
+            encoded: RefCell::new(proto::EncodedParams::new()),
+            recv_states: RefCell::new(Vec::new()),
+            recv_done: RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Swap a lost worker's stream for a recovered one (same rank, fresh
+    /// incarnation, handshake already verified bit-identical).
+    fn replace_worker(&self, w: &ProcWorker) -> Result<()> {
+        let stream = self.fleet.borrow_mut().recover(w.rank)?;
+        *w.stream.borrow_mut() = stream;
+        Ok(())
+    }
+
+    /// Recover `w` and resend the current epoch's Step (the encoded θ is
+    /// still in the broadcast buffer; the pick is the rank's original
+    /// draw), leaving the fresh socket in nonblocking mode for the
+    /// collect loop.
+    fn recover_and_resend(&self, w: &ProcWorker, pick: Option<usize>) -> Result<()> {
+        self.replace_worker(w)?;
+        let encoded = self.encoded.borrow();
+        let n = proto::write_step_encoded(&mut *w.stream.borrow_mut(), pick, &encoded)
+            .with_context(|| format!("resending step to recovered rank {}", w.rank))?;
+        self.bytes_sent.set(self.bytes_sent.get() + n);
+        w.stream
+            .borrow()
+            .set_nonblocking(true)
+            .with_context(|| format!("recovered rank {}: nonblocking", w.rank))?;
+        Ok(())
+    }
+
+    /// Ping every worker and wait (bounded) for the echoed nonce; a rank
+    /// that cannot answer is recovered before the epoch's broadcast.
+    fn heartbeat_sweep(&self, workers: &[ProcWorker], health: &HealthOptions) -> Result<()> {
+        for w in workers {
+            let nonce = self.ping_nonce.get().wrapping_add(1);
+            self.ping_nonce.set(nonce);
+            if let Err(e) = self.ping_worker(w, nonce, health.heartbeat_timeout) {
+                crate::log_warn!("rank {} failed its heartbeat ({e:#}); recovering", w.rank);
+                // The replacement has just handshaken — alive by
+                // construction; no re-ping needed.
+                self.replace_worker(w)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn ping_worker(&self, w: &ProcWorker, nonce: u64, timeout: Duration) -> Result<()> {
+        let mut stream = w.stream.borrow_mut();
+        let sent = proto::write_frame(&mut *stream, &Frame::Ping { nonce })?;
+        stream.set_read_timeout(Some(timeout))?;
+        let answered = (|| -> Result<u64> {
+            let mut recv = w.recv.borrow_mut();
+            let (tag, payload, n) = proto::read_frame_into(&mut *stream, &mut recv)?;
+            let Frame::Pong { nonce: got } = proto::decode_frame(tag, payload)? else {
+                bail!("expected Pong, got frame tag {tag}");
+            };
+            ensure!(got == nonce, "stale Pong nonce {got}, expected {nonce}");
+            Ok(n)
+        })();
+        // Restore unbounded reads for the step loop (a dead stream is
+        // replaced by the caller anyway).
+        let _ = stream.set_read_timeout(None);
+        let recvd = answered?;
+        self.heartbeat_bytes
+            .set(self.heartbeat_bytes.get() + sent + recvd);
+        Ok(())
+    }
+
+    /// Drain one `StepResult` per selected worker, round-robin over
+    /// nonblocking sockets: each pass pumps whatever bytes every pending
+    /// socket has ready ([`proto::StepResultRecv`]), decodes completed
+    /// frames straight into their rank's output slot, and only sleeps
+    /// (200 µs) when a full pass moved no bytes at all. Wall clock is
+    /// therefore governed by the slowest worker, not by rank order — and
+    /// bounded by the epoch deadline: when it expires with results still
+    /// pending, the pending ranks are presumed hung, recovered, and
+    /// resent their Step, so a wedged worker can never stall the fleet
+    /// forever.
+    fn collect_overlapped(
+        &self,
+        workers: &[ProcWorker],
+        selected: &[usize],
+        picks: &[Option<usize>],
+        outs: &mut [(TrainOut, f64)],
+    ) -> Result<()> {
+        let mut states = self.recv_states.borrow_mut();
+        states.clear();
+        states.resize_with(selected.len(), proto::StepResultRecv::new);
+        let mut done = self.recv_done.borrow_mut();
+        done.clear();
+        done.resize(selected.len(), false);
+        let epoch_deadline = self.fleet.borrow().health.epoch_deadline;
+        let mut deadline = epoch_deadline.map(|d| Instant::now() + d);
+        let mut pending = selected.len();
+        while pending > 0 {
+            let mut moved = false;
+            for i in 0..selected.len() {
+                if done[i] {
+                    continue;
+                }
+                let w = &workers[selected[i]];
+                let before = states[i].bytes_buffered();
+                let polled = {
+                    let mut stream = w.stream.borrow_mut();
+                    let mut recv = w.recv.borrow_mut();
+                    states[i].poll(&mut *stream, &mut recv)
+                };
+                let polled = match polled {
+                    Ok(v) => v,
+                    Err(e) => {
+                        // Dropped connection (or corrupt frame) mid-
+                        // collect: put a fresh incarnation of the rank
+                        // back and let it recompute the identical result.
+                        crate::log_warn!(
+                            "rank {} lost mid-collect ({e:#}); recovering",
+                            w.rank
+                        );
+                        self.recover_and_resend(w, picks[i])?;
+                        states[i] = proto::StepResultRecv::new();
+                        // The replacement recomputes from scratch: give
+                        // the epoch a fresh deadline budget.
+                        deadline = epoch_deadline.map(|d| Instant::now() + d);
+                        moved = true;
+                        continue;
+                    }
+                };
+                if states[i].bytes_buffered() != before {
+                    moved = true;
+                }
+                if let Some(wire) = polled {
+                    self.bytes_recv.set(self.bytes_recv.get() + wire);
+                    let recv = w.recv.borrow();
+                    let secs = proto::decode_step_result_into(recv.payload(), &mut outs[i].0)
+                        .with_context(|| {
+                            format!("decoding step result from worker rank {}", w.rank)
+                        })?;
+                    outs[i].1 = secs;
+                    done[i] = true;
+                    pending -= 1;
+                    moved = true;
+                }
+            }
+            if !moved {
+                if let Some(dl) = deadline {
+                    if Instant::now() >= dl {
+                        // Deadline missed: every still-pending rank is
+                        // presumed hung (a live one would have moved at
+                        // least a byte by now).
+                        self.deadline_misses.set(self.deadline_misses.get() + 1);
+                        for i in 0..selected.len() {
+                            if done[i] {
+                                continue;
+                            }
+                            let w = &workers[selected[i]];
+                            crate::log_warn!(
+                                "epoch deadline {:?} missed by rank {} ({} bytes of its \
+                                 result arrived); recovering",
+                                epoch_deadline.expect("deadline set"),
+                                w.rank,
+                                states[i].bytes_buffered()
+                            );
+                            self.recover_and_resend(w, picks[i])?;
+                            states[i] = proto::StepResultRecv::new();
+                        }
+                        deadline = epoch_deadline.map(|d| Instant::now() + d);
+                        continue;
+                    }
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Backend for ProcBackend {
+    type Worker = ProcWorker;
+    type Eval = CpuEval;
+
+    fn name(&self) -> &'static str {
+        "proc"
+    }
+
+    fn bucket(
+        &mut self,
+        model: &ModelConfig,
+        kind: ArtifactKind,
+        n_need: usize,
+        e_need: usize,
+    ) -> Result<(usize, usize)> {
+        self.cpu.bucket(model, kind, n_need, e_need)
+    }
+
+    fn prepare_worker(
+        &mut self,
+        _model: &ModelConfig,
+        _batch: TrainBatch,
+        _dropedge: Option<(usize, f64)>,
+        _rng: &mut Rng,
+    ) -> Result<ProcWorker> {
+        bail!(
+            "proc workers are prepared by the shard handshake \
+             (Run::from_workers), not from host-side batches"
+        )
+    }
+
+    fn prepare_eval(&mut self, model: &ModelConfig, batch: EvalBatch) -> Result<CpuEval> {
+        self.cpu.prepare_eval(model, batch)
+    }
+
+    fn run_workers(
+        &self,
+        workers: &[ProcWorker],
+        selected: &[usize],
+        picks: &[Option<usize>],
+        params: &ParamSet,
+        outs: &mut Vec<(TrainOut, f64)>,
+    ) -> Result<()> {
+        debug_assert_eq!(selected.len(), picks.len());
+        let epoch = self.epoch.get();
+        self.epoch.set(epoch + 1);
+        let health = self.fleet.borrow().health;
+        // Liveness sweep between epochs: catches workers lost while idle,
+        // where neither the broadcast (buffered send succeeds into a dead
+        // socket) nor the collect would notice promptly.
+        if health.heartbeat_every > 0 && epoch % health.heartbeat_every == 0 {
+            self.heartbeat_sweep(workers, &health)?;
+        }
+        // Broadcast phase: every selected worker gets its Step frame before
+        // any read, so the remote processes compute concurrently. The
+        // parameter payload is identical for all workers (only the pick
+        // differs), so it is serialized exactly once per epoch — into a
+        // buffer reused across epochs.
+        {
+            let mut encoded = self.encoded.borrow_mut();
+            encoded.encode_from(&params.data)?;
+            for (&wi, pick) in selected.iter().zip(picks) {
+                let w = &workers[wi];
+                let wrote = proto::write_step_encoded(&mut *w.stream.borrow_mut(), *pick, &encoded);
+                let n = match wrote {
+                    Ok(n) => n,
+                    Err(e) => {
+                        // Dead socket at broadcast time: nothing of this
+                        // epoch has been consumed yet — recover and resend.
+                        crate::log_warn!(
+                            "rank {} unreachable at broadcast ({e:#}); recovering",
+                            w.rank
+                        );
+                        self.replace_worker(w)?;
+                        proto::write_step_encoded(&mut *w.stream.borrow_mut(), *pick, &encoded)
+                            .with_context(|| {
+                                format!("resending step to recovered rank {}", w.rank)
+                            })?
+                    }
+                };
+                self.bytes_sent.set(self.bytes_sent.get() + n);
+            }
+        }
+        // Collect phase: readiness-polled, overlapped. Slot `i` of `outs`
+        // is worker `selected[i]` — results land by rank regardless of
+        // arrival order, and the engine's sequential fold over `outs`
+        // keeps the gradient sum in rank order, bit-identical to inproc.
+        outs.truncate(selected.len());
+        while outs.len() < selected.len() {
+            outs.push((TrainOut::default(), 0.0));
+        }
+        for &wi in selected {
+            workers[wi]
+                .stream
+                .borrow()
+                .set_nonblocking(true)
+                .with_context(|| format!("worker rank {}: nonblocking", workers[wi].rank))?;
+        }
+        let collect = self.collect_overlapped(workers, selected, picks, outs);
+        // Always restore blocking mode (the handshake/shutdown paths and
+        // the next epoch's broadcast expect it), even when collect failed.
+        for &wi in selected {
+            let _ = workers[wi].stream.borrow().set_nonblocking(false);
+        }
+        collect?;
+        // Straggler scan over the compute telemetry that just arrived
+        // (detection only — a slow worker's partial sum is still folded).
+        self.stragglers.borrow_mut().observe(
+            health.straggler_factor,
+            health.straggler_floor,
+            epoch,
+            outs.iter()
+                .zip(selected.iter())
+                .map(|((_, dt), &wi)| (workers[wi].rank, *dt)),
+        );
+        Ok(())
+    }
+
+    fn evaluate(&self, eval: &CpuEval, params: &ParamSet, split: usize) -> Result<f64> {
+        self.cpu.evaluate(eval, params, split)
+    }
+
+    fn evaluate_val_test(&self, eval: &CpuEval, params: &ParamSet) -> Result<(f64, f64)> {
+        self.cpu.evaluate_val_test(eval, params)
     }
 }
 
@@ -471,121 +1055,69 @@ pub fn train_over_shards(
     resume: Option<TrainCheckpoint>,
 ) -> Result<(History, TrainCheckpoint, DistStats)> {
     let files = shard_files(shard_dir)?;
-    let p = files.len();
-    let model = model_config_for(ds, opts.model);
-    let mut stats = DistStats { num_workers: p, num_params: model.num_params(), ..Default::default() };
-
-    let t_handshake = Instant::now();
-    let (listener, addr) = Listener::bind(opts.transport)?;
     crate::log_info!(
-        "coordinator: {p} workers over {} at {addr}, shards from {}",
+        "coordinator: {} workers over {}, shards from {}",
+        files.len(),
         opts.transport.name(),
         shard_dir.display()
     );
-    // Spawn one worker per shard. Workers log to stderr; stdout is
-    // discarded so coordinator output stays parseable.
-    let mut guard = ChildGuard { children: Vec::with_capacity(p), defused: false };
-    for file in &files {
-        let child = Command::new(&opts.worker_bin)
-            .arg("worker")
-            .arg("--shard")
-            .arg(file)
-            .arg("--connect")
-            .arg(&addr)
-            .stdin(Stdio::null())
-            .stdout(Stdio::null())
-            .stderr(Stdio::inherit())
-            .spawn()
-            .with_context(|| format!("spawning worker {:?} for {file:?}", opts.worker_bin))?;
-        guard.children.push(child);
-    }
+    train_fleet(ds, cfg, opts, resume, FleetSource::Spawn(files))
+}
 
-    // Handshake: accept p connections, index by self-reported rank.
-    let deadline = Instant::now() + opts.handshake_timeout;
-    let mut streams: Vec<Option<Stream>> = (0..p).map(|_| None).collect();
-    let mut connected = 0usize;
-    while connected < p {
-        match listener.accept()? {
-            Some(mut s) => {
-                // A peer that connects but never speaks (stray local
-                // process, hung worker) must not hang the coordinator:
-                // handshake reads are bounded; the step loop later
-                // restores unbounded reads.
-                s.set_read_timeout(Some(opts.handshake_timeout))?;
-                let (frame, n) = proto::read_frame(&mut s).context("reading Hello")?;
-                stats.handshake_bytes += n;
-                let Frame::Hello { proto_version, rank, num_parts } = frame else {
-                    bail!("expected Hello frame, got {frame:?}");
-                };
-                ensure!(
-                    proto_version == PROTO_VERSION,
-                    "worker speaks protocol v{proto_version}, coordinator v{PROTO_VERSION}"
-                );
-                ensure!(
-                    num_parts as usize == p,
-                    "worker shard says {num_parts} parts, coordinator has {p} shards"
-                );
-                let rank = rank as usize;
-                ensure!(rank < p, "worker rank {rank} out of range");
-                ensure!(streams[rank].is_none(), "duplicate worker rank {rank}");
-                streams[rank] = Some(s);
-                connected += 1;
-            }
-            None => {
-                if let Some(status) = guard.any_dead()? {
-                    bail!("a worker exited during handshake with {status}");
-                }
-                ensure!(
-                    Instant::now() < deadline,
-                    "handshake timeout: {connected}/{p} workers connected after {:?}",
-                    opts.handshake_timeout
-                );
-                std::thread::sleep(Duration::from_millis(5));
-            }
-        }
-    }
+/// Train over a pre-existing multi-host fleet: one `cofree worker
+/// --listen` endpoint per entry of `hosts` (`a:9000,b:9000`). The
+/// coordinator dials out (retrying with backoff while workers boot),
+/// discovers each worker's rank from its Hello, and drives the same
+/// protocol as the local fleet — including recovery, which re-dials a
+/// lost host until it answers or the budget runs out.
+pub fn train_over_hosts(
+    ds: &Dataset,
+    hosts: &[String],
+    cfg: &TrainConfig,
+    opts: &ProcOptions,
+    resume: Option<TrainCheckpoint>,
+) -> Result<(History, TrainCheckpoint, DistStats)> {
+    ensure!(!hosts.is_empty(), "--hosts needs at least one worker endpoint");
+    crate::log_info!("coordinator: dialing remote fleet {}", hosts.join(","));
+    train_fleet(ds, cfg, opts, resume, FleetSource::Connect(hosts.to_vec()))
+}
 
-    // Config down, meta back, in rank order.
+fn train_fleet(
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    opts: &ProcOptions,
+    resume: Option<TrainCheckpoint>,
+    source: FleetSource,
+) -> Result<(History, TrainCheckpoint, DistStats)> {
+    let p = match &source {
+        FleetSource::Spawn(files) => files.len(),
+        FleetSource::Connect(hosts) => hosts.len(),
+    };
+    let model = model_config_for(ds, opts.model);
+    let mut stats =
+        DistStats { num_workers: p, num_params: model.num_params(), ..Default::default() };
+
+    let t_handshake = Instant::now();
     let (dropedge_k, dropedge_ratio) = match cfg.dropedge {
         Some((k, r)) => (k as u32, r),
         None => (0, 0.0),
     };
     let config = Frame::Config { seed: cfg.seed, dropedge_k, dropedge_ratio, model };
-    // Config to everyone first, so all workers tensorize + build their
-    // DropEdge banks concurrently; then collect Meta in rank order.
-    let mut prepared: Vec<Stream> = Vec::with_capacity(p);
-    for slot in streams.iter_mut() {
-        let mut s = slot.take().expect("stream present after handshake");
-        stats.handshake_bytes += proto::write_frame(&mut s, &config)?;
-        prepared.push(s);
-    }
-    let mut workers = Vec::with_capacity(p);
-    let mut metas = Vec::with_capacity(p);
-    for (rank, mut s) in prepared.into_iter().enumerate() {
-        let (frame, n) = proto::read_frame(&mut s)
-            .with_context(|| format!("reading Meta from rank {rank}"))?;
-        stats.handshake_bytes += n;
-        let Frame::Meta { local_train_weight, tmask_sum, num_masks } = frame else {
-            bail!("rank {rank}: expected Meta frame, got {frame:?}");
-        };
-        metas.push(WorkerMeta {
-            local_train_weight,
-            tmask_sum,
-            num_masks: num_masks as usize,
-        });
-        // Step-loop reads are unbounded again (epochs can legitimately
-        // take longer than the handshake timeout).
-        s.set_read_timeout(None)?;
-        workers.push(ProcWorker {
+    let (fleet, streams) = FleetCtl::launch(source, config, opts)?;
+    let metas = fleet.metas.clone();
+    let workers: Vec<ProcWorker> = streams
+        .into_iter()
+        .enumerate()
+        .map(|(rank, s)| ProcWorker {
             rank,
             stream: RefCell::new(s),
             recv: RefCell::new(proto::FrameBuf::new()),
-        });
-    }
+        })
+        .collect();
     stats.handshake_seconds = t_handshake.elapsed().as_secs_f64();
 
     // The unmodified engine loop over the remote fleet.
-    let mut engine = TrainEngine { backend: ProcBackend::new(), kind: opts.model };
+    let mut engine = TrainEngine { backend: ProcBackend::new(fleet), kind: opts.model };
     let eval = engine.prepare_eval(ds)?;
     let mut run: Run<ProcBackend> = Run::from_workers(workers, metas, model, RunMode::AllParts);
     let t_train = Instant::now();
@@ -595,20 +1127,62 @@ pub fn train_over_shards(
     stats.epochs_run = history.epochs.len();
     stats.bytes_sent = engine.backend.bytes_sent.get();
     stats.bytes_recv = engine.backend.bytes_recv.get();
+    stats.heartbeat_bytes = engine.backend.heartbeat_bytes.get();
+    stats.deadline_misses = engine.backend.deadline_misses.get();
+    stats.stragglers = engine.backend.stragglers.borrow().flagged;
 
     // Clean shutdown: one frame each, then reap.
+    let mut handshake_bytes_end = 0u64;
     for w in run.workers() {
-        stats.handshake_bytes += proto::write_frame(&mut *w.stream.borrow_mut(), &Frame::Shutdown)
-            .with_context(|| format!("shutting down rank {}", w.rank))?;
+        handshake_bytes_end +=
+            proto::write_frame(&mut *w.stream.borrow_mut(), &Frame::Shutdown)
+                .with_context(|| format!("shutting down rank {}", w.rank))?;
     }
     drop(run);
     drop(eval);
-    guard.wait_all()?;
+    {
+        let mut fleet = engine.backend.fleet.borrow_mut();
+        fleet.wait_all()?;
+        stats.recoveries = fleet.recoveries;
+        stats.recovery_seconds = fleet.recovery_seconds;
+        stats.handshake_bytes = fleet.handshake_bytes + handshake_bytes_end;
+    }
     crate::log_info!(
-        "coordinator: {} epochs over {p} workers — {:.1} KiB/epoch on the wire ({:.2} B/epoch/param)",
+        "coordinator: {} epochs over {p} workers — {:.1} KiB/epoch on the wire ({:.2} B/epoch/param), {} recoveries",
         stats.epochs_run,
         stats.bytes_per_epoch() / 1024.0,
-        stats.bytes_per_epoch_per_param()
+        stats.bytes_per_epoch_per_param(),
+        stats.recoveries
     );
     Ok((history, checkpoint, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hello(v: u32, rank: u32, np: u32) -> Frame {
+        Frame::Hello { proto_version: v, rank, num_parts: np }
+    }
+
+    /// Handshake validation names the offending rank for every rejection
+    /// shape: wrong version, wrong partition count, out-of-range rank,
+    /// duplicate rank.
+    #[test]
+    fn check_hello_rejections_name_the_rank() {
+        let taken = vec![false, true, false];
+        assert_eq!(check_hello(&hello(PROTO_VERSION, 0, 3), 3, &taken).unwrap(), 0);
+        let err = check_hello(&hello(PROTO_VERSION - 1, 2, 3), 3, &taken).unwrap_err();
+        assert!(format!("{err:#}").contains("rank 2"), "{err:#}");
+        let err = check_hello(&hello(PROTO_VERSION, 0, 4), 3, &taken).unwrap_err();
+        assert!(format!("{err:#}").contains("4 parts"), "{err:#}");
+        let err = check_hello(&hello(PROTO_VERSION, 7, 3), 3, &taken).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 7") && msg.contains("out of range"), "{msg}");
+        let err = check_hello(&hello(PROTO_VERSION, 1, 3), 3, &taken).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("duplicate") && msg.contains("rank 1"), "{msg}");
+        let err = check_hello(&Frame::Shutdown, 3, &taken).unwrap_err();
+        assert!(format!("{err:#}").contains("expected Hello"), "{err:#}");
+    }
 }

@@ -1,0 +1,301 @@
+//! Chaos fault injection for the worker transport (the test harness's
+//! half of the fault-tolerance story).
+//!
+//! `tests/chaos.rs` needs to kill, hang and delay workers at *precise*
+//! points in the protocol — mid-`StepResult`-frame, between epochs, on the
+//! N-th step — and then assert the coordinator recovers with a
+//! bit-identical trajectory. Signals and external kill timing cannot hit
+//! those points reliably, so the worker wraps its [`Stream`](super::proto::Stream)
+//! in a [`FaultStream`] shim when the `COFREE_CHAOS` environment variable
+//! is set. The shim watches the *write* side for `StepResult` frame
+//! boundaries (the same `tag | u64 len | payload` framing the peer
+//! decodes) and injects the planned fault at the right byte:
+//!
+//! * `kill`  — forward the frame header plus a few payload bytes, then
+//!   `process::exit` — the coordinator sees a mid-frame EOF.
+//! * `hang`  — block forever *after* the header leaves, so the
+//!   coordinator holds a half-read frame on a live socket: only the epoch
+//!   deadline can save it.
+//! * `delay` — sleep `ms` before each result from `step` on: a straggler.
+//! * `exit`  — finish the frame, then exit cleanly before the next read:
+//!   a worker lost *between* epochs.
+//!
+//! Plan syntax (one fault per plan): `kind:rank=R:step=N[:ms=M][:once]`,
+//! e.g. `kill:rank=0:step=2:once`. `step` counts `StepResult` frames,
+//! 1-based. With `once`, only the first incarnation of the rank misbehaves
+//! — the coordinator sets `COFREE_CHAOS_GEN` on respawned workers, so a
+//! recovered worker runs clean and the run can actually finish.
+
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Environment variable carrying the fault plan (set on worker processes
+/// by the chaos tests via `ProcOptions::chaos_env`).
+pub const CHAOS_ENV: &str = "COFREE_CHAOS";
+/// Incarnation counter: 0/absent for the first spawn of a rank, bumped by
+/// the coordinator on every respawn so `once` plans disarm after recovery.
+pub const CHAOS_GEN_ENV: &str = "COFREE_CHAOS_GEN";
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    Kill,
+    Hang,
+    Delay,
+    Exit,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind> {
+        Ok(match s {
+            "kill" => FaultKind::Kill,
+            "hang" => FaultKind::Hang,
+            "delay" => FaultKind::Delay,
+            "exit" => FaultKind::Exit,
+            other => bail!("unknown fault kind {other:?} (kill|hang|delay|exit)"),
+        })
+    }
+}
+
+/// One planned fault, parsed from [`CHAOS_ENV`].
+#[derive(Clone, Copy, Debug)]
+pub struct FaultPlan {
+    pub kind: FaultKind,
+    /// The rank this plan applies to (other ranks run clean).
+    pub rank: usize,
+    /// 1-based `StepResult` ordinal that triggers the fault (`delay`
+    /// applies to every result from this ordinal on).
+    pub step: usize,
+    /// Delay per result, for `delay`.
+    pub ms: u64,
+    /// Only the first incarnation misbehaves (respawns run clean).
+    pub once: bool,
+}
+
+impl FaultPlan {
+    /// Parse `kind:rank=R:step=N[:ms=M][:once]`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut parts = spec.split(':');
+        let kind = FaultKind::parse(parts.next().unwrap_or(""))?;
+        let (mut rank, mut step, mut ms, mut once) = (None, None, 0u64, false);
+        for part in parts {
+            if part == "once" {
+                once = true;
+            } else if let Some(v) = part.strip_prefix("rank=") {
+                rank = Some(v.parse::<usize>().with_context(|| format!("fault rank {v:?}"))?);
+            } else if let Some(v) = part.strip_prefix("step=") {
+                step = Some(v.parse::<usize>().with_context(|| format!("fault step {v:?}"))?);
+            } else if let Some(v) = part.strip_prefix("ms=") {
+                ms = v.parse::<u64>().with_context(|| format!("fault ms {v:?}"))?;
+            } else {
+                bail!("unknown fault field {part:?} in {spec:?}");
+            }
+        }
+        let rank = rank.context("fault plan needs rank=R")?;
+        let step = step.context("fault plan needs step=N")?;
+        ensure!(step >= 1, "fault step is 1-based");
+        ensure!(kind != FaultKind::Delay || ms > 0, "delay fault needs ms=M");
+        Ok(FaultPlan { kind, rank, step, ms, once })
+    }
+
+    /// The active plan for `rank` from the environment, if any. `None`
+    /// when no plan is set, when it targets a different rank, or when a
+    /// `once` plan has already fired in an earlier incarnation.
+    pub fn from_env(rank: usize) -> Option<FaultPlan> {
+        let spec = std::env::var(CHAOS_ENV).ok()?;
+        let plan = match FaultPlan::parse(&spec) {
+            Ok(p) => p,
+            Err(e) => {
+                crate::log_error!("ignoring malformed {CHAOS_ENV}={spec:?}: {e:#}");
+                return None;
+            }
+        };
+        if plan.rank != rank {
+            return None;
+        }
+        let generation: u64 = std::env::var(CHAOS_GEN_ENV)
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0);
+        if plan.once && generation > 0 {
+            crate::log_info!("chaos: rank {rank} incarnation {generation} runs clean (once)");
+            return None;
+        }
+        Some(plan)
+    }
+}
+
+/// Transport shim that injects the planned fault at a `StepResult` frame
+/// boundary. Wraps any `Read + Write` stream; the worker's serve loop is
+/// generic over the stream type, so production runs pay nothing.
+pub struct FaultStream<S> {
+    inner: S,
+    plan: FaultPlan,
+    rank: usize,
+    /// Completed `StepResult` frames written so far.
+    results: usize,
+    /// Outgoing-frame tracker: header accumulator + payload remaining.
+    header: [u8; 9],
+    header_got: usize,
+    payload_remaining: u64,
+    /// `kill`: bytes still allowed on the wire before `process::exit`.
+    kill_budget: Option<usize>,
+    /// `exit`: leave cleanly at the next read (frame already flushed).
+    exit_armed: bool,
+}
+
+impl<S> FaultStream<S> {
+    pub fn new(inner: S, plan: FaultPlan, rank: usize) -> FaultStream<S> {
+        crate::log_warn!("chaos: rank {rank} armed with {plan:?}");
+        FaultStream {
+            inner,
+            plan,
+            rank,
+            results: 0,
+            header: [0u8; 9],
+            header_got: 0,
+            payload_remaining: 0,
+            kill_budget: None,
+            exit_armed: false,
+        }
+    }
+
+    /// Called when the header of an outgoing `StepResult` completes; this
+    /// is the `results`-th result (1-based) and the trigger point for
+    /// every fault kind.
+    fn on_step_result_header(&mut self) {
+        self.results += 1;
+        let (rank, n) = (self.rank, self.results);
+        match self.plan.kind {
+            FaultKind::Delay if n >= self.plan.step => {
+                crate::log_warn!("chaos: rank {rank} delaying result {n} by {}ms", self.plan.ms);
+                std::thread::sleep(Duration::from_millis(self.plan.ms));
+            }
+            FaultKind::Hang if n == self.plan.step => {
+                crate::log_warn!("chaos: rank {rank} hanging mid-frame on result {n}");
+                // Header bytes are already on the wire; the payload never
+                // follows. Only an external SIGKILL ends this process.
+                loop {
+                    std::thread::sleep(Duration::from_secs(3600));
+                }
+            }
+            FaultKind::Kill if n == self.plan.step => {
+                // Let a few payload bytes escape so the coordinator sees a
+                // mid-frame EOF, the ugliest failure shape.
+                self.kill_budget = Some(4);
+            }
+            FaultKind::Exit if n == self.plan.step => self.exit_armed = true,
+            _ => {}
+        }
+    }
+
+    /// Forward at most `buf` to the inner stream, honoring a pending kill
+    /// budget (exits the process once the budget is spent).
+    fn write_limited(&mut self, buf: &[u8]) -> std::io::Result<usize>
+    where
+        S: Write,
+    {
+        if let Some(budget) = self.kill_budget {
+            if budget == 0 {
+                crate::log_warn!("chaos: rank {} dying mid-frame (kill)", self.rank);
+                std::process::exit(3);
+            }
+            let n = self.inner.write(&buf[..buf.len().min(budget)])?;
+            self.kill_budget = Some(budget - n);
+            return Ok(n);
+        }
+        self.inner.write(buf)
+    }
+}
+
+impl<S: Read> Read for FaultStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.exit_armed {
+            crate::log_warn!("chaos: rank {} exiting cleanly between steps", self.rank);
+            std::process::exit(0);
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for FaultStream<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if buf.is_empty() {
+            return Ok(0);
+        }
+        if self.payload_remaining == 0 {
+            // Header phase: forward at most the bytes completing the
+            // 9-byte header, mirroring what the peer's decoder sees.
+            let need = 9 - self.header_got;
+            let n = self.write_limited(&buf[..need.min(buf.len())])?;
+            self.header[self.header_got..self.header_got + n].copy_from_slice(&buf[..n]);
+            self.header_got += n;
+            if self.header_got == 9 {
+                self.header_got = 0;
+                self.payload_remaining = u64::from_le_bytes(
+                    self.header[1..9].try_into().expect("9-byte header"),
+                );
+                if self.header[0] == super::proto::TAG_STEP_RESULT {
+                    self.on_step_result_header();
+                }
+            }
+            return Ok(n);
+        }
+        // Payload phase: never cross the frame boundary in one forward.
+        let take = self.payload_remaining.min(buf.len() as u64) as usize;
+        let n = self.write_limited(&buf[..take])?;
+        self.payload_remaining -= n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parsing() {
+        let p = FaultPlan::parse("kill:rank=2:step=3:once").unwrap();
+        assert_eq!(p.kind, FaultKind::Kill);
+        assert_eq!((p.rank, p.step, p.once), (2, 3, true));
+        let p = FaultPlan::parse("delay:rank=0:step=1:ms=250").unwrap();
+        assert_eq!(p.kind, FaultKind::Delay);
+        assert_eq!(p.ms, 250);
+        assert!(!p.once);
+        assert!(FaultPlan::parse("delay:rank=0:step=1").is_err(), "delay needs ms");
+        assert!(FaultPlan::parse("kill:rank=0").is_err(), "needs step");
+        assert!(FaultPlan::parse("kill:step=1").is_err(), "needs rank");
+        assert!(FaultPlan::parse("frobnicate:rank=0:step=1").is_err());
+        assert!(FaultPlan::parse("kill:rank=0:step=0").is_err(), "step is 1-based");
+        assert!(FaultPlan::parse("kill:rank=0:step=1:bogus=2").is_err());
+    }
+
+    /// A plan that never triggers (wrong ordinal) must forward bytes
+    /// verbatim — frame tracking is transparent.
+    #[test]
+    fn untriggered_shim_is_transparent() {
+        use crate::runtime::TrainOut;
+        let plan = FaultPlan::parse("exit:rank=0:step=99").unwrap();
+        let mut shim = FaultStream::new(Vec::<u8>::new(), plan, 0);
+        let out = TrainOut {
+            loss_sum: 1.0,
+            weight_sum: 2.0,
+            correct: 3.0,
+            grads: vec![vec![0.5f32; 7]],
+        };
+        let mut want = Vec::new();
+        for _ in 0..3 {
+            let mut scratch = Vec::new();
+            super::super::proto::write_step_result_buffered(&mut shim, &out, 0.25, &mut scratch)
+                .unwrap();
+            super::super::proto::write_step_result_buffered(&mut want, &out, 0.25, &mut scratch)
+                .unwrap();
+        }
+        assert_eq!(shim.inner, want);
+        assert_eq!(shim.results, 3, "tracker must count StepResult frames");
+    }
+}

@@ -1,0 +1,139 @@
+//! Fleet liveness policy + straggler detection for the proc runtime.
+//!
+//! [`HealthOptions`] is the coordinator's knob set: how long an epoch's
+//! collect phase may run before pending ranks are declared lost
+//! (`epoch_deadline`), how often the fleet is pinged between epochs
+//! (`heartbeat_every`), and how much recovery the run will tolerate before
+//! giving up (`max_recoveries` — the backstop against a deadline set
+//! shorter than an honest epoch, which would otherwise respawn forever).
+//!
+//! [`StragglerMonitor`] turns the per-epoch `compute_seconds` telemetry
+//! the workers already report into straggler warnings: a rank whose step
+//! took more than `straggler_factor ×` the fleet median (and more than an
+//! absolute floor, so microsecond-scale jitter on tiny shards never
+//! trips it) is logged and counted. Detection only — a slow-but-correct
+//! worker still contributes its partial sum, so recovery would *change*
+//! nothing and risk plenty.
+
+use std::time::Duration;
+
+/// Liveness + recovery policy for one multi-process run.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthOptions {
+    /// Longest a collect phase may wait with no pending result before the
+    /// still-pending ranks are recovered (`None` = wait forever, the
+    /// pre-fault-tolerance behavior).
+    pub epoch_deadline: Option<Duration>,
+    /// Ping every worker before the broadcast every N epochs (0 = off).
+    /// Catches workers lost *between* epochs, where no read would
+    /// otherwise notice until the next collect.
+    pub heartbeat_every: usize,
+    /// How long to wait for each `Pong`.
+    pub heartbeat_timeout: Duration,
+    /// A rank is a straggler when its compute time exceeds
+    /// `straggler_factor ×` the fleet median of the epoch.
+    pub straggler_factor: f64,
+    /// …and exceeds this absolute floor (tiny shards finish in
+    /// microseconds; 3× of nothing is still nothing).
+    pub straggler_floor: Duration,
+    /// Total worker recoveries the run tolerates before failing. Bounds
+    /// the pathological case of an `epoch_deadline` shorter than an honest
+    /// epoch, which would otherwise respawn healthy workers forever.
+    pub max_recoveries: usize,
+    /// Budget for one recovery: local respawn + re-handshake, or waiting
+    /// for a remote worker to come back.
+    pub recovery_timeout: Duration,
+    /// Initial pause between remote reconnect attempts (doubles up to
+    /// ~2s).
+    pub reconnect_backoff: Duration,
+}
+
+impl Default for HealthOptions {
+    fn default() -> Self {
+        HealthOptions {
+            epoch_deadline: None,
+            heartbeat_every: 0,
+            heartbeat_timeout: Duration::from_secs(5),
+            straggler_factor: 3.0,
+            straggler_floor: Duration::from_millis(100),
+            max_recoveries: 16,
+            recovery_timeout: Duration::from_secs(30),
+            reconnect_backoff: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Median-based straggler detection over the per-epoch compute telemetry.
+/// The scratch buffer is reused, so observing an epoch allocates nothing
+/// in steady state.
+#[derive(Default)]
+pub struct StragglerMonitor {
+    scratch: Vec<f64>,
+    /// Total straggler observations over the run (rank-epochs).
+    pub flagged: u64,
+}
+
+impl StragglerMonitor {
+    pub fn new() -> StragglerMonitor {
+        StragglerMonitor::default()
+    }
+
+    /// Feed one epoch's `(rank, compute_seconds)` telemetry; logs and
+    /// counts every rank beyond the threshold. Returns how many were
+    /// flagged this epoch.
+    pub fn observe<I>(&mut self, factor: f64, floor: Duration, epoch: usize, times: I) -> usize
+    where
+        I: Iterator<Item = (usize, f64)> + Clone,
+    {
+        self.scratch.clear();
+        self.scratch.extend(times.clone().map(|(_, t)| t));
+        if self.scratch.len() < 2 {
+            return 0; // a fleet of one has no peers to lag behind
+        }
+        self.scratch.sort_by(|a, b| a.total_cmp(b));
+        let median = self.scratch[self.scratch.len() / 2];
+        let threshold = (median * factor).max(floor.as_secs_f64());
+        let mut n = 0;
+        for (rank, t) in times {
+            if t > threshold {
+                crate::log_warn!(
+                    "epoch {epoch}: rank {rank} straggling — {:.1}ms vs fleet median {:.1}ms",
+                    t * 1e3,
+                    median * 1e3
+                );
+                n += 1;
+            }
+        }
+        self.flagged += n as u64;
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_only_ranks_beyond_factor_and_floor() {
+        let mut mon = StragglerMonitor::new();
+        let floor = Duration::from_millis(100);
+        // Rank 2 is 30× the median and above the floor: flagged.
+        let times = [(0usize, 0.01f64), (1, 0.012), (2, 0.3)];
+        assert_eq!(mon.observe(3.0, floor, 0, times.iter().copied()), 1);
+        assert_eq!(mon.flagged, 1);
+        // Everyone under the absolute floor: jitter, not stragglers.
+        let tiny = [(0usize, 1e-5f64), (1, 1e-5), (2, 9e-5)];
+        assert_eq!(mon.observe(3.0, floor, 1, tiny.iter().copied()), 0);
+        // Uniform fleet: nobody flagged no matter the factor.
+        let even = [(0usize, 0.2f64), (1, 0.21), (2, 0.2)];
+        assert_eq!(mon.observe(1.5, floor, 2, even.iter().copied()), 0);
+        assert_eq!(mon.flagged, 1);
+    }
+
+    #[test]
+    fn single_worker_fleet_never_flags() {
+        let mut mon = StragglerMonitor::new();
+        let one = [(0usize, 99.0f64)];
+        assert_eq!(mon.observe(3.0, Duration::from_millis(1), 0, one.iter().copied()), 0);
+    }
+}

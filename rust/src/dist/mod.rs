@@ -17,6 +17,18 @@
 //!   optimizer and evaluation. Exposed to the engine as just another
 //!   [`Backend`](crate::train::backend::Backend) (`ProcBackend`), so the
 //!   training loop is byte-for-byte the in-process one.
+//! * [`health`] — the liveness policy ([`HealthOptions`]): per-epoch
+//!   collect deadlines, between-epoch heartbeat sweeps, straggler
+//!   detection from `compute_seconds` telemetry, and recovery budgets.
+//! * [`fault`] — the chaos-injection shim (`COFREE_CHAOS`): kills, hangs
+//!   and delays workers at exact frame boundaries so `tests/chaos.rs` can
+//!   prove recovery is bit-exact.
+//!
+//! Workers are stateless between steps, so fault tolerance is cheap: the
+//! coordinator respawns (local fleets) or re-dials (`--hosts` fleets) a
+//! lost rank, replays the handshake, verifies the replacement's `Meta`
+//! bit-for-bit, and resends the in-flight `Step` — the trajectory is
+//! unchanged from an uninterrupted run.
 //!
 //! Determinism contract, extended across processes: shard f32 payloads
 //! round-trip bit-exactly, workers re-derive their DropEdge banks from the
@@ -26,9 +38,14 @@
 //! (`tests/dist_proc.rs`).
 
 pub mod coordinator;
+pub mod fault;
+pub mod health;
 pub mod proto;
 pub mod shard;
 pub mod worker;
 
-pub use coordinator::{train_over_shards, DistStats, ProcBackend, ProcOptions, Transport};
+pub use coordinator::{
+    train_over_hosts, train_over_shards, DistStats, ProcBackend, ProcOptions, Transport,
+};
+pub use health::HealthOptions;
 pub use shard::{shard_file_name, shard_files, write_shards, MappedShard, Shard, ShardSetStats};

@@ -58,18 +58,54 @@ use std::os::unix::net::UnixStream;
 /// Bump on any frame-layout change. v2: the `Config` frame's model block
 /// leads with the architecture kind tag (the `GnnModel` refactor), so a
 /// coordinator can drive GCN/GIN fleets and a stale worker binary fails
-/// the version handshake instead of misreading the frame.
-pub const PROTO_VERSION: u32 = 2;
+/// the version handshake instead of misreading the frame. v3: liveness
+/// frames (`Ping`/`Pong`) for the fault-tolerant control plane.
+pub const PROTO_VERSION: u32 = 3;
 
-/// Sanity cap on a single frame payload (1 GiB).
+/// Sanity cap on a single frame payload (1 GiB). Applies to the two
+/// tensor-carrying frames (`Step`, `StepResult`).
 const MAX_FRAME: u64 = 1 << 30;
 
-pub(crate) const TAG_HELLO: u8 = 1;
-pub(crate) const TAG_CONFIG: u8 = 2;
-pub(crate) const TAG_META: u8 = 3;
-pub(crate) const TAG_STEP: u8 = 4;
-pub(crate) const TAG_STEP_RESULT: u8 = 5;
-pub(crate) const TAG_SHUTDOWN: u8 = 6;
+/// Cap on every *control* frame payload (handshake, heartbeat, shutdown):
+/// these carry a handful of scalars, so a declared length beyond 64 KiB is
+/// a corrupt or malicious length prefix, rejected before any allocation.
+const MAX_CONTROL_FRAME: u64 = 1 << 16;
+
+// Frame tags are public so external harnesses (the chaos tests' fake
+// coordinator, wire-level debugging tools) can speak the framing.
+pub const TAG_HELLO: u8 = 1;
+pub const TAG_CONFIG: u8 = 2;
+pub const TAG_META: u8 = 3;
+pub const TAG_STEP: u8 = 4;
+pub const TAG_STEP_RESULT: u8 = 5;
+pub const TAG_SHUTDOWN: u8 = 6;
+pub const TAG_PING: u8 = 7;
+pub const TAG_PONG: u8 = 8;
+
+/// Parse and validate a 9-byte frame header: returns `(tag, payload_len)`.
+/// The single chokepoint for header sanity on both coordinator and worker
+/// sides — unknown tags and oversized declared lengths (per-tag caps:
+/// only `Step`/`StepResult` may be large) surface as structured errors
+/// *before* any payload buffer is sized, so a corrupt length prefix can
+/// never trigger a multi-GiB allocation or a panic.
+pub(crate) fn decode_header(header: &[u8; 9]) -> Result<(u8, u64)> {
+    let tag = header[0];
+    let len_bytes: [u8; 8] =
+        header[1..9].try_into().map_err(|_| anyhow::anyhow!("frame header truncated"))?;
+    let len = u64::from_le_bytes(len_bytes);
+    let cap = match tag {
+        TAG_STEP | TAG_STEP_RESULT => MAX_FRAME,
+        TAG_HELLO | TAG_CONFIG | TAG_META | TAG_SHUTDOWN | TAG_PING | TAG_PONG => {
+            MAX_CONTROL_FRAME
+        }
+        other => bail!("unknown frame tag {other} (header {header:02x?})"),
+    };
+    ensure!(
+        len <= cap,
+        "frame tag {tag} declares a {len}-byte payload (cap {cap}): corrupt length prefix"
+    );
+    Ok((tag, len))
+}
 
 /// A connected byte stream: TCP or Unix-domain socket.
 pub enum Stream {
@@ -175,6 +211,11 @@ pub enum Frame {
     Step { pick: Option<usize>, params: Vec<Vec<f32>> },
     StepResult { out: TrainOut, compute_seconds: f64 },
     Shutdown,
+    /// Liveness probe (coordinator → worker, between epochs). The nonce
+    /// comes back in the matching [`Frame::Pong`] so a stale reply can
+    /// never satisfy a newer probe.
+    Ping { nonce: u64 },
+    Pong { nonce: u64 },
 }
 
 fn put_tensor_list(w: &mut impl Write, tensors: &[Vec<f32>]) -> Result<()> {
@@ -260,6 +301,14 @@ fn encode_payload(frame: &Frame, payload: &mut Vec<u8>) -> Result<u8> {
             TAG_STEP_RESULT
         }
         Frame::Shutdown => TAG_SHUTDOWN,
+        Frame::Ping { nonce } => {
+            binio::write_u64(payload, *nonce)?;
+            TAG_PING
+        }
+        Frame::Pong { nonce } => {
+            binio::write_u64(payload, *nonce)?;
+            TAG_PONG
+        }
     };
     Ok(tag)
 }
@@ -414,9 +463,7 @@ pub fn read_frame_into<'a>(
 ) -> Result<(u8, &'a [u8], u64)> {
     let mut header = [0u8; 9];
     r.read_exact(&mut header).context("reading frame header (peer closed?)")?;
-    let tag = header[0];
-    let len = u64::from_le_bytes(header[1..9].try_into().unwrap());
-    ensure!(len <= MAX_FRAME, "frame payload {len} exceeds sanity cap {MAX_FRAME}");
+    let (tag, len) = decode_header(&header)?;
     buf.buf.resize(len as usize, 0);
     r.read_exact(&mut buf.buf).context("reading frame payload")?;
     Ok((tag, &buf.buf[..], 9 + len))
@@ -462,6 +509,8 @@ pub fn decode_frame(tag: u8, payload: &[u8]) -> Result<Frame> {
             }
         }
         TAG_SHUTDOWN => Frame::Shutdown,
+        TAG_PING => Frame::Ping { nonce: binio::read_u64(&mut p)? },
+        TAG_PONG => Frame::Pong { nonce: binio::read_u64(&mut p)? },
         other => bail!("unknown frame tag {other}"),
     };
     ensure!(p.is_empty(), "frame tag {tag}: {} trailing payload bytes", p.len());
@@ -569,15 +618,10 @@ impl StepResultRecv {
                     Ok(n) => {
                         self.got_header += n;
                         if self.got_header == 9 {
-                            let tag = self.header[0];
+                            let (tag, len) = decode_header(&self.header)?;
                             ensure!(
                                 tag == TAG_STEP_RESULT,
                                 "expected StepResult (tag {TAG_STEP_RESULT}), got tag {tag}"
-                            );
-                            let len = u64::from_le_bytes(self.header[1..9].try_into().unwrap());
-                            ensure!(
-                                len <= MAX_FRAME,
-                                "frame payload {len} exceeds sanity cap {MAX_FRAME}"
                             );
                             self.need = len as usize;
                             self.got = 0;
@@ -853,5 +897,98 @@ mod tests {
         assert!(read_frame(&mut r).is_err(), "unknown tag must error");
         let mut r2: &[u8] = &[1u8, 2, 0];
         assert!(read_frame(&mut r2).is_err(), "truncated header must error");
+    }
+
+    #[test]
+    fn ping_pong_roundtrip() {
+        match roundtrip(&Frame::Ping { nonce: 0xDEAD_BEEF_0042 }) {
+            Frame::Ping { nonce } => assert_eq!(nonce, 0xDEAD_BEEF_0042),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip(&Frame::Pong { nonce: u64::MAX }) {
+            Frame::Pong { nonce } => assert_eq!(nonce, u64::MAX),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    fn header_bytes(tag: u8, len: u64) -> [u8; 9] {
+        let mut h = [0u8; 9];
+        h[0] = tag;
+        h[1..9].copy_from_slice(&len.to_le_bytes());
+        h
+    }
+
+    /// A corrupt/malicious length prefix must be rejected by the header
+    /// chokepoint — as an `Err`, before any payload buffer is sized.
+    #[test]
+    fn oversized_length_prefix_is_a_structured_error() {
+        // Control frames carry a handful of scalars: a multi-MiB Hello is
+        // garbage even though it is far below the tensor-frame cap.
+        for tag in [TAG_HELLO, TAG_CONFIG, TAG_META, TAG_SHUTDOWN, TAG_PING, TAG_PONG] {
+            let err = decode_header(&header_bytes(tag, MAX_CONTROL_FRAME + 1)).unwrap_err();
+            assert!(format!("{err:#}").contains("corrupt length prefix"), "{err:#}");
+            assert!(decode_header(&header_bytes(tag, 16)).is_ok());
+        }
+        // Tensor frames: anything beyond the 1 GiB sanity cap errors
+        // instead of attempting the allocation.
+        for tag in [TAG_STEP, TAG_STEP_RESULT] {
+            assert!(decode_header(&header_bytes(tag, u64::MAX)).is_err());
+            assert!(decode_header(&header_bytes(tag, MAX_FRAME)).is_ok());
+        }
+        // And the full reader path reports the same error without hanging.
+        let mut r: &[u8] = &header_bytes(TAG_HELLO, u64::MAX / 2);
+        let mut fb = FrameBuf::new();
+        assert!(read_frame_into(&mut r, &mut fb).is_err());
+    }
+
+    /// EOF in the middle of a declared payload is an error, not a hang or
+    /// a partial decode.
+    #[test]
+    fn mid_frame_eof_errors() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &Frame::Hello { proto_version: 3, rank: 0, num_parts: 2 })
+            .unwrap();
+        for cut in 1..wire.len() {
+            let mut r: &[u8] = &wire[..cut];
+            assert!(read_frame(&mut r).is_err(), "truncated at {cut} must error");
+        }
+    }
+
+    /// The incremental collect-side reader applies the same header
+    /// validation: wrong tags and corrupt lengths surface as `Err` from
+    /// `poll`, and EOF mid-frame does too.
+    #[test]
+    fn step_result_recv_rejects_malformed_input() {
+        // Wrong tag where a StepResult is expected.
+        let mut src: &[u8] = &header_bytes(TAG_HELLO, 12);
+        let mut recv = StepResultRecv::new();
+        let mut fb = FrameBuf::new();
+        assert!(recv.poll(&mut src, &mut fb).is_err());
+        // Oversized declared length.
+        let mut src: &[u8] = &header_bytes(TAG_STEP_RESULT, u64::MAX);
+        let mut recv = StepResultRecv::new();
+        assert!(recv.poll(&mut src, &mut fb).is_err());
+        // Unknown tag byte.
+        let mut src: &[u8] = &header_bytes(0xEE, 4);
+        let mut recv = StepResultRecv::new();
+        assert!(recv.poll(&mut src, &mut fb).is_err());
+        // EOF mid-payload.
+        let mut wire = Vec::new();
+        write_frame(
+            &mut wire,
+            &Frame::StepResult {
+                out: TrainOut {
+                    loss_sum: 1.0,
+                    weight_sum: 1.0,
+                    correct: 0.0,
+                    grads: vec![vec![1.0f32; 8]],
+                },
+                compute_seconds: 0.1,
+            },
+        )
+        .unwrap();
+        let mut src: &[u8] = &wire[..wire.len() - 3];
+        let mut recv = StepResultRecv::new();
+        assert!(recv.poll(&mut src, &mut fb).is_err(), "mid-frame EOF must error");
     }
 }

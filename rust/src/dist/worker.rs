@@ -14,6 +14,24 @@
 //! frame names ([`ModelKind`](crate::train::model::ModelKind) travels on
 //! the wire; the shard stores only dims, which must match).
 //!
+//! Two connection modes:
+//!
+//! * [`run`] — dial out to a coordinator (`--connect`): the local-fleet
+//!   shape, where the coordinator spawned this process and respawns it on
+//!   failure.
+//! * [`run_listen`] — bind a port and *accept* coordinator sessions
+//!   (`--listen`): the multi-host shape (`cofree train --hosts …`), where
+//!   the coordinator did not spawn the worker and recovery means the
+//!   coordinator re-dialing. Each accepted connection is one full session
+//!   (Hello → Config → Meta → steps); a dropped session returns the
+//!   worker to `accept`, so a recovering coordinator finds it ready.
+//!
+//! Workers are **stateless between steps** — parameters arrive with every
+//! `Step`, the mask bank re-derives from `(seed, rank)` — which is what
+//! makes crash recovery bit-exact: a respawned worker that replays the
+//! same handshake produces the same `Meta` and the same `TrainOut`s as
+//! its predecessor would have.
+//!
 //! The step loop is allocation-free in steady state: incoming frames land
 //! in one reusable [`proto::FrameBuf`], parameters decode into one reused
 //! `ParamSet`, the train step runs through the worker's persistent
@@ -22,7 +40,12 @@
 //! input bit and every RNG draw matches the in-process path, the
 //! `TrainOut` it returns is bit-identical to what the same partition
 //! would have produced inside the coordinator's address space.
+//!
+//! When `COFREE_CHAOS` is set the stream is wrapped in the
+//! [`fault::FaultStream`] shim, which injects kill/hang/delay/exit faults
+//! at exact frame boundaries — the chaos harness (`tests/chaos.rs`).
 
+use super::fault::{FaultPlan, FaultStream};
 use super::proto::{self, Frame, Stream, PROTO_VERSION};
 use super::shard::MappedShard;
 use crate::runtime::{ParamSet, TrainOut};
@@ -32,33 +55,93 @@ use crate::train::dropedge::MaskBank;
 use crate::train::engine::worker_mask_rng;
 use crate::train::workspace::ModelWorkspace;
 use anyhow::{bail, ensure, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpListener;
 use std::path::Path;
 use std::time::Instant;
 
-/// Run the worker loop to completion. Returns the number of train steps
-/// served.
+/// Dial out to a coordinator and serve one session to completion.
+/// Returns the number of train steps served.
 pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
+    let shard = open_shard(shard_path)?;
+    crate::log_info!(
+        "worker rank {}/{}: connecting to {connect}",
+        shard.part_id,
+        shard.num_parts
+    );
+    let stream = Stream::connect(connect)?;
+    serve(&shard, stream)
+}
+
+/// Bind `listen` (host:port) and serve coordinator sessions until one ends
+/// in a clean `Shutdown`. A dropped session (coordinator crash, network
+/// loss, coordinator-driven recovery re-dialing) is logged and the worker
+/// returns to `accept`. Returns total train steps served across sessions.
+pub fn run_listen(shard_path: &Path, listen: &str) -> Result<usize> {
+    let shard = open_shard(shard_path)?;
+    let listener = TcpListener::bind(listen)
+        .with_context(|| format!("worker rank {}: binding {listen}", shard.part_id))?;
+    let addr = listener.local_addr()?;
+    crate::log_info!(
+        "worker rank {}/{}: listening on {addr} for a coordinator",
+        shard.part_id,
+        shard.num_parts
+    );
+    let mut total = 0usize;
+    loop {
+        let (sock, peer) = listener.accept().context("accepting coordinator session")?;
+        crate::log_info!("worker rank {}: session from {peer}", shard.part_id);
+        let stream = Stream::from_tcp(sock)?;
+        match serve(&shard, stream) {
+            Ok(steps) => return Ok(total + steps),
+            Err(e) => {
+                crate::log_warn!(
+                    "worker rank {}: session from {peer} ended ({e:#}); awaiting reconnect",
+                    shard.part_id
+                );
+            }
+        }
+    }
+}
+
+fn open_shard(shard_path: &Path) -> Result<MappedShard> {
     let shard = MappedShard::open(shard_path)
         .with_context(|| format!("loading shard {}", shard_path.display()))?;
-    let rank = shard.part_id;
     crate::log_info!(
-        "worker rank {rank}/{}: shard {} (n_local={}, m_local={}, zero_copy={}), connecting to {connect}",
+        "worker rank {}/{}: shard {} (n_local={}, m_local={}, zero_copy={})",
+        shard.part_id,
         shard.num_parts,
         shard_path.display(),
         shard.n_local(),
         shard.local.num_edges(),
         shard.is_zero_copy()
     );
-    let mut stream = Stream::connect(connect)?;
+    Ok(shard)
+}
+
+/// Serve one coordinator session over `stream`, wrapping it in the chaos
+/// fault shim when a `COFREE_CHAOS` plan targets this rank.
+fn serve(shard: &MappedShard, stream: Stream) -> Result<usize> {
+    match FaultPlan::from_env(shard.part_id) {
+        Some(plan) => serve_session(shard, &mut FaultStream::new(stream, plan, shard.part_id)),
+        None => serve_session(shard, &mut { stream }),
+    }
+}
+
+/// One full protocol session: Hello → Config → Meta, then the step loop
+/// until `Shutdown`. Generic over the stream so the fault shim (and unit
+/// tests feeding malformed bytes) slot in transparently.
+fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result<usize> {
+    let rank = shard.part_id;
     proto::write_frame(
-        &mut stream,
+        stream,
         &Frame::Hello {
             proto_version: PROTO_VERSION,
             rank: rank as u32,
             num_parts: shard.num_parts as u32,
         },
     )?;
-    let (frame, _) = proto::read_frame(&mut stream)?;
+    let (frame, _) = proto::read_frame(stream)?;
     let Frame::Config { seed, dropedge_k, dropedge_ratio, model } = frame else {
         bail!("expected Config frame after Hello, got {frame:?}");
     };
@@ -72,7 +155,9 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
     );
 
     // Prepare the partition exactly like TrainEngine::prepare_partitions +
-    // CpuBackend::prepare_worker would have.
+    // CpuBackend::prepare_worker would have. A respawned worker re-derives
+    // all of this from the shard + Config alone — same bytes, same RNG
+    // stream, same Meta — which is the whole recovery story.
     let (n_pad, e_pad) = pad_explicit(shard.local.num_nodes(), 2 * shard.local.num_edges());
     let batch = shard.tensorize(n_pad, e_pad).context("tensorizing shard")?;
     let csr = EdgeCsr::from_batch(&batch);
@@ -83,7 +168,7 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
         Vec::new()
     };
     proto::write_frame(
-        &mut stream,
+        stream,
         &Frame::Meta {
             local_train_weight: batch.local_train_weight,
             tmask_sum: batch.tmask_sum(),
@@ -102,7 +187,7 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
     let mut result_payload: Vec<u8> = Vec::new();
     let mut steps = 0usize;
     loop {
-        let (tag, payload, _) = proto::read_frame_into(&mut stream, &mut frame_buf)?;
+        let (tag, payload, _) = proto::read_frame_into(stream, &mut frame_buf)?;
         match tag {
             proto::TAG_STEP => {
                 let pick = proto::decode_step_into(payload, &mut params.data)?;
@@ -131,12 +216,20 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
                 cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws, &mut out);
                 let compute_seconds = t0.elapsed().as_secs_f64();
                 proto::write_step_result_buffered(
-                    &mut stream,
+                    stream,
                     &out,
                     compute_seconds,
                     &mut result_payload,
                 )?;
                 steps += 1;
+            }
+            proto::TAG_PING => {
+                // Liveness probe between epochs: echo the nonce straight
+                // back so the coordinator knows this rank is alive.
+                let Frame::Ping { nonce } = proto::decode_frame(tag, payload)? else {
+                    bail!("Ping tag with non-Ping payload");
+                };
+                proto::write_frame(stream, &Frame::Pong { nonce })?;
             }
             proto::TAG_SHUTDOWN => {
                 ensure!(payload.is_empty(), "Shutdown frame with payload");

@@ -27,7 +27,7 @@
 
 use super::allreduce::GradAccumulator;
 use super::backend::{Backend, WorkerMeta};
-use super::checkpoint::TrainCheckpoint;
+use super::checkpoint::{AsyncCheckpointer, TrainCheckpoint};
 use super::metrics::{EpochStats, History};
 use super::optimizer::{Adam, Optimizer, Sgd};
 use super::tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, TrainBatch};
@@ -39,6 +39,7 @@ use crate::train::cpu::CpuBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
 use anyhow::{ensure, Context, Result};
+use std::path::PathBuf;
 use std::time::Instant;
 
 #[cfg(feature = "xla")]
@@ -67,6 +68,13 @@ pub struct TrainConfig {
     pub allreduce_seconds: f64,
     /// Log every N epochs (0 = silent).
     pub log_every: usize,
+    /// Snapshot a resumable checkpoint every N epochs (0 = off). The
+    /// writes happen on a background thread ([`AsyncCheckpointer`]) and
+    /// never block or allocate in the epoch loop.
+    pub checkpoint_every: usize,
+    /// Where periodic checkpoints land (atomic rename: the file is always
+    /// a complete snapshot). Required when `checkpoint_every > 0`.
+    pub checkpoint_path: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -80,6 +88,8 @@ impl Default for TrainConfig {
             use_adam: true,
             allreduce_seconds: 0.0,
             log_every: 0,
+            checkpoint_every: 0,
+            checkpoint_path: None,
         }
     }
 }
@@ -380,6 +390,15 @@ impl<B: Backend> TrainEngine<B> {
         let mut selected: Vec<usize> = Vec::with_capacity(run.workers.len());
         let mut picks: Vec<Option<usize>> = Vec::with_capacity(run.workers.len());
         let mut outs: Vec<(TrainOut, f64)> = Vec::new();
+        ensure!(
+            cfg.checkpoint_every == 0 || cfg.checkpoint_path.is_some(),
+            "checkpoint_every = {} but no checkpoint path is set",
+            cfg.checkpoint_every
+        );
+        let mut ck_writer = match (&cfg.checkpoint_path, cfg.checkpoint_every) {
+            (Some(path), every) if every > 0 => Some(AsyncCheckpointer::spawn(path.clone())),
+            _ => None,
+        };
         history.epochs.reserve(cfg.epochs.saturating_sub(start_epoch));
         for epoch in 0..cfg.epochs {
             // Rotate mode: one random batch this epoch; AllParts: everyone.
@@ -434,6 +453,15 @@ impl<B: Backend> TrainEngine<B> {
             opt.step(&mut params.data, acc.grads(), epoch_scale);
             timer.add("optim", t2.elapsed());
             let optim_s = t2.elapsed().as_secs_f64();
+            if let Some(ck) = ck_writer.as_mut() {
+                // Snapshot the *post-step* state every N epochs (skipping
+                // the final epoch — the run's own checkpoint covers it).
+                // The offer copies into a pre-owned buffer and returns;
+                // serialization and I/O happen on the writer thread.
+                if (epoch + 1) % cfg.checkpoint_every == 0 && epoch + 1 < cfg.epochs {
+                    ck.offer(epoch + 1, &run.model, &params, opt.as_ref());
+                }
+            }
 
             let do_eval = eval.is_some()
                 && (epoch + 1 == cfg.epochs
@@ -472,6 +500,10 @@ impl<B: Backend> TrainEngine<B> {
                 );
             }
             history.push(stats);
+        }
+        if let Some(ck) = ck_writer.take() {
+            let (written, skipped) = ck.finish().context("flushing periodic checkpoints")?;
+            crate::log_info!("periodic checkpoints: {written} written, {skipped} skipped");
         }
         let checkpoint = TrainCheckpoint {
             epochs_done: cfg.epochs,

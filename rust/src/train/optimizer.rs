@@ -32,6 +32,14 @@ pub trait Optimizer {
     fn name(&self) -> &'static str;
     /// Snapshot the internal state for checkpointing.
     fn export_state(&self) -> OptimizerState;
+    /// Snapshot into an existing slot, reusing its allocations when the
+    /// slot already holds state of the same kind and shape (the periodic
+    /// async checkpointer snapshots every few epochs; the steady-state
+    /// snapshot must not allocate). The default falls back to a fresh
+    /// export.
+    fn export_state_into(&self, out: &mut OptimizerState) {
+        *out = self.export_state();
+    }
     /// Restore a snapshot taken from an optimizer of the same kind.
     fn import_state(&mut self, state: OptimizerState) -> anyhow::Result<()>;
 }
@@ -109,6 +117,17 @@ impl Optimizer for Adam {
     }
     fn export_state(&self) -> OptimizerState {
         OptimizerState::Adam { t: self.t, m: self.m.clone(), v: self.v.clone() }
+    }
+    fn export_state_into(&self, out: &mut OptimizerState) {
+        // `Vec::clone_from` reuses both the outer and the per-tensor
+        // allocations once the slot has seen one snapshot of this shape.
+        if let OptimizerState::Adam { t, m, v } = out {
+            *t = self.t;
+            m.clone_from(&self.m);
+            v.clone_from(&self.v);
+        } else {
+            *out = self.export_state();
+        }
     }
     fn import_state(&mut self, state: OptimizerState) -> anyhow::Result<()> {
         match state {
@@ -203,6 +222,25 @@ mod tests {
             oc.step(&mut pb, &grad_at(i), 1.0);
         }
         assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn export_state_into_matches_fresh_export() {
+        let mut opt = Adam::new(0.01);
+        let mut p = vec![vec![1.0f32, -2.0], vec![0.5]];
+        opt.step(&mut p, &[vec![0.3, 0.1], vec![-0.2]], 1.0);
+        // First fill: slot starts as the wrong kind, falls back to export.
+        let mut slot = OptimizerState::Sgd;
+        opt.export_state_into(&mut slot);
+        assert_eq!(slot, opt.export_state());
+        // Second fill after another step: in-place path, same result.
+        opt.step(&mut p, &[vec![0.1, 0.4], vec![0.9]], 1.0);
+        opt.export_state_into(&mut slot);
+        assert_eq!(slot, opt.export_state());
+        // Sgd's default impl works too.
+        let sgd = Sgd { lr: 0.1 };
+        sgd.export_state_into(&mut slot);
+        assert_eq!(slot, OptimizerState::Sgd);
     }
 
     #[test]

@@ -1,0 +1,502 @@
+//! The chaos harness: fault-injected multi-process training (default
+//! features).
+//!
+//! The fault-tolerance contract, proven end-to-end: when a worker is
+//! killed mid-frame, hangs on a live socket, straggles, or exits cleanly
+//! between epochs, the coordinator must detect the loss (poll error,
+//! epoch deadline, or heartbeat), recover the rank (respawn locally or
+//! re-dial a `--hosts` fleet), and finish the run with a trajectory
+//! **bit-identical** to an uninterrupted in-process run — losses,
+//! accuracies, and final parameters.
+//!
+//! Faults are injected by the worker's own `FaultStream` shim
+//! (`COFREE_CHAOS`, scoped to spawned workers via
+//! [`ProcOptions::chaos_env`]), which fires at exact `StepResult` frame
+//! boundaries — the failure shapes signals cannot hit reliably.
+
+use cofree_gnn::dist::{
+    self, shard_file_name, DistStats, HealthOptions, ProcOptions, Transport,
+};
+use cofree_gnn::graph::{datasets, Dataset};
+use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
+use cofree_gnn::runtime::ParamSet;
+use cofree_gnn::train::checkpoint::TrainCheckpoint;
+use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
+use cofree_gnn::train::metrics::History;
+use cofree_gnn::train::model::ModelKind;
+use cofree_gnn::util::rng::Rng;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+fn worker_bin() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_cofree"))
+}
+
+fn ds_small() -> Dataset {
+    // ~400 nodes, ~2k edges: whole fleets run in seconds even with faults.
+    datasets::build("yelp-sim", 0.04, 7).unwrap()
+}
+
+fn cut(ds: &Dataset, p: usize, seed: u64) -> VertexCut {
+    let mut rng = Rng::new(seed);
+    VertexCut::create(&ds.graph, p, algorithm("dbh").unwrap().as_ref(), &mut rng)
+}
+
+fn cfg_for(epochs: usize, seed: u64, dropedge: Option<(usize, f64)>) -> TrainConfig {
+    TrainConfig { epochs, eval_every: 5, dropedge, seed, ..Default::default() }
+}
+
+/// The uninterrupted in-process oracle.
+fn run_inproc(
+    p: usize,
+    seed: u64,
+    dropedge: Option<(usize, f64)>,
+    epochs: usize,
+) -> (History, ParamSet) {
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let mut engine = TrainEngine::native_model(ModelKind::Sage);
+    let eval = engine.prepare_eval(&ds).unwrap();
+    let mut run = engine
+        .prepare_partitions(&ds, &vc, Reweighting::Dar, dropedge, seed)
+        .unwrap();
+    let cfg = cfg_for(epochs, seed, dropedge);
+    let (h, params, _) = engine.train(&mut run, Some(&eval), &cfg).unwrap();
+    (h, params)
+}
+
+/// A local (coordinator-spawned) fleet with a fault plan armed on one
+/// rank and a liveness policy in force.
+fn run_chaos(
+    p: usize,
+    seed: u64,
+    dropedge: Option<(usize, f64)>,
+    epochs: usize,
+    chaos: Option<&str>,
+    health: HealthOptions,
+    tag: &str,
+) -> (History, ParamSet, DistStats) {
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let dir = std::env::temp_dir().join(format!(
+        "cofree_chaos_test_{tag}_{}_{p}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dist::write_shards(&ds, &vc, &weights, seed, &dir).unwrap();
+    let opts = ProcOptions {
+        transport: Transport::Tcp,
+        chaos_env: chaos.map(|s| s.to_string()),
+        health,
+        ..ProcOptions::new(worker_bin())
+    };
+    let cfg = cfg_for(epochs, seed, dropedge);
+    let (h, ck, stats) = dist::train_over_shards(&ds, &dir, &cfg, &opts, None).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+    (h, ck.params, stats)
+}
+
+fn assert_trajectories_identical(a: &History, b: &History) {
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (x, y) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(x.epoch, y.epoch);
+        assert_eq!(
+            x.train_loss.to_bits(),
+            y.train_loss.to_bits(),
+            "epoch {} loss: {} vs {}",
+            x.epoch,
+            x.train_loss,
+            y.train_loss
+        );
+        assert_eq!(x.train_acc.to_bits(), y.train_acc.to_bits(), "epoch {} acc", x.epoch);
+        assert_eq!(x.val_acc.to_bits(), y.val_acc.to_bits(), "epoch {} val", x.epoch);
+        assert_eq!(x.test_acc.to_bits(), y.test_acc.to_bits(), "epoch {} test", x.epoch);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Local-fleet faults (coordinator respawns the rank).
+// ---------------------------------------------------------------------------
+
+/// The ugliest failure shape: rank 0 dies mid-`StepResult`, a few payload
+/// bytes already on the wire. The collect poll sees the EOF, the
+/// coordinator respawns the rank, re-verifies its `Meta` bit-for-bit,
+/// resends the in-flight `Step` — and the trajectory is untouched.
+/// DropEdge stays on, so the respawned worker's replayed mask-bank RNG
+/// stream is load-bearing, not decorative.
+#[test]
+fn killed_worker_recovers_bit_identically() {
+    let (p, seed, epochs) = (2usize, 1201u64, 6usize);
+    let dropedge = Some((3usize, 0.4f64));
+    let (h_in, params_in) = run_inproc(p, seed, dropedge, epochs);
+    let (h_ch, params_ch, stats) = run_chaos(
+        p,
+        seed,
+        dropedge,
+        epochs,
+        Some("kill:rank=0:step=2:once"),
+        HealthOptions::default(),
+        "kill",
+    );
+    assert_trajectories_identical(&h_in, &h_ch);
+    assert_eq!(params_in.data, params_ch.data, "final parameters diverged after recovery");
+    assert!(stats.recoveries >= 1, "kill fault never triggered a recovery: {stats:?}");
+    assert_eq!(stats.epochs_run, epochs);
+}
+
+/// A hang is worse than a crash: the socket stays open, the frame header
+/// arrives, the payload never does. Only the epoch deadline can save the
+/// run — and it must, within bounded wall-clock, by recycling every rank
+/// still pending at expiry.
+#[test]
+fn hung_worker_is_recycled_at_the_epoch_deadline() {
+    let (p, seed, epochs) = (2usize, 1301u64, 5usize);
+    let dropedge = Some((2usize, 0.3f64));
+    let health = HealthOptions {
+        epoch_deadline: Some(Duration::from_millis(1500)),
+        ..HealthOptions::default()
+    };
+    let (h_in, params_in) = run_inproc(p, seed, dropedge, epochs);
+    let t0 = Instant::now();
+    let (h_ch, params_ch, stats) = run_chaos(
+        p,
+        seed,
+        dropedge,
+        epochs,
+        Some("hang:rank=1:step=2:once"),
+        health,
+        "hang",
+    );
+    let elapsed = t0.elapsed();
+    assert_trajectories_identical(&h_in, &h_ch);
+    assert_eq!(params_in.data, params_ch.data, "final parameters diverged after deadline kick");
+    assert!(stats.deadline_misses >= 1, "the epoch deadline never fired: {stats:?}");
+    assert!(stats.recoveries >= 1, "the hung rank was never recycled: {stats:?}");
+    assert!(stats.recovery_seconds > 0.0);
+    // The acceptance bound: a hung worker must not block the run
+    // indefinitely. Generous for slow CI, but orders of magnitude below
+    // "forever".
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "hung-worker run took {elapsed:?} — the deadline is not bounding the stall"
+    );
+}
+
+/// A slow-but-correct worker is a straggler, not a casualty: with no
+/// deadline in force the run simply waits, no recovery fires, and the
+/// trajectory is untouched.
+#[test]
+fn delayed_straggler_completes_without_recovery() {
+    let (p, seed, epochs) = (2usize, 1401u64, 4usize);
+    let (h_in, params_in) = run_inproc(p, seed, None, epochs);
+    let (h_ch, params_ch, stats) = run_chaos(
+        p,
+        seed,
+        None,
+        epochs,
+        Some("delay:rank=1:step=1:ms=150"),
+        HealthOptions::default(),
+        "delay",
+    );
+    assert_trajectories_identical(&h_in, &h_ch);
+    assert_eq!(params_in.data, params_ch.data);
+    assert_eq!(stats.recoveries, 0, "a mere delay must not trigger recovery: {stats:?}");
+    assert_eq!(stats.deadline_misses, 0);
+}
+
+/// A worker lost *between* epochs (clean exit, no half-written frame) is
+/// invisible to the collect poll until the next broadcast — the heartbeat
+/// sweep finds it first and replaces it before the epoch begins.
+#[test]
+fn cleanly_exited_worker_is_caught_by_heartbeat() {
+    let (p, seed, epochs) = (2usize, 1501u64, 6usize);
+    let health = HealthOptions {
+        heartbeat_every: 1,
+        heartbeat_timeout: Duration::from_secs(2),
+        ..HealthOptions::default()
+    };
+    let (h_in, params_in) = run_inproc(p, seed, None, epochs);
+    let (h_ch, params_ch, stats) = run_chaos(
+        p,
+        seed,
+        None,
+        epochs,
+        Some("exit:rank=0:step=2:once"),
+        health,
+        "exit",
+    );
+    assert_trajectories_identical(&h_in, &h_ch);
+    assert_eq!(params_in.data, params_ch.data);
+    assert!(stats.recoveries >= 1, "the exited rank was never replaced: {stats:?}");
+    assert!(stats.heartbeat_bytes > 0, "heartbeats were on but no ping bytes counted");
+}
+
+/// Heartbeats are bookkept outside the step-loop wire accounting, so the
+/// paper's per-epoch bound stays a clean measurement — and pinging every
+/// epoch must not perturb the trajectory.
+#[test]
+fn heartbeats_do_not_perturb_trajectory_or_wire_bound() {
+    let (p, seed, epochs) = (2usize, 1601u64, 5usize);
+    let health = HealthOptions { heartbeat_every: 1, ..HealthOptions::default() };
+    let (h_in, params_in) = run_inproc(p, seed, None, epochs);
+    let (h_ch, params_ch, stats) = run_chaos(p, seed, None, epochs, None, health, "hb");
+    assert_trajectories_identical(&h_in, &h_ch);
+    assert_eq!(params_in.data, params_ch.data);
+    assert!(stats.heartbeat_bytes > 0);
+    assert!(stats.heartbeat_bytes_per_epoch() > 0.0);
+    // Ping/Pong is 9 bytes of header + 8 of nonce each way per worker:
+    // trivial next to the parameter traffic, and excluded from it.
+    let ideal = (8 * p * params_in.num_elements()) as f64;
+    let per_epoch = stats.bytes_per_epoch();
+    assert!(
+        per_epoch < ideal * 1.25,
+        "step-loop accounting absorbed heartbeat bytes: {per_epoch} vs ideal {ideal}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Multi-host fleets (coordinator re-dials; workers live elsewhere).
+// ---------------------------------------------------------------------------
+
+/// Reserve a distinct localhost port by binding port 0 and dropping the
+/// listener. Racy in principle; fine for tests.
+fn free_port() -> u16 {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().port()
+}
+
+fn spawn_listen_worker(
+    shard: &std::path::Path,
+    addr: &str,
+    chaos: Option<&str>,
+    generation: u64,
+) -> Child {
+    let mut cmd = Command::new(worker_bin());
+    cmd.arg("worker")
+        .arg("--shard")
+        .arg(shard)
+        .arg("--listen")
+        .arg(addr)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::inherit());
+    if let Some(spec) = chaos {
+        cmd.env(cofree_gnn::dist::fault::CHAOS_ENV, spec);
+        cmd.env(cofree_gnn::dist::fault::CHAOS_GEN_ENV, generation.to_string());
+    }
+    cmd.spawn().expect("spawning listen worker")
+}
+
+/// Shared setup for the `--hosts` tests: shard store + per-rank
+/// (shard file, addr) pairs.
+fn hosts_fixture(p: usize, seed: u64, tag: &str) -> (Dataset, PathBuf, Vec<(PathBuf, String)>) {
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let dir = std::env::temp_dir().join(format!(
+        "cofree_chaos_hosts_{tag}_{}_{p}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dist::write_shards(&ds, &vc, &weights, seed, &dir).unwrap();
+    let ranks = (0..p)
+        .map(|r| {
+            let shard = dir.join(shard_file_name(r));
+            let addr = format!("127.0.0.1:{}", free_port());
+            (shard, addr)
+        })
+        .collect();
+    (ds, dir, ranks)
+}
+
+/// The `--hosts` shape: workers the coordinator did *not* spawn, reached
+/// over TCP by address, still bit-identical to inproc.
+#[test]
+fn hosts_fleet_matches_inproc_bitwise() {
+    let (p, seed, epochs) = (2usize, 1701u64, 4usize);
+    let dropedge = Some((2usize, 0.3f64));
+    let (ds, dir, ranks) = hosts_fixture(p, seed, "plain");
+    let mut children: Vec<Child> = ranks
+        .iter()
+        .map(|(shard, addr)| spawn_listen_worker(shard, addr, None, 0))
+        .collect();
+    let hosts: Vec<String> = ranks.iter().map(|(_, a)| a.clone()).collect();
+    let opts = ProcOptions { transport: Transport::Tcp, ..ProcOptions::new(worker_bin()) };
+    let cfg = cfg_for(epochs, seed, dropedge);
+    let (h_hosts, ck, stats) = dist::train_over_hosts(&ds, &hosts, &cfg, &opts, None).unwrap();
+    // Clean shutdown: every listen worker exits on its own after Shutdown.
+    for c in &mut children {
+        let status = c.wait().expect("waiting for listen worker");
+        assert!(status.success(), "listen worker exited {status:?}");
+    }
+    let (h_in, params_in) = run_inproc(p, seed, dropedge, epochs);
+    assert_trajectories_identical(&h_in, &h_hosts);
+    assert_eq!(params_in.data, ck.params.data, "hosts-fleet parameters diverged");
+    assert_eq!(stats.num_workers, p);
+    assert_eq!(stats.recoveries, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A remote worker dies mid-run; its host supervisor restarts it on the
+/// same port (incarnation 1, fault disarmed) and the coordinator re-dials
+/// with backoff until it answers. Trajectory still bit-identical.
+#[test]
+fn hosts_fleet_recovers_after_remote_worker_death() {
+    let (p, seed, epochs) = (2usize, 1801u64, 5usize);
+    let (ds, dir, ranks) = hosts_fixture(p, seed, "kill");
+    // Rank 1 runs clean; rank 0 kills itself mid-frame on its 2nd result.
+    let mut clean = spawn_listen_worker(&ranks[1].0, &ranks[1].1, None, 0);
+    let (shard0, addr0) = (ranks[0].0.clone(), ranks[0].1.clone());
+    let chaos = "kill:rank=0:step=2:once";
+    // The "init system" on the remote host: wait for the death, restart
+    // the worker with the incarnation counter bumped so the plan disarms.
+    let supervisor = std::thread::spawn(move || {
+        let mut first = spawn_listen_worker(&shard0, &addr0, Some(chaos), 0);
+        let status = first.wait().expect("waiting for doomed worker");
+        assert!(!status.success(), "rank 0 was supposed to die, exited {status:?}");
+        let mut second = spawn_listen_worker(&shard0, &addr0, Some(chaos), 1);
+        let status = second.wait().expect("waiting for respawned worker");
+        assert!(status.success(), "respawned rank 0 exited {status:?}");
+    });
+    let hosts: Vec<String> = ranks.iter().map(|(_, a)| a.clone()).collect();
+    let opts = ProcOptions { transport: Transport::Tcp, ..ProcOptions::new(worker_bin()) };
+    let cfg = cfg_for(epochs, seed, None);
+    let (h_hosts, ck, stats) = dist::train_over_hosts(&ds, &hosts, &cfg, &opts, None).unwrap();
+    supervisor.join().expect("supervisor thread panicked");
+    let status = clean.wait().expect("waiting for clean worker");
+    assert!(status.success());
+    let (h_in, params_in) = run_inproc(p, seed, None, epochs);
+    assert_trajectories_identical(&h_in, &h_hosts);
+    assert_eq!(params_in.data, ck.params.data, "parameters diverged across the re-dial");
+    assert!(stats.recoveries >= 1, "remote death never triggered a re-dial: {stats:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Worker-side wire hardening (the peer sends garbage).
+// ---------------------------------------------------------------------------
+
+/// A worker fed malformed coordinator bytes must fail fast with a
+/// structured error — never hang, never OOM on a hostile length prefix.
+/// Covers the worker half of the malformed-wire story (`proto::tests`
+/// covers the decode layer, `coordinator::check_hello` the coordinator
+/// half).
+#[test]
+fn worker_rejects_malformed_coordinator_bytes() {
+    use cofree_gnn::dist::proto;
+    use std::io::Write as _;
+
+    // One single-partition shard for the victim worker to load.
+    let ds = ds_small();
+    let vc = cut(&ds, 1, 9);
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let dir = std::env::temp_dir().join(format!("cofree_chaos_badwire_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dist::write_shards(&ds, &vc, &weights, 9, &dir).unwrap();
+    let shard = dir.join(shard_file_name(0));
+
+    // Each case: a fake "coordinator" (this test) accepts the worker's
+    // dial-out, reads its Hello, then misbehaves. The worker must return
+    // Err promptly.
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        // Unknown tag with a small declared payload.
+        ("unknown tag", {
+            let mut b = vec![0xEEu8];
+            b.extend_from_slice(&4u64.to_le_bytes());
+            b.extend_from_slice(&[1, 2, 3, 4]);
+            b
+        }),
+        // Config tag with a hostile length prefix (must hit the frame
+        // cap, not allocate a terabyte).
+        ("oversized length", {
+            let mut b = vec![proto::TAG_CONFIG];
+            b.extend_from_slice(&u64::MAX.to_le_bytes());
+            b
+        }),
+        // Truncated header, then the socket closes.
+        ("truncated header", vec![proto::TAG_CONFIG, 0x05]),
+    ];
+    for (name, bytes) in cases {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let shard_path = shard.clone();
+        let worker = std::thread::spawn(move || dist::worker::run(&shard_path, &addr));
+        let (mut sock, _) = listener.accept().unwrap();
+        let (hello, _) = proto::read_frame(&mut sock).unwrap();
+        assert!(
+            matches!(hello, proto::Frame::Hello { rank: 0, .. }),
+            "{name}: worker opened with {hello:?}"
+        );
+        sock.write_all(&bytes).unwrap();
+        drop(sock); // close: no more bytes are ever coming
+        let res = worker.join().expect("worker thread panicked");
+        assert!(res.is_err(), "{name}: worker accepted malformed input");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Crash recovery via periodic checkpoints (the coordinator's own loss).
+// ---------------------------------------------------------------------------
+
+/// The async periodic checkpointer closes the last gap: losing the
+/// *coordinator* costs at most `checkpoint_every` epochs, and resuming
+/// from the periodic snapshot replays to a bit-identical end state. Also
+/// proves the off-hot-loop writer perturbs nothing: the checkpointing
+/// run's trajectory equals the plain run's.
+#[test]
+fn periodic_checkpoint_resume_is_bit_identical() {
+    let (p, seed, epochs) = (2usize, 1901u64, 8usize);
+    let dropedge = Some((2usize, 0.3f64));
+    let ck_path = std::env::temp_dir().join(format!(
+        "cofree_chaos_ck_{}.bin",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&ck_path);
+
+    let (h_plain, params_plain) = run_inproc(p, seed, dropedge, epochs);
+
+    // The same run with a periodic snapshot every 3 epochs.
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let mut engine = TrainEngine::native_model(ModelKind::Sage);
+    let eval = engine.prepare_eval(&ds).unwrap();
+    let mut run = engine
+        .prepare_partitions(&ds, &vc, Reweighting::Dar, dropedge, seed)
+        .unwrap();
+    let cfg = TrainConfig {
+        checkpoint_every: 3,
+        checkpoint_path: Some(ck_path.clone()),
+        ..cfg_for(epochs, seed, dropedge)
+    };
+    let (h_ck, params_ck, _) = engine.train(&mut run, Some(&eval), &cfg).unwrap();
+    assert_trajectories_identical(&h_plain, &h_ck);
+    assert_eq!(params_plain.data, params_ck.data, "checkpointing perturbed the trajectory");
+
+    // "Crash": all we have is the periodic snapshot on disk.
+    let snap = TrainCheckpoint::load(&ck_path).unwrap();
+    assert!(
+        snap.epochs_done == 3 || snap.epochs_done == 6,
+        "periodic snapshot at epoch {}, expected 3 or 6",
+        snap.epochs_done
+    );
+
+    // Resume from it and finish; end state must match bitwise.
+    let mut engine2 = TrainEngine::native_model(ModelKind::Sage);
+    let eval2 = engine2.prepare_eval(&ds).unwrap();
+    let mut run2 = engine2
+        .prepare_partitions(&ds, &vc, Reweighting::Dar, dropedge, seed)
+        .unwrap();
+    let cfg2 = cfg_for(epochs, seed, dropedge);
+    let (_, resumed, _) = engine2
+        .train_resumable(&mut run2, Some(&eval2), &cfg2, Some(snap))
+        .unwrap();
+    assert_eq!(resumed.epochs_done, epochs);
+    assert_eq!(
+        params_plain.data, resumed.params.data,
+        "resume from the periodic snapshot diverged from the straight run"
+    );
+    let _ = std::fs::remove_file(&ck_path);
+}
