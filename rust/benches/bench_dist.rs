@@ -16,12 +16,13 @@
 //! the two trajectories end in bit-identical parameters (`parity` in the
 //! JSON must be true).
 
-use cofree_gnn::dist::{self, ProcOptions, Shard};
+use cofree_gnn::dist::{self, MappedShard, ProcOptions, Shard};
 use cofree_gnn::graph::features::{synthesize, FeatureParams};
 use cofree_gnn::graph::generators::{rmat_pairs, RmatParams};
 use cofree_gnn::graph::{Dataset, GraphBuilder};
 use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
 use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
+use cofree_gnn::util::binio::Verify;
 use cofree_gnn::util::rng::Rng;
 use std::fmt::Write as _;
 use std::path::PathBuf;
@@ -40,6 +41,10 @@ struct Row {
     shard_bytes: u64,
     shard_write_s: f64,
     shard_load_s: f64,
+    /// Worker-style mmap open with the whole-file digest verified (the
+    /// default path) vs `--no-verify`: the integrity tax at load time.
+    mmap_verified_s: f64,
+    mmap_noverify_s: f64,
     inproc_epoch_s: f64,
     proc_epoch_s: f64,
     handshake_s: f64,
@@ -99,6 +104,18 @@ fn main() {
         }
         let shard_load_s = t1.elapsed().as_secs_f64();
         assert_eq!(loaded_edges, ds.graph.num_edges(), "shards lost edges");
+        // The integrity tax: the worker's mmap open with the whole-file
+        // digest checked (default) vs `--no-verify` (skip).
+        let tv = Instant::now();
+        for f in &files {
+            MappedShard::open_with(f, Verify::Full).expect("verified mmap load");
+        }
+        let mmap_verified_s = tv.elapsed().as_secs_f64();
+        let ts = Instant::now();
+        for f in &files {
+            MappedShard::open_with(f, Verify::Skip).expect("unverified mmap load");
+        }
+        let mmap_noverify_s = ts.elapsed().as_secs_f64();
 
         // In-process reference trajectory.
         let cfg = TrainConfig { epochs, eval_every: 0, seed, ..Default::default() };
@@ -125,6 +142,8 @@ fn main() {
             shard_bytes: stats.total_bytes,
             shard_write_s,
             shard_load_s,
+            mmap_verified_s,
+            mmap_noverify_s,
             inproc_epoch_s,
             proc_epoch_s,
             handshake_s: dstats.handshake_seconds,
@@ -133,10 +152,15 @@ fn main() {
             parity,
         };
         let mib = row.shard_bytes as f64 / (1024.0 * 1024.0);
+        let verify_overhead_pct = (row.mmap_verified_s - row.mmap_noverify_s).max(0.0)
+            / row.mmap_noverify_s.max(1e-9)
+            * 100.0;
         println!(
-            "p={p:<3} shards {mib:7.1} MiB (write {:6.1} MiB/s, load {:6.1} MiB/s)  epoch inproc {:7.4}s proc {:7.4}s  wire {:8.1} KiB/epoch ({:.2} B/epoch/param)  parity={}",
+            "p={p:<3} shards {mib:7.1} MiB (write {:6.1} MiB/s, load {:6.1} MiB/s, mmap verify {:6.4}s vs skip {:6.4}s = +{verify_overhead_pct:.0}%)  epoch inproc {:7.4}s proc {:7.4}s  wire {:8.1} KiB/epoch ({:.2} B/epoch/param)  parity={}",
             mib / row.shard_write_s.max(1e-9),
             mib / row.shard_load_s.max(1e-9),
+            row.mmap_verified_s,
+            row.mmap_noverify_s,
             row.inproc_epoch_s,
             row.proc_epoch_s,
             row.wire_bytes_per_epoch / 1024.0,
@@ -195,13 +219,16 @@ fn main() {
         }
         write!(
             rows_json,
-            "{{\"workers\": {}, \"shard\": {{\"bytes\": {}, \"write_s\": {:.6}, \"load_s\": {:.6}, \"write_mib_s\": {:.3}, \"load_mib_s\": {:.3}}}, \"epoch\": {{\"inproc_s\": {:.6}, \"proc_s\": {:.6}, \"handshake_s\": {:.6}}}, \"wire\": {{\"bytes_per_epoch\": {:.1}, \"bytes_per_epoch_per_param\": {:.3}}}, \"parity\": {}}}",
+            "{{\"workers\": {}, \"shard\": {{\"bytes\": {}, \"write_s\": {:.6}, \"load_s\": {:.6}, \"write_mib_s\": {:.3}, \"load_mib_s\": {:.3}, \"mmap_verified_s\": {:.6}, \"mmap_noverify_s\": {:.6}, \"verify_overhead_pct\": {:.1}}}, \"epoch\": {{\"inproc_s\": {:.6}, \"proc_s\": {:.6}, \"handshake_s\": {:.6}}}, \"wire\": {{\"bytes_per_epoch\": {:.1}, \"bytes_per_epoch_per_param\": {:.3}}}, \"parity\": {}}}",
             r.p,
             r.shard_bytes,
             r.shard_write_s,
             r.shard_load_s,
             r.shard_bytes as f64 / (1024.0 * 1024.0) / r.shard_write_s.max(1e-9),
             r.shard_bytes as f64 / (1024.0 * 1024.0) / r.shard_load_s.max(1e-9),
+            r.mmap_verified_s,
+            r.mmap_noverify_s,
+            (r.mmap_verified_s - r.mmap_noverify_s).max(0.0) / r.mmap_noverify_s.max(1e-9) * 100.0,
             r.inproc_epoch_s,
             r.proc_epoch_s,
             r.handshake_s,

@@ -89,6 +89,10 @@ USAGE:
   cofree worker --shard FILE --connect ADDR     (ADDR: host:port or unix:/path)
   cofree worker --shard FILE --listen ADDR      (multi-host: accept coordinator
                sessions on ADDR; survives coordinator restarts/reconnects)
+               [--no-verify]                    (skip shard digest verification)
+  cofree fsck PATH [PATH...]    (verify shard dirs, shard files, checkpoints:
+               digests, manifest cross-references, completion; exits nonzero
+               on any corruption)
   cofree emit-bucket-spec [--out FILE]
   cofree train --dataset NAME --partitions P [--algo ne] [--reweight dar]
                [--model sage|gcn|gin] [--backend native|xla] [--epochs N] [--lr F]
@@ -101,6 +105,8 @@ USAGE:
                workers that hang past the deadline / fail liveness pings)
                [--checkpoint FILE] [--checkpoint-every N]   (periodic async
                snapshots; resume with --load-model FILE)
+               [--no-verify] [--wire-digests]   (proc: skip worker shard digest
+               verification / add CRC-32C trailers to step frames)
                [--save-model FILE] [--load-model FILE]
                [--scale F] [--artifacts DIR] [--out-csv FILE] [--config FILE]
   cofree bench NAME            (table1|table2|table3|table4|fig2|fig3|fig4|fig5|all)
@@ -132,6 +138,7 @@ pub fn main(argv: Vec<String>) -> Result<i32> {
         "partition" => cmd_partition(&args),
         "shard" => cmd_shard(&args),
         "worker" => cmd_worker(&args),
+        "fsck" => cmd_fsck(&args),
         "emit-bucket-spec" => cmd_emit_bucket_spec(&args),
         "train" => cmd_train(&args),
         "bench" => cmd_bench(&args),
@@ -240,15 +247,41 @@ fn cmd_shard(args: &Args) -> Result<i32> {
 /// `cofree train --hosts …`, where the worker outlives any one session).
 fn cmd_worker(args: &Args) -> Result<i32> {
     let shard = PathBuf::from(args.get("shard").context("--shard FILE required")?);
+    let verify = if args.get("no-verify").is_some() {
+        crate::util::binio::Verify::Skip
+    } else {
+        crate::util::binio::Verify::Full
+    };
     match (args.get("connect"), args.get("listen")) {
         (Some(connect), None) => {
-            dist::worker::run(&shard, connect)?;
+            dist::worker::run(&shard, connect, verify)?;
         }
         (None, Some(listen)) => {
-            dist::worker::run_listen(&shard, listen)?;
+            dist::worker::run_listen(&shard, listen, verify)?;
         }
         (Some(_), Some(_)) => bail!("--connect and --listen are mutually exclusive"),
         (None, None) => bail!("worker needs --connect ADDR or --listen ADDR"),
+    }
+    Ok(0)
+}
+
+/// `cofree fsck` — verify the integrity of shard stores, shard files and
+/// checkpoints: magics, versions, lengths, digests, and the manifest's
+/// cross-references. Prints a per-file verdict; exits nonzero when any
+/// file fails.
+fn cmd_fsck(args: &Args) -> Result<i32> {
+    if args.positional.is_empty() {
+        bail!("fsck needs at least one PATH (a shard dir, shard file, or checkpoint)");
+    }
+    let mut failures = 0usize;
+    for target in &args.positional {
+        let report = dist::fsck(Path::new(target))?;
+        println!("{report}");
+        failures += report.failures();
+    }
+    if failures > 0 {
+        crate::log_error!("fsck: {failures} file(s) failed verification");
+        return Ok(1);
     }
     Ok(0)
 }
@@ -332,6 +365,11 @@ fn run_train_proc(
         health.epoch_deadline = Some(std::time::Duration::from_secs_f64(secs));
     }
     health.heartbeat_every = args.parse_or("heartbeat-every", 0)?;
+    // Integrity knobs: `--no-verify` spawns workers that skip shard digest
+    // verification (the bench's measurement knob); `--wire-digests` arms
+    // CRC-32C trailers on the step-loop tensor frames.
+    let verify_shards = args.get("no-verify").is_none();
+    let wire_digests = args.get("wire-digests").is_some();
     // `--hosts a:9000,b:9000`: the fleet already runs elsewhere (`cofree
     // worker --listen`); the coordinator dials out instead of spawning.
     if let Some(list) = args.get("hosts") {
@@ -356,6 +394,8 @@ fn run_train_proc(
             transport: Transport::Tcp,
             model: kind,
             health,
+            verify_shards,
+            wire_digests,
             ..ProcOptions::new(worker_bin)
         };
         let (history, ck, stats) = dist::train_over_hosts(ds, &hosts, cfg, &opts, resume)?;
@@ -397,7 +437,14 @@ fn run_train_proc(
             dir.display()
         );
     }
-    let opts = ProcOptions { transport, model: kind, health, ..ProcOptions::new(worker_bin) };
+    let opts = ProcOptions {
+        transport,
+        model: kind,
+        health,
+        verify_shards,
+        wire_digests,
+        ..ProcOptions::new(worker_bin)
+    };
     let result = dist::train_over_shards(ds, &dir, cfg, &opts, resume);
     if scratch {
         let _ = std::fs::remove_dir_all(&dir);
@@ -509,9 +556,17 @@ fn cmd_train(args: &Args) -> Result<i32> {
     // Proc-only flags must not be silently ignored on the inproc path
     // (same rule as --artifacts above).
     if transport != "proc" {
-        for flag in
-            ["workers", "shard-dir", "worker-bin", "socket", "hosts", "epoch-deadline", "heartbeat-every"]
-        {
+        for flag in [
+            "workers",
+            "shard-dir",
+            "worker-bin",
+            "socket",
+            "hosts",
+            "epoch-deadline",
+            "heartbeat-every",
+            "no-verify",
+            "wire-digests",
+        ] {
             if args.get(flag).is_some() {
                 bail!("--{flag} is only used by the proc transport; add --transport proc");
             }
@@ -806,6 +861,36 @@ mod tests {
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
+    /// End-to-end through the CLI: `cofree shard` then `cofree fsck` —
+    /// clean store passes (exit 0), a flipped byte fails (exit 1), and a
+    /// nonexistent target is a hard error.
+    #[test]
+    fn fsck_command_verifies_and_rejects() {
+        let dir = std::env::temp_dir().join(format!("cofree_cli_fsck_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let code = main(argv(&[
+            "shard",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--partitions",
+            "2",
+            "--out",
+            dir.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        assert_eq!(main(argv(&["fsck", dir.to_str().unwrap()])).unwrap(), 0);
+        let victim = dir.join("shard_0000.bin");
+        let len = std::fs::metadata(&victim).unwrap().len();
+        crate::dist::fault::flip_file_bit(&victim, len - 9, 1).unwrap();
+        assert_eq!(main(argv(&["fsck", dir.to_str().unwrap()])).unwrap(), 1);
+        assert!(main(argv(&["fsck", "/nonexistent-cofree-path"])).is_err());
+        assert!(main(argv(&["fsck"])).is_err(), "fsck without a target must error");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
     #[test]
     fn worker_requires_shard_and_connect() {
         assert!(main(argv(&["worker"])).is_err());
@@ -911,6 +996,8 @@ mod tests {
             "--hosts",
             "--epoch-deadline",
             "--heartbeat-every",
+            "--no-verify",
+            "--wire-digests",
         ] {
             assert!(
                 main(argv(&[

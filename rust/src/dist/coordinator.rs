@@ -107,6 +107,15 @@ pub struct ProcOptions {
     /// processes (never the coordinator's own environment), so parallel
     /// test runs cannot contaminate each other.
     pub chaos_env: Option<String>,
+    /// Arm CRC-32C trailers on the step-loop tensor frames (`Step` down,
+    /// `StepResult` up). Negotiated in the `Config` frame; off by default
+    /// so the wire bytes — and the measured per-epoch wire bound — stay
+    /// identical to a digest-unaware run.
+    pub wire_digests: bool,
+    /// Verify shard digests at worker load time (the default). `false`
+    /// spawns workers with `--no-verify` — the knob `bench_dist` flips to
+    /// measure what verification costs.
+    pub verify_shards: bool,
 }
 
 impl ProcOptions {
@@ -118,6 +127,8 @@ impl ProcOptions {
             handshake_timeout: Duration::from_secs(60),
             health: HealthOptions::default(),
             chaos_env: None,
+            wire_digests: false,
+            verify_shards: true,
         }
     }
 }
@@ -327,6 +338,10 @@ struct FleetCtl {
     chaos_env: Option<String>,
     health: HealthOptions,
     num_parts: usize,
+    /// CRC-32C trailers negotiated for this fleet's tensor frames.
+    wire_digests: bool,
+    /// Spawn workers with `--no-verify` when false.
+    verify_shards: bool,
     defused: bool,
     // Accounting, folded into DistStats at the end of the run.
     recoveries: u64,
@@ -385,6 +400,8 @@ impl FleetCtl {
             chaos_env: opts.chaos_env.clone(),
             health: opts.health,
             num_parts: p,
+            wire_digests: opts.wire_digests,
+            verify_shards: opts.verify_shards,
             defused: false,
             recoveries: 0,
             recovery_seconds: 0.0,
@@ -399,6 +416,7 @@ impl FleetCtl {
                 }
                 let deadline = Instant::now() + opts.handshake_timeout;
                 let mut connected = 0usize;
+                let mut recycles = 0usize;
                 while connected < p {
                     match fleet.listener.as_ref().expect("local fleet").accept()? {
                         Some(mut s) => {
@@ -410,6 +428,48 @@ impl FleetCtl {
                             let (frame, n) =
                                 proto::read_frame(&mut s).context("reading Hello")?;
                             fleet.handshake_bytes += n;
+                            if let Frame::Fault { code, detail } = &frame {
+                                // A worker that cannot serve its shard says
+                                // so in-band instead of dying silently.
+                                // Corruption aborts the launch (retrying the
+                                // same bytes cannot help); a transient
+                                // failure recycles the rank within budget.
+                                let rank = fleet.rank_for_fault(detail);
+                                if *code == proto::FAULT_CORRUPT_DATA {
+                                    let who = rank
+                                        .map(|r| format!("worker rank {r}"))
+                                        .unwrap_or_else(|| "a worker".to_string());
+                                    bail!(
+                                        "{who} reports corrupt data: {detail} — run \
+                                         `cofree fsck` on the shard directory; aborting"
+                                    );
+                                }
+                                let Some(r) = rank else {
+                                    bail!(
+                                        "a worker reports a transient fault but names no \
+                                         known shard: {detail}"
+                                    );
+                                };
+                                recycles += 1;
+                                ensure!(
+                                    recycles <= fleet.health.max_recoveries,
+                                    "worker rank {r} keeps failing at launch \
+                                     ({recycles} transient faults, budget {}): {detail}",
+                                    fleet.health.max_recoveries
+                                );
+                                crate::log_warn!(
+                                    "rank {r} reported a transient fault at launch \
+                                     ({detail}); recycling ({recycles}/{})",
+                                    fleet.health.max_recoveries
+                                );
+                                if let Some(mut c) = fleet.children[r].take() {
+                                    let _ = c.kill();
+                                    let _ = c.wait();
+                                }
+                                fleet.generation[r] += 1;
+                                fleet.children[r] = Some(fleet.spawn_child(r)?);
+                                continue;
+                            }
                             let rank = check_hello(&frame, p, &taken)?;
                             taken[rank] = true;
                             streams[rank] = Some(s);
@@ -435,6 +495,8 @@ impl FleetCtl {
                     let (mut s, frame, n) =
                         dial_hello(host, deadline, fleet.health.reconnect_backoff)?;
                     fleet.handshake_bytes += n;
+                    reject_fault(&frame)
+                        .with_context(|| format!("handshaking worker at {host}"))?;
                     let rank = check_hello(&frame, p, &taken)?;
                     taken[rank] = true;
                     fleet.endpoints[rank] = Endpoint::Remote { addr: host.clone() };
@@ -479,6 +541,20 @@ impl FleetCtl {
         Ok(WorkerMeta { local_train_weight, tmask_sum, num_masks: num_masks as usize })
     }
 
+    /// Identify which rank a handshake `Fault` came from by matching the
+    /// endpoints' shard file names against the fault detail — a faulting
+    /// worker could not read its shard, so its rank never made it into a
+    /// `Hello`; the file name in the detail text is the identity.
+    fn rank_for_fault(&self, detail: &str) -> Option<usize> {
+        self.endpoints.iter().position(|ep| match ep {
+            Endpoint::Local { shard } => shard
+                .file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| detail.contains(n)),
+            Endpoint::Remote { .. } => false,
+        })
+    }
+
     fn spawn_child(&self, rank: usize) -> Result<Child> {
         let Endpoint::Local { shard } = &self.endpoints[rank] else {
             bail!("rank {rank} is a remote endpoint; cannot spawn it locally");
@@ -492,6 +568,9 @@ impl FleetCtl {
             .stdin(Stdio::null())
             .stdout(Stdio::null())
             .stderr(Stdio::inherit());
+        if !self.verify_shards {
+            cmd.arg("--no-verify");
+        }
         if let Some(chaos) = &self.chaos_env {
             cmd.env(fault::CHAOS_ENV, chaos)
                 .env(fault::CHAOS_GEN_ENV, self.generation[rank].to_string());
@@ -567,6 +646,24 @@ impl FleetCtl {
                 let (frame, n) =
                     proto::read_frame(&mut s).context("reading Hello from respawned worker")?;
                 self.handshake_bytes += n;
+                if let Frame::Fault { code, detail } = &frame {
+                    ensure!(
+                        *code != proto::FAULT_CORRUPT_DATA,
+                        "respawned worker rank {rank} reports corrupt data: {detail} — \
+                         run `cofree fsck` on its shard; retrying cannot help"
+                    );
+                    crate::log_warn!(
+                        "respawned rank {rank} reported a transient fault ({detail}); \
+                         recycling within the recovery deadline"
+                    );
+                    if let Some(mut c) = self.children[rank].take() {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                    }
+                    self.generation[rank] += 1;
+                    self.children[rank] = Some(self.spawn_child(rank)?);
+                    continue;
+                }
                 let got = check_hello(&frame, self.num_parts, &none_taken)?;
                 ensure!(
                     got == rank,
@@ -598,6 +695,7 @@ impl FleetCtl {
         let (mut s, frame, n) = dial_hello(addr, deadline, self.health.reconnect_backoff)
             .with_context(|| format!("re-dialing rank {rank} at {addr}"))?;
         self.handshake_bytes += n;
+        reject_fault(&frame).with_context(|| format!("re-dialing rank {rank} at {addr}"))?;
         let none_taken = vec![false; self.num_parts];
         let got = check_hello(&frame, self.num_parts, &none_taken)?;
         ensure!(got == rank, "worker at {addr} reports rank {got}, expected rank {rank}");
@@ -639,6 +737,23 @@ impl Drop for FleetCtl {
             }
         }
     }
+}
+
+/// Surface a worker-reported handshake [`Frame::Fault`] as a structured
+/// error: corrupt data names the file and points the operator at
+/// `cofree fsck`; a transient fault is reported as such so the caller's
+/// retry policy (or the operator) can recycle the worker.
+fn reject_fault(frame: &Frame) -> Result<()> {
+    if let Frame::Fault { code, detail } = frame {
+        if *code == proto::FAULT_CORRUPT_DATA {
+            bail!(
+                "worker reports corrupt data: {detail} — run `cofree fsck` on it; \
+                 retrying cannot help"
+            );
+        }
+        bail!("worker reports a transient fault: {detail}");
+    }
+    Ok(())
 }
 
 /// Dial `addr` and read the worker's Hello, retrying with exponential
@@ -704,6 +819,9 @@ pub struct ProcWorker {
 pub struct ProcBackend {
     cpu: CpuBackend,
     fleet: RefCell<FleetCtl>,
+    /// CRC-32C trailers on Step/StepResult payloads, as negotiated in the
+    /// fleet's `Config` frame.
+    wire_digests: bool,
     bytes_sent: Cell<u64>,
     bytes_recv: Cell<u64>,
     heartbeat_bytes: Cell<u64>,
@@ -725,6 +843,7 @@ impl ProcBackend {
     fn new(fleet: FleetCtl) -> ProcBackend {
         ProcBackend {
             cpu: CpuBackend::new(),
+            wire_digests: fleet.wire_digests,
             fleet: RefCell::new(fleet),
             bytes_sent: Cell::new(0),
             bytes_recv: Cell::new(0),
@@ -754,8 +873,9 @@ impl ProcBackend {
     fn recover_and_resend(&self, w: &ProcWorker, pick: Option<usize>) -> Result<()> {
         self.replace_worker(w)?;
         let encoded = self.encoded.borrow();
-        let n = proto::write_step_encoded(&mut *w.stream.borrow_mut(), pick, &encoded)
-            .with_context(|| format!("resending step to recovered rank {}", w.rank))?;
+        let n =
+            proto::write_step_encoded(&mut *w.stream.borrow_mut(), pick, &encoded, self.wire_digests)
+                .with_context(|| format!("resending step to recovered rank {}", w.rank))?;
         self.bytes_sent.set(self.bytes_sent.get() + n);
         w.stream
             .borrow()
@@ -866,7 +986,11 @@ impl ProcBackend {
                 if let Some(wire) = polled {
                     self.bytes_recv.set(self.bytes_recv.get() + wire);
                     let recv = w.recv.borrow();
-                    let secs = proto::decode_step_result_into(recv.payload(), &mut outs[i].0)
+                    let secs = proto::decode_step_result_into(
+                        recv.payload(),
+                        &mut outs[i].0,
+                        self.wire_digests,
+                    )
                         .with_context(|| {
                             format!("decoding step result from worker rank {}", w.rank)
                         })?;
@@ -972,7 +1096,12 @@ impl Backend for ProcBackend {
             encoded.encode_from(&params.data)?;
             for (&wi, pick) in selected.iter().zip(picks) {
                 let w = &workers[wi];
-                let wrote = proto::write_step_encoded(&mut *w.stream.borrow_mut(), *pick, &encoded);
+                let wrote = proto::write_step_encoded(
+                    &mut *w.stream.borrow_mut(),
+                    *pick,
+                    &encoded,
+                    self.wire_digests,
+                );
                 let n = match wrote {
                     Ok(n) => n,
                     Err(e) => {
@@ -983,10 +1112,15 @@ impl Backend for ProcBackend {
                             w.rank
                         );
                         self.replace_worker(w)?;
-                        proto::write_step_encoded(&mut *w.stream.borrow_mut(), *pick, &encoded)
-                            .with_context(|| {
-                                format!("resending step to recovered rank {}", w.rank)
-                            })?
+                        proto::write_step_encoded(
+                            &mut *w.stream.borrow_mut(),
+                            *pick,
+                            &encoded,
+                            self.wire_digests,
+                        )
+                        .with_context(|| {
+                            format!("resending step to recovered rank {}", w.rank)
+                        })?
                     }
                 };
                 self.bytes_sent.set(self.bytes_sent.get() + n);
@@ -1102,7 +1236,13 @@ fn train_fleet(
         Some((k, r)) => (k as u32, r),
         None => (0, 0.0),
     };
-    let config = Frame::Config { seed: cfg.seed, dropedge_k, dropedge_ratio, model };
+    let config = Frame::Config {
+        seed: cfg.seed,
+        dropedge_k,
+        dropedge_ratio,
+        model,
+        wire_digests: opts.wire_digests,
+    };
     let (fleet, streams) = FleetCtl::launch(source, config, opts)?;
     let metas = fleet.metas.clone();
     let workers: Vec<ProcWorker> = streams

@@ -125,6 +125,42 @@ impl FaultPlan {
     }
 }
 
+/// Flip one bit of an on-disk file in place: `file[byte] ^= 1 << bit`.
+/// The corruption-chaos injector for shard/checkpoint/manifest files —
+/// every loader must turn any such flip into a structured error.
+pub fn flip_file_bit(path: &std::path::Path, byte: u64, bit: u8) -> Result<()> {
+    use std::io::{Seek, SeekFrom};
+    ensure!(bit < 8, "bit index {bit} out of range");
+    let mut f = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening {path:?} for corruption"))?;
+    let len = f.metadata()?.len();
+    ensure!(byte < len, "flip offset {byte} beyond file length {len}");
+    f.seek(SeekFrom::Start(byte))?;
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b)?;
+    b[0] ^= 1 << bit;
+    f.seek(SeekFrom::Start(byte))?;
+    f.write_all(&b)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// Truncate an on-disk file to `len` bytes: a torn write / partial copy.
+pub fn truncate_file(path: &std::path::Path, len: u64) -> Result<()> {
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("opening {path:?} for truncation"))?;
+    let have = f.metadata()?.len();
+    ensure!(len <= have, "cannot truncate {path:?} to {len}: only {have} bytes");
+    f.set_len(len)?;
+    f.sync_all()?;
+    Ok(())
+}
+
 /// Transport shim that injects the planned fault at a `StepResult` frame
 /// boundary. Wraps any `Read + Write` stream; the worker's serve loop is
 /// generic over the stream type, so production runs pay nothing.
@@ -290,9 +326,9 @@ mod tests {
         let mut want = Vec::new();
         for _ in 0..3 {
             let mut scratch = Vec::new();
-            super::super::proto::write_step_result_buffered(&mut shim, &out, 0.25, &mut scratch)
+            super::super::proto::write_step_result_buffered(&mut shim, &out, 0.25, &mut scratch, false)
                 .unwrap();
-            super::super::proto::write_step_result_buffered(&mut want, &out, 0.25, &mut scratch)
+            super::super::proto::write_step_result_buffered(&mut want, &out, 0.25, &mut scratch, false)
                 .unwrap();
         }
         assert_eq!(shim.inner, want);

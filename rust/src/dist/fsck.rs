@@ -1,0 +1,396 @@
+//! `cofree fsck` — offline integrity verification for everything the
+//! data plane persists: shard stores (`shard_NNNN.bin` + `manifest.json`),
+//! single shard files, and training checkpoints.
+//!
+//! The verdict model is per-file: every file gets an `ok` flag plus a
+//! human-readable detail line, and the run as a whole passes only if
+//! every file does — the CLI exits nonzero otherwise, so CI and
+//! operators can gate on `cofree shard … && cofree fsck …`.
+//!
+//! Directory semantics encode the durability contract of
+//! [`write_shards`](super::shard::write_shards): the manifest is written
+//! **last**, so a directory without one is *incomplete by definition* (a
+//! crash mid-`cofree shard`); a listed file that is missing, missized, or
+//! digest-divergent is corrupt; and a `shard_*.bin` on disk that the
+//! manifest does not list is flagged as foreign or partial.
+
+use super::shard::{check_shard_file, read_manifest, shard_files, ManifestEntry, SHARD_MAGIC};
+use crate::train::checkpoint::{check_checkpoint_file, CHECKPOINT_MAGIC};
+use anyhow::{Context, Result};
+use std::collections::BTreeSet;
+use std::path::Path;
+
+/// One file's fsck outcome.
+#[derive(Clone, Debug)]
+pub struct FileVerdict {
+    pub file: String,
+    pub ok: bool,
+    pub detail: String,
+}
+
+/// A full fsck report over one target (file or shard directory).
+#[derive(Clone, Debug)]
+pub struct FsckReport {
+    pub target: String,
+    pub verdicts: Vec<FileVerdict>,
+}
+
+impl FsckReport {
+    fn new(target: &Path) -> FsckReport {
+        FsckReport { target: target.display().to_string(), verdicts: Vec::new() }
+    }
+
+    fn push(&mut self, file: impl Into<String>, ok: bool, detail: impl Into<String>) {
+        self.verdicts.push(FileVerdict { file: file.into(), ok, detail: detail.into() });
+    }
+
+    /// True when every checked file passed.
+    pub fn ok(&self) -> bool {
+        self.verdicts.iter().all(|v| v.ok)
+    }
+
+    /// Number of files that failed their checks.
+    pub fn failures(&self) -> usize {
+        self.verdicts.iter().filter(|v| !v.ok).count()
+    }
+}
+
+impl std::fmt::Display for FsckReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "fsck {}", self.target)?;
+        for v in &self.verdicts {
+            let mark = if v.ok { "ok " } else { "BAD" };
+            writeln!(f, "  {mark}  {}: {}", v.file, v.detail)?;
+        }
+        if self.ok() {
+            write!(f, "  {} file(s) verified, no corruption", self.verdicts.len())
+        } else {
+            write!(
+                f,
+                "  {} of {} file(s) FAILED verification",
+                self.failures(),
+                self.verdicts.len()
+            )
+        }
+    }
+}
+
+/// Check one target: a shard directory (manifest cross-referenced against
+/// every shard file), a single shard file, a checkpoint, or a
+/// `manifest.json`. `Err` means the target itself is unusable (does not
+/// exist); corruption is reported in the returned verdicts, not as `Err`.
+pub fn fsck(target: &Path) -> Result<FsckReport> {
+    let meta = std::fs::metadata(target)
+        .with_context(|| format!("fsck target {} does not exist", target.display()))?;
+    if meta.is_dir() {
+        Ok(fsck_shard_dir(target))
+    } else {
+        Ok(fsck_file(target))
+    }
+}
+
+/// File name (best effort) for verdict labels.
+fn label(path: &Path) -> String {
+    path.file_name()
+        .and_then(|n| n.to_str())
+        .map(str::to_string)
+        .unwrap_or_else(|| path.display().to_string())
+}
+
+/// Dispatch a single file on its magic: shard, checkpoint, or manifest.
+fn fsck_file(path: &Path) -> Result<FsckReport> {
+    let mut report = FsckReport::new(path);
+    let name = label(path);
+    let mut magic = [0u8; 8];
+    let got = match std::fs::File::open(path) {
+        Ok(mut f) => {
+            use std::io::Read;
+            let mut n = 0usize;
+            // A file shorter than 8 bytes yields a short magic — handled
+            // as unrecognized below rather than as an I/O error.
+            while n < 8 {
+                match f.read(&mut magic[n..]) {
+                    Ok(0) => break,
+                    Ok(k) => n += k,
+                    Err(e) => {
+                        report.push(&name, false, format!("unreadable: {e}"));
+                        return Ok(report);
+                    }
+                }
+            }
+            n
+        }
+        Err(e) => {
+            report.push(&name, false, format!("unreadable: {e}"));
+            return Ok(report);
+        }
+    };
+    if name == "manifest.json" {
+        let dir = path.parent().unwrap_or_else(|| Path::new("."));
+        match read_manifest(dir) {
+            Ok(m) => report.push(
+                &name,
+                true,
+                format!("{} ({} parts, {} bytes listed)", m.format, m.num_parts, m.total_bytes),
+            ),
+            Err(e) => report.push(&name, false, format!("{e:#}")),
+        }
+    } else if got == 8 && &magic == SHARD_MAGIC {
+        check_one_shard(&mut report, path, &name, None, None);
+    } else if got == 8 && &magic == CHECKPOINT_MAGIC {
+        match check_checkpoint_file(path) {
+            Ok(c) => report.push(
+                &name,
+                true,
+                format!(
+                    "checkpoint v{}, {} bytes, {} epochs, {:?} ({})",
+                    c.version, c.bytes, c.epochs_done, c.model.kind, c.integrity
+                ),
+            ),
+            Err(e) => report.push(&name, false, format!("{e:#}")),
+        }
+    } else {
+        report.push(
+            &name,
+            false,
+            format!(
+                "unrecognized magic {:02x?} — not a cofree shard ({:?}) or checkpoint ({:?})",
+                &magic[..got],
+                std::str::from_utf8(SHARD_MAGIC).unwrap_or("?"),
+                std::str::from_utf8(CHECKPOINT_MAGIC).unwrap_or("?"),
+            ),
+        );
+    }
+    Ok(report)
+}
+
+/// Check one shard file and (when a manifest entry is available)
+/// cross-reference its recorded size, CRC and part id.
+fn check_one_shard(
+    report: &mut FsckReport,
+    path: &Path,
+    name: &str,
+    entry: Option<&ManifestEntry>,
+    num_parts: Option<u64>,
+) {
+    let check = match check_shard_file(path) {
+        Ok(c) => c,
+        Err(e) => {
+            report.push(name, false, format!("{e:#}"));
+            return;
+        }
+    };
+    let mut problems: Vec<String> = Vec::new();
+    if let Some(entry) = entry {
+        if check.bytes != entry.bytes {
+            problems.push(format!(
+                "{} bytes on disk, manifest records {}",
+                check.bytes, entry.bytes
+            ));
+        }
+        if let Some(want) = entry.crc32c {
+            if want != check.full_file_crc32c {
+                problems.push(format!(
+                    "file crc {:#010x}, manifest records {want:#010x}",
+                    check.full_file_crc32c
+                ));
+            }
+        }
+        if check.part_id as u64 != entry.part_id {
+            problems.push(format!(
+                "file says part {}, manifest records part {}",
+                check.part_id, entry.part_id
+            ));
+        }
+    }
+    if let Some(p) = num_parts {
+        if check.num_parts as u64 != p {
+            problems.push(format!(
+                "file says {} parts, manifest records {p}",
+                check.num_parts
+            ));
+        }
+    }
+    if problems.is_empty() {
+        report.push(
+            name,
+            true,
+            format!(
+                "shard v{}, {} bytes, part {}/{}, crc {:#010x}, {} ({} sections)",
+                check.version,
+                check.bytes,
+                check.part_id,
+                check.num_parts,
+                check.full_file_crc32c,
+                check.integrity,
+                check.sections_checked
+            ),
+        );
+    } else {
+        report.push(name, false, problems.join("; "));
+    }
+}
+
+/// Check a shard directory against its manifest. A missing manifest makes
+/// the store incomplete (the manifest-last contract); the shard files are
+/// still individually checked so the operator can see whether the data
+/// itself survived.
+fn fsck_shard_dir(dir: &Path) -> FsckReport {
+    let mut report = FsckReport::new(dir);
+    let manifest = match read_manifest(dir) {
+        Ok(m) => m,
+        Err(e) => {
+            report.push("manifest.json", false, format!("{e:#}"));
+            if let Ok(files) = shard_files(dir) {
+                for f in &files {
+                    let name = label(f);
+                    check_one_shard(&mut report, f, &name, None, None);
+                }
+            }
+            return report;
+        }
+    };
+    report.push(
+        "manifest.json",
+        true,
+        format!("{} ({} parts, {} bytes listed)", manifest.format, manifest.num_parts, manifest.total_bytes),
+    );
+    let mut listed: BTreeSet<&str> = BTreeSet::new();
+    let mut listed_bytes = 0u64;
+    for entry in &manifest.shards {
+        listed.insert(entry.file.as_str());
+        listed_bytes = listed_bytes.saturating_add(entry.bytes);
+        check_one_shard(
+            &mut report,
+            &dir.join(&entry.file),
+            &entry.file,
+            Some(entry),
+            Some(manifest.num_parts),
+        );
+    }
+    if listed_bytes != manifest.total_bytes {
+        report.push(
+            "manifest.json",
+            false,
+            format!(
+                "total_bytes {} disagrees with the sum of its entries ({listed_bytes})",
+                manifest.total_bytes
+            ),
+        );
+    }
+    // Files on disk the manifest never committed to.
+    if let Ok(files) = shard_files(dir) {
+        for f in &files {
+            let name = label(f);
+            if !listed.contains(name.as_str()) {
+                report.push(
+                    &name,
+                    false,
+                    "present on disk but not in manifest.json — partial write or foreign file",
+                );
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::fault::{flip_file_bit, truncate_file};
+    use crate::dist::shard::shard_file_name;
+    use crate::graph::datasets;
+    use crate::partition::{algorithm, dar_weights, Reweighting, VertexCut};
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("cofree_fsck_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn write_store(dir: &Path, parts: usize) {
+        let ds = datasets::build("yelp-sim", 0.04, 7).unwrap();
+        let algo = algorithm("dbh").unwrap();
+        let mut rng = Rng::new(7);
+        let vc = VertexCut::create(&ds.graph, parts, algo.as_ref(), &mut rng);
+        let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+        super::super::shard::write_shards(&ds, &vc, &weights, 7, dir).unwrap();
+    }
+
+    #[test]
+    fn clean_store_passes_and_every_corruption_is_caught() {
+        let dir = tmpdir("clean");
+        write_store(&dir, 2);
+        let report = fsck(&dir).unwrap();
+        assert!(report.ok(), "{report}");
+        // manifest + 2 shards, all verified.
+        assert_eq!(report.verdicts.len(), 3, "{report}");
+
+        // Bit-flip one shard payload byte: the dir check must fail and
+        // name the file.
+        let victim = dir.join(shard_file_name(1));
+        let len = std::fs::metadata(&victim).unwrap().len();
+        flip_file_bit(&victim, len - 5, 3).unwrap();
+        let report = fsck(&dir).unwrap();
+        assert!(!report.ok(), "{report}");
+        let bad: Vec<_> = report.verdicts.iter().filter(|v| !v.ok).collect();
+        assert_eq!(bad.len(), 1, "{report}");
+        assert_eq!(bad[0].file, shard_file_name(1));
+        assert!(bad[0].detail.contains("digest mismatch"), "{report}");
+        // Restore the bit; the store passes again (flip is involutive).
+        flip_file_bit(&victim, len - 5, 3).unwrap();
+        assert!(fsck(&dir).unwrap().ok());
+
+        // Truncation (a torn write) is caught too.
+        truncate_file(&victim, len - 7).unwrap();
+        let report = fsck(&dir).unwrap();
+        assert!(!report.ok(), "{report}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_manifest_marks_the_store_incomplete() {
+        let dir = tmpdir("nomanifest");
+        write_store(&dir, 2);
+        std::fs::remove_file(dir.join("manifest.json")).unwrap();
+        let report = fsck(&dir).unwrap();
+        assert!(!report.ok(), "{report}");
+        let m = report.verdicts.iter().find(|v| v.file == "manifest.json").unwrap();
+        assert!(!m.ok);
+        assert!(m.detail.contains("incomplete"), "{report}");
+        // The shard files themselves still get individual verdicts.
+        assert!(report.verdicts.len() >= 3, "{report}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unlisted_shard_file_is_flagged() {
+        let dir = tmpdir("unlisted");
+        write_store(&dir, 2);
+        std::fs::copy(dir.join(shard_file_name(0)), dir.join("shard_0099.bin")).unwrap();
+        let report = fsck(&dir).unwrap();
+        assert!(!report.ok(), "{report}");
+        let v = report.verdicts.iter().find(|v| v.file == "shard_0099.bin").unwrap();
+        assert!(v.detail.contains("not in manifest"), "{report}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn single_files_and_unknown_magic() {
+        let dir = tmpdir("single");
+        write_store(&dir, 2);
+        // A single shard file passes standalone.
+        let report = fsck(&dir.join(shard_file_name(0))).unwrap();
+        assert!(report.ok(), "{report}");
+        // An unknown file is rejected with a clear verdict, not a panic.
+        let junk = dir.join("junk.bin");
+        std::fs::write(&junk, b"not a cofree file at all").unwrap();
+        let report = fsck(&junk).unwrap();
+        assert!(!report.ok(), "{report}");
+        assert!(report.verdicts[0].detail.contains("unrecognized magic"), "{report}");
+        // A nonexistent target is a hard error (unusable, not corrupt).
+        assert!(fsck(&dir.join("missing.bin")).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -22,7 +22,11 @@
 //!   detection from `compute_seconds` telemetry, and recovery budgets.
 //! * [`fault`] — the chaos-injection shim (`COFREE_CHAOS`): kills, hangs
 //!   and delays workers at exact frame boundaries so `tests/chaos.rs` can
-//!   prove recovery is bit-exact.
+//!   prove recovery is bit-exact; plus on-disk corruption injectors
+//!   (bit flips, truncation) for the integrity chaos tests.
+//! * [`fsck`] — `cofree fsck`: offline verification of shard stores and
+//!   checkpoints against their recorded digests and the manifest-last
+//!   completion contract.
 //!
 //! Workers are stateless between steps, so fault tolerance is cheap: the
 //! coordinator respawns (local fleets) or re-dials (`--hosts` fleets) a
@@ -39,6 +43,7 @@
 
 pub mod coordinator;
 pub mod fault;
+pub mod fsck;
 pub mod health;
 pub mod proto;
 pub mod shard;
@@ -47,5 +52,9 @@ pub mod worker;
 pub use coordinator::{
     train_over_hosts, train_over_shards, DistStats, ProcBackend, ProcOptions, Transport,
 };
+pub use fsck::{fsck, FileVerdict, FsckReport};
 pub use health::HealthOptions;
-pub use shard::{shard_file_name, shard_files, write_shards, MappedShard, Shard, ShardSetStats};
+pub use shard::{
+    check_shard_file, read_manifest, shard_file_name, shard_files, write_shards, Manifest,
+    ManifestEntry, MappedShard, Shard, ShardCheck, ShardFileInfo, ShardFileRecord, ShardSetStats,
+};

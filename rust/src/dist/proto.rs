@@ -49,6 +49,7 @@
 use crate::runtime::{ModelConfig, TrainOut};
 use crate::train::model::ModelKind;
 use crate::util::binio;
+use crate::util::hash::{crc32c, Crc32c};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
@@ -59,8 +60,13 @@ use std::os::unix::net::UnixStream;
 /// leads with the architecture kind tag (the `GnnModel` refactor), so a
 /// coordinator can drive GCN/GIN fleets and a stale worker binary fails
 /// the version handshake instead of misreading the frame. v3: liveness
-/// frames (`Ping`/`Pong`) for the fault-tolerant control plane.
-pub const PROTO_VERSION: u32 = 3;
+/// frames (`Ping`/`Pong`) for the fault-tolerant control plane. v4: the
+/// structured `Fault` control frame (a worker that finds its shard
+/// corrupt *reports* it instead of dying silently) and the Config's
+/// `wire_digests` flag, which arms an optional CRC-32C trailer on the
+/// two tensor-carrying frames (`Step`/`StepResult`). The trailer is off
+/// by default — the default wire bytes are unchanged from v3 framing.
+pub const PROTO_VERSION: u32 = 4;
 
 /// Sanity cap on a single frame payload (1 GiB). Applies to the two
 /// tensor-carrying frames (`Step`, `StepResult`).
@@ -81,6 +87,17 @@ pub const TAG_STEP_RESULT: u8 = 5;
 pub const TAG_SHUTDOWN: u8 = 6;
 pub const TAG_PING: u8 = 7;
 pub const TAG_PONG: u8 = 8;
+pub const TAG_FAULT: u8 = 9;
+
+/// [`Frame::Fault`] codes — how a worker classifies a local failure it
+/// reports instead of dying silently.
+/// The shard (or other persistent input) failed its integrity/structure
+/// checks: retrying on the same bytes cannot help, the coordinator must
+/// abort and point the operator at `cofree fsck`.
+pub const FAULT_CORRUPT_DATA: u8 = 1;
+/// A transient local failure (I/O interruption, resource pressure):
+/// recycling the worker may succeed.
+pub const FAULT_TRANSIENT: u8 = 2;
 
 /// Parse and validate a 9-byte frame header: returns `(tag, payload_len)`.
 /// The single chokepoint for header sanity on both coordinator and worker
@@ -95,7 +112,7 @@ pub(crate) fn decode_header(header: &[u8; 9]) -> Result<(u8, u64)> {
     let len = u64::from_le_bytes(len_bytes);
     let cap = match tag {
         TAG_STEP | TAG_STEP_RESULT => MAX_FRAME,
-        TAG_HELLO | TAG_CONFIG | TAG_META | TAG_SHUTDOWN | TAG_PING | TAG_PONG => {
+        TAG_HELLO | TAG_CONFIG | TAG_META | TAG_SHUTDOWN | TAG_PING | TAG_PONG | TAG_FAULT => {
             MAX_CONTROL_FRAME
         }
         other => bail!("unknown frame tag {other} (header {header:02x?})"),
@@ -206,7 +223,17 @@ impl Write for Stream {
 #[derive(Clone, Debug)]
 pub enum Frame {
     Hello { proto_version: u32, rank: u32, num_parts: u32 },
-    Config { seed: u64, dropedge_k: u32, dropedge_ratio: f64, model: ModelConfig },
+    Config {
+        seed: u64,
+        dropedge_k: u32,
+        dropedge_ratio: f64,
+        model: ModelConfig,
+        /// Arm the CRC-32C trailer on `Step`/`StepResult` payloads for
+        /// this session (`--wire-digests`). Off by default: the default
+        /// wire bytes — and therefore the measured wire bound — are
+        /// unchanged.
+        wire_digests: bool,
+    },
     Meta { local_train_weight: f64, tmask_sum: f64, num_masks: u32 },
     Step { pick: Option<usize>, params: Vec<Vec<f32>> },
     StepResult { out: TrainOut, compute_seconds: f64 },
@@ -216,6 +243,13 @@ pub enum Frame {
     /// never satisfy a newer probe.
     Ping { nonce: u64 },
     Pong { nonce: u64 },
+    /// Structured failure report (worker → coordinator, in place of the
+    /// frame the coordinator was expecting). `code` is one of the
+    /// `FAULT_*` constants; `detail` names the file and error so the
+    /// coordinator can tell an operator *which rank, which file, why* —
+    /// and decide between aborting (corruption is permanent) and
+    /// recycling the worker (transient).
+    Fault { code: u8, detail: String },
 }
 
 fn put_tensor_list(w: &mut impl Write, tensors: &[Vec<f32>]) -> Result<()> {
@@ -270,11 +304,12 @@ fn encode_payload(frame: &Frame, payload: &mut Vec<u8>) -> Result<u8> {
             binio::write_u32(payload, *num_parts)?;
             TAG_HELLO
         }
-        Frame::Config { seed, dropedge_k, dropedge_ratio, model } => {
+        Frame::Config { seed, dropedge_k, dropedge_ratio, model, wire_digests } => {
             binio::write_u64(payload, *seed)?;
             binio::write_u32(payload, *dropedge_k)?;
             binio::write_f64(payload, *dropedge_ratio)?;
             put_model(payload, model)?;
+            binio::write_u8(payload, u8::from(*wire_digests))?;
             TAG_CONFIG
         }
         Frame::Meta { local_train_weight, tmask_sum, num_masks } => {
@@ -308,6 +343,11 @@ fn encode_payload(frame: &Frame, payload: &mut Vec<u8>) -> Result<u8> {
         Frame::Pong { nonce } => {
             binio::write_u64(payload, *nonce)?;
             TAG_PONG
+        }
+        Frame::Fault { code, detail } => {
+            binio::write_u8(payload, *code)?;
+            binio::write_bytes(payload, detail.as_bytes())?;
+            TAG_FAULT
         }
     };
     Ok(tag)
@@ -351,11 +391,14 @@ impl Default for EncodedParams {
 
 /// Broadcast-side fast path: write a `Step` frame from a pre-encoded
 /// parameter payload (no per-worker re-serialization; header + body leave
-/// in one vectored write).
+/// in one vectored write). With `digests` (the session's negotiated
+/// `wire_digests`), a CRC-32C trailer over the payload is appended — the
+/// declared length includes it, so framing is unchanged.
 pub fn write_step_encoded(
     w: &mut impl Write,
     pick: Option<usize>,
     params: &EncodedParams,
+    digests: bool,
 ) -> Result<u64> {
     let pick_code: i64 = match pick {
         None => -1,
@@ -363,27 +406,41 @@ pub fn write_step_encoded(
     };
     let mut header = [0u8; 17];
     header[0] = TAG_STEP;
-    let len = 8 + params.body.len() as u64;
+    let trailer = if digests { 4u64 } else { 0 };
+    let len = 8 + params.body.len() as u64 + trailer;
     header[1..9].copy_from_slice(&len.to_le_bytes());
     header[9..17].copy_from_slice(&(pick_code as u64).to_le_bytes());
     write_all_vectored2(w, &header, &params.body)?;
+    if digests {
+        let mut h = Crc32c::new();
+        h.update(&header[9..17]);
+        h.update(&params.body);
+        w.write_all(&h.finish().to_le_bytes())?;
+    }
     w.flush()?;
     Ok(9 + len)
 }
 
 /// One-off `Step` write (tests; single-worker sends). Byte-identical to
 /// [`write_step_encoded`] with a fresh [`EncodedParams`].
-pub fn write_step(w: &mut impl Write, pick: Option<usize>, params: &[Vec<f32>]) -> Result<u64> {
-    write_step_encoded(w, pick, &EncodedParams::encode(params)?)
+pub fn write_step(
+    w: &mut impl Write,
+    pick: Option<usize>,
+    params: &[Vec<f32>],
+    digests: bool,
+) -> Result<u64> {
+    write_step_encoded(w, pick, &EncodedParams::encode(params)?, digests)
 }
 
 /// Worker-side fast path: write a `StepResult` frame through a reusable
-/// payload buffer (byte-identical to `write_frame(Frame::StepResult)`).
+/// payload buffer (byte-identical to `write_frame(Frame::StepResult)`
+/// when `digests` is off; with it on, a CRC-32C trailer is appended).
 pub fn write_step_result_buffered(
     w: &mut impl Write,
     out: &TrainOut,
     compute_seconds: f64,
     payload: &mut Vec<u8>,
+    digests: bool,
 ) -> Result<u64> {
     payload.clear();
     binio::write_f32(payload, out.loss_sum)?;
@@ -391,7 +448,27 @@ pub fn write_step_result_buffered(
     binio::write_f32(payload, out.correct)?;
     binio::write_f64(payload, compute_seconds)?;
     put_tensor_list(payload, &out.grads)?;
+    if digests {
+        let d = crc32c(payload);
+        payload.extend_from_slice(&d.to_le_bytes());
+    }
     write_raw(w, TAG_STEP_RESULT, payload)
+}
+
+/// Split and verify the CRC-32C trailer of a digested tensor-frame
+/// payload; returns the payload proper. A mismatch means the bytes were
+/// corrupted in flight (or the peers disagree about `wire_digests`).
+fn strip_verified_trailer<'a>(payload: &'a [u8], what: &str) -> Result<&'a [u8]> {
+    ensure!(payload.len() >= 4, "{what} frame too short to carry its digest trailer");
+    let (head, tail) = payload.split_at(payload.len() - 4);
+    let want = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+    let got = crc32c(head);
+    ensure!(
+        got == want,
+        "{what} frame digest mismatch: stored {want:#010x}, computed {got:#010x} — \
+         the payload was corrupted in flight"
+    );
+    Ok(head)
 }
 
 fn write_raw(w: &mut impl Write, tag: u8, payload: &[u8]) -> Result<u64> {
@@ -484,6 +561,11 @@ pub fn decode_frame(tag: u8, payload: &[u8]) -> Result<Frame> {
             dropedge_k: binio::read_u32(&mut p)?,
             dropedge_ratio: binio::read_f64(&mut p)?,
             model: get_model(&mut p)?,
+            wire_digests: match binio::read_u8(&mut p)? {
+                0 => false,
+                1 => true,
+                other => bail!("corrupt Config frame: wire_digests flag {other}"),
+            },
         },
         TAG_META => Frame::Meta {
             local_train_weight: binio::read_f64(&mut p)?,
@@ -511,6 +593,16 @@ pub fn decode_frame(tag: u8, payload: &[u8]) -> Result<Frame> {
         TAG_SHUTDOWN => Frame::Shutdown,
         TAG_PING => Frame::Ping { nonce: binio::read_u64(&mut p)? },
         TAG_PONG => Frame::Pong { nonce: binio::read_u64(&mut p)? },
+        TAG_FAULT => {
+            let code = binio::read_u8(&mut p)?;
+            ensure!(
+                code == FAULT_CORRUPT_DATA || code == FAULT_TRANSIENT,
+                "corrupt Fault frame: unknown code {code}"
+            );
+            let detail = String::from_utf8(binio::read_bytes(&mut p)?)
+                .context("Fault frame detail is not UTF-8")?;
+            Frame::Fault { code, detail }
+        }
         other => bail!("unknown frame tag {other}"),
     };
     ensure!(p.is_empty(), "frame tag {tag}: {} trailing payload bytes", p.len());
@@ -545,8 +637,15 @@ fn get_f32s_into(p: &mut &[u8], out: &mut Vec<f32>) -> Result<()> {
 }
 
 /// Decode a `Step` payload into reused parameter tensors; returns the mask
-/// pick. Allocation-free once the tensor shapes are established.
-pub fn decode_step_into(payload: &[u8], params: &mut Vec<Vec<f32>>) -> Result<Option<usize>> {
+/// pick. Allocation-free once the tensor shapes are established. `digests`
+/// must match the session's negotiated `wire_digests`: when set, the
+/// payload's CRC-32C trailer is verified and stripped first.
+pub fn decode_step_into(
+    payload: &[u8],
+    params: &mut Vec<Vec<f32>>,
+    digests: bool,
+) -> Result<Option<usize>> {
+    let payload = if digests { strip_verified_trailer(payload, "Step")? } else { payload };
     let mut p: &[u8] = payload;
     let pick_code = binio::read_u64(&mut p)? as i64;
     ensure!(pick_code >= -1, "corrupt Step frame: pick {pick_code}");
@@ -564,8 +663,10 @@ pub fn decode_step_into(payload: &[u8], params: &mut Vec<Vec<f32>>) -> Result<Op
 
 /// Decode a `StepResult` payload into a reused [`TrainOut`]; returns the
 /// worker's compute seconds. Allocation-free once the gradient shapes are
-/// established.
-pub fn decode_step_result_into(payload: &[u8], out: &mut TrainOut) -> Result<f64> {
+/// established. With `digests`, the payload's CRC-32C trailer is verified
+/// and stripped first.
+pub fn decode_step_result_into(payload: &[u8], out: &mut TrainOut, digests: bool) -> Result<f64> {
+    let payload = if digests { strip_verified_trailer(payload, "StepResult")? } else { payload };
     let mut p: &[u8] = payload;
     out.loss_sum = binio::read_f32(&mut p)?;
     out.weight_sum = binio::read_f32(&mut p)?;
@@ -677,6 +778,7 @@ mod tests {
                 dropedge_k: 0,
                 dropedge_ratio: 0.0,
                 model,
+                wire_digests: false,
             }) {
                 Frame::Config { model: m, .. } => assert_eq!(m, model),
                 other => panic!("{other:?}"),
@@ -699,10 +801,12 @@ mod tests {
             dropedge_k: 5,
             dropedge_ratio: 0.25,
             model,
+            wire_digests: true,
         }) {
-            Frame::Config { seed, dropedge_k, dropedge_ratio, model: m } => {
+            Frame::Config { seed, dropedge_k, dropedge_ratio, model: m, wire_digests } => {
                 assert_eq!((seed, dropedge_k, dropedge_ratio), (42, 5, 0.25));
                 assert_eq!(m, model);
+                assert!(wire_digests);
             }
             other => panic!("{other:?}"),
         }
@@ -724,7 +828,7 @@ mod tests {
         let mut a = Vec::new();
         write_frame(&mut a, &Frame::Step { pick: Some(2), params: params.clone() }).unwrap();
         let mut b = Vec::new();
-        write_step(&mut b, Some(2), &params).unwrap();
+        write_step(&mut b, Some(2), &params, false).unwrap();
         assert_eq!(a, b, "fast path must emit identical bytes");
         let mut r: &[u8] = &a;
         match read_frame(&mut r).unwrap().0 {
@@ -736,7 +840,7 @@ mod tests {
         }
         // pick = None encodes as -1.
         let mut c = Vec::new();
-        write_step(&mut c, None, &params).unwrap();
+        write_step(&mut c, None, &params, false).unwrap();
         let mut r: &[u8] = &c;
         match read_frame(&mut r).unwrap().0 {
             Frame::Step { pick, .. } => assert_eq!(pick, None),
@@ -783,7 +887,7 @@ mod tests {
                 .iter()
                 .map(|&len| (0..len).map(|i| (round as f32) + i as f32 * 0.5).collect())
                 .collect();
-            write_step(&mut wire, Some(round as usize % 3), &params).unwrap();
+            write_step(&mut wire, Some(round as usize % 3), &params, false).unwrap();
             sent.push(params);
         }
         let mut r: &[u8] = &wire;
@@ -794,7 +898,7 @@ mod tests {
         for (round, want) in sent.iter().enumerate() {
             let (tag, payload, _) = read_frame_into(&mut r, &mut fb).unwrap();
             assert_eq!(tag, TAG_STEP);
-            let pick = decode_step_into(payload, &mut decoded).unwrap();
+            let pick = decode_step_into(payload, &mut decoded, false).unwrap();
             assert_eq!(pick, Some(round % 3));
             assert_eq!(&decoded, want, "round {round}");
             // Frames are same-sized: after the first frame the payload
@@ -828,7 +932,7 @@ mod tests {
             .unwrap();
         let mut b = Vec::new();
         let mut scratch = Vec::new();
-        write_step_result_buffered(&mut b, &out, 0.5, &mut scratch).unwrap();
+        write_step_result_buffered(&mut b, &out, 0.5, &mut scratch, false).unwrap();
         assert_eq!(a, b, "buffered writer must emit identical bytes");
         // And the in-place decoder reads it back bit-exactly into a reused
         // TrainOut.
@@ -837,7 +941,7 @@ mod tests {
         let (tag, payload, _) = read_frame_into(&mut r, &mut fb).unwrap();
         assert_eq!(tag, TAG_STEP_RESULT);
         let mut got = TrainOut::default();
-        let secs = decode_step_result_into(payload, &mut got).unwrap();
+        let secs = decode_step_result_into(payload, &mut got, false).unwrap();
         assert_eq!(secs, 0.5);
         assert_eq!(got.grads, out.grads);
         assert_eq!(got.loss_sum, out.loss_sum);
@@ -885,7 +989,7 @@ mod tests {
         };
         assert_eq!(wire_len as usize, wire.len());
         let mut got = TrainOut::default();
-        let secs = decode_step_result_into(fb.payload(), &mut got).unwrap();
+        let secs = decode_step_result_into(fb.payload(), &mut got, false).unwrap();
         assert_eq!(secs, 2.0);
         assert_eq!(got.grads, out.grads);
     }
@@ -909,6 +1013,82 @@ mod tests {
             Frame::Pong { nonce } => assert_eq!(nonce, u64::MAX),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn fault_frame_roundtrip_and_bad_code_rejected() {
+        for code in [FAULT_CORRUPT_DATA, FAULT_TRANSIENT] {
+            let detail = format!("shard_000003.bin: section `edges` digest mismatch ({code})");
+            match roundtrip(&Frame::Fault { code, detail: detail.clone() }) {
+                Frame::Fault { code: c, detail: d } => {
+                    assert_eq!(c, code);
+                    assert_eq!(d, detail);
+                }
+                other => panic!("{other:?}"),
+            }
+        }
+        // Unknown fault codes must be rejected at decode time.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Fault { code: FAULT_TRANSIENT, detail: "x".into() })
+            .unwrap();
+        buf[9] = 0xEE; // first payload byte is the code
+        let mut r: &[u8] = &buf;
+        let err = read_frame(&mut r).unwrap_err().to_string();
+        assert!(err.contains("unknown code"), "{err}");
+    }
+
+    /// The negotiated `wire_digests` trailer: roundtrips cleanly, and any
+    /// flipped bit in the payload (or the trailer itself) is detected as a
+    /// structured digest-mismatch error — never a silent bad decode.
+    #[test]
+    fn wire_digest_trailer_roundtrips_and_catches_corruption() {
+        let params = vec![vec![1.0f32, -2.5, 3.25], vec![0.0, 4.0e-3]];
+        let mut plain = Vec::new();
+        write_step(&mut plain, Some(1), &params, false).unwrap();
+        let mut wire = Vec::new();
+        write_step(&mut wire, Some(1), &params, true).unwrap();
+        assert_eq!(wire.len(), plain.len() + 4, "trailer adds exactly 4 bytes");
+        assert_eq!(wire[9..17], plain[9..17], "pick bytes unchanged");
+
+        let mut fb = FrameBuf::new();
+        let mut r: &[u8] = &wire;
+        let (tag, payload, _) = read_frame_into(&mut r, &mut fb).unwrap();
+        assert_eq!(tag, TAG_STEP);
+        let mut decoded: Vec<Vec<f32>> = Vec::new();
+        assert_eq!(decode_step_into(payload, &mut decoded, true).unwrap(), Some(1));
+        assert_eq!(decoded, params);
+        // A digested payload read without digests fails on trailing bytes
+        // (no silent acceptance of a mismatched negotiation).
+        assert!(decode_step_into(payload, &mut decoded, false).is_err());
+
+        for i in 0..payload.len() {
+            let mut bad = payload.to_vec();
+            bad[i] ^= 0x04;
+            let err = decode_step_into(&bad, &mut decoded, true).unwrap_err().to_string();
+            assert!(err.contains("digest mismatch"), "flip at {i}: {err}");
+        }
+
+        // Same contract for StepResult.
+        let out = TrainOut {
+            loss_sum: 1.5,
+            weight_sum: 2.0,
+            correct: 3.0,
+            grads: vec![vec![0.25f32; 9], vec![-1.0]],
+        };
+        let mut b = Vec::new();
+        let mut scratch = Vec::new();
+        write_step_result_buffered(&mut b, &out, 0.5, &mut scratch, true).unwrap();
+        let mut r: &[u8] = &b;
+        let (tag, payload, _) = read_frame_into(&mut r, &mut fb).unwrap();
+        assert_eq!(tag, TAG_STEP_RESULT);
+        let mut got = TrainOut::default();
+        assert_eq!(decode_step_result_into(payload, &mut got, true).unwrap(), 0.5);
+        assert_eq!(got.grads, out.grads);
+        let mut bad = payload.to_vec();
+        let k = bad.len() - 2; // flip inside the trailer itself
+        bad[k] ^= 0x80;
+        let err = decode_step_result_into(&bad, &mut got, true).unwrap_err().to_string();
+        assert!(err.contains("digest mismatch"), "{err}");
     }
 
     fn header_bytes(tag: u8, len: u64) -> [u8; 9] {

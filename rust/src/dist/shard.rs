@@ -12,10 +12,13 @@
 //! round-trips bit-exactly, which is load-bearing for the cross-process
 //! determinism contract.
 //!
-//! Format (version 1, little-endian, shared [`binio`] header helpers):
+//! Format (version 2, little-endian, shared [`binio`] header helpers):
 //!
 //! ```text
 //! magic "COFREESH" | u32 version
+//! u32 file_digest            (CRC-32C of every byte after this field)
+//! u32 n_sections = 6 | u32×6 section digests (CRC-32C of each encoded
+//!                            section below, length prefix included)
 //! u32 part_id | u32 num_parts
 //! u32×4 model (layers, feat_dim, hidden, classes)
 //! u64 seed | u64 global_nodes | u64 global_edges
@@ -26,6 +29,18 @@
 //! u32s labels                (len n_local)
 //! bytes split masks          (len n_local)
 //! ```
+//!
+//! The whole-file digest makes a shard self-verifying with one checksum
+//! pass at load (`--no-verify` opts out); the per-section digests let
+//! `cofree fsck` name which array a corruption landed in. Version 1
+//! files (no digest block) still load, flagged `legacy-unverified`.
+//!
+//! **Durability contract:** every shard is written tmp-file → fsync →
+//! rename → directory fsync, and `manifest.json` — which records each
+//! file's byte length and full-file CRC — is written the same way,
+//! **last**. The manifest is the store's completion marker: a crash at
+//! any point leaves either a complete store or a directory with no (or
+//! the previous) manifest, never a partial store that passes for done.
 
 use crate::graph::{Dataset, Graph, NodeData};
 use crate::partition::VertexCut;
@@ -33,14 +48,39 @@ use crate::runtime::ModelConfig;
 use crate::train::engine::model_config;
 use crate::train::model::ModelKind;
 use crate::train::tensorize::{tensorize_subgraph, tensorize_subgraph_ref, NodeDataRef, TrainBatch};
-use crate::util::binio;
+use crate::util::binio::{self, Integrity, Verify};
+use crate::util::hash::{crc32c, HashingReader, HashingWriter};
+use crate::util::json::{self, Json};
 use crate::util::mmap::Mmap;
 use anyhow::{bail, ensure, Context, Result};
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 pub const SHARD_MAGIC: &[u8; 8] = b"COFREESH";
-pub const SHARD_VERSION: u32 = 1;
+pub const SHARD_VERSION: u32 = 2;
+
+/// Array section names, in file order — digest bookkeeping and fsck
+/// reporting use the same table.
+pub const SHARD_SECTIONS: [&str; 6] =
+    ["global_ids", "edges", "dar", "features", "labels", "split"];
+
+/// One array section staged for emission (so the digest passes and the
+/// write pass serialize identically by construction).
+enum Sect<'a> {
+    U32s(&'a [u32]),
+    F32s(&'a [f32]),
+    Bytes(&'a [u8]),
+}
+
+impl Sect<'_> {
+    fn emit(&self, w: &mut impl Write) -> Result<()> {
+        match self {
+            Sect::U32s(xs) => binio::write_u32s(w, xs),
+            Sect::F32s(xs) => binio::write_f32s(w, xs),
+            Sect::Bytes(xs) => binio::write_bytes(w, xs),
+        }
+    }
+}
 
 /// One partition's self-contained training data, as stored on disk.
 #[derive(Clone, Debug)]
@@ -66,6 +106,14 @@ pub struct Shard {
 /// Canonical shard file name for a partition.
 pub fn shard_file_name(part_id: usize) -> String {
     format!("shard_{part_id:04}.bin")
+}
+
+/// One shard file's write receipt: size and full-file CRC-32C (the
+/// digest `manifest.json` records and fsck recomputes from disk).
+#[derive(Clone, Copy, Debug)]
+pub struct ShardFileInfo {
+    pub bytes: u64,
+    pub crc32c: u32,
 }
 
 impl Shard {
@@ -103,80 +151,165 @@ impl Shard {
         }
     }
 
-    /// Write to `path`; returns bytes written.
-    pub fn write(&self, path: &Path) -> Result<u64> {
+    /// The scalar header fields (everything between the digest block and
+    /// the first array section), in file order.
+    fn emit_scalars(&self, w: &mut impl Write) -> Result<()> {
+        binio::write_u32(w, self.part_id as u32)?;
+        binio::write_u32(w, self.num_parts as u32)?;
+        for d in [self.model.layers, self.model.feat_dim, self.model.hidden, self.model.classes] {
+            binio::write_u32(w, d as u32)?;
+        }
+        binio::write_u64(w, self.seed)?;
+        binio::write_u64(w, self.global_nodes as u64)?;
+        binio::write_u64(w, self.global_edges as u64)?;
+        Ok(())
+    }
+
+    /// Durably write to `path`: the image goes to a `.tmp` sibling, is
+    /// fsynced, renamed into place, and the directory entry fsynced — a
+    /// crash at any point leaves either the old file or the new one,
+    /// never a torn hybrid, and a failed write cleans up its temporary.
+    /// Returns the byte count and full-file CRC for the manifest.
+    pub fn write(&self, path: &Path) -> Result<ShardFileInfo> {
         let n_local = self.global_ids.len();
         ensure!(self.dar.len() == n_local, "dar length mismatch");
         ensure!(self.data.labels.len() == n_local, "labels length mismatch");
         ensure!(self.data.split.len() == n_local, "split length mismatch");
         ensure!(self.data.features.len() == n_local * self.data.dim, "features length mismatch");
-        let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
-        let mut w = BufWriter::new(f);
+        let flat: Vec<u32> = self.local.edges().iter().flat_map(|&(u, v)| [u, v]).collect();
+        let sections = [
+            Sect::U32s(&self.global_ids),
+            Sect::U32s(&flat),
+            Sect::F32s(&self.dar),
+            Sect::F32s(&self.data.features),
+            Sect::U32s(&self.data.labels),
+            Sect::Bytes(&self.data.split),
+        ];
+        // Digest pass 1: each encoded section (length prefix included).
+        let mut sec_digests = [0u32; 6];
+        for (d, s) in sec_digests.iter_mut().zip(&sections) {
+            let mut h = HashingWriter::new(std::io::sink());
+            s.emit(&mut h)?;
+            *d = h.digest();
+        }
+        // Digest pass 2: the whole-file digest covers every byte after
+        // the digest field itself — section count, section digests,
+        // scalar header, arrays — so one check at load catches any flip.
+        let file_digest = {
+            let mut h = HashingWriter::new(std::io::sink());
+            binio::write_u32(&mut h, sections.len() as u32)?;
+            for d in sec_digests {
+                binio::write_u32(&mut h, d)?;
+            }
+            self.emit_scalars(&mut h)?;
+            for s in &sections {
+                s.emit(&mut h)?;
+            }
+            h.digest()
+        };
+        // Write pass: tmp → fsync → rename → dir fsync.
+        let tmp = binio::tmp_sibling(path);
+        let guard = binio::TmpGuard::new(tmp.clone());
+        let f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        let mut w = HashingWriter::new(BufWriter::new(f));
         binio::write_magic(&mut w, SHARD_MAGIC)?;
         binio::write_version(&mut w, SHARD_VERSION)?;
-        binio::write_u32(&mut w, self.part_id as u32)?;
-        binio::write_u32(&mut w, self.num_parts as u32)?;
-        for d in [self.model.layers, self.model.feat_dim, self.model.hidden, self.model.classes] {
-            binio::write_u32(&mut w, d as u32)?;
+        binio::write_u32(&mut w, file_digest)?;
+        binio::write_u32(&mut w, sections.len() as u32)?;
+        for d in sec_digests {
+            binio::write_u32(&mut w, d)?;
         }
-        binio::write_u64(&mut w, self.seed)?;
-        binio::write_u64(&mut w, self.global_nodes as u64)?;
-        binio::write_u64(&mut w, self.global_edges as u64)?;
-        binio::write_u32s(&mut w, &self.global_ids)?;
-        let flat: Vec<u32> = self.local.edges().iter().flat_map(|&(u, v)| [u, v]).collect();
-        binio::write_u32s(&mut w, &flat)?;
-        binio::write_f32s(&mut w, &self.dar)?;
-        binio::write_f32s(&mut w, &self.data.features)?;
-        binio::write_u32s(&mut w, &self.data.labels)?;
-        binio::write_bytes(&mut w, &self.data.split)?;
-        w.flush()?;
-        Ok(std::fs::metadata(path)?.len())
+        self.emit_scalars(&mut w)?;
+        for s in &sections {
+            s.emit(&mut w)?;
+        }
+        let (bytes, full_crc) = (w.written(), w.digest());
+        let mut bw = w.into_inner();
+        bw.flush().with_context(|| format!("flushing {tmp:?}"))?;
+        bw.get_ref().sync_all().with_context(|| format!("fsyncing {tmp:?}"))?;
+        binio::commit_replace(&tmp, path)?;
+        guard.disarm();
+        Ok(ShardFileInfo { bytes, crc32c: full_crc })
+    }
+
+    /// Stream a shard from `path` with full digest verification.
+    pub fn read(path: &Path) -> Result<Shard> {
+        Ok(Self::read_with(path, Verify::Full)?.0)
     }
 
     /// Stream a shard from `path`, rebuilding the local CSR from the sorted
     /// canonical edge list (the same construction the partitioner used, so
     /// the in-memory graph is byte-identical to the one that was written).
-    pub fn read(path: &Path) -> Result<Shard> {
+    ///
+    /// The whole-file digest is verified in the same streaming pass
+    /// (format v2); v1 files load flagged [`Integrity::LegacyUnverified`].
+    /// Errors name the file section and absolute byte offsets involved.
+    pub fn read_with(path: &Path, verify: Verify) -> Result<(Shard, Integrity)> {
         let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-        let mut r = BufReader::new(f);
+        let mut r = binio::Tracked::new(HashingReader::new(BufReader::new(f)));
         binio::expect_magic(&mut r, SHARD_MAGIC, "cofree partition shard")
             .with_context(|| format!("reading {path:?}"))?;
-        binio::expect_version(&mut r, SHARD_VERSION, "partition shard")?;
-        let part_id = binio::read_u32(&mut r)? as usize;
-        let num_parts = binio::read_u32(&mut r)? as usize;
-        // Shards store dims only — the arrays are architecture-agnostic;
-        // the model kind travels in the wire Config frame. The nominal
-        // kind here is the default (Sage); consumers compare dims.
-        let model = ModelConfig {
-            kind: ModelKind::Sage,
-            layers: binio::read_u32(&mut r)? as usize,
-            feat_dim: binio::read_u32(&mut r)? as usize,
-            hidden: binio::read_u32(&mut r)? as usize,
-            classes: binio::read_u32(&mut r)? as usize,
+        let version = binio::expect_version_in(&mut r, &[1, SHARD_VERSION], "partition shard")?;
+        let stored_digest = if version >= 2 {
+            let d = binio::read_u32(&mut r).context("reading shard file digest")?;
+            // The stored digest covers every byte from here to EOF.
+            r.get_mut().reset();
+            r.section("digest table", |r| {
+                let n = binio::read_u32(r)? as usize;
+                ensure!(
+                    n == SHARD_SECTIONS.len(),
+                    "shard digest table lists {n} sections, expected {}",
+                    SHARD_SECTIONS.len()
+                );
+                for _ in 0..n {
+                    binio::read_u32(r)?; // per-section digests (fsck checks these)
+                }
+                Ok(())
+            })?;
+            Some(d)
+        } else {
+            None
         };
-        let seed = binio::read_u64(&mut r)?;
-        let global_nodes = binio::read_u64(&mut r)? as usize;
-        let global_edges = binio::read_u64(&mut r)? as usize;
+        let (part_id, num_parts, model, seed, global_nodes, global_edges) =
+            r.section("header", |r| {
+                let part_id = binio::read_u32(r)? as usize;
+                let num_parts = binio::read_u32(r)? as usize;
+                // Shards store dims only — the arrays are
+                // architecture-agnostic; the model kind travels in the
+                // wire Config frame. The nominal kind here is the
+                // default (Sage); consumers compare dims.
+                let model = ModelConfig {
+                    kind: ModelKind::Sage,
+                    layers: binio::read_u32(r)? as usize,
+                    feat_dim: binio::read_u32(r)? as usize,
+                    hidden: binio::read_u32(r)? as usize,
+                    classes: binio::read_u32(r)? as usize,
+                };
+                let seed = binio::read_u64(r)?;
+                let global_nodes = binio::read_u64(r)? as usize;
+                let global_edges = binio::read_u64(r)? as usize;
+                Ok((part_id, num_parts, model, seed, global_nodes, global_edges))
+            })?;
         ensure!(part_id < num_parts, "shard part_id {part_id} out of range {num_parts}");
-        let global_ids = binio::read_u32s(&mut r).context("reading id table")?;
-        let flat = binio::read_u32s(&mut r).context("reading local edges")?;
+        let global_ids = r.section("global_ids", binio::read_u32s)?;
+        let flat = r.section("edges", binio::read_u32s)?;
         ensure!(flat.len() % 2 == 0, "corrupt local edge array: odd endpoint count");
         let n_local = global_ids.len();
         let edges: Vec<(u32, u32)> = flat.chunks_exact(2).map(|c| (c[0], c[1])).collect();
-        for (k, &(u, v)) in edges.iter().enumerate() {
-            ensure!(
-                u < v && (v as usize) < n_local,
-                "corrupt local edge {k}: ({u},{v}) with n_local {n_local}"
-            );
-            if k > 0 {
-                ensure!(edges[k - 1] < edges[k], "local edges not sorted/unique at {k}");
-            }
-        }
+        check_edges(&edges, n_local)?;
         let local = Graph::from_sorted_edges(n_local, edges);
-        let dar = binio::read_f32s(&mut r).context("reading dar weights")?;
-        let features = binio::read_f32s(&mut r).context("reading features")?;
-        let labels = binio::read_u32s(&mut r).context("reading labels")?;
-        let split = binio::read_bytes(&mut r).context("reading split masks")?;
+        let dar = r.section("dar", binio::read_f32s)?;
+        let features = r.section("features", binio::read_f32s)?;
+        let labels = r.section("labels", binio::read_u32s)?;
+        let split = r.section("split", binio::read_bytes)?;
+        // Trailing bytes would silently escape the digest: refuse them.
+        let mut probe = [0u8; 1];
+        let extra = r.read(&mut probe).with_context(|| format!("probing end of {path:?}"))?;
+        ensure!(
+            extra == 0,
+            "corrupt shard: trailing bytes after split masks at byte offset {}",
+            r.offset() - 1
+        );
         ensure!(dar.len() == n_local, "dar length {} != {n_local}", dar.len());
         ensure!(labels.len() == n_local, "labels length {} != {n_local}", labels.len());
         ensure!(split.len() == n_local, "split length {} != {n_local}", split.len());
@@ -186,24 +319,40 @@ impl Shard {
             features.len(),
             model.feat_dim
         );
-        Ok(Shard {
-            part_id,
-            num_parts,
-            model,
-            seed,
-            global_nodes,
-            global_edges,
-            global_ids,
-            local,
-            dar,
-            data: NodeData {
-                features,
-                dim: model.feat_dim,
-                labels,
-                num_classes: model.classes,
-                split,
+        let integrity = match (stored_digest, verify) {
+            (Some(want), Verify::Full) => {
+                let got = r.get_mut().digest();
+                ensure!(
+                    got == want,
+                    "shard file digest mismatch in {path:?}: stored {want:#010x}, \
+                     computed {got:#010x} — the bytes are corrupt"
+                );
+                Integrity::Verified
+            }
+            (Some(_), Verify::Skip) => Integrity::SkippedByRequest,
+            (None, _) => Integrity::LegacyUnverified,
+        };
+        Ok((
+            Shard {
+                part_id,
+                num_parts,
+                model,
+                seed,
+                global_nodes,
+                global_edges,
+                global_ids,
+                local,
+                dar,
+                data: NodeData {
+                    features,
+                    dim: model.feat_dim,
+                    labels,
+                    num_classes: model.classes,
+                    split,
+                },
             },
-        })
+            integrity,
+        ))
     }
 
     /// Tensorize this shard at a padded shape — produces the exact batch
@@ -223,10 +372,24 @@ impl Shard {
 /// Byte range of one array inside a mapped shard file.
 type ByteRange = (usize, usize);
 
+/// The stored digest block of a v2+ shard image.
+#[derive(Clone, Copy, Debug)]
+struct ShardDigests {
+    /// Whole-file digest (covers `body_start..EOF`).
+    file: u32,
+    /// Offset the whole-file digest's coverage starts at (the byte
+    /// right after the digest field).
+    body_start: usize,
+    /// Per-section digests, [`SHARD_SECTIONS`] order.
+    sections: [u32; 6],
+}
+
 /// Parsed header + array ranges of a shard byte image (shared validation
 /// for the zero-copy path; the layout is the one documented at the top of
 /// this module and written by [`Shard::write`]).
 struct ParsedShard {
+    version: u32,
+    digests: Option<ShardDigests>,
     part_id: usize,
     num_parts: usize,
     model: ModelConfig,
@@ -242,6 +405,48 @@ struct ParsedShard {
     split: ByteRange,
 }
 
+impl ParsedShard {
+    /// Section byte spans *including* each section's 8-byte length
+    /// prefix — the exact spans the per-section digests were computed
+    /// over — in [`SHARD_SECTIONS`] order.
+    fn section_spans(&self) -> [ByteRange; 6] {
+        [self.global_ids, self.edges, self.dar, self.features, self.labels, self.split]
+            .map(|(start, end)| (start - 8, end))
+    }
+}
+
+/// Validate a decoded local edge list: strictly sorted, unique, `u < v`,
+/// endpoints in range. Shared by every load path and fsck.
+fn check_edges(edges: &[(u32, u32)], n_local: usize) -> Result<()> {
+    for (k, &(u, v)) in edges.iter().enumerate() {
+        ensure!(
+            u < v && (v as usize) < n_local,
+            "corrupt local edge {k}: ({u},{v}) with n_local {n_local}"
+        );
+        if k > 0 {
+            ensure!(edges[k - 1] < edges[k], "local edges not sorted/unique at {k}");
+        }
+    }
+    Ok(())
+}
+
+/// Decode a little-endian endpoint-pair byte image into an edge list and
+/// validate it (the byte length was already checked to be a multiple of
+/// 8 by the layout parse).
+fn decode_checked_edges(flat: &[u8], n_local: usize) -> Result<Vec<(u32, u32)>> {
+    let edges: Vec<(u32, u32)> = flat
+        .chunks_exact(8)
+        .map(|c| {
+            (
+                u32::from_le_bytes([c[0], c[1], c[2], c[3]]),
+                u32::from_le_bytes([c[4], c[5], c[6], c[7]]),
+            )
+        })
+        .collect();
+    check_edges(&edges, n_local)?;
+    Ok(edges)
+}
+
 /// Read a `u64`-length-prefixed array's byte range off the cursor.
 fn take_array(
     bytes: &[u8],
@@ -249,13 +454,16 @@ fn take_array(
     elem: usize,
     what: &str,
 ) -> Result<(usize, ByteRange)> {
-    let len = binio::read_u64(r).with_context(|| format!("reading {what} length"))? as usize;
+    let at = bytes.len() - r.len();
+    let len = binio::read_u64(r)
+        .with_context(|| format!("reading {what} length at byte offset {at}"))?
+        as usize;
     let nbytes = len
         .checked_mul(elem)
-        .with_context(|| format!("corrupt {what}: length {len} overflows"))?;
+        .with_context(|| format!("corrupt {what}: length {len} at byte offset {at} overflows"))?;
     ensure!(
         r.len() >= nbytes,
-        "truncated shard: {what} wants {nbytes} bytes, {} remain",
+        "truncated shard: {what} at byte offset {at} wants {nbytes} bytes, {} remain",
         r.len()
     );
     let start = bytes.len() - r.len();
@@ -267,7 +475,24 @@ fn parse_shard_bytes(bytes: &[u8], path: &Path) -> Result<ParsedShard> {
     let mut r: &[u8] = bytes;
     binio::expect_magic(&mut r, SHARD_MAGIC, "cofree partition shard")
         .with_context(|| format!("reading {path:?}"))?;
-    binio::expect_version(&mut r, SHARD_VERSION, "partition shard")?;
+    let version = binio::expect_version_in(&mut r, &[1, SHARD_VERSION], "partition shard")?;
+    let digests = if version >= 2 {
+        let file = binio::read_u32(&mut r).context("reading shard file digest")?;
+        let body_start = bytes.len() - r.len();
+        let n = binio::read_u32(&mut r).context("reading shard section count")? as usize;
+        ensure!(
+            n == SHARD_SECTIONS.len(),
+            "shard digest table lists {n} sections, expected {}",
+            SHARD_SECTIONS.len()
+        );
+        let mut sections = [0u32; 6];
+        for d in sections.iter_mut() {
+            *d = binio::read_u32(&mut r).context("reading shard section digest")?;
+        }
+        Some(ShardDigests { file, body_start, sections })
+    } else {
+        None
+    };
     let part_id = binio::read_u32(&mut r)? as usize;
     let num_parts = binio::read_u32(&mut r)? as usize;
     let model = ModelConfig {
@@ -298,6 +523,8 @@ fn parse_shard_bytes(bytes: &[u8], path: &Path) -> Result<ParsedShard> {
         model.feat_dim
     );
     Ok(ParsedShard {
+        version,
+        digests,
         part_id,
         num_parts,
         model,
@@ -312,6 +539,40 @@ fn parse_shard_bytes(bytes: &[u8], path: &Path) -> Result<ParsedShard> {
         labels,
         split,
     })
+}
+
+/// Verify a parsed shard image's stored digests: the whole-file digest
+/// always (one CRC pass), the per-section digests when `localize` is set
+/// (fsck uses this to name the corrupt array). Returns how many section
+/// digests were checked; 0 for legacy v1 images, which have none.
+fn verify_shard_digests(bytes: &[u8], parsed: &ParsedShard, localize: bool) -> Result<usize> {
+    let Some(d) = parsed.digests else {
+        return Ok(0);
+    };
+    let got = crc32c(&bytes[d.body_start..]);
+    ensure!(
+        got == d.file,
+        "shard file digest mismatch: stored {:#010x}, computed {got:#010x} — the bytes are corrupt",
+        d.file
+    );
+    if !localize {
+        return Ok(0);
+    }
+    let mut checked = 0usize;
+    for ((span, want), name) in
+        parsed.section_spans().iter().zip(d.sections).zip(SHARD_SECTIONS)
+    {
+        let got = crc32c(&bytes[span.0..span.1]);
+        ensure!(
+            got == want,
+            "shard section `{name}` digest mismatch (byte offsets {}..{}): \
+             stored {want:#010x}, computed {got:#010x}",
+            span.0,
+            span.1
+        );
+        checked += 1;
+    }
+    Ok(checked)
 }
 
 /// Alignment-checked reinterpretation of a little-endian byte range as a
@@ -373,36 +634,39 @@ pub struct MappedShard {
     /// canonical edge list with the same `from_sorted_edges` construction
     /// the partitioner used.
     pub local: Graph,
+    integrity: Integrity,
     arrays: ShardArrays,
 }
 
 impl MappedShard {
-    /// Open `path` through the zero-copy path (with portable fallback).
+    /// Open `path` through the zero-copy path (with portable fallback),
+    /// verifying the whole-file digest.
     pub fn open(path: &Path) -> Result<MappedShard> {
+        Self::open_with(path, Verify::Full)
+    }
+
+    /// Open `path`, controlling digest verification: [`Verify::Full`]
+    /// runs one CRC pass over the mapping before any array is trusted;
+    /// [`Verify::Skip`] (the `--no-verify` path) trusts the bytes as-is.
+    /// Legacy v1 files carry no digest and load flagged
+    /// [`Integrity::LegacyUnverified`] either way.
+    pub fn open_with(path: &Path, verify: Verify) -> Result<MappedShard> {
         let map = Mmap::open(path)?;
         let parsed = parse_shard_bytes(map.bytes(), path)?;
+        let integrity = match (parsed.digests, verify) {
+            (Some(_), Verify::Full) => {
+                verify_shard_digests(map.bytes(), &parsed, false)
+                    .with_context(|| format!("verifying {path:?}"))?;
+                Integrity::Verified
+            }
+            (Some(_), Verify::Skip) => Integrity::SkippedByRequest,
+            (None, _) => Integrity::LegacyUnverified,
+        };
         // Decode the edge list (endian-safe per-element reads) and rebuild
         // the CSR exactly like Shard::read does.
         let flat = &map.bytes()[parsed.edges.0..parsed.edges.1];
         let n_local = parsed.n_local;
-        let edges: Vec<(u32, u32)> = flat
-            .chunks_exact(8)
-            .map(|c| {
-                (
-                    u32::from_le_bytes([c[0], c[1], c[2], c[3]]),
-                    u32::from_le_bytes([c[4], c[5], c[6], c[7]]),
-                )
-            })
-            .collect();
-        for (k, &(u, v)) in edges.iter().enumerate() {
-            ensure!(
-                u < v && (v as usize) < n_local,
-                "corrupt local edge {k}: ({u},{v}) with n_local {n_local}"
-            );
-            if k > 0 {
-                ensure!(edges[k - 1] < edges[k], "local edges not sorted/unique at {k}");
-            }
-        }
+        let edges = decode_checked_edges(flat, n_local)?;
         let local = Graph::from_sorted_edges(n_local, edges);
         // Zero-copy needs a little-endian target (the arrays are stored LE
         // and reinterpreted in place) and 4-byte-aligned ranges.
@@ -423,8 +687,9 @@ impl MappedShard {
                 split: parsed.split,
             }
         } else {
-            // Portable fallback: one streamed read, owned arrays.
-            let shard = Shard::read(path)?;
+            // Portable fallback: one streamed read, owned arrays (the
+            // digest was already verified — or skipped — above).
+            let shard = Shard::read_with(path, Verify::Skip)?.0;
             ShardArrays::Owned {
                 global_ids: shard.global_ids,
                 dar: shard.dar,
@@ -441,8 +706,14 @@ impl MappedShard {
             global_nodes: parsed.global_nodes,
             global_edges: parsed.global_edges,
             local,
+            integrity,
             arrays,
         })
+    }
+
+    /// How the bytes backing this shard were vetted at open.
+    pub fn integrity(&self) -> Integrity {
+        self.integrity
     }
 
     /// Whether the arrays are truly borrowed from the mapping.
@@ -543,16 +814,31 @@ impl MappedShard {
     }
 }
 
+/// One row of a shard store's write receipt (and of `manifest.json`).
+#[derive(Clone, Debug)]
+pub struct ShardFileRecord {
+    pub name: String,
+    pub bytes: u64,
+    /// Full-file CRC-32C, recomputable from the raw bytes on disk.
+    pub crc32c: u32,
+}
+
 /// Aggregate output of [`write_shards`].
 #[derive(Clone, Debug)]
 pub struct ShardSetStats {
-    /// `(file name, bytes)` per shard, part order.
-    pub files: Vec<(String, u64)>,
+    /// Per-shard write receipts, part order.
+    pub files: Vec<ShardFileRecord>,
     pub total_bytes: u64,
 }
 
 /// Write every partition of `vc` as a shard under `dir` (created if
 /// missing), plus `manifest.json`.
+///
+/// Every file goes through the durable tmp → fsync → rename path, and the
+/// manifest is written **last** — it is the store's completion marker, so
+/// a crash mid-write can never leave a partial store that passes for
+/// complete ([`read_manifest`] and fsck both treat a missing manifest as
+/// "incomplete store").
 pub fn write_shards(
     ds: &Dataset,
     vc: &VertexCut,
@@ -567,17 +853,19 @@ pub fn write_shards(
     for i in 0..vc.parts.len() {
         let shard = Shard::from_part(ds, vc, weights, i, seed);
         let name = shard_file_name(i);
-        let bytes = shard.write(&dir.join(&name))?;
-        total_bytes += bytes;
-        files.push((name, bytes));
+        let info = shard.write(&dir.join(&name))?;
+        total_bytes += info.bytes;
+        files.push(ShardFileRecord { name, bytes: info.bytes, crc32c: info.crc32c });
     }
     let stats = ShardSetStats { files, total_bytes };
     write_manifest(ds, vc, seed, dir, &stats)?;
     Ok(stats)
 }
 
-/// Write `manifest.json` (documentation + tooling aid; the shard files are
-/// self-describing, so nothing at train time parses this back).
+/// Write `manifest.json` — the store's completion marker and integrity
+/// index: one row per shard with its byte length and full-file CRC-32C.
+/// Written through the same durable tmp → fsync → rename path as the
+/// shards themselves, and always **after** every shard file is committed.
 fn write_manifest(
     ds: &Dataset,
     vc: &VertexCut,
@@ -587,15 +875,18 @@ fn write_manifest(
 ) -> Result<()> {
     let model = model_config(ds);
     let mut shards = String::new();
-    for (i, (name, bytes)) in stats.files.iter().enumerate() {
+    for (i, rec) in stats.files.iter().enumerate() {
         if i > 0 {
             shards.push_str(",\n    ");
         }
         let part = &vc.parts[i];
         shards.push_str(&format!(
-            "{{\"file\": \"{name}\", \"part_id\": {i}, \"nodes\": {}, \"edges\": {}, \"bytes\": {bytes}}}",
+            "{{\"file\": \"{}\", \"part_id\": {i}, \"nodes\": {}, \"edges\": {}, \"bytes\": {}, \"crc32c\": {}}}",
+            rec.name,
             part.num_nodes(),
-            part.num_edges()
+            part.num_edges(),
+            rec.bytes,
+            rec.crc32c
         ));
     }
     let json = format!(
@@ -610,9 +901,159 @@ fn write_manifest(
         ds.graph.num_edges(),
         stats.total_bytes
     );
-    let mut f = std::fs::File::create(dir.join("manifest.json"))?;
-    f.write_all(json.as_bytes())?;
+    let path = dir.join("manifest.json");
+    let tmp = binio::tmp_sibling(&path);
+    let guard = binio::TmpGuard::new(tmp.clone());
+    let f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(json.as_bytes())?;
+    w.flush()?;
+    w.get_ref().sync_all().with_context(|| format!("fsyncing {tmp:?}"))?;
+    binio::commit_replace(&tmp, &path)?;
+    guard.disarm();
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Manifest reading and per-file checking (the fsck primitives).
+// ---------------------------------------------------------------------------
+
+/// One `manifest.json` shard row, as read back from disk.
+#[derive(Clone, Debug)]
+pub struct ManifestEntry {
+    pub file: String,
+    pub part_id: u64,
+    pub bytes: u64,
+    /// Absent in stores written before format v2.
+    pub crc32c: Option<u32>,
+}
+
+/// The parts of `manifest.json` that integrity tooling consumes.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub format: String,
+    pub num_parts: u64,
+    pub total_bytes: u64,
+    pub shards: Vec<ManifestEntry>,
+}
+
+/// Read and validate `dir/manifest.json`. A missing manifest is an
+/// error by design: the manifest is written last, so its absence means
+/// the store never completed.
+pub fn read_manifest(dir: &Path) -> Result<Manifest> {
+    let path = dir.join("manifest.json");
+    let bytes = match std::fs::read(&path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            bail!(
+                "no manifest.json in {dir:?} — a shard dir without a manifest is \
+                 incomplete (`cofree shard` writes it last, after every shard file)"
+            );
+        }
+        Err(e) => return Err(e).with_context(|| format!("reading {path:?}")),
+    };
+    let doc = json::parse(&bytes).with_context(|| format!("parsing {path:?}"))?;
+    let format = doc
+        .get("format")
+        .and_then(Json::as_str)
+        .context("manifest missing string field `format`")?
+        .to_string();
+    let format_version: u64 = format
+        .strip_prefix("cofree-shards-v")
+        .and_then(|v| v.parse().ok())
+        .with_context(|| format!("manifest `format` is {format:?}, expected cofree-shards-v<N>"))?;
+    let num_parts =
+        doc.get("num_parts").and_then(Json::as_u64).context("manifest missing `num_parts`")?;
+    let total_bytes =
+        doc.get("total_bytes").and_then(Json::as_u64).context("manifest missing `total_bytes`")?;
+    let rows = doc.get("shards").and_then(Json::as_arr).context("manifest missing `shards`")?;
+    ensure!(
+        rows.len() as u64 == num_parts,
+        "manifest lists {} shards but num_parts is {num_parts}",
+        rows.len()
+    );
+    let mut shards = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let file = row
+            .get("file")
+            .and_then(Json::as_str)
+            .with_context(|| format!("manifest shard {i} missing `file`"))?
+            .to_string();
+        ensure!(
+            !file.is_empty() && !file.contains('/') && !file.contains('\\'),
+            "manifest shard {i} file name {file:?} must be a bare name"
+        );
+        let part_id = row
+            .get("part_id")
+            .and_then(Json::as_u64)
+            .with_context(|| format!("manifest shard {i} missing `part_id`"))?;
+        let bytes = row
+            .get("bytes")
+            .and_then(Json::as_u64)
+            .with_context(|| format!("manifest shard {i} missing `bytes`"))?;
+        let crc32c = match row.get("crc32c") {
+            None => {
+                // The digest column is the point of format v2: its absence
+                // in a v2+ manifest means the row was tampered with or the
+                // writer was cut off, not a legacy store.
+                ensure!(
+                    format_version < 2,
+                    "manifest shard {i} is missing `crc32c`, required since format v2 \
+                     (store says {format:?})"
+                );
+                None
+            }
+            Some(v) => {
+                let n = v
+                    .as_u64()
+                    .with_context(|| format!("manifest shard {i} `crc32c` is not an integer"))?;
+                ensure!(n <= u32::MAX as u64, "manifest shard {i} `crc32c` {n} exceeds u32");
+                Some(n as u32)
+            }
+        };
+        shards.push(ManifestEntry { file, part_id, bytes, crc32c });
+    }
+    Ok(Manifest { format, num_parts, total_bytes, shards })
+}
+
+/// Verdict of a full structural + digest check of one shard file.
+#[derive(Clone, Debug)]
+pub struct ShardCheck {
+    pub version: u32,
+    pub bytes: u64,
+    pub part_id: usize,
+    pub num_parts: usize,
+    pub n_local: usize,
+    /// Full-file CRC-32C of the raw bytes on disk (what the manifest
+    /// records) — computed whether or not the file stores digests.
+    pub full_file_crc32c: u32,
+    pub integrity: Integrity,
+    /// Per-section digests verified (0 for legacy v1 files).
+    pub sections_checked: usize,
+}
+
+/// Fully check one shard file: structure, lengths, edge canonicality,
+/// the whole-file digest, and every per-section digest (so a corruption
+/// is attributed to the array it landed in). This is the per-file
+/// workhorse behind `cofree fsck`.
+pub fn check_shard_file(path: &Path) -> Result<ShardCheck> {
+    let map = Mmap::open(path)?;
+    let bytes = map.bytes();
+    let parsed = parse_shard_bytes(bytes, path)?;
+    let sections_checked = verify_shard_digests(bytes, &parsed, true)?;
+    decode_checked_edges(&bytes[parsed.edges.0..parsed.edges.1], parsed.n_local)?;
+    let integrity =
+        if parsed.digests.is_some() { Integrity::Verified } else { Integrity::LegacyUnverified };
+    Ok(ShardCheck {
+        version: parsed.version,
+        bytes: bytes.len() as u64,
+        part_id: parsed.part_id,
+        num_parts: parsed.num_parts,
+        n_local: parsed.n_local,
+        full_file_crc32c: crc32c(bytes),
+        integrity,
+        sections_checked,
+    })
 }
 
 /// List the shard files in `dir`, sorted by part id (file-name order).
@@ -827,6 +1268,202 @@ mod tests {
         let dir = tmp_dir("empty");
         std::fs::create_dir_all(&dir).unwrap();
         assert!(shard_files(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Write one small sharded store and return its dir.
+    fn small_store(name: &str, p: usize) -> (PathBuf, ShardSetStats) {
+        let g = &graph_zoo(5)[2];
+        let ds = dataset_for(g, 91);
+        let mut rng = Rng::new(13);
+        let vc = VertexCut::create(g, p, algorithm("dbh").unwrap().as_ref(), &mut rng);
+        let weights = dar_weights(g, &vc, Reweighting::Dar);
+        let dir = tmp_dir(name);
+        let stats = write_shards(&ds, &vc, &weights, 5, &dir).unwrap();
+        (dir, stats)
+    }
+
+    /// Re-emit a shard in the legacy v1 layout (no digest block) — the
+    /// compatibility fixture for legacy-load tests.
+    fn write_v1(shard: &Shard, path: &Path) {
+        let flat: Vec<u32> = shard.local.edges().iter().flat_map(|&(u, v)| [u, v]).collect();
+        let f = std::fs::File::create(path).unwrap();
+        let mut w = BufWriter::new(f);
+        binio::write_magic(&mut w, SHARD_MAGIC).unwrap();
+        binio::write_version(&mut w, 1).unwrap();
+        shard.emit_scalars(&mut w).unwrap();
+        binio::write_u32s(&mut w, &shard.global_ids).unwrap();
+        binio::write_u32s(&mut w, &flat).unwrap();
+        binio::write_f32s(&mut w, &shard.dar).unwrap();
+        binio::write_f32s(&mut w, &shard.data.features).unwrap();
+        binio::write_u32s(&mut w, &shard.data.labels).unwrap();
+        binio::write_bytes(&mut w, &shard.data.split).unwrap();
+        w.flush().unwrap();
+    }
+
+    /// Tentpole: a v2 store is fully self-verifying — loads report
+    /// `verified`, the manifest's CRC matches the raw bytes on disk, and
+    /// `check_shard_file` validates every section digest.
+    #[test]
+    fn v2_store_verifies_and_manifest_records_crc() {
+        let (dir, stats) = small_store("v2verify", 3);
+        let man = read_manifest(&dir).unwrap();
+        assert_eq!(man.format, format!("cofree-shards-v{SHARD_VERSION}"));
+        assert_eq!(man.num_parts, 3);
+        assert_eq!(man.shards.len(), stats.files.len());
+        for (rec, entry) in stats.files.iter().zip(&man.shards) {
+            assert_eq!(entry.file, rec.name);
+            assert_eq!(entry.bytes, rec.bytes);
+            assert_eq!(entry.crc32c, Some(rec.crc32c));
+            let raw = std::fs::read(dir.join(&entry.file)).unwrap();
+            assert_eq!(raw.len() as u64, entry.bytes, "manifest byte length is live");
+            assert_eq!(crc32c(&raw), rec.crc32c, "manifest CRC matches raw disk bytes");
+        }
+        for file in shard_files(&dir).unwrap() {
+            let (_, integ) = Shard::read_with(&file, Verify::Full).unwrap();
+            assert_eq!(integ, Integrity::Verified);
+            let (_, integ) = Shard::read_with(&file, Verify::Skip).unwrap();
+            assert_eq!(integ, Integrity::SkippedByRequest);
+            assert_eq!(MappedShard::open(&file).unwrap().integrity(), Integrity::Verified);
+            assert_eq!(
+                MappedShard::open_with(&file, Verify::Skip).unwrap().integrity(),
+                Integrity::SkippedByRequest
+            );
+            let check = check_shard_file(&file).unwrap();
+            assert_eq!(check.version, SHARD_VERSION);
+            assert_eq!(check.integrity, Integrity::Verified);
+            assert_eq!(check.sections_checked, SHARD_SECTIONS.len());
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite: legacy v1 files (no digest block) still load through
+    /// every path, flagged `legacy-unverified`, with identical contents.
+    #[test]
+    fn legacy_v1_shard_loads_flagged_unverified() {
+        let (dir, _) = small_store("legacyv1", 2);
+        let file = &shard_files(&dir).unwrap()[0];
+        let modern = Shard::read(file).unwrap();
+        let old = dir.join("legacy_0000.bin");
+        write_v1(&modern, &old);
+        let (loaded, integ) = Shard::read_with(&old, Verify::Full).unwrap();
+        assert_eq!(integ, Integrity::LegacyUnverified);
+        assert_eq!(loaded.global_ids, modern.global_ids);
+        assert_eq!(loaded.local.edges(), modern.local.edges());
+        assert_eq!(loaded.data.split, modern.data.split);
+        let mapped = MappedShard::open(&old).unwrap();
+        assert_eq!(mapped.integrity(), Integrity::LegacyUnverified);
+        assert_eq!(mapped.global_ids(), &modern.global_ids[..]);
+        let check = check_shard_file(&old).unwrap();
+        assert_eq!(check.version, 1);
+        assert_eq!(check.integrity, Integrity::LegacyUnverified);
+        assert_eq!(check.sections_checked, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Tentpole: a flipped payload byte is caught by every verifying load
+    /// path with a digest-mismatch error, while `--no-verify` (by design)
+    /// trusts the bytes when the damage is structurally invisible.
+    #[test]
+    fn digest_verification_catches_flipped_payload_bytes() {
+        let (dir, _) = small_store("flippayload", 2);
+        let file = &shard_files(&dir).unwrap()[0];
+        let mut bytes = std::fs::read(file).unwrap();
+        // Last byte = final split mask: structurally valid either way.
+        *bytes.last_mut().unwrap() ^= 0x40;
+        let bad = dir.join("shard_bad.bin");
+        std::fs::write(&bad, &bytes).unwrap();
+        for err in [
+            format!("{:#}", Shard::read(&bad).unwrap_err()),
+            format!("{:#}", MappedShard::open(&bad).unwrap_err()),
+            format!("{:#}", check_shard_file(&bad).unwrap_err()),
+        ] {
+            assert!(err.contains("digest mismatch"), "wanted a digest error, got: {err}");
+        }
+        // Skip really skips: the corrupt byte is invisible without digests.
+        assert!(Shard::read_with(&bad, Verify::Skip).is_ok());
+        assert!(MappedShard::open_with(&bad, Verify::Skip).is_ok());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// check_shard_file names the section a corruption landed in.
+    #[test]
+    fn fsck_check_localizes_corruption_to_a_section() {
+        let (dir, _) = small_store("fsckname", 2);
+        let file = &shard_files(&dir).unwrap()[0];
+        let mut bytes = std::fs::read(file).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01; // final split-mask byte
+        std::fs::write(file, &bytes).unwrap();
+        // Whole-file digest fires first…
+        let err = format!("{:#}", check_shard_file(file).unwrap_err());
+        assert!(err.contains("digest mismatch"), "{err}");
+        // …and with the file digest patched to match, the per-section
+        // check still pins the flip to the split section.
+        let map = Mmap::open(file).unwrap();
+        let parsed = parse_shard_bytes(map.bytes(), file).unwrap();
+        let body_start = parsed.digests.unwrap().body_start;
+        drop(map);
+        let fixed = crc32c(&bytes[body_start..]);
+        bytes[12..16].copy_from_slice(&fixed.to_le_bytes());
+        std::fs::write(file, &bytes).unwrap();
+        let err = format!("{:#}", check_shard_file(file).unwrap_err());
+        assert!(err.contains("section `split`"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite: the manifest is the completion marker — its absence
+    /// means "incomplete store", and a garbled one is a structured error.
+    #[test]
+    fn missing_manifest_means_incomplete_store() {
+        let (dir, _) = small_store("nomanifest", 2);
+        std::fs::remove_file(dir.join("manifest.json")).unwrap();
+        let err = format!("{:#}", read_manifest(&dir).unwrap_err());
+        assert!(err.contains("incomplete"), "{err}");
+        std::fs::write(dir.join("manifest.json"), b"{\"format\": \"cofree-shards-v2\",").unwrap();
+        assert!(read_manifest(&dir).is_err(), "garbled manifest must not parse");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The digest column is mandatory for v2+ manifests (a v2 row
+    /// without one is tampering or a torn write, not a legacy store),
+    /// the format version must be numeric, and v1 rows may legitimately
+    /// omit the CRC.
+    #[test]
+    fn manifest_crc_is_required_since_v2() {
+        let (dir, _) = small_store("crcrequired", 1);
+        let row = |crc: &str| {
+            format!(
+                "{{\n  \"format\": \"cofree-shards-v2\",\n  \"num_parts\": 1,\n  \
+                 \"total_bytes\": 10,\n  \"shards\": [\n    \
+                 {{\"file\": \"shard_0000.bin\", \"part_id\": 0, \"bytes\": 10{crc}}}\n  ]\n}}\n"
+            )
+        };
+        std::fs::write(dir.join("manifest.json"), row("")).unwrap();
+        let err = format!("{:#}", read_manifest(&dir).unwrap_err());
+        assert!(err.contains("crc32c") && err.contains("required since"), "{err}");
+        std::fs::write(dir.join("manifest.json"), row(", \"crc32c\": 7")).unwrap();
+        assert_eq!(read_manifest(&dir).unwrap().shards[0].crc32c, Some(7));
+        // v1 stores predate the digest column: the row parses CRC-less.
+        let v1 = row("").replace("cofree-shards-v2", "cofree-shards-v1");
+        std::fs::write(dir.join("manifest.json"), v1).unwrap();
+        assert_eq!(read_manifest(&dir).unwrap().shards[0].crc32c, None);
+        // A garbled version suffix is a structured error, not a guess.
+        let vx = row(", \"crc32c\": 7").replace("cofree-shards-v2", "cofree-shards-vX");
+        std::fs::write(dir.join("manifest.json"), vx).unwrap();
+        let err = format!("{:#}", read_manifest(&dir).unwrap_err());
+        assert!(err.contains("cofree-shards-v<N>"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// No `.tmp` residue survives a successful store write.
+    #[test]
+    fn store_write_leaves_no_temporaries() {
+        let (dir, _) = small_store("notmp", 3);
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name().into_string().unwrap();
+            assert!(!name.ends_with(".tmp"), "stray temporary {name}");
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

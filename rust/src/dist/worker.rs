@@ -54,6 +54,7 @@ use crate::train::cpu::{self, EdgeCsr};
 use crate::train::dropedge::MaskBank;
 use crate::train::engine::worker_mask_rng;
 use crate::train::workspace::ModelWorkspace;
+use crate::util::binio::Verify;
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{Read, Write};
 use std::net::TcpListener;
@@ -62,14 +63,18 @@ use std::time::Instant;
 
 /// Dial out to a coordinator and serve one session to completion.
 /// Returns the number of train steps served.
-pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
-    let shard = open_shard(shard_path)?;
-    crate::log_info!(
-        "worker rank {}/{}: connecting to {connect}",
-        shard.part_id,
-        shard.num_parts
-    );
-    let stream = Stream::connect(connect)?;
+///
+/// The connection is established *before* the shard is opened: a shard
+/// that fails its integrity checks is reported to the coordinator as a
+/// structured [`Frame::Fault`] (corrupt vs transient) instead of the
+/// worker dying silently mid-handshake.
+pub fn run(shard_path: &Path, connect: &str, verify: Verify) -> Result<usize> {
+    crate::log_info!("worker: connecting to {connect} for shard {}", shard_path.display());
+    let mut stream = Stream::connect(connect)?;
+    let shard = match open_shard(shard_path, verify) {
+        Ok(s) => s,
+        Err(e) => return report_fault(&mut stream, shard_path, e),
+    };
     serve(&shard, stream)
 }
 
@@ -77,8 +82,25 @@ pub fn run(shard_path: &Path, connect: &str) -> Result<usize> {
 /// in a clean `Shutdown`. A dropped session (coordinator crash, network
 /// loss, coordinator-driven recovery re-dialing) is logged and the worker
 /// returns to `accept`. Returns total train steps served across sessions.
-pub fn run_listen(shard_path: &Path, listen: &str) -> Result<usize> {
-    let shard = open_shard(shard_path)?;
+pub fn run_listen(shard_path: &Path, listen: &str, verify: Verify) -> Result<usize> {
+    let shard = match open_shard(shard_path, verify) {
+        Ok(s) => s,
+        Err(e) => {
+            // The shard is unusable, but a coordinator may already be
+            // dialing this endpoint: accept one session, report the fault
+            // in-band so the operator sees *which* file is bad, then exit
+            // nonzero.
+            let listener = TcpListener::bind(listen)
+                .with_context(|| format!("worker: binding {listen} to report a fault"))?;
+            crate::log_error!(
+                "worker: shard {} unusable ({e:#}); reporting to the next coordinator",
+                shard_path.display()
+            );
+            let (sock, _peer) = listener.accept().context("accepting coordinator session")?;
+            let mut stream = Stream::from_tcp(sock)?;
+            return report_fault(&mut stream, shard_path, e);
+        }
+    };
     let listener = TcpListener::bind(listen)
         .with_context(|| format!("worker rank {}: binding {listen}", shard.part_id))?;
     let addr = listener.local_addr()?;
@@ -104,19 +126,59 @@ pub fn run_listen(shard_path: &Path, listen: &str) -> Result<usize> {
     }
 }
 
-fn open_shard(shard_path: &Path) -> Result<MappedShard> {
-    let shard = MappedShard::open(shard_path)
+fn open_shard(shard_path: &Path, verify: Verify) -> Result<MappedShard> {
+    let shard = MappedShard::open_with(shard_path, verify)
         .with_context(|| format!("loading shard {}", shard_path.display()))?;
     crate::log_info!(
-        "worker rank {}/{}: shard {} (n_local={}, m_local={}, zero_copy={})",
+        "worker rank {}/{}: shard {} (n_local={}, m_local={}, zero_copy={}, {})",
         shard.part_id,
         shard.num_parts,
         shard_path.display(),
         shard.n_local(),
         shard.local.num_edges(),
-        shard.is_zero_copy()
+        shard.is_zero_copy(),
+        shard.integrity()
     );
     Ok(shard)
+}
+
+/// Classify a shard-load failure for the coordinator: failures whose cause
+/// chain bottoms out in a retryable I/O condition are transient (recycling
+/// the worker may succeed); everything else — digest mismatches, bad
+/// magic/version, truncation, structural rejects — is corrupt data, where
+/// retrying the same bytes cannot help.
+fn classify_shard_error(e: &anyhow::Error) -> u8 {
+    use std::io::ErrorKind;
+    for cause in e.chain() {
+        if let Some(ioe) = cause.downcast_ref::<std::io::Error>() {
+            return match ioe.kind() {
+                ErrorKind::NotFound
+                | ErrorKind::PermissionDenied
+                | ErrorKind::TimedOut
+                | ErrorKind::Interrupted
+                | ErrorKind::WouldBlock => proto::FAULT_TRANSIENT,
+                _ => proto::FAULT_CORRUPT_DATA,
+            };
+        }
+    }
+    proto::FAULT_CORRUPT_DATA
+}
+
+/// Send a structured `Fault` frame for a failed shard load, then fail the
+/// worker process with the same error. Best-effort on the wire (the
+/// coordinator may already be gone); the local log always gets the story.
+fn report_fault(stream: &mut Stream, shard_path: &Path, e: anyhow::Error) -> Result<usize> {
+    let code = classify_shard_error(&e);
+    let detail = format!("shard {}: {e:#}", shard_path.display());
+    let kind =
+        if code == proto::FAULT_CORRUPT_DATA { "corrupt data" } else { "transient failure" };
+    crate::log_error!("worker: reporting {kind} to the coordinator: {detail}");
+    if let Err(send_err) =
+        proto::write_frame(stream, &Frame::Fault { code, detail: detail.clone() })
+    {
+        crate::log_warn!("worker: could not deliver the fault report: {send_err:#}");
+    }
+    Err(e.context("shard unusable (fault reported to coordinator)"))
 }
 
 /// Serve one coordinator session over `stream`, wrapping it in the chaos
@@ -142,7 +204,7 @@ fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result
         },
     )?;
     let (frame, _) = proto::read_frame(stream)?;
-    let Frame::Config { seed, dropedge_k, dropedge_ratio, model } = frame else {
+    let Frame::Config { seed, dropedge_k, dropedge_ratio, model, wire_digests } = frame else {
         bail!("expected Config frame after Hello, got {frame:?}");
     };
     // Shards record dims only (the stored arrays are model-agnostic); the
@@ -190,7 +252,7 @@ fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result
         let (tag, payload, _) = proto::read_frame_into(stream, &mut frame_buf)?;
         match tag {
             proto::TAG_STEP => {
-                let pick = proto::decode_step_into(payload, &mut params.data)?;
+                let pick = proto::decode_step_into(payload, &mut params.data, wire_digests)?;
                 ensure!(
                     params.data.len() == dims.len(),
                     "expected {} param tensors, got {}",
@@ -220,6 +282,7 @@ fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result
                     &out,
                     compute_seconds,
                     &mut result_payload,
+                    wire_digests,
                 )?;
                 steps += 1;
             }

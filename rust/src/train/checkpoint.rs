@@ -10,11 +10,20 @@
 //! The file format reuses the shard store's header/versioning helpers
 //! ([`crate::util::binio`]): magic + u32 version, then little-endian
 //! length-prefixed tensors. All f32 payloads round-trip bit-exactly.
+//!
+//! Since version 3 a checkpoint is self-verifying: a CRC-32C digest right
+//! after the version covers every following byte (parameters and
+//! optimizer state included), and [`TrainCheckpoint::load`] verifies it
+//! in the same streaming pass that parses the file. Version 2 files (no
+//! digest) still load, flagged `legacy-unverified`. Saves are durable:
+//! tmp file → fsync → atomic rename → directory fsync, so the file at
+//! the target path is always a complete, loadable checkpoint.
 
 use crate::runtime::{ModelConfig, ParamSet};
 use crate::train::model::ModelKind;
 use crate::train::optimizer::{Optimizer, OptimizerState};
-use crate::util::binio;
+use crate::util::binio::{self, Integrity, Verify};
+use crate::util::hash::{HashingReader, HashingWriter};
 use anyhow::{bail, ensure, Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
@@ -24,8 +33,9 @@ pub const CHECKPOINT_MAGIC: &[u8; 8] = b"COFREECK";
 /// Version 2 added the model-kind tag to the header (the `GnnModel`
 /// refactor): a checkpoint records WHICH architecture its parameters
 /// belong to, not just the dims, so loading a GCN checkpoint into a Sage
-/// run fails loudly instead of misindexing tensors.
-pub const CHECKPOINT_VERSION: u32 = 2;
+/// run fails loudly instead of misindexing tensors. Version 3 added the
+/// whole-file CRC-32C digest after the version field.
+pub const CHECKPOINT_VERSION: u32 = 3;
 
 /// A resumable training state: how many epochs are done, the parameters,
 /// and the optimizer's internal state.
@@ -54,72 +64,133 @@ fn read_param_list(r: &mut impl Read) -> Result<Vec<Vec<f32>>> {
 }
 
 impl TrainCheckpoint {
-    /// Serialize to `path`. Returns the number of bytes written.
-    pub fn save(&self, path: &Path) -> Result<u64> {
-        let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
-        let mut w = BufWriter::new(f);
-        binio::write_magic(&mut w, CHECKPOINT_MAGIC)?;
-        binio::write_version(&mut w, CHECKPOINT_VERSION)?;
-        binio::write_u64(&mut w, self.epochs_done as u64)?;
-        binio::write_u8(&mut w, self.model.kind.code())?;
+    /// Everything after the digest field, in file order — shared by the
+    /// digest pass and the write pass so they agree by construction.
+    fn emit_body(&self, w: &mut impl Write) -> Result<()> {
+        binio::write_u64(w, self.epochs_done as u64)?;
+        binio::write_u8(w, self.model.kind.code())?;
         for d in [self.model.layers, self.model.feat_dim, self.model.hidden, self.model.classes] {
-            binio::write_u32(&mut w, d as u32)?;
+            binio::write_u32(w, d as u32)?;
         }
         // Parameter dims then data (dims are re-derivable from the model but
         // stored anyway so a reader can validate without model code).
-        binio::write_u32(&mut w, self.params.dims.len() as u32)?;
+        binio::write_u32(w, self.params.dims.len() as u32)?;
         for dims in &self.params.dims {
-            binio::write_u32(&mut w, dims.len() as u32)?;
+            binio::write_u32(w, dims.len() as u32)?;
             for &d in dims {
-                binio::write_u64(&mut w, d as u64)?;
+                binio::write_u64(w, d as u64)?;
             }
         }
-        write_param_list(&mut w, &self.params.data)?;
+        write_param_list(w, &self.params.data)?;
         match &self.opt {
-            OptimizerState::Sgd => binio::write_u8(&mut w, 0)?,
+            OptimizerState::Sgd => binio::write_u8(w, 0)?,
             OptimizerState::Adam { t, m, v } => {
-                binio::write_u8(&mut w, 1)?;
-                binio::write_u64(&mut w, *t as u64)?;
-                write_param_list(&mut w, m)?;
-                write_param_list(&mut w, v)?;
+                binio::write_u8(w, 1)?;
+                binio::write_u64(w, *t as u64)?;
+                write_param_list(w, m)?;
+                write_param_list(w, v)?;
             }
         }
-        w.flush()?;
-        let bytes = std::fs::metadata(path)?.len();
+        Ok(())
+    }
+
+    /// Durably serialize to `path`: the image goes to a `.tmp` sibling,
+    /// is fsynced, atomically renamed into place, and the directory entry
+    /// fsynced — the file at `path` is always a complete checkpoint, and
+    /// a failed write cleans up its temporary. Returns the bytes written.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        // Digest pass: the stored digest covers every byte after itself.
+        let digest = {
+            let mut h = HashingWriter::new(std::io::sink());
+            self.emit_body(&mut h)?;
+            h.digest()
+        };
+        let tmp = binio::tmp_sibling(path);
+        let guard = binio::TmpGuard::new(tmp.clone());
+        let f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        let mut w = HashingWriter::new(BufWriter::new(f));
+        binio::write_magic(&mut w, CHECKPOINT_MAGIC)?;
+        binio::write_version(&mut w, CHECKPOINT_VERSION)?;
+        binio::write_u32(&mut w, digest)?;
+        self.emit_body(&mut w)?;
+        let bytes = w.written();
+        let mut bw = w.into_inner();
+        bw.flush().with_context(|| format!("flushing {tmp:?}"))?;
+        bw.get_ref().sync_all().with_context(|| format!("fsyncing {tmp:?}"))?;
+        binio::commit_replace(&tmp, path)?;
+        guard.disarm();
         Ok(bytes)
     }
 
-    /// Deserialize from `path`, validating magic, version and shape
-    /// consistency.
+    /// Deserialize from `path` with full digest verification.
     pub fn load(path: &Path) -> Result<TrainCheckpoint> {
+        Ok(Self::load_with(path, Verify::Full)?.0)
+    }
+
+    /// Deserialize from `path`, validating magic, version, digest and
+    /// shape consistency. Version 2 files carry no digest and load
+    /// flagged [`Integrity::LegacyUnverified`]; [`Verify::Skip`] elides
+    /// the digest comparison on v3 files.
+    pub fn load_with(path: &Path, verify: Verify) -> Result<(TrainCheckpoint, Integrity)> {
+        let (ck, integrity, _version) = Self::load_inner(path, verify)?;
+        Ok((ck, integrity))
+    }
+
+    fn load_inner(path: &Path, verify: Verify) -> Result<(TrainCheckpoint, Integrity, u32)> {
         let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
-        let mut r = BufReader::new(f);
+        let mut r = binio::Tracked::new(HashingReader::new(BufReader::new(f)));
         binio::expect_magic(&mut r, CHECKPOINT_MAGIC, "cofree model checkpoint")
             .with_context(|| format!("reading {path:?}"))?;
-        binio::expect_version(&mut r, CHECKPOINT_VERSION, "model checkpoint")?;
-        let epochs_done = binio::read_u64(&mut r)? as usize;
-        let kind = ModelKind::from_code(binio::read_u8(&mut r)?)
-            .context("reading checkpoint model kind")?;
-        let model = ModelConfig {
-            kind,
-            layers: binio::read_u32(&mut r)? as usize,
-            feat_dim: binio::read_u32(&mut r)? as usize,
-            hidden: binio::read_u32(&mut r)? as usize,
-            classes: binio::read_u32(&mut r)? as usize,
+        let version =
+            binio::expect_version_in(&mut r, &[2, CHECKPOINT_VERSION], "model checkpoint")?;
+        let stored_digest = if version >= 3 {
+            let d = binio::read_u32(&mut r).context("reading checkpoint digest")?;
+            // The stored digest covers every byte from here to EOF.
+            r.get_mut().reset();
+            Some(d)
+        } else {
+            None
         };
-        let k = binio::read_u32(&mut r)? as usize;
-        ensure!(k <= 4096, "corrupt checkpoint: {k} parameter tensors");
-        let mut dims = Vec::with_capacity(k);
-        for _ in 0..k {
-            let rank = binio::read_u32(&mut r)? as usize;
-            ensure!(rank <= 8, "corrupt checkpoint: rank {rank}");
-            let mut shape = Vec::with_capacity(rank);
-            for _ in 0..rank {
-                shape.push(binio::read_u64(&mut r)? as usize);
+        let (epochs_done, model) = r.section("header", |r| {
+            let epochs_done = binio::read_u64(r)? as usize;
+            let kind = ModelKind::from_code(binio::read_u8(r)?)
+                .context("reading checkpoint model kind")?;
+            let model = ModelConfig {
+                kind,
+                layers: binio::read_u32(r)? as usize,
+                feat_dim: binio::read_u32(r)? as usize,
+                hidden: binio::read_u32(r)? as usize,
+                classes: binio::read_u32(r)? as usize,
+            };
+            // Sanity bounds before the config is used to build reference
+            // shapes: on the digest-less legacy path these fields are
+            // attacker-controlled, and `param_shapes()` allocates
+            // proportionally to `layers`.
+            ensure!(
+                model.layers <= 4096
+                    && model.feat_dim <= (1 << 24)
+                    && model.hidden <= (1 << 24)
+                    && model.classes <= (1 << 24),
+                "corrupt checkpoint: implausible model config {model:?}"
+            );
+            Ok((epochs_done, model))
+        })?;
+        let dims = r.section("shape table", |r| {
+            let k = binio::read_u32(r)? as usize;
+            ensure!(k <= 4096, "corrupt checkpoint: {k} parameter tensors");
+            let mut dims = Vec::with_capacity(k);
+            for _ in 0..k {
+                let rank = binio::read_u32(r)? as usize;
+                ensure!(rank <= 8, "corrupt checkpoint: rank {rank}");
+                let mut shape = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    shape.push(binio::read_u64(r)? as usize);
+                }
+                dims.push(shape);
             }
-            dims.push(shape);
-        }
-        let data = read_param_list(&mut r)?;
+            Ok(dims)
+        })?;
+        let data = r.section("parameters", read_param_list)?;
         ensure!(
             dims.len() == data.len(),
             "checkpoint dims/data arity mismatch: {} vs {}",
@@ -127,29 +198,81 @@ impl TrainCheckpoint {
             data.len()
         );
         for (i, (shape, d)) in dims.iter().zip(&data).enumerate() {
-            let want: usize = shape.iter().product();
+            // Checked: dims are attacker-controlled on the unverified
+            // legacy path, and an overflowing product must be a
+            // structured error, not a debug-mode panic.
+            let want: usize = shape
+                .iter()
+                .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+                .with_context(|| format!("corrupt checkpoint: tensor {i} dims overflow"))?;
             ensure!(d.len() == want, "checkpoint tensor {i}: {} elements, dims say {want}", d.len());
         }
         ensure!(
             dims == model.param_shapes(),
             "checkpoint parameter shapes do not match its model config"
         );
-        let opt = match binio::read_u8(&mut r)? {
-            0 => OptimizerState::Sgd,
-            1 => {
-                let t = binio::read_u64(&mut r)? as i32;
-                let m = read_param_list(&mut r)?;
-                let v = read_param_list(&mut r)?;
+        let opt = r.section("optimizer state", |r| {
+            Ok(match binio::read_u8(r)? {
+                0 => OptimizerState::Sgd,
+                1 => {
+                    let t = binio::read_u64(r)? as i32;
+                    let m = read_param_list(r)?;
+                    let v = read_param_list(r)?;
+                    ensure!(
+                        m.len() == data.len() && v.len() == data.len(),
+                        "adam moment arity does not match parameters"
+                    );
+                    OptimizerState::Adam { t, m, v }
+                }
+                other => bail!("unknown optimizer kind tag {other} in checkpoint"),
+            })
+        })?;
+        // Trailing bytes would silently escape the digest: refuse them.
+        let mut probe = [0u8; 1];
+        let extra = r.read(&mut probe).with_context(|| format!("probing end of {path:?}"))?;
+        ensure!(
+            extra == 0,
+            "corrupt checkpoint: trailing bytes after optimizer state at byte offset {}",
+            r.offset() - 1
+        );
+        let integrity = match (stored_digest, verify) {
+            (Some(want), Verify::Full) => {
+                let got = r.get_mut().digest();
                 ensure!(
-                    m.len() == data.len() && v.len() == data.len(),
-                    "adam moment arity does not match parameters"
+                    got == want,
+                    "checkpoint digest mismatch in {path:?}: stored {want:#010x}, \
+                     computed {got:#010x} — the bytes are corrupt"
                 );
-                OptimizerState::Adam { t, m, v }
+                Integrity::Verified
             }
-            other => bail!("unknown optimizer kind tag {other} in checkpoint"),
+            (Some(_), Verify::Skip) => Integrity::SkippedByRequest,
+            (None, _) => Integrity::LegacyUnverified,
         };
-        Ok(TrainCheckpoint { epochs_done, model, params: ParamSet { dims, data }, opt })
+        Ok((
+            TrainCheckpoint { epochs_done, model, params: ParamSet { dims, data }, opt },
+            integrity,
+            version,
+        ))
     }
+}
+
+/// Verdict of a full structural + digest check of one checkpoint file —
+/// the per-file workhorse behind `cofree fsck` on checkpoints.
+#[derive(Clone, Debug)]
+pub struct CheckpointCheck {
+    pub version: u32,
+    pub bytes: u64,
+    pub epochs_done: usize,
+    pub model: ModelConfig,
+    pub integrity: Integrity,
+}
+
+/// Fully check one checkpoint file: structure, shape consistency, and
+/// the whole-file digest.
+pub fn check_checkpoint_file(path: &Path) -> Result<CheckpointCheck> {
+    let (ck, integrity, version) = TrainCheckpoint::load_inner(path, Verify::Full)?;
+    let bytes = std::fs::metadata(path).with_context(|| format!("stat {path:?}"))?.len();
+    Ok(CheckpointCheck { version, bytes, epochs_done: ck.epochs_done, model: ck.model, integrity })
 }
 
 // ---------------------------------------------------------------------------
@@ -182,14 +305,50 @@ impl TrainCheckpoint {
 /// If the writer is still busy with the previous snapshot when the next
 /// one is due, the epoch is **skipped** (counted, not waited for) — a
 /// slow disk degrades checkpoint freshness, not training throughput.
+/// The *newest* skipped snapshot is kept in a spare buffer, though, and
+/// [`finish`](AsyncCheckpointer::finish) flushes it, so the file on disk
+/// always ends at the last offered state even if the final offer landed
+/// while the writer was busy.
 pub struct AsyncCheckpointer {
     /// Filled snapshots travel to the writer…
     jobs: mpsc::Sender<Box<TrainCheckpoint>>,
     /// …and drained buffers come back for reuse.
     slots: mpsc::Receiver<Box<TrainCheckpoint>>,
     writer: std::thread::JoinHandle<Result<usize>>,
+    /// The newest snapshot that was skipped (writer busy) and not yet
+    /// superseded by a successfully queued one — flushed by `finish` so
+    /// end-of-training state is never lost to an unlucky skip.
+    pending: Option<Box<TrainCheckpoint>>,
+    /// Spare buffer `pending` copies into (reused across skips, so the
+    /// steady state stays allocation-free after the first skip).
+    spare: Option<Box<TrainCheckpoint>>,
     /// Snapshots skipped because the writer was still busy.
     skipped: usize,
+}
+
+/// An empty snapshot buffer (sized by its first fill, reused after).
+fn empty_snapshot() -> Box<TrainCheckpoint> {
+    Box::new(TrainCheckpoint {
+        epochs_done: 0,
+        model: ModelConfig { kind: ModelKind::Sage, layers: 0, feat_dim: 0, hidden: 0, classes: 0 },
+        params: ParamSet { dims: Vec::new(), data: Vec::new() },
+        opt: OptimizerState::Sgd,
+    })
+}
+
+/// Copy the current training state into `snap`, reusing its allocations.
+fn fill_snapshot(
+    snap: &mut TrainCheckpoint,
+    epochs_done: usize,
+    model: &ModelConfig,
+    params: &ParamSet,
+    opt: &dyn Optimizer,
+) {
+    snap.epochs_done = epochs_done;
+    snap.model = *model;
+    snap.params.dims.clone_from(&params.dims);
+    snap.params.data.clone_from(&params.data);
+    opt.export_state_into(&mut snap.opt);
 }
 
 impl AsyncCheckpointer {
@@ -201,29 +360,17 @@ impl AsyncCheckpointer {
         // the writer drains the other. They start empty; the first two
         // offers size them and every later offer reuses that memory.
         for _ in 0..2 {
-            let empty = TrainCheckpoint {
-                epochs_done: 0,
-                model: ModelConfig {
-                    kind: ModelKind::Sage,
-                    layers: 0,
-                    feat_dim: 0,
-                    hidden: 0,
-                    classes: 0,
-                },
-                params: ParamSet { dims: Vec::new(), data: Vec::new() },
-                opt: OptimizerState::Sgd,
-            };
-            slot_tx.send(Box::new(empty)).expect("receiver alive");
+            slot_tx.send(empty_snapshot()).expect("receiver alive");
         }
         let writer = std::thread::Builder::new()
             .name("cofree-ckpt".into())
             .spawn(move || -> Result<usize> {
-                let tmp = tmp_sibling(&path);
                 let mut written = 0usize;
                 while let Ok(snap) = job_rx.recv() {
-                    snap.save(&tmp).with_context(|| format!("writing checkpoint {tmp:?}"))?;
-                    std::fs::rename(&tmp, &path)
-                        .with_context(|| format!("renaming {tmp:?} -> {path:?}"))?;
+                    // save() is durable and atomic on its own (tmp →
+                    // fsync → rename), so the file at `path` is always a
+                    // complete snapshot.
+                    snap.save(&path).with_context(|| format!("writing checkpoint {path:?}"))?;
                     crate::log_debug!(
                         "checkpoint: epoch {} -> {}",
                         snap.epochs_done,
@@ -237,12 +384,20 @@ impl AsyncCheckpointer {
                 Ok(written)
             })
             .expect("spawning checkpoint writer thread");
-        AsyncCheckpointer { jobs: job_tx, slots: slot_rx, writer, offered: 0, skipped: 0 }
+        AsyncCheckpointer {
+            jobs: job_tx,
+            slots: slot_rx,
+            writer,
+            pending: None,
+            spare: Some(empty_snapshot()),
+            skipped: 0,
+        }
     }
 
     /// Offer a snapshot of the current training state. Returns immediately:
     /// if no drained buffer is available (writer busy), the snapshot is
-    /// skipped and counted, never waited for.
+    /// copied into the spare buffer and held as `pending` (counted as a
+    /// skip unless `finish` ends up flushing it) — never waited for.
     pub fn offer(
         &mut self,
         epochs_done: usize,
@@ -255,24 +410,40 @@ impl AsyncCheckpointer {
             Err(_) => {
                 self.skipped += 1;
                 crate::log_debug!(
-                    "checkpoint: writer busy, skipping snapshot at epoch {epochs_done}"
+                    "checkpoint: writer busy, holding snapshot at epoch {epochs_done} as pending"
                 );
+                // Keep the newest skipped state so finish() can flush it.
+                let mut held = self.pending.take().or_else(|| self.spare.take());
+                if let Some(p) = held.as_mut() {
+                    fill_snapshot(p, epochs_done, model, params, opt);
+                    self.pending = held;
+                }
                 return;
             }
         };
-        snap.epochs_done = epochs_done;
-        snap.model = *model;
-        snap.params.dims.clone_from(&params.dims);
-        snap.params.data.clone_from(&params.data);
-        opt.export_state_into(&mut snap.opt);
+        fill_snapshot(&mut snap, epochs_done, model, params, opt);
+        // A successfully queued snapshot supersedes any pending one.
+        if let Some(stale) = self.pending.take() {
+            self.spare = Some(stale);
+        }
         // Send cannot fail while the writer thread holds the receiver; a
         // panicked writer surfaces in finish().
         let _ = self.jobs.send(snap);
     }
 
-    /// Close the channel, wait for the writer to drain its queue, and
-    /// return `(written, skipped)`. Propagates any write error.
-    pub fn finish(self) -> Result<(usize, usize)> {
+    /// Flush any pending (skipped) snapshot, close the channel, wait for
+    /// the writer to drain its queue, and return `(written, skipped)`.
+    /// Propagates any write error. After this returns, the file on disk
+    /// holds the newest state ever offered.
+    pub fn finish(mut self) -> Result<(usize, usize)> {
+        if let Some(p) = self.pending.take() {
+            // The last offer was skipped — write it now, after whatever
+            // is already queued (the writer drains in order, so the
+            // newest state lands last). It was counted as a skip; it is
+            // a write after all.
+            self.skipped -= 1;
+            let _ = self.jobs.send(p);
+        }
         drop(self.jobs);
         drop(self.slots);
         let written = match self.writer.join() {
@@ -281,12 +452,6 @@ impl AsyncCheckpointer {
         };
         Ok((written, self.skipped))
     }
-}
-
-fn tmp_sibling(path: &Path) -> PathBuf {
-    let mut name = path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
-    name.push(".tmp");
-    path.with_file_name(name)
 }
 
 #[cfg(test)]
@@ -355,8 +520,9 @@ mod tests {
     }
 
     /// The async writer's final on-disk file is a complete checkpoint
-    /// matching the *last* offered snapshot, and every offer is either
-    /// written or counted as skipped.
+    /// matching the *last* offered snapshot — even when offers were
+    /// skipped (the pending flush in `finish` guarantees it) — and every
+    /// offer is either written or counted as skipped.
     #[test]
     fn async_checkpointer_last_write_wins_and_is_loadable() {
         use crate::train::optimizer::{Adam, Optimizer};
@@ -377,15 +543,46 @@ mod tests {
         assert_eq!(written + skipped, 5, "every offer is written or skipped");
         assert!(written >= 1, "at least one snapshot must land");
         let got = TrainCheckpoint::load(&path).unwrap();
-        // The writer drains in order, so the file holds the last *written*
-        // offer; with no skips that is exactly epoch 5.
-        assert!(got.epochs_done >= 1 && got.epochs_done <= 5);
-        if skipped == 0 {
-            assert_eq!(got.epochs_done, 5);
-            assert_eq!(got.params.data, want_params.data);
-            assert_eq!(got.opt, want_opt);
-        }
+        // finish() flushes the newest pending snapshot, so regardless of
+        // how many offers the busy writer skipped, the final file is the
+        // end-of-training state.
+        assert_eq!(got.epochs_done, 5);
+        assert_eq!(got.params.data, want_params.data);
+        assert_eq!(got.opt, want_opt);
         assert_eq!(got.model, model);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    /// Regression (end-of-training flush): when the final offer finds the
+    /// writer busy (no free buffer), `finish` must still write it — the
+    /// last snapshot was previously lost to the skip counter.
+    #[test]
+    fn finish_flushes_a_skipped_final_snapshot() {
+        use crate::train::optimizer::{Adam, Optimizer};
+        let path = tmp("flush");
+        let _ = std::fs::remove_file(&path);
+        let mut ck = AsyncCheckpointer::spawn(path.clone());
+        let model = ModelConfig { kind: ModelKind::Sage, layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
+        let mut params = ParamSet::init_glorot(&model, &mut Rng::new(21));
+        let mut opt = Adam::new(0.01);
+        let grads: Vec<Vec<f32>> = params.data.iter().map(|d| vec![0.1; d.len()]).collect();
+        // Steal both pooled buffers so every offer is forced to skip —
+        // the deterministic stand-in for "writer busy at the last epoch".
+        let _a = ck.slots.recv().unwrap();
+        let _b = ck.slots.recv().unwrap();
+        for epoch in 1..=3 {
+            opt.step(&mut params.data, &grads, 1.0);
+            ck.offer(epoch, &model, &params, &opt);
+        }
+        let want_params = params.clone();
+        let want_opt = opt.export_state();
+        let (written, skipped) = ck.finish().unwrap();
+        assert_eq!(written, 1, "the pending (newest) snapshot must be flushed");
+        assert_eq!(skipped, 2, "the two superseded snapshots stay skipped");
+        let got = TrainCheckpoint::load(&path).unwrap();
+        assert_eq!(got.epochs_done, 3, "the file must hold the LAST offered state");
+        assert_eq!(got.params.data, want_params.data);
+        assert_eq!(got.opt, want_opt);
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -396,6 +593,69 @@ mod tests {
         let err = TrainCheckpoint::load(&p).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("COFREECK") && msg.contains("COFREEG1"), "{msg}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    /// Re-emit a checkpoint in the legacy v2 layout (no digest field) —
+    /// the compatibility fixture for legacy-load tests.
+    fn write_v2(ck: &TrainCheckpoint, path: &Path) {
+        let f = std::fs::File::create(path).unwrap();
+        let mut w = BufWriter::new(f);
+        binio::write_magic(&mut w, CHECKPOINT_MAGIC).unwrap();
+        binio::write_version(&mut w, 2).unwrap();
+        ck.emit_body(&mut w).unwrap();
+        w.flush().unwrap();
+    }
+
+    /// Tentpole: a v3 checkpoint is self-verifying, a flipped byte in the
+    /// optimizer state is caught, and `--no-verify` skips only the digest.
+    #[test]
+    fn v3_digest_catches_corruption_and_v2_loads_legacy() {
+        let ck = sample();
+        let p = tmp("v3digest");
+        ck.save(&p).unwrap();
+        let (_, integ) = TrainCheckpoint::load_with(&p, Verify::Full).unwrap();
+        assert_eq!(integ, Integrity::Verified);
+        let check = check_checkpoint_file(&p).unwrap();
+        assert_eq!(check.version, CHECKPOINT_VERSION);
+        assert_eq!(check.integrity, Integrity::Verified);
+        assert_eq!(check.epochs_done, 7);
+        // Flip one byte deep in the Adam moments: structurally invisible,
+        // digest-fatal.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 3;
+        bytes[last] ^= 0x10;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", TrainCheckpoint::load(&p).unwrap_err());
+        assert!(err.contains("digest mismatch"), "{err}");
+        assert!(TrainCheckpoint::load_with(&p, Verify::Skip).is_ok(), "skip really skips");
+        // Legacy v2 files (no digest) load flagged, contents intact.
+        let old = tmp("v2legacy");
+        write_v2(&ck, &old);
+        let (got, integ) = TrainCheckpoint::load_with(&old, Verify::Full).unwrap();
+        assert_eq!(integ, Integrity::LegacyUnverified);
+        assert_eq!(got.params.data, ck.params.data);
+        assert_eq!(got.opt, ck.opt);
+        assert_eq!(check_checkpoint_file(&old).unwrap().integrity, Integrity::LegacyUnverified);
+        std::fs::remove_file(&p).unwrap();
+        std::fs::remove_file(&old).unwrap();
+    }
+
+    /// A save leaves no `.tmp` sibling behind, and trailing garbage after
+    /// the optimizer state is refused (it would escape the digest).
+    #[test]
+    fn save_is_tmp_clean_and_trailing_bytes_are_refused() {
+        let ck = sample();
+        let p = tmp("clean");
+        ck.save(&p).unwrap();
+        let mut t = p.clone().into_os_string();
+        t.push(".tmp");
+        assert!(!PathBuf::from(t).exists(), "stray checkpoint temporary");
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.push(0xAB);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", TrainCheckpoint::load(&p).unwrap_err());
+        assert!(err.contains("trailing bytes"), "{err}");
         std::fs::remove_file(&p).unwrap();
     }
 }

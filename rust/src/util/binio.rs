@@ -9,7 +9,8 @@
 //! diagnostics everywhere instead of a bare `UnexpectedEof`.
 
 use anyhow::{bail, Context, Result};
-use std::io::{Read, Write};
+use std::io::{self, Read, Write};
+use std::path::{Path, PathBuf};
 
 /// Sanity cap on length prefixes (2^33 elements): a corrupt or adversarial
 /// length must not be able to request a multi-terabyte allocation.
@@ -80,6 +81,177 @@ pub fn expect_version(r: &mut impl Read, expected: u32, what: &str) -> Result<()
         bail!("unsupported {what} version: expected {expected}, found {found}");
     }
     Ok(())
+}
+
+/// Read a u32 format version that must be one of `supported` (formats
+/// that still load their legacy revisions); returns the version found.
+pub fn expect_version_in(r: &mut impl Read, supported: &[u32], what: &str) -> Result<u32> {
+    let found = read_u32(r).with_context(|| format!("reading {what} version"))?;
+    if !supported.contains(&found) {
+        bail!("unsupported {what} version: expected one of {supported:?}, found {found}");
+    }
+    Ok(found)
+}
+
+// ---------------------------------------------------------------------------
+// Offset/section tracking — so corruption errors say *where*.
+// ---------------------------------------------------------------------------
+
+/// A reader that counts every byte consumed, so loaders can report the
+/// absolute byte offset and the logical file section a truncation,
+/// magic, version, or digest error occurred in — the difference between
+/// "UnexpectedEof" and "section `features` (byte offsets 184..4280)".
+///
+/// Wrap the raw reader once (`Tracked::new(BufReader::new(file))`), then
+/// group reads with [`Tracked::section`]; any error inside the closure
+/// comes back annotated with the section name and offset span.
+pub struct Tracked<R> {
+    inner: R,
+    offset: u64,
+}
+
+impl<R: Read> Tracked<R> {
+    pub fn new(inner: R) -> Self {
+        Tracked { inner, offset: 0 }
+    }
+
+    /// Absolute offset of the next byte to be read.
+    pub fn offset(&self) -> u64 {
+        self.offset
+    }
+
+    /// Access the wrapped reader (e.g. a [`crate::util::hash::HashingReader`]
+    /// whose digest the loader needs to reset or collect mid-stream).
+    pub fn get_mut(&mut self) -> &mut R {
+        &mut self.inner
+    }
+
+    /// Run `f` as the named section: on error, the result is annotated
+    /// with the section name and the byte span that was being decoded
+    /// (the end of the span is where reading stopped).
+    pub fn section<T>(
+        &mut self,
+        name: &str,
+        f: impl FnOnce(&mut Self) -> Result<T>,
+    ) -> Result<T> {
+        let start = self.offset;
+        let res = f(self);
+        let end = self.offset;
+        res.with_context(|| format!("in section `{name}` (byte offsets {start}..{end})"))
+    }
+}
+
+impl<R: Read> Read for Tracked<R> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.offset += n as u64;
+        Ok(n)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Integrity flags shared by the checksummed formats.
+// ---------------------------------------------------------------------------
+
+/// Whether a loader should verify stored digests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verify {
+    /// Check every digest the format carries (the default everywhere).
+    Full,
+    /// Skip digest verification (`--no-verify`): structural validation
+    /// still runs, only the checksum passes are elided. For benchmarks
+    /// and emergencies, not for production fleets.
+    Skip,
+}
+
+/// What integrity checking a successfully loaded artifact actually got.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Integrity {
+    /// Current format revision; digests present and verified at load.
+    Verified,
+    /// Digests present but the caller asked to skip them ([`Verify::Skip`]).
+    SkippedByRequest,
+    /// Legacy format revision that predates digests — nothing to verify.
+    /// Loads are allowed (old stores keep working) but flagged, so
+    /// operators know these bytes are on trust.
+    LegacyUnverified,
+}
+
+impl std::fmt::Display for Integrity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Integrity::Verified => write!(f, "verified"),
+            Integrity::SkippedByRequest => write!(f, "unverified (--no-verify)"),
+            Integrity::LegacyUnverified => write!(f, "legacy-unverified"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Durable writes — tmp file → fsync → rename → directory fsync.
+// ---------------------------------------------------------------------------
+
+/// Sibling temporary path: `name.ext` → `name.ext.tmp` in the same
+/// directory, so the commit rename never crosses a filesystem.
+pub fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_else(|| "file".into());
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// fsync a directory, making previously renamed/created entries durable.
+/// A no-op on platforms where directories cannot be opened as files.
+pub fn sync_dir(dir: &Path) -> Result<()> {
+    #[cfg(unix)]
+    std::fs::File::open(dir)
+        .and_then(|f| f.sync_all())
+        .with_context(|| format!("fsyncing directory {}", dir.display()))?;
+    #[cfg(not(unix))]
+    let _ = dir;
+    Ok(())
+}
+
+/// Commit a fully written and fsynced temporary into place: atomic
+/// rename onto `path`, then fsync the parent directory so the rename
+/// itself survives power loss. The caller must have `sync_all`'d the
+/// tmp file's contents first.
+pub fn commit_replace(tmp: &Path, path: &Path) -> Result<()> {
+    std::fs::rename(tmp, path)
+        .with_context(|| format!("renaming {} into place as {}", tmp.display(), path.display()))?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            sync_dir(parent)?;
+        }
+    }
+    Ok(())
+}
+
+/// Removes a temporary file on drop unless `disarm`ed — the hygiene
+/// guard every tmp-file writer arms so a failed write never leaves a
+/// stray `*.tmp` behind (and never leaves a *partial* file under the
+/// final name, because the final name only ever appears via rename).
+pub struct TmpGuard {
+    path: PathBuf,
+    armed: bool,
+}
+
+impl TmpGuard {
+    pub fn new(path: PathBuf) -> Self {
+        TmpGuard { path, armed: true }
+    }
+
+    /// The write committed (renamed away); nothing to clean up.
+    pub fn disarm(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for TmpGuard {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
 }
 
 pub fn write_u8(w: &mut impl Write, x: u8) -> Result<()> {
@@ -289,5 +461,64 @@ mod tests {
         let mut r: &[u8] = &buf;
         let err = read_f32s(&mut r).unwrap_err();
         assert!(format!("{err:#}").contains("sanity cap"));
+    }
+
+    #[test]
+    fn version_in_set_accepts_and_reports() {
+        let mut buf = Vec::new();
+        write_version(&mut buf, 2).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(expect_version_in(&mut r, &[1, 2], "thing").unwrap(), 2);
+        let mut r2: &[u8] = &buf;
+        let err = expect_version_in(&mut r2, &[3, 4], "thing").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("[3, 4]") && msg.contains("found 2"), "{msg}");
+    }
+
+    #[test]
+    fn tracked_reader_names_section_and_offsets() {
+        let mut buf = Vec::new();
+        write_u32s(&mut buf, &[1, 2, 3]).unwrap();
+        write_f32s(&mut buf, &[0.5, 1.5, 2.5, 3.5]).unwrap();
+        // Truncate inside the second array's payload.
+        buf.truncate(buf.len() - 5);
+        let mut r = Tracked::new(&buf[..]);
+        let ids = r.section("ids", read_u32s).unwrap();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert_eq!(r.offset(), 8 + 12);
+        let err = r.section("weights", read_f32s).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("section `weights`"), "{msg}");
+        assert!(msg.contains("byte offsets 20.."), "{msg}");
+    }
+
+    #[test]
+    fn tmp_guard_cleans_up_unless_disarmed() {
+        let dir = std::env::temp_dir().join(format!("cofree_binio_guard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let stray = dir.join("a.tmp");
+        std::fs::write(&stray, b"partial").unwrap();
+        {
+            let _guard = TmpGuard::new(stray.clone());
+        }
+        assert!(!stray.exists(), "armed guard left the tmp behind");
+        let kept = dir.join("b.tmp");
+        std::fs::write(&kept, b"done").unwrap();
+        TmpGuard::new(kept.clone()).disarm();
+        assert!(kept.exists(), "disarmed guard removed a committed file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn commit_replace_renames_and_survives_missing_parent_sync() {
+        let dir = std::env::temp_dir().join(format!("cofree_binio_commit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let tmp = dir.join("x.bin.tmp");
+        let fin = dir.join("x.bin");
+        std::fs::write(&tmp, b"payload").unwrap();
+        commit_replace(&tmp, &fin).unwrap();
+        assert!(!tmp.exists());
+        assert_eq!(std::fs::read(&fin).unwrap(), b"payload");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

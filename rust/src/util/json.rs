@@ -1,0 +1,454 @@
+//! A minimal, panic-free JSON reader for the shard-store manifest.
+//!
+//! The repo emits JSON by hand (no serde in the dependency tree, by
+//! constraint) and until now nothing parsed any of it back. `cofree fsck`
+//! and the shard loader need to *read* `manifest.json` — including
+//! manifests that have been bit-flipped or truncated by the corruption
+//! chaos suite — so this parser's contract is stricter than usual:
+//!
+//! * **Never panics, whatever the input.** All indexing is guarded, and
+//!   nesting depth is capped ([`MAX_DEPTH`]) so adversarial `[[[[…`
+//!   cannot overflow the stack.
+//! * **Structured errors with byte offsets**, so fsck can say where a
+//!   manifest went bad.
+//!
+//! It accepts exactly standard JSON (RFC 8259): objects, arrays, strings
+//! with escapes, numbers, `true`/`false`/`null`. Numbers are held as
+//! `f64`; the integer accessors refuse values that are not exactly
+//! representable, which is far beyond any byte count a shard store will
+//! ever record.
+
+use anyhow::{bail, Result};
+
+/// Maximum nesting depth before the parser refuses the document.
+pub const MAX_DEPTH: usize = 64;
+
+/// Maximum accepted document size (16 MiB): a manifest is a few KiB, so
+/// anything bigger is garbage and refused before parsing.
+pub const MAX_DOC: usize = 16 << 20;
+
+/// A parsed JSON value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered; duplicate keys are kept (last one wins in
+    /// [`Json::get`]) rather than being an error.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Look up `key` in an object (last occurrence wins); `None` for
+    /// non-objects or missing keys.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The value as an exact non-negative integer, or `None` if it is
+    /// not a number, not integral, or too large to hold exactly in f64.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x <= (1u64 << 53) as f64 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Parse a complete JSON document; trailing non-whitespace is an error.
+pub fn parse(bytes: &[u8]) -> Result<Json> {
+    if bytes.len() > MAX_DOC {
+        bail!("json document too large: {} bytes (cap {MAX_DOC})", bytes.len());
+    }
+    let mut p = Parser { bytes, pos: 0 };
+    p.skip_ws();
+    let v = p.value(0)?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("trailing garbage at byte offset {} of json document", p.pos);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, want: u8) -> Result<()> {
+        match self.peek() {
+            Some(b) if b == want => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(b) => bail!(
+                "expected `{}` at byte offset {}, found `{}`",
+                want as char,
+                self.pos,
+                if b.is_ascii_graphic() { (b as char).to_string() } else { format!("0x{b:02X}") }
+            ),
+            None => bail!("expected `{}` at byte offset {}, found end of input", want as char, self.pos),
+        }
+    }
+
+    /// Consume `word` if it is next (used for true/false/null).
+    fn literal(&mut self, word: &str) -> bool {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            bail!("json nesting deeper than {MAX_DEPTH} at byte offset {}", self.pos);
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') | Some(b'f') => {
+                if self.literal("true") {
+                    Ok(Json::Bool(true))
+                } else if self.literal("false") {
+                    Ok(Json::Bool(false))
+                } else {
+                    bail!("malformed literal at byte offset {}", self.pos)
+                }
+            }
+            Some(b'n') => {
+                if self.literal("null") {
+                    Ok(Json::Null)
+                } else {
+                    bail!("malformed literal at byte offset {}", self.pos)
+                }
+            }
+            Some(b) if b == b'-' || b.is_ascii_digit() => self.number(),
+            Some(b) => bail!(
+                "unexpected byte 0x{b:02X} at offset {} where a json value should start",
+                self.pos
+            ),
+            None => bail!("unexpected end of input at byte offset {}", self.pos),
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value(depth + 1)?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => bail!("expected `,` or `}}` at byte offset {} in object", self.pos),
+            }
+        }
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected `,` or `]` at byte offset {} in array", self.pos),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // Fast path: run of plain bytes up to the next quote/escape.
+            while let Some(b) = self.peek() {
+                if b == b'"' || b == b'\\' || b < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            match std::str::from_utf8(&self.bytes[start..self.pos]) {
+                Ok(s) => out.push_str(s),
+                Err(_) => bail!("invalid utf-8 in string at byte offset {start}"),
+            }
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek();
+                    self.pos += 1;
+                    match esc {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'b') => out.push('\u{0008}'),
+                        Some(b'f') => out.push('\u{000C}'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            let cp = self.hex4()?;
+                            // Surrogate pairs: a high surrogate must be
+                            // followed by `\uDC00`-range low surrogate.
+                            let ch = if (0xD800..0xDC00).contains(&cp) {
+                                if !self.literal("\\u") {
+                                    bail!("lone high surrogate at byte offset {}", self.pos);
+                                }
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    bail!("invalid low surrogate at byte offset {}", self.pos);
+                                }
+                                let c = 0x10000 + ((cp - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(c)
+                            } else {
+                                char::from_u32(cp)
+                            };
+                            match ch {
+                                Some(c) => out.push(c),
+                                None => bail!("invalid unicode escape at byte offset {}", self.pos),
+                            }
+                        }
+                        Some(b) => bail!(
+                            "unknown escape `\\{}` at byte offset {}",
+                            if b.is_ascii_graphic() { b as char } else { '?' },
+                            self.pos
+                        ),
+                        None => bail!("unterminated escape at end of input"),
+                    }
+                }
+                // The fast path stops only at quote/escape/control, so
+                // any other `Some` here is a control byte.
+                Some(b) => {
+                    bail!("raw control byte 0x{b:02X} in string at byte offset {}", self.pos)
+                }
+                None => bail!("unterminated string at end of input"),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..4 {
+            let b = match self.peek() {
+                Some(b) => b,
+                None => bail!("truncated \\u escape at end of input"),
+            };
+            let d = match b {
+                b'0'..=b'9' => (b - b'0') as u32,
+                b'a'..=b'f' => (b - b'a') as u32 + 10,
+                b'A'..=b'F' => (b - b'A') as u32 + 10,
+                _ => bail!("non-hex digit in \\u escape at byte offset {}", self.pos),
+            };
+            v = (v << 4) | d;
+            self.pos += 1;
+        }
+        Ok(v)
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        let digits_start = self.pos;
+        while matches!(self.peek(), Some(b'0'..=b'9')) {
+            self.pos += 1;
+        }
+        if self.pos == digits_start {
+            bail!("number with no digits at byte offset {start}");
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            let frac_start = self.pos;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+            if self.pos == frac_start {
+                bail!("number with empty fraction at byte offset {start}");
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            let exp_start = self.pos;
+            while matches!(self.peek(), Some(b'0'..=b'9')) {
+                self.pos += 1;
+            }
+            if self.pos == exp_start {
+                bail!("number with empty exponent at byte offset {start}");
+            }
+        }
+        // The matched span is pure ASCII by construction.
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap_or("");
+        match text.parse::<f64>() {
+            Ok(x) if x.is_finite() => Ok(Json::Num(x)),
+            _ => bail!("unparseable number `{text}` at byte offset {start}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn parses_the_shapes_the_manifest_uses() {
+        let doc = br#"{
+  "format": "cofree-shards-v2",
+  "seed": 42,
+  "num_parts": 3,
+  "total_bytes": 123456,
+  "ok": true,
+  "nothing": null,
+  "ratio": 0.25,
+  "shards": [
+    {"file": "shard_0000.bin", "bytes": 100, "crc32c": 3735928559}
+  ]
+}"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("format").and_then(Json::as_str), Some("cofree-shards-v2"));
+        assert_eq!(v.get("seed").and_then(Json::as_u64), Some(42));
+        assert_eq!(v.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("nothing"), Some(&Json::Null));
+        assert_eq!(v.get("ratio").and_then(Json::as_f64), Some(0.25));
+        let shards = v.get("shards").and_then(Json::as_arr).unwrap();
+        assert_eq!(shards.len(), 1);
+        assert_eq!(shards[0].get("crc32c").and_then(Json::as_u64), Some(0xDEAD_BEEF));
+        assert_eq!(shards[0].get("missing"), None);
+    }
+
+    #[test]
+    fn strings_with_escapes_round_trip() {
+        let v = parse(br#""a\"b\\c\n\t\u0041\u00e9\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\"b\\c\n\tA\u{e9}\u{1F600}"));
+    }
+
+    #[test]
+    fn structured_errors_name_the_offset() {
+        for bad in [
+            &b"{\"a\": }"[..],
+            b"[1, 2",
+            b"\"unterminated",
+            b"{\"a\" 1}",
+            b"tru",
+            b"01x",
+            b"1e",
+            b"-",
+            b"[1,]2",
+            b"\xFF\xFE",
+            b"{\"k\": \"\\q\"}",
+            b"\"\\ud800x\"",
+            b"",
+            b"  ",
+            b"1 2",
+        ] {
+            let err = parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("offset") || err.contains("end of input") || err.contains("input"),
+                "error for {bad:?} lacks location: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn depth_bomb_is_refused_not_a_stack_overflow() {
+        let doc = vec![b'['; 100_000];
+        let err = parse(&doc).unwrap_err().to_string();
+        assert!(err.contains("nesting"), "{err}");
+    }
+
+    /// Random byte soup must never panic — mirrors the corruption fuzz
+    /// contract every binary loader is held to.
+    #[test]
+    fn random_bytes_never_panic() {
+        let mut rng = Rng::new(0x150_F00D);
+        for _ in 0..2000 {
+            let len = rng.below(200);
+            let bytes: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let _ = parse(&bytes); // Ok or Err both fine; panic is the only failure.
+        }
+        // And mutated valid documents.
+        let base = br#"{"shards": [{"file": "s", "bytes": 1, "crc32c": 2}], "seed": 42}"#;
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut doc = base.to_vec();
+                doc[i] ^= 1 << bit;
+                let _ = parse(&doc);
+            }
+        }
+    }
+}

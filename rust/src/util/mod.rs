@@ -2,6 +2,8 @@
 //! the shared binary codecs every on-disk/on-wire format is built from.
 
 pub mod binio;
+pub mod hash;
+pub mod json;
 pub mod logging;
 pub mod mmap;
 pub mod rng;

@@ -422,7 +422,9 @@ fn worker_rejects_malformed_coordinator_bytes() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
         let shard_path = shard.clone();
-        let worker = std::thread::spawn(move || dist::worker::run(&shard_path, &addr));
+        let worker = std::thread::spawn(move || {
+            dist::worker::run(&shard_path, &addr, cofree_gnn::util::binio::Verify::Full)
+        });
         let (mut sock, _) = listener.accept().unwrap();
         let (hello, _) = proto::read_frame(&mut sock).unwrap();
         assert!(
@@ -434,6 +436,86 @@ fn worker_rejects_malformed_coordinator_bytes() {
         let res = worker.join().expect("worker thread panicked");
         assert!(res.is_err(), "{name}: worker accepted malformed input");
     }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Corruption chaos (the shard store itself is damaged).
+// ---------------------------------------------------------------------------
+
+/// A single flipped bit in one shard must abort the launch with a
+/// structured error naming the rank and the file and pointing the
+/// operator at `cofree fsck` — never a silent worker death the
+/// coordinator misreads as a crash worth retrying (the same bytes would
+/// fail verification forever).
+#[test]
+fn corrupt_shard_aborts_launch_naming_rank_and_file() {
+    let (p, seed) = (2usize, 2101u64);
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let dir = std::env::temp_dir().join(format!(
+        "cofree_chaos_corrupt_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dist::write_shards(&ds, &vc, &weights, seed, &dir).unwrap();
+    let victim = dir.join(shard_file_name(1));
+    let len = std::fs::metadata(&victim).unwrap().len();
+    dist::fault::flip_file_bit(&victim, len - 9, 3).unwrap();
+
+    let opts = ProcOptions { transport: Transport::Tcp, ..ProcOptions::new(worker_bin()) };
+    let cfg = cfg_for(3, seed, None);
+    let err = dist::train_over_shards(&ds, &dir, &cfg, &opts, None)
+        .expect_err("training over a corrupt shard store must fail, not diverge");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("corrupt data"), "fault not classified as corruption: {msg}");
+    assert!(msg.contains("cofree fsck"), "error does not point at fsck: {msg}");
+    assert!(msg.contains(&shard_file_name(1)), "error does not name the file: {msg}");
+    assert!(msg.contains("rank 1"), "error does not name the rank: {msg}");
+
+    // fsck pins the damage to exactly the file the fleet named.
+    let report = dist::fsck(&dir).unwrap();
+    assert_eq!(report.failures(), 1, "{report}");
+    let shown = format!("{report}");
+    assert!(shown.contains(&shard_file_name(1)), "{shown}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `cofree shard` writes the manifest **last**, so a kill at *any*
+/// earlier point leaves a directory without one — which fsck must reject
+/// as incomplete rather than let a fleet launch on partial data.
+/// Simulate the two crash windows the contract admits: pre-manifest
+/// (every shard landed, no completion marker) and mid-shard (a data file
+/// truncated mid-write, still no marker).
+#[test]
+fn interrupted_shard_write_is_rejected_as_incomplete() {
+    let (p, seed) = (2usize, 2201u64);
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let dir = std::env::temp_dir().join(format!(
+        "cofree_chaos_partial_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    dist::write_shards(&ds, &vc, &weights, seed, &dir).unwrap();
+
+    // Crash window 1: the manifest never arrived.
+    std::fs::remove_file(dir.join("manifest.json")).unwrap();
+    let report = dist::fsck(&dir).unwrap();
+    assert!(!report.ok(), "fsck accepted a store with no completion marker:\n{report}");
+    assert!(format!("{report}").contains("incomplete"), "{report}");
+
+    // Crash window 2: one shard was also cut off mid-write.
+    let victim = dir.join(shard_file_name(0));
+    let len = std::fs::metadata(&victim).unwrap().len();
+    dist::fault::truncate_file(&victim, len / 2).unwrap();
+    let report = dist::fsck(&dir).unwrap();
+    assert!(
+        report.failures() >= 2,
+        "missing manifest + truncated shard should both be flagged:\n{report}"
+    );
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
