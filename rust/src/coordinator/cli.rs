@@ -107,12 +107,17 @@ USAGE:
                snapshots; resume with --load-model FILE)
                [--no-verify] [--wire-digests]   (proc: skip worker shard digest
                verification / add CRC-32C trailers to step frames)
+               [--metrics-out FILE]   (append one JSON line per epoch plus a
+               run summary -> structured run ledger, both transports)
+               [--trace-out FILE]     (record per-phase spans, write a Chrome
+               trace-event file viewable in Perfetto / chrome://tracing)
                [--save-model FILE] [--load-model FILE]
                [--scale F] [--artifacts DIR] [--out-csv FILE] [--config FILE]
   cofree bench NAME            (table1|table2|table3|table4|fig2|fig3|fig4|fig5|all)
   cofree bench --quick [--edges N] [--dist-edges N] [--epochs E]
-               [--parts LIST] [--out FILE]
-               (reduced partition/train/dist benches -> BENCH_summary.json)
+               [--parts LIST] [--out FILE] [--no-telemetry]
+               (reduced partition/train/dist benches -> BENCH_summary.json;
+               --no-telemetry skips the telemetry-overhead measurement)
 
 DATASETS:   reddit-sim, products-sim, yelp-sim, papers-sim
 ALGOS:      random, ne, dbh, hep, greedy (vertex cut); metis (edge cut)
@@ -300,8 +305,9 @@ fn cmd_emit_bucket_spec(args: &Args) -> Result<i32> {
 }
 
 /// The backend-independent half of `cofree train --transport inproc`:
-/// partition, prepare, train, report. Returns the history plus the
-/// end-of-run checkpoint (for `--save-model`).
+/// partition, prepare, train, report. Returns the history, the end-of-run
+/// checkpoint (for `--save-model`), and the phase timer (for the ledger's
+/// summary record).
 #[allow(clippy::too_many_arguments)]
 fn run_train<B: Backend>(
     engine: &mut TrainEngine<B>,
@@ -313,9 +319,9 @@ fn run_train<B: Backend>(
     cfg: &TrainConfig,
     seed: u64,
     resume: Option<TrainCheckpoint>,
-) -> Result<(History, TrainCheckpoint)> {
+) -> Result<(History, TrainCheckpoint, crate::util::timer::PhaseTimer)> {
     let eval = engine.prepare_eval(ds)?;
-    let (history, ck, _timer) = if p <= 1 {
+    let (history, ck, timer) = if p <= 1 {
         let mut run = engine.prepare_full(ds, dropedge, seed)?;
         engine.train_resumable(&mut run, Some(&eval), cfg, resume)?
     } else {
@@ -327,7 +333,7 @@ fn run_train<B: Backend>(
         let mut run = engine.prepare_partitions(ds, &vc, rw, dropedge, seed)?;
         engine.train_resumable(&mut run, Some(&eval), cfg, resume)?
     };
-    Ok((history, ck))
+    Ok((history, ck, timer))
 }
 
 /// The `--transport proc` half: shard (unless `--shard-dir` points at an
@@ -345,7 +351,7 @@ fn run_train_proc(
     seed: u64,
     args: &Args,
     resume: Option<TrainCheckpoint>,
-) -> Result<(History, TrainCheckpoint)> {
+) -> Result<(History, TrainCheckpoint, dist::DistStats)> {
     let socket = args.get_or("socket", "tcp");
     let transport = Transport::parse(socket).context("--socket must be tcp|unix")?;
     let worker_bin = match args.get("worker-bin") {
@@ -400,7 +406,7 @@ fn run_train_proc(
         };
         let (history, ck, stats) = dist::train_over_hosts(ds, &hosts, cfg, &opts, resume)?;
         print_proc_stats(&stats);
-        return Ok((history, ck));
+        return Ok((history, ck, stats));
     }
     // Shards: reuse a store written by `cofree shard`, or shard into a
     // scratch dir (removed afterwards).
@@ -451,7 +457,7 @@ fn run_train_proc(
     }
     let (history, ck, stats) = result?;
     print_proc_stats(&stats);
-    Ok((history, ck))
+    Ok((history, ck, stats))
 }
 
 fn print_proc_stats(stats: &dist::DistStats) {
@@ -541,6 +547,19 @@ fn cmd_train(args: &Args) -> Result<i32> {
         (Some(_), 0) => 10,
         (_, n) => n,
     };
+    // Observability knobs, valid on both transports: `--metrics-out` turns
+    // on the per-epoch run ledger (the engine writes the epoch records;
+    // the summary is appended below, after training returns), and
+    // `--trace-out` arms span recording for a Chrome-trace profile.
+    let metrics_out = args
+        .get("metrics-out")
+        .or_else(|| file_cfg.get("run.metrics_out"))
+        .map(PathBuf::from);
+    let trace_out =
+        args.get("trace-out").or_else(|| file_cfg.get("run.trace_out")).map(PathBuf::from);
+    if trace_out.is_some() {
+        crate::obs::trace::enable();
+    }
     let cfg = TrainConfig {
         epochs,
         lr,
@@ -552,6 +571,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
         log_every: (epochs / 20).max(1),
         checkpoint_every,
         checkpoint_path,
+        metrics_out: metrics_out.clone(),
     };
     // Proc-only flags must not be silently ignored on the inproc path
     // (same rule as --artifacts above).
@@ -572,11 +592,23 @@ fn cmd_train(args: &Args) -> Result<i32> {
             }
         }
     }
-    let (history, checkpoint) = match transport.as_str() {
+    // Each arm also yields the summary-record phase totals (inproc: the
+    // engine's PhaseTimer; proc: the fleet sums DistStats folded) and, on
+    // the proc transport, the DistStats for the ledger's `dist` object.
+    let summary_phases = |timer: &crate::util::timer::PhaseTimer| -> Vec<(&'static str, f64)> {
+        ["execute", "allreduce", "optim"]
+            .iter()
+            .map(|&n| (n, timer.total(n).as_secs_f64()))
+            .collect()
+    };
+    let (history, checkpoint, phases, dist_stats) = match transport.as_str() {
         "inproc" => match backend.as_str() {
             "native" | "cpu" => {
                 let mut engine = TrainEngine::native_model(kind);
-                run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed, resume)?
+                let (h, ck, timer) =
+                    run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed, resume)?;
+                let phases = summary_phases(&timer);
+                (h, ck, phases, None)
             }
             #[cfg(feature = "xla")]
             "xla" => {
@@ -588,7 +620,10 @@ fn cmd_train(args: &Args) -> Result<i32> {
                 }
                 let artifacts = PathBuf::from(get("run.artifacts", "artifacts", "artifacts"));
                 let mut engine = TrainEngine::new(&artifacts)?;
-                run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed, resume)?
+                let (h, ck, timer) =
+                    run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed, resume)?;
+                let phases = summary_phases(&timer);
+                (h, ck, phases, None)
             }
             #[cfg(not(feature = "xla"))]
             "xla" => bail!(
@@ -612,7 +647,15 @@ fn cmd_train(args: &Args) -> Result<i32> {
                      runs one worker per partition (drop one of the flags)"
                 );
             }
-            run_train_proc(&ds, workers, &algo_name, rw, kind, &cfg, seed, args, resume)?
+            let (h, ck, stats) =
+                run_train_proc(&ds, workers, &algo_name, rw, kind, &cfg, seed, args, resume)?;
+            let phases = vec![
+                ("forward", stats.forward_seconds),
+                ("backward", stats.backward_seconds),
+                ("serialize", stats.serialize_seconds),
+                ("optim", stats.optim_seconds),
+            ];
+            (h, ck, phases, Some(stats))
         }
         other => bail!("--transport must be inproc|proc, got {other:?}"),
     };
@@ -628,6 +671,18 @@ fn cmd_train(args: &Args) -> Result<i32> {
     if let Some(csv) = args.get("out-csv").or_else(|| file_cfg.get("run.out_csv")) {
         history.write_csv(std::path::Path::new(csv))?;
         println!("history -> {csv}");
+    }
+    if let Some(path) = &metrics_out {
+        crate::obs::ledger::append_summary(path, &history, &phases, dist_stats.as_ref())?;
+        println!(
+            "run ledger -> {} ({} epoch records + summary)",
+            path.display(),
+            history.epochs.len()
+        );
+    }
+    if let Some(path) = &trace_out {
+        crate::obs::trace::write_chrome(path)?;
+        println!("trace -> {} (open in Perfetto or chrome://tracing)", path.display());
     }
     Ok(0)
 }
@@ -663,6 +718,7 @@ fn cmd_bench(args: &Args) -> Result<i32> {
             epochs: args.parse_or("epochs", d.epochs)?,
             parts,
             out: args.get("out").map(PathBuf::from).unwrap_or(d.out),
+            telemetry: args.get("no-telemetry").is_none(),
         };
         super::quickbench::run(&opts)?;
         return Ok(0);
@@ -984,6 +1040,62 @@ mod tests {
         let ck = TrainCheckpoint::load(&path).expect("periodic checkpoint loads");
         assert!(ck.epochs_done >= 2 && ck.epochs_done < 5, "{}", ck.epochs_done);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    /// End-to-end through the CLI: `--metrics-out` leaves one epoch record
+    /// per epoch plus a summary, `--trace-out` leaves a parseable Chrome
+    /// trace — both on the inproc transport (no worker processes needed).
+    #[test]
+    fn train_writes_ledger_and_trace() {
+        use crate::util::json;
+        // --trace-out flips the process-global trace flag: serialize with
+        // the trace unit tests that toggle the same flag.
+        let _guard = crate::obs::trace::TEST_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = std::env::temp_dir().join(format!("cofree_cli_obs_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let ledger = dir.join("metrics.jsonl");
+        let trace = dir.join("trace.json");
+        let code = main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--partitions",
+            "2",
+            "--algo",
+            "dbh",
+            "--epochs",
+            "3",
+            "--metrics-out",
+            ledger.to_str().unwrap(),
+            "--trace-out",
+            trace.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let text = std::fs::read_to_string(&ledger).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "3 epoch records + 1 summary:\n{text}");
+        for (i, line) in lines.iter().take(3).enumerate() {
+            let r = json::parse(line.as_bytes()).expect("epoch line parses");
+            assert_eq!(r.get("record").and_then(|v| v.as_str()), Some("epoch"));
+            assert_eq!(r.get("epoch").and_then(|v| v.as_u64()), Some(i as u64));
+            assert!(r.get("phases").and_then(|p| p.get("execute_s")).is_some());
+        }
+        let s = json::parse(lines[3].as_bytes()).expect("summary line parses");
+        assert_eq!(s.get("record").and_then(|v| v.as_str()), Some("summary"));
+        assert!(matches!(s.get("dist"), Some(&json::Json::Null)), "inproc has no dist stats");
+        assert!(s.get("metrics").and_then(|m| m.get("counters")).is_some());
+        let tdoc = json::parse(std::fs::read_to_string(&trace).unwrap().as_bytes())
+            .expect("trace parses as JSON");
+        let events = tdoc.as_arr().expect("trace is an event array");
+        assert!(
+            events.iter().any(|e| e.get("name").and_then(|n| n.as_str()) == Some("epoch")),
+            "trace has epoch spans"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

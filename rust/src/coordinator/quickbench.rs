@@ -29,7 +29,10 @@
 //! Knobs (flags on `cofree bench --quick`): `--edges N` (train/partition
 //! graph size, default 300k), `--dist-edges N` (default 60k), `--epochs E`
 //! (timed epochs per loop, default 3), `--parts LIST` (dist worker counts,
-//! default `2,4`), `--out FILE` (default `BENCH_summary.json`).
+//! default `2,4`), `--out FILE` (default `BENCH_summary.json`),
+//! `--no-telemetry` (skip the telemetry-overhead measurement — epoch time
+//! with span tracing + metrics recording on vs off, reported as
+//! `telemetry.overhead_frac`).
 
 use crate::dist::{self, MappedShard, ProcOptions, Shard};
 use crate::graph::features::{synthesize, FeatureParams};
@@ -58,6 +61,10 @@ pub struct QuickOptions {
     pub epochs: usize,
     pub parts: Vec<usize>,
     pub out: PathBuf,
+    /// Measure the observability hot path (span tracing + metrics) against
+    /// an uninstrumented run and record `telemetry.overhead_frac`;
+    /// `--no-telemetry` skips the measurement (`"telemetry": null`).
+    pub telemetry: bool,
 }
 
 impl Default for QuickOptions {
@@ -68,6 +75,7 @@ impl Default for QuickOptions {
             epochs: 3,
             parts: vec![2, 4],
             out: PathBuf::from("BENCH_summary.json"),
+            telemetry: true,
         }
     }
 }
@@ -388,6 +396,51 @@ pub fn run(opts: &QuickOptions) -> Result<()> {
         .unwrap();
     }
 
+    // ---------------------------------------------------------------- telemetry
+    // Cost of the observability hot path (span tracing + the metrics
+    // registry) on the real engine loop: the same config trained with
+    // recording off, then on. The trajectories must stay bit-identical —
+    // telemetry reads clocks and atomics, never the model state — and the
+    // per-epoch wall-clock delta is `telemetry.overhead_frac` (the ledger
+    // is excluded: it is a per-epoch durability artifact, not hot-path
+    // instrumentation).
+    let mut telemetry_json = String::from("null");
+    if opts.telemetry {
+        let mk_cfg = |epochs: usize| TrainConfig {
+            epochs,
+            eval_every: 0,
+            seed: 42,
+            log_every: 0,
+            ..Default::default()
+        };
+        let tele_epochs = (opts.epochs * 4).max(8);
+        let mut engine = crate::train::engine::TrainEngine::native();
+        let mut run = engine.prepare_partitions(&ds, &vc, Reweighting::Dar, None, 42)?;
+        crate::obs::trace::disable();
+        engine.train(&mut run, None, &mk_cfg(2))?; // warm-up (one-time allocations)
+        let t_off = Instant::now();
+        let (_, params_off, _) = engine.train(&mut run, None, &mk_cfg(tele_epochs))?;
+        let tele_off_s = t_off.elapsed().as_secs_f64() / tele_epochs as f64;
+        crate::obs::trace::enable();
+        engine.train(&mut run, None, &mk_cfg(2))?; // warm-up (trace ring allocation)
+        let t_on = Instant::now();
+        let (_, params_on, _) = engine.train(&mut run, None, &mk_cfg(tele_epochs))?;
+        let tele_on_s = t_on.elapsed().as_secs_f64() / tele_epochs as f64;
+        crate::obs::trace::disable();
+        ensure!(
+            params_off.data == params_on.data,
+            "PARITY FAILURE: enabling telemetry perturbed the training trajectory"
+        );
+        let overhead_frac = (tele_on_s - tele_off_s) / tele_off_s.max(1e-12);
+        println!(
+            "telemetry: epoch uninstrumented {tele_off_s:.4}s instrumented {tele_on_s:.4}s (overhead {:.2}%)  parity=ok",
+            overhead_frac * 100.0
+        );
+        telemetry_json = format!(
+            "{{\"epochs\": {tele_epochs}, \"epoch_off_s\": {tele_off_s:.6}, \"epoch_on_s\": {tele_on_s:.6}, \"overhead_frac\": {overhead_frac:.4}, \"parity\": true}}"
+        );
+    }
+
     // --------------------------------------------------------------------- dist
     let dist_model = model;
     let dds = rmat_dataset(opts.dist_edges, &dist_model, 0xD157);
@@ -461,7 +514,7 @@ pub fn run(opts: &QuickOptions) -> Result<()> {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"summary\",\n  \"generated_by\": \"cofree bench --quick\",\n  \"config\": {{\"edges\": {}, \"dist_edges\": {}, \"epochs\": {}, \"parts\": {:?}, \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"headline\": {{\"native_epoch_speedup\": {epoch_speedup:.3}, \"forward_speedup\": {fwd_speedup:.3}, \"proc_epoch_overhead_mid\": {proc_overhead_mid:.3}}},\n  \"models\": {{{models_json}}},\n  \"partition\": {{\"build_new_s\": {build_new_s:.6}, \"build_reference_s\": {build_ref_s:.6}, \"build_speedup\": {build_speedup:.3}, \"dbh_p8_cut_s\": {cut_s:.6}}},\n  \"train\": {{\"bucket\": {{\"n_pad\": {}, \"e_pad\": {}}}, \"forward\": {{\"old_s\": {fwd_old_s:.6}, \"new_s\": {fwd_new_s:.6}, \"speedup\": {fwd_speedup:.3}}}, \"step\": {{\"old_s\": {step_old_s:.6}, \"new_s\": {step_new_s:.6}, \"speedup\": {step_speedup:.3}}}, \"epoch\": {{\"old_s\": {epoch_old_s:.6}, \"new_s\": {epoch_new_s:.6}, \"speedup\": {epoch_speedup:.3}}}, \"parity\": true}},\n  \"dist\": [\n    {dist_rows}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"summary\",\n  \"generated_by\": \"cofree bench --quick\",\n  \"config\": {{\"edges\": {}, \"dist_edges\": {}, \"epochs\": {}, \"parts\": {:?}, \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"headline\": {{\"native_epoch_speedup\": {epoch_speedup:.3}, \"forward_speedup\": {fwd_speedup:.3}, \"proc_epoch_overhead_mid\": {proc_overhead_mid:.3}}},\n  \"telemetry\": {telemetry_json},\n  \"models\": {{{models_json}}},\n  \"partition\": {{\"build_new_s\": {build_new_s:.6}, \"build_reference_s\": {build_ref_s:.6}, \"build_speedup\": {build_speedup:.3}, \"dbh_p8_cut_s\": {cut_s:.6}}},\n  \"train\": {{\"bucket\": {{\"n_pad\": {}, \"e_pad\": {}}}, \"forward\": {{\"old_s\": {fwd_old_s:.6}, \"new_s\": {fwd_new_s:.6}, \"speedup\": {fwd_speedup:.3}}}, \"step\": {{\"old_s\": {step_old_s:.6}, \"new_s\": {step_new_s:.6}, \"speedup\": {step_speedup:.3}}}, \"epoch\": {{\"old_s\": {epoch_old_s:.6}, \"new_s\": {epoch_new_s:.6}, \"speedup\": {epoch_speedup:.3}}}, \"parity\": true}},\n  \"dist\": [\n    {dist_rows}\n  ]\n}}\n",
         opts.edges,
         opts.dist_edges,
         opts.epochs,

@@ -133,8 +133,25 @@ impl ProcOptions {
     }
 }
 
+/// Cumulative phase telemetry for one worker rank over a run, folded from
+/// the [`proto::StepPhases`] breakdown every `StepResult` carries
+/// (protocol v5). Seconds are sums over the rank's steps; the workspace
+/// figure is the max (it is constant per incarnation by construction).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RankPhases {
+    pub rank: usize,
+    /// Steps whose results this rank delivered (recomputed steps after a
+    /// recovery count once — only the delivered result is folded).
+    pub steps: u64,
+    pub compute_seconds: f64,
+    pub forward_seconds: f64,
+    pub backward_seconds: f64,
+    pub serialize_seconds: f64,
+    pub peak_workspace_bytes: u64,
+}
+
 /// Wire/timing accounting for one multi-process run.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct DistStats {
     pub num_workers: usize,
     pub epochs_run: usize,
@@ -159,6 +176,25 @@ pub struct DistStats {
     pub heartbeat_bytes: u64,
     /// Wall-clock spent inside recovery (loss detected → rank rejoined).
     pub recovery_seconds: f64,
+    /// Fleet-wide phase totals folded from the per-step wire breakdowns.
+    pub forward_seconds: f64,
+    pub backward_seconds: f64,
+    pub serialize_seconds: f64,
+    /// Coordinator-side optimizer time (from the engine's phase timer).
+    pub optim_seconds: f64,
+    /// Largest worker workspace arena in the fleet.
+    pub peak_workspace_bytes: u64,
+    /// Per-rank cumulative phase breakdowns, indexed by rank.
+    pub per_rank: Vec<RankPhases>,
+}
+
+fn json_num(out: &mut String, v: f64) {
+    use std::fmt::Write as _;
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
 }
 
 impl DistStats {
@@ -188,6 +224,72 @@ impl DistStats {
         } else {
             self.heartbeat_bytes as f64 / self.epochs_run as f64
         }
+    }
+
+    /// Render the full stats — wire accounting, fault-tolerance counters,
+    /// fleet phase totals and the per-rank breakdowns — as one JSON object.
+    /// This is the `"dist"` field of the run-ledger summary record; the
+    /// field names are a stable schema (asserted by a unit test and
+    /// documented in DESIGN.md §7), so downstream analysis scripts can
+    /// rely on them.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut o = String::with_capacity(1024);
+        let _ = write!(
+            o,
+            "{{\"num_workers\": {}, \"epochs_run\": {}, \"num_params\": {}, \
+             \"bytes_sent\": {}, \"bytes_recv\": {}, \"handshake_bytes\": {}, \
+             \"heartbeat_bytes\": {}, \"recoveries\": {}, \"deadline_misses\": {}, \
+             \"stragglers\": {}, \"peak_workspace_bytes\": {}",
+            self.num_workers,
+            self.epochs_run,
+            self.num_params,
+            self.bytes_sent,
+            self.bytes_recv,
+            self.handshake_bytes,
+            self.heartbeat_bytes,
+            self.recoveries,
+            self.deadline_misses,
+            self.stragglers,
+            self.peak_workspace_bytes
+        );
+        for (name, v) in [
+            ("handshake_s", self.handshake_seconds),
+            ("train_s", self.train_seconds),
+            ("recovery_s", self.recovery_seconds),
+            ("forward_s", self.forward_seconds),
+            ("backward_s", self.backward_seconds),
+            ("serialize_s", self.serialize_seconds),
+            ("optim_s", self.optim_seconds),
+            ("bytes_per_epoch", self.bytes_per_epoch()),
+            ("bytes_per_epoch_per_param", self.bytes_per_epoch_per_param()),
+        ] {
+            let _ = write!(o, ", \"{name}\": ");
+            json_num(&mut o, v);
+        }
+        o.push_str(", \"per_rank\": [");
+        for (i, r) in self.per_rank.iter().enumerate() {
+            if i > 0 {
+                o.push_str(", ");
+            }
+            let _ = write!(
+                o,
+                "{{\"rank\": {}, \"steps\": {}, \"peak_workspace_bytes\": {}",
+                r.rank, r.steps, r.peak_workspace_bytes
+            );
+            for (name, v) in [
+                ("compute_s", r.compute_seconds),
+                ("forward_s", r.forward_seconds),
+                ("backward_s", r.backward_seconds),
+                ("serialize_s", r.serialize_seconds),
+            ] {
+                let _ = write!(o, ", \"{name}\": ");
+                json_num(&mut o, v);
+            }
+            o.push('}');
+        }
+        o.push_str("]}");
+        o
     }
 }
 
@@ -837,10 +939,15 @@ pub struct ProcBackend {
     recv_states: RefCell<Vec<proto::StepResultRecv>>,
     /// Per-selected-worker completion flags (reused).
     recv_done: RefCell<Vec<bool>>,
+    /// This epoch's decoded phase breakdowns, by selected index (reused).
+    step_phases: RefCell<Vec<proto::StepPhases>>,
+    /// Cumulative per-rank phase telemetry over the run, indexed by rank.
+    rank_phases: RefCell<Vec<RankPhases>>,
 }
 
 impl ProcBackend {
     fn new(fleet: FleetCtl) -> ProcBackend {
+        let num_parts = fleet.num_parts;
         ProcBackend {
             cpu: CpuBackend::new(),
             wire_digests: fleet.wire_digests,
@@ -855,6 +962,10 @@ impl ProcBackend {
             encoded: RefCell::new(proto::EncodedParams::new()),
             recv_states: RefCell::new(Vec::new()),
             recv_done: RefCell::new(Vec::new()),
+            step_phases: RefCell::new(Vec::new()),
+            rank_phases: RefCell::new(
+                (0..num_parts).map(|rank| RankPhases { rank, ..Default::default() }).collect(),
+            ),
         }
     }
 
@@ -938,6 +1049,7 @@ impl ProcBackend {
         selected: &[usize],
         picks: &[Option<usize>],
         outs: &mut [(TrainOut, f64)],
+        bcast_end: Instant,
     ) -> Result<()> {
         let mut states = self.recv_states.borrow_mut();
         states.clear();
@@ -986,7 +1098,7 @@ impl ProcBackend {
                 if let Some(wire) = polled {
                     self.bytes_recv.set(self.bytes_recv.get() + wire);
                     let recv = w.recv.borrow();
-                    let secs = proto::decode_step_result_into(
+                    let phases = proto::decode_step_result_into(
                         recv.payload(),
                         &mut outs[i].0,
                         self.wire_digests,
@@ -994,7 +1106,41 @@ impl ProcBackend {
                         .with_context(|| {
                             format!("decoding step result from worker rank {}", w.rank)
                         })?;
-                    outs[i].1 = secs;
+                    outs[i].1 = phases.compute_seconds;
+                    self.step_phases.borrow_mut()[i] = phases;
+                    // Synthesize the rank's phase spans under its own
+                    // logical pid (rank + 1), anchored at the broadcast
+                    // end — the earliest instant the worker could have
+                    // started computing on the shared trace clock. The
+                    // serialize span shown is the *previous* step's
+                    // (protocol v5 contract); it is drawn after backward
+                    // as an ordering approximation (DESIGN.md §7).
+                    if crate::obs::trace::enabled() {
+                        // Clamp before Duration::from_secs_f64: a corrupt
+                        // frame (CRC off) must degrade the profile, not
+                        // panic the coordinator.
+                        let clamp = |s: f64| {
+                            if s.is_finite() && s >= 0.0 {
+                                s.min(86_400.0)
+                            } else {
+                                0.0
+                            }
+                        };
+                        let (fwd, bwd, ser) = (
+                            clamp(phases.forward_seconds),
+                            clamp(phases.backward_seconds),
+                            clamp(phases.serialize_seconds),
+                        );
+                        let pid = w.rank as u32 + 1;
+                        let t_fwd = bcast_end;
+                        let t_bwd = t_fwd + Duration::from_secs_f64(fwd);
+                        let t_ser = t_bwd + Duration::from_secs_f64(bwd);
+                        crate::obs::trace::record_synth("forward", pid, 0, t_fwd, fwd);
+                        crate::obs::trace::record_synth("backward", pid, 0, t_bwd, bwd);
+                        if ser > 0.0 {
+                            crate::obs::trace::record_synth("serialize", pid, 0, t_ser, ser);
+                        }
+                    }
                     done[i] = true;
                     pending -= 1;
                     moved = true;
@@ -1084,7 +1230,9 @@ impl Backend for ProcBackend {
         // where neither the broadcast (buffered send succeeds into a dead
         // socket) nor the collect would notice promptly.
         if health.heartbeat_every > 0 && epoch % health.heartbeat_every == 0 {
+            let t_hb = Instant::now();
             self.heartbeat_sweep(workers, &health)?;
+            crate::obs::trace::record_since("heartbeat", t_hb);
         }
         // Broadcast phase: every selected worker gets its Step frame before
         // any read, so the remote processes compute concurrently. The
@@ -1093,7 +1241,10 @@ impl Backend for ProcBackend {
         // buffer reused across epochs.
         {
             let mut encoded = self.encoded.borrow_mut();
+            let t_enc = Instant::now();
             encoded.encode_from(&params.data)?;
+            crate::obs::trace::record_since("encode", t_enc);
+            let t_wire = Instant::now();
             for (&wi, pick) in selected.iter().zip(picks) {
                 let w = &workers[wi];
                 let wrote = proto::write_step_encoded(
@@ -1125,6 +1276,13 @@ impl Backend for ProcBackend {
                 };
                 self.bytes_sent.set(self.bytes_sent.get() + n);
             }
+            crate::obs::trace::record_since("wire_write", t_wire);
+        }
+        let bcast_end = Instant::now();
+        {
+            let mut sp = self.step_phases.borrow_mut();
+            sp.clear();
+            sp.resize(selected.len(), proto::StepPhases::default());
         }
         // Collect phase: readiness-polled, overlapped. Slot `i` of `outs`
         // is worker `selected[i]` — results land by rank regardless of
@@ -1141,23 +1299,60 @@ impl Backend for ProcBackend {
                 .set_nonblocking(true)
                 .with_context(|| format!("worker rank {}: nonblocking", workers[wi].rank))?;
         }
-        let collect = self.collect_overlapped(workers, selected, picks, outs);
+        let collect = self.collect_overlapped(workers, selected, picks, outs, bcast_end);
         // Always restore blocking mode (the handshake/shutdown paths and
         // the next epoch's broadcast expect it), even when collect failed.
         for &wi in selected {
             let _ = workers[wi].stream.borrow().set_nonblocking(false);
         }
         collect?;
-        // Straggler scan over the compute telemetry that just arrived
-        // (detection only — a slow worker's partial sum is still folded).
-        self.stragglers.borrow_mut().observe(
-            health.straggler_factor,
-            health.straggler_floor,
-            epoch,
-            outs.iter()
-                .zip(selected.iter())
-                .map(|((_, dt), &wi)| (workers[wi].rank, *dt)),
-        );
+        crate::obs::trace::record_since("collect", bcast_end);
+        // Fold this epoch's wire phase breakdowns into the per-rank
+        // run totals the ledger summary reports.
+        {
+            let sp = self.step_phases.borrow();
+            let mut rp = self.rank_phases.borrow_mut();
+            for (p, &wi) in sp.iter().zip(selected.iter()) {
+                let r = &mut rp[workers[wi].rank];
+                r.steps += 1;
+                r.compute_seconds += p.compute_seconds;
+                r.forward_seconds += p.forward_seconds;
+                r.backward_seconds += p.backward_seconds;
+                r.serialize_seconds += p.serialize_seconds;
+                r.peak_workspace_bytes = r.peak_workspace_bytes.max(p.peak_workspace_bytes);
+            }
+        }
+        // Straggler scan over the phase telemetry that just arrived
+        // (detection only — a slow worker's partial sum is still folded);
+        // the fwd/bwd/serialize split feeds the warn line's attribution.
+        {
+            let sp = self.step_phases.borrow();
+            self.stragglers.borrow_mut().observe_phases(
+                health.straggler_factor,
+                health.straggler_floor,
+                epoch,
+                sp.iter().zip(selected.iter()).map(|(p, &wi)| (workers[wi].rank, *p)),
+            );
+        }
+        // One fleet line per epoch at debug level: where every rank spent
+        // its step. Gated so the default run formats nothing.
+        if crate::util::logging::enabled(crate::util::logging::Level::Debug) {
+            use std::fmt::Write as _;
+            let sp = self.step_phases.borrow();
+            let mut line = String::with_capacity(64 * selected.len());
+            for (p, &wi) in sp.iter().zip(selected.iter()) {
+                let _ = write!(
+                    line,
+                    " r{}[fwd {:.1}ms bwd {:.1}ms ser {:.1}ms ws {}KiB]",
+                    workers[wi].rank,
+                    p.forward_seconds * 1e3,
+                    p.backward_seconds * 1e3,
+                    p.serialize_seconds * 1e3,
+                    p.peak_workspace_bytes / 1024
+                );
+            }
+            crate::log_debug!("epoch {epoch} fleet:{line}");
+        }
         Ok(())
     }
 
@@ -1261,7 +1456,7 @@ fn train_fleet(
     let eval = engine.prepare_eval(ds)?;
     let mut run: Run<ProcBackend> = Run::from_workers(workers, metas, model, RunMode::AllParts);
     let t_train = Instant::now();
-    let (history, checkpoint, _timer) =
+    let (history, checkpoint, timer) =
         engine.train_resumable(&mut run, Some(&eval), cfg, resume)?;
     stats.train_seconds = t_train.elapsed().as_secs_f64();
     stats.epochs_run = history.epochs.len();
@@ -1270,6 +1465,14 @@ fn train_fleet(
     stats.heartbeat_bytes = engine.backend.heartbeat_bytes.get();
     stats.deadline_misses = engine.backend.deadline_misses.get();
     stats.stragglers = engine.backend.stragglers.borrow().flagged;
+    stats.optim_seconds = timer.total("optim").as_secs_f64();
+    stats.per_rank = engine.backend.rank_phases.borrow().clone();
+    for r in &stats.per_rank {
+        stats.forward_seconds += r.forward_seconds;
+        stats.backward_seconds += r.backward_seconds;
+        stats.serialize_seconds += r.serialize_seconds;
+        stats.peak_workspace_bytes = stats.peak_workspace_bytes.max(r.peak_workspace_bytes);
+    }
 
     // Clean shutdown: one frame each, then reap.
     let mut handshake_bytes_end = 0u64;
@@ -1324,5 +1527,92 @@ mod tests {
         assert!(msg.contains("duplicate") && msg.contains("rank 1"), "{msg}");
         let err = check_hello(&Frame::Shutdown, 3, &taken).unwrap_err();
         assert!(format!("{err:#}").contains("expected Hello"), "{err:#}");
+    }
+
+    /// `DistStats::to_json` is a published schema: the ledger summary's
+    /// `"dist"` object. Downstream scripts key on these names, so adding a
+    /// field is fine but renaming or dropping one is a breaking change
+    /// this test is meant to catch.
+    #[test]
+    fn dist_stats_json_field_names_are_stable() {
+        use crate::util::json;
+        let stats = DistStats {
+            num_workers: 2,
+            epochs_run: 4,
+            num_params: 100,
+            bytes_sent: 3200,
+            bytes_recv: 3300,
+            handshake_bytes: 512,
+            handshake_seconds: 0.2,
+            train_seconds: 1.5,
+            recoveries: 1,
+            deadline_misses: 0,
+            stragglers: 2,
+            heartbeat_bytes: 64,
+            recovery_seconds: 0.3,
+            forward_seconds: 0.6,
+            backward_seconds: 0.5,
+            serialize_seconds: 0.05,
+            optim_seconds: 0.1,
+            peak_workspace_bytes: 4096,
+            per_rank: vec![
+                RankPhases {
+                    rank: 0,
+                    steps: 4,
+                    compute_seconds: 0.55,
+                    forward_seconds: 0.3,
+                    backward_seconds: 0.25,
+                    serialize_seconds: 0.02,
+                    peak_workspace_bytes: 4096,
+                },
+                RankPhases { rank: 1, steps: 4, ..Default::default() },
+            ],
+        };
+        let doc = json::parse(stats.to_json().as_bytes()).expect("to_json is valid JSON");
+        for key in [
+            "num_workers",
+            "epochs_run",
+            "num_params",
+            "bytes_sent",
+            "bytes_recv",
+            "handshake_bytes",
+            "heartbeat_bytes",
+            "recoveries",
+            "deadline_misses",
+            "stragglers",
+            "peak_workspace_bytes",
+            "handshake_s",
+            "train_s",
+            "recovery_s",
+            "forward_s",
+            "backward_s",
+            "serialize_s",
+            "optim_s",
+            "bytes_per_epoch",
+            "bytes_per_epoch_per_param",
+            "per_rank",
+        ] {
+            assert!(doc.get(key).is_some(), "schema field {key} missing from to_json");
+        }
+        assert_eq!(doc.get("num_workers").and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(doc.get("forward_s").and_then(|v| v.as_f64()), Some(0.6));
+        let per_rank = doc.get("per_rank").and_then(|v| v.as_arr()).expect("per_rank array");
+        assert_eq!(per_rank.len(), 2);
+        for key in [
+            "rank",
+            "steps",
+            "peak_workspace_bytes",
+            "compute_s",
+            "forward_s",
+            "backward_s",
+            "serialize_s",
+        ] {
+            assert!(per_rank[0].get(key).is_some(), "per_rank field {key} missing");
+        }
+        assert_eq!(per_rank[1].get("rank").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(
+            doc.get("bytes_per_epoch").and_then(|v| v.as_f64()),
+            Some((3200.0 + 3300.0) / 4.0)
+        );
     }
 }

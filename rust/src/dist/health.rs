@@ -7,14 +7,17 @@
 //! giving up (`max_recoveries` — the backstop against a deadline set
 //! shorter than an honest epoch, which would otherwise respawn forever).
 //!
-//! [`StragglerMonitor`] turns the per-epoch `compute_seconds` telemetry
-//! the workers already report into straggler warnings: a rank whose step
+//! [`StragglerMonitor`] turns the per-epoch phase telemetry the workers
+//! report (protocol v5 [`StepPhases`]: compute with its forward/backward
+//! split, plus serialize time) into straggler warnings: a rank whose step
 //! took more than `straggler_factor ×` the fleet median (and more than an
 //! absolute floor, so microsecond-scale jitter on tiny shards never
-//! trips it) is logged and counted. Detection only — a slow-but-correct
-//! worker still contributes its partial sum, so recovery would *change*
-//! nothing and risk plenty.
+//! trips it) is logged — with the phase attribution, so the warn line says
+//! *where* the rank lost the time — and counted. Detection only — a
+//! slow-but-correct worker still contributes its partial sum, so recovery
+//! would *change* nothing and risk plenty.
 
+use super::proto::StepPhases;
 use std::time::Duration;
 
 /// Liveness + recovery policy for one multi-process run.
@@ -85,8 +88,32 @@ impl StragglerMonitor {
     where
         I: Iterator<Item = (usize, f64)> + Clone,
     {
+        self.observe_phases(
+            factor,
+            floor,
+            epoch,
+            times.map(|(rank, t)| (rank, StepPhases { compute_seconds: t, ..Default::default() })),
+        )
+    }
+
+    /// Feed one epoch's full `(rank, StepPhases)` telemetry. Thresholding
+    /// is on `compute_seconds` (the signal that stalls the collect phase);
+    /// the warn line attributes the loss to forward vs backward vs
+    /// serialize so an operator can tell a thermal-throttled GEMM from a
+    /// slow disk/NIC without attaching a profiler. Returns how many ranks
+    /// were flagged this epoch.
+    pub fn observe_phases<I>(
+        &mut self,
+        factor: f64,
+        floor: Duration,
+        epoch: usize,
+        phases: I,
+    ) -> usize
+    where
+        I: Iterator<Item = (usize, StepPhases)> + Clone,
+    {
         self.scratch.clear();
-        self.scratch.extend(times.clone().map(|(_, t)| t));
+        self.scratch.extend(phases.clone().map(|(_, p)| p.compute_seconds));
         if self.scratch.len() < 2 {
             return 0; // a fleet of one has no peers to lag behind
         }
@@ -94,12 +121,16 @@ impl StragglerMonitor {
         let median = self.scratch[self.scratch.len() / 2];
         let threshold = (median * factor).max(floor.as_secs_f64());
         let mut n = 0;
-        for (rank, t) in times {
-            if t > threshold {
+        for (rank, p) in phases {
+            if p.compute_seconds > threshold {
                 crate::log_warn!(
-                    "epoch {epoch}: rank {rank} straggling — {:.1}ms vs fleet median {:.1}ms",
-                    t * 1e3,
-                    median * 1e3
+                    "epoch {epoch}: rank {rank} straggling — {:.1}ms vs fleet median {:.1}ms \
+                     (fwd {:.1}ms, bwd {:.1}ms, ser {:.1}ms)",
+                    p.compute_seconds * 1e3,
+                    median * 1e3,
+                    p.forward_seconds * 1e3,
+                    p.backward_seconds * 1e3,
+                    p.serialize_seconds * 1e3
                 );
                 n += 1;
             }
@@ -128,6 +159,29 @@ mod tests {
         let even = [(0usize, 0.2f64), (1, 0.21), (2, 0.2)];
         assert_eq!(mon.observe(1.5, floor, 2, even.iter().copied()), 0);
         assert_eq!(mon.flagged, 1);
+    }
+
+    #[test]
+    fn observe_phases_thresholds_on_compute_seconds() {
+        let mut mon = StragglerMonitor::new();
+        let floor = Duration::from_millis(100);
+        let mk = |c: f64| StepPhases {
+            compute_seconds: c,
+            forward_seconds: c * 0.6,
+            backward_seconds: c * 0.4,
+            serialize_seconds: 0.001,
+            peak_workspace_bytes: 1 << 20,
+        };
+        let fleet = [(0usize, mk(0.01)), (1, mk(0.012)), (2, mk(0.5))];
+        assert_eq!(mon.observe_phases(3.0, floor, 0, fleet.iter().copied()), 1);
+        assert_eq!(mon.flagged, 1);
+        // A rank slow only in serialize does not trip the compute threshold.
+        let wire_bound = [
+            (0usize, mk(0.01)),
+            (1, StepPhases { serialize_seconds: 5.0, ..mk(0.011) }),
+            (2, mk(0.012)),
+        ];
+        assert_eq!(mon.observe_phases(3.0, floor, 1, wire_bound.iter().copied()), 0);
     }
 
     #[test]

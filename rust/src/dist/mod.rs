@@ -19,7 +19,9 @@
 //!   training loop is byte-for-byte the in-process one.
 //! * [`health`] — the liveness policy ([`HealthOptions`]): per-epoch
 //!   collect deadlines, between-epoch heartbeat sweeps, straggler
-//!   detection from `compute_seconds` telemetry, and recovery budgets.
+//!   detection from the per-step phase telemetry every `StepResult`
+//!   carries (protocol v5: compute with its forward/backward split,
+//!   serialize time, peak workspace), and recovery budgets.
 //! * [`fault`] — the chaos-injection shim (`COFREE_CHAOS`): kills, hangs
 //!   and delays workers at exact frame boundaries so `tests/chaos.rs` can
 //!   prove recovery is bit-exact; plus on-disk corruption injectors
@@ -50,7 +52,8 @@ pub mod shard;
 pub mod worker;
 
 pub use coordinator::{
-    train_over_hosts, train_over_shards, DistStats, ProcBackend, ProcOptions, Transport,
+    train_over_hosts, train_over_shards, DistStats, ProcBackend, ProcOptions, RankPhases,
+    Transport,
 };
 pub use fsck::{fsck, FileVerdict, FsckReport};
 pub use health::HealthOptions;

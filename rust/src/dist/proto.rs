@@ -66,7 +66,12 @@ use std::os::unix::net::UnixStream;
 /// `wire_digests` flag, which arms an optional CRC-32C trailer on the
 /// two tensor-carrying frames (`Step`/`StepResult`). The trailer is off
 /// by default — the default wire bytes are unchanged from v3 framing.
-pub const PROTO_VERSION: u32 = 4;
+/// v5: `StepResult` carries a fixed-size phase breakdown ([`StepPhases`]:
+/// compute split into forward/backward, previous step's serialize time,
+/// peak workspace bytes) after `compute_seconds` and before the tensor
+/// list — per-rank phase telemetry piggybacks on the frame the worker
+/// already sends, so observability costs zero extra round trips.
+pub const PROTO_VERSION: u32 = 5;
 
 /// Sanity cap on a single frame payload (1 GiB). Applies to the two
 /// tensor-carrying frames (`Step`, `StepResult`).
@@ -219,6 +224,32 @@ impl Write for Stream {
     }
 }
 
+/// The fixed-size per-step phase breakdown a worker piggybacks on every
+/// `StepResult` (protocol v5): where the rank's wall-clock went, so the
+/// coordinator can aggregate per-rank telemetry, feed the straggler
+/// monitor compute-only signals, and synthesize worker spans in
+/// `--trace-out` profiles — all without extra frames or round trips.
+///
+/// Wire layout (after the `TrainOut` scalars, before the tensor list):
+/// `compute_seconds f64 | forward_seconds f64 | backward_seconds f64 |
+/// serialize_seconds f64 | peak_workspace_bytes u64` — 40 bytes, fixed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepPhases {
+    /// Total step compute (forward + loss + backward), seconds.
+    pub compute_seconds: f64,
+    /// The forward pass alone, seconds.
+    pub forward_seconds: f64,
+    /// Loss + backward, seconds (`compute - forward` up to clock reads).
+    pub backward_seconds: f64,
+    /// Time spent encoding + writing the *previous* step's result frame
+    /// (a frame cannot carry the duration of its own write; 0.0 on the
+    /// first step of a session).
+    pub serialize_seconds: f64,
+    /// Peak bytes held by the worker's workspace arena (sized once at
+    /// handshake, never grown — see `ModelWorkspace::bytes`).
+    pub peak_workspace_bytes: u64,
+}
+
 /// A decoded protocol message.
 #[derive(Clone, Debug)]
 pub enum Frame {
@@ -236,7 +267,7 @@ pub enum Frame {
     },
     Meta { local_train_weight: f64, tmask_sum: f64, num_masks: u32 },
     Step { pick: Option<usize>, params: Vec<Vec<f32>> },
-    StepResult { out: TrainOut, compute_seconds: f64 },
+    StepResult { out: TrainOut, phases: StepPhases },
     Shutdown,
     /// Liveness probe (coordinator → worker, between epochs). The nonce
     /// comes back in the matching [`Frame::Pong`] so a stale reply can
@@ -250,6 +281,25 @@ pub enum Frame {
     /// and decide between aborting (corruption is permanent) and
     /// recycling the worker (transient).
     Fault { code: u8, detail: String },
+}
+
+fn put_phases(w: &mut impl Write, p: &StepPhases) -> Result<()> {
+    binio::write_f64(w, p.compute_seconds)?;
+    binio::write_f64(w, p.forward_seconds)?;
+    binio::write_f64(w, p.backward_seconds)?;
+    binio::write_f64(w, p.serialize_seconds)?;
+    binio::write_u64(w, p.peak_workspace_bytes)?;
+    Ok(())
+}
+
+fn get_phases(r: &mut impl Read) -> Result<StepPhases> {
+    Ok(StepPhases {
+        compute_seconds: binio::read_f64(r)?,
+        forward_seconds: binio::read_f64(r)?,
+        backward_seconds: binio::read_f64(r)?,
+        serialize_seconds: binio::read_f64(r)?,
+        peak_workspace_bytes: binio::read_u64(r)?,
+    })
 }
 
 fn put_tensor_list(w: &mut impl Write, tensors: &[Vec<f32>]) -> Result<()> {
@@ -327,11 +377,11 @@ fn encode_payload(frame: &Frame, payload: &mut Vec<u8>) -> Result<u8> {
             put_tensor_list(payload, params)?;
             TAG_STEP
         }
-        Frame::StepResult { out, compute_seconds } => {
+        Frame::StepResult { out, phases } => {
             binio::write_f32(payload, out.loss_sum)?;
             binio::write_f32(payload, out.weight_sum)?;
             binio::write_f32(payload, out.correct)?;
-            binio::write_f64(payload, *compute_seconds)?;
+            put_phases(payload, phases)?;
             put_tensor_list(payload, &out.grads)?;
             TAG_STEP_RESULT
         }
@@ -438,7 +488,7 @@ pub fn write_step(
 pub fn write_step_result_buffered(
     w: &mut impl Write,
     out: &TrainOut,
-    compute_seconds: f64,
+    phases: &StepPhases,
     payload: &mut Vec<u8>,
     digests: bool,
 ) -> Result<u64> {
@@ -446,7 +496,7 @@ pub fn write_step_result_buffered(
     binio::write_f32(payload, out.loss_sum)?;
     binio::write_f32(payload, out.weight_sum)?;
     binio::write_f32(payload, out.correct)?;
-    binio::write_f64(payload, compute_seconds)?;
+    put_phases(payload, phases)?;
     put_tensor_list(payload, &out.grads)?;
     if digests {
         let d = crc32c(payload);
@@ -583,12 +633,9 @@ pub fn decode_frame(tag: u8, payload: &[u8]) -> Result<Frame> {
             let loss_sum = binio::read_f32(&mut p)?;
             let weight_sum = binio::read_f32(&mut p)?;
             let correct = binio::read_f32(&mut p)?;
-            let compute_seconds = binio::read_f64(&mut p)?;
+            let phases = get_phases(&mut p)?;
             let grads = get_tensor_list(&mut p)?;
-            Frame::StepResult {
-                out: TrainOut { loss_sum, weight_sum, correct, grads },
-                compute_seconds,
-            }
+            Frame::StepResult { out: TrainOut { loss_sum, weight_sum, correct, grads }, phases }
         }
         TAG_SHUTDOWN => Frame::Shutdown,
         TAG_PING => Frame::Ping { nonce: binio::read_u64(&mut p)? },
@@ -662,16 +709,20 @@ pub fn decode_step_into(
 }
 
 /// Decode a `StepResult` payload into a reused [`TrainOut`]; returns the
-/// worker's compute seconds. Allocation-free once the gradient shapes are
-/// established. With `digests`, the payload's CRC-32C trailer is verified
-/// and stripped first.
-pub fn decode_step_result_into(payload: &[u8], out: &mut TrainOut, digests: bool) -> Result<f64> {
+/// worker's phase breakdown (v5 telemetry). Allocation-free once the
+/// gradient shapes are established. With `digests`, the payload's CRC-32C
+/// trailer is verified and stripped first.
+pub fn decode_step_result_into(
+    payload: &[u8],
+    out: &mut TrainOut,
+    digests: bool,
+) -> Result<StepPhases> {
     let payload = if digests { strip_verified_trailer(payload, "StepResult")? } else { payload };
     let mut p: &[u8] = payload;
     out.loss_sum = binio::read_f32(&mut p)?;
     out.weight_sum = binio::read_f32(&mut p)?;
     out.correct = binio::read_f32(&mut p)?;
-    let compute_seconds = binio::read_f64(&mut p)?;
+    let phases = get_phases(&mut p)?;
     let k = binio::read_u32(&mut p)? as usize;
     ensure!(k <= 4096, "corrupt frame: {k} tensors");
     if out.grads.len() != k {
@@ -681,7 +732,7 @@ pub fn decode_step_result_into(payload: &[u8], out: &mut TrainOut, digests: bool
         get_f32s_into(&mut p, g)?;
     }
     ensure!(p.is_empty(), "StepResult frame: {} trailing payload bytes", p.len());
-    Ok(compute_seconds)
+    Ok(phases)
 }
 
 /// Incremental reader of one `StepResult` frame for nonblocking sockets:
@@ -856,9 +907,16 @@ mod tests {
             correct: 7.0,
             grads: vec![vec![0.1f32, -0.0, f32::NAN], vec![1e-30]],
         };
-        match roundtrip(&Frame::StepResult { out: out.clone(), compute_seconds: 0.125 }) {
-            Frame::StepResult { out: got, compute_seconds } => {
-                assert_eq!(compute_seconds, 0.125);
+        let sent = StepPhases {
+            compute_seconds: 0.125,
+            forward_seconds: 0.08,
+            backward_seconds: 0.045,
+            serialize_seconds: 0.003,
+            peak_workspace_bytes: 123_456,
+        };
+        match roundtrip(&Frame::StepResult { out: out.clone(), phases: sent }) {
+            Frame::StepResult { out: got, phases } => {
+                assert_eq!(phases, sent);
                 assert_eq!(got.loss_sum, out.loss_sum);
                 assert_eq!(got.weight_sum, out.weight_sum);
                 assert_eq!(got.correct, out.correct);
@@ -927,12 +985,18 @@ mod tests {
             correct: 3.0,
             grads: vec![vec![0.25f32; 65], vec![-1.0]],
         };
+        let phases = StepPhases {
+            compute_seconds: 0.5,
+            forward_seconds: 0.3,
+            backward_seconds: 0.2,
+            serialize_seconds: 0.01,
+            peak_workspace_bytes: 4096,
+        };
         let mut a = Vec::new();
-        write_frame(&mut a, &Frame::StepResult { out: out.clone(), compute_seconds: 0.5 })
-            .unwrap();
+        write_frame(&mut a, &Frame::StepResult { out: out.clone(), phases }).unwrap();
         let mut b = Vec::new();
         let mut scratch = Vec::new();
-        write_step_result_buffered(&mut b, &out, 0.5, &mut scratch, false).unwrap();
+        write_step_result_buffered(&mut b, &out, &phases, &mut scratch, false).unwrap();
         assert_eq!(a, b, "buffered writer must emit identical bytes");
         // And the in-place decoder reads it back bit-exactly into a reused
         // TrainOut.
@@ -941,8 +1005,8 @@ mod tests {
         let (tag, payload, _) = read_frame_into(&mut r, &mut fb).unwrap();
         assert_eq!(tag, TAG_STEP_RESULT);
         let mut got = TrainOut::default();
-        let secs = decode_step_result_into(payload, &mut got, false).unwrap();
-        assert_eq!(secs, 0.5);
+        let got_phases = decode_step_result_into(payload, &mut got, false).unwrap();
+        assert_eq!(got_phases, phases);
         assert_eq!(got.grads, out.grads);
         assert_eq!(got.loss_sum, out.loss_sum);
     }
@@ -973,8 +1037,14 @@ mod tests {
             grads: vec![vec![1.0f32, 2.0, 3.0]],
         };
         let mut wire = Vec::new();
-        write_frame(&mut wire, &Frame::StepResult { out: out.clone(), compute_seconds: 2.0 })
-            .unwrap();
+        let phases = StepPhases {
+            compute_seconds: 2.0,
+            forward_seconds: 1.25,
+            backward_seconds: 0.75,
+            serialize_seconds: 0.125,
+            peak_workspace_bytes: 9_001,
+        };
+        write_frame(&mut wire, &Frame::StepResult { out: out.clone(), phases }).unwrap();
         let mut src = Dribble { data: &wire, pos: 0 };
         let mut recv = StepResultRecv::new();
         let mut fb = FrameBuf::new();
@@ -989,8 +1059,8 @@ mod tests {
         };
         assert_eq!(wire_len as usize, wire.len());
         let mut got = TrainOut::default();
-        let secs = decode_step_result_into(fb.payload(), &mut got, false).unwrap();
-        assert_eq!(secs, 2.0);
+        let got_phases = decode_step_result_into(fb.payload(), &mut got, false).unwrap();
+        assert_eq!(got_phases, phases);
         assert_eq!(got.grads, out.grads);
     }
 
@@ -1077,12 +1147,19 @@ mod tests {
         };
         let mut b = Vec::new();
         let mut scratch = Vec::new();
-        write_step_result_buffered(&mut b, &out, 0.5, &mut scratch, true).unwrap();
+        let phases = StepPhases {
+            compute_seconds: 0.5,
+            forward_seconds: 0.3,
+            backward_seconds: 0.2,
+            serialize_seconds: 0.01,
+            peak_workspace_bytes: 4096,
+        };
+        write_step_result_buffered(&mut b, &out, &phases, &mut scratch, true).unwrap();
         let mut r: &[u8] = &b;
         let (tag, payload, _) = read_frame_into(&mut r, &mut fb).unwrap();
         assert_eq!(tag, TAG_STEP_RESULT);
         let mut got = TrainOut::default();
-        assert_eq!(decode_step_result_into(payload, &mut got, true).unwrap(), 0.5);
+        assert_eq!(decode_step_result_into(payload, &mut got, true).unwrap(), phases);
         assert_eq!(got.grads, out.grads);
         let mut bad = payload.to_vec();
         let k = bad.len() - 2; // flip inside the trailer itself
@@ -1163,7 +1240,7 @@ mod tests {
                     correct: 0.0,
                     grads: vec![vec![1.0f32; 8]],
                 },
-                compute_seconds: 0.1,
+                phases: StepPhases { compute_seconds: 0.1, ..Default::default() },
             },
         )
         .unwrap();

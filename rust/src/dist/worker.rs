@@ -195,6 +195,7 @@ fn serve(shard: &MappedShard, stream: Stream) -> Result<usize> {
 /// tests feeding malformed bytes) slot in transparently.
 fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result<usize> {
     let rank = shard.part_id;
+    crate::util::logging::set_rank(rank);
     proto::write_frame(
         stream,
         &Frame::Hello {
@@ -248,6 +249,13 @@ fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result
     let mut out = TrainOut::default();
     let mut result_payload: Vec<u8> = Vec::new();
     let mut steps = 0usize;
+    // The workspace arena is sized once and never grows — its byte count
+    // IS the peak, reported with every step (protocol v5 phase breakdown).
+    let peak_workspace_bytes = ws.bytes();
+    // Serialize time of the *previous* step's result (encode + write);
+    // 0.0 on the first step — the current step's own serialize time is
+    // only known after its result frame is already on the wire.
+    let mut last_serialize = 0.0f64;
     loop {
         let (tag, payload, _) = proto::read_frame_into(stream, &mut frame_buf)?;
         match tag {
@@ -275,15 +283,26 @@ fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result
                     None => batch.emask().as_f32(),
                 };
                 let t0 = Instant::now();
-                cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws, &mut out);
+                let (forward_seconds, backward_seconds) = cpu::train_step_into_timed(
+                    &model, &params, &batch, &csr, emask, &mut ws, &mut out,
+                );
                 let compute_seconds = t0.elapsed().as_secs_f64();
+                let phases = proto::StepPhases {
+                    compute_seconds,
+                    forward_seconds,
+                    backward_seconds,
+                    serialize_seconds: last_serialize,
+                    peak_workspace_bytes,
+                };
+                let t1 = Instant::now();
                 proto::write_step_result_buffered(
                     stream,
                     &out,
-                    compute_seconds,
+                    &phases,
                     &mut result_payload,
                     wire_digests,
                 )?;
+                last_serialize = t1.elapsed().as_secs_f64();
                 steps += 1;
             }
             proto::TAG_PING => {

@@ -1,0 +1,215 @@
+//! The structured run ledger: `cofree train --metrics-out metrics.jsonl`.
+//!
+//! One JSON object per line (JSONL), so a crashed run still leaves a
+//! parseable prefix — every epoch record is flushed and fsynced the moment
+//! it is written, and each line is self-describing via its `"record"` key:
+//!
+//! * `{"record": "epoch", ...}` — one per trained epoch: loss, accuracies
+//!   (null on non-eval epochs), epoch wall-clock, max per-worker compute,
+//!   and the coordinator's per-phase seconds for that epoch.
+//! * `{"record": "summary", ...}` — appended once after training: best
+//!   val/test, cumulative phase totals, the metrics-registry snapshot,
+//!   and (proc transport) [`DistStats::to_json`] with its per-rank phase
+//!   breakdowns.
+//!
+//! The epoch records are written by the engine (both transports share the
+//! same loop); the summary is appended by the CLI after training returns,
+//! because only the CLI sees the [`DistStats`] the proc coordinator folds.
+//! This is the artifact `bench_*` harnesses and future serving/ABC
+//! comparisons consume — a schema table lives in DESIGN.md §7.
+
+use crate::dist::DistStats;
+use crate::train::metrics::{EpochStats, History};
+use crate::util::binio;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Emit an f64 as JSON: finite values verbatim, NaN/inf as `null` (JSON
+/// has no non-finite literals; val/test accuracy are NaN on non-eval
+/// epochs by contract).
+fn push_num(out: &mut String, v: f64) {
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn push_phases(out: &mut String, phases: &[(&str, f64)]) {
+    out.push('{');
+    for (i, (name, secs)) in phases.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "\"{name}_s\": ");
+        push_num(out, *secs);
+    }
+    out.push('}');
+}
+
+/// The per-epoch half of the ledger, owned by the training loop. Created
+/// with truncate semantics (a re-run replaces the previous ledger), parent
+/// directory fsynced so the file's existence is durable before the first
+/// record lands.
+pub struct Ledger {
+    f: File,
+    path: PathBuf,
+    line: String,
+}
+
+impl Ledger {
+    pub fn create(path: &Path) -> Result<Ledger> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating ledger directory {}", parent.display()))?;
+            }
+        }
+        let f = File::create(path)
+            .with_context(|| format!("creating run ledger {}", path.display()))?;
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                binio::sync_dir(parent)?;
+            }
+        }
+        Ok(Ledger { f, path: path.to_path_buf(), line: String::with_capacity(512) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one epoch record and make it durable (flush + fdatasync):
+    /// a run that dies in epoch N leaves records 0..N intact on disk.
+    pub fn write_epoch(&mut self, s: &EpochStats, phases: &[(&str, f64)]) -> Result<()> {
+        self.line.clear();
+        let _ =
+            write!(self.line, "{{\"record\": \"epoch\", \"epoch\": {}, \"train_loss\": ", s.epoch);
+        push_num(&mut self.line, s.train_loss);
+        self.line.push_str(", \"train_acc\": ");
+        push_num(&mut self.line, s.train_acc);
+        self.line.push_str(", \"val_acc\": ");
+        push_num(&mut self.line, s.val_acc);
+        self.line.push_str(", \"test_acc\": ");
+        push_num(&mut self.line, s.test_acc);
+        self.line.push_str(", \"epoch_s\": ");
+        push_num(&mut self.line, s.iter_time);
+        self.line.push_str(", \"max_worker_s\": ");
+        push_num(&mut self.line, s.max_worker_time);
+        self.line.push_str(", \"phases\": ");
+        push_phases(&mut self.line, phases);
+        self.line.push_str("}\n");
+        self.f
+            .write_all(self.line.as_bytes())
+            .and_then(|()| self.f.flush())
+            .and_then(|()| self.f.sync_data())
+            .with_context(|| format!("appending epoch record to {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// Append the final run-summary record: best accuracies, cumulative phase
+/// totals, wire/fleet stats (proc transport), and the metrics-registry
+/// snapshot. Fully fsynced (file + parent directory) before returning.
+pub fn append_summary(
+    path: &Path,
+    history: &History,
+    phases: &[(&str, f64)],
+    dist: Option<&DistStats>,
+) -> Result<()> {
+    let (best_val, test_at_best) = history.best();
+    let total_s: f64 = history.epochs.iter().map(|e| e.iter_time).sum();
+    let mut line = String::with_capacity(1024);
+    let _ = write!(
+        line,
+        "{{\"record\": \"summary\", \"epochs\": {}, \"best_val_acc\": ",
+        history.epochs.len()
+    );
+    push_num(&mut line, best_val);
+    line.push_str(", \"test_at_best\": ");
+    push_num(&mut line, test_at_best);
+    line.push_str(", \"total_s\": ");
+    push_num(&mut line, total_s);
+    line.push_str(", \"phases\": ");
+    push_phases(&mut line, phases);
+    line.push_str(", \"dist\": ");
+    match dist {
+        Some(stats) => line.push_str(&stats.to_json()),
+        None => line.push_str("null"),
+    }
+    line.push_str(", \"metrics\": ");
+    line.push_str(&super::metrics::snapshot_json());
+    line.push_str("}\n");
+    let mut f = OpenOptions::new()
+        .append(true)
+        .create(true)
+        .open(path)
+        .with_context(|| format!("opening run ledger {} for the summary", path.display()))?;
+    f.write_all(line.as_bytes())
+        .and_then(|()| f.flush())
+        .and_then(|()| f.sync_all())
+        .with_context(|| format!("appending summary record to {}", path.display()))?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            binio::sync_dir(parent)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn stats(epoch: usize, val: f64) -> EpochStats {
+        EpochStats {
+            epoch,
+            train_loss: 0.5,
+            train_acc: 0.75,
+            val_acc: val,
+            test_acc: val,
+            iter_time: 0.01,
+            max_worker_time: 0.008,
+        }
+    }
+
+    #[test]
+    fn ledger_lines_are_valid_jsonl_with_nan_as_null() {
+        let path = std::env::temp_dir()
+            .join(format!("cofree_ledger_test_{}.jsonl", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut l = Ledger::create(&path).unwrap();
+            l.write_epoch(&stats(0, f64::NAN), &[("execute", 0.008), ("optim", 0.001)]).unwrap();
+            l.write_epoch(&stats(1, 0.6), &[("execute", 0.009), ("optim", 0.001)]).unwrap();
+        }
+        let mut h = History::default();
+        h.push(stats(0, f64::NAN));
+        h.push(stats(1, 0.6));
+        append_summary(&path, &h, &[("execute", 0.017)], None).unwrap();
+
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let r0 = json::parse(lines[0].as_bytes()).expect("epoch 0 line parses");
+        assert_eq!(r0.get("record").and_then(|r| r.as_str()), Some("epoch"));
+        assert!(matches!(r0.get("val_acc"), Some(&json::Json::Null)), "NaN must render as null");
+        assert_eq!(
+            r0.get("phases").and_then(|p| p.get("execute_s")).and_then(|v| v.as_f64()),
+            Some(0.008)
+        );
+        let r1 = json::parse(lines[1].as_bytes()).unwrap();
+        assert_eq!(r1.get("val_acc").and_then(|v| v.as_f64()), Some(0.6));
+        let s = json::parse(lines[2].as_bytes()).expect("summary line parses");
+        assert_eq!(s.get("record").and_then(|r| r.as_str()), Some("summary"));
+        assert_eq!(s.get("epochs").and_then(|v| v.as_u64()), Some(2));
+        assert_eq!(s.get("best_val_acc").and_then(|v| v.as_f64()), Some(0.6));
+        assert!(matches!(s.get("dist"), Some(&json::Json::Null)));
+        assert!(s.get("metrics").and_then(|m| m.get("counters")).is_some());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,303 @@
+//! The process-global metrics registry: counters, gauges, histograms.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Zero allocation on the update path.** Handles are `&'static`
+//!    references obtained once (registration leaks one small allocation per
+//!    metric, absorbed by warm-up); every subsequent `add`/`set`/`observe`
+//!    is one or two atomic operations on preallocated storage. The
+//!    steady-state epoch contract (`tests/alloc_steady.rs`) holds with
+//!    metrics enabled.
+//! 2. **Lock-light.** The registry mutex guards registration and snapshot
+//!    only, never updates; hot loops fetch their handles before entering.
+//! 3. **No dependencies.** Snapshots render to JSON by hand (the repo-wide
+//!    idiom); `util/json.rs` parses them back in tests.
+//!
+//! Histograms are fixed-bucket: bounds are a `&'static [f64]` supplied at
+//! registration, bucket counts live in a preallocated array (`bounds.len()
+//! + 1` slots, the last one catching overflow), and the running sum is an
+//! f64 maintained by compare-and-swap on its bit pattern.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A monotonically increasing counter.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins f64 value (stored as its bit pattern).
+pub struct Gauge {
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    const fn new() -> Gauge {
+        Gauge { bits: AtomicU64::new(0) }
+    }
+
+    pub fn set(&self, v: f64) {
+        self.bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// A fixed-bucket histogram: `bounds` are upper edges (inclusive), the
+/// final implicit bucket catches everything above the last edge.
+pub struct Histogram {
+    bounds: &'static [f64],
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    fn new(bounds: &'static [f64]) -> Histogram {
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]),
+            "histogram bounds must be strictly increasing"
+        );
+        let buckets = (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram { bounds, buckets, count: AtomicU64::new(0), sum_bits: AtomicU64::new(0) }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(cur) + v).to_bits();
+            let swap =
+                self.sum_bits.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed);
+            match swap {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+enum Slot {
+    C(&'static Counter),
+    G(&'static Gauge),
+    H(&'static Histogram),
+}
+
+static REGISTRY: Mutex<Vec<(&'static str, Slot)>> = Mutex::new(Vec::new());
+
+/// Get-or-register the named counter. Panics if `name` is already
+/// registered as a different kind (a programmer error, not a runtime one).
+pub fn counter(name: &'static str) -> &'static Counter {
+    let mut reg = REGISTRY.lock().expect("metrics registry poisoned");
+    for (n, slot) in reg.iter() {
+        if *n == name {
+            match slot {
+                Slot::C(c) => return c,
+                _ => panic!("metric {name:?} already registered as a non-counter"),
+            }
+        }
+    }
+    let c: &'static Counter = Box::leak(Box::new(Counter::new()));
+    reg.push((name, Slot::C(c)));
+    c
+}
+
+/// Get-or-register the named gauge.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    let mut reg = REGISTRY.lock().expect("metrics registry poisoned");
+    for (n, slot) in reg.iter() {
+        if *n == name {
+            match slot {
+                Slot::G(g) => return g,
+                _ => panic!("metric {name:?} already registered as a non-gauge"),
+            }
+        }
+    }
+    let g: &'static Gauge = Box::leak(Box::new(Gauge::new()));
+    reg.push((name, Slot::G(g)));
+    g
+}
+
+/// Get-or-register the named histogram. The first registration fixes the
+/// bucket bounds; later calls return the existing instance regardless of
+/// the bounds they pass.
+pub fn histogram(name: &'static str, bounds: &'static [f64]) -> &'static Histogram {
+    let mut reg = REGISTRY.lock().expect("metrics registry poisoned");
+    for (n, slot) in reg.iter() {
+        if *n == name {
+            match slot {
+                Slot::H(h) => return h,
+                _ => panic!("metric {name:?} already registered as a non-histogram"),
+            }
+        }
+    }
+    let h: &'static Histogram = Box::leak(Box::new(Histogram::new(bounds)));
+    reg.push((name, Slot::H(h)));
+    h
+}
+
+fn push_f64(out: &mut String, v: f64) {
+    use std::fmt::Write as _;
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Render every registered metric as one JSON object, keys sorted so the
+/// output is deterministic:
+/// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
+pub fn snapshot_json() -> String {
+    use std::fmt::Write as _;
+    let reg = REGISTRY.lock().expect("metrics registry poisoned");
+    let mut counters: Vec<(&str, u64)> = Vec::new();
+    let mut gauges: Vec<(&str, f64)> = Vec::new();
+    let mut hists: Vec<(&str, &'static Histogram)> = Vec::new();
+    for (name, slot) in reg.iter() {
+        match slot {
+            Slot::C(c) => counters.push((name, c.get())),
+            Slot::G(g) => gauges.push((name, g.get())),
+            Slot::H(h) => hists.push((name, h)),
+        }
+    }
+    drop(reg);
+    counters.sort_by_key(|&(n, _)| n);
+    gauges.sort_by_key(|&(n, _)| n);
+    hists.sort_by_key(|&(n, _)| n);
+
+    let mut out = String::from("{\"counters\": {");
+    for (i, (n, v)) in counters.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "\"{n}\": {v}");
+    }
+    out.push_str("}, \"gauges\": {");
+    for (i, (n, v)) in gauges.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "\"{n}\": ");
+        push_f64(&mut out, *v);
+    }
+    out.push_str("}, \"histograms\": {");
+    for (i, (n, h)) in hists.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "\"{n}\": {{\"bounds\": [");
+        for (j, b) in h.bounds.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            push_f64(&mut out, *b);
+        }
+        out.push_str("], \"buckets\": [");
+        for (j, b) in h.buckets.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{}", b.load(Ordering::Relaxed));
+        }
+        let _ = write!(out, "], \"count\": {}, \"sum\": ", h.count());
+        push_f64(&mut out, h.sum());
+        out.push('}');
+    }
+    out.push_str("}}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn counters_gauges_histograms_round_trip_through_json() {
+        // Unique names: the registry is process-global and tests share it.
+        let c = counter("test.mx.requests");
+        c.add(3);
+        c.inc();
+        assert_eq!(c.get(), 4);
+        let g = gauge("test.mx.queue_depth");
+        g.set(2.5);
+        static BOUNDS: [f64; 3] = [0.001, 0.01, 0.1];
+        let h = histogram("test.mx.latency_s", &BOUNDS);
+        h.observe(0.0005); // bucket 0
+        h.observe(0.05); // bucket 2
+        h.observe(5.0); // overflow bucket
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 5.0505).abs() < 1e-12);
+
+        let snap = snapshot_json();
+        let doc = json::parse(snap.as_bytes()).expect("snapshot is valid JSON");
+        let c_v = doc.get("counters").and_then(|c| c.get("test.mx.requests"));
+        assert_eq!(c_v.and_then(|v| v.as_u64()), Some(4));
+        let g_v = doc.get("gauges").and_then(|g| g.get("test.mx.queue_depth"));
+        assert_eq!(g_v.and_then(|v| v.as_f64()), Some(2.5));
+        let h_v = doc.get("histograms").and_then(|h| h.get("test.mx.latency_s")).unwrap();
+        let buckets = h_v.get("buckets").and_then(|b| b.as_arr()).unwrap();
+        assert_eq!(buckets.len(), 4);
+        assert_eq!(buckets[0].as_u64(), Some(1));
+        assert_eq!(buckets[2].as_u64(), Some(1));
+        assert_eq!(buckets[3].as_u64(), Some(1));
+        assert_eq!(h_v.get("count").and_then(|v| v.as_u64()), Some(3));
+    }
+
+    #[test]
+    fn get_or_register_returns_the_same_instance() {
+        let a = counter("test.mx.same");
+        a.add(7);
+        let b = counter("test.mx.same");
+        assert_eq!(b.get(), 7);
+        assert!(std::ptr::eq(a, b));
+    }
+
+    #[test]
+    fn registered_updates_do_not_allocate() {
+        // The update path must be pure atomics: no formatting, no Vec
+        // growth. (The allocation *count* is asserted end-to-end by
+        // tests/alloc_steady.rs with a counting global allocator; here we
+        // just pin the API shape that makes it possible.)
+        let c = counter("test.mx.hotpath");
+        static BOUNDS: [f64; 2] = [1.0, 2.0];
+        let h = histogram("test.mx.hotpath_h", &BOUNDS);
+        for i in 0..1000 {
+            c.inc();
+            h.observe(i as f64 / 500.0);
+        }
+        assert_eq!(c.get(), 1000);
+        assert_eq!(h.count(), 1000);
+    }
+}

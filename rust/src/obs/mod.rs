@@ -1,0 +1,32 @@
+//! Observability: the measurement substrate for the performance claims.
+//!
+//! The paper's headline is a *performance* number, so the runtime has to be
+//! able to say where an epoch's time went — per phase, per rank — without
+//! perturbing the thing it measures. Three pieces, all dependency-free:
+//!
+//! * [`metrics`] — a process-global, lock-light registry of named counters,
+//!   gauges and fixed-bucket histograms. Handles are `&'static`; updates
+//!   are single atomic ops, so instrumented code stays allocation-free in
+//!   the steady state (`tests/alloc_steady.rs` proves it with telemetry
+//!   enabled).
+//! * [`trace`] — cheap begin/end spans into preallocated per-thread ring
+//!   buffers (drop-oldest on overflow, surfaced as a counter), exported as
+//!   Chrome trace-event JSON (`cofree train --trace-out trace.json`, open
+//!   in Perfetto / `chrome://tracing`). The coordinator and each worker
+//!   rank map to distinct pids.
+//! * [`ledger`] — the structured run ledger (`--metrics-out m.jsonl`): one
+//!   durable JSON line per epoch plus a final run-summary record, written
+//!   with the durable-write helpers so a crashed run still leaves a
+//!   parseable artifact.
+//!
+//! The hard rule, shared with the wire protocol's determinism contract:
+//! telemetry reads clocks and atomics only — it never draws RNG, never
+//! reorders a float op — so the training trajectory is bit-identical with
+//! or without it (`tests/dist_proc.rs` asserts this over real processes).
+
+pub mod ledger;
+pub mod metrics;
+pub mod trace;
+
+pub use ledger::{append_summary, Ledger};
+pub use trace::{span, Span};

@@ -1,0 +1,377 @@
+//! Span tracing into preallocated per-thread ring buffers, exported as
+//! Chrome trace-event JSON (open in Perfetto or `chrome://tracing`).
+//!
+//! The recording path is built for the steady-state epoch contract:
+//!
+//! * **Disabled is one atomic load.** [`span`]/[`record_since`] check a
+//!   global flag and return immediately when tracing is off, so the
+//!   default run pays one relaxed load per call site.
+//! * **Enabled is clock + ring write.** Each thread owns a ring of
+//!   [`RING_CAPACITY`] fixed-size events, allocated on the thread's first
+//!   record (absorbed by warm-up) and never grown. When a ring is full the
+//!   **oldest** event is overwritten and the `obs.trace.dropped` counter
+//!   is bumped — profiling a long run keeps the most recent window rather
+//!   than erroring or allocating.
+//! * **No RNG, no float ops** — enabling tracing cannot perturb the
+//!   training trajectory (`tests/dist_proc.rs` asserts bit-identity).
+//!
+//! Events carry an explicit logical `pid`/`tid` so one trace file can show
+//! the whole fleet: the coordinator process records under pid 0 (tids are
+//! per-thread), and the coordinator *synthesizes* spans for worker rank
+//! `r` under pid `r + 1` from the phase breakdown each `StepResult`
+//! carries (protocol v5) — workers never write trace files of their own.
+
+use crate::util::binio;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events retained per thread before drop-oldest kicks in (~640 KiB/thread
+/// at 40 bytes per event).
+pub const RING_CAPACITY: usize = 16 * 1024;
+
+#[derive(Clone, Copy)]
+struct Event {
+    name: &'static str,
+    pid: u32,
+    tid: u32,
+    start_us: u64,
+    dur_us: u64,
+}
+
+struct Ring {
+    events: Vec<Event>,
+    head: usize, // next write slot once the ring is full
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        if self.events.len() < RING_CAPACITY {
+            self.events.push(ev);
+        } else {
+            self.events[self.head] = ev;
+            self.head = (self.head + 1) % RING_CAPACITY;
+            dropped_counter().inc();
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static RINGS: Mutex<Vec<Arc<Mutex<Ring>>>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+/// Logical pid this process records under (0 = coordinator).
+static LOGICAL_PID: AtomicU32 = AtomicU32::new(0);
+
+fn dropped_counter() -> &'static super::metrics::Counter {
+    static C: OnceLock<&'static super::metrics::Counter> = OnceLock::new();
+    C.get_or_init(|| super::metrics::counter("obs.trace.dropped"))
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<(u32, Arc<Mutex<Ring>>)>> = const { RefCell::new(None) };
+}
+
+/// Turn recording on (idempotent). Also pins the trace clock epoch and
+/// registers the overflow counter, so no later call allocates lazily on
+/// the hot path.
+pub fn enable() {
+    let _ = EPOCH.get_or_init(Instant::now);
+    let _ = dropped_counter();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn recording off (spans become no-ops again; recorded events stay
+/// buffered for export).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Set the logical pid this process records under. The coordinator keeps
+/// the default 0; nothing else currently needs another value because
+/// worker spans are synthesized coordinator-side.
+pub fn set_logical_pid(pid: u32) {
+    LOGICAL_PID.store(pid, Ordering::Relaxed);
+}
+
+fn now_us() -> u64 {
+    EPOCH.get().map(|e| e.elapsed().as_micros() as u64).unwrap_or(0)
+}
+
+fn instant_us(t: Instant) -> u64 {
+    let e = match EPOCH.get() {
+        Some(e) => *e,
+        None => return 0,
+    };
+    t.checked_duration_since(e).map(|d| d.as_micros() as u64).unwrap_or(0)
+}
+
+fn push_event(ev: Event) {
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            // First record on this thread: allocate its ring once and
+            // register it for export. Warm-up absorbs this allocation.
+            let ring = Arc::new(Mutex::new(Ring {
+                events: Vec::with_capacity(RING_CAPACITY),
+                head: 0,
+            }));
+            let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+            RINGS.lock().expect("trace rings poisoned").push(Arc::clone(&ring));
+            *slot = Some((tid, ring));
+        }
+        let (tid, ring) = slot.as_ref().expect("just initialized");
+        let mut ev = ev;
+        if ev.tid == u32::MAX {
+            ev.tid = *tid;
+        }
+        ring.lock().expect("trace ring poisoned").push(ev);
+    });
+}
+
+/// RAII span: records one complete (`ph: "X"`) event on drop. Obtain via
+/// [`span`]; when tracing is disabled the guard is inert.
+pub struct Span {
+    name: &'static str,
+    t0: Option<Instant>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(t0) = self.t0 {
+            record_since(self.name, t0);
+        }
+    }
+}
+
+/// Begin a span; it ends (and records) when the guard drops.
+pub fn span(name: &'static str) -> Span {
+    Span { name, t0: if enabled() { Some(Instant::now()) } else { None } }
+}
+
+/// Record a completed span that began at `t0` and ends now.
+pub fn record_since(name: &'static str, t0: Instant) {
+    if !enabled() {
+        return;
+    }
+    let start = instant_us(t0);
+    push_event(Event {
+        name,
+        pid: LOGICAL_PID.load(Ordering::Relaxed),
+        tid: u32::MAX,
+        start_us: start,
+        dur_us: now_us().saturating_sub(start),
+    });
+}
+
+/// Record a completed span on the current thread's ring with an explicit
+/// start anchor and an externally measured duration — used when a phase
+/// split is timed inside a kernel and mirrored into the trace afterwards.
+pub fn record_at(name: &'static str, start: Instant, dur_s: f64) {
+    if !enabled() {
+        return;
+    }
+    push_event(Event {
+        name,
+        pid: LOGICAL_PID.load(Ordering::Relaxed),
+        tid: u32::MAX,
+        start_us: instant_us(start),
+        dur_us: (dur_s * 1e6) as u64,
+    });
+}
+
+/// Record a span on behalf of another logical process — the coordinator
+/// uses this to place worker-rank phases (from the wire breakdown) under
+/// their own pids. `start` anchors the span on the shared trace clock;
+/// `dur_s` is the remotely measured duration.
+pub fn record_synth(name: &'static str, pid: u32, tid: u32, start: Instant, dur_s: f64) {
+    if !enabled() {
+        return;
+    }
+    push_event(Event {
+        name,
+        pid,
+        tid,
+        start_us: instant_us(start),
+        dur_us: (dur_s * 1e6) as u64,
+    });
+}
+
+/// Total events overwritten by drop-oldest since startup.
+pub fn dropped() -> u64 {
+    dropped_counter().get()
+}
+
+/// Serializes tests that toggle the process-global [`enabled`] flag: the
+/// library test binary runs tests concurrently, and a `disable()` in one
+/// test would race-dependently strip spans another test is asserting on.
+#[cfg(test)]
+pub(crate) static TEST_FLAG_LOCK: Mutex<()> = Mutex::new(());
+
+fn collect() -> Vec<Event> {
+    let rings = RINGS.lock().expect("trace rings poisoned");
+    let mut all = Vec::new();
+    for ring in rings.iter() {
+        let ring = ring.lock().expect("trace ring poisoned");
+        // Oldest-first: [head..] then [..head] once the ring has wrapped.
+        all.extend_from_slice(&ring.events[ring.head..]);
+        all.extend_from_slice(&ring.events[..ring.head]);
+    }
+    all.sort_by_key(|e| e.start_us);
+    all
+}
+
+/// Render everything recorded so far as a Chrome trace-event JSON array:
+/// one `"ph": "M"` `process_name` metadata record per distinct pid
+/// (`coordinator` / `worker rN`), then the `"ph": "X"` complete events.
+pub fn chrome_trace_json() -> String {
+    use std::fmt::Write as _;
+    let events = collect();
+    let mut pids: Vec<u32> = events.iter().map(|e| e.pid).collect();
+    pids.sort_unstable();
+    pids.dedup();
+    let mut out = String::from("[\n");
+    let mut first = true;
+    for pid in pids {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let name =
+            if pid == 0 { "coordinator".to_string() } else { format!("worker r{}", pid - 1) };
+        let _ = write!(
+            out,
+            "{{\"name\": \"process_name\", \"ph\": \"M\", \"pid\": {pid}, \"tid\": 0, \"args\": {{\"name\": \"{name}\"}}}}"
+        );
+    }
+    for e in &events {
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        let _ = write!(
+            out,
+            "{{\"name\": \"{}\", \"ph\": \"X\", \"ts\": {}, \"dur\": {}, \"pid\": {}, \"tid\": {}}}",
+            e.name, e.start_us, e.dur_us, e.pid, e.tid
+        );
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+/// Write the Chrome trace to `path` atomically (tmp sibling + rename), so
+/// a crash mid-export never leaves a half-written file where a previous
+/// good trace was.
+pub fn write_chrome(path: &Path) -> Result<()> {
+    let json = chrome_trace_json();
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating trace directory {}", parent.display()))?;
+        }
+    }
+    let tmp = binio::tmp_sibling(path);
+    let guard = binio::TmpGuard::new(tmp.clone());
+    {
+        use std::io::Write as _;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating trace tmp {}", tmp.display()))?;
+        f.write_all(json.as_bytes())
+            .with_context(|| format!("writing trace tmp {}", tmp.display()))?;
+        f.sync_all().with_context(|| format!("fsyncing trace tmp {}", tmp.display()))?;
+    }
+    binio::commit_replace(&tmp, path)?;
+    guard.disarm();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn spans_record_and_export_as_chrome_trace_json() {
+        let _guard = TEST_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        enable();
+        {
+            let _s = span("test.trace.outer");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        record_synth("test.trace.worker_phase", 3, 0, Instant::now(), 0.001);
+        let text = chrome_trace_json();
+        let doc = json::parse(text.as_bytes()).expect("chrome trace is valid JSON");
+        let arr = doc.as_arr().expect("top level is an array");
+        assert!(!arr.is_empty());
+        let mut saw_outer = false;
+        let mut saw_worker_pid = false;
+        let mut saw_meta = false;
+        for ev in arr {
+            let name = ev.get("name").and_then(|n| n.as_str()).unwrap();
+            let ph = ev.get("ph").and_then(|p| p.as_str()).unwrap();
+            match ph {
+                "M" => {
+                    assert_eq!(name, "process_name");
+                    saw_meta = true;
+                }
+                "X" => {
+                    assert!(ev.get("ts").and_then(|t| t.as_f64()).is_some());
+                    assert!(ev.get("dur").and_then(|t| t.as_f64()).is_some());
+                    if name == "test.trace.outer" {
+                        let dur = ev.get("dur").and_then(|t| t.as_f64()).unwrap();
+                        assert!(dur >= 1_000.0, "2ms span recorded {dur}us");
+                        saw_outer = true;
+                    }
+                    if name == "test.trace.worker_phase" {
+                        assert_eq!(ev.get("pid").and_then(|p| p.as_u64()), Some(3));
+                        saw_worker_pid = true;
+                    }
+                }
+                other => panic!("unexpected ph {other:?}"),
+            }
+        }
+        assert!(saw_meta && saw_outer && saw_worker_pid);
+    }
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let _guard = TEST_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        // A fresh thread has no ring; when tracing is off, the span guard
+        // must not create one.
+        std::thread::spawn(|| {
+            disable();
+            let before = dropped();
+            {
+                let _s = span("test.trace.noop");
+            }
+            record_since("test.trace.noop2", Instant::now());
+            assert_eq!(dropped(), before);
+            LOCAL.with(|slot| assert!(slot.borrow().is_none(), "disabled span touched the ring"));
+        })
+        .join()
+        .unwrap();
+    }
+
+    #[test]
+    fn overflow_drops_oldest_and_counts() {
+        let _guard = TEST_FLAG_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::thread::spawn(|| {
+            enable();
+            let t0 = Instant::now();
+            let before = dropped();
+            for _ in 0..RING_CAPACITY + 10 {
+                record_since("test.trace.flood", t0);
+            }
+            assert!(dropped() >= before + 10, "overflow was not surfaced as a counter");
+        })
+        .join()
+        .unwrap();
+    }
+}

@@ -43,7 +43,7 @@ use crate::util::rng::Rng;
 use anyhow::Result;
 use rayon::prelude::*;
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 pub use sage::{EdgeCsr, ForwardState};
 
@@ -94,21 +94,43 @@ pub fn train_step_into(
     ws: &mut ModelWorkspace,
     out: &mut TrainOut,
 ) {
+    let _ = train_step_into_timed(model, params, batch, csr, emask, ws, out);
+}
+
+/// [`train_step_into`] with the phase split the telemetry plane reports:
+/// returns `(forward_seconds, backward_seconds)`, where backward includes
+/// the loss/gradient seeding. Identical float operations in identical
+/// order — the clock reads around the phases are the only difference, so
+/// the trajectory stays bit-identical with telemetry on or off.
+pub fn train_step_into_timed(
+    model: &ModelConfig,
+    params: &ParamSet,
+    batch: &TrainBatch,
+    csr: &EdgeCsr,
+    emask: &[f32],
+    ws: &mut ModelWorkspace,
+    out: &mut TrainOut,
+) -> (f64, f64) {
     let n = batch.n_pad;
     let feat = batch.tensors[0].as_f32();
     let dar = batch.tensors[4].as_f32();
     let labels = batch.tensors[5].as_i32();
     let tmask = batch.tensors[6].as_f32();
+    let t0 = Instant::now();
     forward_into(model, params, feat, emask, csr, n, ws);
+    let forward_seconds = t0.elapsed().as_secs_f64();
     // The DAR-weighted softmax-CE loss is architecture-independent: it
     // reads the workspace logits and leaves the logits gradient where
     // every model's backward expects it.
+    let t1 = Instant::now();
     let (loss_sum, weight_sum, correct) = sage::loss_grad_into(model, dar, labels, tmask, n, ws);
     ensure_grad_shapes(model, out);
     backward_into(model, params, feat, emask, csr, n, ws, &mut out.grads);
+    let backward_seconds = t1.elapsed().as_secs_f64();
     out.loss_sum = loss_sum as f32;
     out.weight_sum = weight_sum as f32;
     out.correct = correct as f32;
+    (forward_seconds, backward_seconds)
 }
 
 /// Model-dispatching forward pass into a caller-owned workspace (the
@@ -269,8 +291,17 @@ impl Backend for CpuBackend {
                 };
                 let t0 = Instant::now();
                 let mut ws = w.scratch.lock().expect("worker scratch poisoned");
-                train_step_into(&w.model, params, &w.batch, &w.csr, emask, &mut ws, &mut slot.0);
+                let (fwd, bwd) = train_step_into_timed(
+                    &w.model, params, &w.batch, &w.csr, emask, &mut ws, &mut slot.0,
+                );
                 slot.1 = t0.elapsed().as_secs_f64();
+                // Mirror the split into the trace ring (rayon threads get
+                // distinct tids); inert single-atomic-load when disabled.
+                if crate::obs::trace::enabled() {
+                    crate::obs::trace::record_at("forward", t0, fwd);
+                    let t_bwd = t0 + Duration::from_secs_f64(fwd);
+                    crate::obs::trace::record_at("backward", t_bwd, bwd);
+                }
             });
         Ok(())
     }

@@ -75,6 +75,11 @@ pub struct TrainConfig {
     /// Where periodic checkpoints land (atomic rename: the file is always
     /// a complete snapshot). Required when `checkpoint_every > 0`.
     pub checkpoint_path: Option<PathBuf>,
+    /// Run-ledger path (`cofree train --metrics-out metrics.jsonl`): one
+    /// durable JSON line per epoch (`None` = no ledger). The CLI appends
+    /// the final summary record after training returns — see
+    /// [`crate::obs::ledger`].
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl Default for TrainConfig {
@@ -90,9 +95,16 @@ impl Default for TrainConfig {
             log_every: 0,
             checkpoint_every: 0,
             checkpoint_path: None,
+            metrics_out: None,
         }
     }
 }
+
+/// Histogram bucket bounds for epoch wall-clock (seconds): log-spaced from
+/// sub-millisecond toy graphs to minutes-long epochs; the last bucket is
+/// the overflow.
+const EPOCH_SECONDS_BOUNDS: &[f64] =
+    &[0.001, 0.005, 0.02, 0.1, 0.5, 2.0, 10.0, 60.0, 300.0];
 
 /// How the workers are scheduled each iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -399,6 +411,19 @@ impl<B: Backend> TrainEngine<B> {
             (Some(path), every) if every > 0 => Some(AsyncCheckpointer::spawn(path.clone())),
             _ => None,
         };
+        let mut ledger = match &cfg.metrics_out {
+            Some(path) => Some(
+                crate::obs::Ledger::create(path)
+                    .with_context(|| format!("creating run ledger {}", path.display()))?,
+            ),
+            None => None,
+        };
+        // Metric handles resolved once, before the loop: registry lookups
+        // take a mutex, but updates through the handles are pure atomics,
+        // so the steady-state epoch stays allocation- and lock-free.
+        let m_epochs = crate::obs::metrics::counter("train.epochs");
+        let m_steps = crate::obs::metrics::counter("train.steps");
+        let m_epoch_s = crate::obs::metrics::histogram("train.epoch_seconds", EPOCH_SECONDS_BOUNDS);
         history.epochs.reserve(cfg.epochs.saturating_sub(start_epoch));
         for epoch in 0..cfg.epochs {
             // Rotate mode: one random batch this epoch; AllParts: everyone.
@@ -427,7 +452,8 @@ impl<B: Backend> TrainEngine<B> {
             acc.reset();
             let t0 = Instant::now();
             self.backend.run_workers(&run.workers, &selected, &picks, &params, &mut outs)?;
-            timer.add("execute", t0.elapsed());
+            let execute_s = t0.elapsed().as_secs_f64();
+            timer.add_span("execute", t0);
             // The only cross-worker traffic: sum gradients, in worker order.
             let t1 = Instant::now();
             let mut max_worker = 0f64;
@@ -437,7 +463,8 @@ impl<B: Backend> TrainEngine<B> {
                 epoch_weight += run.meta[wi].local_train_weight;
                 acc.add(out);
             }
-            timer.add("allreduce", t1.elapsed());
+            let allreduce_s = t1.elapsed().as_secs_f64();
+            timer.add_span("allreduce", t1);
             let t2 = Instant::now();
             let epoch_scale = match run.mode {
                 RunMode::AllParts => scale,
@@ -451,8 +478,8 @@ impl<B: Backend> TrainEngine<B> {
                 }
             };
             opt.step(&mut params.data, acc.grads(), epoch_scale);
-            timer.add("optim", t2.elapsed());
             let optim_s = t2.elapsed().as_secs_f64();
+            timer.add_span("optim", t2);
             if let Some(ck) = ck_writer.as_mut() {
                 // Snapshot the *post-step* state every N epochs (skipping
                 // the final epoch — the run's own checkpoint covers it).
@@ -498,6 +525,16 @@ impl<B: Backend> TrainEngine<B> {
                     "epoch {epoch:4} loss={train_loss:.4} train_acc={train_acc:.3} val={val_acc:.3} test={test_acc:.3} iter={:.1}ms",
                     stats.iter_time * 1e3
                 );
+            }
+            m_epochs.inc();
+            m_steps.add(selected.len() as u64);
+            m_epoch_s.observe(stats.iter_time);
+            crate::obs::trace::record_since("epoch", t0);
+            if let Some(l) = ledger.as_mut() {
+                l.write_epoch(
+                    &stats,
+                    &[("execute", execute_s), ("allreduce", allreduce_s), ("optim", optim_s)],
+                )?;
             }
             history.push(stats);
         }

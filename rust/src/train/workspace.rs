@@ -115,6 +115,26 @@ impl ModelWorkspace {
     pub fn logits(&self) -> &[f32] {
         self.outs.last().expect("forward_into ran")
     }
+
+    /// Total bytes held by the arena's buffers. Buffers are sized once in
+    /// [`ModelWorkspace::new`] and never grown, so this is also the peak —
+    /// the number workers report over the wire (protocol v5) and the run
+    /// ledger records per rank.
+    pub fn bytes(&self) -> u64 {
+        let f32s = |vs: &[Vec<f32>]| vs.iter().map(|v| v.len()).sum::<usize>();
+        let flat = f32s(&self.outs)
+            + f32s(&self.msgs)
+            + f32s(&self.aggs)
+            + f32s(&self.combs)
+            + f32s(&self.denoms)
+            + self.dbuf_a.len()
+            + self.dbuf_b.len()
+            + self.dagg.len()
+            + self.dmsg.len()
+            + self.dh_msg.len();
+        (flat * std::mem::size_of::<f32>()
+            + self.per_node.len() * std::mem::size_of::<(f64, f64, f64)>()) as u64
+    }
 }
 
 /// Size `out`'s gradient tensors to the model's parameter layout without

@@ -3,13 +3,20 @@
 //! We avoid external logging crates (the build is fully offline); this gives
 //! the coordinator structured, timestamped progress lines controlled by
 //! `COFREE_LOG` (error|warn|info|debug|trace, default info).
+//!
+//! Multi-process fleets interleave every process's stderr on one terminal;
+//! worker processes call [`set_rank`] once they know their shard's rank, so
+//! their lines carry an `rN` tag and remain attributable.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 static LEVEL: AtomicU8 = AtomicU8::new(2); // info
 static INIT: std::sync::Once = std::sync::Once::new();
-static mut START: Option<Instant> = None;
+static START: OnceLock<Instant> = OnceLock::new();
+/// Worker rank tag; negative = unset (coordinator / single process).
+static RANK: AtomicI64 = AtomicI64::new(-1);
 
 /// Log severity, ordered from quietest to loudest.
 #[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
@@ -45,12 +52,17 @@ impl Level {
 /// Initialise the logger (idempotent). Reads `COFREE_LOG`.
 pub fn init() {
     INIT.call_once(|| {
-        // SAFETY: guarded by Once; written exactly once before any read.
-        unsafe { START = Some(Instant::now()) };
+        let _ = START.get_or_init(Instant::now);
         if let Ok(v) = std::env::var("COFREE_LOG") {
             LEVEL.store(Level::parse(&v) as u8, Ordering::Relaxed);
         }
     });
+}
+
+/// Tag every subsequent log line from this process with `rN` — called by
+/// worker processes once the shard tells them their rank.
+pub fn set_rank(rank: usize) {
+    RANK.store(rank as i64, Ordering::Relaxed);
 }
 
 /// Override the level programmatically.
@@ -70,11 +82,13 @@ pub fn log(level: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(level) {
         return;
     }
-    let t = unsafe {
-        #[allow(static_mut_refs)]
-        START.as_ref().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0)
-    };
-    eprintln!("[{t:9.3}s {}] {args}", level.tag());
+    let t = START.get().map(|s| s.elapsed().as_secs_f64()).unwrap_or(0.0);
+    let rank = RANK.load(Ordering::Relaxed);
+    if rank >= 0 {
+        eprintln!("[{t:9.3}s {} r{rank}] {args}", level.tag());
+    } else {
+        eprintln!("[{t:9.3}s {}] {args}", level.tag());
+    }
 }
 
 #[macro_export]

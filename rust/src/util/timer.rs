@@ -30,6 +30,15 @@ impl PhaseTimer {
         e.1 += 1;
     }
 
+    /// Record a span that began at `t0` and ends now, and mirror it into
+    /// the trace ring ([`crate::obs::trace`]) when tracing is enabled —
+    /// the upgrade path for existing `add(name, t0.elapsed())` call sites
+    /// that should also show up in `--trace-out` profiles.
+    pub fn add_span(&mut self, name: &'static str, t0: Instant) {
+        self.add(name, t0.elapsed());
+        crate::obs::trace::record_since(name, t0);
+    }
+
     /// Total accumulated time for a phase.
     pub fn total(&self, name: &str) -> Duration {
         self.acc.get(name).map(|e| e.0).unwrap_or(Duration::ZERO)

@@ -26,6 +26,13 @@ use cofree_gnn::train::model::ModelKind;
 use cofree_gnn::util::rng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Serializes the fixed-point epoch tests: span tracing is a process
+/// global, so the telemetry-enabled variant flipping it on while the
+/// plain variant is mid-measurement would change the plain run's
+/// allocation profile (first-record ring allocation) race-dependently.
+static EPOCH_TEST_LOCK: Mutex<()> = Mutex::new(());
 
 struct CountingAlloc;
 
@@ -62,6 +69,7 @@ fn alloc_count() -> u64 {
 /// Sage's.
 #[test]
 fn steady_state_epoch_allocates_nothing_for_every_model() {
+    let _guard = EPOCH_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
     let pool = rayon::ThreadPoolBuilder::new().num_threads(1).build().unwrap();
     pool.install(|| {
         // ~400 nodes / 2 partitions with DropEdge-K in play, so the epoch
@@ -111,6 +119,60 @@ fn steady_state_epoch_allocates_nothing_for_every_model() {
 
 fn before_to_now(before: u64) -> u64 {
     alloc_count() - before
+}
+
+/// The same fixed point with the observability hot path LIVE: metrics
+/// registry handles registered and span tracing enabled (the
+/// `--trace-out` configuration). Counters and histograms are bare
+/// atomics, spans land in a preallocated per-thread ring (allocated on
+/// the thread's first record, absorbed by the warm-up run), and the
+/// ledger stays off (`metrics_out: None` — `--metrics-out` buys a
+/// per-epoch fsync by design, which is durability, not instrumentation).
+/// One model suffices: the telemetry path is model-independent, and the
+/// per-model arena coverage is the test above.
+#[test]
+fn steady_state_epoch_stays_allocation_free_with_telemetry_enabled() {
+    let _guard = EPOCH_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    cofree_gnn::obs::trace::enable();
+    let pool = rayon::ThreadPoolBuilder::new().num_threads(1).build().unwrap();
+    pool.install(|| {
+        let ds = datasets::build("yelp-sim", 0.04, 7).unwrap();
+        let vc = VertexCut::create(
+            &ds.graph,
+            2,
+            algorithm("dbh").unwrap().as_ref(),
+            &mut Rng::new(11),
+        );
+        let run_with = |epochs: usize| -> u64 {
+            let mut engine = TrainEngine::native_model(ModelKind::Sage);
+            let mut run = engine
+                .prepare_partitions(&ds, &vc, Reweighting::Dar, Some((3, 0.4)), 11)
+                .unwrap();
+            let cfg = TrainConfig {
+                epochs,
+                eval_every: 0,
+                dropedge: Some((3, 0.4)),
+                seed: 11,
+                log_every: 0,
+                ..Default::default()
+            };
+            let before = alloc_count();
+            let (history, _params, _timer) = engine.train(&mut run, None, &cfg).unwrap();
+            assert_eq!(history.epochs.len(), epochs);
+            before_to_now(before)
+        };
+        let _ = run_with(4); // warm-up: ring + registry registrations
+        let short = run_with(4);
+        let long = run_with(24);
+        assert_eq!(
+            short, long,
+            "with telemetry enabled, 20 extra epochs performed {} extra heap \
+             allocations — spans/metrics must be recorded into preallocated \
+             storage (short run: {short})",
+            long.saturating_sub(short)
+        );
+    });
+    cofree_gnn::obs::trace::disable();
 }
 
 /// The compute core alone (no engine, no optimizer): repeated

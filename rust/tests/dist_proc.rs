@@ -253,6 +253,97 @@ fn gcn_proc_training_matches_inproc_bitwise() {
     assert_eq!(stats.num_params, params_in.num_elements());
 }
 
+/// Observability acceptance: a 2-worker proc run with BOTH telemetry
+/// surfaces active (`metrics_out` ledger + span tracing, the library side
+/// of `--metrics-out`/`--trace-out`) keeps the trajectory bit-identical
+/// to the uninstrumented inproc reference, leaves one valid JSONL epoch
+/// record per epoch plus a summary whose `dist.per_rank` covers every
+/// rank, and exports a Chrome trace with spans from the coordinator and
+/// every worker pid.
+#[test]
+fn telemetry_active_proc_run_is_bit_identical_and_artifacts_validate() {
+    use cofree_gnn::util::json;
+    let (p, seed, epochs) = (2usize, 11u64, 6usize);
+    let dropedge = Some((3usize, 0.4f64));
+    // Uninstrumented reference, trained before tracing is switched on.
+    let (h_in, params_in) = run_inproc(p, seed, dropedge, epochs);
+
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let dir = std::env::temp_dir().join(format!("cofree_dist_obs_{}_{p}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dist::write_shards(&ds, &vc, &weights, seed, &dir).unwrap();
+    let ledger = dir.join("metrics.jsonl");
+    let trace = dir.join("trace.json");
+
+    cofree_gnn::obs::trace::enable();
+    let opts = ProcOptions { transport: Transport::Tcp, ..ProcOptions::new(worker_bin()) };
+    let mut cfg = cfg_for(epochs, seed, dropedge);
+    cfg.metrics_out = Some(ledger.clone());
+    let (h_proc, ck, stats) = dist::train_over_shards(&ds, &dir, &cfg, &opts, None).unwrap();
+    cofree_gnn::obs::trace::write_chrome(&trace).unwrap();
+    cofree_gnn::obs::trace::disable();
+    cofree_gnn::obs::append_summary(
+        &ledger,
+        &h_proc,
+        &[("optim", stats.optim_seconds)],
+        Some(&stats),
+    )
+    .unwrap();
+
+    // Telemetry reads clocks and atomics only: same bits as the plain run.
+    assert_trajectories_identical(&h_in, &h_proc);
+    assert_eq!(params_in.data, ck.params.data, "telemetry perturbed the trajectory");
+
+    // Ledger: one epoch record per epoch, then the summary.
+    let text = std::fs::read_to_string(&ledger).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), epochs + 1, "ledger:\n{text}");
+    for (i, line) in lines.iter().take(epochs).enumerate() {
+        let r = json::parse(line.as_bytes()).expect("epoch record parses");
+        assert_eq!(r.get("record").and_then(|v| v.as_str()), Some("epoch"));
+        assert_eq!(r.get("epoch").and_then(|v| v.as_u64()), Some(i as u64));
+        assert!(r.get("epoch_s").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+    }
+    let s = json::parse(lines[epochs].as_bytes()).expect("summary record parses");
+    assert_eq!(s.get("record").and_then(|v| v.as_str()), Some("summary"));
+    assert_eq!(s.get("epochs").and_then(|v| v.as_u64()), Some(epochs as u64));
+    let per_rank = s
+        .get("dist")
+        .and_then(|d| d.get("per_rank"))
+        .and_then(|v| v.as_arr())
+        .expect("summary carries dist.per_rank");
+    assert_eq!(per_rank.len(), p, "one phase breakdown per rank");
+    for (rank, r) in per_rank.iter().enumerate() {
+        assert_eq!(r.get("rank").and_then(|v| v.as_u64()), Some(rank as u64));
+        assert_eq!(
+            r.get("steps").and_then(|v| v.as_u64()),
+            Some(epochs as u64),
+            "rank {rank} steps"
+        );
+        assert!(r.get("compute_s").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        assert!(r.get("forward_s").and_then(|v| v.as_f64()).is_some());
+        assert!(r.get("backward_s").and_then(|v| v.as_f64()).is_some());
+    }
+
+    // Trace: coordinator (pid 0) plus every worker rank (pid r+1).
+    let tdoc = json::parse(std::fs::read_to_string(&trace).unwrap().as_bytes())
+        .expect("trace parses as trace-event JSON");
+    let events = tdoc.as_arr().expect("trace is an array");
+    let mut pids: Vec<u64> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(|x| x.as_str()) == Some("X"))
+        .filter_map(|e| e.get("pid").and_then(|v| v.as_u64()))
+        .collect();
+    pids.sort_unstable();
+    pids.dedup();
+    for want in 0..=(p as u64) {
+        assert!(pids.contains(&want), "trace is missing spans for pid {want} (have {pids:?})");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 #[test]
 fn gin_proc_training_matches_inproc_bitwise() {
     let (p, seed, epochs) = (3usize, 71u64, 4usize);
