@@ -8,6 +8,9 @@
 //! * `COFREE_BENCH_PARTS` — partition count (default 8)
 //! * `COFREE_BENCH_ALGOS` — comma list of vertex cuts (default `greedy,hep`)
 //! * `COFREE_BENCH_OUT`   — output JSON path (default `BENCH_partition.json`)
+//! * `COFREE_BENCH_OOC_EDGES` / `COFREE_BENCH_OOC_BUDGET_MIB` — raw pair
+//!   count (default `edges/10`) and memory budget (default 4 MiB) of the
+//!   out-of-core ingest section
 //!
 //! Emits `BENCH_partition.json` so the perf trajectory is tracked in-repo:
 //! per graph and per algorithm, old/new seconds and speedups for build,
@@ -16,11 +19,14 @@
 //! are the retained pre-PR implementations (`build_reference`,
 //! `from_assignment_reference`, and frozen copies of the pre-PR greedy/HEP
 //! inner loops below), so the comparison stays honest as the fast paths
-//! evolve.
+//! evolve. An `out_of_core` section times `ingest::stream_shards` end to
+//! end at a fixed budget and asserts byte-parity with the in-memory store.
 
+use cofree_gnn::dist;
 use cofree_gnn::graph::generators::{chung_lu_pairs, power_law_degrees, rmat_pairs, RmatParams};
-use cofree_gnn::graph::{Graph, GraphBuilder};
-use cofree_gnn::partition::{algorithm, VertexCut};
+use cofree_gnn::graph::{Dataset, Graph, GraphBuilder};
+use cofree_gnn::ingest::{self, SliceSource, StreamAlgo, StreamDataset, StreamOptions};
+use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
 use cofree_gnn::util::rng::Rng;
 use std::fmt::Write as _;
 use std::time::Instant;
@@ -399,8 +405,76 @@ fn main() {
         ));
     }
 
+    // --- Out-of-core ingest ---------------------------------------------
+    // Fixed memory budget, R-MAT raw stream: edges/sec through the full
+    // streamed pipeline (sort → degrees → assign → materialize), spill
+    // volume, merge passes, and a byte-parity assertion against the
+    // in-memory store.
+    let ooc_edges = env_usize("COFREE_BENCH_OOC_EDGES", (target / 10).max(20_000));
+    let budget_mib = env_usize("COFREE_BENCH_OOC_BUDGET_MIB", 4);
+    let ooc_scale = ((ooc_edges / 10).max(2) as f64).log2().ceil() as u32;
+    let n = 1usize << ooc_scale;
+    let pairs = rmat_pairs(ooc_scale, ooc_edges, RmatParams::default(), &mut Rng::new(0xD15C));
+    let data = ingest::synth_node_data(n, 0xD15C);
+    let tmp = std::env::temp_dir().join(format!("cofree_bench_ooc_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    std::fs::create_dir_all(&tmp).unwrap();
+    let (mem_dir, stream_dir) = (tmp.join("mem"), tmp.join("stream"));
+    let ds = Dataset {
+        name: "bench-ooc".into(),
+        graph: GraphBuilder::new(n).edges(&pairs).build(),
+        data: data.clone(),
+        layers: ingest::SYNTH_LAYERS,
+        hidden: ingest::SYNTH_HIDDEN,
+    };
+    let dbh = algorithm("dbh").unwrap();
+    let vc = VertexCut::create(&ds.graph, p, dbh.as_ref(), &mut Rng::new(0xD15C));
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    dist::write_shards(&ds, &vc, &weights, 0xD15C, &mem_dir).unwrap();
+    let mut opts = StreamOptions::new(p, StreamAlgo::Dbh, Reweighting::Dar, 0xD15C);
+    opts.mem_budget_bytes = (budget_mib as u64) << 20;
+    let sds = StreamDataset {
+        name: "bench-ooc",
+        data: &data,
+        layers: ingest::SYNTH_LAYERS,
+        hidden: ingest::SYNTH_HIDDEN,
+    };
+    let t0 = Instant::now();
+    let mut src = SliceSource::new(n, &pairs);
+    let stats = ingest::stream_shards(&mut src, &sds, &opts, &stream_dir).unwrap();
+    let ooc_s = t0.elapsed().as_secs_f64();
+    let mut parity = true;
+    for rec in &stats.store.files {
+        parity &= std::fs::read(mem_dir.join(&rec.name)).unwrap()
+            == std::fs::read(stream_dir.join(&rec.name)).unwrap();
+    }
+    parity &= std::fs::read(mem_dir.join("manifest.json")).unwrap()
+        == std::fs::read(stream_dir.join("manifest.json")).unwrap();
+    assert!(parity, "streamed store diverged from the in-memory store");
+    let edges_per_sec = stats.raw_pairs as f64 / ooc_s.max(1e-9);
+    println!(
+        "\n-- out_of_core: {} raw pairs @ {budget_mib} MiB budget -> {:.0} edges/sec, \
+         {} spill runs / {:.1} MiB, {} merge passes, parity={parity} --",
+        stats.raw_pairs,
+        edges_per_sec,
+        stats.runs_spilled,
+        stats.spill_bytes as f64 / (1024.0 * 1024.0),
+        stats.merge_passes
+    );
+    let ooc_json = format!(
+        "{{\"raw_pairs\": {}, \"edges\": {}, \"budget_mib\": {budget_mib}, \"seconds\": {:.6}, \"edges_per_sec\": {:.1}, \"spill_bytes\": {}, \"runs_spilled\": {}, \"merge_passes\": {}, \"parity\": {parity}}}",
+        stats.raw_pairs,
+        stats.edges,
+        ooc_s,
+        edges_per_sec,
+        stats.spill_bytes,
+        stats.runs_spilled,
+        stats.merge_passes
+    );
+    let _ = std::fs::remove_dir_all(&tmp);
+
     let json = format!(
-        "{{\n  \"bench\": \"partition_pipeline\",\n  \"config\": {{\"edges_target\": {target}, \"partitions\": {p}, \"iters\": {iters}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"graphs\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"partition_pipeline\",\n  \"config\": {{\"edges_target\": {target}, \"partitions\": {p}, \"iters\": {iters}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"out_of_core\": {ooc_json},\n  \"graphs\": [\n    {}\n  ]\n}}\n",
         std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1),
         rayon::current_num_threads(),
         graph_jsons.join(",\n    ")

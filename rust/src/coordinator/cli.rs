@@ -2,9 +2,11 @@
 //!
 //! ```text
 //! cofree gen              --dataset products-sim --scale 1.0 --out g.bin
+//! cofree gen              --edges-out edges.bin --rmat-scale 18 [--rmat-edges M]
 //! cofree inspect          --dataset products-sim [--partitions 8]
 //! cofree partition        --dataset products-sim --algo ne --partitions 8
 //! cofree shard            --dataset products-sim --partitions 8 --out shards/
+//! cofree shard            --input edges.bin --stream --mem-budget 256 --out shards/
 //! cofree worker           --shard shards/shard_0003.bin --connect 127.0.0.1:9000
 //! cofree emit-bucket-spec [--out python/compile/buckets.spec]
 //! cofree train            --dataset products-sim --partitions 4 [--algo ne]
@@ -20,7 +22,8 @@
 use super::config::Config;
 use super::experiments::{self, ExpOptions};
 use crate::dist::{self, coordinator::ProcOptions, coordinator::Transport};
-use crate::graph::{datasets, io, stats, Dataset};
+use crate::graph::{datasets, generators, io, stats, Dataset, GraphBuilder};
+use crate::ingest::{self, EdgeSource};
 use crate::partition::{algorithm, dar_weights, LdgEdgeCut, PartitionMetrics, Reweighting, VertexCut};
 use crate::train::backend::Backend;
 use crate::train::checkpoint::TrainCheckpoint;
@@ -82,10 +85,19 @@ cofree — CoFree-GNN: communication-free distributed GNN training (reproduction
 
 USAGE:
   cofree gen --dataset NAME [--scale F] [--seed N] --out FILE
+  cofree gen --edges-out FILE [--rmat-scale S] [--rmat-edges M] [--seed N]
+             (stream a raw binary edge list from the chunked R-MAT generator;
+             shard it with `cofree shard --input`)
   cofree inspect --dataset NAME [--scale F] [--partitions P]
   cofree partition --dataset NAME --algo ALGO --partitions P [--scale F]
   cofree shard --dataset NAME --partitions P --out DIR
                [--algo ne] [--reweight dar] [--scale F] [--seed N]
+               [--input edges.bin]   (shard a raw binary edge list instead of a
+               named dataset; node data is synthesized from the seed)
+               [--stream [--mem-budget MiB] [--chunk-edges N] [--fan-in K]]
+               (out-of-core ingest: external sort + streaming assignment,
+               O(V + chunk) peak memory, store bitwise identical to the
+               in-memory path; algos random|dbh|greedy-seq, default dbh)
   cofree worker --shard FILE --connect ADDR     (ADDR: host:port or unix:/path)
   cofree worker --shard FILE --listen ADDR      (multi-host: accept coordinator
                sessions on ADDR; survives coordinator restarts/reconnects)
@@ -163,6 +175,38 @@ fn build_dataset(args: &Args) -> Result<crate::graph::Dataset> {
 }
 
 fn cmd_gen(args: &Args) -> Result<i32> {
+    // `--edges-out`: emit a raw binary edge list (the `cofree shard --input`
+    // format) from the chunked R-MAT generator. Pairs stream straight into
+    // the writer, so the list can exceed memory.
+    if let Some(out) = args.get("edges-out") {
+        let scale: u32 = args.parse_or("rmat-scale", 16)?;
+        anyhow::ensure!((1..=31).contains(&scale), "--rmat-scale must be in 1..=31, got {scale}");
+        let m: u64 = args.parse_or("rmat-edges", 8u64 << scale)?;
+        let seed: u64 = args.parse_or("seed", super::grid::BENCH_SEED)?;
+        let out = PathBuf::from(out);
+        let n = 1usize << scale;
+        let mut rng = Rng::new(seed);
+        let params = generators::RmatParams::default();
+        let mut src = generators::rmat_pairs_chunked(scale, m as usize, params, &mut rng);
+        let mut w = io::EdgeListBinWriter::create(&out, n, m)?;
+        let mut buf: Vec<(u32, u32)> = Vec::new();
+        loop {
+            buf.clear();
+            if src.next_chunk(1 << 16, &mut buf)? == 0 {
+                break;
+            }
+            for &(u, v) in &buf {
+                w.push(u, v)?;
+            }
+        }
+        let bytes = w.finish()?;
+        println!(
+            "wrote {m} raw R-MAT pairs over {n} nodes ({:.1} MiB) to {}",
+            bytes as f64 / (1024.0 * 1024.0),
+            out.display()
+        );
+        return Ok(0);
+    }
     let ds = build_dataset(args)?;
     let out = PathBuf::from(args.get("out").context("--out required")?);
     io::write_snapshot(&ds.graph, Some(&ds.data), &out)?;
@@ -212,21 +256,113 @@ fn cmd_partition(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Dataset name recorded in stores built from `--input FILE`: the stem.
+fn input_dataset_name(path: &Path) -> String {
+    path.file_stem().and_then(|s| s.to_str()).unwrap_or("edges").to_string()
+}
+
+/// In-memory `Dataset` from a raw binary edge list: the graph from the
+/// pairs, node data synthesized deterministically from the seed — the
+/// exact tables the streamed path uses, so `--input` stores compare
+/// byte-for-byte with and without `--stream`.
+fn dataset_from_edge_list(path: &Path, seed: u64) -> Result<Dataset> {
+    let (n, pairs) = io::read_edge_list_bin(path)?;
+    Ok(Dataset {
+        name: input_dataset_name(path),
+        graph: GraphBuilder::new(n).edges(&pairs).build(),
+        data: ingest::synth_node_data(n, seed),
+        layers: ingest::SYNTH_LAYERS,
+        hidden: ingest::SYNTH_HIDDEN,
+    })
+}
+
 /// `cofree shard` — run the partitioning pipeline once and write the
 /// per-partition shard store (`shard_NNNN.bin` + `manifest.json`).
+///
+/// Two frontends share the store format: the default in-memory pipeline
+/// (build graph → cut → `write_shards`) and, under `--stream`, the
+/// out-of-core ingest tier (external sort → streaming assignment →
+/// direct-to-shard materialization), bitwise identical for the
+/// streaming algorithms (random, dbh, greedy-seq).
 fn cmd_shard(args: &Args) -> Result<i32> {
     // Defaults mirror `cofree train` exactly (seed 42, same RNG stream for
     // the cut), so `cofree shard` + `cofree train --transport proc
     // --shard-dir` reproduces the auto-sharded trajectory bit-for-bit.
-    let name = args.get("dataset").context("--dataset required")?;
     let scale: f64 = args.parse_or("scale", 1.0)?;
     let seed: u64 = args.parse_or("seed", 42)?;
-    let ds = datasets::build(name, scale, seed)?;
     let p: usize = args.parse_or("partitions", 4)?;
-    let algo_name = args.get_or("algo", "ne");
+    let stream = args.get("stream").is_some();
+    // NE cannot run single-pass, so `--stream` defaults to dbh instead.
+    let algo_name = args.get("algo").unwrap_or(if stream { "dbh" } else { "ne" });
     let rw = Reweighting::parse(args.get_or("reweight", "dar"))
         .context("--reweight must be dar|inv|none")?;
     let out = PathBuf::from(args.get("out").context("--out DIR required")?);
+    let input = args.get("input").map(PathBuf::from);
+    for flag in ["mem-budget", "chunk-edges", "fan-in"] {
+        if !stream && args.get(flag).is_some() {
+            bail!("--{flag} is only used by the out-of-core path; add --stream");
+        }
+    }
+
+    if stream {
+        let algo = ingest::StreamAlgo::parse(algo_name)?;
+        let mut opts = ingest::StreamOptions::new(p, algo, rw, seed);
+        let budget_mib: u64 = args.parse_or("mem-budget", 512)?;
+        anyhow::ensure!(budget_mib >= 1, "--mem-budget is in MiB and must be >= 1");
+        opts.mem_budget_bytes = budget_mib << 20;
+        if args.get("chunk-edges").is_some() {
+            opts.chunk_edges = Some(args.parse_or("chunk-edges", 1usize)?);
+        }
+        opts.fan_in = args.parse_or("fan-in", opts.fan_in)?;
+        let stats = match &input {
+            Some(path) => {
+                let mut src = io::EdgeListBinReader::open(path)?;
+                let data = ingest::synth_node_data(src.num_nodes(), seed);
+                let name = input_dataset_name(path);
+                let sds = ingest::StreamDataset {
+                    name: &name,
+                    data: &data,
+                    layers: ingest::SYNTH_LAYERS,
+                    hidden: ingest::SYNTH_HIDDEN,
+                };
+                ingest::stream_shards(&mut src, &sds, &opts, &out)?
+            }
+            None => {
+                let name = args.get("dataset").context("--dataset or --input required")?;
+                let ds = datasets::build(name, scale, seed)?;
+                let sds = ingest::StreamDataset {
+                    name: &ds.name,
+                    data: &ds.data,
+                    layers: ds.layers,
+                    hidden: ds.hidden,
+                };
+                let mut src = ingest::SliceSource::new(ds.graph.num_nodes(), ds.graph.edges());
+                ingest::stream_shards(&mut src, &sds, &opts, &out)?
+            }
+        };
+        println!(
+            "streamed {} shards ({:.1} MiB) for n={}, m={} (algo={algo_name}, reweight={}, \
+             {} spill runs / {:.1} MiB, {} merge passes) to {}",
+            stats.store.files.len(),
+            stats.store.total_bytes as f64 / (1024.0 * 1024.0),
+            stats.nodes,
+            stats.edges,
+            rw.name(),
+            stats.runs_spilled,
+            stats.spill_bytes as f64 / (1024.0 * 1024.0),
+            stats.merge_passes,
+            out.display()
+        );
+        return Ok(0);
+    }
+
+    let ds = match &input {
+        Some(path) => dataset_from_edge_list(path, seed)?,
+        None => {
+            let name = args.get("dataset").context("--dataset or --input required")?;
+            datasets::build(name, scale, seed)?
+        }
+    };
     let algo = algorithm(algo_name).with_context(|| format!("unknown algo {algo_name}"))?;
     let mut rng = Rng::new(seed);
     let vc = VertexCut::create(&ds.graph, p, algo.as_ref(), &mut rng);
@@ -915,6 +1051,125 @@ mod tests {
         assert!(dir.join("manifest.json").exists());
         assert_eq!(crate::dist::shard_files(&dir).unwrap().len(), 2);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// End-to-end through the CLI: `cofree gen --edges-out` → `cofree
+    /// shard --input` with and without `--stream` produce bitwise
+    /// identical stores (tiny budget + chunk override force real spills),
+    /// and the streamed store passes fsck.
+    #[test]
+    fn gen_edges_then_shard_input_stream_parity() {
+        let dir = std::env::temp_dir().join(format!("cofree_cli_ooc_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let edges = dir.join("toy.bin");
+        let code = main(argv(&[
+            "gen",
+            "--edges-out",
+            edges.to_str().unwrap(),
+            "--rmat-scale",
+            "7",
+            "--rmat-edges",
+            "600",
+            "--seed",
+            "5",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let mem = dir.join("mem");
+        let streamed = dir.join("streamed");
+        let code = main(argv(&[
+            "shard",
+            "--input",
+            edges.to_str().unwrap(),
+            "--partitions",
+            "2",
+            "--algo",
+            "dbh",
+            "--out",
+            mem.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let code = main(argv(&[
+            "shard",
+            "--input",
+            edges.to_str().unwrap(),
+            "--partitions",
+            "2",
+            "--algo",
+            "dbh",
+            "--stream",
+            "--mem-budget",
+            "1",
+            "--chunk-edges",
+            "64",
+            "--out",
+            streamed.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        for name in ["manifest.json", "shard_0000.bin", "shard_0001.bin"] {
+            let a = std::fs::read(mem.join(name)).unwrap();
+            let b = std::fs::read(streamed.join(name)).unwrap();
+            assert_eq!(a, b, "{name} differs between --stream and in-memory");
+        }
+        assert_eq!(main(argv(&["fsck", streamed.to_str().unwrap()])).unwrap(), 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// `--stream` on a named dataset reproduces the in-memory store
+    /// byte-for-byte (same seed, same streaming algorithm).
+    #[test]
+    fn shard_stream_matches_in_memory_for_named_dataset() {
+        let dir = std::env::temp_dir().join(format!("cofree_cli_sds_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (mem, streamed) = (dir.join("mem"), dir.join("streamed"));
+        for (out, extra) in [(&mem, &[][..]), (&streamed, &["--stream"][..])] {
+            let mut cmd = argv(&[
+                "shard",
+                "--dataset",
+                "yelp-sim",
+                "--scale",
+                "0.04",
+                "--partitions",
+                "2",
+                "--algo",
+                "dbh",
+                "--out",
+                out.to_str().unwrap(),
+            ]);
+            cmd.extend(extra.iter().map(|s| s.to_string()));
+            assert_eq!(main(cmd).unwrap(), 0);
+        }
+        for name in ["manifest.json", "shard_0000.bin", "shard_0001.bin"] {
+            let a = std::fs::read(mem.join(name)).unwrap();
+            let b = std::fs::read(streamed.join(name)).unwrap();
+            assert_eq!(a, b, "{name} differs between --stream and in-memory");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// `--stream` rejects algorithms that cannot run single-pass, and the
+    /// out-of-core tuning flags reject a run without `--stream`.
+    #[test]
+    fn shard_stream_flag_validation() {
+        let out = std::env::temp_dir().join(format!("cofree_cli_badstream_{}", std::process::id()));
+        for extra in [&["--stream", "--algo", "ne"][..], &["--mem-budget", "64"][..]] {
+            let mut cmd = argv(&[
+                "shard",
+                "--dataset",
+                "yelp-sim",
+                "--scale",
+                "0.04",
+                "--out",
+                out.to_str().unwrap(),
+            ]);
+            cmd.extend(extra.iter().map(|s| s.to_string()));
+            assert!(main(cmd).is_err(), "{extra:?} accepted");
+        }
+        assert!(!out.exists(), "rejected runs must not create the store dir");
     }
 
     /// End-to-end through the CLI: `cofree shard` then `cofree fsck` —

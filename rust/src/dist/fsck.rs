@@ -250,10 +250,19 @@ fn fsck_shard_dir(dir: &Path) -> FsckReport {
             return report;
         }
     };
+    // Partition quality straight off the manifest's count columns — the
+    // operator sees RF/balance per store without a single shard byte read.
+    let quality = match crate::partition::ManifestMetrics::from_manifest(&manifest) {
+        Some(m) => format!(", {}", m.summary()),
+        None => String::new(),
+    };
     report.push(
         "manifest.json",
         true,
-        format!("{} ({} parts, {} bytes listed)", manifest.format, manifest.num_parts, manifest.total_bytes),
+        format!(
+            "{} ({} parts, {} bytes listed{quality})",
+            manifest.format, manifest.num_parts, manifest.total_bytes
+        ),
     );
     let mut listed: BTreeSet<&str> = BTreeSet::new();
     let mut listed_bytes = 0u64;
@@ -326,6 +335,9 @@ mod tests {
         assert!(report.ok(), "{report}");
         // manifest + 2 shards, all verified.
         assert_eq!(report.verdicts.len(), 3, "{report}");
+        // The manifest verdict carries the manifest-only partition metrics.
+        let m = report.verdicts.iter().find(|v| v.file == "manifest.json").unwrap();
+        assert!(m.detail.contains("RF="), "{report}");
 
         // Bit-flip one shard payload byte: the dir check must fail and
         // name the file.

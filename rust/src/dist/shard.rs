@@ -873,34 +873,59 @@ fn write_manifest(
     dir: &Path,
     stats: &ShardSetStats,
 ) -> Result<()> {
-    let model = model_config(ds);
+    let part_sizes: Vec<(usize, usize)> =
+        vc.parts.iter().map(|p| (p.num_nodes(), p.num_edges())).collect();
+    let json = render_manifest(
+        &ds.name,
+        seed,
+        vc.num_parts,
+        &model_config(ds),
+        ds.graph.num_nodes(),
+        ds.graph.num_edges(),
+        stats,
+        &part_sizes,
+    );
+    commit_manifest(dir, &json)
+}
+
+/// Render `manifest.json` exactly as [`write_shards`] emits it. Shared with
+/// the streaming materializer ([`crate::ingest`]) so the two pipelines'
+/// manifests are byte-identical by construction. `part_sizes` is one
+/// `(nodes, edges)` pair per partition, part order.
+pub(crate) fn render_manifest(
+    dataset: &str,
+    seed: u64,
+    num_parts: usize,
+    model: &ModelConfig,
+    graph_nodes: usize,
+    graph_edges: usize,
+    stats: &ShardSetStats,
+    part_sizes: &[(usize, usize)],
+) -> String {
     let mut shards = String::new();
     for (i, rec) in stats.files.iter().enumerate() {
         if i > 0 {
             shards.push_str(",\n    ");
         }
-        let part = &vc.parts[i];
+        let (nodes, edges) = part_sizes[i];
         shards.push_str(&format!(
-            "{{\"file\": \"{}\", \"part_id\": {i}, \"nodes\": {}, \"edges\": {}, \"bytes\": {}, \"crc32c\": {}}}",
-            rec.name,
-            part.num_nodes(),
-            part.num_edges(),
-            rec.bytes,
-            rec.crc32c
+            "{{\"file\": \"{}\", \"part_id\": {i}, \"nodes\": {nodes}, \"edges\": {edges}, \"bytes\": {}, \"crc32c\": {}}}",
+            rec.name, rec.bytes, rec.crc32c
         ));
     }
-    let json = format!(
-        "{{\n  \"format\": \"cofree-shards-v{SHARD_VERSION}\",\n  \"dataset\": \"{}\",\n  \"seed\": {seed},\n  \"num_parts\": {},\n  \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}},\n  \"graph\": {{\"nodes\": {}, \"edges\": {}}},\n  \"total_bytes\": {},\n  \"shards\": [\n    {shards}\n  ]\n}}\n",
-        ds.name,
-        vc.num_parts,
+    format!(
+        "{{\n  \"format\": \"cofree-shards-v{SHARD_VERSION}\",\n  \"dataset\": \"{dataset}\",\n  \"seed\": {seed},\n  \"num_parts\": {num_parts},\n  \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}},\n  \"graph\": {{\"nodes\": {graph_nodes}, \"edges\": {graph_edges}}},\n  \"total_bytes\": {},\n  \"shards\": [\n    {shards}\n  ]\n}}\n",
         model.layers,
         model.feat_dim,
         model.hidden,
         model.classes,
-        ds.graph.num_nodes(),
-        ds.graph.num_edges(),
         stats.total_bytes
-    );
+    )
+}
+
+/// Durably commit a rendered manifest (tmp → fsync → rename → dir fsync),
+/// always the **last** write of a store.
+pub(crate) fn commit_manifest(dir: &Path, json: &str) -> Result<()> {
     let path = dir.join("manifest.json");
     let tmp = binio::tmp_sibling(&path);
     let guard = binio::TmpGuard::new(tmp.clone());
@@ -926,6 +951,11 @@ pub struct ManifestEntry {
     pub bytes: u64,
     /// Absent in stores written before format v2.
     pub crc32c: Option<u32>,
+    /// Replicated node count of the partition (absent in hand-edited or
+    /// foreign manifests; every store this repo writes records it).
+    pub nodes: Option<u64>,
+    /// Canonical edge count of the partition.
+    pub edges: Option<u64>,
 }
 
 /// The parts of `manifest.json` that integrity tooling consumes.
@@ -934,6 +964,11 @@ pub struct Manifest {
     pub format: String,
     pub num_parts: u64,
     pub total_bytes: u64,
+    /// Full-graph sizes from the `graph` object (absent only in foreign or
+    /// truncated manifests) — what manifest-only partition metrics divide
+    /// by.
+    pub graph_nodes: Option<u64>,
+    pub graph_edges: Option<u64>,
     pub shards: Vec<ManifestEntry>,
 }
 
@@ -966,6 +1001,8 @@ pub fn read_manifest(dir: &Path) -> Result<Manifest> {
         doc.get("num_parts").and_then(Json::as_u64).context("manifest missing `num_parts`")?;
     let total_bytes =
         doc.get("total_bytes").and_then(Json::as_u64).context("manifest missing `total_bytes`")?;
+    let graph_nodes = doc.get("graph").and_then(|g| g.get("nodes")).and_then(Json::as_u64);
+    let graph_edges = doc.get("graph").and_then(|g| g.get("edges")).and_then(Json::as_u64);
     let rows = doc.get("shards").and_then(Json::as_arr).context("manifest missing `shards`")?;
     ensure!(
         rows.len() as u64 == num_parts,
@@ -1011,9 +1048,11 @@ pub fn read_manifest(dir: &Path) -> Result<Manifest> {
                 Some(n as u32)
             }
         };
-        shards.push(ManifestEntry { file, part_id, bytes, crc32c });
+        let nodes = row.get("nodes").and_then(Json::as_u64);
+        let edges = row.get("edges").and_then(Json::as_u64);
+        shards.push(ManifestEntry { file, part_id, bytes, crc32c, nodes, edges });
     }
-    Ok(Manifest { format, num_parts, total_bytes, shards })
+    Ok(Manifest { format, num_parts, total_bytes, graph_nodes, graph_edges, shards })
 }
 
 /// Verdict of a full structural + digest check of one shard file.

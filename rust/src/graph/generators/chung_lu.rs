@@ -63,6 +63,55 @@ pub fn chung_lu(weights: &[u32], rng: &mut Rng) -> Graph {
     GraphBuilder::new(n).edges(&chung_lu_pairs(weights, rng)).build()
 }
 
+/// Chunked [`chung_lu_pairs`]: an [`EdgeSource`](crate::ingest::EdgeSource)
+/// drawing the *same RNG stream in the same order* as the one-shot call, so
+/// any chunking off one `&mut Rng` is bit-identical to the `Vec` version.
+/// Only the O(n) cumulative-weight table is held in memory, never the pair
+/// list.
+pub struct ChungLuPairsChunked<'a> {
+    cum: Vec<u64>,
+    acc: u64,
+    remaining: usize,
+    rng: &'a mut Rng,
+}
+
+pub fn chung_lu_pairs_chunked<'a>(weights: &[u32], rng: &'a mut Rng) -> ChungLuPairsChunked<'a> {
+    let total: u64 = weights.iter().map(|&w| w as u64).sum();
+    let mut cum: Vec<u64> = Vec::with_capacity(weights.len());
+    let mut acc = 0u64;
+    for &w in weights {
+        acc += w as u64;
+        cum.push(acc);
+    }
+    ChungLuPairsChunked { cum, acc: total, remaining: (total / 2) as usize, rng }
+}
+
+impl ChungLuPairsChunked<'_> {
+    /// Pairs not yet emitted.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+}
+
+impl crate::ingest::EdgeSource for ChungLuPairsChunked<'_> {
+    fn num_nodes(&self) -> usize {
+        self.cum.len()
+    }
+
+    fn next_chunk(&mut self, cap: usize, buf: &mut Vec<(u32, u32)>) -> anyhow::Result<usize> {
+        let k = cap.min(self.remaining);
+        for _ in 0..k {
+            let tu = (self.rng.next_u64() as u128 * self.acc as u128 >> 64) as u64;
+            let u = self.cum.partition_point(|&c| c <= tu) as u32;
+            let tv = (self.rng.next_u64() as u128 * self.acc as u128 >> 64) as u64;
+            let v = self.cum.partition_point(|&c| c <= tv) as u32;
+            buf.push((u, v));
+        }
+        self.remaining -= k;
+        Ok(k)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +141,29 @@ mod tests {
         // Hubs exist.
         assert!(g.max_degree() > 3 * got as u32);
         g.check_invariants().unwrap();
+    }
+
+    /// The chunked generator is bit-identical to the one-shot call for any
+    /// chunking — the RNG stream, not the chunk boundary, defines the output.
+    #[test]
+    fn chunked_is_bit_identical_to_one_shot() {
+        use crate::ingest::EdgeSource;
+        let w = power_law_degrees(400, 2.3, 3, 60, &mut Rng::new(9));
+        let want = chung_lu_pairs(&w, &mut Rng::new(77));
+        for cap in [1usize, 13, 4096, 1 << 20] {
+            let mut rng = Rng::new(77);
+            let mut src = chung_lu_pairs_chunked(&w, &mut rng);
+            assert_eq!(src.num_nodes(), 400);
+            assert_eq!(src.remaining(), want.len());
+            let mut got = Vec::new();
+            loop {
+                let mut buf = Vec::new();
+                if src.next_chunk(cap, &mut buf).unwrap() == 0 {
+                    break;
+                }
+                got.extend_from_slice(&buf);
+            }
+            assert_eq!(got, want, "cap={cap}");
+        }
     }
 }

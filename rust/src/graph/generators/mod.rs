@@ -21,7 +21,9 @@ pub mod rmat;
 pub mod sbm;
 
 pub use ba::barabasi_albert;
-pub use chung_lu::{chung_lu, chung_lu_pairs, power_law_degrees};
+pub use chung_lu::{
+    chung_lu, chung_lu_pairs, chung_lu_pairs_chunked, ChungLuPairsChunked, power_law_degrees,
+};
 pub use erdos::erdos_renyi;
-pub use rmat::{rmat, rmat_pairs, RmatParams};
+pub use rmat::{rmat, rmat_pairs, rmat_pairs_chunked, RmatPairsChunked, RmatParams};
 pub use sbm::{degree_corrected_sbm, planted_communities};

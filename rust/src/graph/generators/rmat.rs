@@ -61,6 +61,69 @@ pub fn rmat(scale: u32, m: usize, params: RmatParams, rng: &mut Rng) -> Graph {
     GraphBuilder::new(n).edges(&rmat_pairs(scale, m, params, rng)).build()
 }
 
+/// Chunked [`rmat_pairs`]: an [`EdgeSource`](crate::ingest::EdgeSource)
+/// that draws the *same RNG stream in the same order* as the one-shot
+/// call, so the chunk boundaries are invisible — any sequence of
+/// `next_chunk` sizes off one `&mut Rng` yields the bit-identical pair
+/// stream. The out-of-core ingest path generates through this without
+/// ever materializing the list.
+pub struct RmatPairsChunked<'a> {
+    scale: u32,
+    params: RmatParams,
+    remaining: usize,
+    rng: &'a mut Rng,
+}
+
+pub fn rmat_pairs_chunked(
+    scale: u32,
+    m: usize,
+    params: RmatParams,
+    rng: &mut Rng,
+) -> RmatPairsChunked<'_> {
+    let RmatParams { a, b, c, d } = params;
+    assert!((a + b + c + d - 1.0).abs() < 1e-9, "R-MAT params must sum to 1");
+    RmatPairsChunked { scale, params, remaining: m, rng }
+}
+
+impl RmatPairsChunked<'_> {
+    /// Pairs not yet emitted.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+}
+
+impl crate::ingest::EdgeSource for RmatPairsChunked<'_> {
+    fn num_nodes(&self) -> usize {
+        1usize << self.scale
+    }
+
+    fn next_chunk(&mut self, cap: usize, buf: &mut Vec<(u32, u32)>) -> anyhow::Result<usize> {
+        let k = cap.min(self.remaining);
+        let RmatParams { a, b, c, .. } = self.params;
+        for _ in 0..k {
+            let (mut u, mut v) = (0usize, 0usize);
+            for _ in 0..self.scale {
+                u <<= 1;
+                v <<= 1;
+                let r = self.rng.f64();
+                if r < a {
+                    // top-left: no bits set
+                } else if r < a + b {
+                    v |= 1;
+                } else if r < a + b + c {
+                    u |= 1;
+                } else {
+                    u |= 1;
+                    v |= 1;
+                }
+            }
+            buf.push((u as u32, v as u32));
+        }
+        self.remaining -= k;
+        Ok(k)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +150,28 @@ mod tests {
     fn params_must_sum_to_one() {
         let mut rng = Rng::new(0);
         rmat(4, 10, RmatParams { a: 0.5, b: 0.5, c: 0.5, d: 0.5 }, &mut rng);
+    }
+
+    /// The chunked generator is bit-identical to the one-shot call for
+    /// any chunking — the RNG stream, not the chunk boundary, defines
+    /// the output.
+    #[test]
+    fn chunked_is_bit_identical_to_one_shot() {
+        use crate::ingest::EdgeSource;
+        let want = rmat_pairs(8, 1000, RmatParams::default(), &mut Rng::new(42));
+        for cap in [1usize, 13, 256, 10_000] {
+            let mut rng = Rng::new(42);
+            let mut src = rmat_pairs_chunked(8, 1000, RmatParams::default(), &mut rng);
+            assert_eq!(src.num_nodes(), 256);
+            let mut got = Vec::new();
+            loop {
+                let mut buf = Vec::new();
+                if src.next_chunk(cap, &mut buf).unwrap() == 0 {
+                    break;
+                }
+                got.extend_from_slice(&buf);
+            }
+            assert_eq!(got, want, "cap={cap}");
+        }
     }
 }

@@ -1,21 +1,34 @@
 //! Graph (de)serialization.
 //!
-//! Two formats:
+//! Three formats:
 //! * **edge list text** — `u v` per line, `#` comments; interchange with
 //!   external tools.
 //! * **binary snapshot** — a compact little-endian dump of the CSR plus
 //!   optional `NodeData`, so dataset generation cost is paid once per seed
 //!   (`cofree gen --out g.bin`).
+//! * **binary edge list** (`edges.bin`) — a flat CRC-trailed raw pair
+//!   stream for out-of-core ingest: unlike the snapshot it carries *raw*
+//!   pairs (duplicates, self-loops, either orientation) and is read in
+//!   bounded-memory chunks ([`EdgeListBinReader`] is an
+//!   [`EdgeSource`](crate::ingest::EdgeSource)), so `cofree shard --input
+//!   edges.bin --stream` never materializes the edge list.
 
 use super::builder::GraphBuilder;
 use super::csr::Graph;
 use super::features::NodeData;
+use crate::ingest::EdgeSource;
 use crate::util::binio;
-use anyhow::{bail, Context, Result};
-use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::path::Path;
+use crate::util::hash::{HashingReader, HashingWriter};
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
 
 const MAGIC: &[u8; 8] = b"COFREEG1";
+
+/// Magic of the binary raw edge-list format.
+pub const EDGES_MAGIC: &[u8; 8] = b"COFREEL1";
+/// Current binary edge-list format version.
+pub const EDGES_VERSION: u32 = 1;
 
 /// Write a graph as a text edge list.
 pub fn write_edge_list(g: &Graph, path: &Path) -> Result<()> {
@@ -115,6 +128,202 @@ pub fn read_snapshot(path: &Path) -> Result<(Graph, Option<NodeData>)> {
     Ok((g, nd))
 }
 
+// ---------------------------------------------------------------------------
+// Binary raw edge list (out-of-core ingest input).
+//
+// Layout (little-endian): magic "COFREEL1" | u32 version | u64 num_nodes |
+// u64 num_pairs | num_pairs × (u32 u, u32 v) | u32 CRC-32C trailer over
+// every preceding byte.
+// ---------------------------------------------------------------------------
+
+/// Streaming writer for `edges.bin`: declares the pair count up front,
+/// accumulates the CRC as pairs are appended, and commits through the
+/// durable tmp → fsync → rename path.
+pub struct EdgeListBinWriter {
+    w: HashingWriter<BufWriter<std::fs::File>>,
+    tmp: PathBuf,
+    path: PathBuf,
+    guard: Option<binio::TmpGuard>,
+    num_nodes: u64,
+    declared: u64,
+    pushed: u64,
+}
+
+impl EdgeListBinWriter {
+    /// Open `path` for writing a stream of exactly `num_pairs` raw pairs
+    /// over `num_nodes` vertices.
+    pub fn create(path: &Path, num_nodes: usize, num_pairs: u64) -> Result<EdgeListBinWriter> {
+        let tmp = binio::tmp_sibling(path);
+        let guard = binio::TmpGuard::new(tmp.clone());
+        let f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        let mut w = HashingWriter::new(BufWriter::new(f));
+        binio::write_magic(&mut w, EDGES_MAGIC)?;
+        binio::write_version(&mut w, EDGES_VERSION)?;
+        binio::write_u64(&mut w, num_nodes as u64)?;
+        binio::write_u64(&mut w, num_pairs)?;
+        Ok(EdgeListBinWriter {
+            w,
+            tmp,
+            path: path.to_path_buf(),
+            guard: Some(guard),
+            num_nodes: num_nodes as u64,
+            declared: num_pairs,
+            pushed: 0,
+        })
+    }
+
+    /// Append one raw pair (self-loops and duplicates are legal — this is
+    /// the *raw* stream, canonicalization happens at ingest).
+    #[inline]
+    pub fn push(&mut self, u: u32, v: u32) -> Result<()> {
+        ensure!(
+            (u as u64) < self.num_nodes && (v as u64) < self.num_nodes,
+            "pair ({u}, {v}) out of range for {} nodes",
+            self.num_nodes
+        );
+        ensure!(self.pushed < self.declared, "more pairs than the declared {}", self.declared);
+        binio::write_u32(&mut self.w, u)?;
+        binio::write_u32(&mut self.w, v)?;
+        self.pushed += 1;
+        Ok(())
+    }
+
+    /// Verify the declared count was met, write the CRC trailer, and
+    /// durably commit. Returns total bytes written.
+    pub fn finish(mut self) -> Result<u64> {
+        ensure!(
+            self.pushed == self.declared,
+            "declared {} pairs but only {} were pushed",
+            self.declared,
+            self.pushed
+        );
+        let digest = self.w.digest();
+        binio::write_u32(&mut self.w, digest)?;
+        let bytes = self.w.written();
+        let mut bw = self.w.into_inner();
+        bw.flush().with_context(|| format!("flushing {:?}", self.tmp))?;
+        bw.get_ref().sync_all().with_context(|| format!("fsyncing {:?}", self.tmp))?;
+        binio::commit_replace(&self.tmp, &self.path)?;
+        self.guard.take().unwrap().disarm();
+        Ok(bytes)
+    }
+}
+
+/// Bounded-memory reader for `edges.bin`: pairs stream through a fixed
+/// buffer, the running CRC is checked against the trailer at exhaustion,
+/// and truncation vs. corruption produce distinct structured errors.
+pub struct EdgeListBinReader {
+    r: HashingReader<BufReader<std::fs::File>>,
+    path: PathBuf,
+    num_nodes: u64,
+    num_pairs: u64,
+    read: u64,
+    verified: bool,
+}
+
+impl EdgeListBinReader {
+    pub fn open(path: &Path) -> Result<EdgeListBinReader> {
+        let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = HashingReader::new(BufReader::new(f));
+        binio::expect_magic(&mut r, EDGES_MAGIC, "cofree binary edge list")
+            .with_context(|| format!("reading {path:?}"))?;
+        binio::expect_version(&mut r, EDGES_VERSION, "binary edge list")?;
+        let num_nodes = binio::read_u64(&mut r).context("reading node count")?;
+        let num_pairs = binio::read_u64(&mut r).context("reading pair count")?;
+        Ok(EdgeListBinReader {
+            r,
+            path: path.to_path_buf(),
+            num_nodes,
+            num_pairs,
+            read: 0,
+            verified: false,
+        })
+    }
+
+    /// Declared raw pair count.
+    pub fn num_pairs(&self) -> u64 {
+        self.num_pairs
+    }
+
+    /// Next raw pair, or `None` at the (trailer-verified) end.
+    fn next_pair(&mut self) -> Result<Option<(u32, u32)>> {
+        if self.read == self.num_pairs {
+            if !self.verified {
+                self.verified = true;
+                let want = self.r.digest();
+                let got = binio::read_u32(&mut self.r).with_context(|| {
+                    format!("truncated binary edge list {:?}: digest trailer missing", self.path)
+                })?;
+                ensure!(
+                    got == want,
+                    "binary edge list digest mismatch in {:?}: stored {got:#010x}, computed \
+                     {want:#010x} — the file bytes are corrupt",
+                    self.path
+                );
+                let mut probe = [0u8; 1];
+                if self.r.read(&mut probe)? != 0 {
+                    bail!("trailing bytes after binary edge list {:?}", self.path);
+                }
+            }
+            return Ok(None);
+        }
+        let mut buf = [0u8; 8];
+        self.r.read_exact(&mut buf).with_context(|| {
+            format!(
+                "truncated binary edge list {:?}: {} of {} pairs missing",
+                self.path,
+                self.num_pairs - self.read,
+                self.num_pairs
+            )
+        })?;
+        self.read += 1;
+        Ok(Some((
+            u32::from_le_bytes(buf[..4].try_into().unwrap()),
+            u32::from_le_bytes(buf[4..].try_into().unwrap()),
+        )))
+    }
+}
+
+impl EdgeSource for EdgeListBinReader {
+    fn num_nodes(&self) -> usize {
+        self.num_nodes as usize
+    }
+
+    fn next_chunk(&mut self, cap: usize, buf: &mut Vec<(u32, u32)>) -> Result<usize> {
+        let mut k = 0;
+        while k < cap {
+            match self.next_pair()? {
+                Some(pair) => {
+                    buf.push(pair);
+                    k += 1;
+                }
+                None => break,
+            }
+        }
+        Ok(k)
+    }
+}
+
+/// Write a whole in-memory pair list as `edges.bin`.
+pub fn write_edge_list_bin(num_nodes: usize, pairs: &[(u32, u32)], path: &Path) -> Result<u64> {
+    let mut w = EdgeListBinWriter::create(path, num_nodes, pairs.len() as u64)?;
+    for &(u, v) in pairs {
+        w.push(u, v)?;
+    }
+    w.finish()
+}
+
+/// Read a whole `edges.bin` into memory (the non-streaming `cofree shard
+/// --input` path), trailer-verified.
+pub fn read_edge_list_bin(path: &Path) -> Result<(usize, Vec<(u32, u32)>)> {
+    let mut r = EdgeListBinReader::open(path)?;
+    let mut pairs = Vec::new();
+    while let Some(pair) = r.next_pair()? {
+        pairs.push(pair);
+    }
+    Ok((r.num_nodes as usize, pairs))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -188,6 +397,80 @@ mod tests {
         let err = read_snapshot(&p).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("truncated"), "{msg}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    fn messy_pairs(n: usize, m: usize, seed: u64) -> Vec<(u32, u32)> {
+        let mut rng = Rng::new(seed);
+        (0..m).map(|_| (rng.below(n) as u32, rng.below(n) as u32)).collect()
+    }
+
+    #[test]
+    fn edge_list_bin_roundtrip_preserves_raw_stream() {
+        let pairs = messy_pairs(90, 500, 31);
+        let p = tmp("elbin");
+        write_edge_list_bin(90, &pairs, &p).unwrap();
+        let (n, got) = read_edge_list_bin(&p).unwrap();
+        assert_eq!(n, 90);
+        assert_eq!(got, pairs, "raw order, duplicates and loops must survive");
+        // And chunked through the EdgeSource interface, any chunk size.
+        for cap in [1usize, 7, 4096] {
+            let mut r = EdgeListBinReader::open(&p).unwrap();
+            assert_eq!(r.num_pairs(), pairs.len() as u64);
+            let mut streamed = Vec::new();
+            loop {
+                let mut buf = Vec::new();
+                if r.next_chunk(cap, &mut buf).unwrap() == 0 {
+                    break;
+                }
+                streamed.extend_from_slice(&buf);
+            }
+            assert_eq!(streamed, pairs, "cap={cap}");
+        }
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn edge_list_bin_writer_enforces_declared_count() {
+        let p = tmp("elbin_count");
+        let mut w = EdgeListBinWriter::create(&p, 10, 2).unwrap();
+        w.push(0, 1).unwrap();
+        let err = w.finish().unwrap_err();
+        assert!(format!("{err:#}").contains("declared 2 pairs"), "{err:#}");
+        let mut w = EdgeListBinWriter::create(&p, 10, 1).unwrap();
+        w.push(0, 1).unwrap();
+        let err = w.push(1, 2).unwrap_err();
+        assert!(format!("{err:#}").contains("more pairs"), "{err:#}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    /// Satellite contract: a truncated `edges.bin` is named as truncation
+    /// with the missing count, a bit-flipped one as a digest mismatch —
+    /// never a silently wrong graph.
+    #[test]
+    fn edge_list_bin_truncation_and_corruption_are_structured_errors() {
+        use crate::dist::fault::{flip_file_bit, truncate_file};
+        let pairs = messy_pairs(50, 200, 32);
+        let p = tmp("elbin_fault");
+        write_edge_list_bin(50, &pairs, &p).unwrap();
+        let len = std::fs::metadata(&p).unwrap().len();
+
+        truncate_file(&p, len - 30).unwrap();
+        let err = read_edge_list_bin(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("truncated binary edge list"), "{msg}");
+        assert!(msg.contains("pairs missing"), "{msg}");
+
+        write_edge_list_bin(50, &pairs, &p).unwrap();
+        flip_file_bit(&p, 40, 5).unwrap();
+        let err = read_edge_list_bin(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("digest mismatch"), "{msg}");
+
+        std::fs::write(&p, b"NOTANEDGELIST___").unwrap();
+        let err = read_edge_list_bin(&p).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("COFREEL1"), "found-vs-expected missing: {msg}");
         std::fs::remove_file(&p).unwrap();
     }
 }

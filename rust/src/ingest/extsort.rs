@@ -1,0 +1,585 @@
+//! Bounded-memory external sort of the canonical edge stream.
+//!
+//! [`ExternalSorter`] accepts raw endpoint pairs (self-loops, duplicates,
+//! either orientation), canonicalizes them (`u < v`, loops dropped), and
+//! holds at most `chunk_cap` edges in memory. Full chunks are rayon-sorted,
+//! deduped and spilled to CRC-trailed run files in a [`ScratchDir`]; when
+//! the run count exceeds the merge fan-in, whole passes of `fan_in`-way
+//! merges collapse them. The final [`ExternalSorter::stream`] is a k-way
+//! **loser-tree** merge with on-the-fly dedup that yields exactly the
+//! sorted, unique, self-loop-free canonical edge list
+//! [`GraphBuilder::build`](crate::graph::GraphBuilder::build) produces —
+//! and it is replayable: every call re-merges the persisted runs, so the
+//! multi-pass pipeline (degree table → membership → materialize) never
+//! needs the stream in memory.
+//!
+//! Run file format (little-endian): magic `COFRERUN` | u32 version |
+//! u64 count of u32 words (`2·edges`) | the flattened sorted pairs |
+//! trailer u32 CRC-32C over every preceding byte. Runs are written through
+//! the PR 7 durable-write helpers (tmp sibling → fsync → rename), and the
+//! trailer is verified as each run is re-read, so a torn or bit-flipped
+//! spill surfaces as a structured error instead of a silently wrong store.
+
+use crate::obs::metrics;
+use crate::util::binio;
+use crate::util::hash::{Crc32c, HashingWriter};
+use anyhow::{ensure, Context, Result};
+use rayon::prelude::*;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+pub const RUN_MAGIC: &[u8; 8] = b"COFRERUN";
+pub const RUN_VERSION: u32 = 1;
+
+/// Default number of runs merged at once. 64 read buffers of 32 KiB keep
+/// merge memory at 2 MiB; with chunk sizes in the tens of MiB a single
+/// intermediate pass already covers multi-TiB inputs.
+pub const DEFAULT_FAN_IN: usize = 64;
+
+const READ_BUF: usize = 32 * 1024;
+
+/// The registered spill directory: every intermediate file of a streaming
+/// ingest lives under `<store>/.ingest-scratch`, which is wiped when a new
+/// ingest starts (clearing debris from any interrupted predecessor) and
+/// removed again on successful close — `cofree shard` never strands stray
+/// tmp siblings between spill runs.
+pub struct ScratchDir {
+    dir: PathBuf,
+    armed: bool,
+}
+
+/// Directory name of the ingest scratch space inside a store.
+pub const SCRATCH_DIR_NAME: &str = ".ingest-scratch";
+
+impl ScratchDir {
+    /// Create (and first clean) the scratch dir under `parent`.
+    pub fn create(parent: &Path) -> Result<ScratchDir> {
+        let dir = parent.join(SCRATCH_DIR_NAME);
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir)
+                .with_context(|| format!("cleaning stale ingest scratch {dir:?}"))?;
+        }
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+        Ok(ScratchDir { dir, armed: true })
+    }
+
+    /// Path of a file inside the scratch dir.
+    pub fn file(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+
+    /// Remove the scratch dir (the successful-close half of the hygiene
+    /// contract).
+    pub fn close(mut self) -> Result<()> {
+        self.armed = false;
+        std::fs::remove_dir_all(&self.dir)
+            .with_context(|| format!("removing ingest scratch {:?}", self.dir))
+    }
+}
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        // Error paths: best-effort cleanup; anything left is wiped by the
+        // next ingest's startup clean.
+        if self.armed {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+/// Spill one sorted, deduped chunk as a run file. Returns bytes written.
+fn write_run(path: &Path, edges: &[(u32, u32)]) -> Result<u64> {
+    let tmp = binio::tmp_sibling(path);
+    let guard = binio::TmpGuard::new(tmp.clone());
+    let f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+    let mut w = HashingWriter::new(BufWriter::new(f));
+    binio::write_magic(&mut w, RUN_MAGIC)?;
+    binio::write_version(&mut w, RUN_VERSION)?;
+    binio::write_u64(&mut w, edges.len() as u64 * 2)?;
+    for &(u, v) in edges {
+        binio::write_u32(&mut w, u)?;
+        binio::write_u32(&mut w, v)?;
+    }
+    let digest = w.digest();
+    binio::write_u32(&mut w, digest)?;
+    let bytes = w.written();
+    let mut bw = w.into_inner();
+    bw.flush().with_context(|| format!("flushing {tmp:?}"))?;
+    bw.get_ref().sync_all().with_context(|| format!("fsyncing {tmp:?}"))?;
+    binio::commit_replace(&tmp, path)?;
+    guard.disarm();
+    Ok(bytes)
+}
+
+/// Streaming reader over one run file: fixed `READ_BUF` buffer, CRC
+/// accumulated as the pairs are consumed and checked against the trailer
+/// at exhaustion.
+struct RunReader {
+    r: BufReader<std::fs::File>,
+    crc: Crc32c,
+    path: PathBuf,
+    /// Pairs left to read.
+    remaining: u64,
+}
+
+impl RunReader {
+    fn open(path: &Path) -> Result<RunReader> {
+        let f = std::fs::File::open(path).with_context(|| format!("open spill run {path:?}"))?;
+        let mut r = BufReader::with_capacity(READ_BUF, f);
+        let mut crc = Crc32c::new();
+        let mut header = [0u8; 8 + 4 + 8];
+        r.read_exact(&mut header)
+            .with_context(|| format!("truncated spill run {path:?}: header missing"))?;
+        crc.update(&header);
+        ensure!(
+            &header[..8] == RUN_MAGIC,
+            "bad spill run magic in {path:?}: found {:02x?}, expected {RUN_MAGIC:02x?}",
+            &header[..8]
+        );
+        let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        ensure!(version == RUN_VERSION, "unsupported spill run version {version} in {path:?}");
+        let words = u64::from_le_bytes(header[12..20].try_into().unwrap());
+        ensure!(words % 2 == 0, "corrupt spill run {path:?}: odd endpoint count {words}");
+        Ok(RunReader { r, crc, path: path.to_path_buf(), remaining: words / 2 })
+    }
+
+    /// Next pair, or `None` at the (trailer-verified) end of the run.
+    fn next(&mut self) -> Result<Option<(u32, u32)>> {
+        if self.remaining == 0 {
+            let want = self.crc.finish();
+            let mut trailer = [0u8; 4];
+            self.r
+                .read_exact(&mut trailer)
+                .with_context(|| format!("truncated spill run {:?}: trailer missing", self.path))?;
+            let got = u32::from_le_bytes(trailer);
+            ensure!(
+                got == want,
+                "spill run digest mismatch in {:?}: stored {got:#010x}, computed {want:#010x} \
+                 — the scratch bytes are corrupt",
+                self.path
+            );
+            return Ok(None);
+        }
+        let mut buf = [0u8; 8];
+        self.r.read_exact(&mut buf).with_context(|| {
+            format!(
+                "truncated spill run {:?}: {} pair(s) missing",
+                self.path, self.remaining
+            )
+        })?;
+        self.crc.update(&buf);
+        self.remaining -= 1;
+        Ok(Some((
+            u32::from_le_bytes(buf[..4].try_into().unwrap()),
+            u32::from_le_bytes(buf[4..].try_into().unwrap()),
+        )))
+    }
+}
+
+/// A k-way loser-tree merge over sorted runs, with on-the-fly dedup.
+///
+/// Classic tournament bookkeeping: `tree[1..k]` stores the *loser* of the
+/// match at each internal node, `winner` the champion; replacing the
+/// champion's head replays only its root path (`O(log k)` comparisons per
+/// edge). Ties break toward the lower run index, so the merge is a pure
+/// function of the run contents.
+pub struct MergedStream {
+    sources: Vec<RunReader>,
+    heads: Vec<Option<(u32, u32)>>,
+    /// Loser at each internal node, `1..k`; `tree[0]` is unused.
+    tree: Vec<usize>,
+    winner: usize,
+    last: Option<(u32, u32)>,
+    done: bool,
+}
+
+impl MergedStream {
+    fn new(mut sources: Vec<RunReader>) -> Result<MergedStream> {
+        let k = sources.len();
+        let mut heads = Vec::with_capacity(k);
+        for s in sources.iter_mut() {
+            heads.push(s.next()?);
+        }
+        if k == 0 {
+            return Ok(MergedStream {
+                sources,
+                heads,
+                tree: Vec::new(),
+                winner: 0,
+                last: None,
+                done: true,
+            });
+        }
+        // Build bottom-up: node t (1..k) plays the winners of its children;
+        // nodes >= k are the leaves (source index node - k).
+        let mut winners = vec![0usize; 2 * k];
+        for (i, w) in winners.iter_mut().enumerate().skip(k) {
+            *w = i - k;
+        }
+        let mut tree = vec![0usize; k.max(1)];
+        for t in (1..k).rev() {
+            let (a, b) = (winners[2 * t], winners[2 * t + 1]);
+            let (win, lose) = if Self::beats(&heads, a, b) { (a, b) } else { (b, a) };
+            winners[t] = win;
+            tree[t] = lose;
+        }
+        let winner = winners[1.min(2 * k - 1)];
+        Ok(MergedStream { sources, heads, tree, winner, last: None, done: false })
+    }
+
+    /// Does source `a` outrank source `b`? Exhausted sources (`None`) rank
+    /// last; equal keys go to the lower run index.
+    #[inline]
+    fn beats(heads: &[Option<(u32, u32)>], a: usize, b: usize) -> bool {
+        match (&heads[a], &heads[b]) {
+            (Some(x), Some(y)) => (x, a) < (y, b),
+            (Some(_), None) => true,
+            (None, Some(_)) => false,
+            (None, None) => a < b,
+        }
+    }
+
+    /// Pop the globally smallest pair (duplicates across and within runs
+    /// already removed), or `None` at end of stream.
+    pub fn next(&mut self) -> Result<Option<(u32, u32)>> {
+        loop {
+            if self.done {
+                return Ok(None);
+            }
+            let k = self.sources.len();
+            let Some(pair) = self.heads[self.winner] else {
+                self.done = true;
+                return Ok(None);
+            };
+            // Advance the champion and replay its path to the root.
+            self.heads[self.winner] = self.sources[self.winner].next()?;
+            let mut carried = self.winner;
+            let mut t = (self.winner + k) / 2;
+            while t >= 1 {
+                if Self::beats(&self.heads, self.tree[t], carried) {
+                    std::mem::swap(&mut self.tree[t], &mut carried);
+                }
+                t /= 2;
+            }
+            self.winner = carried;
+            if self.last != Some(pair) {
+                self.last = Some(pair);
+                return Ok(Some(pair));
+            }
+        }
+    }
+}
+
+/// Bounded-memory external sorter for the canonical edge stream. See the
+/// module docs for the spill/merge contract.
+pub struct ExternalSorter {
+    scratch: ScratchDir,
+    chunk_cap: usize,
+    fan_in: usize,
+    buf: Vec<(u32, u32)>,
+    runs: Vec<PathBuf>,
+    next_run: u64,
+    finished: bool,
+    spill_bytes: u64,
+    runs_spilled: usize,
+    merge_passes: u32,
+}
+
+impl ExternalSorter {
+    /// A sorter spilling at `chunk_cap` buffered edges, merging at most
+    /// `fan_in` runs per pass. `chunk_cap ≥ 1` (pathological 1-edge chunks
+    /// are exercised by the parity tests); `fan_in ≥ 2`.
+    pub fn new(scratch: ScratchDir, chunk_cap: usize, fan_in: usize) -> Result<ExternalSorter> {
+        ensure!(chunk_cap >= 1, "chunk capacity must be at least 1 edge");
+        ensure!(fan_in >= 2, "merge fan-in must be at least 2");
+        Ok(ExternalSorter {
+            scratch,
+            chunk_cap,
+            fan_in,
+            buf: Vec::with_capacity(chunk_cap.min(1 << 22)),
+            runs: Vec::new(),
+            next_run: 0,
+            finished: false,
+            spill_bytes: 0,
+            runs_spilled: 0,
+            merge_passes: 0,
+        })
+    }
+
+    /// Accept one raw pair: self-loops are dropped, orientation is
+    /// canonicalized, and a full chunk is sorted and spilled.
+    #[inline]
+    pub fn push(&mut self, u: u32, v: u32) -> Result<()> {
+        if u == v {
+            return Ok(());
+        }
+        self.buf.push(if u < v { (u, v) } else { (v, u) });
+        if self.buf.len() >= self.chunk_cap {
+            self.spill()?;
+        }
+        Ok(())
+    }
+
+    /// Sort + dedup the buffered chunk (rayon parallel sort, same
+    /// `par_sort_unstable` + `dedup` as `GraphBuilder::build`) and spill it.
+    fn spill(&mut self) -> Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        self.buf.par_sort_unstable();
+        self.buf.dedup();
+        let path = self.scratch.file(&format!("run_{:06}.bin", self.next_run));
+        self.next_run += 1;
+        let bytes = write_run(&path, &self.buf)?;
+        self.spill_bytes += bytes;
+        self.runs_spilled += 1;
+        metrics::counter("ingest.spill_bytes").add(bytes);
+        metrics::counter("ingest.runs_spilled").inc();
+        self.runs.push(path);
+        self.buf.clear();
+        Ok(())
+    }
+
+    /// Merge a group of runs into one new run (dedup preserved level by
+    /// level), deleting the inputs. The run header carries an exact pair
+    /// count, and cross-run dedup makes that count unknowable up front —
+    /// so the group is merged twice: a counting pass, then the writing
+    /// pass. Both are sequential reads through `fan_in` small buffers.
+    fn merge_group(&mut self, group: &[PathBuf]) -> Result<PathBuf> {
+        let open_all = |group: &[PathBuf]| -> Result<Vec<RunReader>> {
+            group.iter().map(|p| RunReader::open(p)).collect()
+        };
+        let mut counter = MergedStream::new(open_all(group)?)?;
+        let mut count = 0u64;
+        while counter.next()?.is_some() {
+            count += 1;
+        }
+        let mut stream = MergedStream::new(open_all(group)?)?;
+        let out = self.scratch.file(&format!("run_{:06}.bin", self.next_run));
+        self.next_run += 1;
+        let tmp = binio::tmp_sibling(&out);
+        let guard = binio::TmpGuard::new(tmp.clone());
+        let f = std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+        let mut w = HashingWriter::new(BufWriter::new(f));
+        binio::write_magic(&mut w, RUN_MAGIC)?;
+        binio::write_version(&mut w, RUN_VERSION)?;
+        binio::write_u64(&mut w, count * 2)?;
+        let mut written = 0u64;
+        while let Some((u, v)) = stream.next()? {
+            binio::write_u32(&mut w, u)?;
+            binio::write_u32(&mut w, v)?;
+            written += 1;
+        }
+        ensure!(written == count, "merge replay diverged: {written} pairs vs {count} counted");
+        let digest = w.digest();
+        binio::write_u32(&mut w, digest)?;
+        let bytes = w.written();
+        let mut bw = w.into_inner();
+        bw.flush().with_context(|| format!("flushing {tmp:?}"))?;
+        bw.get_ref().sync_all().with_context(|| format!("fsyncing {tmp:?}"))?;
+        binio::commit_replace(&tmp, &out)?;
+        guard.disarm();
+        self.spill_bytes += bytes;
+        metrics::counter("ingest.spill_bytes").add(bytes);
+        for p in group {
+            std::fs::remove_file(p).with_context(|| format!("removing merged run {p:?}"))?;
+        }
+        Ok(out)
+    }
+
+    /// Flush the tail chunk and collapse runs down to at most `fan_in`
+    /// with whole multi-way merge passes.
+    pub fn finish(&mut self) -> Result<()> {
+        ensure!(!self.finished, "sorter already finished");
+        self.spill()?;
+        while self.runs.len() > self.fan_in {
+            let groups: Vec<Vec<PathBuf>> =
+                self.runs.chunks(self.fan_in).map(|c| c.to_vec()).collect();
+            let mut next = Vec::with_capacity(groups.len());
+            for group in &groups {
+                if group.len() == 1 {
+                    next.push(group[0].clone());
+                } else {
+                    next.push(self.merge_group(group)?);
+                }
+            }
+            self.runs = next;
+            self.merge_passes += 1;
+            metrics::counter("ingest.merge_passes").inc();
+        }
+        // The final streaming merge counts as a pass too (it is re-run on
+        // every replay, but the work shape is one pass over the data).
+        if self.runs.len() > 1 {
+            self.merge_passes += 1;
+            metrics::counter("ingest.merge_passes").inc();
+        }
+        self.finished = true;
+        Ok(())
+    }
+
+    /// Open a replayable merged view over the final runs: the canonical
+    /// sorted, deduped, self-loop-free edge stream.
+    pub fn stream(&self) -> Result<MergedStream> {
+        ensure!(self.finished, "call finish() before stream()");
+        let readers =
+            self.runs.iter().map(|p| RunReader::open(p)).collect::<Result<Vec<_>>>()?;
+        MergedStream::new(readers)
+    }
+
+    /// Total bytes spilled to scratch (initial runs + intermediate merges).
+    pub fn spill_bytes(&self) -> u64 {
+        self.spill_bytes
+    }
+
+    /// Number of initial runs spilled.
+    pub fn runs_spilled(&self) -> usize {
+        self.runs_spilled
+    }
+
+    /// Multi-way merge passes executed (intermediate collapses plus the
+    /// final streaming merge when more than one run remains).
+    pub fn merge_passes(&self) -> u32 {
+        self.merge_passes
+    }
+
+    /// Remove the scratch dir (successful close).
+    pub fn close(self) -> Result<()> {
+        self.scratch.close()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cofree_extsort_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn drain(sorter: &ExternalSorter) -> Vec<(u32, u32)> {
+        let mut s = sorter.stream().unwrap();
+        let mut out = Vec::new();
+        while let Some(e) = s.next().unwrap() {
+            out.push(e);
+        }
+        out
+    }
+
+    /// The merged stream equals `GraphBuilder::build`'s canonical edge
+    /// list for any chunk size — including pathological 1-edge chunks —
+    /// and any fan-in (multi-pass merges included).
+    #[test]
+    fn matches_builder_across_chunk_sizes_and_fan_in() {
+        let dir = tmpdir("parity");
+        let mut rng = Rng::new(11);
+        let n = 120usize;
+        let mut pairs = Vec::new();
+        for _ in 0..800 {
+            // Raw stream with self-loops and duplicates in both orientations.
+            pairs.push((rng.below(n) as u32, rng.below(n) as u32));
+        }
+        let want = GraphBuilder::new(n).edges(&pairs).build().edges().to_vec();
+        for (chunk, fan_in) in [(1usize, 2usize), (7, 2), (64, 3), (100_000, 64), (333, 4)] {
+            let scratch = ScratchDir::create(&dir).unwrap();
+            let mut sorter = ExternalSorter::new(scratch, chunk, fan_in).unwrap();
+            for &(u, v) in &pairs {
+                sorter.push(u, v).unwrap();
+            }
+            sorter.finish().unwrap();
+            assert_eq!(drain(&sorter), want, "chunk={chunk} fan_in={fan_in}");
+            // Replayable: a second stream yields the same list.
+            assert_eq!(drain(&sorter), want, "replay chunk={chunk}");
+            if chunk == 1 {
+                // ~800 one-edge runs through fan-in 2 forces many passes.
+                assert!(sorter.merge_passes() > 5, "passes={}", sorter.merge_passes());
+            }
+            sorter.close().unwrap();
+        }
+        assert!(!dir.join(SCRATCH_DIR_NAME).exists(), "scratch not cleaned");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_and_loop_only_streams() {
+        let dir = tmpdir("empty");
+        let scratch = ScratchDir::create(&dir).unwrap();
+        let mut sorter = ExternalSorter::new(scratch, 8, 2).unwrap();
+        sorter.push(3, 3).unwrap(); // self-loop only
+        sorter.finish().unwrap();
+        assert_eq!(drain(&sorter), vec![]);
+        sorter.close().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Startup hygiene: creating the scratch dir wipes debris a crashed
+    /// predecessor left behind (the stray-tmp-siblings fix).
+    #[test]
+    fn startup_clean_removes_stale_spills() {
+        let dir = tmpdir("stale");
+        let stale = dir.join(SCRATCH_DIR_NAME);
+        std::fs::create_dir_all(&stale).unwrap();
+        std::fs::write(stale.join("run_000042.bin.tmp"), b"debris").unwrap();
+        std::fs::write(stale.join("run_000042.bin"), b"debris").unwrap();
+        let scratch = ScratchDir::create(&dir).unwrap();
+        assert!(!stale.join("run_000042.bin").exists());
+        assert!(!stale.join("run_000042.bin.tmp").exists());
+        scratch.close().unwrap();
+        assert!(!stale.exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A bit-flipped spill run is a structured error at merge time, not a
+    /// silently wrong edge stream.
+    #[test]
+    fn corrupt_run_is_detected() {
+        let dir = tmpdir("corrupt");
+        let scratch = ScratchDir::create(&dir).unwrap();
+        let run = scratch.file("run_000000.bin");
+        let mut sorter = ExternalSorter::new(scratch, 4, 2).unwrap();
+        for e in [(0u32, 1u32), (1, 2), (2, 3), (3, 4)] {
+            sorter.push(e.0, e.1).unwrap();
+        }
+        sorter.finish().unwrap();
+        crate::dist::fault::flip_file_bit(&run, 21, 2).unwrap();
+        let mut s = sorter.stream().unwrap();
+        let err = loop {
+            match s.next() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("corruption not detected"),
+                Err(e) => break e,
+            }
+        };
+        assert!(format!("{err:#}").contains("digest mismatch"), "{err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Truncated runs are named as truncation.
+    #[test]
+    fn truncated_run_is_detected() {
+        let dir = tmpdir("trunc");
+        let scratch = ScratchDir::create(&dir).unwrap();
+        let run = scratch.file("run_000000.bin");
+        let mut sorter = ExternalSorter::new(scratch, 8, 2).unwrap();
+        for e in [(0u32, 1u32), (1, 2), (2, 3)] {
+            sorter.push(e.0, e.1).unwrap();
+        }
+        sorter.finish().unwrap();
+        let len = std::fs::metadata(&run).unwrap().len();
+        crate::dist::fault::truncate_file(&run, len - 6).unwrap();
+        let mut s = sorter.stream().unwrap();
+        let err = loop {
+            match s.next() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("truncation not detected"),
+                Err(e) => break e,
+            }
+        };
+        assert!(format!("{err:#}").contains("truncated spill run"), "{err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,452 @@
+//! Direct-to-shard materialization: build shard-v2 files incrementally.
+//!
+//! [`Shard::write`](crate::dist::Shard::write) needs the whole partition
+//! in memory (local edge list included). [`ShardStreamWriter`] produces
+//! the **same bytes** without ever holding a partition's edges: each
+//! shard file is opened up front with its fixed-size header (digests
+//! zeroed) and its O(V_local) prefix sections, local edges are appended
+//! one at a time as the assignment pass streams them, and `close`
+//! back-patches the three pieces that could not be known in advance —
+//! the edges length prefix, the per-section digest table, and the
+//! whole-file digest — with bounded-memory re-read passes:
+//!
+//! 1. re-read the edges section → its section digest;
+//! 2. re-read bytes 16..EOF (digest table now final) → the file digest;
+//! 3. re-read the whole file → the full-file CRC `manifest.json` records.
+//!
+//! Every shard still goes through the durable tmp → fsync → rename path,
+//! and the manifest is rendered by the *same* `render_manifest` the
+//! in-memory pipeline uses and committed **last** — the crash-safety
+//! contract of
+//! PR 7 is preserved verbatim, and the output is bitwise identical to
+//! `write_shards` by construction (and by the parity tests).
+
+use crate::dist::shard::{
+    commit_manifest, render_manifest, shard_file_name, ShardFileInfo, ShardFileRecord,
+    ShardSetStats, SHARD_MAGIC, SHARD_VERSION,
+};
+use crate::runtime::ModelConfig;
+use crate::util::binio;
+use crate::util::hash::{Crc32c, HashingWriter};
+use anyhow::{ensure, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Everything the shard header and manifest need to know about the run —
+/// the scalar fields of [`crate::dist::Shard`] minus the per-part arrays.
+#[derive(Clone, Debug)]
+pub struct ShardStreamMeta {
+    pub dataset: String,
+    pub seed: u64,
+    pub num_parts: usize,
+    pub model: ModelConfig,
+    pub global_nodes: usize,
+    pub global_edges: usize,
+}
+
+/// The O(V_local) arrays a part still needs at close time (gathered from
+/// the node-data tables by the orchestrator; never O(E)).
+pub struct PartSections {
+    pub dar: Vec<f32>,
+    pub features: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub split: Vec<u8>,
+}
+
+// Fixed header offsets of the shard-v2 layout (see `dist::shard` docs):
+// magic 0..8, version 8..12, file_digest 12..16, n_sections 16..20,
+// section digest table 20..44, scalars 44..92, global_ids section at 92.
+const FILE_DIGEST_OFF: u64 = 12;
+const BODY_START: u64 = 16;
+const DIGEST_TABLE_OFF: u64 = 20;
+const SCALARS_OFF: u64 = 44;
+const GLOBAL_IDS_OFF: u64 = 92;
+
+/// One shard file mid-materialization.
+struct PartFile {
+    path: PathBuf,
+    tmp: PathBuf,
+    guard: Option<binio::TmpGuard>,
+    w: Option<BufWriter<File>>,
+    global_ids: Vec<u32>,
+    /// Local degree of every local node, counted as edges are appended
+    /// (this is exactly `PartGraph::local.degree`, needed for DAR).
+    local_deg: Vec<u32>,
+    sec_digests: [u32; 6],
+    m_local: u64,
+    last_edge: Option<(u32, u32)>,
+}
+
+impl PartFile {
+    /// Byte offset of the edges section's u64 length prefix.
+    fn edges_prefix_off(&self) -> u64 {
+        GLOBAL_IDS_OFF + 8 + 4 * self.global_ids.len() as u64
+    }
+
+    fn open(
+        dir: &Path,
+        part_id: usize,
+        meta: &ShardStreamMeta,
+        global_ids: Vec<u32>,
+    ) -> Result<PartFile> {
+        let path = dir.join(shard_file_name(part_id));
+        let tmp = binio::tmp_sibling(&path);
+        let guard = binio::TmpGuard::new(tmp.clone());
+        let f = File::options()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp)
+            .with_context(|| format!("create {tmp:?}"))?;
+        let mut w = BufWriter::new(f);
+        binio::write_magic(&mut w, SHARD_MAGIC)?;
+        binio::write_version(&mut w, SHARD_VERSION)?;
+        binio::write_u32(&mut w, 0)?; // file digest — patched at close
+        binio::write_u32(&mut w, 6)?; // n_sections
+        for _ in 0..6 {
+            binio::write_u32(&mut w, 0)?; // section digests — patched at close
+        }
+        // Scalars, exactly `Shard::emit_scalars`.
+        binio::write_u32(&mut w, part_id as u32)?;
+        binio::write_u32(&mut w, meta.num_parts as u32)?;
+        for d in [meta.model.layers, meta.model.feat_dim, meta.model.hidden, meta.model.classes] {
+            binio::write_u32(&mut w, d as u32)?;
+        }
+        binio::write_u64(&mut w, meta.seed)?;
+        binio::write_u64(&mut w, meta.global_nodes as u64)?;
+        binio::write_u64(&mut w, meta.global_edges as u64)?;
+        // Section 0 (global ids) is known now; its digest too.
+        let mut sec_digests = [0u32; 6];
+        sec_digests[0] = section_digest(|h| binio::write_u32s(h, &global_ids))?;
+        binio::write_u32s(&mut w, &global_ids)?;
+        // Section 1 (edges): u64 length placeholder, payload appended via
+        // `append`, prefix patched at close.
+        binio::write_u64(&mut w, 0)?;
+        let n_local = global_ids.len();
+        Ok(PartFile {
+            path,
+            tmp,
+            guard: Some(guard),
+            w: Some(w),
+            global_ids,
+            local_deg: vec![0u32; n_local],
+            sec_digests,
+            m_local: 0,
+            last_edge: None,
+        })
+    }
+
+    /// Append one local canonical edge. The assignment pass visits the
+    /// global canonical stream in order and local remapping is monotone,
+    /// so edges arrive exactly in `check_edges` order — verified here so
+    /// a pipeline bug cannot produce a well-checksummed invalid shard.
+    #[inline]
+    fn append(&mut self, lu: u32, lv: u32) -> Result<()> {
+        ensure!(lu < lv, "local edge not canonical: ({lu}, {lv})");
+        ensure!(
+            (lv as usize) < self.global_ids.len(),
+            "local endpoint {lv} out of range ({} local nodes)",
+            self.global_ids.len()
+        );
+        ensure!(
+            self.last_edge.is_none_or(|last| last < (lu, lv)),
+            "local edges out of order: {:?} then ({lu}, {lv})",
+            self.last_edge
+        );
+        self.last_edge = Some((lu, lv));
+        let w = self.w.as_mut().expect("part already closed");
+        binio::write_u32(w, lu)?;
+        binio::write_u32(w, lv)?;
+        self.local_deg[lu as usize] += 1;
+        self.local_deg[lv as usize] += 1;
+        self.m_local += 1;
+        Ok(())
+    }
+
+    /// Write the tail sections, back-patch the three unknowns, verify the
+    /// final length, and durably commit. Returns the manifest receipt.
+    fn close(mut self, meta: &ShardStreamMeta, sections: PartSections) -> Result<ShardFileInfo> {
+        let n_local = self.global_ids.len();
+        let dim = meta.model.feat_dim;
+        ensure!(sections.dar.len() == n_local, "dar length mismatch");
+        ensure!(sections.labels.len() == n_local, "labels length mismatch");
+        ensure!(sections.split.len() == n_local, "split length mismatch");
+        ensure!(sections.features.len() == n_local * dim, "features length mismatch");
+        // Tail sections and their digests (same sink-writer digests as
+        // `Shard::write` — length prefixes included).
+        {
+            let w = self.w.as_mut().expect("part already closed");
+            self.sec_digests[2] = section_digest(|h| binio::write_f32s(h, &sections.dar))?;
+            binio::write_f32s(w, &sections.dar)?;
+            self.sec_digests[3] = section_digest(|h| binio::write_f32s(h, &sections.features))?;
+            binio::write_f32s(w, &sections.features)?;
+            self.sec_digests[4] = section_digest(|h| binio::write_u32s(h, &sections.labels))?;
+            binio::write_u32s(w, &sections.labels)?;
+            self.sec_digests[5] = section_digest(|h| binio::write_bytes(h, &sections.split))?;
+            binio::write_bytes(w, &sections.split)?;
+        }
+        let mut f = self
+            .w
+            .take()
+            .unwrap()
+            .into_inner()
+            .map_err(|e| anyhow::anyhow!("flushing {:?}: {}", self.tmp, e.error()))?;
+        // Patch 1: the edges length prefix (count of u32 words).
+        let edges_off = self.edges_prefix_off();
+        f.seek(SeekFrom::Start(edges_off))?;
+        f.write_all(&(self.m_local * 2).to_le_bytes())?;
+        // Re-read pass 1: the edges section (prefix + payload) → digest.
+        let edges_len = 8 + 8 * self.m_local;
+        let (edges_digest, _) = crc_range(&mut f, edges_off, Some(edges_len))
+            .with_context(|| format!("digesting edges section of {:?}", self.tmp))?;
+        self.sec_digests[1] = edges_digest;
+        // Patch 2: the now-complete section digest table.
+        f.seek(SeekFrom::Start(DIGEST_TABLE_OFF))?;
+        for d in self.sec_digests {
+            f.write_all(&d.to_le_bytes())?;
+        }
+        // Re-read pass 2: everything after the file-digest field.
+        let (file_digest, body_len) = crc_range(&mut f, BODY_START, None)
+            .with_context(|| format!("digesting {:?}", self.tmp))?;
+        f.seek(SeekFrom::Start(FILE_DIGEST_OFF))?;
+        f.write_all(&file_digest.to_le_bytes())?;
+        // Re-read pass 3: the full file → the CRC the manifest records.
+        let (full_crc, bytes) = crc_range(&mut f, 0, None)
+            .with_context(|| format!("checksumming {:?}", self.tmp))?;
+        ensure!(bytes == BODY_START + body_len, "file changed size during close");
+        let expected = edges_off + edges_len      // header + ids + edges
+            + (8 + 4 * n_local as u64)            // dar
+            + (8 + 4 * (n_local * dim) as u64)    // features
+            + (8 + 4 * n_local as u64)            // labels
+            + (8 + n_local as u64);               // split
+        ensure!(
+            bytes == expected,
+            "shard {:?} is {bytes} bytes, expected {expected}",
+            self.path
+        );
+        f.sync_all().with_context(|| format!("fsyncing {:?}", self.tmp))?;
+        drop(f);
+        binio::commit_replace(&self.tmp, &self.path)?;
+        self.guard.take().unwrap().disarm();
+        Ok(ShardFileInfo { bytes, crc32c: full_crc })
+    }
+}
+
+/// Digest of one encoded section (length prefix included), computed the
+/// same way `Shard::write` does: through a `HashingWriter` over a sink.
+fn section_digest(
+    write: impl FnOnce(&mut HashingWriter<std::io::Sink>) -> Result<()>,
+) -> Result<u32> {
+    let mut h = HashingWriter::new(std::io::sink());
+    write(&mut h)?;
+    Ok(h.digest())
+}
+
+/// CRC-32C of `len` bytes (or to EOF) starting at `start`, streamed
+/// through a fixed 64 KiB buffer. Returns `(digest, bytes_read)`.
+fn crc_range(f: &mut File, start: u64, len: Option<u64>) -> Result<(u32, u64)> {
+    f.seek(SeekFrom::Start(start))?;
+    let mut crc = Crc32c::new();
+    let mut r = BufReader::with_capacity(64 * 1024, &mut *f);
+    let mut buf = [0u8; 64 * 1024];
+    let mut remaining = len;
+    let mut total = 0u64;
+    loop {
+        let want = match remaining {
+            Some(0) => break,
+            Some(rem) => rem.min(buf.len() as u64) as usize,
+            None => buf.len(),
+        };
+        let k = r.read(&mut buf[..want])?;
+        if k == 0 {
+            ensure!(remaining.is_none_or(|rem| rem == 0), "unexpected EOF in checksum pass");
+            break;
+        }
+        crc.update(&buf[..k]);
+        total += k as u64;
+        if let Some(rem) = &mut remaining {
+            *rem -= k as u64;
+        }
+    }
+    Ok((crc.finish(), total))
+}
+
+/// Incremental writer for a whole shard store: one [`PartFile`] per
+/// partition plus the manifest-last commit. Peak memory is the id tables
+/// and degree counters — O(V·RF) — plus one write buffer per part.
+pub struct ShardStreamWriter {
+    dir: PathBuf,
+    meta: ShardStreamMeta,
+    parts: Vec<PartFile>,
+}
+
+impl ShardStreamWriter {
+    /// Open every part file with its id table (sorted ascending global
+    /// ids, exactly `materialize_part`'s ordering).
+    pub fn create(
+        dir: &Path,
+        meta: ShardStreamMeta,
+        id_tables: Vec<Vec<u32>>,
+    ) -> Result<ShardStreamWriter> {
+        ensure!(id_tables.len() == meta.num_parts, "one id table per part");
+        std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+        let parts = id_tables
+            .into_iter()
+            .enumerate()
+            .map(|(i, ids)| PartFile::open(dir, i, &meta, ids))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardStreamWriter { dir: dir.to_path_buf(), meta, parts })
+    }
+
+    /// The sorted global-id table of a part (for local remapping).
+    pub fn global_ids(&self, part: usize) -> &[u32] {
+        &self.parts[part].global_ids
+    }
+
+    /// Local degrees counted so far (final after the assignment pass).
+    pub fn local_degrees(&self, part: usize) -> &[u32] {
+        &self.parts[part].local_deg
+    }
+
+    /// Append one local canonical edge to a part.
+    #[inline]
+    pub fn append(&mut self, part: usize, lu: u32, lv: u32) -> Result<()> {
+        self.parts[part].append(lu, lv)
+    }
+
+    /// Close every part in order (the provider returns each part's tail
+    /// sections), then render and durably commit the manifest — last, as
+    /// always.
+    pub fn finish(
+        self,
+        mut sections: impl FnMut(usize, &[u32], &[u32]) -> Result<PartSections>,
+    ) -> Result<ShardSetStats> {
+        let meta = self.meta;
+        let mut files = Vec::with_capacity(meta.num_parts);
+        let mut part_sizes = Vec::with_capacity(meta.num_parts);
+        let mut total_bytes = 0u64;
+        for (i, part) in self.parts.into_iter().enumerate() {
+            let tail = sections(i, &part.global_ids, &part.local_deg)?;
+            part_sizes.push((part.global_ids.len(), part.m_local as usize));
+            let info = part.close(&meta, tail)?;
+            total_bytes += info.bytes;
+            files.push(ShardFileRecord {
+                name: shard_file_name(i),
+                bytes: info.bytes,
+                crc32c: info.crc32c,
+            });
+        }
+        let stats = ShardSetStats { files, total_bytes };
+        let json = render_manifest(
+            &meta.dataset,
+            meta.seed,
+            meta.num_parts,
+            &meta.model,
+            meta.global_nodes,
+            meta.global_edges,
+            &stats,
+            &part_sizes,
+        );
+        commit_manifest(&self.dir, &json)?;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::shard::write_shards;
+    use crate::graph::features::{self, FeatureParams};
+    use crate::graph::Dataset;
+    use crate::partition::dar::{dar_weights, Reweighting};
+    use crate::partition::{algorithm, VertexCut};
+    use crate::train::engine::model_config;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cofree_mat_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Drive the incremental writer from an in-memory vertex cut and
+    /// assert every output file is bitwise identical to `write_shards`.
+    #[test]
+    fn streamed_files_are_bitwise_identical_to_in_memory_writer() {
+        let mut rng = Rng::new(5);
+        let g = crate::graph::generators::barabasi_albert(300, 3, &mut rng);
+        let n = g.num_nodes();
+        let comm: Vec<u32> = (0..n).map(|_| rng.below(6) as u32).collect();
+        let data = features::synthesize(&comm, 6, &FeatureParams::default(), &mut rng.fork(9));
+        let ds = Dataset { name: "mat-parity".into(), graph: g, data, layers: 2, hidden: 16 };
+        let p = 4;
+        let vc =
+            VertexCut::create(&ds.graph, p, algorithm("dbh").unwrap().as_ref(), &mut Rng::new(33));
+        let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+
+        let dir_mem = tmpdir("mem");
+        write_shards(&ds, &vc, &weights, 33, &dir_mem).unwrap();
+
+        let dir_stream = tmpdir("stream");
+        let meta = ShardStreamMeta {
+            dataset: ds.name.clone(),
+            seed: 33,
+            num_parts: p,
+            model: model_config(&ds),
+            global_nodes: ds.graph.num_nodes(),
+            global_edges: ds.graph.num_edges(),
+        };
+        let id_tables: Vec<Vec<u32>> = vc.parts.iter().map(|pt| pt.global_ids.clone()).collect();
+        let mut w = ShardStreamWriter::create(&dir_stream, meta, id_tables).unwrap();
+        // Replay the canonical stream through the assignment, remapping
+        // to local ids exactly as `materialize_part` does.
+        let degree = ds.graph.degrees();
+        let mut sa = crate::ingest::assign::StreamAssigner::new(
+            crate::ingest::assign::StreamAlgo::Dbh,
+            n,
+            p,
+            Rng::new(33),
+        );
+        for &(u, v) in ds.graph.edges() {
+            let part = sa.assign(u, v, degree[u as usize], degree[v as usize]) as usize;
+            let ids = w.global_ids(part);
+            let lu = ids.binary_search(&u).unwrap() as u32;
+            let lv = ids.binary_search(&v).unwrap() as u32;
+            w.append(part, lu, lv).unwrap();
+        }
+        w.finish(|i, ids, local_deg| {
+            let nd = &ds.data;
+            let mut features = Vec::with_capacity(ids.len() * nd.dim);
+            let mut labels = Vec::with_capacity(ids.len());
+            let mut split = Vec::with_capacity(ids.len());
+            for &gid in ids {
+                features.extend_from_slice(nd.feature(gid));
+                labels.push(nd.labels[gid as usize]);
+                split.push(nd.split[gid as usize]);
+            }
+            // The oracle's weights for this part, recomputed from the
+            // streamed state to prove the bounded-memory path suffices.
+            let rf_weights = &weights[i];
+            let dar: Vec<f32> = ids
+                .iter()
+                .enumerate()
+                .map(|(l, &gid)| local_deg[l] as f32 / ds.graph.degree(gid).max(1) as f32)
+                .collect();
+            assert_eq!(&dar, rf_weights, "part {i} dar diverged");
+            Ok(PartSections { dar, features, labels, split })
+        })
+        .unwrap();
+
+        for entry in std::fs::read_dir(&dir_mem).unwrap() {
+            let name = entry.unwrap().file_name();
+            let a = std::fs::read(dir_mem.join(&name)).unwrap();
+            let b = std::fs::read(dir_stream.join(&name)).unwrap();
+            assert_eq!(a, b, "{name:?} differs");
+        }
+        std::fs::remove_dir_all(&dir_mem).unwrap();
+        std::fs::remove_dir_all(&dir_stream).unwrap();
+    }
+}

@@ -1,0 +1,510 @@
+//! Out-of-core shard ingest: external-sort → streaming assignment →
+//! direct-to-shard materialization.
+//!
+//! The in-memory pipeline (`GraphBuilder::build` → `VertexCut::create` →
+//! `write_shards`) holds the whole edge list — O(E) — at every stage.
+//! This module is the bounded-memory tier underneath `cofree shard
+//! --stream`: peak resident state is **O(V + chunk)** — the degree table,
+//! the per-vertex membership sets, the id tables and the node-data arrays
+//! are O(V); edges only ever exist in one sort chunk or in fixed-size
+//! merge buffers. The passes:
+//!
+//! 1. **External sort** ([`extsort`]): raw pairs are canonicalized and
+//!    spilled as sorted CRC-trailed runs, then loser-tree-merged into a
+//!    *replayable* canonical stream identical to `GraphBuilder::build`'s
+//!    edge list.
+//! 2. **Degree pass**: one replay builds the global degree table (the
+//!    pipeline's only mandatory O(V) array).
+//! 3. **Assignment pass A** ([`assign`]): the streaming assigner (same
+//!    per-edge decision cores as the in-memory algorithms) runs once to
+//!    learn each part's vertex membership → sorted id tables.
+//! 4. **Assignment pass B + materialize** ([`materialize`]): a fresh
+//!    assigner re-runs the identical decision sequence while each edge is
+//!    remapped (binary search, monotone) and appended straight into its
+//!    part's shard-v2 file; digests are back-patched at close and the
+//!    manifest is committed last.
+//!
+//! The result is **bitwise identical** to the in-memory store wherever
+//! both can run — shard bytes and manifest bytes — which the `out_of_core`
+//! property tests assert across chunk sizes (down to one edge) and thread
+//! counts. Memory accounting and the parity contract are documented in
+//! DESIGN.md §2.4.
+
+pub mod assign;
+pub mod extsort;
+pub mod materialize;
+
+pub use assign::{StreamAlgo, StreamAssigner};
+pub use extsort::{ExternalSorter, MergedStream, ScratchDir, DEFAULT_FAN_IN, SCRATCH_DIR_NAME};
+pub use materialize::{PartSections, ShardStreamMeta, ShardStreamWriter};
+
+use crate::dist::shard::ShardSetStats;
+use crate::graph::features::{self, FeatureParams};
+use crate::graph::NodeData;
+use crate::obs::{metrics, trace};
+use crate::partition::Reweighting;
+use crate::runtime::ModelConfig;
+use crate::train::model::ModelKind;
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::path::Path;
+
+/// A chunked producer of raw endpoint pairs (any orientation, self-loops
+/// and duplicates allowed). Sources are consumed exactly once — the
+/// external sorter's runs make the *canonical* stream replayable, so the
+/// raw source never needs to be.
+pub trait EdgeSource {
+    /// Total vertex count (ids in `0..num_nodes`).
+    fn num_nodes(&self) -> usize;
+    /// Append up to `cap` pairs to `buf`; returns how many were appended,
+    /// `0` meaning the source is exhausted.
+    fn next_chunk(&mut self, cap: usize, buf: &mut Vec<(u32, u32)>) -> Result<usize>;
+}
+
+/// An in-memory pair list as an [`EdgeSource`] (tests and small inputs).
+pub struct SliceSource<'a> {
+    num_nodes: usize,
+    pairs: &'a [(u32, u32)],
+    pos: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(num_nodes: usize, pairs: &'a [(u32, u32)]) -> SliceSource<'a> {
+        SliceSource { num_nodes, pairs, pos: 0 }
+    }
+}
+
+impl EdgeSource for SliceSource<'_> {
+    fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    fn next_chunk(&mut self, cap: usize, buf: &mut Vec<(u32, u32)>) -> Result<usize> {
+        let k = cap.min(self.pairs.len() - self.pos);
+        buf.extend_from_slice(&self.pairs[self.pos..self.pos + k]);
+        self.pos += k;
+        Ok(k)
+    }
+}
+
+/// Everything `stream_shards` needs to know about the dataset besides the
+/// edges: the name, the O(V) node-data tables, and the model recipe dims
+/// (mirrors the fields `model_config` reads off a `Dataset`).
+pub struct StreamDataset<'a> {
+    pub name: &'a str,
+    pub data: &'a NodeData,
+    pub layers: usize,
+    pub hidden: usize,
+}
+
+/// Tuning and semantics of one streaming ingest.
+#[derive(Clone, Debug)]
+pub struct StreamOptions {
+    pub num_parts: usize,
+    pub algo: StreamAlgo,
+    pub reweight: Reweighting,
+    pub seed: u64,
+    /// Total memory budget for edge-holding state, in bytes. Converted to
+    /// a chunk size by [`chunk_edges_for_budget`] unless `chunk_edges`
+    /// overrides it.
+    pub mem_budget_bytes: u64,
+    /// Explicit sort-chunk override in edges (tests use `1` to force the
+    /// pathological everything-spills path).
+    pub chunk_edges: Option<usize>,
+    /// Merge fan-in (runs merged per pass).
+    pub fan_in: usize,
+}
+
+impl StreamOptions {
+    pub fn new(
+        num_parts: usize,
+        algo: StreamAlgo,
+        reweight: Reweighting,
+        seed: u64,
+    ) -> StreamOptions {
+        StreamOptions {
+            num_parts,
+            algo,
+            reweight,
+            seed,
+            mem_budget_bytes: 512 << 20,
+            chunk_edges: None,
+            fan_in: DEFAULT_FAN_IN,
+        }
+    }
+}
+
+/// Receipt of a streaming ingest: the shard-store stats plus the
+/// out-of-core telemetry the bench and CI smoke report.
+#[derive(Clone, Debug)]
+pub struct StreamStats {
+    pub store: ShardSetStats,
+    /// Canonical (deduped) edge count of the ingested graph.
+    pub edges: u64,
+    /// Raw pairs consumed from the source (pre-canonicalization).
+    pub raw_pairs: u64,
+    pub nodes: usize,
+    pub spill_bytes: u64,
+    pub runs_spilled: usize,
+    pub merge_passes: u32,
+}
+
+/// Sort-chunk size for a byte budget: the chunk buffer is 8 B/edge and
+/// the budget must also cover the O(V) tables, merge buffers and shard
+/// write buffers, so the chunk gets half — `budget / 16` edges (floor 1).
+pub fn chunk_edges_for_budget(budget_bytes: u64) -> usize {
+    ((budget_bytes / 16).max(1) as usize).min(1 << 28)
+}
+
+/// Classes used by [`synth_node_data`].
+pub const SYNTH_CLASSES: usize = 8;
+/// Feature dimension used by [`synth_node_data`].
+pub const SYNTH_DIM: usize = 16;
+/// Model depth `cofree shard --input` datasets train with.
+pub const SYNTH_LAYERS: usize = 2;
+/// Hidden width `cofree shard --input` datasets train with.
+pub const SYNTH_HIDDEN: usize = 32;
+
+/// Deterministic node data for a bare edge list (`--input edges.bin` has
+/// no feature tables): random communities + the standard synthesizer,
+/// seeded only by `(seed, n)` — both the streamed and the in-memory CLI
+/// paths call this, so their stores stay comparable byte-for-byte.
+pub fn synth_node_data(n: usize, seed: u64) -> NodeData {
+    let mut rng = Rng::new(seed ^ 0xED6E_11D7_5EED_C0DE);
+    let comm: Vec<u32> = (0..n).map(|_| rng.below(SYNTH_CLASSES) as u32).collect();
+    let params = FeatureParams { dim: SYNTH_DIM, ..FeatureParams::default() };
+    features::synthesize(&comm, SYNTH_CLASSES, &params, &mut rng.fork(1))
+}
+
+/// Per-vertex part-membership sets — the streaming replacement for
+/// `VertexCut::node_replication` + per-part id gathering. Bitsets when
+/// `p ≤ 64` (one u64 per vertex), sorted small vecs otherwise; the same
+/// two representations the greedy state uses.
+enum Membership {
+    Bits(Vec<u64>),
+    Vecs(Vec<Vec<u32>>),
+}
+
+impl Membership {
+    fn new(n: usize, p: usize) -> Membership {
+        if p <= 64 {
+            Membership::Bits(vec![0u64; n])
+        } else {
+            Membership::Vecs(vec![Vec::new(); n])
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, v: u32, part: u32) {
+        match self {
+            Membership::Bits(bits) => bits[v as usize] |= 1u64 << part,
+            Membership::Vecs(vecs) => {
+                let set = &mut vecs[v as usize];
+                if let Err(at) = set.binary_search(&part) {
+                    set.insert(at, part);
+                }
+            }
+        }
+    }
+
+    /// Replication factor of `v` (0 for isolated vertices).
+    fn count(&self, v: u32) -> u32 {
+        match self {
+            Membership::Bits(bits) => bits[v as usize].count_ones(),
+            Membership::Vecs(vecs) => vecs[v as usize].len() as u32,
+        }
+    }
+
+    /// Visit the parts containing `v`, ascending.
+    fn for_each(&self, v: u32, mut f: impl FnMut(u32)) {
+        match self {
+            Membership::Bits(bits) => {
+                let mut m = bits[v as usize];
+                while m != 0 {
+                    f(m.trailing_zeros());
+                    m &= m - 1;
+                }
+            }
+            Membership::Vecs(vecs) => {
+                for &part in &vecs[v as usize] {
+                    f(part);
+                }
+            }
+        }
+    }
+}
+
+/// Run the whole out-of-core pipeline: ingest `source` through the
+/// external sorter, stream-assign, and materialize the shard store at
+/// `out`. The store is bitwise identical to
+/// `write_shards(&Dataset {..}, &VertexCut::create(..), ..)` with the
+/// same seed wherever the graph also fits in memory.
+pub fn stream_shards(
+    source: &mut dyn EdgeSource,
+    ds: &StreamDataset,
+    opts: &StreamOptions,
+    out: &Path,
+) -> Result<StreamStats> {
+    let n = source.num_nodes();
+    let p = opts.num_parts;
+    ensure!(p >= 1, "need at least one partition");
+    ensure!(p <= u32::MAX as usize, "too many partitions");
+    ensure!(
+        ds.data.labels.len() == n,
+        "node data covers {} nodes but the edge source declares {n}",
+        ds.data.labels.len()
+    );
+    let chunk_cap =
+        opts.chunk_edges.unwrap_or_else(|| chunk_edges_for_budget(opts.mem_budget_bytes));
+
+    // Pass 1: chunked external sort of the raw pair stream.
+    let (raw_pairs, sorter) = {
+        let _span = trace::span("ingest.sort");
+        let scratch = ScratchDir::create(out)?;
+        let mut sorter = ExternalSorter::new(scratch, chunk_cap, opts.fan_in)?;
+        let mut buf: Vec<(u32, u32)> = Vec::new();
+        let mut raw_pairs = 0u64;
+        loop {
+            buf.clear();
+            let k = source.next_chunk(chunk_cap.min(1 << 16), &mut buf)?;
+            if k == 0 {
+                break;
+            }
+            raw_pairs += k as u64;
+            for &(u, v) in buf.iter() {
+                ensure!(
+                    (u as usize) < n && (v as usize) < n,
+                    "edge ({u}, {v}) out of range for {n} nodes"
+                );
+                sorter.push(u, v)?;
+            }
+        }
+        sorter.finish()?;
+        (raw_pairs, sorter)
+    };
+
+    // Pass 2: the degree table — the pipeline's O(V) backbone.
+    let mut degrees = vec![0u32; n];
+    let mut m = 0u64;
+    {
+        let _span = trace::span("ingest.degrees");
+        let mut s = sorter.stream()?;
+        while let Some((u, v)) = s.next()? {
+            degrees[u as usize] += 1;
+            degrees[v as usize] += 1;
+            m += 1;
+        }
+    }
+
+    // Pass 3: assignment pass A — learn per-vertex membership, then
+    // derive each part's sorted global-id table.
+    let mut membership = Membership::new(n, p);
+    {
+        let _span = trace::span("ingest.assign");
+        let mut assigner = StreamAssigner::new(opts.algo, n, p, Rng::new(opts.seed));
+        let mut s = sorter.stream()?;
+        while let Some((u, v)) = s.next()? {
+            let part = assigner.assign(u, v, degrees[u as usize], degrees[v as usize]);
+            membership.insert(u, part);
+            membership.insert(v, part);
+        }
+    }
+    let mut id_tables: Vec<Vec<u32>> = vec![Vec::new(); p];
+    for v in 0..n as u32 {
+        membership.for_each(v, |part| id_tables[part as usize].push(v));
+    }
+
+    // Pass 4: assignment pass B — a fresh assigner replays the identical
+    // decision sequence while edges stream straight into the shard files.
+    let stats;
+    {
+        let _span = trace::span("ingest.materialize");
+        let model = ModelConfig {
+            kind: ModelKind::Sage,
+            layers: ds.layers,
+            feat_dim: ds.data.dim,
+            hidden: ds.hidden,
+            classes: ds.data.num_classes,
+        };
+        let meta = ShardStreamMeta {
+            dataset: ds.name.to_string(),
+            seed: opts.seed,
+            num_parts: p,
+            model,
+            global_nodes: n,
+            global_edges: m as usize,
+        };
+        let mut writer = ShardStreamWriter::create(out, meta, id_tables)?;
+        let mut assigner = StreamAssigner::new(opts.algo, n, p, Rng::new(opts.seed));
+        let mut s = sorter.stream()?;
+        while let Some((u, v)) = s.next()? {
+            let part = assigner.assign(u, v, degrees[u as usize], degrees[v as usize]) as usize;
+            let ids = writer.global_ids(part);
+            let lu = ids
+                .binary_search(&u)
+                .map_err(|_| anyhow::anyhow!("endpoint {u} missing from part {part} id table"))?;
+            let lv = ids
+                .binary_search(&v)
+                .map_err(|_| anyhow::anyhow!("endpoint {v} missing from part {part} id table"))?;
+            writer.append(part, lu as u32, lv as u32)?;
+        }
+        // Spill runs have served their purpose — scratch is removed
+        // *before* the manifest lands, so a completed store never
+        // contains ingest debris.
+        let spill_bytes = sorter.spill_bytes();
+        let runs_spilled = sorter.runs_spilled();
+        let merge_passes = sorter.merge_passes();
+        sorter.close()?;
+
+        let nd = ds.data;
+        let store = writer.finish(|_, ids, local_deg| {
+            let mut feats = Vec::with_capacity(ids.len() * nd.dim);
+            let mut labels = Vec::with_capacity(ids.len());
+            let mut split = Vec::with_capacity(ids.len());
+            for &gid in ids {
+                feats.extend_from_slice(nd.feature(gid));
+                labels.push(nd.labels[gid as usize]);
+                split.push(nd.split[gid as usize]);
+            }
+            // Same arithmetic as `dar_weights`, fed from streamed state.
+            let dar: Vec<f32> = match opts.reweight {
+                Reweighting::None => vec![1.0; ids.len()],
+                Reweighting::VanillaInv => ids
+                    .iter()
+                    .map(|&gid| 1.0 / membership.count(gid).max(1) as f32)
+                    .collect(),
+                Reweighting::Dar => ids
+                    .iter()
+                    .enumerate()
+                    .map(|(l, &gid)| {
+                        local_deg[l] as f32 / degrees[gid as usize].max(1) as f32
+                    })
+                    .collect(),
+            };
+            Ok(PartSections { dar, features: feats, labels, split })
+        })?;
+        stats = StreamStats {
+            store,
+            edges: m,
+            raw_pairs,
+            nodes: n,
+            spill_bytes,
+            runs_spilled,
+            merge_passes,
+        };
+    }
+    metrics::counter("ingest.edges").add(stats.edges);
+    metrics::counter("ingest.raw_pairs").add(stats.raw_pairs);
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::shard::write_shards;
+    use crate::graph::{Dataset, GraphBuilder};
+    use crate::partition::{algorithm, dar_weights, VertexCut};
+    use crate::util::rng::Rng;
+    use std::path::PathBuf;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("cofree_ingest_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// End-to-end parity on a messy raw stream: every store file the
+    /// streamed pipeline writes is bitwise identical to the in-memory
+    /// pipeline's, across chunk sizes including one-edge chunks, for
+    /// every streaming algorithm and reweighting scheme.
+    #[test]
+    fn streamed_store_is_bitwise_identical_to_in_memory() {
+        let mut rng = Rng::new(21);
+        let n = 200usize;
+        let mut pairs = Vec::new();
+        for _ in 0..1500 {
+            pairs.push((rng.below(n) as u32, rng.below(n) as u32));
+        }
+        let g = GraphBuilder::new(n).edges(&pairs).build();
+        let data = synth_node_data(n, 77);
+        let ds = Dataset {
+            name: "ingest-parity".into(),
+            graph: g,
+            data: data.clone(),
+            layers: SYNTH_LAYERS,
+            hidden: SYNTH_HIDDEN,
+        };
+        for algo_name in ["random", "dbh", "greedy-seq"] {
+            let algo = algorithm(algo_name).unwrap();
+            let vc = VertexCut::create(&ds.graph, 3, algo.as_ref(), &mut Rng::new(77));
+            for reweight in [Reweighting::Dar, Reweighting::VanillaInv, Reweighting::None] {
+                let weights = dar_weights(&ds.graph, &vc, reweight);
+                let dir_mem = tmpdir("mem");
+                write_shards(&ds, &vc, &weights, 77, &dir_mem).unwrap();
+                for chunk in [1usize, 17, 1 << 20] {
+                    let dir_stream = tmpdir("stream");
+                    let mut opts = StreamOptions::new(
+                        3,
+                        StreamAlgo::parse(algo_name).unwrap(),
+                        reweight,
+                        77,
+                    );
+                    opts.chunk_edges = Some(chunk);
+                    opts.fan_in = 3;
+                    let sds = StreamDataset {
+                        name: "ingest-parity",
+                        data: &data,
+                        layers: SYNTH_LAYERS,
+                        hidden: SYNTH_HIDDEN,
+                    };
+                    let mut source = SliceSource::new(n, &pairs);
+                    let stats = stream_shards(&mut source, &sds, &opts, &dir_stream).unwrap();
+                    assert_eq!(stats.edges as usize, ds.graph.num_edges());
+                    assert_eq!(stats.raw_pairs, pairs.len() as u64);
+                    assert!(!dir_stream.join(SCRATCH_DIR_NAME).exists(), "scratch left behind");
+                    let mut names: Vec<String> = std::fs::read_dir(&dir_mem)
+                        .unwrap()
+                        .map(|e| e.unwrap().file_name().into_string().unwrap())
+                        .collect();
+                    names.sort();
+                    assert!(names.contains(&"manifest.json".to_string()));
+                    for name in &names {
+                        let a = std::fs::read(dir_mem.join(name)).unwrap();
+                        let b = std::fs::read(dir_stream.join(name)).unwrap();
+                        assert_eq!(
+                            a, b,
+                            "{name} differs (algo={algo_name} reweight={reweight:?} chunk={chunk})"
+                        );
+                    }
+                    std::fs::remove_dir_all(&dir_stream).unwrap();
+                }
+                std::fs::remove_dir_all(&dir_mem).unwrap();
+            }
+        }
+    }
+
+    /// The budget→chunk mapping is monotone and floored.
+    #[test]
+    fn chunk_budget_mapping() {
+        assert_eq!(chunk_edges_for_budget(0), 1);
+        assert_eq!(chunk_edges_for_budget(16), 1);
+        assert_eq!(chunk_edges_for_budget(32 << 20), (32 << 20) / 16);
+        assert!(chunk_edges_for_budget(1 << 40) <= 1 << 28);
+    }
+
+    /// Out-of-range endpoints are a structured error, not a panic.
+    #[test]
+    fn out_of_range_endpoint_is_an_error() {
+        let dir = tmpdir("range");
+        let pairs = [(0u32, 9u32)];
+        let data = synth_node_data(4, 1);
+        let sds =
+            StreamDataset { name: "bad", data: &data, layers: SYNTH_LAYERS, hidden: SYNTH_HIDDEN };
+        let opts = StreamOptions::new(2, StreamAlgo::Dbh, Reweighting::Dar, 1);
+        let mut source = SliceSource::new(4, &pairs);
+        let err = stream_shards(&mut source, &sds, &opts, &dir).unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -27,6 +27,7 @@
 pub mod coordinator;
 pub mod dist;
 pub mod graph;
+pub mod ingest;
 pub mod obs;
 pub mod partition;
 pub mod runtime;

@@ -14,13 +14,25 @@ use crate::util::rng::Rng;
 /// Degree-based hashing vertex cut.
 pub struct Dbh;
 
+/// The DBH edge hash (shared with the streaming assigner in
+/// [`crate::ingest`], so the two paths agree bit-for-bit by construction).
 #[inline]
-fn hash_u64(x: u64) -> u64 {
+pub(crate) fn hash_u64(x: u64) -> u64 {
     // splitmix-style finalizer.
     let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
     z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
     z ^ (z >> 31)
+}
+
+/// Part choice for one canonical edge given the endpoint degrees — the
+/// entirety of DBH as a pure function of `(salt, p, edge, degrees)`. The
+/// in-memory scan below and the out-of-core streaming assigner both call
+/// this, so their assignments agree bit-for-bit by construction.
+#[inline]
+pub(crate) fn dbh_part(salt: u64, p: usize, u: u32, v: u32, du: u32, dv: u32) -> u32 {
+    let key = if du < dv || (du == dv && u < v) { u } else { v };
+    (hash_u64(salt ^ key as u64) % p as u64) as u32
 }
 
 impl VertexCutAlgorithm for Dbh {
@@ -36,11 +48,7 @@ impl VertexCutAlgorithm for Dbh {
         let degree = g.degrees();
         g.edges()
             .iter()
-            .map(|&(u, v)| {
-                let (du, dv) = (degree[u as usize], degree[v as usize]);
-                let key = if du < dv || (du == dv && u < v) { u } else { v };
-                (hash_u64(salt ^ key as u64) % p as u64) as u32
-            })
+            .map(|&(u, v)| dbh_part(salt, p, u, v, degree[u as usize], degree[v as usize]))
             .collect()
     }
 }

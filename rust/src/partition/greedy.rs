@@ -1,8 +1,8 @@
 //! PowerGraph's greedy streaming vertex cut (Gonzalez et al., OSDI'12) —
 //! the algorithm from the paper the Vertex Cut idea is taken from ([8]).
 //!
-//! Edges arrive in (shuffled) stream order; each is placed by the classic
-//! four-case rule over the sets `A(v)` of partitions already hosting `v`:
+//! Edges arrive in stream order; each is placed by the classic four-case
+//! rule over the sets `A(v)` of partitions already hosting `v`:
 //!
 //! 1. `A(u) ∩ A(v) ≠ ∅` → least-loaded common partition,
 //! 2. both non-empty but disjoint → least-loaded partition hosting the
@@ -11,18 +11,36 @@
 //! 3. exactly one non-empty → least-loaded partition hosting that endpoint,
 //! 4. both new → globally least-loaded partition.
 //!
-//! For `p ≤ 64` the host sets are single `u64` bitsets intersected in place
-//! (`abits[u] & abits[v]`), so the per-edge loop performs **no heap
-//! allocation**; `p > 64` falls back to sorted small-vecs. All ties resolve
-//! to the lowest part id, making the assignment a pure function of
-//! (graph, seed) — identical across runs and rayon thread counts.
+//! Two stream orders are offered:
+//!
+//! * [`PowerGraphGreedy`] (`greedy`) shuffles the canonical edge list with
+//!   the run's RNG — the historical default, closest to the randomized
+//!   stream the original paper analyzes;
+//! * [`SequentialGreedy`] (`greedy-seq`) consumes the canonical
+//!   lexicographic order and draws nothing from the RNG, which makes it a
+//!   pure function of the *edge stream* alone. That is the variant the
+//!   out-of-core pipeline ([`crate::ingest`]) can run over a merged edge
+//!   stream it never holds in memory, with bitwise-identical output to
+//!   this in-memory oracle.
+//!
+//! Both share one per-edge core, [`GreedyState`]: for `p ≤ 64` the host
+//! sets are single `u64` bitsets intersected in place, so the per-edge
+//! step performs **no heap allocation**; `p > 64` falls back to sorted
+//! small-vecs. All ties resolve to the lowest part id, making either
+//! assignment deterministic across runs and rayon thread counts.
 
 use super::VertexCutAlgorithm;
 use crate::graph::Graph;
 use crate::util::rng::Rng;
 
-/// Greedy streaming vertex cut.
+/// Greedy streaming vertex cut over a shuffled edge stream.
 pub struct PowerGraphGreedy;
+
+/// Greedy streaming vertex cut over the canonical (lexicographic) edge
+/// stream. Draws nothing from the RNG: the assignment is a pure function
+/// of the deduped canonical edge list, the degree table and `p` — the
+/// property the streaming ingest tier relies on for bitwise parity.
+pub struct SequentialGreedy;
 
 /// Least-loaded partition among the set bits of `mask`; ties go to the
 /// lowest part id (the first-minimum rule of `Iterator::min_by_key`).
@@ -60,53 +78,63 @@ fn case2_pick(du: u32, dv: u32, hosts_u: u64, hosts_v: u64) -> u64 {
     }
 }
 
-impl VertexCutAlgorithm for PowerGraphGreedy {
-    fn name(&self) -> &'static str {
-        "greedy"
+/// Per-vertex host sets: one `u64` bitset per node when `p ≤ 64`, sorted
+/// small-vecs otherwise.
+enum HostSets {
+    Bits(Vec<u64>),
+    Vecs(Vec<Vec<u32>>),
+}
+
+/// The incremental four-case greedy placement core, shared verbatim by the
+/// in-memory algorithms above and by the out-of-core streaming assigner —
+/// one implementation, so their parity is by construction, not by test
+/// luck. State is O(V): the per-vertex host sets plus `p` load counters.
+pub struct GreedyState {
+    p: usize,
+    load: Vec<usize>,
+    hosts: HostSets,
+}
+
+impl GreedyState {
+    /// Fresh state for `n` nodes and `p` partitions.
+    pub fn new(n: usize, p: usize) -> GreedyState {
+        let hosts = if p <= 64 {
+            HostSets::Bits(vec![0u64; n])
+        } else {
+            HostSets::Vecs(vec![Vec::new(); n])
+        };
+        GreedyState { p, load: vec![0usize; p], hosts }
     }
 
-    fn assign(&self, g: &Graph, p: usize, rng: &mut Rng) -> Vec<u32> {
-        let m = g.num_edges();
-        let n = g.num_nodes();
-        let mut order: Vec<u32> = (0..m as u32).collect();
-        rng.shuffle(&mut order);
-        // One precomputed degree slice for the whole stream (case-2 rule)
-        // instead of per-edge accessor calls.
-        let degree = g.degrees();
-        let mut load = vec![0usize; p];
-        let mut out = vec![0u32; m];
-        if p <= 64 {
-            // Bitset path: A(v) is one u64 word; the inner loop touches no
-            // heap at all.
-            let mut abits = vec![0u64; n];
-            for &k in &order {
-                let (u, v) = g.edges()[k as usize];
+    /// Place one edge `(u, v)` with endpoint degrees `(du, dv)`; returns
+    /// the chosen part and updates the host sets and load counters.
+    #[inline]
+    pub fn place(&mut self, u: u32, v: u32, du: u32, dv: u32) -> u32 {
+        let choice = match &mut self.hosts {
+            HostSets::Bits(abits) => {
+                // Bitset path: A(v) is one u64 word; this touches no heap.
                 let (bu, bv) = (abits[u as usize], abits[v as usize]);
                 let common = bu & bv;
                 let choice = if common != 0 {
-                    least_loaded_bit(common, &load)
+                    least_loaded_bit(common, &self.load)
                 } else if bu != 0 && bv != 0 {
-                    let pick = case2_pick(degree[u as usize], degree[v as usize], bu, bv);
-                    least_loaded_bit(pick, &load)
+                    let pick = case2_pick(du, dv, bu, bv);
+                    least_loaded_bit(pick, &self.load)
                 } else if bu != 0 {
-                    least_loaded_bit(bu, &load)
+                    least_loaded_bit(bu, &self.load)
                 } else if bv != 0 {
-                    least_loaded_bit(bv, &load)
+                    least_loaded_bit(bv, &self.load)
                 } else {
-                    least_loaded_all(p, &load)
+                    least_loaded_all(self.p, &self.load)
                 };
-                out[k as usize] = choice;
-                load[choice as usize] += 1;
                 let bit = 1u64 << choice;
                 abits[u as usize] |= bit;
                 abits[v as usize] |= bit;
+                choice
             }
-        } else {
-            // p > 64: sorted small-vec host sets. The selection borrows the
-            // sets in place (no per-edge clones or scratch vectors).
-            let mut avec: Vec<Vec<u32>> = vec![Vec::new(); n];
-            for &k in &order {
-                let (u, v) = g.edges()[k as usize];
+            HostSets::Vecs(avec) => {
+                // p > 64: sorted small-vec host sets. The selection borrows
+                // the sets in place (no per-edge clones or scratch vectors).
                 let choice = {
                     let hu = &avec[u as usize];
                     let hv = &avec[v as usize];
@@ -114,32 +142,68 @@ impl VertexCutAlgorithm for PowerGraphGreedy {
                         .iter()
                         .copied()
                         .filter(|c| hv.binary_search(c).is_ok())
-                        .min_by_key(|&c| load[c as usize]);
+                        .min_by_key(|&c| self.load[c as usize]);
                     if let Some(c) = common {
                         c
                     } else if !hu.is_empty() && !hv.is_empty() {
-                        let pick =
-                            if degree[u as usize] >= degree[v as usize] { hu } else { hv };
-                        *pick.iter().min_by_key(|&&c| load[c as usize]).unwrap()
+                        let pick = if du >= dv { hu } else { hv };
+                        *pick.iter().min_by_key(|&&c| self.load[c as usize]).unwrap()
                     } else if !hu.is_empty() {
-                        *hu.iter().min_by_key(|&&c| load[c as usize]).unwrap()
+                        *hu.iter().min_by_key(|&&c| self.load[c as usize]).unwrap()
                     } else if !hv.is_empty() {
-                        *hv.iter().min_by_key(|&&c| load[c as usize]).unwrap()
+                        *hv.iter().min_by_key(|&&c| self.load[c as usize]).unwrap()
                     } else {
-                        least_loaded_all(p, &load)
+                        least_loaded_all(self.p, &self.load)
                     }
                 };
-                out[k as usize] = choice;
-                load[choice as usize] += 1;
                 for &node in &[u, v] {
                     let a = &mut avec[node as usize];
                     if let Err(pos) = a.binary_search(&choice) {
                         a.insert(pos, choice);
                     }
                 }
+                choice
             }
+        };
+        self.load[choice as usize] += 1;
+        choice
+    }
+}
+
+impl VertexCutAlgorithm for PowerGraphGreedy {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn assign(&self, g: &Graph, p: usize, rng: &mut Rng) -> Vec<u32> {
+        let m = g.num_edges();
+        let mut order: Vec<u32> = (0..m as u32).collect();
+        rng.shuffle(&mut order);
+        // One precomputed degree slice for the whole stream (case-2 rule)
+        // instead of per-edge accessor calls.
+        let degree = g.degrees();
+        let mut state = GreedyState::new(g.num_nodes(), p);
+        let mut out = vec![0u32; m];
+        for &k in &order {
+            let (u, v) = g.edges()[k as usize];
+            out[k as usize] = state.place(u, v, degree[u as usize], degree[v as usize]);
         }
         out
+    }
+}
+
+impl VertexCutAlgorithm for SequentialGreedy {
+    fn name(&self) -> &'static str {
+        "greedy-seq"
+    }
+
+    fn assign(&self, g: &Graph, p: usize, _rng: &mut Rng) -> Vec<u32> {
+        let degree = g.degrees();
+        let mut state = GreedyState::new(g.num_nodes(), p);
+        g.edges()
+            .iter()
+            .map(|&(u, v)| state.place(u, v, degree[u as usize], degree[v as usize]))
+            .collect()
     }
 }
 
@@ -167,6 +231,22 @@ mod tests {
     }
 
     #[test]
+    fn sequential_variant_beats_random_on_replication() {
+        let mut rng = Rng::new(6);
+        let g = barabasi_albert(2000, 4, &mut rng);
+        let vc_g = VertexCut::create(&g, 8, &SequentialGreedy, &mut rng.fork(1));
+        let vc_r = VertexCut::create(&g, 8, &RandomVertexCut, &mut rng.fork(2));
+        let mg = PartitionMetrics::vertex_cut(&g, &vc_g);
+        let mr = PartitionMetrics::vertex_cut(&g, &vc_r);
+        assert!(
+            mg.replication_factor < mr.replication_factor,
+            "greedy-seq {} random {}",
+            mg.replication_factor,
+            mr.replication_factor
+        );
+    }
+
+    #[test]
     fn load_is_balanced() {
         let mut rng = Rng::new(7);
         let g = barabasi_albert(1000, 5, &mut rng);
@@ -177,10 +257,12 @@ mod tests {
 
     #[test]
     fn many_partitions_vec_path() {
-        // p > 64 exercises the non-bitset path.
+        // p > 64 exercises the non-bitset path, on both stream orders.
         let mut rng = Rng::new(8);
         let g = barabasi_albert(800, 3, &mut rng);
         let vc = VertexCut::create(&g, 100, &PowerGraphGreedy, &mut rng);
+        vc.check_invariants(&g).unwrap();
+        let vc = VertexCut::create(&g, 100, &SequentialGreedy, &mut rng);
         vc.check_invariants(&g).unwrap();
     }
 
@@ -209,6 +291,28 @@ mod tests {
                 let c = pool.install(|| PowerGraphGreedy.assign(&g, p, &mut Rng::new(5)));
                 assert_eq!(a, c, "p={p} threads={threads}");
             }
+        }
+    }
+
+    /// `greedy-seq` ignores its RNG entirely: any two seeds agree, and its
+    /// assignment equals an incremental [`GreedyState`] replay over the
+    /// canonical edge list (the exact loop the streaming assigner runs).
+    #[test]
+    fn sequential_is_rng_free_and_matches_incremental_replay() {
+        let mut rng = Rng::new(22);
+        let g = barabasi_albert(1200, 4, &mut rng);
+        for p in [1usize, 5, 64, 90] {
+            let a = SequentialGreedy.assign(&g, p, &mut Rng::new(1));
+            let b = SequentialGreedy.assign(&g, p, &mut Rng::new(999));
+            assert_eq!(a, b, "p={p}: greedy-seq consumed RNG state");
+            let degree = g.degrees();
+            let mut state = GreedyState::new(g.num_nodes(), p);
+            let replay: Vec<u32> = g
+                .edges()
+                .iter()
+                .map(|&(u, v)| state.place(u, v, degree[u as usize], degree[v as usize]))
+                .collect();
+            assert_eq!(a, replay, "p={p}: incremental replay diverged");
         }
     }
 }

@@ -106,6 +106,58 @@ impl PartitionMetrics {
     }
 }
 
+/// Partition-quality numbers recoverable from a store's `manifest.json`
+/// alone — no shard bytes read, no graph in memory. The manifest records
+/// per-part node/edge counts plus the global graph size, which is enough
+/// for Eq. 1's replication factor and the balance ratios; the per-node RF
+/// statistics need the id tables and stay with [`PartitionMetrics`].
+///
+/// Caveat: the denominator is the manifest's `graph.nodes` — *all* nodes,
+/// isolated included — while [`PartitionMetrics::vertex_cut`] divides by
+/// the non-isolated count. On stores of graphs without isolated vertices
+/// (every generator store) the two agree exactly.
+#[derive(Clone, Debug)]
+pub struct ManifestMetrics {
+    pub num_parts: usize,
+    pub replication_factor: f64,
+    pub edge_balance: f64,
+    pub node_balance: f64,
+}
+
+impl ManifestMetrics {
+    /// `None` when the manifest predates the per-part count columns
+    /// (foreign or hand-edited stores; everything this repo writes has
+    /// them).
+    pub fn from_manifest(m: &crate::dist::shard::Manifest) -> Option<ManifestMetrics> {
+        let graph_nodes = m.graph_nodes?;
+        let mut node_sizes = Vec::with_capacity(m.shards.len());
+        let mut edge_sizes = Vec::with_capacity(m.shards.len());
+        for entry in &m.shards {
+            node_sizes.push(entry.nodes? as f64);
+            edge_sizes.push(entry.edges? as f64);
+        }
+        let total_nodes: f64 = node_sizes.iter().sum();
+        Some(ManifestMetrics {
+            num_parts: m.num_parts as usize,
+            replication_factor: if graph_nodes == 0 {
+                1.0
+            } else {
+                total_nodes / graph_nodes as f64
+            },
+            edge_balance: balance(&edge_sizes),
+            node_balance: balance(&node_sizes),
+        })
+    }
+
+    /// Compact rendering appended to `cofree fsck`'s manifest verdict.
+    pub fn summary(&self) -> String {
+        format!(
+            "RF={:.3} edge_bal={:.3} node_bal={:.3}",
+            self.replication_factor, self.edge_balance, self.node_balance
+        )
+    }
+}
+
 fn balance(sizes: &[f64]) -> f64 {
     if sizes.is_empty() {
         return 1.0;
@@ -154,5 +206,40 @@ mod tests {
     fn perfect_balance_is_one() {
         assert!((super::balance(&[5.0, 5.0, 5.0]) - 1.0).abs() < 1e-12);
         assert!(super::balance(&[10.0, 5.0, 0.0]) > 1.9);
+    }
+
+    /// Manifest-only metrics agree exactly with the in-memory metrics on a
+    /// generator store (no isolated vertices, so the denominators match).
+    #[test]
+    fn manifest_metrics_match_in_memory_metrics() {
+        let mut rng = Rng::new(40);
+        let g = barabasi_albert(400, 3, &mut rng);
+        let vc = VertexCut::create(&g, 4, &RandomVertexCut, &mut rng);
+        let want = PartitionMetrics::vertex_cut(&g, &vc);
+        let data = crate::ingest::synth_node_data(g.num_nodes(), 7);
+        let ds = crate::graph::Dataset {
+            name: "manifest-metrics".into(),
+            graph: g,
+            data,
+            layers: 2,
+            hidden: 8,
+        };
+        let weights =
+            crate::partition::dar_weights(&ds.graph, &vc, crate::partition::Reweighting::Dar);
+        let dir = std::env::temp_dir().join(format!("cofree_mmetrics_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::dist::shard::write_shards(&ds, &vc, &weights, 7, &dir).unwrap();
+        let manifest = crate::dist::shard::read_manifest(&dir).unwrap();
+        let got = ManifestMetrics::from_manifest(&manifest).expect("store has count columns");
+        assert_eq!(got.num_parts, want.num_parts);
+        assert!((got.replication_factor - want.replication_factor).abs() < 1e-9);
+        assert!((got.edge_balance - want.edge_balance).abs() < 1e-9);
+        assert!((got.node_balance - want.node_balance).abs() < 1e-9);
+        assert!(got.summary().contains("RF="), "{}", got.summary());
+        // A manifest without the count columns degrades to None, not junk.
+        let mut stripped = manifest.clone();
+        stripped.shards[0].nodes = None;
+        assert!(ManifestMetrics::from_manifest(&stripped).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

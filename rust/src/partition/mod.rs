@@ -29,7 +29,7 @@ use std::collections::HashMap;
 
 pub use dar::{dar_weights, Reweighting};
 pub use edge_cut::{EdgeCut, LdgEdgeCut};
-pub use metrics::PartitionMetrics;
+pub use metrics::{ManifestMetrics, PartitionMetrics};
 
 /// A vertex-cut partitioning algorithm: maps each canonical edge to a part.
 pub trait VertexCutAlgorithm {
@@ -234,14 +234,23 @@ pub fn algorithm(name: &str) -> Option<Box<dyn VertexCutAlgorithm>> {
         "random" => Some(Box::new(random::RandomVertexCut)),
         "dbh" => Some(Box::new(dbh::Dbh)),
         "greedy" => Some(Box::new(greedy::PowerGraphGreedy)),
+        "greedy-seq" => Some(Box::new(greedy::SequentialGreedy)),
         "ne" => Some(Box::new(ne::NeighborExpansion::default())),
         "hep" => Some(Box::new(hep::Hep::default())),
         _ => None,
     }
 }
 
-/// All vertex-cut algorithm names (Table 4 order).
-pub const ALGORITHMS: [&str; 5] = ["random", "ne", "dbh", "hep", "greedy"];
+/// All vertex-cut algorithm names (Table 4 order, plus the canonical-order
+/// greedy variant the out-of-core pipeline can stream).
+pub const ALGORITHMS: [&str; 6] = ["random", "ne", "dbh", "hep", "greedy", "greedy-seq"];
+
+/// The algorithms the out-of-core streaming pipeline supports: those whose
+/// assignment is computable in one pass over the canonical edge stream
+/// with only O(V) state (a degree table plus per-vertex host bitsets).
+/// `greedy` (shuffled stream) needs random access to the full edge list;
+/// `ne`/`hep` need the full CSR.
+pub const STREAMING_ALGORITHMS: [&str; 3] = ["random", "dbh", "greedy-seq"];
 
 #[cfg(test)]
 pub(crate) mod testutil {

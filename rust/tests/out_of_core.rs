@@ -1,0 +1,197 @@
+//! Out-of-core ingest properties (crate-public API, zoo-wide).
+//!
+//! The streamed pipeline (`ingest::stream_shards`) must write **bitwise
+//! identical** stores to the in-memory pipeline (`write_shards` over a
+//! `VertexCut`) — shard bytes and manifest bytes — for every graph shape,
+//! chunk size (down to one edge) and rayon thread count, and the result
+//! must pass fsck even when a tiny budget forces real spills and
+//! multi-pass merges.
+
+use cofree_gnn::dist;
+use cofree_gnn::graph::{generators, io, Dataset, GraphBuilder};
+use cofree_gnn::ingest::{self, SliceSource, StreamAlgo, StreamDataset, StreamOptions};
+use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
+use cofree_gnn::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("cofree_ooc_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// In-memory oracle store for `pairs` with the same synthesized node data
+/// the streamed path uses.
+fn write_oracle(pairs: &[(u32, u32)], n: usize, seed: u64, algo: &str, p: usize, dir: &Path) {
+    let ds = Dataset {
+        name: "ooc-zoo".into(),
+        graph: GraphBuilder::new(n).edges(pairs).build(),
+        data: ingest::synth_node_data(n, seed),
+        layers: ingest::SYNTH_LAYERS,
+        hidden: ingest::SYNTH_HIDDEN,
+    };
+    let a = algorithm(algo).unwrap();
+    let vc = VertexCut::create(&ds.graph, p, a.as_ref(), &mut Rng::new(seed));
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    dist::write_shards(&ds, &vc, &weights, seed, dir).unwrap();
+}
+
+#[allow(clippy::too_many_arguments)]
+fn stream_store(
+    pairs: &[(u32, u32)],
+    n: usize,
+    seed: u64,
+    algo: StreamAlgo,
+    p: usize,
+    chunk: usize,
+    dir: &Path,
+) -> ingest::StreamStats {
+    let data = ingest::synth_node_data(n, seed);
+    let sds = StreamDataset {
+        name: "ooc-zoo",
+        data: &data,
+        layers: ingest::SYNTH_LAYERS,
+        hidden: ingest::SYNTH_HIDDEN,
+    };
+    let mut opts = StreamOptions::new(p, algo, Reweighting::Dar, seed);
+    opts.chunk_edges = Some(chunk);
+    opts.fan_in = 4;
+    let mut src = SliceSource::new(n, pairs);
+    ingest::stream_shards(&mut src, &sds, &opts, dir).unwrap()
+}
+
+/// Every file in `a` exists in `b` with identical bytes, and vice versa.
+fn assert_same_store(a: &Path, b: &Path) {
+    let list = |d: &Path| -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        names.sort();
+        names
+    };
+    let names = list(a);
+    assert!(names.iter().any(|n| n == "manifest.json"), "{a:?} has no manifest");
+    assert_eq!(names, list(b), "store listings differ ({a:?} vs {b:?})");
+    for name in &names {
+        let x = std::fs::read(a.join(name)).unwrap();
+        let y = std::fs::read(b.join(name)).unwrap();
+        assert_eq!(x, y, "{name} differs between {a:?} and {b:?}");
+    }
+}
+
+/// Raw pair streams covering the shapes that stress the pipeline:
+/// duplicates and self-loops, heavy-tailed hubs, power-law degrees, a
+/// star, a path echoed in both orientations, and a loops-only stream that
+/// canonicalizes to an edgeless graph.
+fn zoo(seed: u64) -> Vec<(String, usize, Vec<(u32, u32)>)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+    let n = 150usize;
+    let mut pairs = Vec::new();
+    for _ in 0..900 {
+        pairs.push((rng.below(n) as u32, rng.below(n) as u32));
+    }
+    out.push(("uniform-messy".to_string(), n, pairs));
+    let pairs = generators::rmat_pairs(7, 700, generators::RmatParams::default(), &mut rng);
+    out.push(("rmat".to_string(), 128, pairs));
+    let w = generators::power_law_degrees(300, 2.3, 2, 40, &mut rng);
+    let pairs = generators::chung_lu_pairs(&w, &mut rng);
+    out.push(("chung-lu".to_string(), 300, pairs));
+    let pairs: Vec<(u32, u32)> = (1..64u32).map(|v| (0, v)).collect();
+    out.push(("star".to_string(), 64, pairs));
+    let mut pairs: Vec<(u32, u32)> = (0..99u32).map(|v| (v, v + 1)).collect();
+    pairs.extend((0..99u32).map(|v| (v + 1, v)));
+    out.push(("path-dup".to_string(), 100, pairs));
+    out.push(("loops-only".to_string(), 10, vec![(3, 3), (7, 7)]));
+    out
+}
+
+/// Zoo-wide parity: streamed stores equal in-memory stores byte-for-byte
+/// for every graph shape and chunk size, including one-edge chunks.
+#[test]
+fn zoo_parity_across_chunk_sizes() {
+    for (name, n, pairs) in zoo(0xC0FFEE) {
+        let oracle = tmpdir(&format!("oracle_{name}"));
+        write_oracle(&pairs, n, 11, "dbh", 3, &oracle);
+        for chunk in [1usize, 29, 1 << 20] {
+            let dir = tmpdir(&format!("stream_{name}_{chunk}"));
+            let stats = stream_store(&pairs, n, 11, StreamAlgo::Dbh, 3, chunk, &dir);
+            assert_eq!(stats.raw_pairs, pairs.len() as u64, "{name}");
+            assert!(!dir.join(ingest::SCRATCH_DIR_NAME).exists(), "{name}: scratch left");
+            assert_same_store(&oracle, &dir);
+            std::fs::remove_dir_all(&dir).unwrap();
+        }
+        std::fs::remove_dir_all(&oracle).unwrap();
+    }
+}
+
+/// The spill sorter sorts chunks on rayon's current pool; the stores must
+/// not depend on parallelism. Same ingest under 1- and 4-thread pools.
+#[test]
+fn parity_across_thread_counts() {
+    let mut rng = Rng::new(5);
+    let pairs = generators::rmat_pairs(7, 900, generators::RmatParams::default(), &mut rng);
+    let oracle = tmpdir("threads_oracle");
+    write_oracle(&pairs, 128, 23, "greedy-seq", 4, &oracle);
+    for threads in [1usize, 4] {
+        let dir = tmpdir(&format!("threads_{threads}"));
+        let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+        pool.install(|| {
+            stream_store(&pairs, 128, 23, StreamAlgo::GreedySeq, 4, 37, &dir);
+        });
+        assert_same_store(&oracle, &dir);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+    std::fs::remove_dir_all(&oracle).unwrap();
+}
+
+/// A chunk size far below the edge count forces real spills and
+/// multi-pass merging, and the resulting store still passes fsck.
+#[test]
+fn tiny_budget_spills_merges_and_passes_fsck() {
+    let mut rng = Rng::new(9);
+    let pairs = generators::rmat_pairs(8, 4000, generators::RmatParams::default(), &mut rng);
+    let dir = tmpdir("budget");
+    let stats = stream_store(&pairs, 256, 31, StreamAlgo::Dbh, 4, 100, &dir);
+    assert!(stats.runs_spilled >= 30, "runs_spilled={}", stats.runs_spilled);
+    assert!(stats.merge_passes >= 2, "merge_passes={}", stats.merge_passes);
+    assert!(stats.spill_bytes > 0);
+    assert!(!dir.join(ingest::SCRATCH_DIR_NAME).exists());
+    let report = dist::fsck(&dir).unwrap();
+    assert!(report.ok(), "{report}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `--input edges.bin` semantics at the library level: streaming straight
+/// off the binary edge-list file equals the in-memory store built from
+/// the same pairs.
+#[test]
+fn edge_list_file_source_matches_in_memory() {
+    let mut rng = Rng::new(13);
+    let n = 200usize;
+    let mut pairs = Vec::new();
+    for _ in 0..1200 {
+        pairs.push((rng.below(n) as u32, rng.below(n) as u32));
+    }
+    let dir = tmpdir("binsrc");
+    std::fs::create_dir_all(&dir).unwrap();
+    let file = dir.join("edges.bin");
+    io::write_edge_list_bin(n, &pairs, &file).unwrap();
+    let oracle = dir.join("oracle");
+    write_oracle(&pairs, n, 3, "random", 2, &oracle);
+    let streamed = dir.join("streamed");
+    let data = ingest::synth_node_data(n, 3);
+    let sds = StreamDataset {
+        name: "ooc-zoo",
+        data: &data,
+        layers: ingest::SYNTH_LAYERS,
+        hidden: ingest::SYNTH_HIDDEN,
+    };
+    let mut opts = StreamOptions::new(2, StreamAlgo::Random, Reweighting::Dar, 3);
+    opts.chunk_edges = Some(171);
+    let mut src = io::EdgeListBinReader::open(&file).unwrap();
+    ingest::stream_shards(&mut src, &sds, &opts, &streamed).unwrap();
+    assert_same_store(&oracle, &streamed);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
