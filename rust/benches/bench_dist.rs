@@ -16,12 +16,15 @@
 //! the two trajectories end in bit-identical parameters (`parity` in the
 //! JSON must be true).
 
-use cofree_gnn::dist::{self, MappedShard, ProcOptions, Shard};
+use cofree_gnn::dist::proto::WireCodec;
+use cofree_gnn::dist::{self, MappedShard, ProcOptions, Shard, EXPECTED_F32_BYTES_PER_PARAM};
 use cofree_gnn::graph::features::{synthesize, FeatureParams};
 use cofree_gnn::graph::generators::{rmat_pairs, RmatParams};
 use cofree_gnn::graph::{Dataset, GraphBuilder};
 use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
 use cofree_gnn::train::engine::{TrainConfig, TrainEngine};
+use cofree_gnn::train::model::ModelKind;
+use cofree_gnn::train::Precision;
 use cofree_gnn::util::binio::Verify;
 use cofree_gnn::util::rng::Rng;
 use std::fmt::Write as _;
@@ -168,6 +171,17 @@ fn main() {
             row.parity
         );
         assert!(row.parity, "p={p}: multi-process trajectory diverged from inproc");
+        // The communication-free bound, now a named constant shared with
+        // the compressed-path expectations below: uncompressed traffic is
+        // EXPECTED_F32_BYTES_PER_PARAM·p per parameter per epoch plus
+        // small framing overhead.
+        let ideal = (EXPECTED_F32_BYTES_PER_PARAM * p) as f64;
+        assert!(
+            row.bytes_per_epoch_per_param >= ideal
+                && row.bytes_per_epoch_per_param < ideal * 1.25,
+            "p={p}: wire bytes/param/epoch {} outside [{ideal}, {ideal}·1.25)",
+            row.bytes_per_epoch_per_param
+        );
         rows.push(row);
     }
 
@@ -210,6 +224,84 @@ fn main() {
         (p, dstats, parity)
     };
 
+    // Precision tiers over the real wire: the same fleet at the first p,
+    // once with bf16 storage + the bf16 codec (bit-identical to the
+    // in-process bf16 trajectory — the wire-parity invariant) and once
+    // with the int8 codec on the f32 tier (lossy, ratio-gated). The f32
+    // row above is the epoch-time baseline; the accuracy check runs the
+    // in-process engine at both tiers over the same cut.
+    let precision_json = {
+        let p = *parts.first().unwrap_or(&2);
+        let vc = VertexCut::create(&ds.graph, p, algorithm("dbh").unwrap().as_ref(), &mut Rng::new(seed));
+        let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+        let dir = std::env::temp_dir()
+            .join(format!("cofree_bench_dist_prec_{}_{p}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dist::write_shards(&ds, &vc, &weights, seed, &dir).expect("write shards");
+        let cfg = TrainConfig { epochs, eval_every: 0, seed, ..Default::default() };
+
+        // In-process bf16 reference trajectory (and the f32/bf16 accuracy
+        // delta through the real evaluator, in percentage points).
+        let mut acc_pair = [f64::NAN; 2];
+        let mut params_bf16_in = None;
+        for (slot, prec) in acc_pair.iter_mut().zip([Precision::F32, Precision::Bf16]) {
+            let mut engine = TrainEngine::native_model_prec(ModelKind::Sage, prec);
+            let mut run = engine
+                .prepare_partitions(&ds, &vc, Reweighting::Dar, None, seed)
+                .expect("prepare precision run");
+            let eval = engine.prepare_eval(&ds).expect("prepare eval");
+            let (history, params, _) =
+                engine.train(&mut run, Some(&eval), &cfg).expect("precision train");
+            *slot = history.best().0;
+            if prec == Precision::Bf16 {
+                params_bf16_in = Some(params);
+            }
+        }
+        let final_acc_delta = (acc_pair[1] - acc_pair[0]) * 100.0;
+
+        // bf16 fleet: bf16 workers, bf16 wire codec.
+        let bf16_opts = ProcOptions {
+            precision: Precision::Bf16,
+            wire_codec: WireCodec::Bf16,
+            ..ProcOptions::new(worker_bin.clone())
+        };
+        let t = Instant::now();
+        let (_, ck_h, dstats_h) =
+            dist::train_over_shards(&ds, &dir, &cfg, &bf16_opts, None).expect("bf16 proc train");
+        let bf16_total_s = t.elapsed().as_secs_f64();
+        let bf16_epoch_s = (bf16_total_s - dstats_h.handshake_seconds).max(0.0) / epochs as f64;
+        let bf16_parity = params_bf16_in.as_ref().map(|ps| ps.data == ck_h.params.data);
+        assert_eq!(
+            bf16_parity,
+            Some(true),
+            "bf16 fleet trajectory diverged from the in-process bf16 trajectory"
+        );
+        let bf16_ratio = dstats_h.compression_ratio();
+
+        // int8 codec on the default f32 tier (lossy wire; no bitwise claim).
+        let i8_opts =
+            ProcOptions { wire_codec: WireCodec::I8, ..ProcOptions::new(worker_bin.clone()) };
+        let (_, _, dstats_q) =
+            dist::train_over_shards(&ds, &dir, &cfg, &i8_opts, None).expect("int8 proc train");
+        let i8_ratio = dstats_q.compression_ratio();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let f32_epoch_s = rows.first().map(|r| r.proc_epoch_s).unwrap_or(f64::NAN);
+        let epoch_speedup = f32_epoch_s / bf16_epoch_s.max(1e-12);
+        assert!(bf16_ratio >= 1.9, "bf16 wire reduction {bf16_ratio:.3} below the 1.9x gate");
+        assert!(i8_ratio >= 3.5, "int8 wire reduction {i8_ratio:.3} below the 3.5x gate");
+        assert!(
+            final_acc_delta.abs() <= 0.5,
+            "bf16 accuracy delta {final_acc_delta:+.3} pt outside the 0.5 pt envelope"
+        );
+        println!(
+            "precision p={p}: epoch f32 {f32_epoch_s:.4}s bf16 {bf16_epoch_s:.4}s ({epoch_speedup:.2}x)  wire bf16 {bf16_ratio:.2}x int8 {i8_ratio:.2}x  acc delta {final_acc_delta:+.2} pt  bf16-fleet parity=true"
+        );
+        format!(
+            "{{\"workers\": {p}, \"epoch_speedup\": {epoch_speedup:.3}, \"epoch_f32_s\": {f32_epoch_s:.6}, \"epoch_bf16_s\": {bf16_epoch_s:.6}, \"wire_bytes_reduction\": {bf16_ratio:.3}, \"wire_bytes_reduction_int8\": {i8_ratio:.3}, \"final_acc_delta\": {final_acc_delta:.4}, \"parity\": true}}"
+        )
+    };
+
     // Headline: the middle worker count (p=4 with defaults).
     let headline = rows.get(rows.len() / 2).or_else(|| rows.last()).expect("no rows");
     let mut rows_json = String::new();
@@ -247,7 +339,7 @@ fn main() {
         rec_stats.heartbeat_bytes_per_epoch()
     );
     let json = format!(
-        "{{\n  \"bench\": \"dist\",\n  \"config\": {{\"edges_target\": {target}, \"epochs\": {epochs}, \"seed\": {seed}}},\n  \"graph\": {{\"nodes\": {}, \"edges\": {}}},\n  \"machine\": {{\"logical_cpus\": {}}},\n  \"headline\": {{\"workers\": {}, \"bytes_per_epoch_per_param\": {:.3}, \"parity\": {}}},\n  \"recovery\": {recovery_json},\n  \"rows\": [\n    {rows_json}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"dist\",\n  \"config\": {{\"edges_target\": {target}, \"epochs\": {epochs}, \"seed\": {seed}}},\n  \"graph\": {{\"nodes\": {}, \"edges\": {}}},\n  \"machine\": {{\"logical_cpus\": {}}},\n  \"headline\": {{\"workers\": {}, \"bytes_per_epoch_per_param\": {:.3}, \"parity\": {}}},\n  \"recovery\": {recovery_json},\n  \"precision\": {precision_json},\n  \"rows\": [\n    {rows_json}\n  ]\n}}\n",
         ds.graph.num_nodes(),
         ds.graph.num_edges(),
         std::thread::available_parallelism().map(|x| x.get()).unwrap_or(1),

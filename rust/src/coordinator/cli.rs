@@ -21,6 +21,7 @@
 
 use super::config::Config;
 use super::experiments::{self, ExpOptions};
+use crate::dist::proto::WireCodec;
 use crate::dist::{self, coordinator::ProcOptions, coordinator::Transport};
 use crate::graph::{datasets, generators, io, stats, Dataset, GraphBuilder};
 use crate::ingest::{self, EdgeSource};
@@ -29,7 +30,7 @@ use crate::train::backend::Backend;
 use crate::train::checkpoint::TrainCheckpoint;
 use crate::train::engine::{TrainConfig, TrainEngine};
 use crate::train::metrics::History;
-use crate::train::model::ModelKind;
+use crate::train::model::{ModelKind, Precision};
 use crate::util::rng::Rng;
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -102,6 +103,10 @@ USAGE:
   cofree worker --shard FILE --listen ADDR      (multi-host: accept coordinator
                sessions on ADDR; survives coordinator restarts/reconnects)
                [--no-verify]                    (skip shard digest verification)
+               [--wire-compress off|bf16|int8]  (narrow the codecs this worker
+               advertises; a coordinator picking outside them refuses the fleet)
+               [--precision f32|bf16]           (pin the compute tier; a Config
+               naming a different tier is refused)
   cofree fsck PATH [PATH...]    (verify shard dirs, shard files, checkpoints:
                digests, manifest cross-references, completion; exits nonzero
                on any corruption)
@@ -119,6 +124,10 @@ USAGE:
                snapshots; resume with --load-model FILE)
                [--no-verify] [--wire-digests]   (proc: skip worker shard digest
                verification / add CRC-32C trailers to step frames)
+               [--precision f32|bf16]   (bf16-storage/f32-accumulate compute
+               tier; native backend only — checkpoints stay f32 masters)
+               [--wire-compress off|bf16|int8]   (proc: quantize the step-loop
+               tensor frames; coordinator folds/optimizes in f32 regardless)
                [--metrics-out FILE]   (append one JSON line per epoch plus a
                run summary -> structured run ledger, both transports)
                [--trace-out FILE]     (record per-phase spans, write a Chrome
@@ -393,12 +402,27 @@ fn cmd_worker(args: &Args) -> Result<i32> {
     } else {
         crate::util::binio::Verify::Full
     };
+    // Worker-side negotiation constraints: `--wire-compress` narrows the
+    // Hello codec advertisement (f32 always stays in — it is the protocol
+    // floor), `--precision` pins the compute tier this host will accept.
+    let mut wopts = dist::worker::WorkerOptions::default();
+    if let Some(name) = args.get("wire-compress") {
+        let codec = WireCodec::parse(name)
+            .with_context(|| format!("--wire-compress must be off|bf16|int8, got {name:?}"))?;
+        wopts.codecs = WireCodec::F32.bit() | codec.bit();
+    }
+    if let Some(name) = args.get("precision") {
+        wopts.precision = Some(
+            Precision::parse(name)
+                .with_context(|| format!("--precision must be f32|bf16, got {name:?}"))?,
+        );
+    }
     match (args.get("connect"), args.get("listen")) {
         (Some(connect), None) => {
-            dist::worker::run(&shard, connect, verify)?;
+            dist::worker::run_with(&shard, connect, verify, wopts)?;
         }
         (None, Some(listen)) => {
-            dist::worker::run_listen(&shard, listen, verify)?;
+            dist::worker::run_listen_with(&shard, listen, verify, wopts)?;
         }
         (Some(_), Some(_)) => bail!("--connect and --listen are mutually exclusive"),
         (None, None) => bail!("worker needs --connect ADDR or --listen ADDR"),
@@ -483,6 +507,8 @@ fn run_train_proc(
     algo_name: &str,
     rw: Reweighting,
     kind: ModelKind,
+    precision: Precision,
+    wire_codec: WireCodec,
     cfg: &TrainConfig,
     seed: u64,
     args: &Args,
@@ -538,6 +564,8 @@ fn run_train_proc(
             health,
             verify_shards,
             wire_digests,
+            precision,
+            wire_codec,
             ..ProcOptions::new(worker_bin)
         };
         let (history, ck, stats) = dist::train_over_hosts(ds, &hosts, cfg, &opts, resume)?;
@@ -585,6 +613,8 @@ fn run_train_proc(
         health,
         verify_shards,
         wire_digests,
+        precision,
+        wire_codec,
         ..ProcOptions::new(worker_bin)
     };
     let result = dist::train_over_shards(ds, &dir, cfg, &opts, resume);
@@ -604,6 +634,14 @@ fn print_proc_stats(stats: &dist::DistStats) {
         stats.bytes_per_epoch_per_param(),
         stats.handshake_seconds
     );
+    if stats.wire_compressed_bytes != stats.wire_raw_bytes {
+        println!(
+            "wire compression: {:.2}x ({} compressed vs {} f32-equivalent tensor bytes)",
+            stats.compression_ratio(),
+            stats.wire_compressed_bytes,
+            stats.wire_raw_bytes
+        );
+    }
     if stats.recoveries > 0 || stats.deadline_misses > 0 || stats.stragglers > 0 {
         println!(
             "fleet health: {} recoveries ({:.2}s), {} deadline misses, {} straggler observations",
@@ -642,6 +680,12 @@ fn cmd_train(args: &Args) -> Result<i32> {
     let model_name = get("train.model", "model", "sage");
     let kind = ModelKind::parse(&model_name)
         .with_context(|| format!("--model must be sage|gcn|gin, got {model_name:?}"))?;
+    let precision_name = get("train.precision", "precision", "f32");
+    let precision = Precision::parse(&precision_name)
+        .with_context(|| format!("--precision must be f32|bf16, got {precision_name:?}"))?;
+    let wire_compress_name = get("train.wire_compress", "wire-compress", "off");
+    let wire_codec = WireCodec::parse(&wire_compress_name)
+        .with_context(|| format!("--wire-compress must be off|bf16|int8, got {wire_compress_name:?}"))?;
     if k > 0 && !(0.0..1.0).contains(&ratio) {
         bail!("--dropedge-ratio must be in [0, 1), got {ratio}");
     }
@@ -650,6 +694,18 @@ fn cmd_train(args: &Args) -> Result<i32> {
     // silently training on the native backend with the flag ignored.
     if args.get("artifacts").is_some() && backend != "xla" {
         bail!("--artifacts is only used by the PJRT path; add --backend xla (requires --features xla)");
+    }
+    // The precision tiers live in the native CPU kernels; the AOT XLA
+    // artifacts are compiled f32-only. Erroring beats silently widening.
+    if backend == "xla" && precision != Precision::F32 {
+        bail!(
+            "--precision {} is only implemented by the native backend; \
+             --backend xla runs f32 AOT artifacts",
+            precision.name()
+        );
+    }
+    if backend == "xla" && wire_codec != WireCodec::F32 {
+        bail!("--wire-compress is a proc-transport wire knob; --backend xla does not use it");
     }
     // `--load-model` resumes a checkpoint; `--epochs` stays the TOTAL
     // trajectory length (resume trains the remaining epochs).
@@ -722,10 +778,19 @@ fn cmd_train(args: &Args) -> Result<i32> {
             "heartbeat-every",
             "no-verify",
             "wire-digests",
+            "wire-compress",
         ] {
             if args.get(flag).is_some() {
                 bail!("--{flag} is only used by the proc transport; add --transport proc");
             }
+        }
+        // Same rule for the config-file spelling: inproc has no wire.
+        if wire_codec != WireCodec::F32 {
+            bail!(
+                "train.wire_compress={} is only used by the proc transport; \
+                 set train.transport=proc",
+                wire_codec.name()
+            );
         }
     }
     // Each arm also yields the summary-record phase totals (inproc: the
@@ -740,7 +805,7 @@ fn cmd_train(args: &Args) -> Result<i32> {
     let (history, checkpoint, phases, dist_stats) = match transport.as_str() {
         "inproc" => match backend.as_str() {
             "native" | "cpu" => {
-                let mut engine = TrainEngine::native_model(kind);
+                let mut engine = TrainEngine::native_model_prec(kind, precision);
                 let (h, ck, timer) =
                     run_train(&mut engine, &ds, p, &algo_name, rw, dropedge, &cfg, seed, resume)?;
                 let phases = summary_phases(&timer);
@@ -783,8 +848,10 @@ fn cmd_train(args: &Args) -> Result<i32> {
                      runs one worker per partition (drop one of the flags)"
                 );
             }
-            let (h, ck, stats) =
-                run_train_proc(&ds, workers, &algo_name, rw, kind, &cfg, seed, args, resume)?;
+            let (h, ck, stats) = run_train_proc(
+                &ds, workers, &algo_name, rw, kind, precision, wire_codec, &cfg, seed, args,
+                resume,
+            )?;
             let phases = vec![
                 ("forward", stats.forward_seconds),
                 ("backward", stats.backward_seconds),
@@ -1209,6 +1276,17 @@ mod tests {
     }
 
     #[test]
+    fn worker_rejects_bad_negotiation_flags() {
+        for extra in [&["--wire-compress", "zstd"][..], &["--precision", "fp8"][..]] {
+            let mut cmd =
+                argv(&["worker", "--shard", "/nonexistent.bin", "--connect", "127.0.0.1:1"]);
+            cmd.extend(extra.iter().map(|s| s.to_string()));
+            let err = main(cmd).unwrap_err();
+            assert!(format!("{err:#}").contains("must be"), "{extra:?}: {err:#}");
+        }
+    }
+
+    #[test]
     fn train_rejects_unknown_transport() {
         assert!(main(argv(&[
             "train",
@@ -1365,6 +1443,7 @@ mod tests {
             "--heartbeat-every",
             "--no-verify",
             "--wire-digests",
+            "--wire-compress",
         ] {
             assert!(
                 main(argv(&[
@@ -1380,6 +1459,59 @@ mod tests {
                 "{flag} silently accepted without --transport proc"
             );
         }
+    }
+
+    /// `--precision bf16` trains end-to-end through the CLI on the native
+    /// inproc path (the error-bounded tier; the f32 default is untouched).
+    #[test]
+    fn train_command_runs_bf16_precision() {
+        let code = main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--partitions",
+            "2",
+            "--algo",
+            "dbh",
+            "--epochs",
+            "3",
+            "--precision",
+            "bf16",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn train_rejects_unknown_precision_and_wire_compress() {
+        for extra in [&["--precision", "fp8"][..], &["--transport", "proc", "--wire-compress", "zstd"][..]]
+        {
+            let mut cmd =
+                argv(&["train", "--dataset", "yelp-sim", "--scale", "0.04"]);
+            cmd.extend(extra.iter().map(|s| s.to_string()));
+            assert!(main(cmd).is_err(), "{extra:?} accepted");
+        }
+    }
+
+    /// The precision tiers are native-kernel features; `--backend xla`
+    /// must refuse them before it even probes for the feature flag.
+    #[test]
+    fn train_rejects_bf16_with_xla_backend() {
+        let err = main(argv(&[
+            "train",
+            "--dataset",
+            "yelp-sim",
+            "--scale",
+            "0.04",
+            "--backend",
+            "xla",
+            "--precision",
+            "bf16",
+        ]))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("native backend"), "{err:#}");
     }
 
     #[test]

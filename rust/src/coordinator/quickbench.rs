@@ -34,6 +34,7 @@
 //! with span tracing + metrics recording on vs off, reported as
 //! `telemetry.overhead_frac`).
 
+use crate::dist::proto::{f32_tensor_list_len, EncodedParams, WireCodec};
 use crate::dist::{self, MappedShard, ProcOptions, Shard};
 use crate::graph::features::{synthesize, FeatureParams};
 use crate::graph::generators::{rmat_pairs, RmatParams};
@@ -47,6 +48,7 @@ use crate::train::engine::TrainConfig;
 use crate::train::optimizer::{Adam, Optimizer};
 use crate::train::tensorize::{tensorize_partition, TrainBatch};
 use crate::train::workspace::ModelWorkspace;
+use crate::train::Precision;
 use crate::util::rng::Rng;
 use anyhow::{ensure, Context, Result};
 use rayon::prelude::*;
@@ -396,6 +398,87 @@ pub fn run(opts: &QuickOptions) -> Result<()> {
         .unwrap();
     }
 
+    // ---------------------------------------------------------------- precision
+    // The bf16 storage tier against the f32 default: same partitions, same
+    // epoch loop, only the workspace tier changes. The f32 path's bitwise
+    // parity was hard-asserted above; bf16's contract is an accuracy
+    // envelope plus wire-byte savings, both measured here for the gates
+    // (wire_bytes_reduction >= 1.9x bf16 / >= 3.5x int8, |final_acc_delta|
+    // <= 0.5 pt).
+    let bf16_workspaces: Vec<Mutex<ModelWorkspace>> = setups
+        .iter()
+        .map(|s| Mutex::new(ModelWorkspace::with_precision(&model, s.batch.n_pad, Precision::Bf16)))
+        .collect();
+    let mut params_h = params0.clone();
+    let mut opt_h = Adam::new(cfg.lr);
+    let mut acc_h = GradAccumulator::new();
+    new_epoch(
+        &model,
+        &setups,
+        &bf16_workspaces,
+        &mut outs,
+        &mut params_h,
+        &mut acc_h,
+        &mut opt_h,
+        scale,
+    );
+    let epoch_bf16_s = timed(opts.epochs, || {
+        new_epoch(
+            &model,
+            &setups,
+            &bf16_workspaces,
+            &mut outs,
+            &mut params_h,
+            &mut acc_h,
+            &mut opt_h,
+            scale,
+        )
+    });
+    ensure!(
+        params_h.data.iter().flatten().all(|x| x.is_finite()),
+        "bf16 quick-bench epochs went non-finite"
+    );
+    let precision_epoch_speedup = epoch_new_s / epoch_bf16_s.max(1e-12);
+
+    // Wire codecs on the real parameter tensors: bytes of one broadcast
+    // under each codec vs the uncompressed f32 framing.
+    let wire_raw_bytes = f32_tensor_list_len(&params0.data) as f64;
+    let wire_bf16_bytes = EncodedParams::encode(&params0.data, WireCodec::Bf16)?.body_len() as f64;
+    let wire_i8_bytes = EncodedParams::encode(&params0.data, WireCodec::I8)?.body_len() as f64;
+    let wire_bytes_reduction = wire_raw_bytes / wire_bf16_bytes.max(1.0);
+    let wire_bytes_reduction_int8 = wire_raw_bytes / wire_i8_bytes.max(1.0);
+
+    // Matched final accuracy: the real engine, same config and seed, f32
+    // vs bf16, compared at best validation accuracy (in percentage points).
+    let acc_epochs = (opts.epochs * 4).max(10);
+    let acc_cfg = TrainConfig {
+        epochs: acc_epochs,
+        eval_every: 0, // final-epoch eval only
+        seed: 42,
+        log_every: 0,
+        ..Default::default()
+    };
+    let mut acc_pair = [f64::NAN; 2];
+    for (slot, prec) in acc_pair.iter_mut().zip([Precision::F32, Precision::Bf16]) {
+        let mut engine = crate::train::engine::TrainEngine::native_model_prec(model.kind, prec);
+        let mut run = engine.prepare_partitions(&ds, &vc, Reweighting::Dar, None, 42)?;
+        let eval = engine.prepare_eval(&ds)?;
+        let (history, _, _) = engine.train(&mut run, Some(&eval), &acc_cfg)?;
+        *slot = history.best().0;
+    }
+    let final_acc_delta = (acc_pair[1] - acc_pair[0]) * 100.0;
+    ensure!(
+        final_acc_delta.is_finite(),
+        "precision accuracy comparison produced a non-finite delta"
+    );
+    println!(
+        "precision: epoch f32 {epoch_new_s:.3}s bf16 {epoch_bf16_s:.3}s ({precision_epoch_speedup:.2}x)  wire f32 {wire_raw_bytes:.0}B bf16 {wire_bf16_bytes:.0}B ({wire_bytes_reduction:.2}x) int8 {wire_i8_bytes:.0}B ({wire_bytes_reduction_int8:.2}x)  val f32 {:.4} bf16 {:.4} (delta {final_acc_delta:+.2} pt)",
+        acc_pair[0], acc_pair[1]
+    );
+    let precision_json = format!(
+        "{{\"epoch_speedup\": {precision_epoch_speedup:.3}, \"epoch_f32_s\": {epoch_new_s:.6}, \"epoch_bf16_s\": {epoch_bf16_s:.6}, \"wire_bytes_reduction\": {wire_bytes_reduction:.3}, \"wire_bytes_reduction_int8\": {wire_bytes_reduction_int8:.3}, \"final_acc_delta\": {final_acc_delta:.4}, \"acc_epochs\": {acc_epochs}, \"parity\": true}}"
+    );
+
     // ---------------------------------------------------------------- telemetry
     // Cost of the observability hot path (span tracing + the metrics
     // registry) on the real engine loop: the same config trained with
@@ -514,7 +597,7 @@ pub fn run(opts: &QuickOptions) -> Result<()> {
     }
 
     let json = format!(
-        "{{\n  \"bench\": \"summary\",\n  \"generated_by\": \"cofree bench --quick\",\n  \"config\": {{\"edges\": {}, \"dist_edges\": {}, \"epochs\": {}, \"parts\": {:?}, \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"headline\": {{\"native_epoch_speedup\": {epoch_speedup:.3}, \"forward_speedup\": {fwd_speedup:.3}, \"proc_epoch_overhead_mid\": {proc_overhead_mid:.3}}},\n  \"telemetry\": {telemetry_json},\n  \"models\": {{{models_json}}},\n  \"partition\": {{\"build_new_s\": {build_new_s:.6}, \"build_reference_s\": {build_ref_s:.6}, \"build_speedup\": {build_speedup:.3}, \"dbh_p8_cut_s\": {cut_s:.6}}},\n  \"train\": {{\"bucket\": {{\"n_pad\": {}, \"e_pad\": {}}}, \"forward\": {{\"old_s\": {fwd_old_s:.6}, \"new_s\": {fwd_new_s:.6}, \"speedup\": {fwd_speedup:.3}}}, \"step\": {{\"old_s\": {step_old_s:.6}, \"new_s\": {step_new_s:.6}, \"speedup\": {step_speedup:.3}}}, \"epoch\": {{\"old_s\": {epoch_old_s:.6}, \"new_s\": {epoch_new_s:.6}, \"speedup\": {epoch_speedup:.3}}}, \"parity\": true}},\n  \"dist\": [\n    {dist_rows}\n  ]\n}}\n",
+        "{{\n  \"bench\": \"summary\",\n  \"generated_by\": \"cofree bench --quick\",\n  \"config\": {{\"edges\": {}, \"dist_edges\": {}, \"epochs\": {}, \"parts\": {:?}, \"model\": {{\"layers\": {}, \"feat_dim\": {}, \"hidden\": {}, \"classes\": {}}}}},\n  \"machine\": {{\"logical_cpus\": {}, \"rayon_threads\": {}}},\n  \"headline\": {{\"native_epoch_speedup\": {epoch_speedup:.3}, \"forward_speedup\": {fwd_speedup:.3}, \"proc_epoch_overhead_mid\": {proc_overhead_mid:.3}}},\n  \"telemetry\": {telemetry_json},\n  \"precision\": {precision_json},\n  \"models\": {{{models_json}}},\n  \"partition\": {{\"build_new_s\": {build_new_s:.6}, \"build_reference_s\": {build_ref_s:.6}, \"build_speedup\": {build_speedup:.3}, \"dbh_p8_cut_s\": {cut_s:.6}}},\n  \"train\": {{\"bucket\": {{\"n_pad\": {}, \"e_pad\": {}}}, \"forward\": {{\"old_s\": {fwd_old_s:.6}, \"new_s\": {fwd_new_s:.6}, \"speedup\": {fwd_speedup:.3}}}, \"step\": {{\"old_s\": {step_old_s:.6}, \"new_s\": {step_new_s:.6}, \"speedup\": {step_speedup:.3}}}, \"epoch\": {{\"old_s\": {epoch_old_s:.6}, \"new_s\": {epoch_new_s:.6}, \"speedup\": {epoch_speedup:.3}}}, \"parity\": true}},\n  \"dist\": [\n    {dist_rows}\n  ]\n}}\n",
         opts.edges,
         opts.dist_edges,
         opts.epochs,

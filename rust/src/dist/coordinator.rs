@@ -39,7 +39,7 @@
 
 use super::fault;
 use super::health::{HealthOptions, StragglerMonitor};
-use super::proto::{self, Frame, Stream, PROTO_VERSION};
+use super::proto::{self, Frame, Stream, WireCodec, PROTO_VERSION};
 use super::shard::shard_files;
 use crate::graph::Dataset;
 use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, TrainOut};
@@ -48,7 +48,7 @@ use crate::train::checkpoint::TrainCheckpoint;
 use crate::train::cpu::{CpuBackend, CpuEval};
 use crate::train::engine::{model_config_for, Run, RunMode, TrainConfig, TrainEngine};
 use crate::train::metrics::History;
-use crate::train::model::ModelKind;
+use crate::train::model::{ModelKind, Precision};
 use crate::train::tensorize::{EvalBatch, TrainBatch};
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Context, Result};
@@ -116,6 +116,15 @@ pub struct ProcOptions {
     /// spawns workers with `--no-verify` — the knob `bench_dist` flips to
     /// measure what verification costs.
     pub verify_shards: bool,
+    /// Compute precision tier the fleet trains at (broadcast in the
+    /// `Config` frame; workers allocate their workspaces accordingly).
+    /// The coordinator's master weights and optimizer stay f32 either way.
+    pub precision: Precision,
+    /// Tensor-body codec for the step-loop frames (protocol v6). Every
+    /// worker advertises its supported codecs in its Hello bitmask; a
+    /// worker missing the negotiated codec is refused loudly by rank at
+    /// handshake time — mixed fleets never train.
+    pub wire_codec: WireCodec,
 }
 
 impl ProcOptions {
@@ -129,9 +138,19 @@ impl ProcOptions {
             chaos_env: None,
             wire_digests: false,
             verify_shards: true,
+            precision: Precision::F32,
+            wire_codec: WireCodec::F32,
         }
     }
 }
+
+/// The communication-free wire bound in bytes per epoch per parameter for
+/// the uncompressed (f32) codec: 4 bytes of θ down + 4 bytes of ∇ up, per
+/// worker. `bench_dist` and the trajectory-parity tests assert measured
+/// traffic against `EXPECTED_F32_BYTES_PER_PARAM · p · workers` (plus
+/// fixed per-frame framing); the quantized codecs divide the tensor-body
+/// share of this bound by their element-width ratio (bf16 ≈ 2×, int8 ≈ 4×).
+pub const EXPECTED_F32_BYTES_PER_PARAM: usize = 8;
 
 /// Cumulative phase telemetry for one worker rank over a run, folded from
 /// the [`proto::StepPhases`] breakdown every `StepResult` carries
@@ -184,6 +203,13 @@ pub struct DistStats {
     pub optim_seconds: f64,
     /// Largest worker workspace arena in the fleet.
     pub peak_workspace_bytes: u64,
+    /// Tensor-body bytes actually put on the wire by the negotiated codec
+    /// (broadcast payloads, summed over epochs — excludes frame headers).
+    pub wire_compressed_bytes: u64,
+    /// What the same tensor bodies would have cost at f32 — the
+    /// compression-ratio denominator. Equal to `wire_compressed_bytes`
+    /// when the fleet runs the f32 codec.
+    pub wire_raw_bytes: u64,
     /// Per-rank cumulative phase breakdowns, indexed by rank.
     pub per_rank: Vec<RankPhases>,
 }
@@ -217,6 +243,16 @@ impl DistStats {
             self.bytes_per_epoch() / self.num_params as f64
         }
     }
+    /// Wire compression ratio achieved by the negotiated codec on the
+    /// tensor bodies: f32-equivalent bytes over bytes actually sent.
+    /// 1.0 for the f32 codec (and for a run that sent nothing).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.wire_compressed_bytes == 0 {
+            1.0
+        } else {
+            self.wire_raw_bytes as f64 / self.wire_compressed_bytes as f64
+        }
+    }
     /// Heartbeat overhead per epoch, in bytes (0 when heartbeats are off).
     pub fn heartbeat_bytes_per_epoch(&self) -> f64 {
         if self.epochs_run == 0 {
@@ -240,7 +276,8 @@ impl DistStats {
             "{{\"num_workers\": {}, \"epochs_run\": {}, \"num_params\": {}, \
              \"bytes_sent\": {}, \"bytes_recv\": {}, \"handshake_bytes\": {}, \
              \"heartbeat_bytes\": {}, \"recoveries\": {}, \"deadline_misses\": {}, \
-             \"stragglers\": {}, \"peak_workspace_bytes\": {}",
+             \"stragglers\": {}, \"peak_workspace_bytes\": {}, \
+             \"wire_compressed_bytes\": {}, \"wire_raw_bytes\": {}",
             self.num_workers,
             self.epochs_run,
             self.num_params,
@@ -251,7 +288,9 @@ impl DistStats {
             self.recoveries,
             self.deadline_misses,
             self.stragglers,
-            self.peak_workspace_bytes
+            self.peak_workspace_bytes,
+            self.wire_compressed_bytes,
+            self.wire_raw_bytes
         );
         for (name, v) in [
             ("handshake_s", self.handshake_seconds),
@@ -263,6 +302,7 @@ impl DistStats {
             ("optim_s", self.optim_seconds),
             ("bytes_per_epoch", self.bytes_per_epoch()),
             ("bytes_per_epoch_per_param", self.bytes_per_epoch_per_param()),
+            ("compression_ratio", self.compression_ratio()),
         ] {
             let _ = write!(o, ", \"{name}\": ");
             json_num(&mut o, v);
@@ -377,12 +417,21 @@ impl Drop for Listener {
 // ---------------------------------------------------------------------------
 
 /// Validate a handshake `Hello` against the fleet shape: protocol version,
-/// partition count, rank range, and slot uniqueness. Returns the rank.
-/// Rejections name the offending rank so a misconfigured fleet (two
-/// workers on one shard, a shard from a different cut) fails loudly at
-/// Hello time instead of silently overwriting a worker slot.
-fn check_hello(frame: &Frame, num_parts: usize, taken: &[bool]) -> Result<usize> {
-    let Frame::Hello { proto_version, rank, num_parts: np } = frame else {
+/// partition count, rank range, slot uniqueness, and (protocol v6) codec
+/// support — the worker's advertised codec bitmask must cover the wire
+/// codec this fleet negotiated, so a mixed fleet (one stale binary that
+/// cannot decode bf16/int8 frames) is refused loudly by rank instead of
+/// feeding it frames it would misparse. Returns the rank. Rejections name
+/// the offending rank so a misconfigured fleet (two workers on one shard,
+/// a shard from a different cut) fails loudly at Hello time instead of
+/// silently overwriting a worker slot.
+fn check_hello(
+    frame: &Frame,
+    num_parts: usize,
+    taken: &[bool],
+    wire_codec: WireCodec,
+) -> Result<usize> {
+    let Frame::Hello { proto_version, rank, num_parts: np, codecs } = frame else {
         bail!("expected Hello frame, got {frame:?}");
     };
     ensure!(
@@ -392,6 +441,13 @@ fn check_hello(frame: &Frame, num_parts: usize, taken: &[bool]) -> Result<usize>
     ensure!(
         *np as usize == num_parts,
         "worker rank {rank}: shard says {np} parts, coordinator drives {num_parts}"
+    );
+    ensure!(
+        codecs & wire_codec.bit() != 0,
+        "worker rank {rank} does not support the negotiated wire codec {} \
+         (advertises bitmask {codecs:#05b}) — mixed fleet refused; rebuild or \
+         drop --wire-compress",
+        wire_codec.name()
     );
     let rank = *rank as usize;
     ensure!(
@@ -442,6 +498,9 @@ struct FleetCtl {
     num_parts: usize,
     /// CRC-32C trailers negotiated for this fleet's tensor frames.
     wire_digests: bool,
+    /// Tensor-body codec negotiated for this fleet (protocol v6); every
+    /// Hello — including recovery re-handshakes — is checked against it.
+    wire_codec: WireCodec,
     /// Spawn workers with `--no-verify` when false.
     verify_shards: bool,
     defused: bool,
@@ -503,6 +562,7 @@ impl FleetCtl {
             health: opts.health,
             num_parts: p,
             wire_digests: opts.wire_digests,
+            wire_codec: opts.wire_codec,
             verify_shards: opts.verify_shards,
             defused: false,
             recoveries: 0,
@@ -572,7 +632,7 @@ impl FleetCtl {
                                 fleet.children[r] = Some(fleet.spawn_child(r)?);
                                 continue;
                             }
-                            let rank = check_hello(&frame, p, &taken)?;
+                            let rank = check_hello(&frame, p, &taken, opts.wire_codec)?;
                             taken[rank] = true;
                             streams[rank] = Some(s);
                             connected += 1;
@@ -599,7 +659,7 @@ impl FleetCtl {
                     fleet.handshake_bytes += n;
                     reject_fault(&frame)
                         .with_context(|| format!("handshaking worker at {host}"))?;
-                    let rank = check_hello(&frame, p, &taken)?;
+                    let rank = check_hello(&frame, p, &taken, opts.wire_codec)?;
                     taken[rank] = true;
                     fleet.endpoints[rank] = Endpoint::Remote { addr: host.clone() };
                     s.set_read_timeout(Some(opts.handshake_timeout))?;
@@ -766,7 +826,7 @@ impl FleetCtl {
                     self.children[rank] = Some(self.spawn_child(rank)?);
                     continue;
                 }
-                let got = check_hello(&frame, self.num_parts, &none_taken)?;
+                let got = check_hello(&frame, self.num_parts, &none_taken, self.wire_codec)?;
                 ensure!(
                     got == rank,
                     "respawned worker reports rank {got}, expected rank {rank}"
@@ -799,7 +859,7 @@ impl FleetCtl {
         self.handshake_bytes += n;
         reject_fault(&frame).with_context(|| format!("re-dialing rank {rank} at {addr}"))?;
         let none_taken = vec![false; self.num_parts];
-        let got = check_hello(&frame, self.num_parts, &none_taken)?;
+        let got = check_hello(&frame, self.num_parts, &none_taken, self.wire_codec)?;
         ensure!(got == rank, "worker at {addr} reports rank {got}, expected rank {rank}");
         s.set_read_timeout(Some(self.health.recovery_timeout))?;
         Ok(s)
@@ -924,8 +984,17 @@ pub struct ProcBackend {
     /// CRC-32C trailers on Step/StepResult payloads, as negotiated in the
     /// fleet's `Config` frame.
     wire_digests: bool,
+    /// Tensor-body codec for Step/StepResult payloads (protocol v6). The
+    /// coordinator encodes θ with it and dequantizes the returned gradient
+    /// partial sums back into f32 before the fold, so the f32 master state
+    /// and Adam are untouched by quantization.
+    wire_codec: WireCodec,
     bytes_sent: Cell<u64>,
     bytes_recv: Cell<u64>,
+    /// Run-scoped compression accounting (the `wire.*` obs counters are
+    /// process-global; `DistStats` wants this run alone).
+    wire_compressed: Cell<u64>,
+    wire_raw: Cell<u64>,
     heartbeat_bytes: Cell<u64>,
     deadline_misses: Cell<u64>,
     /// Epoch counter (drives the heartbeat cadence).
@@ -951,9 +1020,12 @@ impl ProcBackend {
         ProcBackend {
             cpu: CpuBackend::new(),
             wire_digests: fleet.wire_digests,
+            wire_codec: fleet.wire_codec,
             fleet: RefCell::new(fleet),
             bytes_sent: Cell::new(0),
             bytes_recv: Cell::new(0),
+            wire_compressed: Cell::new(0),
+            wire_raw: Cell::new(0),
             heartbeat_bytes: Cell::new(0),
             deadline_misses: Cell::new(0),
             epoch: Cell::new(0),
@@ -1102,6 +1174,7 @@ impl ProcBackend {
                         recv.payload(),
                         &mut outs[i].0,
                         self.wire_digests,
+                        self.wire_codec,
                     )
                         .with_context(|| {
                             format!("decoding step result from worker rank {}", w.rank)
@@ -1242,8 +1315,16 @@ impl Backend for ProcBackend {
         {
             let mut encoded = self.encoded.borrow_mut();
             let t_enc = Instant::now();
-            encoded.encode_from(&params.data)?;
+            encoded.encode_from(&params.data, self.wire_codec)?;
             crate::obs::trace::record_since("encode", t_enc);
+            // Compression accounting: what the codec put on the wire vs
+            // what the same tensors would cost at f32. Counted once per
+            // epoch (the payload is shared by every worker's Step frame).
+            let (comp, raw) = (encoded.body_len(), proto::f32_tensor_list_len(&params.data));
+            crate::obs::metrics::counter("wire.compressed_bytes").add(comp);
+            crate::obs::metrics::counter("wire.raw_bytes").add(raw);
+            self.wire_compressed.set(self.wire_compressed.get() + comp);
+            self.wire_raw.set(self.wire_raw.get() + raw);
             let t_wire = Instant::now();
             for (&wi, pick) in selected.iter().zip(picks) {
                 let w = &workers[wi];
@@ -1437,6 +1518,8 @@ fn train_fleet(
         dropedge_ratio,
         model,
         wire_digests: opts.wire_digests,
+        precision: opts.precision,
+        wire_codec: opts.wire_codec,
     };
     let (fleet, streams) = FleetCtl::launch(source, config, opts)?;
     let metas = fleet.metas.clone();
@@ -1462,6 +1545,8 @@ fn train_fleet(
     stats.epochs_run = history.epochs.len();
     stats.bytes_sent = engine.backend.bytes_sent.get();
     stats.bytes_recv = engine.backend.bytes_recv.get();
+    stats.wire_compressed_bytes = engine.backend.wire_compressed.get();
+    stats.wire_raw_bytes = engine.backend.wire_raw.get();
     stats.heartbeat_bytes = engine.backend.heartbeat_bytes.get();
     stats.deadline_misses = engine.backend.deadline_misses.get();
     stats.stragglers = engine.backend.stragglers.borrow().flagged;
@@ -1505,7 +1590,7 @@ mod tests {
     use super::*;
 
     fn hello(v: u32, rank: u32, np: u32) -> Frame {
-        Frame::Hello { proto_version: v, rank, num_parts: np }
+        Frame::Hello { proto_version: v, rank, num_parts: np, codecs: WireCodec::all_bits() }
     }
 
     /// Handshake validation names the offending rank for every rejection
@@ -1514,19 +1599,60 @@ mod tests {
     #[test]
     fn check_hello_rejections_name_the_rank() {
         let taken = vec![false, true, false];
-        assert_eq!(check_hello(&hello(PROTO_VERSION, 0, 3), 3, &taken).unwrap(), 0);
-        let err = check_hello(&hello(PROTO_VERSION - 1, 2, 3), 3, &taken).unwrap_err();
+        let f32c = WireCodec::F32;
+        assert_eq!(check_hello(&hello(PROTO_VERSION, 0, 3), 3, &taken, f32c).unwrap(), 0);
+        let err = check_hello(&hello(PROTO_VERSION - 1, 2, 3), 3, &taken, f32c).unwrap_err();
         assert!(format!("{err:#}").contains("rank 2"), "{err:#}");
-        let err = check_hello(&hello(PROTO_VERSION, 0, 4), 3, &taken).unwrap_err();
+        let err = check_hello(&hello(PROTO_VERSION, 0, 4), 3, &taken, f32c).unwrap_err();
         assert!(format!("{err:#}").contains("4 parts"), "{err:#}");
-        let err = check_hello(&hello(PROTO_VERSION, 7, 3), 3, &taken).unwrap_err();
+        let err = check_hello(&hello(PROTO_VERSION, 7, 3), 3, &taken, f32c).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("rank 7") && msg.contains("out of range"), "{msg}");
-        let err = check_hello(&hello(PROTO_VERSION, 1, 3), 3, &taken).unwrap_err();
+        let err = check_hello(&hello(PROTO_VERSION, 1, 3), 3, &taken, f32c).unwrap_err();
         let msg = format!("{err:#}");
         assert!(msg.contains("duplicate") && msg.contains("rank 1"), "{msg}");
-        let err = check_hello(&Frame::Shutdown, 3, &taken).unwrap_err();
+        let err = check_hello(&Frame::Shutdown, 3, &taken, f32c).unwrap_err();
         assert!(format!("{err:#}").contains("expected Hello"), "{err:#}");
+    }
+
+    /// Codec negotiation (protocol v6): a worker whose Hello bitmask lacks
+    /// the fleet's wire codec is refused by rank with an actionable
+    /// message; a worker advertising the codec is admitted.
+    #[test]
+    fn check_hello_refuses_mixed_codec_fleets_by_rank() {
+        let taken = vec![false; 2];
+        // A v5-era worker effectively advertises only f32.
+        let stale = Frame::Hello {
+            proto_version: PROTO_VERSION,
+            rank: 1,
+            num_parts: 2,
+            codecs: WireCodec::F32.bit(),
+        };
+        let err = check_hello(&stale, 2, &taken, WireCodec::I8).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("rank 1") && msg.contains("int8") && msg.contains("mixed fleet"),
+            "{msg}"
+        );
+        // The same worker is fine on an f32 fleet…
+        assert_eq!(check_hello(&stale, 2, &taken, WireCodec::F32).unwrap(), 1);
+        // …and a full-bitmask worker is fine on any fleet.
+        for codec in WireCodec::ALL {
+            assert_eq!(check_hello(&hello(PROTO_VERSION, 0, 2), 2, &taken, codec).unwrap(), 0);
+        }
+    }
+
+    /// `compression_ratio` is raw/compressed with a 1.0 floor for empty
+    /// runs (no division by zero, no NaN in the ledger).
+    #[test]
+    fn compression_ratio_accounting() {
+        let mut stats = DistStats::default();
+        assert_eq!(stats.compression_ratio(), 1.0);
+        stats.wire_raw_bytes = 4000;
+        stats.wire_compressed_bytes = 1000;
+        assert!((stats.compression_ratio() - 4.0).abs() < 1e-12);
+        stats.wire_compressed_bytes = stats.wire_raw_bytes;
+        assert_eq!(stats.compression_ratio(), 1.0);
     }
 
     /// `DistStats::to_json` is a published schema: the ledger summary's
@@ -1555,6 +1681,8 @@ mod tests {
             serialize_seconds: 0.05,
             optim_seconds: 0.1,
             peak_workspace_bytes: 4096,
+            wire_compressed_bytes: 800,
+            wire_raw_bytes: 3200,
             per_rank: vec![
                 RankPhases {
                     rank: 0,
@@ -1590,10 +1718,14 @@ mod tests {
             "optim_s",
             "bytes_per_epoch",
             "bytes_per_epoch_per_param",
+            "wire_compressed_bytes",
+            "wire_raw_bytes",
+            "compression_ratio",
             "per_rank",
         ] {
             assert!(doc.get(key).is_some(), "schema field {key} missing from to_json");
         }
+        assert_eq!(doc.get("compression_ratio").and_then(|v| v.as_f64()), Some(4.0));
         assert_eq!(doc.get("num_workers").and_then(|v| v.as_u64()), Some(2));
         assert_eq!(doc.get("forward_s").and_then(|v| v.as_f64()), Some(0.6));
         let per_rank = doc.get("per_rank").and_then(|v| v.as_arr()).expect("per_rank array");

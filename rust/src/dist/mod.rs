@@ -53,7 +53,7 @@ pub mod worker;
 
 pub use coordinator::{
     train_over_hosts, train_over_shards, DistStats, ProcBackend, ProcOptions, RankPhases,
-    Transport,
+    Transport, EXPECTED_F32_BYTES_PER_PARAM,
 };
 pub use fsck::{fsck, FileVerdict, FsckReport};
 pub use health::HealthOptions;

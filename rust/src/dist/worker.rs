@@ -46,13 +46,14 @@
 //! at exact frame boundaries — the chaos harness (`tests/chaos.rs`).
 
 use super::fault::{FaultPlan, FaultStream};
-use super::proto::{self, Frame, Stream, PROTO_VERSION};
+use super::proto::{self, Frame, Stream, WireCodec, PROTO_VERSION};
 use super::shard::MappedShard;
 use crate::runtime::{ParamSet, TrainOut};
 use crate::train::bucket::pad_explicit;
 use crate::train::cpu::{self, EdgeCsr};
 use crate::train::dropedge::MaskBank;
 use crate::train::engine::worker_mask_rng;
+use crate::train::model::Precision;
 use crate::train::workspace::ModelWorkspace;
 use crate::util::binio::Verify;
 use anyhow::{bail, ensure, Context, Result};
@@ -60,6 +61,27 @@ use std::io::{Read, Write};
 use std::net::TcpListener;
 use std::path::Path;
 use std::time::Instant;
+
+/// Worker-side negotiation constraints, from `cofree worker`'s
+/// `--wire-compress` / `--precision` flags. Defaults advertise every codec
+/// and adopt whatever compute tier the coordinator's `Config` names.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerOptions {
+    /// Codec bitmask advertised in the Hello (protocol v6). `--wire-compress
+    /// CODEC` narrows this to f32 + CODEC; a coordinator whose negotiated
+    /// codec is missing from the mask refuses the fleet loudly by rank.
+    pub codecs: u8,
+    /// When set, refuse a `Config` naming a different compute tier — a
+    /// deployment guard for hosts that must not silently train at an
+    /// unexpected precision.
+    pub precision: Option<Precision>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions { codecs: WireCodec::all_bits(), precision: None }
+    }
+}
 
 /// Dial out to a coordinator and serve one session to completion.
 /// Returns the number of train steps served.
@@ -69,13 +91,23 @@ use std::time::Instant;
 /// structured [`Frame::Fault`] (corrupt vs transient) instead of the
 /// worker dying silently mid-handshake.
 pub fn run(shard_path: &Path, connect: &str, verify: Verify) -> Result<usize> {
+    run_with(shard_path, connect, verify, WorkerOptions::default())
+}
+
+/// [`run`] with explicit negotiation constraints ([`WorkerOptions`]).
+pub fn run_with(
+    shard_path: &Path,
+    connect: &str,
+    verify: Verify,
+    opts: WorkerOptions,
+) -> Result<usize> {
     crate::log_info!("worker: connecting to {connect} for shard {}", shard_path.display());
     let mut stream = Stream::connect(connect)?;
     let shard = match open_shard(shard_path, verify) {
         Ok(s) => s,
         Err(e) => return report_fault(&mut stream, shard_path, e),
     };
-    serve(&shard, stream)
+    serve(&shard, stream, opts)
 }
 
 /// Bind `listen` (host:port) and serve coordinator sessions until one ends
@@ -83,6 +115,16 @@ pub fn run(shard_path: &Path, connect: &str, verify: Verify) -> Result<usize> {
 /// loss, coordinator-driven recovery re-dialing) is logged and the worker
 /// returns to `accept`. Returns total train steps served across sessions.
 pub fn run_listen(shard_path: &Path, listen: &str, verify: Verify) -> Result<usize> {
+    run_listen_with(shard_path, listen, verify, WorkerOptions::default())
+}
+
+/// [`run_listen`] with explicit negotiation constraints ([`WorkerOptions`]).
+pub fn run_listen_with(
+    shard_path: &Path,
+    listen: &str,
+    verify: Verify,
+    opts: WorkerOptions,
+) -> Result<usize> {
     let shard = match open_shard(shard_path, verify) {
         Ok(s) => s,
         Err(e) => {
@@ -114,7 +156,7 @@ pub fn run_listen(shard_path: &Path, listen: &str, verify: Verify) -> Result<usi
         let (sock, peer) = listener.accept().context("accepting coordinator session")?;
         crate::log_info!("worker rank {}: session from {peer}", shard.part_id);
         let stream = Stream::from_tcp(sock)?;
-        match serve(&shard, stream) {
+        match serve(&shard, stream, opts) {
             Ok(steps) => return Ok(total + steps),
             Err(e) => {
                 crate::log_warn!(
@@ -183,17 +225,23 @@ fn report_fault(stream: &mut Stream, shard_path: &Path, e: anyhow::Error) -> Res
 
 /// Serve one coordinator session over `stream`, wrapping it in the chaos
 /// fault shim when a `COFREE_CHAOS` plan targets this rank.
-fn serve(shard: &MappedShard, stream: Stream) -> Result<usize> {
+fn serve(shard: &MappedShard, stream: Stream, opts: WorkerOptions) -> Result<usize> {
     match FaultPlan::from_env(shard.part_id) {
-        Some(plan) => serve_session(shard, &mut FaultStream::new(stream, plan, shard.part_id)),
-        None => serve_session(shard, &mut { stream }),
+        Some(plan) => {
+            serve_session(shard, &mut FaultStream::new(stream, plan, shard.part_id), opts)
+        }
+        None => serve_session(shard, &mut { stream }, opts),
     }
 }
 
 /// One full protocol session: Hello → Config → Meta, then the step loop
 /// until `Shutdown`. Generic over the stream so the fault shim (and unit
 /// tests feeding malformed bytes) slot in transparently.
-fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result<usize> {
+fn serve_session<S: Read + Write>(
+    shard: &MappedShard,
+    stream: &mut S,
+    opts: WorkerOptions,
+) -> Result<usize> {
     let rank = shard.part_id;
     crate::util::logging::set_rank(rank);
     proto::write_frame(
@@ -202,12 +250,37 @@ fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result
             proto_version: PROTO_VERSION,
             rank: rank as u32,
             num_parts: shard.num_parts as u32,
+            // This build implements every codec; the coordinator picks from
+            // whatever subset the operator let this worker advertise.
+            codecs: opts.codecs,
         },
     )?;
     let (frame, _) = proto::read_frame(stream)?;
-    let Frame::Config { seed, dropedge_k, dropedge_ratio, model, wire_digests } = frame else {
+    let Frame::Config {
+        seed, dropedge_k, dropedge_ratio, model, wire_digests, precision, wire_codec,
+    } = frame
+    else {
         bail!("expected Config frame after Hello, got {frame:?}");
     };
+    // A correct coordinator never picks a codec outside the advertised
+    // mask (check_hello refuses the fleet first); guard anyway so a buggy
+    // or hostile peer cannot make this worker emit frames it disclaimed.
+    ensure!(
+        opts.codecs & wire_codec.bit() != 0,
+        "worker rank {rank}: coordinator picked wire codec {} outside the advertised \
+         bitmask {:#05b}",
+        wire_codec.name(),
+        opts.codecs
+    );
+    if let Some(pin) = opts.precision {
+        ensure!(
+            pin == precision,
+            "worker rank {rank} is pinned to --precision {} but the coordinator's \
+             Config names {}; refusing to train at an unexpected tier",
+            pin.name(),
+            precision.name()
+        );
+    }
     // Shards record dims only (the stored arrays are model-agnostic); the
     // architecture kind arrives here, in the Config frame, and the worker
     // adopts it. Dims still have to line up with the shard's data layout.
@@ -245,7 +318,10 @@ fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result
     let dims = model.param_shapes();
     let mut params = ParamSet { dims: dims.clone(), data: Vec::new() };
     let mut frame_buf = proto::FrameBuf::new();
-    let mut ws = ModelWorkspace::new(&model, batch.n_pad);
+    // The Config frame carries the fleet's compute tier: the workspace is
+    // allocated once at that tier and `train_step_into_timed` dispatches
+    // off it, exactly like the in-process engine.
+    let mut ws = ModelWorkspace::with_precision(&model, batch.n_pad, precision);
     let mut out = TrainOut::default();
     let mut result_payload: Vec<u8> = Vec::new();
     let mut steps = 0usize;
@@ -260,7 +336,8 @@ fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result
         let (tag, payload, _) = proto::read_frame_into(stream, &mut frame_buf)?;
         match tag {
             proto::TAG_STEP => {
-                let pick = proto::decode_step_into(payload, &mut params.data, wire_digests)?;
+                let pick =
+                    proto::decode_step_into(payload, &mut params.data, wire_digests, wire_codec)?;
                 ensure!(
                     params.data.len() == dims.len(),
                     "expected {} param tensors, got {}",
@@ -301,6 +378,7 @@ fn serve_session<S: Read + Write>(shard: &MappedShard, stream: &mut S) -> Result
                     &phases,
                     &mut result_payload,
                     wire_digests,
+                    wire_codec,
                 )?;
                 last_serialize = t1.elapsed().as_secs_f64();
                 steps += 1;

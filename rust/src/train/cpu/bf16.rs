@@ -1,0 +1,671 @@
+//! The bf16-storage / f32-accumulate training step (the `Precision::Bf16`
+//! tier).
+//!
+//! Design: the memory-bandwidth win of bf16 comes from what *persists* —
+//! the per-layer activations that cross layer boundaries (and, on the
+//! wire, the parameter/gradient tensors). Everything that persists here is
+//! stored as bf16 bits in the workspace's `*_h` buffers; every dot-chain
+//! (GEMM panels, CSR aggregation, scatter) accumulates in f32. On CPUs
+//! without native bf16 FMA that is implemented the way hardware bf16
+//! kernels do it: widen a tile to f32, run the f32 inner kernel, round
+//! the result tile back to storage bits. The widening tiles are the
+//! workspace's fixed `stage`/`stage_in`/`pbuf_*` blocks, so the step stays
+//! **zero-alloc** in steady state (the `tests/alloc_steady.rs` fixed
+//! point covers this tier too), and the f32 inner kernels are the *same*
+//! packed-panel GEMMs and deterministic CSR segment loops the bitwise f32
+//! tier uses — the bf16 tier inherits their pool-size bit-stability.
+//!
+//! Numeric contract: **error-bounded, not bitwise**. The f32 path keeps
+//! its mandatory bitwise oracles untouched; this path is property-tested
+//! against it under a relative-error envelope (logits, loss, gradients —
+//! across the graph zoo and all three `ModelKind`s) plus loosened-
+//! tolerance finite differences.
+//!
+//! Two deliberate rounding choices make the tier *transport-invariant*
+//! for the protocol-v6 bf16 wire codec (`tests/dist_proc.rs` proves the
+//! fleet trajectory bitwise-equal to in-process bf16):
+//!
+//! 1. parameters are staged through bf16 **bits** at the top of every
+//!    step (`params_h`). bf16 rounding is idempotent, so an f32 master
+//!    that crossed the wire as bf16 stages to the same bits as the
+//!    coordinator's local master;
+//! 2. gradients leave the step already bf16-rounded (f32 containers,
+//!    bf16 value set), so encoding them as bf16 frames is lossless.
+//!
+//! The last layer's logits stay f32 (the shared DAR-weighted softmax-CE
+//! kernel `sage::loss_grad_into` runs unmodified), and the coordinator's
+//! master weights, Adam state, eval and checkpoints are f32 in this tier
+//! too — only worker compute and transport drop precision.
+
+use super::gemm;
+use super::sage::EdgeCsr;
+use super::{gcn, gin, sage};
+use crate::runtime::{ModelConfig, ParamSet, TrainOut};
+use crate::train::model::ModelKind;
+use crate::train::tensorize::TrainBatch;
+use crate::train::workspace::{ensure_grad_shapes, ModelWorkspace};
+use crate::util::half::{bf16_from_f32, bf16_from_f32_slice, bf16_round_slice, f32_from_bf16, f32_from_bf16_slice};
+use rayon::prelude::*;
+use std::time::Instant;
+
+/// Widen bf16 bits into the front of a f32 scratch buffer and return the
+/// widened slice.
+fn widen<'a>(bits: &[u16], buf: &'a mut [f32]) -> &'a [f32] {
+    let out = &mut buf[..bits.len()];
+    f32_from_bf16_slice(bits, out);
+    out
+}
+
+/// Round a freshly accumulated f32 tile to bf16: store the bits in `dst`
+/// AND replace the tile with the rounded values, so downstream consumers
+/// of the f32 tile see exactly what the stored bits decode to.
+fn round_store(tile: &mut [f32], dst: &mut [u16]) {
+    debug_assert_eq!(tile.len(), dst.len());
+    for (v, d) in tile.iter_mut().zip(dst.iter_mut()) {
+        let h = bf16_from_f32(*v);
+        *d = h;
+        *v = f32_from_bf16(h);
+    }
+}
+
+/// One bf16-tier train step, with the same phase-timing split as the f32
+/// [`super::train_step_into_timed`]. Expects `ws` to have been allocated
+/// with [`ModelWorkspace::with_precision`]`(…, Precision::Bf16)`.
+pub fn train_step_bf16_timed(
+    model: &ModelConfig,
+    params: &ParamSet,
+    batch: &TrainBatch,
+    csr: &EdgeCsr,
+    emask: &[f32],
+    ws: &mut ModelWorkspace,
+    out: &mut TrainOut,
+) -> (f64, f64) {
+    let n = batch.n_pad;
+    let feat = batch.tensors[0].as_f32();
+    let dar = batch.tensors[4].as_f32();
+    let labels = batch.tensors[5].as_i32();
+    let tmask = batch.tensors[6].as_f32();
+    let t0 = Instant::now();
+    // Stage features and parameters into bf16 storage bits (idempotent:
+    // a bf16-rounded master re-rounds to identical bits).
+    bf16_from_f32_slice(feat, &mut ws.feat_h);
+    for (p, hp) in params.data.iter().zip(ws.params_h.iter_mut()) {
+        bf16_from_f32_slice(p, hp);
+    }
+    forward_bf16(model, emask, csr, n, ws);
+    let forward_seconds = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    // The loss kernel is shared with the f32 tier: the logits are f32.
+    let (loss_sum, weight_sum, correct) = sage::loss_grad_into(model, dar, labels, tmask, n, ws);
+    ensure_grad_shapes(model, out);
+    backward_bf16(model, emask, csr, n, ws, &mut out.grads);
+    // Gradients leave the step bf16-valued so the v6 bf16 wire codec is
+    // lossless for this tier (proc trajectory == in-process trajectory).
+    for g in out.grads.iter_mut() {
+        bf16_round_slice(g);
+    }
+    let backward_seconds = t1.elapsed().as_secs_f64();
+    out.loss_sum = loss_sum as f32;
+    out.weight_sum = weight_sum as f32;
+    out.correct = correct as f32;
+    (forward_seconds, backward_seconds)
+}
+
+/// Model-dispatching bf16 forward (activations read/written as bf16 bits,
+/// f32 accumulation, f32 logits). Allocates nothing.
+pub fn forward_bf16(model: &ModelConfig, emask: &[f32], csr: &EdgeCsr, n: usize, ws: &mut ModelWorkspace) {
+    match model.kind {
+        ModelKind::Sage => forward_sage(model, emask, csr, n, ws),
+        ModelKind::Gcn => forward_gcn(model, emask, csr, n, ws),
+        ModelKind::Gin => forward_gin(model, emask, csr, n, ws),
+    }
+}
+
+/// Model-dispatching bf16 backward into caller-owned (f32) gradient
+/// tensors. Expects the logits gradient at the front of `ws.dbuf_a`.
+/// Allocates nothing.
+pub fn backward_bf16(
+    model: &ModelConfig,
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+) {
+    match model.kind {
+        ModelKind::Sage => backward_sage(model, emask, csr, n, ws, grads),
+        ModelKind::Gcn => backward_gcn(model, emask, csr, n, ws, grads),
+        ModelKind::Gin => backward_gin(model, emask, csr, n, ws, grads),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sage
+// ---------------------------------------------------------------------------
+
+/// bf16 GraphSAGE forward: same op order as `sage::forward_into`, with
+/// each persistent intermediate rounded to storage bits as it is produced.
+fn forward_sage(cfg: &ModelConfig, emask: &[f32], csr: &EdgeCsr, n: usize, ws: &mut ModelWorkspace) {
+    let h = cfg.hidden;
+    let last = cfg.layers - 1;
+    let ModelWorkspace {
+        outs, outs_h, msgs_h, aggs_h, denoms, feat_h, params_h, stage, stage_in, pbuf_a, pbuf_b,
+        dbuf_b, dagg, ..
+    } = ws;
+    let mut d_in = cfg.feat_dim;
+    for l in 0..cfg.layers {
+        let d_out = if l == last { cfg.classes } else { cfg.hidden };
+        let hin_bits: &[u16] = if l == 0 { feat_h } else { &outs_h[l - 1] };
+        let hin = &mut stage_in[..n * d_in];
+        f32_from_bf16_slice(hin_bits, hin);
+        let hin: &[f32] = hin;
+        // msg = relu(hin @ W + b): f32 accumulate, bf16 store.
+        let w = widen(&params_h[4 * l], pbuf_a);
+        let b = widen(&params_h[4 * l + 1], pbuf_b);
+        let msg = &mut stage[..n * h];
+        gemm::matmul(hin, w, msg, n, d_in, h);
+        gemm::bias_relu_rows(msg, b, h);
+        round_store(msg, &mut msgs_h[l]);
+        // agg = weighted neighbor mean of the rounded messages (the shared
+        // deterministic CSR segment sum; denominators stay f32).
+        let agg = &mut dagg[..n * h];
+        sage::aggregate_into(csr, emask, msg, agg, &mut denoms[l], h);
+        round_store(agg, &mut aggs_h[l]);
+        // out = concat(agg, hin) @ U + c — f32 logits at the last layer.
+        let u = widen(&params_h[4 * l + 2], pbuf_a);
+        let c = widen(&params_h[4 * l + 3], pbuf_b);
+        let out: &mut [f32] =
+            if l == last { &mut outs[last] } else { &mut dbuf_b[..n * d_out] };
+        gemm::broadcast_rows(c, out, d_out);
+        gemm::matmul_acc(agg, &u[..h * d_out], out, n, h, d_out);
+        gemm::matmul_acc(hin, &u[h * d_out..], out, n, d_in, d_out);
+        if l != last {
+            round_store(out, &mut outs_h[l]);
+        }
+        d_in = d_out;
+    }
+}
+
+/// bf16 GraphSAGE backward: f32 upstream gradients throughout; stored
+/// activations widen through the staging tiles; weights widen per use.
+fn backward_sage(
+    cfg: &ModelConfig,
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+) {
+    let h = cfg.hidden;
+    let ModelWorkspace {
+        outs_h, msgs_h, aggs_h, denoms, feat_h, params_h, dbuf_a, dbuf_b, dagg, dmsg, dh_msg,
+        stage, stage_in, pbuf_a, pbuf_b, ..
+    } = ws;
+    for l in (0..cfg.layers).rev() {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let hin_bits: &[u16] = if l == 0 { feat_h } else { &outs_h[l - 1] };
+        let hin = &mut stage_in[..n * d_in];
+        f32_from_bf16_slice(hin_bits, hin);
+        let hin: &[f32] = hin;
+        let agg = &mut stage[..n * h];
+        f32_from_bf16_slice(&aggs_h[l], agg);
+        let agg: &[f32] = agg;
+        let dout = &dbuf_a[..n * d_out];
+        gemm::col_sums(dout, n, d_out, &mut grads[4 * l + 3]);
+        {
+            let du = &mut grads[4 * l + 2];
+            gemm::matmul_tn(agg, dout, &mut du[..h * d_out], n, h, d_out);
+            gemm::matmul_tn(hin, dout, &mut du[h * d_out..], n, d_in, d_out);
+        }
+        let u = widen(&params_h[4 * l + 2], pbuf_a);
+        gemm::matmul_nt(dout, &u[..h * d_out], dagg, n, d_out, h);
+        sage::scatter_grad_into(csr, emask, &denoms[l], dagg, dmsg, h);
+        // ReLU mask straight off the stored bf16 messages.
+        dmsg.par_chunks_mut(h).zip(msgs_h[l].par_chunks(h)).for_each(|(drow, mrow)| {
+            for (dv, &mv) in drow.iter_mut().zip(mrow.iter()) {
+                if f32_from_bf16(mv) <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+        });
+        gemm::matmul_tn(hin, dmsg, &mut grads[4 * l], n, d_in, h);
+        gemm::col_sums(dmsg, n, h, &mut grads[4 * l + 1]);
+        if l == 0 {
+            break;
+        }
+        {
+            let dh = &mut dbuf_b[..n * d_in];
+            gemm::matmul_nt(dout, &u[h * d_out..], dh, n, d_out, d_in);
+            let w = widen(&params_h[4 * l], pbuf_b);
+            let dhm = &mut dh_msg[..n * d_in];
+            gemm::matmul_nt(dmsg, w, dhm, n, h, d_in);
+            gemm::add_assign(dh, dhm);
+        }
+        std::mem::swap(dbuf_a, dbuf_b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GCN
+// ---------------------------------------------------------------------------
+
+/// bf16 GCN forward: mirrors `gcn::forward_into` with the combined input
+/// rounded to storage bits; ĉ denominators stay f32.
+fn forward_gcn(cfg: &ModelConfig, emask: &[f32], csr: &EdgeCsr, n: usize, ws: &mut ModelWorkspace) {
+    let last = cfg.layers - 1;
+    let ModelWorkspace {
+        outs, outs_h, combs_h, denoms, feat_h, params_h, stage, stage_in, pbuf_a, pbuf_b, dbuf_b,
+        ..
+    } = ws;
+    gcn::compute_denoms_hat(csr, emask, &mut denoms[0]);
+    for l in 0..cfg.layers {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == last { cfg.classes } else { cfg.hidden };
+        let hin_bits: &[u16] = if l == 0 { feat_h } else { &outs_h[l - 1] };
+        let hin = &mut stage_in[..n * d_in];
+        f32_from_bf16_slice(hin_bits, hin);
+        let hin: &[f32] = hin;
+        let comb = &mut stage[..n * d_in];
+        gcn::aggregate_sym_into(csr, emask, hin, &denoms[0], comb, d_in);
+        {
+            let denom: &[f32] = &denoms[0];
+            comb.par_chunks_mut(d_in).enumerate().for_each(|(i, row)| {
+                let inv = 1.0 / denom[i];
+                let srow = &hin[i * d_in..i * d_in + d_in];
+                for (cv, &hv) in row.iter_mut().zip(srow.iter()) {
+                    *cv += inv * hv;
+                }
+            });
+        }
+        round_store(comb, &mut combs_h[l]);
+        let w = widen(&params_h[2 * l], pbuf_a);
+        let b = widen(&params_h[2 * l + 1], pbuf_b);
+        let out: &mut [f32] =
+            if l == last { &mut outs[last] } else { &mut dbuf_b[..n * d_out] };
+        gemm::broadcast_rows(b, out, d_out);
+        gemm::matmul_acc(comb, w, out, n, d_in, d_out);
+        if l != last {
+            out.par_iter_mut().for_each(|v| {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            });
+            round_store(out, &mut outs_h[l]);
+        }
+    }
+}
+
+/// bf16 GCN backward.
+fn backward_gcn(
+    cfg: &ModelConfig,
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+) {
+    let ModelWorkspace {
+        outs_h, combs_h, denoms, params_h, dbuf_a, dbuf_b, dagg, dmsg, stage, pbuf_a, ..
+    } = ws;
+    for l in (0..cfg.layers).rev() {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        // ReLU mask from the stored bf16 outputs (post-ReLU, so ≤ 0 covers
+        // the masked region exactly as in the f32 path).
+        if l != cfg.layers - 1 {
+            dbuf_a[..n * d_out]
+                .par_chunks_mut(d_out)
+                .zip(outs_h[l].par_chunks(d_out))
+                .for_each(|(drow, orow)| {
+                    for (dv, &ov) in drow.iter_mut().zip(orow.iter()) {
+                        if f32_from_bf16(ov) <= 0.0 {
+                            *dv = 0.0;
+                        }
+                    }
+                });
+        }
+        let dpre = &dbuf_a[..n * d_out];
+        gemm::col_sums(dpre, n, d_out, &mut grads[2 * l + 1]);
+        let comb = &mut stage[..n * d_in];
+        f32_from_bf16_slice(&combs_h[l], comb);
+        gemm::matmul_tn(comb, dpre, &mut grads[2 * l], n, d_in, d_out);
+        if l == 0 {
+            break;
+        }
+        let w = widen(&params_h[2 * l], pbuf_a);
+        let dcomb = &mut dagg[..n * d_in];
+        gemm::matmul_nt(dpre, w, dcomb, n, d_out, d_in);
+        let scat = &mut dmsg[..n * d_in];
+        gcn::scatter_sym_into(csr, emask, &denoms[0], dcomb, scat, d_in);
+        {
+            let denom: &[f32] = &denoms[0];
+            let dcomb_ro: &[f32] = dcomb;
+            let scat_ro: &[f32] = scat;
+            let dh = &mut dbuf_b[..n * d_in];
+            dh.par_chunks_mut(d_in).enumerate().for_each(|(i, row)| {
+                let inv = 1.0 / denom[i];
+                let crow = &dcomb_ro[i * d_in..i * d_in + d_in];
+                let srow = &scat_ro[i * d_in..i * d_in + d_in];
+                for ((dv, &cv), &sv) in row.iter_mut().zip(crow.iter()).zip(srow.iter()) {
+                    *dv = inv * cv + sv;
+                }
+            });
+        }
+        std::mem::swap(dbuf_a, dbuf_b);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GIN
+// ---------------------------------------------------------------------------
+
+/// bf16 GIN forward: ε dequantizes from its staged bits, so forward and
+/// backward agree on the exact self-scale the step used.
+fn forward_gin(cfg: &ModelConfig, emask: &[f32], csr: &EdgeCsr, n: usize, ws: &mut ModelWorkspace) {
+    let h = cfg.hidden;
+    let last = cfg.layers - 1;
+    let ModelWorkspace {
+        outs, outs_h, msgs_h, combs_h, feat_h, params_h, stage, stage_in, pbuf_a, pbuf_b, dbuf_b,
+        ..
+    } = ws;
+    for l in 0..cfg.layers {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == last { cfg.classes } else { cfg.hidden };
+        let eps = f32_from_bf16(params_h[5 * l][0]);
+        let hin_bits: &[u16] = if l == 0 { feat_h } else { &outs_h[l - 1] };
+        f32_from_bf16_slice(hin_bits, &mut stage_in[..n * d_in]);
+        let comb = &mut stage[..n * d_in];
+        {
+            let hin = &stage_in[..n * d_in];
+            gin::aggregate_sum_into(csr, emask, hin, comb, d_in);
+            let self_scale = 1.0 + eps;
+            comb.par_chunks_mut(d_in).enumerate().for_each(|(i, row)| {
+                let srow = &hin[i * d_in..i * d_in + d_in];
+                for (cv, &hv) in row.iter_mut().zip(srow.iter()) {
+                    *cv += self_scale * hv;
+                }
+            });
+        }
+        round_store(comb, &mut combs_h[l]);
+        // hid = relu(comb · W1 + b1) — the input tile is dead, reuse it.
+        let w1 = widen(&params_h[5 * l + 1], pbuf_a);
+        let b1 = widen(&params_h[5 * l + 2], pbuf_b);
+        let hid = &mut stage_in[..n * h];
+        gemm::matmul(comb, w1, hid, n, d_in, h);
+        gemm::bias_relu_rows(hid, b1, h);
+        round_store(hid, &mut msgs_h[l]);
+        let w2 = widen(&params_h[5 * l + 3], pbuf_a);
+        let b2 = widen(&params_h[5 * l + 4], pbuf_b);
+        let out: &mut [f32] =
+            if l == last { &mut outs[last] } else { &mut dbuf_b[..n * d_out] };
+        gemm::broadcast_rows(b2, out, d_out);
+        gemm::matmul_acc(hid, w2, out, n, h, d_out);
+        if l != last {
+            round_store(out, &mut outs_h[l]);
+        }
+    }
+}
+
+/// bf16 GIN backward (ε gradient folds sequentially in f64, reading the
+/// stored bf16 input activations — bit-stable for any pool size).
+fn backward_gin(
+    cfg: &ModelConfig,
+    emask: &[f32],
+    csr: &EdgeCsr,
+    n: usize,
+    ws: &mut ModelWorkspace,
+    grads: &mut [Vec<f32>],
+) {
+    let h = cfg.hidden;
+    let ModelWorkspace {
+        outs_h, msgs_h, combs_h, feat_h, params_h, dbuf_a, dbuf_b, dagg, dmsg, dh_msg, stage,
+        stage_in, pbuf_a, ..
+    } = ws;
+    for l in (0..cfg.layers).rev() {
+        let d_in = if l == 0 { cfg.feat_dim } else { cfg.hidden };
+        let d_out = if l == cfg.layers - 1 { cfg.classes } else { cfg.hidden };
+        let eps = f32_from_bf16(params_h[5 * l][0]);
+        let dout = &dbuf_a[..n * d_out];
+        gemm::col_sums(dout, n, d_out, &mut grads[5 * l + 4]);
+        let hid = &mut stage[..n * h];
+        f32_from_bf16_slice(&msgs_h[l], hid);
+        let hid: &[f32] = hid;
+        gemm::matmul_tn(hid, dout, &mut grads[5 * l + 3], n, h, d_out);
+        let w2 = widen(&params_h[5 * l + 3], pbuf_a);
+        let dhid = &mut dmsg[..n * h];
+        gemm::matmul_nt(dout, w2, dhid, n, d_out, h);
+        dhid.par_chunks_mut(h).zip(msgs_h[l].par_chunks(h)).for_each(|(drow, hrow)| {
+            for (dv, &hv) in drow.iter_mut().zip(hrow.iter()) {
+                if f32_from_bf16(hv) <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+        });
+        gemm::col_sums(dhid, n, h, &mut grads[5 * l + 2]);
+        let comb = &mut stage_in[..n * d_in];
+        f32_from_bf16_slice(&combs_h[l], comb);
+        gemm::matmul_tn(comb, dhid, &mut grads[5 * l + 1], n, d_in, h);
+        let w1 = widen(&params_h[5 * l + 1], pbuf_a);
+        let dcomb = &mut dagg[..n * d_in];
+        gemm::matmul_nt(dhid, w1, dcomb, n, h, d_in);
+        let hin_bits: &[u16] = if l == 0 { feat_h } else { &outs_h[l - 1] };
+        let mut deps = 0f64;
+        for (&hv, &cv) in hin_bits.iter().zip(dcomb.iter()) {
+            deps += f32_from_bf16(hv) as f64 * cv as f64;
+        }
+        grads[5 * l][0] = deps as f32;
+        if l == 0 {
+            break;
+        }
+        let scat = &mut dh_msg[..n * d_in];
+        gin::scatter_sum_into(csr, emask, dcomb, scat, d_in);
+        {
+            let dcomb_ro: &[f32] = dcomb;
+            let scat_ro: &[f32] = scat;
+            let self_scale = 1.0 + eps;
+            let dh = &mut dbuf_b[..n * d_in];
+            dh.par_chunks_mut(d_in).enumerate().for_each(|(i, row)| {
+                let crow = &dcomb_ro[i * d_in..i * d_in + d_in];
+                let srow = &scat_ro[i * d_in..i * d_in + d_in];
+                for ((dv, &cv), &sv) in row.iter_mut().zip(crow.iter()).zip(srow.iter()) {
+                    *dv = self_scale * cv + sv;
+                }
+            });
+        }
+        std::mem::swap(dbuf_a, dbuf_b);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::features::{synthesize, FeatureParams};
+    use crate::partition::testutil::graph_zoo;
+    use crate::partition::{dar_weights, random::RandomVertexCut, Reweighting, VertexCut};
+    use crate::train::model::Precision;
+    use crate::train::tensorize::{tensorize_partition, TrainBatch};
+    use crate::util::rng::Rng;
+
+    fn zoo_batch(gi: usize, g: &crate::graph::Graph, seed: u64) -> Option<TrainBatch> {
+        let n = g.num_nodes();
+        let mut rng = Rng::new(seed + gi as u64);
+        let comm: Vec<u32> = (0..n).map(|i| (i % 4) as u32).collect();
+        let nd = synthesize(&comm, 4, &FeatureParams { dim: 5, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(g, &vc, Reweighting::Dar);
+        if vc.parts[0].num_edges() == 0 {
+            return None;
+        }
+        Some(tensorize_partition(&vc.parts[0], &nd, &w[0], 256, 2048).unwrap())
+    }
+
+    fn rel_l2(got: &[f32], want: &[f32]) -> f64 {
+        assert_eq!(got.len(), want.len());
+        let mut num = 0f64;
+        let mut den = 0f64;
+        for (&g, &w) in got.iter().zip(want.iter()) {
+            num += ((g - w) as f64).powi(2);
+            den += (w as f64).powi(2);
+        }
+        (num / den.max(1e-9)).sqrt()
+    }
+
+    fn step_pair(
+        cfg: &ModelConfig,
+        params: &ParamSet,
+        batch: &TrainBatch,
+    ) -> (TrainOut, TrainOut) {
+        let csr = EdgeCsr::from_batch(batch);
+        let emask = batch.emask().as_f32();
+        let mut ws32 = ModelWorkspace::with_precision(cfg, batch.n_pad, Precision::F32);
+        let mut out32 = TrainOut::default();
+        super::super::train_step_into(cfg, params, batch, &csr, emask, &mut ws32, &mut out32);
+        let mut wsh = ModelWorkspace::with_precision(cfg, batch.n_pad, Precision::Bf16);
+        let mut outh = TrainOut::default();
+        super::super::train_step_into(cfg, params, batch, &csr, emask, &mut wsh, &mut outh);
+        // Logits envelope rides along on every pair.
+        let l2 = rel_l2(wsh.logits(), ws32.logits());
+        assert!(l2 <= 0.05, "{:?}: logits rel-L2 {l2} out of envelope", cfg.kind);
+        (out32, outh)
+    }
+
+    /// Error envelope across the graph zoo and every ModelKind: bf16
+    /// loss/metrics and gradients track the f32 path within a relative
+    /// bound (bitwise for the weight_sum, which is precision-independent).
+    #[test]
+    fn bf16_step_tracks_f32_within_envelope_across_zoo() {
+        for (gi, g) in graph_zoo(41).iter().enumerate() {
+            let Some(batch) = zoo_batch(gi, g, 1100) else { continue };
+            let mut rng = Rng::new(1200 + gi as u64);
+            for kind in ModelKind::ALL {
+                let cfg = ModelConfig { kind, layers: 2, feat_dim: 5, hidden: 7, classes: 4 };
+                let params = ParamSet::init_glorot(&cfg, &mut rng.fork(kind.code() as u64));
+                let (out32, outh) = step_pair(&cfg, &params, &batch);
+                // DAR weights never touch the activations.
+                assert_eq!(outh.weight_sum.to_bits(), out32.weight_sum.to_bits());
+                let rel_loss =
+                    ((outh.loss_sum - out32.loss_sum).abs() / out32.loss_sum.max(1e-6)) as f64;
+                assert!(rel_loss <= 0.05, "graph#{gi} {kind:?}: loss rel err {rel_loss}");
+                for (ti, (gh, g32)) in outh.grads.iter().zip(out32.grads.iter()).enumerate() {
+                    let l2 = rel_l2(gh, g32);
+                    // Gradients compound rounding error through two GEMM
+                    // chains + the CSR scatter; 15% relative L2 is the
+                    // loosened (but still shape/sign-catching) envelope.
+                    assert!(
+                        l2 <= 0.15,
+                        "graph#{gi} {kind:?} grad tensor {ti}: rel-L2 {l2}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The bf16 step is deterministic and bit-stable across rayon pool
+    /// sizes (it reuses the same deterministic inner kernels as f32), and
+    /// its gradients leave the step already bf16-valued — the property
+    /// that makes the v6 bf16 wire codec lossless for this tier.
+    #[test]
+    fn bf16_step_is_bit_stable_and_emits_bf16_valued_grads() {
+        let mut rng = Rng::new(21);
+        let g = crate::graph::generators::barabasi_albert(150, 3, &mut rng);
+        let comm: Vec<u32> = (0..150).map(|i| (i % 4) as u32).collect();
+        let nd = synthesize(&comm, 4, &FeatureParams { dim: 6, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 256, 2048).unwrap();
+        let csr = EdgeCsr::from_batch(&batch);
+        let emask = batch.emask().as_f32();
+        for kind in ModelKind::ALL {
+            let cfg = ModelConfig { kind, layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
+            let params = ParamSet::init_glorot(&cfg, &mut Rng::new(5 + kind.code() as u64));
+            let mut ws = ModelWorkspace::with_precision(&cfg, batch.n_pad, Precision::Bf16);
+            let mut out = TrainOut::default();
+            super::super::train_step_into(&cfg, &params, &batch, &csr, emask, &mut ws, &mut out);
+            for (ti, gt) in out.grads.iter().enumerate() {
+                for (ei, &v) in gt.iter().enumerate() {
+                    assert_eq!(
+                        v.to_bits(),
+                        crate::util::half::bf16_round(v).to_bits(),
+                        "{kind:?} grad {ti}[{ei}] not bf16-valued"
+                    );
+                }
+            }
+            for threads in [1usize, 8] {
+                let pool = rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+                let mut ws_t = ModelWorkspace::with_precision(&cfg, batch.n_pad, Precision::Bf16);
+                let mut out_t = TrainOut::default();
+                pool.install(|| {
+                    super::super::train_step_into(
+                        &cfg, &params, &batch, &csr, emask, &mut ws_t, &mut out_t,
+                    )
+                });
+                assert_eq!(out_t.loss_sum.to_bits(), out.loss_sum.to_bits(), "{kind:?}");
+                for (a, b) in out_t.grads.iter().zip(out.grads.iter()) {
+                    let ab: Vec<u32> = a.iter().map(|x| x.to_bits()).collect();
+                    let bb: Vec<u32> = b.iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(ab, bb, "{kind:?}: grads differ at {threads} threads");
+                }
+            }
+        }
+    }
+
+    /// Central finite differences through the bf16 loss at loosened
+    /// tolerance, for every ModelKind. The probe step is chosen large
+    /// enough to dominate the bf16 rounding staircase.
+    #[test]
+    fn bf16_backward_matches_finite_differences_loosely() {
+        let mut rng = Rng::new(31);
+        let g = crate::graph::generators::barabasi_albert(100, 3, &mut rng);
+        let comm: Vec<u32> = (0..100).map(|i| (i % 3) as u32).collect();
+        let nd = synthesize(&comm, 3, &FeatureParams { dim: 6, ..Default::default() }, &mut rng);
+        let vc = VertexCut::create(&g, 2, &RandomVertexCut, &mut rng);
+        let w = dar_weights(&g, &vc, Reweighting::Dar);
+        let batch = tensorize_partition(&vc.parts[0], &nd, &w[0], 128, 1024).unwrap();
+        let csr = EdgeCsr::from_batch(&batch);
+        let emask = batch.emask().as_f32().to_vec();
+        let dar = batch.tensors[4].as_f32().to_vec();
+        let labels = batch.tensors[5].as_i32().to_vec();
+        let tmask = batch.tensors[6].as_f32().to_vec();
+        let n = batch.n_pad;
+        for kind in ModelKind::ALL {
+            let cfg = ModelConfig { kind, layers: 2, feat_dim: 6, hidden: 8, classes: 3 };
+            let mut params = ParamSet::init_glorot(&cfg, &mut Rng::new(40 + kind.code() as u64));
+            let mut ws = ModelWorkspace::with_precision(&cfg, n, Precision::Bf16);
+            let mut out = TrainOut::default();
+            super::super::train_step_into(&cfg, &params, &batch, &csr, &emask, &mut ws, &mut out);
+            let grads = out.grads.clone();
+            let mut ws2 = ModelWorkspace::with_precision(&cfg, n, Precision::Bf16);
+            let mut loss_of = |p: &ParamSet, ws: &mut ModelWorkspace| -> f64 {
+                bf16_from_f32_slice(batch.tensors[0].as_f32(), &mut ws.feat_h);
+                for (pd, hp) in p.data.iter().zip(ws.params_h.iter_mut()) {
+                    bf16_from_f32_slice(pd, hp);
+                }
+                forward_bf16(&cfg, &emask, &csr, n, ws);
+                sage::loss_grad_into(&cfg, &dar, &labels, &tmask, n, ws).0
+            };
+            let eps = 5e-2f32;
+            let mut checked = 0usize;
+            for pi in 0..params.data.len() {
+                let len = params.data[pi].len();
+                let step = (len / 10).max(1);
+                for ei in (0..len).step_by(step) {
+                    let orig = params.data[pi][ei];
+                    params.data[pi][ei] = orig + eps;
+                    let lp = loss_of(&params, &mut ws2);
+                    params.data[pi][ei] = orig - eps;
+                    let lm = loss_of(&params, &mut ws2);
+                    params.data[pi][ei] = orig;
+                    let numeric = (lp - lm) / (2.0 * eps as f64);
+                    let analytic = grads[pi][ei] as f64;
+                    checked += 1;
+                    assert!(
+                        (analytic - numeric).abs() <= 0.25 * numeric.abs().max(1.0) + 0.1,
+                        "{kind:?} param {pi} elem {ei}: analytic {analytic} vs numeric {numeric}"
+                    );
+                }
+            }
+            assert!(checked > 10, "{kind:?}: probe coverage too small: {checked}");
+        }
+    }
+}

@@ -31,7 +31,7 @@ use rayon::prelude::*;
 
 /// Self-loop-augmented in-weight `ĉ_v = 1 + Σ_{e→v} w_e` per node
 /// (ascending edge-id accumulation; always ≥ 1, so no epsilon clamp).
-fn compute_denoms_hat(csr: &EdgeCsr, emask: &[f32], denom: &mut [f32]) {
+pub(crate) fn compute_denoms_hat(csr: &EdgeCsr, emask: &[f32], denom: &mut [f32]) {
     denom.par_iter_mut().enumerate().for_each(|(d, den)| {
         let lo = csr.in_off[d] as usize;
         let hi = csr.in_off[d + 1] as usize;
@@ -49,7 +49,7 @@ fn compute_denoms_hat(csr: &EdgeCsr, emask: &[f32], denom: &mut [f32]) {
 
 /// Symmetric-normalized aggregation
 /// `out[d] = Σ_{e→d} w_e / √(ĉ_s ĉ_d) · h[s]` into a caller-owned buffer.
-fn aggregate_sym_into(
+pub(crate) fn aggregate_sym_into(
     csr: &EdgeCsr,
     emask: &[f32],
     h: &[f32],
@@ -80,7 +80,7 @@ fn aggregate_sym_into(
 /// Backward of [`aggregate_sym_into`] w.r.t. `h`:
 /// `out[s] = Σ_{e: src_e = s} w_e / √(ĉ_s ĉ_d) · dcomb[d]` (denominators
 /// constant), same ascending-edge-id per-element order.
-fn scatter_sym_into(
+pub(crate) fn scatter_sym_into(
     csr: &EdgeCsr,
     emask: &[f32],
     denom: &[f32],

@@ -28,7 +28,7 @@ use rayon::prelude::*;
 
 /// Weighted sum aggregation `out[d] = Σ_{e→d} w_e · h[s]` into a
 /// caller-owned buffer (no normalization — GIN's injective aggregator).
-fn aggregate_sum_into(csr: &EdgeCsr, emask: &[f32], h: &[f32], out: &mut [f32], d_in: usize) {
+pub(crate) fn aggregate_sum_into(csr: &EdgeCsr, emask: &[f32], h: &[f32], out: &mut [f32], d_in: usize) {
     out.par_chunks_mut(d_in).enumerate().for_each(|(d, row)| {
         row.fill(0.0);
         let lo = csr.in_off[d] as usize;
@@ -49,7 +49,7 @@ fn aggregate_sum_into(csr: &EdgeCsr, emask: &[f32], h: &[f32], out: &mut [f32], 
 
 /// Backward of [`aggregate_sum_into`] w.r.t. `h`:
 /// `out[s] = Σ_{e: src_e = s} w_e · dcomb[d]`.
-fn scatter_sum_into(csr: &EdgeCsr, emask: &[f32], dcomb: &[f32], out: &mut [f32], d_in: usize) {
+pub(crate) fn scatter_sum_into(csr: &EdgeCsr, emask: &[f32], dcomb: &[f32], out: &mut [f32], d_in: usize) {
     out.par_chunks_mut(d_in).enumerate().for_each(|(s, row)| {
         row.fill(0.0);
         let lo = csr.out_off[s] as usize;

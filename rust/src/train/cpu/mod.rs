@@ -26,6 +26,7 @@
 //! contract and `tests/train_native.rs` / `tests/alloc_steady.rs` for the
 //! end-to-end proofs.
 
+pub mod bf16;
 pub mod gcn;
 pub mod gemm;
 pub mod gin;
@@ -37,7 +38,7 @@ use super::tensorize::{EvalBatch, TrainBatch};
 use super::workspace::{ensure_grad_shapes, ModelWorkspace};
 use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, Tensor, TrainOut};
 use crate::train::bucket::pad_explicit;
-use crate::train::model::ModelKind;
+use crate::train::model::{ModelKind, Precision};
 use crate::train::reference::argmax;
 use crate::util::rng::Rng;
 use anyhow::Result;
@@ -70,13 +71,24 @@ pub struct CpuEval {
     scratch: Mutex<ModelWorkspace>,
 }
 
-/// The native backend (stateless beyond what each worker carries).
+/// The native backend (stateless beyond what each worker carries and the
+/// precision tier new worker workspaces are allocated at).
 #[derive(Default)]
-pub struct CpuBackend;
+pub struct CpuBackend {
+    /// Worker compute precision: `F32` (bitwise tier, the default) or
+    /// `Bf16` (bf16-storage / f32-accumulate tier). Eval workspaces are
+    /// always f32 — scoring runs on the coordinator's master weights.
+    precision: Precision,
+}
 
 impl CpuBackend {
     pub fn new() -> CpuBackend {
-        CpuBackend
+        CpuBackend { precision: Precision::F32 }
+    }
+
+    /// A backend whose train workers run at the given precision tier.
+    pub fn with_precision(precision: Precision) -> CpuBackend {
+        CpuBackend { precision }
     }
 }
 
@@ -111,6 +123,13 @@ pub fn train_step_into_timed(
     ws: &mut ModelWorkspace,
     out: &mut TrainOut,
 ) -> (f64, f64) {
+    // The precision tier is a property of the workspace the worker was
+    // prepared with, so the dispatch needs no signature change: a bf16
+    // arena routes to the bf16-storage / f32-accumulate step, anything
+    // else takes the bitwise f32 path below, byte for byte as before.
+    if ws.precision == Precision::Bf16 {
+        return bf16::train_step_bf16_timed(model, params, batch, csr, emask, ws, out);
+    }
     let n = batch.n_pad;
     let feat = batch.tensors[0].as_f32();
     let dar = batch.tensors[4].as_f32();
@@ -249,7 +268,7 @@ impl Backend for CpuBackend {
             None => Vec::new(),
             Some((k, ratio)) => MaskBank::generate(&batch, k, ratio, rng).masks,
         };
-        let scratch = Mutex::new(ModelWorkspace::new(model, batch.n_pad));
+        let scratch = Mutex::new(ModelWorkspace::with_precision(model, batch.n_pad, self.precision));
         Ok(CpuWorker { batch, model: *model, csr, masks, scratch })
     }
 

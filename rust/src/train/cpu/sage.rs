@@ -164,7 +164,7 @@ fn compute_denoms(csr: &EdgeCsr, emask: &[f32], denom: &mut [f32]) {
 /// caller-owned buffers, column-blocked when `msg` outgrows the cache.
 /// Every output element accumulates in ascending edge-id order and divides
 /// once — bit-identical to [`aggregate_reference`] for any blocking.
-fn aggregate_into(
+pub(crate) fn aggregate_into(
     csr: &EdgeCsr,
     emask: &[f32],
     msg: &[f32],
@@ -230,7 +230,7 @@ fn aggregate_into(
 /// `dmsg[s] = Σ_{e: src_e = s} (w_e / denom_{dst_e}) · dagg[dst_e]`,
 /// column-blocked under the same gate, same ascending-edge-id per-element
 /// order as [`scatter_grad_reference`].
-fn scatter_grad_into(
+pub(crate) fn scatter_grad_into(
     csr: &EdgeCsr,
     emask: &[f32],
     denom: &[f32],

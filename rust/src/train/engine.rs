@@ -34,7 +34,7 @@ use super::tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_part
 use crate::graph::Dataset;
 use crate::partition::{dar_weights, Reweighting, VertexCut};
 use crate::runtime::{ArtifactKind, ModelConfig, ParamSet, TrainOut};
-use crate::train::model::ModelKind;
+use crate::train::model::{ModelKind, Precision};
 use crate::train::cpu::CpuBackend;
 use crate::util::rng::Rng;
 use crate::util::timer::PhaseTimer;
@@ -203,6 +203,13 @@ impl TrainEngine<CpuBackend> {
     /// (`cofree train --model sage|gcn|gin`).
     pub fn native_model(kind: ModelKind) -> TrainEngine<CpuBackend> {
         TrainEngine { backend: CpuBackend::new(), kind }
+    }
+
+    /// The native CPU engine at an explicit precision tier
+    /// (`cofree train --precision f32|bf16`). Master weights, the
+    /// optimizer and eval stay f32; only worker step compute drops.
+    pub fn native_model_prec(kind: ModelKind, precision: Precision) -> TrainEngine<CpuBackend> {
+        TrainEngine { backend: CpuBackend::with_precision(precision), kind }
     }
 }
 

@@ -39,7 +39,7 @@ pub use engine::{
 #[cfg(feature = "xla")]
 pub use engine::{XlaBackend, XlaEngine};
 pub use metrics::{EpochStats, History};
-pub use model::{GnnModel, ModelKind};
+pub use model::{GnnModel, ModelKind, Precision};
 pub use optimizer::{Adam, Optimizer, OptimizerState, Sgd};
 pub use tensorize::{tensorize_full_eval, tensorize_full_train, tensorize_partition, EvalBatch, TrainBatch};
 pub use workspace::ModelWorkspace;

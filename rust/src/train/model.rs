@@ -102,6 +102,60 @@ impl ModelKind {
     }
 }
 
+/// Compute/storage precision tier of the training step.
+///
+/// `F32` is the default and keeps the repo's bitwise-parity contract:
+/// every kernel, trajectory and wire byte is bit-identical to the
+/// reference oracles. `Bf16` trades mantissa bits for bandwidth —
+/// activations, staged parameters and packed panels are stored as bf16
+/// (upper 16 bits of f32, round-to-nearest-even) while every dot-chain
+/// accumulates in f32, so its contract is an error envelope against the
+/// f32 path, not bit equality. Master weights, the optimizer state, eval
+/// and checkpoints stay f32 in both tiers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Full f32 storage and accumulation (bitwise-parity tier).
+    #[default]
+    F32,
+    /// bf16 storage, f32 accumulation (error-bounded tier).
+    Bf16,
+}
+
+impl Precision {
+    /// Parse a CLI/config name (`f32|bf16`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "bf16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// Stable serialization tag (wire `Config` frame).
+    pub fn code(&self) -> u8 {
+        match self {
+            Precision::F32 => 0,
+            Precision::Bf16 => 1,
+        }
+    }
+
+    /// Inverse of [`Precision::code`], with a found-vs-expected error.
+    pub fn from_code(code: u8) -> Result<Precision> {
+        match code {
+            0 => Ok(Precision::F32),
+            1 => Ok(Precision::Bf16),
+            other => bail!("unknown precision tag: expected 0 (f32) or 1 (bf16), found {other}"),
+        }
+    }
+}
+
 /// One named parameter tensor of a model's flat parameter list.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ParamSpec {

@@ -28,7 +28,7 @@
 //! `&self` rayon loop.
 
 use crate::runtime::{ModelConfig, TrainOut};
-use crate::train::model::GnnModel;
+use crate::train::model::{GnnModel, Precision};
 
 /// All per-step temporaries of one native train step for one padded batch
 /// of `n` rows, preallocated at the exact sizes the model's layer recipe
@@ -74,25 +74,112 @@ pub struct ModelWorkspace {
     pub dmsg: Vec<f32>,
     /// Scratch for the second addend of the input gradient.
     pub dh_msg: Vec<f32>,
+    /// Precision tier this arena was sized for. `F32` keeps exactly the
+    /// historical layout (every `*_h` buffer below is empty); `Bf16`
+    /// stores activations at half width and adds the staging buffers.
+    pub precision: Precision,
+    /// bf16 layer outputs for layers `0..L-1`. The LAST layer's output
+    /// (the logits) always stays in `outs` at f32 so the shared
+    /// DAR-weighted loss kernel is identical across tiers.
+    pub outs_h: Vec<Vec<u16>>,
+    /// bf16 hidden activations (Sage messages, GIN MLP hidden rows).
+    pub msgs_h: Vec<Vec<u16>>,
+    /// bf16 aggregated neighbor values (Sage).
+    pub aggs_h: Vec<Vec<u16>>,
+    /// bf16 combined pre-GEMM inputs (GCN/GIN).
+    pub combs_h: Vec<Vec<u16>>,
+    /// bf16 copy of the input features, re-rounded each step (rounding is
+    /// idempotent, so restaging an already-rounded batch is a no-op).
+    pub feat_h: Vec<u16>,
+    /// bf16-staged parameter tensors, refreshed from the f32 masters at
+    /// the top of every step. Staging through storage bits is what makes
+    /// the bf16 tier transport-invariant: a master that arrived over the
+    /// bf16 wire codec (already rounded) stages to identical bits.
+    pub params_h: Vec<Vec<u16>>,
+    /// f32 staging block (`[n, max(feat_dim, hidden, classes)]`) where
+    /// GEMM/aggregation chains accumulate before rounding into a `*_h`
+    /// buffer. Empty in the f32 tier.
+    pub stage: Vec<f32>,
+    /// Second f32 staging block, same size as `stage`: holds the widened
+    /// input activation tile while `stage` holds the output tile, so one
+    /// layer's GEMM chain never aliases. Empty in the f32 tier.
+    pub stage_in: Vec<f32>,
+    /// f32 scratch for one widened parameter tensor (sized to the largest
+    /// tensor) — the packed GEMM panels consume f32 operands, so staged
+    /// bf16 weights widen through here. Empty in the f32 tier.
+    pub pbuf_a: Vec<f32>,
+    /// Second widened-parameter scratch (bias alongside weight, or two
+    /// weight tensors live at once in a backward step).
+    pub pbuf_b: Vec<f32>,
 }
 
 impl ModelWorkspace {
     /// Allocate every buffer the `cfg` model's layer recipe needs over `n`
     /// padded rows.
     pub fn new(cfg: &ModelConfig, n: usize) -> ModelWorkspace {
+        ModelWorkspace::with_precision(cfg, n, Precision::F32)
+    }
+
+    /// Allocate the arena for an explicit precision tier.
+    ///
+    /// `F32` produces exactly the layout [`ModelWorkspace::new`] always
+    /// produced (all bf16 buffers empty). `Bf16` allocates the per-layer
+    /// activation buffers at half width (u16 storage bits) plus the f32
+    /// staging block and the staged-parameter tensors; only the last
+    /// layer's logits, the denominators and the backward scratch stay at
+    /// full f32 width.
+    pub fn with_precision(cfg: &ModelConfig, n: usize, precision: Precision) -> ModelWorkspace {
         let model = GnnModel::new(cfg);
         let plans = model.layer_plans();
+        let half = precision == Precision::Bf16;
+        let last = plans.len() - 1;
         let mut outs = Vec::with_capacity(plans.len());
         let mut msgs = Vec::with_capacity(plans.len());
         let mut aggs = Vec::with_capacity(plans.len());
         let mut combs = Vec::with_capacity(plans.len());
         let mut denoms = Vec::with_capacity(plans.len());
-        for p in &plans {
-            outs.push(vec![0f32; n * p.out_w]);
-            msgs.push(vec![0f32; n * p.msg_w]);
-            aggs.push(vec![0f32; n * p.agg_w]);
-            combs.push(vec![0f32; n * p.comb_w]);
+        let mut outs_h = Vec::new();
+        let mut msgs_h = Vec::new();
+        let mut aggs_h = Vec::new();
+        let mut combs_h = Vec::new();
+        for (l, p) in plans.iter().enumerate() {
+            if half {
+                // Logits stay f32 (shared loss kernel); everything else
+                // moves to bf16 storage.
+                outs.push(vec![0f32; if l == last { n * p.out_w } else { 0 }]);
+                msgs.push(Vec::new());
+                aggs.push(Vec::new());
+                combs.push(Vec::new());
+                outs_h.push(vec![0u16; if l == last { 0 } else { n * p.out_w }]);
+                msgs_h.push(vec![0u16; n * p.msg_w]);
+                aggs_h.push(vec![0u16; n * p.agg_w]);
+                combs_h.push(vec![0u16; n * p.comb_w]);
+            } else {
+                outs.push(vec![0f32; n * p.out_w]);
+                msgs.push(vec![0f32; n * p.msg_w]);
+                aggs.push(vec![0f32; n * p.agg_w]);
+                combs.push(vec![0f32; n * p.comb_w]);
+            }
             denoms.push(vec![0f32; if p.needs_denom { n } else { 0 }]);
+        }
+        let mut params_h = Vec::new();
+        let mut feat_h = Vec::new();
+        let mut stage = Vec::new();
+        let mut stage_in = Vec::new();
+        let mut pbuf_a = Vec::new();
+        let mut pbuf_b = Vec::new();
+        if half {
+            let mut max_param = 0usize;
+            model.for_each_param_len(|len| {
+                params_h.push(vec![0u16; len]);
+                max_param = max_param.max(len);
+            });
+            feat_h = vec![0u16; n * cfg.feat_dim];
+            let w = cfg.feat_dim.max(cfg.hidden).max(cfg.classes);
+            stage = vec![0f32; n * w];
+            stage_in = vec![0f32; n * w];
+            pbuf_a = vec![0f32; max_param];
+            pbuf_b = vec![0f32; max_param];
         }
         let sw = model.scratch_widths();
         ModelWorkspace {
@@ -108,6 +195,17 @@ impl ModelWorkspace {
             dagg: vec![0f32; n * sw.dagg],
             dmsg: vec![0f32; n * sw.dmsg],
             dh_msg: vec![0f32; n * sw.dh_msg],
+            precision,
+            outs_h,
+            msgs_h,
+            aggs_h,
+            combs_h,
+            feat_h,
+            params_h,
+            stage,
+            stage_in,
+            pbuf_a,
+            pbuf_b,
         }
     }
 
@@ -122,6 +220,7 @@ impl ModelWorkspace {
     /// ledger records per rank.
     pub fn bytes(&self) -> u64 {
         let f32s = |vs: &[Vec<f32>]| vs.iter().map(|v| v.len()).sum::<usize>();
+        let u16s = |vs: &[Vec<u16>]| vs.iter().map(|v| v.len()).sum::<usize>();
         let flat = f32s(&self.outs)
             + f32s(&self.msgs)
             + f32s(&self.aggs)
@@ -131,8 +230,19 @@ impl ModelWorkspace {
             + self.dbuf_b.len()
             + self.dagg.len()
             + self.dmsg.len()
-            + self.dh_msg.len();
+            + self.dh_msg.len()
+            + self.stage.len()
+            + self.stage_in.len()
+            + self.pbuf_a.len()
+            + self.pbuf_b.len();
+        let halves = u16s(&self.outs_h)
+            + u16s(&self.msgs_h)
+            + u16s(&self.aggs_h)
+            + u16s(&self.combs_h)
+            + u16s(&self.params_h)
+            + self.feat_h.len();
         (flat * std::mem::size_of::<f32>()
+            + halves * std::mem::size_of::<u16>()
             + self.per_node.len() * std::mem::size_of::<(f64, f64, f64)>()) as u64
     }
 }
@@ -209,6 +319,64 @@ mod tests {
         assert!(ws.denoms.iter().all(|d| d.is_empty()));
         // dcomb scratch must fit the widest layer input (feat_dim here).
         assert_eq!(ws.dagg.len(), 16 * 12);
+    }
+
+    #[test]
+    fn bf16_workspace_halves_activation_storage() {
+        use crate::train::model::Precision;
+        for kind in ModelKind::ALL {
+            let cfg = ModelConfig { kind, layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
+            let f32_ws = ModelWorkspace::with_precision(&cfg, 32, Precision::F32);
+            let h_ws = ModelWorkspace::with_precision(&cfg, 32, Precision::Bf16);
+            // Layer 0 output moves to u16 at the same element count; the
+            // last layer's logits stay f32.
+            assert_eq!(h_ws.outs_h[0].len(), f32_ws.outs[0].len());
+            assert!(h_ws.outs[0].is_empty());
+            assert_eq!(h_ws.outs.last().unwrap().len(), f32_ws.outs.last().unwrap().len());
+            assert!(h_ws.outs_h.last().unwrap().is_empty());
+            // Features, staged params and the staging block exist only in
+            // the bf16 tier.
+            assert_eq!(h_ws.feat_h.len(), 32 * 6);
+            assert_eq!(h_ws.stage.len(), 32 * 8);
+            assert_eq!(h_ws.params_h.len(), cfg.param_shapes().len());
+            assert!(f32_ws.feat_h.is_empty() && f32_ws.stage.is_empty());
+            // Backward scratch is f32 in both tiers.
+            assert_eq!(h_ws.dbuf_a.len(), f32_ws.dbuf_a.len());
+            assert_eq!(h_ws.dagg.len(), f32_ws.dagg.len());
+            // The persistent per-layer activation storage (what scales
+            // with depth and row count) is at most half the f32 tier's —
+            // the fixed-size staging tiles are accounted separately.
+            let act_f32 = |ws: &ModelWorkspace| {
+                4 * (ws.outs.iter().chain(&ws.msgs).chain(&ws.aggs).chain(&ws.combs))
+                    .map(|v| v.len())
+                    .sum::<usize>()
+            };
+            let act_h = |ws: &ModelWorkspace| {
+                2 * (ws.outs_h.iter().chain(&ws.msgs_h).chain(&ws.aggs_h).chain(&ws.combs_h))
+                    .map(|v| v.len())
+                    .sum::<usize>()
+            };
+            let full = act_f32(&f32_ws);
+            let half_tier = act_f32(&h_ws) + act_h(&h_ws);
+            // Exactly: every activation element drops to 2 bytes except
+            // the f32 logits row block.
+            let expect = full / 2 + 2 * h_ws.outs.last().unwrap().len();
+            assert_eq!(
+                half_tier, expect,
+                "{kind:?}: bf16 activation storage {half_tier}, expected {expect} (f32 {full})"
+            );
+        }
+    }
+
+    #[test]
+    fn f32_workspace_layout_is_unchanged_by_the_precision_knob() {
+        use crate::train::model::Precision;
+        let cfg =
+            ModelConfig { kind: ModelKind::Sage, layers: 3, feat_dim: 6, hidden: 8, classes: 4 };
+        let ws = ModelWorkspace::with_precision(&cfg, 32, Precision::F32);
+        assert_eq!(ws.precision, Precision::F32);
+        assert!(ws.outs_h.is_empty() && ws.params_h.is_empty() && ws.stage.is_empty());
+        assert_eq!(ws.bytes(), ModelWorkspace::new(&cfg, 32).bytes());
     }
 
     #[test]

@@ -1,0 +1,331 @@
+//! Dependency-free bf16 ⇄ f32 conversion and int8 per-tensor-scale
+//! quantization — the storage formats of the mixed-precision tier.
+//!
+//! bf16 (bfloat16) is the upper 16 bits of an IEEE-754 f32: same 8-bit
+//! exponent, 7-bit mantissa. That makes conversion a pure bit operation —
+//! no lookup tables, no `half` crate — and means every f32 exponent
+//! (including subnormals and ±Inf) survives the round trip; only mantissa
+//! precision is lost. Rounding is **round-to-nearest-even** (RNE), the
+//! same mode hardware bf16 units use, implemented with the classic
+//! carry-bias trick:
+//!
+//! ```text
+//! bits + 0x7FFF + ((bits >> 16) & 1)   then   >> 16
+//! ```
+//!
+//! Adding `0x7FFF` rounds up exactly when the discarded low half is
+//! `> 0x8000`; the extra `(bits >> 16) & 1` breaks the `== 0x8000` tie
+//! toward the value whose kept mantissa LSB is already even.
+//!
+//! NaNs are passed through **quieted** (`| 0x0040`): truncating a NaN
+//! payload can otherwise yield all-zero mantissa bits, i.e. Inf, and the
+//! RNE bias could overflow a NaN into Inf as well. Inf and signed zero
+//! round trip exactly.
+//!
+//! The int8 codec is per-tensor symmetric: `scale = max|x| / 127`,
+//! `q = round(x / scale)` clamped to `[-127, 127]`. A zero tensor encodes
+//! with `scale = 0` and decodes to exact zeros. int8 is a *wire* format
+//! only (protocol v6 gradient frames) — compute never runs on int8.
+//!
+//! Everything here is scalar and branch-light on purpose: the converters
+//! run once per tensor per step (staging), not inside dot-product loops,
+//! and the simple form is what the error-bound property tests below pin
+//! down.
+
+/// Round an `f32` to bf16 storage bits (round-to-nearest-even).
+#[inline(always)]
+pub fn bf16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // Keep it NaN: truncate, then force a mantissa bit (quiet bit).
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let rounded = bits.wrapping_add(0x0000_7FFF + ((bits >> 16) & 1));
+    (rounded >> 16) as u16
+}
+
+/// Widen bf16 storage bits back to `f32` (exact — bf16 ⊂ f32).
+#[inline(always)]
+pub fn f32_from_bf16(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// `f32 -> bf16 -> f32` in one step: the value the bf16 tier actually
+/// computes with. Idempotent: `bf16_round(bf16_round(x)) == bf16_round(x)`
+/// bitwise — the property the wire-parity tests lean on (a bf16-rounded
+/// master parameter survives a second rounding unchanged).
+#[inline(always)]
+pub fn bf16_round(x: f32) -> f32 {
+    f32_from_bf16(bf16_from_f32(x))
+}
+
+/// Round a whole slice into bf16 storage. `dst.len() == src.len()`.
+pub fn bf16_from_f32_slice(src: &[f32], dst: &mut [u16]) {
+    assert_eq!(src.len(), dst.len(), "bf16 encode length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = bf16_from_f32(s);
+    }
+}
+
+/// Widen a whole bf16 slice back to f32. `dst.len() == src.len()`.
+pub fn f32_from_bf16_slice(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "bf16 decode length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_from_bf16(s);
+    }
+}
+
+/// Round every element of a slice in place to its bf16-representable
+/// value (f32 container, bf16 value set). Used to make bf16-tier
+/// gradients exactly transportable over the bf16 wire codec.
+pub fn bf16_round_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = bf16_round(*x);
+    }
+}
+
+/// Per-tensor symmetric int8 scale: `max|x| / 127`, or `0.0` for an
+/// all-zero (or empty) tensor. Non-finite inputs yield a non-finite
+/// scale, which the decoder surfaces as a structured error — corrupt
+/// frames must never quantize silently.
+pub fn i8_scale(xs: &[f32]) -> f32 {
+    let mut max_abs = 0.0f32;
+    for &x in xs {
+        let a = x.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+    }
+    max_abs / 127.0
+}
+
+/// Quantize `x` against a per-tensor scale (round-half-away-from-zero,
+/// clamped to ±127). A scale of 0 maps everything to 0.
+#[inline(always)]
+pub fn i8_quantize(x: f32, scale: f32) -> i8 {
+    if scale == 0.0 {
+        return 0;
+    }
+    let q = (x / scale).round();
+    q.clamp(-127.0, 127.0) as i8
+}
+
+/// Dequantize one int8 code against its per-tensor scale.
+#[inline(always)]
+pub fn i8_dequantize(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// Quantize a slice; returns the scale used. `dst.len() == src.len()`.
+pub fn i8_quantize_slice(src: &[f32], dst: &mut [i8]) -> f32 {
+    assert_eq!(src.len(), dst.len(), "int8 encode length mismatch");
+    let scale = i8_scale(src);
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = i8_quantize(s, scale);
+    }
+    scale
+}
+
+/// Dequantize a slice against its per-tensor scale.
+pub fn i8_dequantize_slice(src: &[i8], scale: f32, dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "int8 decode length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = i8_dequantize(s, scale);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_values_round_trip_bitwise() {
+        // Everything with ≤ 7 mantissa bits is exactly representable.
+        for &x in &[
+            0.0f32, -0.0, 1.0, -1.0, 2.0, 0.5, 0.25, -0.375, 3.0, 100.0, -192.0, 1.5e-38,
+            f32::INFINITY, f32::NEG_INFINITY,
+        ] {
+            let rt = bf16_round(x);
+            assert_eq!(rt.to_bits(), x.to_bits(), "{x} should be exactly representable");
+        }
+    }
+
+    #[test]
+    fn rne_breaks_ties_to_even() {
+        // 1.0 has bf16 bits 0x3F80. The next representable value is
+        // 0x3F81 = 1 + 2^-7. The exact midpoint 1 + 2^-8 must round DOWN
+        // to 1.0 (even mantissa), while the midpoint between 0x3F81 and
+        // 0x3F82 must round UP to 0x3F82 (even again).
+        let mid_lo = f32::from_bits(0x3F80_8000); // 1 + 2^-8: tie
+        assert_eq!(bf16_from_f32(mid_lo), 0x3F80, "tie must round to even (down)");
+        let mid_hi = f32::from_bits(0x3F81_8000); // tie above an odd mantissa
+        assert_eq!(bf16_from_f32(mid_hi), 0x3F82, "tie must round to even (up)");
+        // Just past the midpoint always rounds up.
+        let above = f32::from_bits(0x3F80_8001);
+        assert_eq!(bf16_from_f32(above), 0x3F81);
+        // Just below always rounds down.
+        let below = f32::from_bits(0x3F80_7FFF);
+        assert_eq!(bf16_from_f32(below), 0x3F80);
+    }
+
+    #[test]
+    fn nan_and_inf_pass_through() {
+        assert!(f32_from_bf16(bf16_from_f32(f32::NAN)).is_nan());
+        // A NaN whose payload lives only in the low mantissa bits must
+        // NOT decay to Inf under truncation.
+        let sneaky = f32::from_bits(0x7F80_0001);
+        assert!(sneaky.is_nan());
+        assert!(f32_from_bf16(bf16_from_f32(sneaky)).is_nan());
+        let neg = f32::from_bits(0xFF80_00FF);
+        assert!(neg.is_nan());
+        let back = f32_from_bf16(bf16_from_f32(neg));
+        assert!(back.is_nan());
+        assert!(back.is_sign_negative());
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // Inf must not be produced by rounding a finite value up past
+        // f32::MAX's bf16 neighborhood — f32::MAX rounds to Inf is in
+        // fact correct RNE behaviour (the midpoint is beyond max bf16),
+        // but large in-range values must stay finite.
+        assert!(bf16_round(3.0e38).is_finite());
+    }
+
+    #[test]
+    fn subnormals_survive() {
+        // bf16 shares f32's exponent range, so f32 subnormals map onto
+        // bf16 subnormals, not to zero.
+        let sub = f32::from_bits(0x0040_0000); // large subnormal
+        let rt = bf16_round(sub);
+        assert!(rt > 0.0, "subnormal flushed to zero");
+        assert_eq!(rt.to_bits(), 0x0040_0000, "top-mantissa subnormal is exact");
+        assert_eq!(bf16_round(f32::from_bits(1)), 0.0, "tiniest subnormal rounds to 0");
+        assert!(bf16_round(-f32::from_bits(0x0040_0000)) < 0.0, "sign preserved");
+    }
+
+    #[test]
+    fn rounding_is_idempotent_and_error_bounded() {
+        let mut rng = Rng::new(0xB16);
+        for _ in 0..20_000 {
+            let x = (rng.f64() as f32 - 0.5) * 2.0e3;
+            let r = bf16_round(x);
+            assert_eq!(bf16_round(r).to_bits(), r.to_bits(), "bf16_round not idempotent");
+            // 7 explicit mantissa bits → relative error ≤ 2^-8 for
+            // normal values.
+            if x != 0.0 {
+                let rel = ((r - x) / x).abs();
+                assert!(rel <= 1.0 / 256.0 + 1e-7, "rel error {rel} at {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_error_is_monotone_in_magnitude() {
+        // Absolute rounding error scales with the exponent: for the same
+        // mantissa pattern, doubling the input doubles the error. Checked
+        // as: max error in [2^k, 2^{k+1}) never exceeds 2^{k-8}.
+        let mut rng = Rng::new(0x51CE);
+        for k in -4i32..12 {
+            let lo = (2.0f32).powi(k);
+            let mut max_err = 0.0f32;
+            for _ in 0..2_000 {
+                let x = lo * (1.0 + rng.f64() as f32);
+                max_err = max_err.max((bf16_round(x) - x).abs());
+            }
+            assert!(
+                max_err <= lo / 256.0 * (1.0 + 1e-6),
+                "bin 2^{k}: max err {max_err} exceeds ulp bound"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_converters_match_scalar() {
+        let mut rng = Rng::new(7);
+        let src: Vec<f32> =
+            (0..257).map(|_| (rng.f64() as f32 - 0.5) * 20.0).collect();
+        let mut enc = vec![0u16; src.len()];
+        bf16_from_f32_slice(&src, &mut enc);
+        let mut dec = vec![0f32; src.len()];
+        f32_from_bf16_slice(&enc, &mut dec);
+        for (i, (&x, &d)) in src.iter().zip(&dec).enumerate() {
+            assert_eq!(d.to_bits(), bf16_round(x).to_bits(), "index {i}");
+        }
+        let mut inplace = src.clone();
+        bf16_round_slice(&mut inplace);
+        assert_eq!(
+            inplace.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            dec.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn i8_round_trip_error_is_bounded_by_half_scale() {
+        let mut rng = Rng::new(0x18);
+        for t in 0..50 {
+            let len = 1 + t * 7;
+            let amp = (10.0f64).powi((t as i32 % 7) - 3) as f32;
+            let src: Vec<f32> =
+                (0..len).map(|_| (rng.f64() as f32 - 0.5) * amp).collect();
+            let mut q = vec![0i8; len];
+            let scale = i8_quantize_slice(&src, &mut q);
+            let mut back = vec![0f32; len];
+            i8_dequantize_slice(&q, scale, &mut back);
+            for (&x, &b) in src.iter().zip(&back) {
+                assert!(
+                    (x - b).abs() <= scale * 0.5 + 1e-12,
+                    "|{x} - {b}| > scale/2 = {}",
+                    scale * 0.5
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn i8_zero_tensor_and_extremes() {
+        let zeros = [0.0f32; 9];
+        let mut q = [0i8; 9];
+        let scale = i8_quantize_slice(&zeros, &mut q);
+        assert_eq!(scale, 0.0);
+        assert!(q.iter().all(|&v| v == 0));
+        let mut back = [1.0f32; 9];
+        i8_dequantize_slice(&q, scale, &mut back);
+        assert!(back.iter().all(|&v| v == 0.0));
+        // The max-magnitude element always maps to ±127 exactly.
+        let src = [-3.0f32, 1.5, 3.0, 0.0];
+        let mut q = [0i8; 4];
+        let scale = i8_quantize_slice(&src, &mut q);
+        assert_eq!(q[0], -127);
+        assert_eq!(q[2], 127);
+        assert_eq!(q[3], 0);
+        assert!((i8_dequantize(q[2], scale) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn i8_quantization_error_shrinks_with_tensor_range() {
+        // Monotone-error property: halving the dynamic range halves the
+        // worst-case round-trip error (scale is linear in max|x|).
+        let mut rng = Rng::new(0xA11);
+        let base: Vec<f32> =
+            (0..512).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect();
+        let mut prev_err = f32::INFINITY;
+        for shrink in 0..6 {
+            let factor = 0.5f32.powi(shrink);
+            let src: Vec<f32> = base.iter().map(|&x| x * factor).collect();
+            let mut q = vec![0i8; src.len()];
+            let scale = i8_quantize_slice(&src, &mut q);
+            let mut back = vec![0f32; src.len()];
+            i8_dequantize_slice(&q, scale, &mut back);
+            let max_err = src
+                .iter()
+                .zip(&back)
+                .map(|(&x, &b)| (x - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_err <= prev_err * 0.5 * (1.0 + 1e-5) + 1e-12,
+                "error not monotone: {max_err} after {prev_err}"
+            );
+            prev_err = max_err;
+        }
+    }
+}

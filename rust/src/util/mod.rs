@@ -2,6 +2,7 @@
 //! the shared binary codecs every on-disk/on-wire format is built from.
 
 pub mod binio;
+pub mod half;
 pub mod hash;
 pub mod json;
 pub mod logging;

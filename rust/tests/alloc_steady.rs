@@ -121,6 +121,55 @@ fn before_to_now(before: u64) -> u64 {
     alloc_count() - before
 }
 
+/// The fixed point holds at the bf16 storage tier too: the half-width
+/// persistent buffers and the f32 staging tiles are all arena-owned and
+/// shape-driven, so switching `Precision` must not reintroduce a single
+/// per-epoch allocation — for every `ModelKind`.
+#[test]
+fn steady_state_epoch_allocates_nothing_at_bf16_tier() {
+    use cofree_gnn::train::Precision;
+    let _guard = EPOCH_TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let pool = rayon::ThreadPoolBuilder::new().num_threads(1).build().unwrap();
+    pool.install(|| {
+        let ds = datasets::build("yelp-sim", 0.04, 7).unwrap();
+        let vc = VertexCut::create(
+            &ds.graph,
+            2,
+            algorithm("dbh").unwrap().as_ref(),
+            &mut Rng::new(11),
+        );
+        let run_with = |kind: ModelKind, epochs: usize| -> u64 {
+            let mut engine = TrainEngine::native_model_prec(kind, Precision::Bf16);
+            let mut run = engine
+                .prepare_partitions(&ds, &vc, Reweighting::Dar, Some((3, 0.4)), 11)
+                .unwrap();
+            let cfg = TrainConfig {
+                epochs,
+                eval_every: 0,
+                dropedge: Some((3, 0.4)),
+                seed: 11,
+                log_every: 0,
+                ..Default::default()
+            };
+            let before = alloc_count();
+            let (history, _params, _timer) = engine.train(&mut run, None, &cfg).unwrap();
+            assert_eq!(history.epochs.len(), epochs);
+            before_to_now(before)
+        };
+        for kind in ModelKind::ALL {
+            let _ = run_with(kind, 4);
+            let short = run_with(kind, 4);
+            let long = run_with(kind, 24);
+            assert_eq!(
+                short, long,
+                "{kind:?} @ bf16: 20 extra epochs performed {} extra heap allocations — \
+                 the steady-state epoch is supposed to perform zero (short run: {short})",
+                long.saturating_sub(short)
+            );
+        }
+    });
+}
+
 /// The same fixed point with the observability hot path LIVE: metrics
 /// registry handles registered and span tracing enabled (the
 /// `--trace-out` configuration). Counters and histograms are bare
@@ -217,6 +266,25 @@ fn train_step_into_is_allocation_free_after_warmup() {
             assert_eq!(
                 delta, 0,
                 "{kind:?}: 10 steady-state train steps allocated {delta} times"
+            );
+            // Same contract through the bf16 tier's dispatch: half-width
+            // persistent buffers plus f32 staging tiles, all preallocated.
+            let mut ws_h = ModelWorkspace::with_precision(
+                &model,
+                batch.n_pad,
+                cofree_gnn::train::Precision::Bf16,
+            );
+            for _ in 0..3 {
+                cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws_h, &mut out);
+            }
+            let before = alloc_count();
+            for _ in 0..10 {
+                cpu::train_step_into(&model, &params, &batch, &csr, emask, &mut ws_h, &mut out);
+            }
+            let delta = alloc_count() - before;
+            assert_eq!(
+                delta, 0,
+                "{kind:?} @ bf16: 10 steady-state train steps allocated {delta} times"
             );
         }
     });

@@ -16,6 +16,7 @@
 
 use cofree_gnn::dist::{
     self, shard_file_name, DistStats, HealthOptions, ProcOptions, Transport,
+    EXPECTED_F32_BYTES_PER_PARAM,
 };
 use cofree_gnn::graph::{datasets, Dataset};
 use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
@@ -248,7 +249,7 @@ fn heartbeats_do_not_perturb_trajectory_or_wire_bound() {
     assert!(stats.heartbeat_bytes_per_epoch() > 0.0);
     // Ping/Pong is 9 bytes of header + 8 of nonce each way per worker:
     // trivial next to the parameter traffic, and excluded from it.
-    let ideal = (8 * p * params_in.num_elements()) as f64;
+    let ideal = (EXPECTED_F32_BYTES_PER_PARAM * p * params_in.num_elements()) as f64;
     let per_epoch = stats.bytes_per_epoch();
     assert!(
         per_epoch < ideal * 1.25,

@@ -16,7 +16,7 @@ use cofree_gnn::graph::datasets;
 use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
 use cofree_gnn::runtime::{ModelConfig, ParamSet};
 use cofree_gnn::train::checkpoint::TrainCheckpoint;
-use cofree_gnn::train::model::ModelKind;
+use cofree_gnn::train::model::{ModelKind, Precision};
 use cofree_gnn::train::optimizer::OptimizerState;
 use cofree_gnn::util::binio::{Integrity, Verify};
 use cofree_gnn::util::hash::crc32c;
@@ -223,13 +223,20 @@ fn seeded_fuzz_never_panics_the_frame_decoder() {
     let mut corpus: Vec<Vec<u8>> = Vec::new();
     let model = ModelConfig { kind: ModelKind::Gcn, layers: 2, feat_dim: 6, hidden: 8, classes: 4 };
     let frames = [
-        proto::Frame::Hello { proto_version: proto::PROTO_VERSION, rank: 1, num_parts: 2 },
+        proto::Frame::Hello {
+            proto_version: proto::PROTO_VERSION,
+            rank: 1,
+            num_parts: 2,
+            codecs: proto::WireCodec::all_bits(),
+        },
         proto::Frame::Config {
             seed: 7,
             dropedge_k: 3,
             dropedge_ratio: 0.4,
             model,
             wire_digests: true,
+            precision: Precision::Bf16,
+            wire_codec: proto::WireCodec::I8,
         },
         proto::Frame::Meta { local_train_weight: 0.5, tmask_sum: 12.0, num_masks: 3 },
         proto::Frame::Step { pick: Some(1), params: vec![vec![1.0, -2.5], vec![0.0; 3]] },
@@ -242,6 +249,17 @@ fn seeded_fuzz_never_panics_the_frame_decoder() {
         let mut buf = Vec::new();
         proto::write_frame(&mut buf, f).unwrap();
         corpus.push(buf);
+    }
+    // The v6 quantized codec bodies (bf16 and int8, with and without the
+    // digest trailer) join the corpus: their length and scale fields are
+    // new attack surface.
+    let qparams = vec![vec![1.0f32, -2.5, 0.75], vec![0.5f32; 7]];
+    for codec in [proto::WireCodec::Bf16, proto::WireCodec::I8] {
+        for digests in [false, true] {
+            let mut buf = Vec::new();
+            proto::write_step(&mut buf, Some(0), &qparams, digests, codec).unwrap();
+            corpus.push(buf);
+        }
     }
     for tag in [
         proto::TAG_HELLO,
@@ -272,6 +290,75 @@ fn seeded_fuzz_never_panics_the_frame_decoder() {
                 res.is_ok(),
                 "corpus item {ci} round {round}: decoder PANICKED on {} mutated bytes",
                 mutant.len()
+            );
+        }
+    }
+}
+
+/// The same mutation engine pointed at the hot-loop quantized decoders:
+/// bit-flipped, truncated and spliced bf16/int8 `Step` and `StepResult`
+/// payloads must come back as `Ok` (plausible decode) or a structured
+/// `Err` — never a panic — even when the reused output buffers carry
+/// shapes from a previous (clean) decode. With the digest trailer on,
+/// every flipped mutant must be rejected.
+#[test]
+fn seeded_fuzz_never_panics_the_quantized_decoders() {
+    use cofree_gnn::runtime::TrainOut;
+    let params = vec![vec![1.0f32, -2.5, 0.75, 8.0], vec![0.25f32; 33]];
+    let out = TrainOut {
+        loss_sum: 1.5,
+        weight_sum: 4.0,
+        correct: 2.0,
+        grads: params.clone(),
+    };
+    let mut rng = Rng::new(0x0DEC0DE);
+    for codec in [proto::WireCodec::Bf16, proto::WireCodec::I8] {
+        let mut step_wire = Vec::new();
+        proto::write_step(&mut step_wire, Some(1), &params, false, codec).unwrap();
+        let step_payload = step_wire[9..].to_vec();
+        let mut sr_wire = Vec::new();
+        let mut scratch = Vec::new();
+        proto::write_step_result_buffered(
+            &mut sr_wire,
+            &out,
+            &proto::StepPhases::default(),
+            &mut scratch,
+            false,
+            codec,
+        )
+        .unwrap();
+        let sr_payload = sr_wire[9..].to_vec();
+
+        // Reused sinks, seeded with the clean shapes (the steady-state
+        // coordinator/worker situation a hostile frame lands in).
+        let mut psink: Vec<Vec<f32>> = Vec::new();
+        proto::decode_step_into(&step_payload, &mut psink, false, codec).unwrap();
+        let mut osink = TrainOut::default();
+        proto::decode_step_result_into(&sr_payload, &mut osink, false, codec).unwrap();
+
+        for round in 0..600 {
+            let mutant = mutate(&mut rng, &step_payload);
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                let _ = proto::decode_step_into(&mutant, &mut psink, false, codec);
+            }));
+            assert!(res.is_ok(), "{codec:?} Step round {round}: decoder PANICKED");
+            let mutant = mutate(&mut rng, &sr_payload);
+            let res = catch_unwind(AssertUnwindSafe(|| {
+                let _ = proto::decode_step_result_into(&mutant, &mut osink, false, codec);
+            }));
+            assert!(res.is_ok(), "{codec:?} StepResult round {round}: decoder PANICKED");
+        }
+
+        // Digested payloads: a single bit flip anywhere must be caught.
+        let mut step_wire = Vec::new();
+        proto::write_step(&mut step_wire, Some(1), &params, true, codec).unwrap();
+        let digested = step_wire[9..].to_vec();
+        for i in 0..digested.len() {
+            let mut bad = digested.clone();
+            bad[i] ^= 1u8 << (i % 8);
+            assert!(
+                proto::decode_step_into(&bad, &mut psink, true, codec).is_err(),
+                "{codec:?}: digested Step with bit flip at byte {i} decoded cleanly"
             );
         }
     }

@@ -9,7 +9,7 @@
 //! so these tests exercise shard I/O, the wire protocol, the handshake,
 //! and the rank-ordered gradient fold, not a mock.
 
-use cofree_gnn::dist::{self, DistStats, ProcOptions, Transport};
+use cofree_gnn::dist::{self, DistStats, ProcOptions, Transport, EXPECTED_F32_BYTES_PER_PARAM};
 use cofree_gnn::graph::{datasets, Dataset};
 use cofree_gnn::partition::{algorithm, dar_weights, Reweighting, VertexCut};
 use cofree_gnn::runtime::ParamSet;
@@ -138,7 +138,7 @@ fn two_process_training_matches_inproc_bitwise() {
     assert_eq!(stats.epochs_run, epochs);
     assert_eq!(stats.num_workers, p);
     assert!(stats.bytes_sent > 0 && stats.bytes_recv > 0);
-    let ideal = (8 * p * params_in.num_elements()) as f64;
+    let ideal = (EXPECTED_F32_BYTES_PER_PARAM * p * params_in.num_elements()) as f64;
     let per_epoch = stats.bytes_per_epoch();
     assert!(per_epoch >= ideal, "per-epoch bytes {per_epoch} below the {ideal} floor?");
     assert!(
@@ -353,4 +353,91 @@ fn gin_proc_training_matches_inproc_bitwise() {
     assert_trajectories_identical(&h_in, &h_proc);
     assert_eq!(params_in.data, params_proc.data, "gin final parameters diverged");
     assert_eq!(stats.num_workers, p);
+}
+
+/// The v6 wire-parity invariant, end to end: a fleet running the bf16
+/// storage tier with the bf16 wire codec (`--precision bf16
+/// --wire-compress bf16`) reproduces the single-process bf16 trajectory
+/// bit-for-bit. Workers stage parameters through bf16 at the top of every
+/// step and round every gradient to bf16 before it leaves, so the 2-byte
+/// codec is lossless for this tier — compression without a trajectory
+/// change. Runs with wire digests on, so the CRC trailer rides the
+/// compressed payload too.
+#[test]
+fn bf16_fleet_with_bf16_codec_matches_inproc_bf16_bitwise() {
+    use cofree_gnn::dist::proto::WireCodec;
+    use cofree_gnn::train::Precision;
+    let (p, seed, epochs) = (2usize, 31u64, 5usize);
+    let dropedge = Some((3usize, 0.4f64));
+
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let mut engine = TrainEngine::native_model_prec(ModelKind::Sage, Precision::Bf16);
+    let eval = engine.prepare_eval(&ds).unwrap();
+    let mut run = engine
+        .prepare_partitions(&ds, &vc, Reweighting::Dar, dropedge, seed)
+        .unwrap();
+    let cfg = cfg_for(epochs, seed, dropedge);
+    let (h_in, params_in, _) = engine.train(&mut run, Some(&eval), &cfg).unwrap();
+
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let dir = std::env::temp_dir()
+        .join(format!("cofree_dist_test_bf16_{}_{p}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dist::write_shards(&ds, &vc, &weights, seed, &dir).unwrap();
+    let opts = ProcOptions {
+        precision: Precision::Bf16,
+        wire_codec: WireCodec::Bf16,
+        wire_digests: true,
+        ..ProcOptions::new(worker_bin())
+    };
+    let (h_proc, ck, stats) = dist::train_over_shards(&ds, &dir, &cfg, &opts, None).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    assert_trajectories_identical(&h_in, &h_proc);
+    assert_eq!(params_in.data, ck.params.data, "bf16 fleet final parameters diverged");
+    // The compressed wire really was ~2x smaller than the f32 framing.
+    assert!(
+        stats.compression_ratio() >= 1.9,
+        "bf16 codec ratio {:.3} below 1.9x",
+        stats.compression_ratio()
+    );
+    assert!(stats.wire_compressed_bytes > 0 && stats.wire_raw_bytes > stats.wire_compressed_bytes);
+    // And the compressed traffic beats the uncompressed bound.
+    let f32_bound = (EXPECTED_F32_BYTES_PER_PARAM * p) as f64;
+    assert!(
+        stats.bytes_per_epoch_per_param() < f32_bound,
+        "compressed traffic {} did not beat the f32 bound {f32_bound}",
+        stats.bytes_per_epoch_per_param()
+    );
+}
+
+/// The int8 codec on the default f32 tier is lossy by design: the fleet
+/// must run to completion, produce finite parameters, and move ~4x fewer
+/// tensor bytes — but nobody promises bit parity, so none is asserted.
+#[test]
+fn int8_codec_fleet_trains_and_compresses() {
+    use cofree_gnn::dist::proto::WireCodec;
+    let (p, seed, epochs) = (2usize, 47u64, 4usize);
+    let ds = ds_small();
+    let vc = cut(&ds, p, seed);
+    let weights = dar_weights(&ds.graph, &vc, Reweighting::Dar);
+    let dir = std::env::temp_dir()
+        .join(format!("cofree_dist_test_int8_{}_{p}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dist::write_shards(&ds, &vc, &weights, seed, &dir).unwrap();
+    let opts = ProcOptions {
+        wire_codec: WireCodec::I8,
+        ..ProcOptions::new(worker_bin())
+    };
+    let cfg = cfg_for(epochs, seed, None);
+    let (h, ck, stats) = dist::train_over_shards(&ds, &dir, &cfg, &opts, None).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+    assert_eq!(h.epochs.len(), epochs);
+    assert!(ck.params.data.iter().flatten().all(|x| x.is_finite()));
+    assert!(
+        stats.compression_ratio() >= 3.5,
+        "int8 codec ratio {:.3} below 3.5x",
+        stats.compression_ratio()
+    );
 }
